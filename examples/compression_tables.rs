@@ -1,0 +1,76 @@
+//! Regenerates paper **Table 2** (the §A.4 compressed radial ranks `R_k`
+//! across kernels and dimensions) and **Table 3** (the explicit `F_{k,i}`,
+//! `G_{k,i}` factor functions for `K(r) = e^{-r}`).
+//!
+//! ```text
+//! cargo run --release --example compression_tables [-- --p 8] [--table3]
+//! ```
+
+use fkt::benchkit::Table;
+use fkt::cli::Args;
+use fkt::compress::CompressedRadial;
+use fkt::expansion::CoeffTable;
+use fkt::kernels::Family;
+
+fn main() {
+    let args = Args::parse();
+    let p: usize = args.get("p", 8);
+
+    if args.has_flag("table3") {
+        table3(p);
+        return;
+    }
+
+    println!("Paper Table 2: separation ranks R_0 of the compressed radial expansion");
+    println!("(p = {p}; entries marked '-' in the paper equal the generic bound ⌊p/2⌋+1 = {})\n", p / 2 + 1);
+    let kernels: Vec<(&str, Family)> = vec![
+        ("1/r", Family::Coulomb),
+        ("1/r^2", Family::InversePower(2)),
+        ("1/r^3", Family::InversePower(3)),
+        ("e^-r/r", Family::ExpOverR),
+        ("e^-r", Family::Exponential),
+        ("r e^-r", Family::RTimesExp),
+        ("e^-1/r", Family::ExpInvR),
+        ("e^-1/r^2", Family::ExpInvR2),
+    ];
+    let dims = [3usize, 4, 5, 6, 7, 8, 9];
+    let mut headers = vec!["kernel".to_string()];
+    headers.extend(dims.iter().map(|d| format!("d={d}")));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hrefs);
+    let cap = p / 2 + 1;
+    for (label, fam) in &kernels {
+        let mut row = vec![label.to_string()];
+        for &d in &dims {
+            let ct = CoeffTable::build(d, p);
+            let c = CompressedRadial::build(fam, &ct).expect("symbolic kernel");
+            let r = c.rank(0);
+            row.push(if r >= cap { "-".to_string() } else { r.to_string() });
+        }
+        table.row(&row);
+    }
+    table.print();
+    println!("\nPaper Table 2 reference rows:");
+    println!("  1/r:   1 - 2 - 3 - 4 | 1/r^2:  - 1 - 2 - 3 - | 1/r^3:  - - 1 - 2 - 3");
+    println!("  e^-r/r: 1 - 2 - 3 - 4 | e^-r:   2 - 3 - 4 - 5 | r e^-r: 3 - 4 - 5 - 6");
+    println!("  (e^-1/r, e^-1/r^2: the paper lists constants 4 and 2; our certified-");
+    println!("   exact ranks grow with p for these essential singularities — see");
+    println!("   EXPERIMENTS.md §Table-2 for the analysis.)");
+}
+
+fn table3(p: usize) {
+    println!("Paper Table 3: F_k,i(r), G_k,i(r') for K(r)=e^-r, d=3, p={p}");
+    println!("(equivalent rank-2 factorization; our pivoting yields a different but");
+    println!("exactly-equal basis — Σ_i F_i·G_i matches Σ_j r'^j M_kj to round-off)\n");
+    let ct = CoeffTable::build(3, p);
+    let c = CompressedRadial::build(&Family::Exponential, &ct).expect("symbolic");
+    for k in 0..=3.min(p) {
+        let ord = &c.orders[k];
+        println!("k = {k}  (R_k = {}):", ord.rank);
+        for i in 0..ord.rank {
+            println!("  F_{k},{i}(r)  = ({}) * e^-r", ord.f_exact[i]);
+            println!("  G_{k},{i}(r') = {}", ord.g_exact[i]);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,24 @@
+use fkt::fkt::{FktConfig, FktOperator};
+use fkt::kernels::{Family, Kernel};
+use fkt::rng::Pcg32;
+
+fn main() {
+    let args = fkt::cli::Args::parse();
+    let n: usize = args.get("n", 16000);
+    let d: usize = args.get("d", 3);
+    let p: usize = args.get("p", 4);
+    let theta: f64 = args.get("theta", 0.75);
+    let leaf: usize = args.get("leaf", 512);
+    let fam = Family::from_name(&args.get_str("kernel", "exponential")).unwrap();
+    let mut rng = Pcg32::seeded(42);
+    let pts = fkt::data::uniform_hypersphere(n, d, &mut rng);
+    let w = rng.normal_vec(n);
+    let cfg = FktConfig { p, theta, leaf_capacity: leaf, compression: args.has_flag("compress"), ..Default::default() };
+    let op = FktOperator::square(&pts, Kernel::canonical(fam), cfg);
+    let st = op.plan().stats(op.tree());
+    println!("far_pairs={} near_pairs={} near_flops={} terms={}", st.far_pairs, st.near_pairs, st.near_flops, op.num_terms());
+    for _ in 0..3 {
+        let (_, m, f, nf) = op.matvec_profiled(&w);
+        println!("moments={:.1}ms far={:.1}ms near={:.1}ms total={:.1}ms", m*1e3, f*1e3, nf*1e3, (m+f+nf)*1e3);
+    }
+}

@@ -1,0 +1,79 @@
+//! Quickstart: build an FKT operator, multiply, compare to dense.
+//!
+//! ```text
+//! cargo run --release --example quickstart -- --n 20000 --d 3 --p 4 --theta 0.5
+//! ```
+
+use fkt::baselines::dense_mvm;
+use fkt::benchkit::fmt_time;
+use fkt::cli::Args;
+use fkt::coordinator::Coordinator;
+use fkt::fkt::{FktConfig, FktOperator};
+use fkt::kernels::{Family, Kernel};
+use fkt::rng::Pcg32;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse();
+    let n: usize = args.get("n", 20_000);
+    let d: usize = args.get("d", 3);
+    let p: usize = args.get("p", 4);
+    let theta: f64 = args.get("theta", 0.5);
+    let leaf: usize = args.get("leaf", 512);
+    let seed: u64 = args.get("seed", 1);
+    let family = Family::from_name(&args.get_str("kernel", "matern32")).expect("kernel name");
+    let kernel = Kernel::canonical(family);
+
+    println!("FKT quickstart: N={n} d={d} p={p} θ={theta} kernel={}", family.name());
+    let mut rng = Pcg32::seeded(seed);
+    let pts = fkt::data::uniform_hypersphere(n, d, &mut rng);
+    let w = rng.normal_vec(n);
+
+    // Build (tree + far/near plan + exact expansion coefficients).
+    let t0 = Instant::now();
+    let cfg = FktConfig { p, theta, leaf_capacity: leaf, ..Default::default() };
+    let op = FktOperator::square(&pts, kernel, cfg);
+    println!(
+        "build: {} ({} nodes, {} multipole terms/node, {} far pairs, {} near pairs)",
+        fmt_time(t0.elapsed().as_secs_f64()),
+        op.tree().nodes.len(),
+        op.num_terms(),
+        op.plan().far_pairs,
+        op.plan().near_pairs,
+    );
+
+    // Fast multiply through the coordinator (PJRT tiles when available).
+    let backend = match args.get_str("backend", "auto").as_str() {
+        "native" => fkt::coordinator::Backend::Native,
+        "pjrt" => fkt::coordinator::Backend::Pjrt,
+        _ => fkt::coordinator::Backend::Auto,
+    };
+    let mut coord = Coordinator::new(fkt::coordinator::CoordinatorConfig {
+        threads: args.get("threads", 0),
+        backend,
+    });
+    let t1 = Instant::now();
+    let z = coord.mvm(&op, &w);
+    let fkt_time = t1.elapsed().as_secs_f64();
+    println!(
+        "FKT multiply: {} (backend: {})",
+        fmt_time(fkt_time),
+        if coord.last_metrics.used_pjrt { "PJRT tiles" } else { "native" }
+    );
+
+    // Dense comparison on a subsample (full dense above 30k is slow).
+    let m = n.min(2000);
+    let sub = fkt::points::Points::new(d, pts.coords[..m * d].to_vec());
+    let t2 = Instant::now();
+    let dense = dense_mvm(&kernel, &pts, &sub, &w);
+    let dense_time = t2.elapsed().as_secs_f64() * n as f64 / m as f64;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..m {
+        num += (z[i] - dense[i]) * (z[i] - dense[i]);
+        den += dense[i] * dense[i];
+    }
+    println!("dense multiply (extrapolated): {}", fmt_time(dense_time));
+    println!("relative ℓ2 error vs dense: {:.3e}", (num / den).sqrt());
+    println!("speedup: {:.1}×", dense_time / fkt_time);
+}

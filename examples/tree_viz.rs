@@ -1,0 +1,92 @@
+//! Regenerates paper **Fig 1**: the 2-D binary space partitioning of a
+//! Gaussian-mixture point set, plus the far-field circle of one node for
+//! a chosen θ. Emits CSVs (points, boxes, circle) for plotting and prints
+//! an ASCII rendering.
+//!
+//! ```text
+//! cargo run --release --example tree_viz -- --n 2000 --out-dir /tmp/fig1
+//! ```
+
+use fkt::cli::Args;
+use fkt::data::gaussian_mixture;
+use fkt::rng::Pcg32;
+use fkt::tree::Tree;
+use std::io::Write;
+
+fn main() {
+    let args = Args::parse();
+    let n: usize = args.get("n", 2000);
+    let leaf: usize = args.get("leaf", 64);
+    let theta: f64 = args.get("theta", 0.5);
+    let seed: u64 = args.get("seed", 3);
+    let out_dir = args.get_str("out-dir", "/tmp/fkt_fig1");
+
+    let mut rng = Pcg32::seeded(seed);
+    let (pts, labels) = gaussian_mixture(n, 2, 5, 0.07, &mut rng);
+    let tree = Tree::build(&pts, leaf);
+    println!(
+        "Fig 1 decomposition: {n} points, {} nodes, {} leaves, max depth {}",
+        tree.nodes.len(),
+        tree.leaves.len(),
+        tree.max_depth()
+    );
+
+    std::fs::create_dir_all(&out_dir).expect("mkdir");
+    // points.csv
+    let mut f = std::fs::File::create(format!("{out_dir}/points.csv")).unwrap();
+    writeln!(f, "x,y,component").unwrap();
+    for i in 0..pts.len() {
+        let p = pts.point(i);
+        writeln!(f, "{},{},{}", p[0], p[1], labels[i]).unwrap();
+    }
+    // boxes.csv (leaves only, like the figure)
+    let mut f = std::fs::File::create(format!("{out_dir}/boxes.csv")).unwrap();
+    writeln!(f, "lo_x,lo_y,hi_x,hi_y,depth").unwrap();
+    for &l in &tree.leaves {
+        let nd = &tree.nodes[l];
+        writeln!(f, "{},{},{},{},{}", nd.lo[0], nd.lo[1], nd.hi[0], nd.hi[1], nd.depth).unwrap();
+    }
+    // The far-field circle of a mid-tree node: radius/θ around its center.
+    let node = tree
+        .leaves
+        .iter()
+        .map(|&l| &tree.nodes[l])
+        .max_by(|a, b| a.len().cmp(&b.len()))
+        .unwrap();
+    let r_far = node.radius / theta;
+    let mut f = std::fs::File::create(format!("{out_dir}/circle.csv")).unwrap();
+    writeln!(f, "cx,cy,radius,theta").unwrap();
+    writeln!(f, "{},{},{},{}", node.center[0], node.center[1], r_far, theta).unwrap();
+    println!(
+        "far circle: center ({:.3},{:.3}) node radius {:.3} → far beyond {:.3} (θ={theta})",
+        node.center[0], node.center[1], node.radius, r_far
+    );
+    println!("wrote {out_dir}/{{points,boxes,circle}}.csv");
+
+    // ASCII rendering (80×40): digits = mixture component, '#' = box corners.
+    let (lo, hi) = pts.bounding_box();
+    let w = 78usize;
+    let h = 38usize;
+    let mut grid = vec![vec![' '; w + 1]; h + 1];
+    let to_cell = |x: f64, y: f64| -> (usize, usize) {
+        let cx = ((x - lo[0]) / (hi[0] - lo[0]) * w as f64).clamp(0.0, w as f64) as usize;
+        let cy = ((y - lo[1]) / (hi[1] - lo[1]) * h as f64).clamp(0.0, h as f64) as usize;
+        (cx, h - cy)
+    };
+    for i in 0..pts.len() {
+        let p = pts.point(i);
+        let (cx, cy) = to_cell(p[0], p[1]);
+        grid[cy][cx] = char::from_digit(labels[i] as u32, 10).unwrap_or('*');
+    }
+    for &l in &tree.leaves {
+        let nd = &tree.nodes[l];
+        for (bx, by) in [(nd.lo[0], nd.lo[1]), (nd.hi[0], nd.hi[1]), (nd.lo[0], nd.hi[1]), (nd.hi[0], nd.lo[1])] {
+            let (cx, cy) = to_cell(bx, by);
+            grid[cy][cx] = '+';
+        }
+    }
+    for row in &grid {
+        let line: String = row.iter().collect();
+        println!("{}", line.trim_end());
+    }
+}

@@ -1,0 +1,141 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO text artifacts + manifest.
+
+HLO *text* (not `.serialize()`d protos) is the interchange format: jax
+≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that the
+xla_extension 0.5.1 the rust `xla` crate links against rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        [--families cauchy,exponential,...] [--dims 2,3] \
+        [--batch 8] [--tile 256]
+
+Python runs ONCE at build time (`make artifacts`); the rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .kernels.pairwise import mxu_fraction, vmem_footprint_bytes
+from .model import dense_chunk_fn, example_shapes, near_batch_fn
+
+DEFAULT_FAMILIES = (
+    "cauchy",
+    "cauchy_sq",
+    "exponential",
+    "matern32",
+    "gaussian",
+    "coulomb",
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe bridge)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_near_batch(family: str, batch: int, tile: int, dim: int) -> str:
+    fn = near_batch_fn(family, batch, tile, dim)
+    lowered = jax.jit(fn).lower(*example_shapes(batch, tile, dim))
+    return to_hlo_text(lowered)
+
+
+def lower_dense_chunk(family: str, n_src: int, n_tgt: int, dim: int) -> str:
+    fn = dense_chunk_fn(family, n_src, n_tgt, dim)
+    import jax.numpy as jnp
+
+    shapes = (
+        jax.ShapeDtypeStruct((n_src, dim), jnp.float32),
+        jax.ShapeDtypeStruct((n_src,), jnp.float32),
+        jax.ShapeDtypeStruct((n_tgt, dim), jnp.float32),
+    )
+    lowered = jax.jit(fn).lower(*shapes)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--families", default=",".join(DEFAULT_FAMILIES))
+    ap.add_argument("--dims", default="2,3")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--tile", type=int, default=256)
+    ap.add_argument("--dense-chunk", type=int, default=1024,
+                    help="source block size for the dense_chunk artifacts")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    families = [f for f in args.families.split(",") if f]
+    dims = [int(d) for d in args.dims.split(",") if d]
+
+    manifest = {
+        "tile": args.tile,
+        "batch": args.batch,
+        "interchange": "hlo-text",
+        "entries": [],
+        "perf_model": {
+            "vmem_bytes_per_tile": vmem_footprint_bytes(args.tile, max(dims)),
+            "mxu_fraction": mxu_fraction(args.tile, max(dims)),
+        },
+    }
+    for family in families:
+        for dim in dims:
+            name = f"near_{family}_d{dim}_b{args.batch}_t{args.tile}"
+            text = lower_near_batch(family, args.batch, args.tile, dim)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as fh:
+                fh.write(text)
+            manifest["entries"].append({
+                "name": name,
+                "kind": "near_batch",
+                "family": family,
+                "dim": dim,
+                "batch": args.batch,
+                "tile": args.tile,
+                "file": f"{name}.hlo.txt",
+            })
+            print(f"wrote {path} ({len(text)} chars)")
+
+            dname = f"dense_{family}_d{dim}_n{args.dense_chunk}"
+            dtext = lower_dense_chunk(family, args.dense_chunk, args.tile, dim)
+            dpath = os.path.join(args.out_dir, f"{dname}.hlo.txt")
+            with open(dpath, "w") as fh:
+                fh.write(dtext)
+            manifest["entries"].append({
+                "name": dname,
+                "kind": "dense_chunk",
+                "family": family,
+                "dim": dim,
+                "n_src": args.dense_chunk,
+                "n_tgt": args.tile,
+                "file": f"{dname}.hlo.txt",
+            })
+            print(f"wrote {dpath} ({len(dtext)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    # Line-based twin of the JSON manifest for the rust loader (the offline
+    # environment has no serde): one entry per line,
+    #   kind family dim batch tile n_src file
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as fh:
+        for e in manifest["entries"]:
+            fh.write(
+                f"{e['kind']} {e['family']} {e['dim']} "
+                f"{e.get('batch', 0)} {e.get('tile', e.get('n_tgt', 0))} "
+                f"{e.get('n_src', 0)} {e['file']}\n"
+            )
+    print(f"wrote manifest with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

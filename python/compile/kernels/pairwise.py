@@ -1,0 +1,107 @@
+"""L1 — the Pallas pairwise-kernel tile.
+
+The FKT's FLOP hot spot is the near-field dense block: for a leaf's sources
+X and its near targets Y, compute `z = K(Y, X) @ w`. This kernel computes
+one fixed-shape (T × T) tile of that product.
+
+TPU-shaped structure (see DESIGN.md §Hardware-Adaptation):
+  * the `y @ x.T` contraction in the squared-distance identity
+    `|y−x|² = |y|² + |x|² − 2·y·xᵀ` maps onto the MXU systolic array;
+  * the transcendental kernel profile runs on the VPU;
+  * `BlockSpec` tiles the batch so each (T,d)+(T,) block fits VMEM and the
+    HBM→VMEM pipeline double-buffers across the grid.
+
+The kernel MUST be lowered with `interpret=True` in this environment: the
+CPU PJRT plugin cannot execute Mosaic custom-calls, and interpret mode
+lowers to plain HLO ops that both jax-CPU and the rust PJRT client run.
+Correctness is pinned against `ref.py` by pytest + hypothesis.
+
+Padding convention: pad sources carry zero weight (their kernel value is
+finite for every family since coincident padded points hit the
+`value_at_zero` branch), pad targets produce rows the caller ignores.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import apply_kernel_r2
+
+
+def _tile_kernel(family: str):
+    """Pallas kernel body for one (T,d) tile pair."""
+
+    def kernel(x_ref, w_ref, y_ref, o_ref):
+        x = x_ref[...]  # (T, d) sources
+        w = w_ref[...]  # (T,)   weights (zero ⇒ padding)
+        y = y_ref[...]  # (T, d) targets
+        # |y−x|² via the MXU-friendly decomposition.
+        yn = jnp.sum(y * y, axis=1, keepdims=True)  # (T,1)
+        xn = jnp.sum(x * x, axis=1, keepdims=True).T  # (1,T)
+        d2 = yn + xn - 2.0 * jnp.dot(y, x.T)  # (T,T)
+        d2 = jnp.maximum(d2, 0.0)
+        # Float cancellation can turn exact-zero distances into ~1e-13;
+        # treat anything below eps as coincident so the diagonal convention
+        # (value_at_zero) is applied robustly.
+        eps = jnp.asarray(1e-12, d2.dtype)
+        d2 = jnp.where(d2 < eps, 0.0, d2)
+        k = apply_kernel_r2(family, d2)
+        o_ref[...] = jnp.dot(k, w)
+
+    return kernel
+
+
+def batched_tile_mvm(family: str, batch: int, tile: int, dim: int, dtype=jnp.float32):
+    """Build the batched near-field tile MVM as a jax-jittable function.
+
+    Returns `f(x, w, y) -> z` with shapes x (B,T,d), w (B,T), y (B,T,d),
+    z (B,T); grid over B with one tile pair per program instance.
+    """
+    kernel = _tile_kernel(family)
+
+    def f(x, w, y):
+        return pl.pallas_call(
+            kernel,
+            grid=(batch,),
+            in_specs=[
+                pl.BlockSpec((None, tile, dim), lambda b: (b, 0, 0)),
+                pl.BlockSpec((None, tile), lambda b: (b, 0)),
+                pl.BlockSpec((None, tile, dim), lambda b: (b, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((None, tile), lambda b: (b, 0)),
+            out_shape=jax.ShapeDtypeStruct((batch, tile), dtype),
+            interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+        )(x, w, y)
+
+    return f
+
+
+def single_tile_mvm(family: str, tile: int, dim: int, dtype=jnp.float32):
+    """Unbatched variant (grid of 1) — used by the pytest shape sweeps."""
+
+    def f(x, w, y):
+        return pl.pallas_call(
+            _tile_kernel(family),
+            out_shape=jax.ShapeDtypeStruct((tile,), dtype),
+            interpret=True,
+        )(x, w, y)
+
+    return f
+
+
+def vmem_footprint_bytes(tile: int, dim: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one tile instance (see DESIGN.md
+    §Perf): two (T,d) point blocks, two (T,) vectors, one (T,T) distance/
+    kernel block."""
+    return dtype_bytes * (2 * tile * dim + 2 * tile + tile * tile)
+
+
+def mxu_fraction(tile: int, dim: int) -> float:
+    """Estimated fraction of tile FLOPs that land on the MXU (the y·xᵀ
+    contraction and the k@w reduction) vs the VPU transcendentals.
+
+    FLOPs: matmul 2·T²·d, reduction 2·T², distance assembly ~3·T²,
+    kernel profile ~8·T² (family dependent; exp ≈ 10 flops)."""
+    mxu = 2.0 * tile * tile * dim + 2.0 * tile * tile
+    vpu = 3.0 * tile * tile + 8.0 * tile * tile
+    return mxu / (mxu + vpu)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for the pairwise kernel tile (L1 correctness reference).
+
+Semantics shared with the Pallas kernel and the rust native path:
+  z[t] = sum_s K(|y_t - x_s|) * w[s]
+with the diagonal convention K(0) = `value_at_zero(family)` (singular
+kernels exclude self-interaction, so their value-at-zero is 0), and padding
+expressed purely through zero weights.
+"""
+
+import jax.numpy as jnp
+
+# Kernel families — names and semantics must match rust/src/kernels/mod.rs.
+FAMILIES = (
+    "exponential",
+    "matern32",
+    "matern52",
+    "cauchy",
+    "rq",
+    "gaussian",
+    "coulomb",
+    "osc_coulomb",
+    "cauchy_sq",
+)
+
+
+def value_at_zero(family: str) -> float:
+    """K(0) under the library's diagonal convention."""
+    if family in ("coulomb", "osc_coulomb"):
+        return 0.0
+    return 1.0
+
+
+def apply_kernel_r2(family: str, r2):
+    """Apply the canonical kernel profile to squared distances."""
+    safe = jnp.where(r2 > 0, r2, 1.0)
+    r = jnp.sqrt(safe)
+    if family == "exponential":
+        k = jnp.exp(-r)
+    elif family == "matern32":
+        k = (1.0 + r) * jnp.exp(-r)
+    elif family == "matern52":
+        k = (1.0 + r + r * r / 3.0) * jnp.exp(-r)
+    elif family == "cauchy":
+        k = 1.0 / (1.0 + safe)
+    elif family == "rq":
+        k = 1.0 / jnp.sqrt(1.0 + safe)
+    elif family == "gaussian":
+        k = jnp.exp(-safe)
+    elif family == "coulomb":
+        k = 1.0 / r
+    elif family == "osc_coulomb":
+        k = jnp.cos(r) / r
+    elif family == "cauchy_sq":
+        c = 1.0 / (1.0 + safe)
+        k = c * c
+    else:
+        raise ValueError(f"unknown kernel family {family!r}")
+    return jnp.where(r2 > 0, k, value_at_zero(family))
+
+
+def tile_mvm_ref(family: str, x, w, y):
+    """Reference tile MVM.
+
+    x: (T, d) sources, w: (T,) weights, y: (T, d) targets -> (T,) sums.
+    """
+    d2 = jnp.sum((y[:, None, :] - x[None, :, :]) ** 2, axis=-1)
+    k = apply_kernel_r2(family, d2)
+    return k @ w
+
+
+def batched_tile_mvm_ref(family: str, x, w, y):
+    """Batched reference: x (B,T,d), w (B,T), y (B,T,d) -> (B,T)."""
+    d2 = jnp.sum((y[:, :, None, :] - x[:, None, :, :]) ** 2, axis=-1)
+    k = apply_kernel_r2(family, d2)
+    return jnp.einsum("bts,bs->bt", k, w)

@@ -1,0 +1,58 @@
+"""L2 — the JAX compute graphs the rust coordinator calls through PJRT.
+
+Two graphs per kernel family:
+
+* `near_batch`: the batched near-field tile MVM (calls the L1 Pallas
+  kernel) — the hot path of Algorithm 1's dense near field. The rust
+  coordinator gathers leaf/near points into fixed-shape padded tiles and
+  executes this artifact.
+* `dense_chunk`: a plain-XLA dense MVM over a fixed-size source block,
+  used by the dense baseline path and as an L2-only reference for the
+  Pallas kernel inside the lowered artifact.
+
+Everything here is build-time only; `aot.py` lowers these functions to HLO
+text once, and the rust binary never imports Python.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.pairwise import batched_tile_mvm
+from .kernels.ref import apply_kernel_r2
+
+
+def near_batch_fn(family: str, batch: int, tile: int, dim: int):
+    """The near-field artifact entry point: (x, w, y) -> (z,).
+
+    Returned as a 1-tuple because the AOT bridge lowers with
+    `return_tuple=True` and the rust side unwraps `to_tuple1`.
+    """
+    tile_mvm = batched_tile_mvm(family, batch, tile, dim)
+
+    def f(x, w, y):
+        return (tile_mvm(x, w, y),)
+
+    return f
+
+
+def dense_chunk_fn(family: str, n_src: int, n_tgt: int, dim: int):
+    """Dense MVM over a fixed (n_tgt × n_src) block, pure jnp (XLA fuses
+    the distance computation and kernel application into one loop nest)."""
+
+    def f(src, w, tgt):
+        d2 = jnp.sum((tgt[:, None, :] - src[None, :, :]) ** 2, axis=-1)
+        d2 = jnp.where(d2 < 1e-12, 0.0, d2)
+        k = apply_kernel_r2(family, d2)
+        return (k @ w,)
+
+    return f
+
+
+def example_shapes(batch: int, tile: int, dim: int):
+    """ShapeDtypeStructs for lowering `near_batch_fn`."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((batch, tile, dim), jnp.float32),
+        jax.ShapeDtypeStruct((batch, tile), jnp.float32),
+        jax.ShapeDtypeStruct((batch, tile, dim), jnp.float32),
+    )

@@ -1,0 +1,172 @@
+"""L1 correctness: Pallas tile kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dimensions, and kernel families; dedicated cases
+cover the padding convention, coincident points (diagonal), and the exact
+semantics the rust native path mirrors.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pairwise import batched_tile_mvm, single_tile_mvm
+from compile.kernels.ref import (
+    FAMILIES,
+    apply_kernel_r2,
+    batched_tile_mvm_ref,
+    tile_mvm_ref,
+    value_at_zero,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+SINGULAR = ("coulomb", "osc_coulomb")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.uniform(-1.0, 1.0, size=shape), dtype=jnp.float32)
+
+
+def _targets_for(family, rng, *shape):
+    """Targets for a family: singular kernels (1/r) amplify the f32
+    round-off of the |x|²+|y|²−2x·y decomposition without bound as points
+    approach coincidence, so their sweeps keep source/target clouds
+    separated by ≥ 1 — the regime the near-field path actually uses them
+    in (exact coincidences take the value_at_zero branch, tested
+    separately in test_diagonal_convention)."""
+    t = rng.uniform(-1.0, 1.0, size=shape)
+    if family in SINGULAR:
+        t = t + 3.0
+    return jnp.asarray(t, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_single_tile_matches_ref(family):
+    rng = np.random.default_rng(0)
+    t, d = 32, 3
+    x = _rand(rng, t, d)
+    w = _rand(rng, t)
+    y = _targets_for(family, rng, t, d)
+    got = single_tile_mvm(family, t, d)(x, w, y)
+    want = tile_mvm_ref(family, x, w, y)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("family", ["cauchy", "exponential", "coulomb"])
+def test_batched_tile_matches_ref(family):
+    rng = np.random.default_rng(1)
+    b, t, d = 4, 16, 2
+    x = _rand(rng, b, t, d)
+    w = _rand(rng, b, t)
+    y = _targets_for(family, rng, b, t, d)
+    got = batched_tile_mvm(family, b, t, d)(x, w, y)
+    want = batched_tile_mvm_ref(family, x, w, y)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([4, 8, 16, 33]),
+    d=st.integers(min_value=1, max_value=6),
+    family=st.sampled_from(FAMILIES),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_shape_sweep(t, d, family, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, t, d)
+    w = _rand(rng, t)
+    y = _targets_for(family, rng, t, d)
+    got = single_tile_mvm(family, t, d)(x, w, y)
+    want = tile_mvm_ref(family, x, w, y)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=5),
+    t=st.sampled_from([8, 16]),
+    family=st.sampled_from(["cauchy", "gaussian", "matern32"]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_batched_sweep(b, t, family, seed):
+    rng = np.random.default_rng(seed)
+    d = 2
+    x = _rand(rng, b, t, d)
+    w = _rand(rng, b, t)
+    y = _rand(rng, b, t, d)
+    got = batched_tile_mvm(family, b, t, d)(x, w, y)
+    want = batched_tile_mvm_ref(family, x, w, y)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_zero_weight_padding_is_exact(family):
+    """Padded (zero-weight) sources must not perturb the result at all,
+    even when the pad coordinates coincide with a target (singular
+    kernels!)."""
+    rng = np.random.default_rng(2)
+    t, d = 16, 2
+    x = np.asarray(rng.uniform(-1, 1, size=(t, d)), dtype=np.float32)
+    w = np.asarray(rng.uniform(-1, 1, size=t), dtype=np.float32)
+    y = np.asarray(rng.uniform(-1, 1, size=(t, d)), dtype=np.float32)
+    # Pad the last 5 sources: zero weight, coordinates sitting exactly on
+    # target 0 (worst case for 1/r).
+    w_pad = w.copy()
+    w_pad[-5:] = 0.0
+    x_pad = x.copy()
+    x_pad[-5:] = y[0]
+    got = single_tile_mvm(family, t, d)(
+        jnp.asarray(x_pad), jnp.asarray(w_pad), jnp.asarray(y)
+    )
+    # Must equal the *unpadded* 11-source result exactly (up to f32).
+    want = tile_mvm_ref(
+        family,
+        jnp.asarray(x_pad[: t - 5]),
+        jnp.asarray(w_pad[: t - 5]),
+        jnp.asarray(y),
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    assert np.all(np.isfinite(np.asarray(got)))
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_diagonal_convention(family):
+    """A source coincident with a target contributes value_at_zero * w."""
+    x = jnp.asarray([[0.5, 0.5]], dtype=jnp.float32)
+    y = jnp.asarray([[0.5, 0.5]], dtype=jnp.float32)
+    w = jnp.asarray([3.0], dtype=jnp.float32)
+    got = single_tile_mvm(family, 1, 2)(x, w, y)
+    assert np.isclose(float(got[0]), 3.0 * value_at_zero(family))
+
+
+def test_apply_kernel_matches_rust_conventions():
+    """Spot-check canonical values the rust tests also pin."""
+    r2 = jnp.asarray([1.0, 4.0], dtype=jnp.float32)
+    np.testing.assert_allclose(
+        apply_kernel_r2("cauchy", r2), [0.5, 0.2], rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        apply_kernel_r2("exponential", r2), np.exp([-1.0, -2.0]), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        apply_kernel_r2("coulomb", r2), [1.0, 0.5], rtol=1e-6
+    )
+    cs = apply_kernel_r2("cauchy_sq", r2)
+    np.testing.assert_allclose(cs, [0.25, 0.04], rtol=1e-6)
+
+
+def test_linearity_in_weights():
+    family = "gaussian"
+    rng = np.random.default_rng(3)
+    t, d = 16, 3
+    f = single_tile_mvm(family, t, d)
+    x = _rand(rng, t, d)
+    y = _rand(rng, t, d)
+    w1 = _rand(rng, t)
+    w2 = _rand(rng, t)
+    z = f(x, 2.0 * w1 - 0.5 * w2, y)
+    want = 2.0 * f(x, w1, y) - 0.5 * f(x, w2, y)
+    np.testing.assert_allclose(z, want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,76 @@
+//! Paper **Fig 2 (left)**: FKT vs dense MVM runtimes for the Matérn
+//! ν = 1/2 kernel on points uniform on the unit hypersphere, θ = 0.75,
+//! leaf capacity 512, p ∈ {4, 6}, d ∈ {3, 4, 5}, N swept geometrically.
+//!
+//! The paper's qualitative claims to reproduce: quasilinear FKT scaling,
+//! and FKT beating dense from N ≈ 1000 (d=3), 5000 (d=4), 20,000 (d=5).
+//!
+//! ```text
+//! cargo bench --bench fig2_left_scaling            # quick sweep
+//! cargo bench --bench fig2_left_scaling -- --full  # paper-scale (slow)
+//! ```
+
+use fkt::baselines::dense_mvm;
+use fkt::benchkit::{fmt_time, Bencher, Table};
+use fkt::cli::Args;
+use fkt::coordinator::Coordinator;
+use fkt::data::uniform_hypersphere;
+use fkt::fkt::{FktConfig, FktOperator};
+use fkt::kernels::{Family, Kernel};
+use fkt::points::Points;
+use fkt::rng::Pcg32;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let full = args.has_flag("full");
+    let dims: Vec<usize> = args.get_list("dims", &[3, 4, 5]);
+    let ps: Vec<usize> = args.get_list("ps", &[4, 6]);
+    let ns: Vec<usize> = if full {
+        args.get_list("ns", &[1000, 4000, 16000, 64000, 256000])
+    } else {
+        args.get_list("ns", &[1000, 4000, 16000])
+    };
+    let theta: f64 = args.get("theta", 0.75);
+    let leaf: usize = args.get("leaf", 512);
+    let dense_cap: usize = args.get("dense-cap", 20000);
+    let bench = if full { Bencher::default() } else { Bencher::quick() };
+    let mut coord = Coordinator::native(0);
+
+    println!("Fig 2 (left): FKT vs dense MVM, Matérn ν=1/2, θ={theta}, leaf={leaf}");
+    let mut table = Table::new(&[
+        "d", "N", "p", "build", "fkt_mvm", "dense_mvm", "speedup", "terms",
+    ]);
+    for &d in &dims {
+        for &n in &ns {
+            let mut rng = Pcg32::seeded(42 + d as u64);
+            let pts = uniform_hypersphere(n, d, &mut rng);
+            let w = rng.normal_vec(n);
+            let kern = Kernel::canonical(Family::Exponential); // Matérn ν=1/2
+            // Dense baseline (timed on a capped target subset, scaled).
+            let m = n.min(dense_cap.min(2000));
+            let sub = Points::new(d, pts.coords[..m * d].to_vec());
+            let st = bench.run(|| dense_mvm(&kern, &pts, &sub, &w));
+            let dense_time = st.median * n as f64 / m as f64;
+            for &p in &ps {
+                let cfg = FktConfig { p, theta, leaf_capacity: leaf, ..Default::default() };
+                let t0 = std::time::Instant::now();
+                let op = FktOperator::square(&pts, kern, cfg);
+                let build = t0.elapsed().as_secs_f64();
+                let st = bench.run(|| coord.mvm(&op, &w));
+                table.row(&[
+                    d.to_string(),
+                    n.to_string(),
+                    p.to_string(),
+                    fmt_time(build),
+                    fmt_time(st.median),
+                    fmt_time(dense_time),
+                    format!("{:.1}x", dense_time / st.median),
+                    op.num_terms().to_string(),
+                ]);
+            }
+        }
+    }
+    table.print();
+    println!("\nShape check: fkt_mvm column should grow ~linearly in N (quasilinear),");
+    println!("dense quadratically; crossover earlier in lower d (paper: N≈1e3 at d=3).");
+}

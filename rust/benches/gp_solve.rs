@@ -1,0 +1,79 @@
+//! GP-regression benchmark (paper Fig 4 / §5.3): CG solve and prediction
+//! cost on the simulated SST workload, scaling with N.
+//!
+//! ```text
+//! cargo bench --bench gp_solve [-- --full]
+//! ```
+
+use fkt::benchkit::{fmt_time, Table};
+use fkt::cli::Args;
+use fkt::coordinator::Coordinator;
+use fkt::data::sst;
+use fkt::fkt::FktConfig;
+use fkt::gp::{GpConfig, GpRegressor};
+use fkt::kernels::Kernel;
+use fkt::rng::Pcg32;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let full = args.has_flag("full");
+    let ns: Vec<usize> = if full {
+        args.get_list("ns", &[10000, 40000, 145913])
+    } else {
+        args.get_list("ns", &[5000, 20000])
+    };
+    let p: usize = args.get("p", 4);
+    let theta: f64 = args.get("theta", 0.6);
+    let rho: f64 = args.get("rho", 0.22);
+    let mut coord = Coordinator::native(0);
+
+    println!("GP solve (Fig 4 workload): Matérn-3/2 ρ={rho}, p={p}, θ={theta}");
+    let mut table = Table::new(&[
+        "N", "build", "cg_iters", "cg_time", "time/mvm", "predict", "rmse",
+    ]);
+    for &n in &ns {
+        let mut rng = Pcg32::seeded(99);
+        let ds = sst::simulate(7.0, n, &mut rng);
+        let pts = ds.unit_sphere_points();
+        let y = ds.temperatures();
+        let mean_y: f64 = y.iter().sum::<f64>() / y.len() as f64;
+        let y0: Vec<f64> = y.iter().map(|v| v - mean_y).collect();
+        let cfg = GpConfig {
+            fkt: FktConfig { p, theta, leaf_capacity: 512, ..Default::default() },
+            cg_tol: 1e-5,
+            cg_max_iters: 300,
+            jitter: 1e-6,
+            precondition: true,
+        };
+        let t0 = Instant::now();
+        let gp = GpRegressor::new(pts, ds.noise_variances(), Kernel::matern32(rho), cfg);
+        let build = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let fit = gp.fit_alpha(&y0, &mut coord);
+        let cg_time = t1.elapsed().as_secs_f64();
+        // Prediction on a small grid + RMSE vs known truth.
+        let (grid, coords) = sst::prediction_grid(40, 120, 60.0);
+        let t2 = Instant::now();
+        let res = gp.posterior_mean(&y0, &grid, &mut coord);
+        let pred_time = t2.elapsed().as_secs_f64();
+        let mut se = 0.0;
+        for (i, &(lat, lon)) in coords.iter().enumerate() {
+            let truth = sst::true_field(lat, lon);
+            se += (res.mean[i] + mean_y - truth).powi(2);
+        }
+        let rmse = (se / coords.len() as f64).sqrt();
+        table.row(&[
+            n.to_string(),
+            fmt_time(build),
+            fit.iterations.to_string(),
+            fmt_time(cg_time),
+            fmt_time(cg_time / fit.iterations.max(1) as f64),
+            fmt_time(pred_time),
+            format!("{rmse:.3}"),
+        ]);
+    }
+    table.print();
+    println!("\nShape check: time/mvm grows quasilinearly in N; paper completes");
+    println!("145,913 obs → 480k predictions in ~12 min on a 2017 dual-core laptop.");
+}

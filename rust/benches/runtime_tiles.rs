@@ -1,0 +1,72 @@
+//! PJRT tile-executor microbenchmark: near-field batch throughput through
+//! the AOT Pallas artifact vs the native rust block kernels — the L3↔L1
+//! seam the coordinator's backend selection is based on.
+//!
+//! Skips (with a message) when `make artifacts` has not been run.
+//!
+//! ```text
+//! cargo bench --bench runtime_tiles
+//! ```
+
+use fkt::benchkit::{fmt_time, Bencher, Table};
+use fkt::cli::Args;
+use fkt::fkt::nearfield::block_mvm;
+use fkt::kernels::Family;
+use fkt::rng::Pcg32;
+use fkt::runtime::Runtime;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let Some(mut rt) = Runtime::open_default() else {
+        println!("runtime_tiles: artifacts not built (`make artifacts`) — skipping");
+        return;
+    };
+    let bench = if args.has_flag("full") { Bencher::default() } else { Bencher::quick() };
+    println!("PJRT tile executor vs native block kernels (platform: {})", rt.platform());
+    let mut table = Table::new(&[
+        "family", "d", "B", "T", "pjrt_batch", "native_batch", "pairs/s pjrt", "pairs/s native",
+    ]);
+    for family in ["cauchy", "exponential", "gaussian"] {
+        for d in [2usize, 3] {
+            let exe = match rt.near_batch(family, d) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            let (b, t) = (exe.batch, exe.tile);
+            let mut rng = Pcg32::seeded(5);
+            let x: Vec<f32> = (0..b * t * d).map(|_| rng.uniform() as f32).collect();
+            let w: Vec<f32> = (0..b * t).map(|_| rng.uniform() as f32).collect();
+            let y: Vec<f32> = (0..b * t * d).map(|_| rng.uniform() as f32).collect();
+            let st_p = bench.run(|| exe.execute(&x, &w, &y).expect("execute"));
+            // Native equivalent: B block MVMs in f64.
+            let fam = Family::from_name(family).unwrap();
+            let xf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+            let wf: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+            let yf: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+            let st_n = bench.run(|| {
+                let mut out = vec![0.0f64; b * t];
+                for bi in 0..b {
+                    let (s, e) = (bi * t * d, (bi + 1) * t * d);
+                    block_mvm(fam, d, &xf[s..e], &wf[bi * t..(bi + 1) * t], &yf[s..e],
+                        &mut out[bi * t..(bi + 1) * t]);
+                }
+                out
+            });
+            let pairs = (b * t * t) as f64;
+            table.row(&[
+                family.into(),
+                d.to_string(),
+                b.to_string(),
+                t.to_string(),
+                fmt_time(st_p.median),
+                fmt_time(st_n.median),
+                format!("{:.2e}", pairs / st_p.median),
+                format!("{:.2e}", pairs / st_n.median),
+            ]);
+        }
+    }
+    table.print();
+    println!("\nNote: the PJRT path runs the interpret-mode Pallas tile on CPU; on a");
+    println!("real TPU the same artifact maps the y·xᵀ contraction onto the MXU");
+    println!("(see DESIGN.md §Hardware-Adaptation for the VMEM/MXU estimates).");
+}

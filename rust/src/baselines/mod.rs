@@ -1,0 +1,83 @@
+//! Baselines the paper compares against: the exact dense MVM and (via
+//! `FktConfig::barnes_hut`) the Barnes–Hut treecode of Fig 3-left.
+
+use crate::kernels::Kernel;
+use crate::points::Points;
+
+/// Exact dense kernel MVM: `z_t = Σ_s K(|t − s|) w_s`. O(N·M) — the
+/// reference every accuracy number in EXPERIMENTS.md is measured against,
+/// and the runtime baseline of Fig 2-left.
+pub fn dense_mvm(kernel: &Kernel, sources: &Points, targets: &Points, w: &[f64]) -> Vec<f64> {
+    assert_eq!(sources.len(), w.len());
+    assert_eq!(sources.d, targets.d);
+    let n = sources.len();
+    let m = targets.len();
+    let d = sources.d;
+    let mut z = vec![0.0; m];
+    for t in 0..m {
+        let tp = targets.point(t);
+        let mut acc = 0.0;
+        for s in 0..n {
+            let sp = sources.point(s);
+            let mut d2 = 0.0;
+            for a in 0..d {
+                let dd = tp[a] - sp[a];
+                d2 += dd * dd;
+            }
+            acc += kernel.eval(d2.sqrt()) * w[s];
+        }
+        z[t] = acc;
+    }
+    z
+}
+
+/// Materialize the dense kernel matrix K(targets, sources) — only for
+/// small reference computations (GP test oracles etc.).
+pub fn dense_matrix(kernel: &Kernel, sources: &Points, targets: &Points) -> crate::linalg::Mat {
+    let n = sources.len();
+    let m = targets.len();
+    let mut out = crate::linalg::Mat::zeros(m, n);
+    for t in 0..m {
+        for s in 0..n {
+            let r = crate::linalg::vecops::dist2(targets.point(t), sources.point(s)).sqrt();
+            out[(t, s)] = kernel.eval(r);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Family;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn dense_mvm_matches_matrix_multiply() {
+        let mut rng = Pcg32::seeded(91);
+        let src = Points::new(2, rng.uniform_vec(40, 0.0, 1.0));
+        let tgt = Points::new(2, rng.uniform_vec(24, 0.0, 1.0));
+        let w = rng.normal_vec(20);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let z1 = dense_mvm(&kern, &src, &tgt, &w);
+        let m = dense_matrix(&kern, &src, &tgt);
+        let z2 = m.matvec(&w);
+        for (a, b) in z1.iter().zip(&z2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dense_matrix_symmetric_on_same_points() {
+        let mut rng = Pcg32::seeded(92);
+        let pts = Points::new(3, rng.uniform_vec(30, 0.0, 1.0));
+        let kern = Kernel::canonical(Family::Cauchy);
+        let m = dense_matrix(&kern, &pts, &pts);
+        for i in 0..10 {
+            for j in 0..10 {
+                assert!((m[(i, j)] - m[(j, i)]).abs() < 1e-15);
+            }
+            assert!((m[(i, i)] - 1.0).abs() < 1e-15);
+        }
+    }
+}

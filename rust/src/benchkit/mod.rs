@@ -1,0 +1,200 @@
+//! Benchmark harness (no `criterion` available offline).
+//!
+//! `cargo bench` targets in `rust/benches/` are `harness = false` binaries
+//! built on this module: warmup, adaptive repetition until a time budget or
+//! minimum sample count, robust statistics (median, IQR, min), and aligned
+//! table output matching the rows/series the paper's figures report.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement series.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Median sample time in seconds.
+    pub median: f64,
+    /// Minimum sample time in seconds.
+    pub min: f64,
+    /// 25th percentile.
+    pub q1: f64,
+    /// 75th percentile.
+    pub q3: f64,
+    /// Mean sample time in seconds.
+    pub mean: f64,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    /// Warmup runs (not timed).
+    pub warmup: usize,
+    /// Minimum number of timed samples.
+    pub min_samples: usize,
+    /// Maximum number of timed samples.
+    pub max_samples: usize,
+    /// Total time budget for sampling one benchmark.
+    pub budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 1,
+            min_samples: 3,
+            max_samples: 25,
+            budget: Duration::from_secs(5),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick configuration for smoke-testing benches.
+    pub fn quick() -> Self {
+        Bencher { warmup: 0, min_samples: 1, max_samples: 3, budget: Duration::from_millis(500) }
+    }
+
+    /// Time `f` adaptively and return statistics. The closure's return value
+    /// is passed through `std::hint::black_box` to inhibit dead-code elim.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let started = Instant::now();
+        let mut times = Vec::new();
+        while times.len() < self.max_samples
+            && (times.len() < self.min_samples || started.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            samples: times.len(),
+            median: percentile(&times, 0.5),
+            min: times[0],
+            q1: percentile(&times, 0.25),
+            q3: percentile(&times, 0.75),
+            mean: times.iter().sum::<f64>() / times.len() as f64,
+        }
+    }
+}
+
+/// Render seconds human-readably.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:7.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:7.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:7.2}ms", s * 1e3)
+    } else {
+        format!("{:7.3}s ", s)
+    }
+}
+
+/// A simple aligned table printer for bench/example output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create with column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Print to stdout with aligned columns.
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for c in 0..ncol {
+                if c > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{:>w$}", cells[c], w = widths[c]));
+            }
+            println!("{s}");
+        };
+        line(&self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        println!("{}", "-".repeat(total));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let b = Bencher::quick();
+        let s = b.run(|| {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.samples >= 1);
+        assert!(s.min <= s.median + 1e-12);
+        assert!(s.q1 <= s.q3 + 1e-12);
+        assert!(s.median > 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 1.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.5e-9).contains("ns"));
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-3).contains("ms"));
+        assert!(fmt_time(2.5).contains("s"));
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["N", "time", "err"]);
+        t.row(&["1000".into(), "1.2ms".into(), "1e-5".into()]);
+        t.row(&["100000".into(), "120ms".into(), "2e-5".into()]);
+        t.print();
+    }
+}

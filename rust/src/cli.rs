@@ -1,0 +1,137 @@
+//! Minimal command-line argument parser (no `clap` available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments. Every example, bench, and the `fkt` binary share this so
+//! experiment parameters (N, d, p, θ, seed, backend) are uniform across the
+//! whole harness.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// `--key value` / `--key=value` pairs.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the real process arguments.
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// Get an option value parsed as T, or the default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.options.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                panic!("--{key}: cannot parse {v:?}");
+            }),
+            None => default,
+        }
+    }
+
+    /// Get an option value as String, or the default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Whether `--flag` was passed.
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    /// Parse a comma-separated list option, e.g. `--dims 3,4,5`.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.options.get(key) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: cannot parse element {s:?}"))
+                })
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--n", "1000", "--theta=0.5", "run"]);
+        assert_eq!(a.get("n", 0usize), 1000);
+        assert!((a.get("theta", 0.0f64) - 0.5).abs() < 1e-15);
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse(&["--verbose", "--p", "4", "--fast"]);
+        assert!(a.has_flag("verbose"));
+        assert!(a.has_flag("fast"));
+        assert!(!a.has_flag("p"));
+        assert_eq!(a.get("p", 0usize), 4);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get("n", 42usize), 42);
+        assert_eq!(a.get_str("kernel", "cauchy"), "cauchy");
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // A value starting with '-' but not '--' is consumed as a value.
+        let a = parse(&["--shift", "-1.5"]);
+        assert!((a.get("shift", 0.0f64) + 1.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--dims", "3,4,5"]);
+        assert_eq!(a.get_list("dims", &[9usize]), vec![3, 4, 5]);
+        assert_eq!(a.get_list("ps", &[4usize, 6]), vec![4, 6]);
+    }
+}

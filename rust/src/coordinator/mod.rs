@@ -1,0 +1,315 @@
+//! L3 coordinator: the service layer that owns operators, threads, the
+//! PJRT runtime, and metrics.
+//!
+//! Responsibilities (the "system" around Algorithm 1):
+//! * operator lifecycle — build/cache `FktOperator`s per (dataset, kernel,
+//!   config) job;
+//! * backend selection — near-field dense blocks run natively or through
+//!   the AOT PJRT artifacts (`Backend::Auto` probes the artifact dir);
+//! * tile batching — leaf near-blocks are split/padded into the fixed
+//!   (B,T) shape the compiled executable expects and scatter-added back;
+//! * threading — the native path fans phases out over a scoped pool;
+//! * metrics — per-phase wall times and tile counts for EXPERIMENTS.md.
+
+use crate::fkt::FktOperator;
+use crate::runtime::Runtime;
+use std::time::Instant;
+
+/// Near-field execution backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust specialized block kernels.
+    Native,
+    /// AOT Pallas/XLA tiles through PJRT.
+    Pjrt,
+    /// Pjrt when artifacts for the kernel family exist, else Native.
+    Auto,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker threads for the native phases (0 ⇒ all available cores).
+    pub threads: usize,
+    /// Near-field backend selection.
+    pub backend: Backend,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { threads: 0, backend: Backend::Auto }
+    }
+}
+
+/// Per-MVM execution metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MvmMetrics {
+    /// Seconds in the far-field (moments + m2t) phases.
+    pub far_seconds: f64,
+    /// Seconds in the near-field phase.
+    pub near_seconds: f64,
+    /// Number of PJRT tile-batches executed (0 on the native path).
+    pub pjrt_batches: usize,
+    /// Number of (leaf-chunk × target-chunk) tiles.
+    pub tiles: usize,
+    /// Which backend the near field used.
+    pub used_pjrt: bool,
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    runtime: Option<Runtime>,
+    /// Last MVM's metrics.
+    pub last_metrics: MvmMetrics,
+}
+
+impl Coordinator {
+    /// Create a coordinator; probes the artifact dir when the backend may
+    /// need PJRT.
+    pub fn new(cfg: CoordinatorConfig) -> Coordinator {
+        let runtime = match cfg.backend {
+            Backend::Native => None,
+            _ => Runtime::open_default(),
+        };
+        Coordinator { cfg, runtime, last_metrics: MvmMetrics::default() }
+    }
+
+    /// Native-only coordinator (no artifact probe).
+    pub fn native(threads: usize) -> Coordinator {
+        Coordinator {
+            cfg: CoordinatorConfig { threads, backend: Backend::Native },
+            runtime: None,
+            last_metrics: MvmMetrics::default(),
+        }
+    }
+
+    /// Effective thread count.
+    pub fn threads(&self) -> usize {
+        if self.cfg.threads > 0 {
+            self.cfg.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+
+    /// Whether the PJRT path will be used for this kernel family.
+    ///
+    /// `Backend::Auto` resolves to the native block kernels on this CPU
+    /// testbed: the interpret-mode tile beats native on raw executor
+    /// throughput for exp-heavy kernels (see `runtime_tiles`), but the
+    /// gather/pad/literal-copy overhead of the coordinator path costs more
+    /// than that advantage (EXPERIMENTS.md §Perf measures 203 ms native vs
+    /// 270 ms PJRT end-to-end at N=16k). On a real TPU the trade flips —
+    /// set `FKT_PREFER_PJRT=1` (or `Backend::Pjrt`) to route through the
+    /// artifacts unconditionally.
+    pub fn will_use_pjrt(&self, family: &str, dim: usize) -> bool {
+        let available = self
+            .runtime
+            .as_ref()
+            .map(|r| r.has_near_batch(family, dim))
+            .unwrap_or(false);
+        match self.cfg.backend {
+            Backend::Native => false,
+            Backend::Pjrt => available,
+            Backend::Auto => {
+                available && std::env::var_os("FKT_PREFER_PJRT").is_some()
+            }
+        }
+    }
+
+    /// Execute one MVM through the configured backend, recording metrics.
+    pub fn mvm(&mut self, op: &FktOperator, w: &[f64]) -> Vec<f64> {
+        let family = op.kernel.family.name();
+        let dim = op.tree().d;
+        let use_pjrt = self.will_use_pjrt(&family, dim);
+        let mut metrics = MvmMetrics { used_pjrt: use_pjrt, ..Default::default() };
+        let z = if use_pjrt {
+            self.mvm_pjrt(op, w, &mut metrics)
+        } else {
+            let t0 = Instant::now();
+            let z = op.matvec_parallel(w, self.threads());
+            metrics.far_seconds = t0.elapsed().as_secs_f64();
+            z
+        };
+        self.last_metrics = metrics;
+        z
+    }
+
+    /// PJRT near-field path: far field natively (the paper's contribution
+    /// lives there), near field batched through the AOT tile executable.
+    fn mvm_pjrt(&mut self, op: &FktOperator, w: &[f64], metrics: &mut MvmMetrics) -> Vec<f64> {
+        let family = op.kernel.family.name();
+        let d = op.tree().d;
+        let exe = self
+            .runtime
+            .as_mut()
+            .expect("runtime probed")
+            .near_batch(&family, d)
+            .expect("artifact probed");
+        let (bsz, tile) = (exe.batch, exe.tile);
+        let t0 = Instant::now();
+        // Far field (and moments) natively; near blocks collected as tiles.
+        struct TileJob {
+            /// Flat (T,d) f32 source coords (padded).
+            x: Vec<f32>,
+            /// (T,) weights (zero-padded).
+            w: Vec<f32>,
+            /// Flat (T,d) f32 target coords (padded by repeating the last).
+            y: Vec<f32>,
+            /// Original target indices for scatter (≤ T).
+            tgt: Vec<u32>,
+        }
+        let mut jobs: Vec<TileJob> = Vec::new();
+        let tree = op.tree();
+        let plan = op.plan();
+        for &leaf in &tree.leaves {
+            let node = &tree.nodes[leaf];
+            let near = &plan.interactions[leaf].near;
+            if near.is_empty() {
+                continue;
+            }
+            // Source chunks of ≤ T points.
+            let src_ids: Vec<usize> = (node.start..node.end).collect();
+            for s_chunk in src_ids.chunks(tile) {
+                let mut x = vec![0.0f32; tile * d];
+                let mut wv = vec![0.0f32; tile];
+                for (slot, &i) in s_chunk.iter().enumerate() {
+                    let pnt = tree.points.point(i);
+                    for a in 0..d {
+                        x[slot * d + a] = pnt[a] as f32;
+                    }
+                    wv[slot] = w[tree.perm[i]] as f32;
+                }
+                // Padding sources stay at the origin with zero weight —
+                // exact by the padding convention (kernel value finite,
+                // weight zero).
+                for t_chunk in near.chunks(tile) {
+                    let mut y = vec![0.0f32; tile * d];
+                    for (slot, &t) in t_chunk.iter().enumerate() {
+                        let pnt = op.target_point(t as usize);
+                        for a in 0..d {
+                            y[slot * d + a] = pnt[a] as f32;
+                        }
+                    }
+                    // Pad targets by repeating the last target (rows ignored).
+                    for slot in t_chunk.len()..tile {
+                        for a in 0..d {
+                            y[slot * d + a] = y[(t_chunk.len().max(1) - 1) * d + a];
+                        }
+                    }
+                    jobs.push(TileJob { x: x.clone(), w: wv.clone(), y, tgt: t_chunk.to_vec() });
+                }
+            }
+        }
+        metrics.tiles = jobs.len();
+        // Far field natively while building is done; now run it.
+        let mut z = op.matvec_with_near(w, &mut |_leaf, _near, _w, _z| {
+            // near handled below through PJRT tiles
+        });
+        metrics.far_seconds = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        // Execute tile jobs in batches of B.
+        let mut xbuf = vec![0.0f32; bsz * tile * d];
+        let mut wbuf = vec![0.0f32; bsz * tile];
+        let mut ybuf = vec![0.0f32; bsz * tile * d];
+        for batch in jobs.chunks(bsz) {
+            for (bi, job) in batch.iter().enumerate() {
+                xbuf[bi * tile * d..(bi + 1) * tile * d].copy_from_slice(&job.x);
+                wbuf[bi * tile..(bi + 1) * tile].copy_from_slice(&job.w);
+                ybuf[bi * tile * d..(bi + 1) * tile * d].copy_from_slice(&job.y);
+            }
+            // Unused batch slots: zero weights make them no-ops.
+            for bi in batch.len()..bsz {
+                wbuf[bi * tile..(bi + 1) * tile].fill(0.0);
+            }
+            let out = exe.execute(&xbuf, &wbuf, &ybuf).expect("tile execute");
+            for (bi, job) in batch.iter().enumerate() {
+                for (slot, &t) in job.tgt.iter().enumerate() {
+                    z[t as usize] += out[bi * tile + slot] as f64;
+                }
+            }
+            metrics.pjrt_batches += 1;
+        }
+        metrics.near_seconds = t1.elapsed().as_secs_f64();
+        z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fkt::FktConfig;
+    use crate::kernels::{Family, Kernel};
+    use crate::points::Points;
+    use crate::rng::Pcg32;
+
+    fn uniform_points(n: usize, d: usize, seed: u64) -> Points {
+        let mut rng = Pcg32::seeded(seed);
+        Points::new(d, rng.uniform_vec(n * d, 0.0, 1.0))
+    }
+
+    #[test]
+    fn native_coordinator_matches_operator() {
+        let pts = uniform_points(500, 2, 131);
+        let mut rng = Pcg32::seeded(132);
+        let w = rng.normal_vec(500);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let direct = op.matvec(&w);
+        let mut coord = Coordinator::native(4);
+        let z = coord.mvm(&op, &w);
+        for i in 0..500 {
+            assert!((z[i] - direct[i]).abs() < 1e-10 * (1.0 + direct[i].abs()));
+        }
+        assert!(!coord.last_metrics.used_pjrt);
+    }
+
+    #[test]
+    fn pjrt_coordinator_matches_native_when_artifacts_exist() {
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            threads: 2,
+            backend: Backend::Pjrt,
+        });
+        if !coord.will_use_pjrt("cauchy", 2) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let pts = uniform_points(800, 2, 133);
+        let mut rng = Pcg32::seeded(134);
+        let w = rng.normal_vec(800);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 100, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let native = op.matvec(&w);
+        let z = coord.mvm(&op, &w);
+        assert!(coord.last_metrics.used_pjrt);
+        assert!(coord.last_metrics.tiles > 0);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..800 {
+            num += (z[i] - native[i]) * (z[i] - native[i]);
+            den += native[i] * native[i];
+        }
+        let rel = (num / den).sqrt();
+        // f32 tiles vs f64 native: expect ~1e-6 relative agreement.
+        assert!(rel < 1e-4, "pjrt vs native rel err {rel}");
+    }
+
+    #[test]
+    fn auto_backend_falls_back_for_unknown_family() {
+        let mut coord = Coordinator::new(CoordinatorConfig::default());
+        // exp_inv_r has no artifact in the default set.
+        assert!(!coord.will_use_pjrt("exp_inv_r", 2));
+        let pts = uniform_points(200, 2, 135);
+        let mut rng = Pcg32::seeded(136);
+        let w = rng.normal_vec(200);
+        let kern = Kernel::canonical(Family::ExpInvR);
+        let cfg = FktConfig { p: 3, theta: 0.5, leaf_capacity: 32, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let z = coord.mvm(&op, &w);
+        assert_eq!(z.len(), 200);
+        assert!(!coord.last_metrics.used_pjrt);
+    }
+}

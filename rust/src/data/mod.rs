@@ -1,0 +1,160 @@
+//! Dataset generators for the paper's experiments.
+//!
+//! Synthetic generators reproduce the paper's stated setups exactly
+//! (uniform hypersphere for Fig 2-left, unit square for Fig 3-left,
+//! Gaussian mixture for Fig 1). The two real-world data sets the paper
+//! uses are unavailable in this environment and get faithful simulators —
+//! see DESIGN.md §Substitutions:
+//! * [`mnist_like`] stands in for MNIST-after-PCA-50 (Fig 3-right),
+//! * [`sst`] simulates the Copernicus satellite sea-surface-temperature
+//!   collection (Fig 4), with a *known* ground-truth field.
+
+pub mod sst;
+
+use crate::points::Points;
+use crate::rng::Pcg32;
+
+/// N points uniform on the unit hypersphere S^{d-1} (paper §5.1).
+pub fn uniform_hypersphere(n: usize, d: usize, rng: &mut Pcg32) -> Points {
+    let mut pts = Points::empty(d);
+    for _ in 0..n {
+        pts.push(&rng.unit_sphere(d));
+    }
+    pts
+}
+
+/// N points uniform in the unit hypercube (paper Fig 3-left's unit square).
+pub fn uniform_cube(n: usize, d: usize, rng: &mut Pcg32) -> Points {
+    Points::new(d, rng.uniform_vec(n * d, 0.0, 1.0))
+}
+
+/// A Gaussian mixture in d dims (paper Fig 1's decomposition demo).
+/// Returns (points, component labels).
+pub fn gaussian_mixture(
+    n: usize,
+    d: usize,
+    components: usize,
+    spread: f64,
+    rng: &mut Pcg32,
+) -> (Points, Vec<usize>) {
+    // Component centers uniform in the unit cube, diagonal covariances.
+    let centers: Vec<Vec<f64>> = (0..components)
+        .map(|_| rng.uniform_vec(d, 0.0, 1.0))
+        .collect();
+    let sigmas: Vec<f64> = (0..components)
+        .map(|_| spread * rng.uniform_in(0.5, 1.5))
+        .collect();
+    let mut pts = Points::empty(d);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(components);
+        let p: Vec<f64> = (0..d)
+            .map(|a| centers[c][a] + sigmas[c] * rng.normal())
+            .collect();
+        pts.push(&p);
+        labels.push(c);
+    }
+    (pts, labels)
+}
+
+/// MNIST surrogate (DESIGN.md substitution #1): `n` points in `dim`
+/// ambient dimensions drawn from 10 anisotropic Gaussian clusters with
+/// heteroscedastic spread plus a uniform background component, mimicking
+/// the cluster structure of MNIST after the PCA-50 preprocessing t-SNE
+/// implementations apply. Returns (data, digit labels 0..10).
+pub fn mnist_like(n: usize, dim: usize, rng: &mut Pcg32) -> (Points, Vec<usize>) {
+    let classes = 10;
+    // Cluster centers: well separated on a scaled simplex-ish layout.
+    let centers: Vec<Vec<f64>> = (0..classes)
+        .map(|_| {
+            let dir = rng.unit_sphere(dim);
+            let radius = rng.uniform_in(6.0, 9.0);
+            dir.into_iter().map(|v| v * radius).collect()
+        })
+        .collect();
+    // Anisotropic axis scales per class (some digits vary more).
+    let scales: Vec<Vec<f64>> = (0..classes)
+        .map(|_| (0..dim).map(|_| rng.uniform_in(0.4, 1.6)).collect())
+        .collect();
+    let mut pts = Points::empty(dim);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        if rng.uniform() < 0.05 {
+            // Background noise (mislabeled/odd samples).
+            let p = rng.uniform_vec(dim, -9.0, 9.0);
+            pts.push(&p);
+            labels.push(rng.below(classes));
+            continue;
+        }
+        let c = rng.below(classes);
+        let p: Vec<f64> = (0..dim)
+            .map(|a| centers[c][a] + scales[c][a] * rng.normal())
+            .collect();
+        pts.push(&p);
+        labels.push(c);
+    }
+    (pts, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hypersphere_points_are_unit() {
+        let mut rng = Pcg32::seeded(201);
+        let pts = uniform_hypersphere(100, 4, &mut rng);
+        for i in 0..100 {
+            let norm: f64 = pts.point(i).iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cube_points_in_range() {
+        let mut rng = Pcg32::seeded(202);
+        let pts = uniform_cube(200, 2, &mut rng);
+        assert!(pts.coords.iter().all(|&c| (0.0..1.0).contains(&c)));
+    }
+
+    #[test]
+    fn mixture_labels_consistent() {
+        let mut rng = Pcg32::seeded(203);
+        let (pts, labels) = gaussian_mixture(300, 2, 5, 0.05, &mut rng);
+        assert_eq!(pts.len(), 300);
+        assert_eq!(labels.len(), 300);
+        assert!(labels.iter().all(|&l| l < 5));
+    }
+
+    #[test]
+    fn mnist_like_clusters_are_separable() {
+        // Same-class points should usually be nearer than cross-class.
+        let mut rng = Pcg32::seeded(204);
+        let (pts, labels) = mnist_like(500, 20, &mut rng);
+        let mut same = 0.0;
+        let mut cross = 0.0;
+        let mut ns = 0;
+        let mut nc = 0;
+        for i in (0..500).step_by(7) {
+            for j in (1..500).step_by(11) {
+                if i == j {
+                    continue;
+                }
+                let d = pts.dist2(i, j).sqrt();
+                if labels[i] == labels[j] {
+                    same += d;
+                    ns += 1;
+                } else {
+                    cross += d;
+                    nc += 1;
+                }
+            }
+        }
+        let mean_same = same / ns as f64;
+        let mean_cross = cross / nc as f64;
+        assert!(
+            mean_same < 0.75 * mean_cross,
+            "same {mean_same} vs cross {mean_cross}"
+        );
+    }
+}

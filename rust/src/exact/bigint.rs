@@ -1,0 +1,650 @@
+//! Arbitrary-precision signed integers.
+//!
+//! `num-bigint` is not available offline, and the §A.4 compression as well as
+//! the `T_jkm` coefficient tables require *exact* arithmetic (the paper
+//! explicitly uses Julia's `Rational` to keep the rank-revealing QR exact).
+//! Magnitudes here stay modest (a few hundred digits at p=18), so schoolbook
+//! algorithms on u32 limbs with u64 intermediates are plenty fast.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// Sign of a [`BigInt`]. `Zero` implies an empty limb vector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sign {
+    Neg,
+    Zero,
+    Pos,
+}
+
+/// Arbitrary-precision signed integer, little-endian u32 limbs.
+#[derive(Clone, Debug)]
+pub struct BigInt {
+    sign: Sign,
+    /// Little-endian limbs; no trailing zeros; empty iff sign == Zero.
+    limbs: Vec<u32>,
+}
+
+const BASE_BITS: u32 = 32;
+
+impl BigInt {
+    /// The zero value.
+    pub fn zero() -> Self {
+        BigInt { sign: Sign::Zero, limbs: Vec::new() }
+    }
+
+    /// The one value.
+    pub fn one() -> Self {
+        BigInt::from_i64(1)
+    }
+
+    /// Construct from an i64.
+    pub fn from_i64(v: i64) -> Self {
+        if v == 0 {
+            return Self::zero();
+        }
+        let sign = if v > 0 { Sign::Pos } else { Sign::Neg };
+        let mut mag = v.unsigned_abs();
+        let mut limbs = Vec::new();
+        while mag > 0 {
+            limbs.push((mag & 0xFFFF_FFFF) as u32);
+            mag >>= BASE_BITS;
+        }
+        BigInt { sign, limbs }
+    }
+
+    /// Construct from a u64 magnitude and explicit sign.
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 {
+            return Self::zero();
+        }
+        let mut limbs = Vec::new();
+        let mut mag = v;
+        while mag > 0 {
+            limbs.push((mag & 0xFFFF_FFFF) as u32);
+            mag >>= BASE_BITS;
+        }
+        BigInt { sign: Sign::Pos, limbs }
+    }
+
+    /// True iff zero.
+    pub fn is_zero(&self) -> bool {
+        self.sign == Sign::Zero
+    }
+
+    /// True iff strictly negative.
+    pub fn is_negative(&self) -> bool {
+        self.sign == Sign::Neg
+    }
+
+    /// True iff strictly positive.
+    pub fn is_positive(&self) -> bool {
+        self.sign == Sign::Pos
+    }
+
+    /// Sign accessor.
+    pub fn sign(&self) -> Sign {
+        self.sign
+    }
+
+    /// Negate in place.
+    pub fn negate(&mut self) {
+        self.sign = match self.sign {
+            Sign::Neg => Sign::Pos,
+            Sign::Zero => Sign::Zero,
+            Sign::Pos => Sign::Neg,
+        };
+    }
+
+    /// Negated copy.
+    pub fn neg(&self) -> Self {
+        let mut out = self.clone();
+        out.negate();
+        out
+    }
+
+    /// Absolute value.
+    pub fn abs(&self) -> Self {
+        let mut out = self.clone();
+        if out.sign == Sign::Neg {
+            out.sign = Sign::Pos;
+        }
+        out
+    }
+
+    fn trim(limbs: &mut Vec<u32>) {
+        while limbs.last() == Some(&0) {
+            limbs.pop();
+        }
+    }
+
+    fn from_limbs(sign: Sign, mut limbs: Vec<u32>) -> Self {
+        Self::trim(&mut limbs);
+        if limbs.is_empty() {
+            Self::zero()
+        } else {
+            BigInt { sign, limbs }
+        }
+    }
+
+    fn cmp_mag(a: &[u32], b: &[u32]) -> Ordering {
+        if a.len() != b.len() {
+            return a.len().cmp(&b.len());
+        }
+        for i in (0..a.len()).rev() {
+            if a[i] != b[i] {
+                return a[i].cmp(&b[i]);
+            }
+        }
+        Ordering::Equal
+    }
+
+    fn add_mag(a: &[u32], b: &[u32]) -> Vec<u32> {
+        let (long, short) = if a.len() >= b.len() { (a, b) } else { (b, a) };
+        let mut out = Vec::with_capacity(long.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..long.len() {
+            let s = long[i] as u64 + if i < short.len() { short[i] as u64 } else { 0 } + carry;
+            out.push((s & 0xFFFF_FFFF) as u32);
+            carry = s >> BASE_BITS;
+        }
+        if carry > 0 {
+            out.push(carry as u32);
+        }
+        out
+    }
+
+    /// a - b where |a| >= |b|.
+    fn sub_mag(a: &[u32], b: &[u32]) -> Vec<u32> {
+        debug_assert!(Self::cmp_mag(a, b) != Ordering::Less);
+        let mut out = Vec::with_capacity(a.len());
+        let mut borrow = 0i64;
+        for i in 0..a.len() {
+            let bi = if i < b.len() { b[i] as i64 } else { 0 };
+            let mut d = a[i] as i64 - bi - borrow;
+            if d < 0 {
+                d += 1i64 << BASE_BITS;
+                borrow = 1;
+            } else {
+                borrow = 0;
+            }
+            out.push(d as u32);
+        }
+        Self::trim(&mut out);
+        out
+    }
+
+    fn mul_mag(a: &[u32], b: &[u32]) -> Vec<u32> {
+        if a.is_empty() || b.is_empty() {
+            return Vec::new();
+        }
+        let mut out = vec![0u32; a.len() + b.len()];
+        for (i, &ai) in a.iter().enumerate() {
+            if ai == 0 {
+                continue;
+            }
+            let mut carry = 0u64;
+            for (j, &bj) in b.iter().enumerate() {
+                let t = ai as u64 * bj as u64 + out[i + j] as u64 + carry;
+                out[i + j] = (t & 0xFFFF_FFFF) as u32;
+                carry = t >> BASE_BITS;
+            }
+            let mut k = i + b.len();
+            while carry > 0 {
+                let t = out[k] as u64 + carry;
+                out[k] = (t & 0xFFFF_FFFF) as u32;
+                carry = t >> BASE_BITS;
+                k += 1;
+            }
+        }
+        Self::trim(&mut out);
+        out
+    }
+
+    /// Knuth algorithm D division of magnitudes: returns (quotient, remainder).
+    fn divrem_mag(a: &[u32], b: &[u32]) -> (Vec<u32>, Vec<u32>) {
+        assert!(!b.is_empty(), "division by zero");
+        if Self::cmp_mag(a, b) == Ordering::Less {
+            return (Vec::new(), a.to_vec());
+        }
+        if b.len() == 1 {
+            // Fast path: single-limb divisor.
+            let d = b[0] as u64;
+            let mut q = vec![0u32; a.len()];
+            let mut rem = 0u64;
+            for i in (0..a.len()).rev() {
+                let cur = (rem << BASE_BITS) | a[i] as u64;
+                q[i] = (cur / d) as u32;
+                rem = cur % d;
+            }
+            Self::trim(&mut q);
+            let r = if rem == 0 { Vec::new() } else { vec![rem as u32] };
+            return (q, r);
+        }
+        // Normalize so the divisor's top limb has its high bit set.
+        let shift = b.last().unwrap().leading_zeros();
+        let bn = Self::shl_mag(b, shift);
+        let mut an = Self::shl_mag(a, shift);
+        an.push(0); // extra limb for the algorithm
+        let n = bn.len();
+        let m = an.len() - n - 1;
+        let mut q = vec![0u32; m + 1];
+        let btop = *bn.last().unwrap() as u64;
+        let bsecond = bn[n - 2] as u64;
+        for j in (0..=m).rev() {
+            let top2 = ((an[j + n] as u64) << BASE_BITS) | an[j + n - 1] as u64;
+            let mut qhat = top2 / btop;
+            let mut rhat = top2 % btop;
+            // Correct qhat down at most twice.
+            while qhat >= (1u64 << BASE_BITS)
+                || qhat * bsecond > ((rhat << BASE_BITS) | an[j + n - 2] as u64)
+            {
+                qhat -= 1;
+                rhat += btop;
+                if rhat >= (1u64 << BASE_BITS) {
+                    break;
+                }
+            }
+            // Multiply-subtract qhat * bn from an[j..j+n+1].
+            let mut borrow = 0i64;
+            let mut carry = 0u64;
+            for i in 0..n {
+                let p = qhat * bn[i] as u64 + carry;
+                carry = p >> BASE_BITS;
+                let sub = (p & 0xFFFF_FFFF) as i64;
+                let mut d = an[j + i] as i64 - sub - borrow;
+                if d < 0 {
+                    d += 1i64 << BASE_BITS;
+                    borrow = 1;
+                } else {
+                    borrow = 0;
+                }
+                an[j + i] = d as u32;
+            }
+            let mut d = an[j + n] as i64 - carry as i64 - borrow;
+            if d < 0 {
+                // qhat was one too large: add back.
+                d += 1i64 << BASE_BITS;
+                an[j + n] = d as u32;
+                qhat -= 1;
+                let mut carry2 = 0u64;
+                for i in 0..n {
+                    let s = an[j + i] as u64 + bn[i] as u64 + carry2;
+                    an[j + i] = (s & 0xFFFF_FFFF) as u32;
+                    carry2 = s >> BASE_BITS;
+                }
+                an[j + n] = (an[j + n] as u64 + carry2) as u32;
+            } else {
+                an[j + n] = d as u32;
+            }
+            q[j] = qhat as u32;
+        }
+        Self::trim(&mut q);
+        let mut r = an[..n].to_vec();
+        Self::trim(&mut r);
+        let r = Self::shr_mag(&r, shift);
+        (q, r)
+    }
+
+    fn shl_mag(a: &[u32], bits: u32) -> Vec<u32> {
+        if bits == 0 || a.is_empty() {
+            return a.to_vec();
+        }
+        debug_assert!(bits < 32);
+        let mut out = Vec::with_capacity(a.len() + 1);
+        let mut carry = 0u32;
+        for &x in a {
+            out.push((x << bits) | carry);
+            carry = (x as u64 >> (32 - bits)) as u32;
+        }
+        if carry > 0 {
+            out.push(carry);
+        }
+        out
+    }
+
+    fn shr_mag(a: &[u32], bits: u32) -> Vec<u32> {
+        if bits == 0 || a.is_empty() {
+            return a.to_vec();
+        }
+        debug_assert!(bits < 32);
+        let mut out = vec![0u32; a.len()];
+        for i in 0..a.len() {
+            out[i] = a[i] >> bits;
+            if i + 1 < a.len() {
+                out[i] |= a[i + 1] << (32 - bits);
+            }
+        }
+        Self::trim(&mut out);
+        out
+    }
+
+    /// Addition.
+    pub fn add(&self, other: &Self) -> Self {
+        match (self.sign, other.sign) {
+            (Sign::Zero, _) => other.clone(),
+            (_, Sign::Zero) => self.clone(),
+            (a, b) if a == b => {
+                BigInt::from_limbs(a, Self::add_mag(&self.limbs, &other.limbs))
+            }
+            _ => match Self::cmp_mag(&self.limbs, &other.limbs) {
+                Ordering::Equal => Self::zero(),
+                Ordering::Greater => {
+                    BigInt::from_limbs(self.sign, Self::sub_mag(&self.limbs, &other.limbs))
+                }
+                Ordering::Less => {
+                    BigInt::from_limbs(other.sign, Self::sub_mag(&other.limbs, &self.limbs))
+                }
+            },
+        }
+    }
+
+    /// Subtraction.
+    pub fn sub(&self, other: &Self) -> Self {
+        self.add(&other.neg())
+    }
+
+    /// Multiplication.
+    pub fn mul(&self, other: &Self) -> Self {
+        if self.is_zero() || other.is_zero() {
+            return Self::zero();
+        }
+        let sign = if self.sign == other.sign { Sign::Pos } else { Sign::Neg };
+        BigInt::from_limbs(sign, Self::mul_mag(&self.limbs, &other.limbs))
+    }
+
+    /// Truncated division with remainder: self = q*other + r, |r| < |other|,
+    /// sign(r) == sign(self) (or zero).
+    pub fn divrem(&self, other: &Self) -> (Self, Self) {
+        assert!(!other.is_zero(), "BigInt division by zero");
+        if self.is_zero() {
+            return (Self::zero(), Self::zero());
+        }
+        let (qm, rm) = Self::divrem_mag(&self.limbs, &other.limbs);
+        let qsign = if self.sign == other.sign { Sign::Pos } else { Sign::Neg };
+        (BigInt::from_limbs(qsign, qm), BigInt::from_limbs(self.sign, rm))
+    }
+
+    /// Greatest common divisor (always non-negative).
+    pub fn gcd(&self, other: &Self) -> Self {
+        let mut a = self.abs();
+        let mut b = other.abs();
+        while !b.is_zero() {
+            let (_, r) = a.divrem(&b);
+            a = b;
+            b = r;
+        }
+        a
+    }
+
+    /// Comparison.
+    pub fn cmp_val(&self, other: &Self) -> Ordering {
+        match (self.sign, other.sign) {
+            (Sign::Neg, Sign::Neg) => Self::cmp_mag(&other.limbs, &self.limbs),
+            (Sign::Neg, _) => Ordering::Less,
+            (Sign::Zero, Sign::Neg) => Ordering::Greater,
+            (Sign::Zero, Sign::Zero) => Ordering::Equal,
+            (Sign::Zero, Sign::Pos) => Ordering::Less,
+            (Sign::Pos, Sign::Pos) => Self::cmp_mag(&self.limbs, &other.limbs),
+            (Sign::Pos, _) => Ordering::Greater,
+        }
+    }
+
+    /// Approximate conversion to f64 (may overflow to ±inf).
+    pub fn to_f64(&self) -> f64 {
+        let mut mag = 0.0f64;
+        for &l in self.limbs.iter().rev() {
+            mag = mag * 4294967296.0 + l as f64;
+        }
+        match self.sign {
+            Sign::Neg => -mag,
+            Sign::Zero => 0.0,
+            Sign::Pos => mag,
+        }
+    }
+
+    /// Exact conversion to i64 if it fits.
+    pub fn to_i64(&self) -> Option<i64> {
+        if self.limbs.len() > 2 {
+            return None;
+        }
+        let mut mag = 0u64;
+        for (i, &l) in self.limbs.iter().enumerate() {
+            mag |= (l as u64) << (32 * i);
+        }
+        match self.sign {
+            Sign::Zero => Some(0),
+            Sign::Pos => {
+                if mag <= i64::MAX as u64 {
+                    Some(mag as i64)
+                } else {
+                    None
+                }
+            }
+            Sign::Neg => {
+                if mag <= i64::MAX as u64 + 1 {
+                    Some((mag as i128 * -1) as i64)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// n! as BigInt.
+    pub fn factorial(n: u64) -> Self {
+        let mut acc = Self::one();
+        for i in 2..=n {
+            acc = acc.mul(&Self::from_u64(i));
+        }
+        acc
+    }
+
+    /// Binomial coefficient C(n, k); zero when k > n (n, k non-negative).
+    pub fn binomial(n: i64, k: i64) -> Self {
+        if k < 0 || n < 0 || k > n {
+            return Self::zero();
+        }
+        let k = k.min(n - k);
+        let mut acc = Self::one();
+        for i in 0..k {
+            acc = acc.mul(&Self::from_i64(n - i));
+            let (q, r) = acc.divrem(&Self::from_i64(i + 1));
+            debug_assert!(r.is_zero());
+            acc = q;
+        }
+        acc
+    }
+
+    /// Double factorial n!! (n ≥ -1; (-1)!! = 1).
+    pub fn double_factorial(n: i64) -> Self {
+        if n <= 0 {
+            return Self::one();
+        }
+        let mut acc = Self::one();
+        let mut i = n;
+        while i > 1 {
+            acc = acc.mul(&Self::from_i64(i));
+            i -= 2;
+        }
+        acc
+    }
+
+    /// 2^k.
+    pub fn pow2(k: u32) -> Self {
+        let mut limbs = vec![0u32; (k / 32) as usize];
+        limbs.push(1u32 << (k % 32));
+        BigInt::from_limbs(Sign::Pos, limbs)
+    }
+}
+
+impl PartialEq for BigInt {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp_val(other) == Ordering::Equal
+    }
+}
+impl Eq for BigInt {}
+impl PartialOrd for BigInt {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp_val(other))
+    }
+}
+impl Ord for BigInt {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.cmp_val(other)
+    }
+}
+
+impl fmt::Display for BigInt {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_zero() {
+            return write!(f, "0");
+        }
+        // Repeated division by 10^9.
+        let chunk = BigInt::from_u64(1_000_000_000);
+        let mut digits: Vec<String> = Vec::new();
+        let mut cur = self.abs();
+        while !cur.is_zero() {
+            let (q, r) = cur.divrem(&chunk);
+            let rv = r.to_i64().unwrap_or(0);
+            digits.push(format!("{rv:09}"));
+            cur = q;
+        }
+        let mut s = String::new();
+        if self.is_negative() {
+            s.push('-');
+        }
+        // Strip leading zeros of the top chunk.
+        let top = digits.pop().unwrap();
+        s.push_str(top.trim_start_matches('0'));
+        if s.is_empty() || s == "-" {
+            s.push('0');
+        }
+        for d in digits.iter().rev() {
+            s.push_str(d);
+        }
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn big(v: i64) -> BigInt {
+        BigInt::from_i64(v)
+    }
+
+    #[test]
+    fn small_arithmetic_matches_i64() {
+        let cases = [
+            (0i64, 0i64),
+            (1, -1),
+            (123456789, 987654321),
+            (-5000000000, 7000000000),
+            (i32::MAX as i64, i32::MAX as i64),
+        ];
+        for &(a, b) in &cases {
+            assert_eq!(big(a).add(&big(b)).to_i64(), Some(a + b), "{a}+{b}");
+            assert_eq!(big(a).sub(&big(b)).to_i64(), Some(a - b), "{a}-{b}");
+            assert_eq!(big(a).mul(&big(b)).to_f64(), (a as f64) * (b as f64));
+        }
+    }
+
+    #[test]
+    fn divrem_truncates_toward_zero() {
+        for &(a, b) in &[(7i64, 2i64), (-7, 2), (7, -2), (-7, -2), (100, 7), (0, 5)] {
+            let (q, r) = big(a).divrem(&big(b));
+            assert_eq!(q.to_i64(), Some(a / b), "{a}/{b}");
+            assert_eq!(r.to_i64(), Some(a % b), "{a}%{b}");
+        }
+    }
+
+    #[test]
+    fn big_multiplication_and_division_roundtrip() {
+        // (2^200 + 1) * (2^100 + 3), then divide back.
+        let a = BigInt::pow2(200).add(&BigInt::one());
+        let b = BigInt::pow2(100).add(&big(3));
+        let p = a.mul(&b);
+        let (q, r) = p.divrem(&b);
+        assert!(r.is_zero());
+        assert_eq!(q, a);
+        let (q2, r2) = p.divrem(&a);
+        assert!(r2.is_zero());
+        assert_eq!(q2, b);
+    }
+
+    #[test]
+    fn divrem_randomized_roundtrip() {
+        let mut rng = crate::rng::Pcg32::seeded(77);
+        for _ in 0..200 {
+            let a_limbs = 1 + rng.below(6);
+            let b_limbs = 1 + rng.below(4);
+            let mut a = BigInt::zero();
+            for _ in 0..a_limbs {
+                a = a.mul(&BigInt::pow2(32)).add(&BigInt::from_u64(rng.next_u32() as u64));
+            }
+            let mut b = BigInt::zero();
+            for _ in 0..b_limbs {
+                b = b.mul(&BigInt::pow2(32)).add(&BigInt::from_u64(rng.next_u32() as u64));
+            }
+            if b.is_zero() {
+                continue;
+            }
+            if rng.below(2) == 0 {
+                a.negate();
+            }
+            let (q, r) = a.divrem(&b);
+            // a == q*b + r and |r| < |b|
+            assert_eq!(q.mul(&b).add(&r), a);
+            assert!(r.abs() < b.abs());
+        }
+    }
+
+    #[test]
+    fn factorials_and_binomials() {
+        assert_eq!(BigInt::factorial(0).to_i64(), Some(1));
+        assert_eq!(BigInt::factorial(10).to_i64(), Some(3628800));
+        assert_eq!(BigInt::binomial(10, 3).to_i64(), Some(120));
+        assert_eq!(BigInt::binomial(0, 0).to_i64(), Some(1));
+        assert_eq!(BigInt::binomial(5, 9).to_i64(), Some(0));
+        assert_eq!(
+            BigInt::binomial(52, 26).to_f64(),
+            495918532948104.0
+        );
+        assert_eq!(BigInt::double_factorial(-1).to_i64(), Some(1));
+        assert_eq!(BigInt::double_factorial(7).to_i64(), Some(105));
+        assert_eq!(BigInt::double_factorial(8).to_i64(), Some(384));
+    }
+
+    #[test]
+    fn display_matches_known() {
+        assert_eq!(BigInt::factorial(20).to_string(), "2432902008176640000");
+        assert_eq!(big(-42).to_string(), "-42");
+        assert_eq!(BigInt::zero().to_string(), "0");
+        assert_eq!(
+            BigInt::factorial(25).to_string(),
+            "15511210043330985984000000"
+        );
+    }
+
+    #[test]
+    fn cmp_total_order() {
+        let xs = [big(-10), big(-1), BigInt::zero(), big(1), big(10), BigInt::pow2(64)];
+        for i in 0..xs.len() {
+            for j in 0..xs.len() {
+                assert_eq!(xs[i].cmp_val(&xs[j]), i.cmp(&j));
+            }
+        }
+    }
+
+    #[test]
+    fn gcd_known_values() {
+        assert_eq!(big(12).gcd(&big(18)).to_i64(), Some(6));
+        assert_eq!(big(-12).gcd(&big(18)).to_i64(), Some(6));
+        assert_eq!(big(0).gcd(&big(5)).to_i64(), Some(5));
+        let a = BigInt::factorial(30);
+        let b = BigInt::factorial(25);
+        assert_eq!(a.gcd(&b), b.clone());
+    }
+}

@@ -1,0 +1,12 @@
+//! Exact arithmetic substrate: arbitrary-precision integers and rationals.
+//!
+//! The paper's implementation leans on Julia's built-in `Rational` (backed by
+//! `BigInt`) to keep the §A.4 rank-revealing QR exact, and on exact
+//! combinatorics for the `T_jkm` expansion coefficients. This module is the
+//! from-scratch equivalent.
+
+pub mod bigint;
+pub mod rational;
+
+pub use bigint::{BigInt, Sign};
+pub use rational::Rational;

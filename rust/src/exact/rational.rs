@@ -1,0 +1,288 @@
+//! Exact rational numbers over [`BigInt`].
+//!
+//! Always stored in lowest terms with a positive denominator. Used for the
+//! `A_ki`, `B_nm`, and `T_jkm` coefficient tables (alternating-sign
+//! combinatorial sums that would cancel catastrophically in f64 for p ≳ 10)
+//! and for the §A.4 rational rank-revealing QR, where exactness *is* the
+//! rank certificate.
+
+use super::bigint::BigInt;
+use std::cmp::Ordering;
+use std::fmt;
+
+/// Exact rational: `num / den`, `den > 0`, `gcd(|num|, den) == 1`.
+#[derive(Clone, Debug)]
+pub struct Rational {
+    num: BigInt,
+    den: BigInt,
+}
+
+impl Rational {
+    /// 0/1.
+    pub fn zero() -> Self {
+        Rational { num: BigInt::zero(), den: BigInt::one() }
+    }
+
+    /// 1/1.
+    pub fn one() -> Self {
+        Rational { num: BigInt::one(), den: BigInt::one() }
+    }
+
+    /// From an integer.
+    pub fn from_i64(v: i64) -> Self {
+        Rational { num: BigInt::from_i64(v), den: BigInt::one() }
+    }
+
+    /// From a BigInt.
+    pub fn from_bigint(v: BigInt) -> Self {
+        Rational { num: v, den: BigInt::one() }
+    }
+
+    /// num/den, reduced; panics if den == 0.
+    pub fn new(num: BigInt, den: BigInt) -> Self {
+        assert!(!den.is_zero(), "Rational with zero denominator");
+        let mut num = num;
+        let mut den = den;
+        if den.is_negative() {
+            num.negate();
+            den.negate();
+        }
+        if num.is_zero() {
+            return Self::zero();
+        }
+        let g = num.gcd(&den);
+        let (num, r1) = num.divrem(&g);
+        debug_assert!(r1.is_zero());
+        let (den, r2) = den.divrem(&g);
+        debug_assert!(r2.is_zero());
+        Rational { num, den }
+    }
+
+    /// a/b for small integers.
+    pub fn ratio(a: i64, b: i64) -> Self {
+        Self::new(BigInt::from_i64(a), BigInt::from_i64(b))
+    }
+
+    /// Numerator (sign-carrying).
+    pub fn numer(&self) -> &BigInt {
+        &self.num
+    }
+
+    /// Denominator (always positive).
+    pub fn denom(&self) -> &BigInt {
+        &self.den
+    }
+
+    /// True iff exactly zero.
+    pub fn is_zero(&self) -> bool {
+        self.num.is_zero()
+    }
+
+    /// True iff negative.
+    pub fn is_negative(&self) -> bool {
+        self.num.is_negative()
+    }
+
+    /// Addition.
+    pub fn add(&self, other: &Self) -> Self {
+        Self::new(
+            self.num.mul(&other.den).add(&other.num.mul(&self.den)),
+            self.den.mul(&other.den),
+        )
+    }
+
+    /// Subtraction.
+    pub fn sub(&self, other: &Self) -> Self {
+        Self::new(
+            self.num.mul(&other.den).sub(&other.num.mul(&self.den)),
+            self.den.mul(&other.den),
+        )
+    }
+
+    /// Multiplication.
+    pub fn mul(&self, other: &Self) -> Self {
+        Self::new(self.num.mul(&other.num), self.den.mul(&other.den))
+    }
+
+    /// Division; panics on division by zero.
+    pub fn div(&self, other: &Self) -> Self {
+        assert!(!other.is_zero(), "Rational division by zero");
+        Self::new(self.num.mul(&other.den), self.den.mul(&other.num))
+    }
+
+    /// Negated copy.
+    pub fn neg(&self) -> Self {
+        Rational { num: self.num.neg(), den: self.den.clone() }
+    }
+
+    /// Absolute value.
+    pub fn abs(&self) -> Self {
+        Rational { num: self.num.abs(), den: self.den.clone() }
+    }
+
+    /// Multiplicative inverse.
+    pub fn recip(&self) -> Self {
+        assert!(!self.is_zero(), "Rational recip of zero");
+        Self::new(self.den.clone(), self.num.clone())
+    }
+
+    /// Integer power (negative exponents allowed for nonzero values).
+    pub fn powi(&self, e: i32) -> Self {
+        if e == 0 {
+            return Self::one();
+        }
+        let base = if e < 0 { self.recip() } else { self.clone() };
+        let mut acc = Self::one();
+        for _ in 0..e.unsigned_abs() {
+            acc = acc.mul(&base);
+        }
+        acc
+    }
+
+    /// Approximate as f64 (uses a scaling trick to survive huge num/den).
+    pub fn to_f64(&self) -> f64 {
+        let nf = self.num.to_f64();
+        let df = self.den.to_f64();
+        if nf.is_finite() && df.is_finite() && df != 0.0 {
+            return nf / df;
+        }
+        // Fall back: long division to ~30 digits via string lengths.
+        let ns = self.num.abs().to_string();
+        let ds = self.den.to_string();
+        let exp = ns.len() as i32 - ds.len() as i32;
+        let lead = |s: &str| -> f64 {
+            s.chars().take(17).collect::<String>().parse::<f64>().unwrap_or(0.0)
+                * 10f64.powi(-(s.len().min(17) as i32 - 1))
+        };
+        let mant = lead(&ns) / lead(&ds);
+        let sign = if self.num.is_negative() { -1.0 } else { 1.0 };
+        sign * mant * 10f64.powi(exp)
+    }
+
+    /// Comparison.
+    pub fn cmp_val(&self, other: &Self) -> Ordering {
+        self.num.mul(&other.den).cmp_val(&other.num.mul(&self.den))
+    }
+
+    /// The rising factorial (x)_n = x (x+1) … (x+n−1).
+    pub fn rising_factorial(x: &Rational, n: u32) -> Rational {
+        let mut acc = Rational::one();
+        for i in 0..n {
+            acc = acc.mul(&x.add(&Rational::from_i64(i as i64)));
+        }
+        acc
+    }
+}
+
+impl PartialEq for Rational {
+    fn eq(&self, other: &Self) -> bool {
+        self.num == other.num && self.den == other.den
+    }
+}
+impl Eq for Rational {}
+impl PartialOrd for Rational {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp_val(other))
+    }
+}
+impl Ord for Rational {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.cmp_val(other)
+    }
+}
+
+impl fmt::Display for Rational {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == BigInt::one() {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(a: i64, b: i64) -> Rational {
+        Rational::ratio(a, b)
+    }
+
+    #[test]
+    fn reduction_and_sign_normalization() {
+        assert_eq!(r(2, 4), r(1, 2));
+        assert_eq!(r(-2, -4), r(1, 2));
+        assert_eq!(r(2, -4), r(-1, 2));
+        assert_eq!(r(0, -7), Rational::zero());
+        assert_eq!(r(6, 3).to_string(), "2");
+        assert_eq!(r(-1, 3).to_string(), "-1/3");
+    }
+
+    #[test]
+    fn field_arithmetic() {
+        assert_eq!(r(1, 2).add(&r(1, 3)), r(5, 6));
+        assert_eq!(r(1, 2).sub(&r(1, 3)), r(1, 6));
+        assert_eq!(r(2, 3).mul(&r(3, 4)), r(1, 2));
+        assert_eq!(r(2, 3).div(&r(4, 9)), r(3, 2));
+        assert_eq!(r(-3, 7).recip(), r(-7, 3));
+        assert_eq!(r(2, 3).powi(3), r(8, 27));
+        assert_eq!(r(2, 3).powi(-2), r(9, 4));
+        assert_eq!(r(5, 1).powi(0), Rational::one());
+    }
+
+    #[test]
+    fn exactness_of_harmonic_sum() {
+        // H_20 computed exactly, compared against known value.
+        let mut h = Rational::zero();
+        for i in 1..=20 {
+            h = h.add(&r(1, i));
+        }
+        // H_20 = 55835135/15519504
+        assert_eq!(h, r(55835135, 15519504));
+        assert!((h.to_f64() - 3.597739657143682).abs() < 1e-14);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(r(1, 3) < r(1, 2));
+        assert!(r(-1, 2) < r(-1, 3));
+        assert!(r(7, 7) == Rational::one());
+    }
+
+    #[test]
+    fn rising_factorial_half_integer() {
+        // (1/2)_3 = (1/2)(3/2)(5/2) = 15/8
+        let x = r(1, 2);
+        assert_eq!(Rational::rising_factorial(&x, 3), r(15, 8));
+        assert_eq!(Rational::rising_factorial(&x, 0), Rational::one());
+    }
+
+    #[test]
+    fn to_f64_handles_moderate_values() {
+        assert!((r(1, 3).to_f64() - 1.0 / 3.0).abs() < 1e-15);
+        let big = Rational::from_bigint(BigInt::factorial(40)).div(&Rational::from_bigint(BigInt::factorial(38)));
+        assert!((big.to_f64() - (40.0 * 39.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn randomized_field_axioms() {
+        let mut rng = crate::rng::Pcg32::seeded(99);
+        for _ in 0..200 {
+            let a = r(rng.below(41) as i64 - 20, 1 + rng.below(20) as i64);
+            let b = r(rng.below(41) as i64 - 20, 1 + rng.below(20) as i64);
+            let c = r(rng.below(41) as i64 - 20, 1 + rng.below(20) as i64);
+            // Commutativity, associativity, distributivity.
+            assert_eq!(a.add(&b), b.add(&a));
+            assert_eq!(a.mul(&b), b.mul(&a));
+            assert_eq!(a.add(&b).add(&c), a.add(&b.add(&c)));
+            assert_eq!(a.mul(&b).mul(&c), a.mul(&b.mul(&c)));
+            assert_eq!(a.mul(&b.add(&c)), a.mul(&b).add(&a.mul(&c)));
+            // Inverses.
+            assert_eq!(a.sub(&a), Rational::zero());
+            if !a.is_zero() {
+                assert_eq!(a.div(&a), Rational::one());
+            }
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! The Lemma 4.1 truncation-error bound estimate (paper Fig 2, right).
+//!
+//! `|E_P| ≤ Σ_k binom(k+d−3, k) · |Σ_{j=max(p+1,k)}^{J} Σ_m K^{(m)}(r) r^m (r'/r)^j T_jkm|`
+//!
+//! The paper estimates the bound by fixing `r'/r = 1/2`, summing `j` from
+//! `p+1` to 30, and maximizing over `r ∈ [0, 20]`. We reproduce exactly
+//! that protocol; the coefficient table is built once to `J = 30` in exact
+//! rational arithmetic and reused for every p on the sweep.
+
+use super::coeffs::CoeffTable;
+use super::gegenbauer::angular_at_one;
+use crate::kernels::Kernel;
+
+/// Estimate the Lemma 4.1 bound for truncation order `p` at radius `r` with
+/// ratio `r'/r = ratio`, summing tail terms up to order `jmax` using a
+/// pre-built table of order `jmax`.
+pub fn truncation_bound_at(
+    table: &CoeffTable,
+    kernel: &Kernel,
+    p: usize,
+    r: f64,
+    ratio: f64,
+) -> f64 {
+    let jmax = table.p;
+    assert!(p < jmax, "need table order > p");
+    let derivs = kernel.derivatives_canonical(r, jmax);
+    let mut total = 0.0;
+    for k in 0..=jmax {
+        // Tail: j from max(p+1, k) to jmax with j ≡ k (mod 2).
+        let mut tail = 0.0;
+        for jj in 0..table.num_j(k) {
+            let j = k + 2 * jj;
+            if j <= p {
+                continue;
+            }
+            // Σ_m K^{(m)}(r) r^m · T_jkm · (r'/r)^j
+            // radial_m gives Σ_m G K^{(m)} r^{m−j}; multiply by r^j to get
+            // Σ_m G K^{(m)} r^m, then by ratio^j.
+            let m = table.radial_m(k, jj, r, &derivs) * r.powi(j as i32);
+            tail += m * ratio.powi(j as i32);
+        }
+        total += angular_at_one(table.d, k) * tail.abs();
+    }
+    total
+}
+
+/// The paper's Fig 2-right protocol: maximum of the bound estimate over
+/// `n_r` radii `r ∈ (0, r_max]`, with `r'/r = ratio`.
+pub fn truncation_bound_estimate(
+    table: &CoeffTable,
+    kernel: &Kernel,
+    p: usize,
+    ratio: f64,
+    r_max: f64,
+    n_r: usize,
+    rng: &mut crate::rng::Pcg32,
+) -> f64 {
+    let mut worst = 0.0f64;
+    for _ in 0..n_r {
+        // Avoid r ≈ 0 where singular kernels blow up the bound trivially.
+        let r = rng.uniform_in(r_max * 1e-3, r_max);
+        worst = worst.max(truncation_bound_at(table, kernel, p, r, ratio));
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Family;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn bound_decays_with_p() {
+        let table = CoeffTable::build(3, 20);
+        let kern = Kernel::canonical(Family::Exponential);
+        let mut rng = Pcg32::seeded(71);
+        let b4 = truncation_bound_estimate(&table, &kern, 4, 0.5, 10.0, 50, &mut rng);
+        let b8 = truncation_bound_estimate(&table, &kern, 8, 0.5, 10.0, 50, &mut rng);
+        let b12 = truncation_bound_estimate(&table, &kern, 12, 0.5, 10.0, 50, &mut rng);
+        assert!(b8 < b4, "{b4} -> {b8}");
+        assert!(b12 < b8, "{b8} -> {b12}");
+        // Exponential decay: roughly a constant factor per +4 in p.
+        assert!(b12 < b4 * 0.1, "{b4} -> {b12}");
+    }
+
+    #[test]
+    fn bound_dominates_observed_error() {
+        // The bound (loose as the paper notes) must upper-bound observed
+        // truncation errors at matching (r, r'/r).
+        let p = 6;
+        let table_hi = CoeffTable::build(3, 24);
+        let table_p = CoeffTable::build(3, p);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let mut rng = Pcg32::seeded(72);
+        for _ in 0..20 {
+            let r = rng.uniform_in(1.5, 5.0);
+            let bound = truncation_bound_at(&table_hi, &kern, p, r, 0.5);
+            let mut observed = 0.0f64;
+            for _ in 0..50 {
+                let cosg = rng.uniform_in(-1.0, 1.0);
+                let rs = 0.5 * r;
+                let truth = kern.eval((r * r + rs * rs - 2.0 * r * rs * cosg).sqrt());
+                let approx = table_p.eval_truncated(&kern, rs, r, cosg);
+                observed = observed.max((approx - truth).abs());
+            }
+            assert!(
+                bound * 1.0001 + 1e-12 >= observed,
+                "bound {bound} < observed {observed} at r={r}"
+            );
+        }
+    }
+}

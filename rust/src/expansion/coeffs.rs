@@ -1,0 +1,377 @@
+//! Exact expansion coefficients: `A_ki` (paper eq. 18), `B_nm` (Lemma A.2),
+//! and the assembled `T_jkm`-style table `G[k][j][m]` of Theorem 3.1.
+//!
+//! All computed in exact rational arithmetic — these are alternating-sign
+//! combinatorial sums (powers of −2, double factorials, binomials) that
+//! cancel catastrophically in f64 beyond p ≈ 10, while the assembled table
+//! converts to f64 losslessly for the magnitudes the FKT uses.
+
+use crate::exact::{BigInt, Rational};
+
+/// `A_ki` of eq. (18): the coefficient of the angular polynomial of order k
+/// in the expansion of `cos^i γ` — Gegenbauer `C_k^α` for d ≥ 3, Chebyshev
+/// `T_k` for d = 2 (the α → 0 limit). Zero unless `k ≤ i` and `k ≡ i (2)`.
+pub fn a_coeff(d: usize, k: usize, i: usize) -> Rational {
+    if k > i || (i - k) % 2 != 0 {
+        return Rational::zero();
+    }
+    let fact_i = Rational::from_bigint(BigInt::factorial(i as u64));
+    let half_dif = (i - k) / 2;
+    let half_sum = (i + k) / 2;
+    let two_i = Rational::from_bigint(BigInt::pow2(i as u32));
+    if d == 2 {
+        // Chebyshev limit: A_ki → (2 − δ_{k0}) · i! / (2^i ((i−k)/2)! ((i+k)/2)!)
+        let denom = two_i
+            .mul(&Rational::from_bigint(BigInt::factorial(half_dif as u64)))
+            .mul(&Rational::from_bigint(BigInt::factorial(half_sum as u64)));
+        let base = fact_i.div(&denom);
+        if k == 0 {
+            base
+        } else {
+            base.mul(&Rational::from_i64(2))
+        }
+    } else {
+        // α = d/2 − 1 as an exact rational.
+        let alpha = Rational::ratio(d as i64 - 2, 2);
+        let num = fact_i.mul(&alpha.add(&Rational::from_i64(k as i64)));
+        let denom = two_i
+            .mul(&Rational::from_bigint(BigInt::factorial(half_dif as u64)))
+            .mul(&Rational::rising_factorial(&alpha, half_sum as u32 + 1));
+        num.div(&denom)
+    }
+}
+
+/// `B_nm` of Lemma A.2:
+/// `∂^n_ε K(r√(1+ε))|_0 = Σ_{m=1}^n B_nm K^{(m)}(r) r^m`, with
+/// `B_nm = (−1)^{n+m} (2n−2m−1)!!/2^n · binom(2n−m−1, m−1)`.
+pub fn b_coeff(n: usize, m: usize) -> Rational {
+    assert!(m >= 1 && m <= n);
+    let dfac = Rational::from_bigint(BigInt::double_factorial(2 * n as i64 - 2 * m as i64 - 1));
+    let binom = Rational::from_bigint(BigInt::binomial(
+        2 * n as i64 - m as i64 - 1,
+        m as i64 - 1,
+    ));
+    let sign = if (n + m) % 2 == 0 { 1 } else { -1 };
+    dfac.mul(&binom)
+        .mul(&Rational::from_i64(sign))
+        .div(&Rational::from_bigint(BigInt::pow2(n as u32)))
+}
+
+/// The exact coefficient table of the generalized multipole expansion:
+///
+/// `K(|x−y|) = Σ_k Θ_k(cos γ) Σ_{j≥k, j≡k(2)} r'^j Σ_m G[k][j][m] K^{(m)}(r) r^{m−j}`
+///
+/// where `Θ_k` is the d-appropriate angular polynomial and the `m = 0` term
+/// (present only at k = j = 0) stands for `K(r)` itself. `G` collects the
+/// paper's `T_jkm` (up to the harmonic normalization `Z_k`, which this
+/// implementation folds into the addition-theorem constant `ρ_k` instead).
+#[derive(Clone, Debug)]
+pub struct CoeffTable {
+    /// Ambient dimension.
+    pub d: usize,
+    /// Truncation order p: k ≤ p, j ≤ p.
+    pub p: usize,
+    /// `exact[k][(j−k)/2][m]` with `j = k + 2·jj`; m runs 0..=j.
+    pub exact: Vec<Vec<Vec<Rational>>>,
+    /// Same table converted to f64 (hot-path use).
+    pub f64s: Vec<Vec<Vec<f64>>>,
+}
+
+impl CoeffTable {
+    /// Number of radial terms (j values) for a given k: `⌊(p−k)/2⌋ + 1`.
+    pub fn num_j(&self, k: usize) -> usize {
+        if k > self.p {
+            0
+        } else {
+            (self.p - k) / 2 + 1
+        }
+    }
+
+    /// Build the table for dimension d and truncation p.
+    ///
+    /// Derivation (paper Theorem A.3): the Taylor/binomial/Gegenbauer
+    /// rearrangement gives, for each admissible (k, j, m),
+    /// `G[k][j][m] = Σ_{n=max((j+k)/2, m)}^{j} binom(n, 2n−j)·(−2)^{2n−j}·A_{k,2n−j}·B_{n,m}/n!`
+    /// plus the n = 0 pure-`K(r)` term at k = j = m = 0.
+    pub fn build(d: usize, p: usize) -> CoeffTable {
+        assert!(d >= 2);
+        let mut exact: Vec<Vec<Vec<Rational>>> = Vec::with_capacity(p + 1);
+        for k in 0..=p {
+            let mut per_k = Vec::new();
+            let mut jj = 0;
+            loop {
+                let j = k + 2 * jj;
+                if j > p {
+                    break;
+                }
+                // m from 0..=j; m=0 only used at k=j=0.
+                let mut per_j = vec![Rational::zero(); j + 1];
+                if k == 0 && j == 0 {
+                    per_j[0] = Rational::one();
+                }
+                for m in 1..=j {
+                    let mut acc = Rational::zero();
+                    let n_lo = ((j + k) / 2).max(m);
+                    for n in n_lo..=j {
+                        let i = 2 * n - j; // power of the cosine term
+                        debug_assert!(i <= n);
+                        let a = a_coeff(d, k, i);
+                        if a.is_zero() {
+                            continue;
+                        }
+                        let binom = Rational::from_bigint(BigInt::binomial(n as i64, i as i64));
+                        let pow_neg2 = Rational::from_i64(-2).powi(i as i32);
+                        let b = b_coeff(n, m);
+                        let nfact = Rational::from_bigint(BigInt::factorial(n as u64));
+                        acc = acc.add(&binom.mul(&pow_neg2).mul(&a).mul(&b).div(&nfact));
+                    }
+                    per_j[m] = acc;
+                }
+                per_k.push(per_j);
+                jj += 1;
+            }
+            exact.push(per_k);
+        }
+        let f64s = exact
+            .iter()
+            .map(|pk| {
+                pk.iter()
+                    .map(|pj| pj.iter().map(|c| c.to_f64()).collect())
+                    .collect()
+            })
+            .collect();
+        CoeffTable { d, p, exact, f64s }
+    }
+
+    /// Evaluate the radial factor `M_{kj}(r) = Σ_m G[k][j][m] K^{(m)}(r) r^{m−j}`
+    /// given the canonical derivatives `derivs[m] = K^{(m)}(r)`.
+    pub fn radial_m(&self, k: usize, jj: usize, r: f64, derivs: &[f64]) -> f64 {
+        let j = k + 2 * jj;
+        let coeffs = &self.f64s[k][jj];
+        let mut acc = 0.0;
+        // r^{m−j} = r^m / r^j; evaluate with a running power.
+        let r_pow_min_j = r.powi(-(j as i32));
+        let mut rm = 1.0; // r^m
+        for (m, &c) in coeffs.iter().enumerate() {
+            if c != 0.0 {
+                acc += c * derivs[m] * rm * r_pow_min_j;
+            }
+            rm *= r;
+        }
+        acc
+    }
+
+    /// Evaluate the *truncated kernel expansion* directly (no harmonics):
+    /// `K̃(r', r, cos γ) = Σ_k Θ_k(cos γ) Σ_j r'^j M_{kj}(r)`.
+    /// This is the object whose error Table 4 and Fig 2-right measure.
+    pub fn eval_truncated(
+        &self,
+        kernel: &crate::kernels::Kernel,
+        r_src: f64,
+        r_tgt: f64,
+        cos_gamma: f64,
+    ) -> f64 {
+        let derivs = kernel.derivatives_canonical(r_tgt, self.p);
+        let mut angular = Vec::new();
+        super::gegenbauer::angular_all(self.d, cos_gamma, self.p, &mut angular);
+        let mut total = 0.0;
+        for k in 0..=self.p {
+            let mut radial = 0.0;
+            for jj in 0..self.num_j(k) {
+                let j = k + 2 * jj;
+                radial += r_src.powi(j as i32) * self.radial_m(k, jj, r_tgt, &derivs);
+            }
+            total += angular[k] * radial;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Family, Kernel};
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn a_coeff_known_values_d3() {
+        // cos γ = P_1; cos²γ = (1/3)P_0 + (2/3)P_2 for α=1/2 (d=3).
+        assert_eq!(a_coeff(3, 1, 1), Rational::one());
+        assert_eq!(a_coeff(3, 0, 2), Rational::ratio(1, 3));
+        assert_eq!(a_coeff(3, 2, 2), Rational::ratio(2, 3));
+        assert_eq!(a_coeff(3, 1, 2), Rational::zero()); // parity
+        assert_eq!(a_coeff(3, 3, 2), Rational::zero()); // k > i
+    }
+
+    #[test]
+    fn a_coeff_known_values_d2() {
+        // cos²γ = 1/2 + (1/2)T_2; cos³γ = (3/4)T_1 + (1/4)T_3.
+        assert_eq!(a_coeff(2, 0, 2), Rational::ratio(1, 2));
+        assert_eq!(a_coeff(2, 2, 2), Rational::ratio(1, 2));
+        assert_eq!(a_coeff(2, 1, 3), Rational::ratio(3, 4));
+        assert_eq!(a_coeff(2, 3, 3), Rational::ratio(1, 4));
+    }
+
+    #[test]
+    fn a_coeff_reconstructs_cosine_powers() {
+        // Σ_k A_ki Θ_k(x) == x^i for random x, several d and i.
+        let mut rng = Pcg32::seeded(41);
+        let mut theta = Vec::new();
+        for d in [2usize, 3, 5, 9, 12] {
+            for i in 0..=9 {
+                let x = rng.uniform_in(-1.0, 1.0);
+                super::super::gegenbauer::angular_all(d, x, i, &mut theta);
+                let mut acc = 0.0;
+                for k in 0..=i {
+                    acc += a_coeff(d, k, i).to_f64() * theta[k];
+                }
+                assert!(
+                    (acc - x.powi(i as i32)).abs() < 1e-12,
+                    "d={d} i={i}: {acc} vs {}",
+                    x.powi(i as i32)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn b_coeff_first_rows() {
+        // n=1: B_11 = 1/2. n=2: B_21 = −1/4, B_22 = 1/4.
+        assert_eq!(b_coeff(1, 1), Rational::ratio(1, 2));
+        assert_eq!(b_coeff(2, 1), Rational::ratio(-1, 4));
+        assert_eq!(b_coeff(2, 2), Rational::ratio(1, 4));
+        // n=3: d³/dε³: check against direct expansion below instead.
+    }
+
+    #[test]
+    fn b_coeff_reproduces_epsilon_derivatives() {
+        // For K = exp(−u): ∂^n_ε K(r√(1+ε))|_0 computed via jets in ε.
+        use crate::jet::Jet;
+        let r = 1.3;
+        let order = 7;
+        // jet in ε around 0: K(r√(1+ε)) = exp(−r√(1+ε))
+        let eps = Jet::variable(0.0, order);
+        let inner = eps.add_scalar(1.0).sqrt().scale(r);
+        let keps = inner.neg().exp();
+        // Canonical derivatives of K at r: (−1)^m e^{−r}.
+        for n in 1..=order {
+            let mut acc = Rational::zero();
+            let mut acc_f = 0.0;
+            for m in 1..=n {
+                let b = b_coeff(n, m);
+                acc = acc.add(&b);
+                let km = (-r).exp() * if m % 2 == 0 { 1.0 } else { -1.0 };
+                acc_f += b.to_f64() * km * r.powi(m as i32);
+            }
+            let _ = acc;
+            let expect = keps.derivative(n);
+            assert!(
+                (acc_f - expect).abs() < 1e-10 * (1.0 + expect.abs()),
+                "n={n}: {acc_f} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn coulomb_d3_recovers_legendre_multipole() {
+        // K = 1/r in d = 3: the classic expansion (4) is
+        // Σ_k P_k(cos γ) r'^k / r^{k+1}. So M_{kj} must vanish for j > k
+        // and M_{kk}(r) = r^{−k−1}.
+        let p = 8;
+        let table = CoeffTable::build(3, p);
+        let kern = Kernel::canonical(Family::Coulomb);
+        let r = 1.7;
+        let derivs = kern.derivatives_canonical(r, p);
+        for k in 0..=p {
+            for jj in 0..table.num_j(k) {
+                let j = k + 2 * jj;
+                let m = table.radial_m(k, jj, r, &derivs);
+                if j == k {
+                    let expect = r.powi(-(k as i32) - 1);
+                    assert!(
+                        (m - expect).abs() < 1e-10 * expect.abs(),
+                        "M_kk k={k}: {m} vs {expect}"
+                    );
+                } else {
+                    assert!(m.abs() < 1e-10, "M_kj should vanish: k={k} j={j} -> {m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_expansion_converges_exponentially() {
+        // Paper Fig 2-right / Table 4 setup: |r'|=1, |r|=2, random angles;
+        // error must decay rapidly with p for smooth kernels.
+        let mut rng = Pcg32::seeded(42);
+        for fam in [Family::Exponential, Family::Cauchy, Family::Gaussian] {
+            let kern = Kernel::canonical(fam);
+            let mut prev_err = f64::INFINITY;
+            for &p in &[4usize, 8, 12] {
+                let table = CoeffTable::build(3, p);
+                let mut max_err = 0.0f64;
+                for _ in 0..100 {
+                    let cosg = rng.uniform_in(-1.0, 1.0);
+                    let truth = {
+                        let dist2 = 1.0 + 4.0 - 2.0 * 1.0 * 2.0 * cosg;
+                        kern.eval(dist2.sqrt())
+                    };
+                    let approx = table.eval_truncated(&kern, 1.0, 2.0, cosg);
+                    max_err = max_err.max((approx - truth).abs());
+                }
+                assert!(
+                    max_err < prev_err * 0.5 || max_err < 1e-12,
+                    "{fam:?} p={p}: err {max_err} prev {prev_err}"
+                );
+                prev_err = max_err;
+            }
+            assert!(prev_err < 1e-4, "{fam:?} final err {prev_err}");
+        }
+    }
+
+    #[test]
+    fn truncated_expansion_matches_table4_magnitudes() {
+        // Table 4 (d=3, e^{-r}): p=6 err ≈ 7e-4, p=12 err ≈ 5e-6 (same
+        // order of magnitude; we assert the bracket loosely).
+        let mut rng = Pcg32::seeded(43);
+        let kern = Kernel::canonical(Family::Exponential);
+        for &(p, lo, hi) in &[(6usize, 1e-5, 1e-2), (12, 1e-8, 1e-4)] {
+            let table = CoeffTable::build(3, p);
+            let mut max_err = 0.0f64;
+            for _ in 0..500 {
+                let cosg = rng.uniform_in(-1.0, 1.0);
+                let truth = kern.eval((5.0 - 4.0 * cosg).sqrt());
+                let approx = table.eval_truncated(&kern, 1.0, 2.0, cosg);
+                max_err = max_err.max((approx - truth).abs());
+            }
+            assert!(max_err > lo && max_err < hi, "p={p}: err {max_err}");
+        }
+    }
+
+    #[test]
+    fn dimension_does_not_degrade_error() {
+        // Table 4's key observation: error is flat across d.
+        let mut rng = Pcg32::seeded(44);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let p = 6;
+        let mut errs = Vec::new();
+        for d in [3usize, 6, 9] {
+            let table = CoeffTable::build(d, p);
+            let mut max_err = 0.0f64;
+            for _ in 0..200 {
+                let cosg = rng.uniform_in(-1.0, 1.0);
+                let truth = kern.eval((5.0 - 4.0 * cosg).sqrt());
+                let approx = table.eval_truncated(&kern, 1.0, 2.0, cosg);
+                max_err = max_err.max((approx - truth).abs());
+            }
+            errs.push(max_err);
+        }
+        for e in &errs {
+            assert!(*e < 1e-2, "errs={errs:?}");
+        }
+        // Flat within 10x.
+        let emax = errs.iter().cloned().fold(0.0, f64::max);
+        let emin = errs.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(emax / emin < 10.0, "errs={errs:?}");
+    }
+}

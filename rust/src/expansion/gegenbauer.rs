@@ -1,0 +1,231 @@
+//! Gegenbauer (ultraspherical) polynomials and half-integer gamma helpers.
+//!
+//! `C_k^{(α)}` with `α = d/2 − 1` is the angular basis of the generalized
+//! multipole expansion (paper §A.1, recurrence (12)). For `d = 2` the
+//! `α → 0` limit degenerates and the correct basis is the Chebyshev
+//! polynomials `T_k` (circular harmonics) — handled explicitly throughout.
+
+/// Evaluate `C_0^α(x) … C_n^α(x)` by the three-term recurrence (12).
+pub fn gegenbauer_all(alpha: f64, x: f64, nmax: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.push(1.0);
+    if nmax == 0 {
+        return;
+    }
+    out.push(2.0 * alpha * x);
+    for n in 2..=nmax {
+        let nf = n as f64;
+        let c = (2.0 * x * (nf + alpha - 1.0) * out[n - 1]
+            - (nf + 2.0 * alpha - 2.0) * out[n - 2])
+            / nf;
+        out.push(c);
+    }
+}
+
+/// Chebyshev polynomials of the first kind `T_0(x) … T_n(x)` (the d = 2
+/// angular basis).
+pub fn chebyshev_all(x: f64, nmax: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.push(1.0);
+    if nmax == 0 {
+        return;
+    }
+    out.push(x);
+    for n in 2..=nmax {
+        let c = 2.0 * x * out[n - 1] - out[n - 2];
+        out.push(c);
+    }
+}
+
+/// The d-appropriate angular polynomial values: Chebyshev for d = 2,
+/// Gegenbauer with `α = d/2 − 1` for d ≥ 3.
+pub fn angular_all(d: usize, x: f64, nmax: usize, out: &mut Vec<f64>) {
+    assert!(d >= 2);
+    if d == 2 {
+        chebyshev_all(x, nmax, out);
+    } else {
+        gegenbauer_all(d as f64 / 2.0 - 1.0, x, nmax, out);
+    }
+}
+
+/// `C_k^α(1) = binom(k + 2α − 1, k)` (product form; α > 0), or `T_k(1) = 1`
+/// in the d = 2 limit.
+pub fn angular_at_one(d: usize, k: usize) -> f64 {
+    if d == 2 {
+        return 1.0;
+    }
+    let alpha = d as f64 / 2.0 - 1.0;
+    let mut acc = 1.0;
+    for i in 0..k {
+        acc *= (2.0 * alpha + i as f64) / (i as f64 + 1.0);
+    }
+    acc
+}
+
+/// ln Γ(`twice`/2) for positive half-integer/integer arguments, exactly the
+/// cases the harmonic normalizations need:
+/// `Γ(m) = (m−1)!` and `Γ(m + 1/2) = (2m−1)!!·√π / 2^m`.
+pub fn lgamma_half(twice: u64) -> f64 {
+    assert!(twice >= 1, "lgamma_half needs positive argument");
+    if twice % 2 == 0 {
+        // Γ(m), m = twice/2
+        let m = twice / 2;
+        let mut acc = 0.0;
+        for i in 2..m {
+            acc += (i as f64).ln();
+        }
+        acc
+    } else {
+        // Γ(m + 1/2), m = (twice−1)/2
+        let m = (twice - 1) / 2;
+        let mut acc = 0.5 * std::f64::consts::PI.ln();
+        for i in 1..=m {
+            acc += (2.0 * i as f64 - 1.0).ln();
+        }
+        acc - m as f64 * 2f64.ln()
+    }
+}
+
+/// Surface area of the unit sphere `S^{d−1}`: `2 π^{d/2} / Γ(d/2)`.
+pub fn sphere_area(d: usize) -> f64 {
+    let half_d = d as f64 / 2.0;
+    2.0 * std::f64::consts::PI.powf(half_d) * (-lgamma_half(d as u64)).exp()
+}
+
+/// Number of linearly independent (hyper)spherical harmonics of order k in
+/// dimension d (paper §A.3, Wen & Avery):
+/// `N(d,k) = binom(k+d−1, k) − binom(k+d−3, k−2)`.
+pub fn num_harmonics(d: usize, k: usize) -> usize {
+    fn binom(n: i64, r: i64) -> i64 {
+        if r < 0 || n < 0 || r > n {
+            return 0;
+        }
+        let r = r.min(n - r);
+        let mut acc: i64 = 1;
+        for i in 0..r {
+            acc = acc * (n - i) / (i + 1);
+        }
+        acc
+    }
+    let k = k as i64;
+    let d = d as i64;
+    (binom(k + d - 1, k) - binom(k + d - 3, k - 2)) as usize
+}
+
+/// The addition-theorem constant `ρ_k` with
+/// `Σ_h Y_k^h(x̂) Y_k^h(ŷ) = ρ_k · C_k^α(x̂·ŷ)`
+/// (Unsöld's theorem general-d form): `ρ_k = N(d,k)/(|S^{d−1}| C_k^α(1))`.
+pub fn addition_constant(d: usize, k: usize) -> f64 {
+    if d == 2 {
+        // Circular harmonics: ρ_0 = 1/2π, ρ_k = 1/π for k ≥ 1.
+        return if k == 0 {
+            0.5 / std::f64::consts::PI
+        } else {
+            1.0 / std::f64::consts::PI
+        };
+    }
+    num_harmonics(d, k) as f64 / (sphere_area(d) * angular_at_one(d, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gegenbauer_matches_legendre_for_alpha_half() {
+        // C_k^{1/2} = P_k (Legendre). Check a few closed forms.
+        let x = 0.37;
+        let mut c = Vec::new();
+        gegenbauer_all(0.5, x, 4, &mut c);
+        assert!((c[0] - 1.0).abs() < 1e-15);
+        assert!((c[1] - x).abs() < 1e-15);
+        assert!((c[2] - 0.5 * (3.0 * x * x - 1.0)).abs() < 1e-14);
+        assert!((c[3] - 0.5 * (5.0 * x * x * x - 3.0 * x)).abs() < 1e-14);
+        assert!((c[4] - 0.125 * (35.0 * x.powi(4) - 30.0 * x * x + 3.0)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn gegenbauer_alpha_one_is_chebyshev_u() {
+        // C_k^1 = U_k: U_k(cos t) = sin((k+1)t)/sin t.
+        let t: f64 = 0.8;
+        let x = t.cos();
+        let mut c = Vec::new();
+        gegenbauer_all(1.0, x, 6, &mut c);
+        for k in 0..=6 {
+            let expect = ((k as f64 + 1.0) * t).sin() / t.sin();
+            assert!((c[k] - expect).abs() < 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn chebyshev_closed_form() {
+        let t: f64 = 1.1;
+        let x = t.cos();
+        let mut c = Vec::new();
+        chebyshev_all(x, 8, &mut c);
+        for k in 0..=8 {
+            assert!((c[k] - (k as f64 * t).cos()).abs() < 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn gegenbauer_bound_of_lemma_41() {
+        // |C_k^α(cos γ)| ≤ binom(k+d−3, k) = C_k^α(1) for α > 0.
+        let mut c = Vec::new();
+        for d in [3usize, 5, 8] {
+            let alpha = d as f64 / 2.0 - 1.0;
+            for i in 0..20 {
+                let x = -1.0 + 2.0 * i as f64 / 19.0;
+                gegenbauer_all(alpha, x, 10, &mut c);
+                for k in 0..=10 {
+                    assert!(
+                        c[k].abs() <= angular_at_one(d, k) + 1e-10,
+                        "d={d} k={k} x={x}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lgamma_half_matches_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(3)=2, Γ(1/2)=√π, Γ(3/2)=√π/2, Γ(7/2)=15√π/8
+        let pi = std::f64::consts::PI;
+        assert!((lgamma_half(2).exp() - 1.0).abs() < 1e-14);
+        assert!((lgamma_half(4).exp() - 1.0).abs() < 1e-14);
+        assert!((lgamma_half(6).exp() - 2.0).abs() < 1e-14);
+        assert!((lgamma_half(1).exp() - pi.sqrt()).abs() < 1e-13);
+        assert!((lgamma_half(3).exp() - pi.sqrt() / 2.0).abs() < 1e-13);
+        assert!((lgamma_half(7).exp() - 15.0 * pi.sqrt() / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sphere_areas_match_known() {
+        let pi = std::f64::consts::PI;
+        assert!((sphere_area(2) - 2.0 * pi).abs() < 1e-12); // circle
+        assert!((sphere_area(3) - 4.0 * pi).abs() < 1e-12); // sphere
+        assert!((sphere_area(4) - 2.0 * pi * pi).abs() < 1e-12);
+    }
+
+    #[test]
+    fn harmonic_counts_match_closed_forms() {
+        // d=3: 2k+1; d=2: 2 (k≥1) else 1.
+        for k in 0..10 {
+            assert_eq!(num_harmonics(3, k), 2 * k + 1, "d=3 k={k}");
+            assert_eq!(num_harmonics(2, k), if k == 0 { 1 } else { 2 }, "d=2 k={k}");
+        }
+        // d=4: (k+1)^2
+        for k in 0..8 {
+            assert_eq!(num_harmonics(4, k), (k + 1) * (k + 1), "d=4 k={k}");
+        }
+    }
+
+    #[test]
+    fn addition_constant_d3_is_2kp1_over_4pi() {
+        let pi = std::f64::consts::PI;
+        for k in 0..8 {
+            let expect = (2 * k + 1) as f64 / (4.0 * pi);
+            assert!((addition_constant(3, k) - expect).abs() < 1e-12, "k={k}");
+        }
+    }
+}

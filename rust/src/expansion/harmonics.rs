@@ -1,0 +1,438 @@
+//! Real hyperspherical harmonics on `S^{d−1}` for arbitrary `d ≥ 2`.
+//!
+//! These split the angular polynomial across source and target — the
+//! hyperspherical harmonic addition theorem (paper eq. 13):
+//!
+//! `Σ_{h∈H_k} Y_k^h(x̂) Y_k^h(ŷ) = ρ_k · Θ_k(x̂·ŷ)`
+//!
+//! with `Θ_k = C_k^{(d/2−1)}` for d ≥ 3 and `T_k` for d = 2, and `ρ_k` from
+//! [`super::gegenbauer::addition_constant`]. The construction follows
+//! Wen & Avery (1985): a chain `k = μ₀ ≥ μ₁ ≥ … ≥ μ_{d−2} ≥ 0` of
+//! associated-Gegenbauer factors in the polyspherical angles plus a
+//! circular factor in the azimuth, realized here in the *real* form
+//! (cos/sin pairs) so the entire FKT pipeline stays in real arithmetic.
+//!
+//! Index sets `H_k` have size `N(d,k) = binom(k+d−1,k) − binom(k+d−3,k−2)`,
+//! which the unit tests check, and the addition theorem itself is verified
+//! against random point pairs in every supported dimension.
+
+use super::gegenbauer::{angular_at_one, gegenbauer_all, lgamma_half, num_harmonics};
+
+/// Precomputed real harmonic basis for all orders `k = 0..=p` in dim `d`.
+#[derive(Clone, Debug)]
+pub struct HarmonicBasis {
+    /// Ambient dimension (≥ 2).
+    pub d: usize,
+    /// Maximum order.
+    pub p: usize,
+    /// Start offset of order-k harmonics in the output vector.
+    offsets: Vec<usize>,
+    /// Total number of harmonics (Σ_k N(d,k)).
+    total: usize,
+    /// d ≥ 3: per-harmonic factor table indices, stride d−2.
+    factor_idx: Vec<u32>,
+    /// d ≥ 3: per-harmonic azimuthal order m' (last chain value).
+    azim_m: Vec<u16>,
+    /// d ≥ 3: per-harmonic azimuthal parity (true = sin).
+    azim_sin: Vec<bool>,
+    /// d ≥ 3: normalization constants A(j, l', n) flattened like `fvals`.
+    norms: Vec<f64>,
+}
+
+/// Reusable per-point evaluation scratch (allocation-free hot path).
+#[derive(Clone, Debug, Default)]
+pub struct HarmonicWorkspace {
+    fvals: Vec<f64>,
+    geg: Vec<f64>,
+    suffix: Vec<f64>,
+    cos_t: Vec<f64>,
+    sin_t: Vec<f64>,
+    /// cos(mφ), sin(mφ) for m = 0..=p via the angle-addition recurrence —
+    /// one sin_cos call per point instead of one per harmonic.
+    cos_m: Vec<f64>,
+    sin_m: Vec<f64>,
+}
+
+impl HarmonicWorkspace {
+    /// Fill cos(mφ)/sin(mφ) tables for m = 0..=p from a single sin_cos.
+    #[inline]
+    fn fill_azimuth(&mut self, phi: f64, p: usize) {
+        self.cos_m.resize(p + 1, 0.0);
+        self.sin_m.resize(p + 1, 0.0);
+        let (s1, c1) = phi.sin_cos();
+        self.cos_m[0] = 1.0;
+        self.sin_m[0] = 0.0;
+        for m in 1..=p {
+            self.cos_m[m] = self.cos_m[m - 1] * c1 - self.sin_m[m - 1] * s1;
+            self.sin_m[m] = self.sin_m[m - 1] * c1 + self.cos_m[m - 1] * s1;
+        }
+    }
+}
+
+impl HarmonicBasis {
+    /// Flattened index into `fvals`/`norms` for factor `j` (1-based),
+    /// lower order `l'`, and Gegenbauer degree `n = l − l'`.
+    #[inline]
+    fn fidx(&self, j: usize, lp: usize, n: usize) -> usize {
+        ((j - 1) * (self.p + 1) + lp) * (self.p + 1) + n
+    }
+
+    /// Build the basis for dimension `d` and max order `p`.
+    pub fn build(d: usize, p: usize) -> HarmonicBasis {
+        assert!(d >= 2);
+        let mut basis = HarmonicBasis {
+            d,
+            p,
+            offsets: Vec::with_capacity(p + 2),
+            total: 0,
+            factor_idx: Vec::new(),
+            azim_m: Vec::new(),
+            azim_sin: Vec::new(),
+            norms: Vec::new(),
+        };
+        // Offsets from the closed-form counts.
+        let mut off = 0usize;
+        for k in 0..=p {
+            basis.offsets.push(off);
+            off += num_harmonics(d, k);
+        }
+        basis.offsets.push(off);
+        basis.total = off;
+        if d == 2 {
+            return basis; // circular harmonics handled directly in eval
+        }
+        // Normalization table A(j, l', n) for the factor
+        //   f_j(θ) = A · sin^{l'}θ · C_n^{λ}(cos θ),  λ = l' + (d−j−1)/2,
+        // orthonormal under ∫₀^π (·)² sin^{d−1−j}θ dθ.
+        let nfac = (d - 2) * (p + 1) * (p + 1);
+        basis.norms = vec![0.0; nfac];
+        for j in 1..=(d - 2) {
+            for lp in 0..=p {
+                for n in 0..=(p - lp) {
+                    // twice-λ = 2l' + (d−j−1)
+                    let tl = 2 * lp + (d - j - 1);
+                    let lam = tl as f64 / 2.0;
+                    // ln A² = ln n! + ln(n+λ) + 2 lnΓ(λ) + (2λ−1) ln2 − lnπ − lnΓ(n+2λ)
+                    let ln_a2 = lgamma_half(2 * (n as u64 + 1))
+                        + (n as f64 + lam).ln()
+                        + 2.0 * lgamma_half(tl as u64)
+                        + (2.0 * lam - 1.0) * 2f64.ln()
+                        - std::f64::consts::PI.ln()
+                        - lgamma_half(2 * n as u64 + 2 * tl as u64);
+                    let idx = basis.fidx(j, lp, n);
+                    basis.norms[idx] = (0.5 * ln_a2).exp();
+                }
+            }
+        }
+        // Enumerate chains k = μ₀ ≥ μ₁ ≥ … ≥ μ_{d−2} ≥ 0 for every k,
+        // expanding the last entry into cos/sin when m' > 0.
+        for k in 0..=p {
+            let mut chain = vec![0u16; d - 2];
+            enumerate_chains(k as u16, 0, &mut chain, &mut |chain| {
+                let mprime = chain[d - 3] as usize;
+                let parities: &[bool] = if mprime == 0 { &[false] } else { &[false, true] };
+                for &sin in parities {
+                    let mut prev = k as u16;
+                    for (t, &mu) in chain.iter().enumerate() {
+                        let j = t + 1;
+                        let lp = mu as usize;
+                        let n = (prev - mu) as usize;
+                        basis.factor_idx.push(basis.fidx(j, lp, n) as u32);
+                        prev = mu;
+                    }
+                    basis.azim_m.push(mprime as u16);
+                    basis.azim_sin.push(sin);
+                }
+            });
+        }
+        // Consistency: enumeration must match the closed-form counts.
+        assert_eq!(basis.azim_m.len(), basis.total, "chain enumeration mismatch");
+        basis
+    }
+
+    /// Total number of harmonics across orders 0..=p.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Offset of order-k harmonics in the output.
+    pub fn offset(&self, k: usize) -> usize {
+        self.offsets[k]
+    }
+
+    /// Number of order-k harmonics.
+    pub fn count(&self, k: usize) -> usize {
+        self.offsets[k + 1] - self.offsets[k]
+    }
+
+    /// Evaluate every harmonic at the (not necessarily unit) point `x`,
+    /// writing into `out[0..total]`. Evaluation is on the direction `x̂`;
+    /// a zero vector is mapped to a fixed reference direction.
+    pub fn eval_into(&self, x: &[f64], ws: &mut HarmonicWorkspace, out: &mut [f64]) {
+        assert_eq!(x.len(), self.d);
+        assert!(out.len() >= self.total);
+        let d = self.d;
+        let p = self.p;
+        if d == 2 {
+            let phi = if x[0] == 0.0 && x[1] == 0.0 {
+                0.0
+            } else {
+                x[1].atan2(x[0])
+            };
+            ws.fill_azimuth(phi, p);
+            let inv_sqrt_2pi = 1.0 / (2.0 * std::f64::consts::PI).sqrt();
+            let inv_sqrt_pi = 1.0 / std::f64::consts::PI.sqrt();
+            out[0] = inv_sqrt_2pi;
+            for k in 1..=p {
+                let o = self.offsets[k];
+                out[o] = ws.cos_m[k] * inv_sqrt_pi;
+                out[o + 1] = ws.sin_m[k] * inv_sqrt_pi;
+            }
+            return;
+        }
+        // Polyspherical angles via suffix norms:
+        // s_j = |(x_j, …, x_d)|, cos θ_j = x_j/s_j, sin θ_j = s_{j+1}/s_j.
+        ws.suffix.resize(d + 1, 0.0);
+        ws.suffix[d] = 0.0;
+        for j in (0..d).rev() {
+            ws.suffix[j] = (ws.suffix[j + 1].powi(2).max(0.0) + x[j] * x[j]).sqrt();
+        }
+        ws.cos_t.resize(d - 2, 0.0);
+        ws.sin_t.resize(d - 2, 0.0);
+        for t in 0..d - 2 {
+            let s = ws.suffix[t];
+            if s > 0.0 {
+                ws.cos_t[t] = (x[t] / s).clamp(-1.0, 1.0);
+                ws.sin_t[t] = (ws.suffix[t + 1] / s).min(1.0);
+            } else {
+                // Degenerate direction: pick the pole; harmonics needing
+                // deeper angles carry a sin^{l'>0} factor of zero anyway.
+                ws.cos_t[t] = 1.0;
+                ws.sin_t[t] = 0.0;
+            }
+        }
+        let phi = if ws.suffix[d - 2] > 0.0 {
+            x[d - 1].atan2(x[d - 2])
+        } else {
+            0.0
+        };
+        // Factor table: fvals[fidx(j,l',n)] = A · sin^{l'}θ_j · C_n^λ(cos θ_j).
+        let nfac = (d - 2) * (p + 1) * (p + 1);
+        ws.fvals.resize(nfac, 0.0);
+        for j in 1..=(d - 2) {
+            let ct = ws.cos_t[j - 1];
+            let st = ws.sin_t[j - 1];
+            let mut sin_pow = 1.0;
+            for lp in 0..=p {
+                let lam = lp as f64 + (d - j - 1) as f64 / 2.0;
+                gegenbauer_all(lam, ct, p - lp, &mut ws.geg);
+                for n in 0..=(p - lp) {
+                    let idx = self.fidx(j, lp, n);
+                    ws.fvals[idx] = self.norms[idx] * sin_pow * ws.geg[n];
+                }
+                sin_pow *= st;
+            }
+        }
+        // Assemble each harmonic: product of chain factors × azimuthal.
+        ws.fill_azimuth(phi, p);
+        let inv_sqrt_2pi = 1.0 / (2.0 * std::f64::consts::PI).sqrt();
+        let inv_sqrt_pi = 1.0 / std::f64::consts::PI.sqrt();
+        let stride = d - 2;
+        for h in 0..self.total {
+            let mut prod = 1.0;
+            for t in 0..stride {
+                prod *= ws.fvals[self.factor_idx[h * stride + t] as usize];
+            }
+            let m = self.azim_m[h] as usize;
+            let az = if m == 0 {
+                inv_sqrt_2pi
+            } else if self.azim_sin[h] {
+                ws.sin_m[m] * inv_sqrt_pi
+            } else {
+                ws.cos_m[m] * inv_sqrt_pi
+            };
+            out[h] = prod * az;
+        }
+    }
+
+    /// Convenience: allocate and evaluate.
+    pub fn eval(&self, x: &[f64]) -> Vec<f64> {
+        let mut ws = HarmonicWorkspace::default();
+        let mut out = vec![0.0; self.total];
+        self.eval_into(x, &mut ws, &mut out);
+        out
+    }
+}
+
+/// Recursively enumerate non-increasing chains below `prev` into `chain`.
+fn enumerate_chains(prev: u16, pos: usize, chain: &mut Vec<u16>, f: &mut impl FnMut(&[u16])) {
+    if pos == chain.len() {
+        f(chain);
+        return;
+    }
+    for mu in (0..=prev).rev() {
+        chain[pos] = mu;
+        enumerate_chains(mu, pos + 1, chain, f);
+    }
+}
+
+/// Verify the addition theorem numerically for a (d, p) pair at given unit
+/// vectors — also used by integration tests and the quickstart example.
+pub fn addition_theorem_residual(basis: &HarmonicBasis, x: &[f64], y: &[f64]) -> f64 {
+    let yx = basis.eval(x);
+    let yy = basis.eval(y);
+    let cosg = crate::linalg::vecops::dot(x, y)
+        / (crate::linalg::vecops::norm2(x) * crate::linalg::vecops::norm2(y));
+    let mut theta = Vec::new();
+    super::gegenbauer::angular_all(basis.d, cosg.clamp(-1.0, 1.0), basis.p, &mut theta);
+    let mut worst = 0.0f64;
+    for k in 0..=basis.p {
+        let o = basis.offset(k);
+        let c = basis.count(k);
+        let mut acc = 0.0;
+        for h in o..o + c {
+            acc += yx[h] * yy[h];
+        }
+        let expect = super::gegenbauer::addition_constant(basis.d, k) * theta[k];
+        let scale = 1.0f64.max(super::gegenbauer::addition_constant(basis.d, k) * angular_at_one(basis.d, k));
+        worst = worst.max((acc - expect).abs() / scale);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn counts_match_closed_form() {
+        for d in [2usize, 3, 4, 5, 7, 9, 12] {
+            let p = if d > 7 { 4 } else { 6 };
+            let basis = HarmonicBasis::build(d, p);
+            for k in 0..=p {
+                assert_eq!(basis.count(k), num_harmonics(d, k), "d={d} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn addition_theorem_random_pairs_all_dims() {
+        let mut rng = Pcg32::seeded(51);
+        for d in [2usize, 3, 4, 5, 6, 9] {
+            let p = if d > 5 { 4 } else { 7 };
+            let basis = HarmonicBasis::build(d, p);
+            for _ in 0..20 {
+                let x = rng.unit_sphere(d);
+                let y = rng.unit_sphere(d);
+                let res = addition_theorem_residual(&basis, &x, &y);
+                assert!(res < 1e-10, "d={d}: residual {res}");
+            }
+        }
+    }
+
+    #[test]
+    fn d3_matches_standard_spherical_harmonics() {
+        // k=1, d=3: the three harmonics span {x,y,z}·√(3/4π); check the sum
+        // of squares (Unsöld): Σ_h Y²  = 3/(4π).
+        let basis = HarmonicBasis::build(3, 2);
+        let mut rng = Pcg32::seeded(52);
+        for _ in 0..10 {
+            let x = rng.unit_sphere(3);
+            let v = basis.eval(&x);
+            let o = basis.offset(1);
+            let sum: f64 = (o..o + 3).map(|h| v[h] * v[h]).sum();
+            assert!((sum - 3.0 / (4.0 * std::f64::consts::PI)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn d2_circular_harmonics() {
+        let basis = HarmonicBasis::build(2, 5);
+        assert_eq!(basis.total(), 1 + 2 * 5);
+        let x = [0.6, 0.8];
+        let v = basis.eval(&x);
+        let phi = 0.8f64.atan2(0.6);
+        assert!((v[0] - 1.0 / (2.0 * std::f64::consts::PI).sqrt()).abs() < 1e-14);
+        let o2 = basis.offset(2);
+        assert!((v[o2] - (2.0 * phi).cos() / std::f64::consts::PI.sqrt()).abs() < 1e-14);
+        assert!((v[o2 + 1] - (2.0 * phi).sin() / std::f64::consts::PI.sqrt()).abs() < 1e-14);
+    }
+
+    #[test]
+    fn poles_are_finite_and_consistent() {
+        // North pole (1,0,…,0) and other degenerate directions.
+        for d in [3usize, 5, 8] {
+            let basis = HarmonicBasis::build(d, 5);
+            let mut x = vec![0.0; d];
+            x[0] = 1.0;
+            let v = basis.eval(&x);
+            assert!(v.iter().all(|t| t.is_finite()));
+            // Unsöld at the pole: Σ_h Y² = N(d,k)/|S^{d−1}|
+            for k in 0..=5 {
+                let o = basis.offset(k);
+                let c = basis.count(k);
+                let sum: f64 = (o..o + c).map(|h| v[h] * v[h]).sum();
+                let expect = num_harmonics(d, k) as f64 / super::super::gegenbauer::sphere_area(d);
+                assert!(
+                    (sum - expect).abs() < 1e-10 * expect.max(1.0),
+                    "d={d} k={k}: {sum} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unsold_theorem_everywhere() {
+        // Σ_h Y_k^h(x)² is constant over the sphere.
+        let mut rng = Pcg32::seeded(53);
+        for d in [3usize, 4, 6] {
+            let basis = HarmonicBasis::build(d, 5);
+            for _ in 0..10 {
+                let x = rng.unit_sphere(d);
+                let v = basis.eval(&x);
+                for k in 0..=5 {
+                    let o = basis.offset(k);
+                    let c = basis.count(k);
+                    let sum: f64 = (o..o + c).map(|h| v[h] * v[h]).sum();
+                    let expect =
+                        num_harmonics(d, k) as f64 / super::super::gegenbauer::sphere_area(d);
+                    assert!(
+                        (sum - expect).abs() < 1e-10 * expect.max(1.0),
+                        "d={d} k={k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scale_invariance() {
+        // Harmonics depend only on direction.
+        let basis = HarmonicBasis::build(4, 4);
+        let mut rng = Pcg32::seeded(54);
+        let x = rng.unit_sphere(4);
+        let xs: Vec<f64> = x.iter().map(|&v| v * 7.3).collect();
+        let a = basis.eval(&x);
+        let b = basis.eval(&xs);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_eval() {
+        let basis = HarmonicBasis::build(5, 5);
+        let mut rng = Pcg32::seeded(55);
+        let mut ws = HarmonicWorkspace::default();
+        let mut out = vec![0.0; basis.total()];
+        for _ in 0..5 {
+            let x = rng.unit_sphere(5);
+            basis.eval_into(&x, &mut ws, &mut out);
+            let fresh = basis.eval(&x);
+            for (a, b) in out.iter().zip(&fresh) {
+                assert!((a - b).abs() < 1e-15);
+            }
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! The generalized multipole expansion (paper §3.4, Theorem 3.1).
+//!
+//! Bundles the angular machinery ([`gegenbauer`], [`harmonics`]) with the
+//! exact coefficient tables ([`coeffs`]) into the [`Expansion`] object the
+//! FKT operator consumes, plus the Lemma 4.1 truncation-error estimate
+//! ([`bound`]) behind Fig 2-right.
+
+pub mod bound;
+pub mod coeffs;
+pub mod gegenbauer;
+pub mod harmonics;
+
+pub use bound::truncation_bound_estimate;
+pub use coeffs::{a_coeff, b_coeff, CoeffTable};
+pub use gegenbauer::{addition_constant, angular_all, angular_at_one, num_harmonics, sphere_area};
+pub use harmonics::{HarmonicBasis, HarmonicWorkspace};
+
+/// A ready-to-use truncated expansion for one (dimension, order) pair.
+///
+/// The separable form implemented here is paper eq. (8):
+/// `K(|x−y|) ≈ Σ_{k,h} Y_k^h(x̂) Y_k^h(ŷ) · 𝒦_p^{(k)}(r', r) / ρ_k`,
+/// with `𝒦_p^{(k)}(r',r) = Σ_{j=k, j≡k}^{p} r'^j · M_{kj}(r)` and the
+/// radial coefficients `M_{kj}` from the exact [`CoeffTable`].
+#[derive(Clone, Debug)]
+pub struct Expansion {
+    /// Ambient dimension.
+    pub d: usize,
+    /// Truncation order p.
+    pub p: usize,
+    /// Harmonic basis Y_k^h for k ≤ p.
+    pub basis: HarmonicBasis,
+    /// Exact/f64 radial coefficient tables.
+    pub table: CoeffTable,
+    /// 1/ρ_k per order (addition-theorem normalization).
+    pub inv_rho: Vec<f64>,
+    /// Flattened (k, h, j) → column layout used by s2m/m2t matrices:
+    /// `term_offsets[k]` is the first multipole row of order k; order k
+    /// contributes `count(k) · num_j(k)` rows.
+    pub term_offsets: Vec<usize>,
+    /// Total number of multipole terms 𝒫 (the expansion "rank").
+    pub num_terms: usize,
+}
+
+impl Expansion {
+    /// Build the expansion machinery for dimension d and truncation p.
+    pub fn build(d: usize, p: usize) -> Expansion {
+        let basis = HarmonicBasis::build(d, p);
+        let table = CoeffTable::build(d, p);
+        let inv_rho: Vec<f64> = (0..=p).map(|k| 1.0 / addition_constant(d, k)).collect();
+        let mut term_offsets = Vec::with_capacity(p + 2);
+        let mut off = 0usize;
+        for k in 0..=p {
+            term_offsets.push(off);
+            off += basis.count(k) * table.num_j(k);
+        }
+        term_offsets.push(off);
+        Expansion { d, p, basis, table, inv_rho, term_offsets, num_terms: off }
+    }
+
+    /// The paper's §A.3 count: `𝒫 = Σ_k |H_k|·⌊(p−k)/2 + 1⌋ = binom(p+d, d)`.
+    pub fn expected_num_terms(d: usize, p: usize) -> usize {
+        // binom(p+d, d) computed exactly in u128.
+        let mut acc: u128 = 1;
+        for i in 0..d {
+            acc = acc * (p + d - i) as u128 / (i + 1) as u128;
+        }
+        acc as usize
+    }
+
+    /// Evaluate the separated truncated kernel between a source at `x`
+    /// (relative to the expansion center, `|x| = r'`) and a target at `y`
+    /// (`|y| = r > r'`), through the full harmonic factorization.
+    ///
+    /// This exercises exactly the code path the s2m/m2t matrices implement
+    /// and is used by tests to pin them against [`CoeffTable::eval_truncated`].
+    pub fn eval_separated(&self, kernel: &crate::kernels::Kernel, x: &[f64], y: &[f64]) -> f64 {
+        use crate::linalg::vecops;
+        let r_src = vecops::norm2(x);
+        let r_tgt = vecops::norm2(y);
+        let yx = self.basis.eval(x);
+        let yy = self.basis.eval(y);
+        let derivs = kernel.derivatives_canonical(r_tgt, self.p);
+        let mut total = 0.0;
+        for k in 0..=self.p {
+            let o = self.basis.offset(k);
+            let c = self.basis.count(k);
+            let mut ang = 0.0;
+            for h in o..o + c {
+                ang += yx[h] * yy[h];
+            }
+            let mut rad = 0.0;
+            for jj in 0..self.table.num_j(k) {
+                let j = k + 2 * jj;
+                rad += r_src.powi(j as i32) * self.table.radial_m(k, jj, r_tgt, &derivs);
+            }
+            total += self.inv_rho[k] * ang * rad;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Family, Kernel};
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn term_count_matches_section_a3() {
+        // 𝒫 = binom(p+d, d) — paper §A.3's punchline.
+        for d in [2usize, 3, 4, 5, 7] {
+            for p in [0usize, 1, 2, 4, 6] {
+                let e = Expansion::build(d, p);
+                assert_eq!(
+                    e.num_terms,
+                    Expansion::expected_num_terms(d, p),
+                    "d={d} p={p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn separated_matches_direct_truncation() {
+        // Harmonic factorization must reproduce the Gegenbauer-form
+        // truncated expansion to round-off.
+        let mut rng = Pcg32::seeded(61);
+        for d in [2usize, 3, 5] {
+            let e = Expansion::build(d, 6);
+            let kern = Kernel::canonical(Family::Cauchy);
+            for _ in 0..20 {
+                let xs = rng.unit_sphere(d);
+                let ys = rng.unit_sphere(d);
+                let x: Vec<f64> = xs.iter().map(|v| v * 0.8).collect();
+                let y: Vec<f64> = ys.iter().map(|v| v * 2.1).collect();
+                let sep = e.eval_separated(&kern, &x, &y);
+                let cosg = crate::linalg::vecops::dot(&xs, &ys);
+                let direct = e.table.eval_truncated(&kern, 0.8, 2.1, cosg);
+                assert!(
+                    (sep - direct).abs() < 1e-10 * (1.0 + direct.abs()),
+                    "d={d}: {sep} vs {direct}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn separated_approximates_kernel() {
+        // End-to-end: the separated expansion approximates the true kernel
+        // for well-separated pairs, with error shrinking in p.
+        let mut rng = Pcg32::seeded(62);
+        let d = 3;
+        for fam in [Family::Exponential, Family::Gaussian, Family::Coulomb] {
+            let kern = Kernel::canonical(fam);
+            let mut errs = Vec::new();
+            for p in [2usize, 6, 10] {
+                let e = Expansion::build(d, p);
+                let mut max_err = 0.0f64;
+                for _ in 0..50 {
+                    let xs = rng.unit_sphere(d);
+                    let ys = rng.unit_sphere(d);
+                    let x: Vec<f64> = xs.iter().map(|v| v * 0.5).collect();
+                    let y: Vec<f64> = ys.iter().map(|v| v * 2.0).collect();
+                    let truth = kern.eval_points(&x, &y);
+                    let approx = e.eval_separated(&kern, &x, &y);
+                    max_err = max_err.max((approx - truth).abs());
+                }
+                errs.push(max_err);
+            }
+            assert!(errs[2] < errs[0] * 1e-2, "{fam:?}: errs {errs:?}");
+            assert!(errs[2] < 1e-5, "{fam:?}: errs {errs:?}");
+        }
+    }
+}

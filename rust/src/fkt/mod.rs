@@ -1,0 +1,803 @@
+//! The Fast Kernel Transform operator — paper §3.2, Algorithm 1.
+//!
+//! Pipeline per matrix–vector product `z = K y`:
+//! 1. **Upward (s2m)**: for every tree node `b`, aggregate its points'
+//!    weights into a multipole moment vector
+//!    `μ_b[(k,h,j)] = Σ_{x∈b} Y_k^h(x̂_rel) r'^j y_x / ρ_k`.
+//! 2. **Far field (m2t)**: for every node `b` and far target `t ∈ F_b`,
+//!    `z_t += Σ_{k,h,j} Y_k^h(ŷ_rel) M_{kj}(r) μ_b[(k,h,j)]`
+//!    where the radial factors `M_{kj}` come from a single jet evaluation
+//!    of the kernel's derivatives (generic path) or from the §A.4
+//!    compressed `F_{k,i}/G_{k,i}` representation.
+//! 3. **Near field**: for every leaf `l` and near target `t ∈ N_l`, the
+//!    exact dense sum — executed natively or through the PJRT tile
+//!    executor (see `coordinator`).
+//!
+//! Sources and targets may differ (GP prediction); the Barnes–Hut baseline
+//! of Fig 3-left is the `p = 0` configuration with centroid expansion
+//! centers, exactly as the paper describes.
+
+pub mod nearfield;
+
+use crate::expansion::{Expansion, HarmonicWorkspace};
+use crate::kernels::Kernel;
+use crate::linalg::vecops;
+use crate::points::Points;
+use crate::tree::{FarFieldPlan, Tree};
+
+/// Where each node's expansion is centered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpansionCenter {
+    /// Hyperrectangle center (default FKT).
+    BoxCenter,
+    /// Centroid (mean) of contained points — the Barnes–Hut convention.
+    Centroid,
+}
+
+/// FKT configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct FktConfig {
+    /// Truncation order p of eq. (8).
+    pub p: usize,
+    /// Far-field separation parameter θ ∈ (0,1) of eq. (2).
+    pub theta: f64,
+    /// Maximum points per leaf (paper experiments use 512).
+    pub leaf_capacity: usize,
+    /// Expansion center convention.
+    pub center: ExpansionCenter,
+    /// Use the §A.4 compressed radial representation when the kernel
+    /// admits one (`K' = qK`, paper's user-toggled flag).
+    pub compression: bool,
+}
+
+impl Default for FktConfig {
+    fn default() -> Self {
+        FktConfig {
+            p: 4,
+            theta: 0.75,
+            leaf_capacity: 512,
+            center: ExpansionCenter::BoxCenter,
+            compression: false,
+        }
+    }
+}
+
+impl FktConfig {
+    /// The paper's Barnes–Hut baseline: p = 0, centroid centers.
+    pub fn barnes_hut(theta: f64, leaf_capacity: usize) -> Self {
+        FktConfig {
+            p: 0,
+            theta,
+            leaf_capacity,
+            center: ExpansionCenter::Centroid,
+            compression: false,
+        }
+    }
+}
+
+/// Radial representation used by the far-field pass.
+enum RadialRep {
+    /// Generic: jet-evaluated derivatives + exact coefficient table.
+    Generic,
+    /// §A.4 compressed: per-order F/G function pairs.
+    Compressed(crate::compress::CompressedRadial),
+}
+
+/// A planned, reusable fast kernel MVM operator.
+pub struct FktOperator {
+    /// The kernel (with scale folded into the stored coordinates).
+    pub kernel: Kernel,
+    /// Configuration used to build the operator.
+    pub cfg: FktConfig,
+    tree: Tree,
+    targets: Points,
+    plan: FarFieldPlan,
+    exp: Expansion,
+    radial: RadialRep,
+    /// Per-node expansion centers (may be centroids).
+    centers: Vec<Vec<f64>>,
+    /// Number of sources.
+    n_src: usize,
+}
+
+impl FktOperator {
+    /// Build an operator for `z = K(targets, sources) · y`.
+    /// Pass `targets = None` for the square case (targets = sources).
+    pub fn new(
+        sources: &Points,
+        targets: Option<&Points>,
+        kernel: Kernel,
+        cfg: FktConfig,
+    ) -> FktOperator {
+        assert!(cfg.p <= 30, "truncation order too large");
+        // The harmonic machinery needs d ≥ 2; lift 1-D data into the plane
+        // (zero second coordinate — distances are unchanged).
+        let lift = |pts: &Points| -> Points {
+            if pts.d > 1 {
+                return pts.clone();
+            }
+            let mut out = Points::empty(2);
+            for i in 0..pts.len() {
+                out.push(&[pts.point(i)[0], 0.0]);
+            }
+            out
+        };
+        let sources = &lift(sources);
+        let lifted_tgt = targets.map(|t| {
+            let lt = lift(t);
+            assert_eq!(lt.d, sources.d, "source/target dimension mismatch");
+            lt
+        });
+        let targets = lifted_tgt.as_ref();
+        let scaled_src = sources.scaled(kernel.scale);
+        let scaled_tgt = match targets {
+            Some(t) => {
+                assert_eq!(t.d, sources.d);
+                t.scaled(kernel.scale)
+            }
+            None => scaled_src.clone(),
+        };
+        let mut tree = Tree::build(&scaled_src, cfg.leaf_capacity);
+        // Expansion centers + radii per the configured convention.
+        let mut centers: Vec<Vec<f64>> = Vec::with_capacity(tree.nodes.len());
+        for id in 0..tree.nodes.len() {
+            let c = match cfg.center {
+                ExpansionCenter::BoxCenter => tree.nodes[id].center.clone(),
+                ExpansionCenter::Centroid => {
+                    let node = &tree.nodes[id];
+                    let mut c = vec![0.0; tree.d];
+                    for i in node.start..node.end {
+                        let pnt = tree.points.point(i);
+                        for a in 0..tree.d {
+                            c[a] += pnt[a];
+                        }
+                    }
+                    let inv = 1.0 / node.len().max(1) as f64;
+                    for v in &mut c {
+                        *v *= inv;
+                    }
+                    c
+                }
+            };
+            // Radius w.r.t. the chosen center (eq. 2's max over node points).
+            let node = &tree.nodes[id];
+            let mut r2 = 0.0f64;
+            for i in node.start..node.end {
+                r2 = r2.max(vecops::dist2(tree.points.point(i), &c));
+            }
+            centers.push(c);
+        }
+        // Write the chosen centers/radii back so the plan uses them.
+        for (id, c) in centers.iter().enumerate() {
+            let node = &mut tree.nodes[id];
+            let mut r2 = 0.0f64;
+            for i in node.start..node.end {
+                // recompute against stored points
+                r2 = r2.max(vecops::dist2(
+                    &tree.points.coords[i * tree.d..(i + 1) * tree.d],
+                    c,
+                ));
+            }
+            node.center = c.clone();
+            node.radius = r2.sqrt();
+        }
+        let plan = FarFieldPlan::build(&tree, &scaled_tgt, cfg.theta);
+        let exp = Expansion::build(sources.d, cfg.p);
+        let radial = if cfg.compression {
+            match crate::compress::CompressedRadial::build(&kernel.family, &exp.table) {
+                Some(c) => RadialRep::Compressed(c),
+                None => RadialRep::Generic,
+            }
+        } else {
+            RadialRep::Generic
+        };
+        FktOperator {
+            kernel,
+            cfg,
+            n_src: scaled_src.len(),
+            targets: scaled_tgt,
+            plan,
+            exp,
+            radial,
+            centers,
+            tree,
+        }
+    }
+
+    /// Square operator: targets = sources.
+    pub fn square(sources: &Points, kernel: Kernel, cfg: FktConfig) -> FktOperator {
+        Self::new(sources, None, kernel, cfg)
+    }
+
+    /// Number of source points.
+    pub fn num_sources(&self) -> usize {
+        self.n_src
+    }
+
+    /// Number of target points.
+    pub fn num_targets(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Number of multipole terms 𝒫 per node.
+    pub fn num_terms(&self) -> usize {
+        match &self.radial {
+            RadialRep::Generic => self.exp.num_terms,
+            RadialRep::Compressed(c) => c.num_terms(&self.exp.basis),
+        }
+    }
+
+    /// Access the interaction plan (for diagnostics / the coordinator).
+    pub fn plan(&self) -> &FarFieldPlan {
+        &self.plan
+    }
+
+    /// Access the source tree.
+    pub fn tree(&self) -> &Tree {
+        &self.tree
+    }
+
+    /// Upward pass: compute the moment vector of every node.
+    /// `w` is in original source order; moments are per node, length 𝒫.
+    fn compute_moments(&self, w: &[f64]) -> Vec<Vec<f64>> {
+        let mut moments: Vec<Vec<f64>> = vec![Vec::new(); self.tree.nodes.len()];
+        self.compute_moments_range(w, 0..self.tree.nodes.len(), &mut moments);
+        moments
+    }
+
+    /// Moments for nodes in `range` written into `moments[id]`.
+    fn compute_moments_range(
+        &self,
+        w: &[f64],
+        range: std::ops::Range<usize>,
+        moments: &mut [Vec<f64>],
+    ) {
+        let p = self.cfg.p;
+        let nt = self.num_terms();
+        let mut ws = HarmonicWorkspace::default();
+        let mut yx = vec![0.0; self.exp.basis.total()];
+        let mut rel = vec![0.0; self.tree.d];
+        for id in range {
+            let node = &self.tree.nodes[id];
+            let mut mu = vec![0.0; nt];
+            // Skip nodes whose far set is empty — their moments are unused.
+            if self.plan.interactions[id].far.is_empty() {
+                moments[id] = mu;
+                continue;
+            }
+            let center = &self.centers[id];
+            for i in node.start..node.end {
+                let wi = w[self.tree.perm[i]];
+                if wi == 0.0 {
+                    continue;
+                }
+                let x = self.tree.points.point(i);
+                for a in 0..self.tree.d {
+                    rel[a] = x[a] - center[a];
+                }
+                let r_src = vecops::norm2(&rel);
+                self.exp.basis.eval_into(&rel, &mut ws, &mut yx);
+                match &self.radial {
+                    RadialRep::Generic => {
+                        let mut term = 0usize;
+                        for k in 0..=p {
+                            let o = self.exp.basis.offset(k);
+                            let c = self.exp.basis.count(k);
+                            let nj = self.exp.table.num_j(k);
+                            let w_k = wi * self.exp.inv_rho[k];
+                            // r'^j for j = k, k+2, …
+                            let mut rj = r_src.powi(k as i32);
+                            let r2 = r_src * r_src;
+                            for jj in 0..nj {
+                                for h in 0..c {
+                                    mu[term + h * nj + jj] += yx[o + h] * rj * w_k;
+                                }
+                                rj *= r2;
+                            }
+                            term += c * nj;
+                        }
+                    }
+                    RadialRep::Compressed(comp) => {
+                        let mut term = 0usize;
+                        for k in 0..=p {
+                            let o = self.exp.basis.offset(k);
+                            let c = self.exp.basis.count(k);
+                            let gs = comp.eval_g(k, r_src);
+                            let w_k = wi * self.exp.inv_rho[k];
+                            for (i_g, g) in gs.iter().enumerate() {
+                                for h in 0..c {
+                                    mu[term + h * gs.len() + i_g] += yx[o + h] * g * w_k;
+                                }
+                            }
+                            term += c * gs.len();
+                        }
+                    }
+                }
+            }
+            moments[id] = mu;
+        }
+    }
+
+    /// Far-field pass: accumulate compressed interactions into `z`
+    /// (indexed by original target order).
+    fn far_field(&self, moments: &[Vec<f64>], z: &mut [f64]) {
+        self.far_field_range(moments, 0..self.tree.nodes.len(), z);
+    }
+
+    /// Far-field contributions from nodes in `range` only.
+    fn far_field_range(
+        &self,
+        moments: &[Vec<f64>],
+        range: std::ops::Range<usize>,
+        z: &mut [f64],
+    ) {
+        let p = self.cfg.p;
+        let mut ws = HarmonicWorkspace::default();
+        let mut yy = vec![0.0; self.exp.basis.total()];
+        let mut rel = vec![0.0; self.tree.d];
+        let mut radial = vec![0.0; self.exp.table.num_j(0).max(1) * (p + 1)];
+        let mut derivs = vec![0.0; p + 1];
+        for id in range {
+            let far = &self.plan.interactions[id].far;
+            if far.is_empty() {
+                continue;
+            }
+            let center = &self.centers[id];
+            let mu = &moments[id];
+            for &t in far {
+                let y = self.targets.point(t as usize);
+                for a in 0..self.tree.d {
+                    rel[a] = y[a] - center[a];
+                }
+                let r = vecops::norm2(&rel);
+                self.exp.basis.eval_into(&rel, &mut ws, &mut yy);
+                let mut acc = 0.0;
+                match &self.radial {
+                    RadialRep::Generic => {
+                        self.kernel.family.derivatives_into(r, p, &mut derivs);
+                        let mut term = 0usize;
+                        for k in 0..=p {
+                            let o = self.exp.basis.offset(k);
+                            let c = self.exp.basis.count(k);
+                            let nj = self.exp.table.num_j(k);
+                            for (jj, slot) in radial.iter_mut().take(nj).enumerate() {
+                                *slot = self.exp.table.radial_m(k, jj, r, &derivs);
+                            }
+                            for h in 0..c {
+                                let yh = yy[o + h];
+                                if yh == 0.0 {
+                                    continue;
+                                }
+                                let base = term + h * nj;
+                                let mut dot = 0.0;
+                                for jj in 0..nj {
+                                    dot += radial[jj] * mu[base + jj];
+                                }
+                                acc += yh * dot;
+                            }
+                            term += c * nj;
+                        }
+                    }
+                    RadialRep::Compressed(comp) => {
+                        let mut term = 0usize;
+                        for k in 0..=p {
+                            let o = self.exp.basis.offset(k);
+                            let c = self.exp.basis.count(k);
+                            let fs = comp.eval_f(k, r);
+                            for h in 0..c {
+                                let yh = yy[o + h];
+                                let base = term + h * fs.len();
+                                let mut dot = 0.0;
+                                for (i_f, f) in fs.iter().enumerate() {
+                                    dot += f * mu[base + i_f];
+                                }
+                                acc += yh * dot;
+                            }
+                            term += c * fs.len();
+                        }
+                    }
+                }
+                z[t as usize] += acc;
+            }
+        }
+    }
+
+    /// Near-field pass: exact dense leaf blocks, natively.
+    fn near_field_native(&self, w: &[f64], z: &mut [f64]) {
+        self.near_field_range(w, 0..self.tree.leaves.len(), z);
+    }
+
+    /// Near-field contributions from leaves `self.tree.leaves[range]`,
+    /// via the specialized block kernels in [`nearfield`].
+    fn near_field_range(&self, w: &[f64], range: std::ops::Range<usize>, z: &mut [f64]) {
+        let d = self.tree.d;
+        let mut wbuf: Vec<f64> = Vec::new();
+        let mut tbuf: Vec<f64> = Vec::new();
+        let mut obuf: Vec<f64> = Vec::new();
+        for li in range {
+            let leaf = self.tree.leaves[li];
+            let node = &self.tree.nodes[leaf];
+            let near = &self.plan.interactions[leaf].near;
+            if near.is_empty() {
+                continue;
+            }
+            // Gather leaf weights (sources are already contiguous).
+            wbuf.clear();
+            wbuf.extend((node.start..node.end).map(|i| w[self.tree.perm[i]]));
+            let src = &self.tree.points.coords[node.start * d..node.end * d];
+            // Gather near-target coordinates.
+            tbuf.clear();
+            for &t in near {
+                tbuf.extend_from_slice(self.targets.point(t as usize));
+            }
+            obuf.clear();
+            obuf.resize(near.len(), 0.0);
+            nearfield::block_mvm(self.kernel.family, d, src, &wbuf, &tbuf, &mut obuf);
+            for (slot, &t) in near.iter().enumerate() {
+                z[t as usize] += obuf[slot];
+            }
+        }
+    }
+
+    /// Full MVM: `z = K(targets, sources) · w`, both in original order.
+    pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
+        assert_eq!(w.len(), self.n_src);
+        let mut z = vec![0.0; self.targets.len()];
+        let moments = self.compute_moments(w);
+        self.far_field(&moments, &mut z);
+        self.near_field_native(w, &mut z);
+        z
+    }
+
+    /// MVM with per-phase wall times: (moments, far, near) seconds.
+    /// Drives the §Perf profiling in EXPERIMENTS.md.
+    pub fn matvec_profiled(&self, w: &[f64]) -> (Vec<f64>, f64, f64, f64) {
+        use std::time::Instant;
+        assert_eq!(w.len(), self.n_src);
+        let mut z = vec![0.0; self.targets.len()];
+        let t0 = Instant::now();
+        let moments = self.compute_moments(w);
+        let t_mom = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        self.far_field(&moments, &mut z);
+        let t_far = t1.elapsed().as_secs_f64();
+        let t2 = Instant::now();
+        self.near_field_native(w, &mut z);
+        let t_near = t2.elapsed().as_secs_f64();
+        (z, t_mom, t_far, t_near)
+    }
+
+    /// Multi-threaded MVM: all three phases are parallelized over node /
+    /// leaf chunks with per-thread accumulation buffers (targets are shared
+    /// across nodes, so threads never write the same z concurrently —
+    /// each reduces its own buffer which are summed at the end).
+    pub fn matvec_parallel(&self, w: &[f64], threads: usize) -> Vec<f64> {
+        assert_eq!(w.len(), self.n_src);
+        let threads = threads.max(1).min(self.tree.nodes.len().max(1));
+        if threads == 1 {
+            return self.matvec(w);
+        }
+        let nnodes = self.tree.nodes.len();
+        // Phase 1: moments, parallel over disjoint node ranges.
+        let mut moments: Vec<Vec<f64>> = vec![Vec::new(); nnodes];
+        let chunk = nnodes.div_ceil(threads);
+        crossbeam_utils::thread::scope(|s| {
+            for (ti, mchunk) in moments.chunks_mut(chunk).enumerate() {
+                let lo = ti * chunk;
+                let hi = (lo + mchunk.len()).min(nnodes);
+                s.spawn(move |_| {
+                    // The helper writes by absolute id; give it a shifted view.
+                    let mut local: Vec<Vec<f64>> = vec![Vec::new(); nnodes];
+                    self.compute_moments_range(w, lo..hi, &mut local);
+                    for (j, slot) in mchunk.iter_mut().enumerate() {
+                        *slot = std::mem::take(&mut local[lo + j]);
+                    }
+                });
+            }
+        })
+        .expect("moment threads");
+        // Phase 2 + 3: far + near, per-thread z buffers.
+        let m = self.targets.len();
+        let mut partials: Vec<Vec<f64>> = Vec::with_capacity(threads);
+        crossbeam_utils::thread::scope(|s| {
+            let moments = &moments;
+            let mut handles = Vec::new();
+            let nleaves = self.tree.leaves.len();
+            let lchunk = nleaves.div_ceil(threads);
+            for ti in 0..threads {
+                let nlo = (ti * chunk).min(nnodes);
+                let nhi = ((ti + 1) * chunk).min(nnodes);
+                let llo = (ti * lchunk).min(nleaves);
+                let lhi = ((ti + 1) * lchunk).min(nleaves);
+                handles.push(s.spawn(move |_| {
+                    let mut zt = vec![0.0; m];
+                    self.far_field_range(moments, nlo..nhi, &mut zt);
+                    self.near_field_range(w, llo..lhi, &mut zt);
+                    zt
+                }));
+            }
+            for h in handles {
+                partials.push(h.join().expect("mvm worker"));
+            }
+        })
+        .expect("mvm threads");
+        let mut z = vec![0.0; m];
+        for part in &partials {
+            for i in 0..m {
+                z[i] += part[i];
+            }
+        }
+        z
+    }
+
+    /// MVM with the near field delegated to a caller-provided executor
+    /// (the coordinator's PJRT tile path); the executor receives
+    /// (leaf node id, near target indices) and must add the dense
+    /// contribution into z itself.
+    pub fn matvec_with_near(
+        &self,
+        w: &[f64],
+        near_exec: &mut dyn FnMut(usize, &[u32], &[f64], &mut [f64]),
+    ) -> Vec<f64> {
+        assert_eq!(w.len(), self.n_src);
+        let mut z = vec![0.0; self.targets.len()];
+        let moments = self.compute_moments(w);
+        self.far_field(&moments, &mut z);
+        for &leaf in &self.tree.leaves {
+            let near = &self.plan.interactions[leaf].near;
+            if !near.is_empty() {
+                near_exec(leaf, near, w, &mut z);
+            }
+        }
+        z
+    }
+
+    /// Scaled target point accessor (for the coordinator's tile gather).
+    pub fn target_point(&self, t: usize) -> &[f64] {
+        self.targets.point(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::dense_mvm;
+    use crate::kernels::Family;
+    use crate::rng::Pcg32;
+
+    fn uniform_points(n: usize, d: usize, seed: u64) -> Points {
+        let mut rng = Pcg32::seeded(seed);
+        Points::new(d, rng.uniform_vec(n * d, 0.0, 1.0))
+    }
+
+    fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            num += (x - y) * (x - y);
+            den += y * y;
+        }
+        (num / den.max(1e-300)).sqrt()
+    }
+
+    #[test]
+    fn matches_dense_2d_cauchy() {
+        let pts = uniform_points(800, 2, 101);
+        let mut rng = Pcg32::seeded(102);
+        let w = rng.normal_vec(800);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let dense = dense_mvm(&kern, &pts, &pts, &w);
+        for (p, tol) in [(2usize, 1e-2), (4, 1e-3), (8, 1e-5)] {
+            let cfg = FktConfig { p, theta: 0.5, leaf_capacity: 32, ..Default::default() };
+            let op = FktOperator::square(&pts, kern, cfg);
+            let z = op.matvec(&w);
+            let e = rel_err(&z, &dense);
+            assert!(e < tol, "p={p}: rel err {e}");
+        }
+    }
+
+    #[test]
+    fn matches_dense_3d_matern() {
+        let pts = uniform_points(600, 3, 103);
+        let mut rng = Pcg32::seeded(104);
+        let w = rng.normal_vec(600);
+        let kern = Kernel::matern32(1.0);
+        let dense = dense_mvm(&kern, &pts, &pts, &w);
+        let cfg = FktConfig { p: 6, theta: 0.6, leaf_capacity: 32, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let e = rel_err(&op.matvec(&w), &dense);
+        assert!(e < 1e-4, "rel err {e}");
+    }
+
+    #[test]
+    fn matches_dense_gaussian_and_exponential() {
+        let pts = uniform_points(500, 3, 105);
+        let mut rng = Pcg32::seeded(106);
+        let w = rng.normal_vec(500);
+        for fam in [Family::Gaussian, Family::Exponential] {
+            let kern = Kernel::new(fam, 0.8);
+            let dense = dense_mvm(&kern, &pts, &pts, &w);
+            let cfg = FktConfig { p: 6, theta: 0.5, leaf_capacity: 40, ..Default::default() };
+            let op = FktOperator::square(&pts, kern, cfg);
+            let e = rel_err(&op.matvec(&w), &dense);
+            assert!(e < 1e-4, "{fam:?}: rel err {e}");
+        }
+    }
+
+    #[test]
+    fn matches_dense_coulomb_singular() {
+        // Singular kernel: diagonal convention must agree with dense_mvm.
+        let pts = uniform_points(400, 3, 107);
+        let mut rng = Pcg32::seeded(108);
+        let w = rng.normal_vec(400);
+        let kern = Kernel::canonical(Family::Coulomb);
+        let dense = dense_mvm(&kern, &pts, &pts, &w);
+        let cfg = FktConfig { p: 6, theta: 0.5, leaf_capacity: 32, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let e = rel_err(&op.matvec(&w), &dense);
+        assert!(e < 1e-3, "rel err {e}");
+    }
+
+    #[test]
+    fn cross_mvm_rectangular() {
+        // GP-prediction shape: targets ≠ sources.
+        let src = uniform_points(300, 2, 109);
+        let tgt = uniform_points(150, 2, 110);
+        let mut rng = Pcg32::seeded(111);
+        let w = rng.normal_vec(300);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let dense = dense_mvm(&kern, &src, &tgt, &w);
+        let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 25, ..Default::default() };
+        let op = FktOperator::new(&src, Some(&tgt), kern, cfg);
+        let z = op.matvec(&w);
+        assert_eq!(z.len(), 150);
+        let e = rel_err(&z, &dense);
+        assert!(e < 1e-3, "rel err {e}");
+    }
+
+    #[test]
+    fn error_decreases_with_p_and_theta() {
+        let pts = uniform_points(700, 2, 112);
+        let mut rng = Pcg32::seeded(113);
+        let w = rng.normal_vec(700);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let dense = dense_mvm(&kern, &pts, &pts, &w);
+        let err_at = |p: usize, theta: f64| {
+            let cfg = FktConfig { p, theta, leaf_capacity: 50, ..Default::default() };
+            rel_err(&FktOperator::square(&pts, kern, cfg).matvec(&w), &dense)
+        };
+        // Fig 3-left's two axes: error drops with p and with smaller θ.
+        assert!(err_at(4, 0.5) < err_at(1, 0.5));
+        assert!(err_at(3, 0.3) < err_at(3, 0.75));
+    }
+
+    #[test]
+    fn barnes_hut_baseline_reasonable() {
+        let pts = uniform_points(600, 2, 114);
+        let mut rng = Pcg32::seeded(115);
+        let w = rng.uniform_vec(600, 0.0, 1.0); // positive weights, like masses
+        let kern = Kernel::canonical(Family::Cauchy);
+        let dense = dense_mvm(&kern, &pts, &pts, &w);
+        let op = FktOperator::square(&pts, kern, FktConfig::barnes_hut(0.4, 32));
+        let e = rel_err(&op.matvec(&w), &dense);
+        // BH is crude but should be within a few percent at θ=0.4.
+        assert!(e < 0.05, "BH rel err {e}");
+        // And the full FKT at p=4 must beat it handily (Fig 3-left).
+        let fkt = FktOperator::square(
+            &pts,
+            kern,
+            FktConfig { p: 4, theta: 0.4, leaf_capacity: 32, ..Default::default() },
+        );
+        let e_fkt = rel_err(&fkt.matvec(&w), &dense);
+        assert!(e_fkt < e * 0.1, "FKT {e_fkt} vs BH {e}");
+    }
+
+    #[test]
+    fn kernel_scale_is_respected() {
+        let pts = uniform_points(300, 2, 116);
+        let mut rng = Pcg32::seeded(117);
+        let w = rng.normal_vec(300);
+        let kern = Kernel::cauchy(2.5);
+        let dense = dense_mvm(&kern, &pts, &pts, &w);
+        let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 25, ..Default::default() };
+        let e = rel_err(&FktOperator::square(&pts, kern, cfg).matvec(&w), &dense);
+        assert!(e < 1e-3, "rel err {e}");
+    }
+
+    #[test]
+    fn zero_weights_give_zero() {
+        let pts = uniform_points(200, 2, 118);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let op = FktOperator::square(&pts, kern, FktConfig::default());
+        let z = op.matvec(&vec![0.0; 200]);
+        assert!(z.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn linearity() {
+        let pts = uniform_points(300, 2, 119);
+        let mut rng = Pcg32::seeded(120);
+        let w1 = rng.normal_vec(300);
+        let w2 = rng.normal_vec(300);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 30, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let z1 = op.matvec(&w1);
+        let z2 = op.matvec(&w2);
+        let wsum: Vec<f64> = w1.iter().zip(&w2).map(|(a, b)| 2.0 * a - 3.0 * b).collect();
+        let zsum = op.matvec(&wsum);
+        for i in 0..300 {
+            let expect = 2.0 * z1[i] - 3.0 * z2[i];
+            assert!((zsum[i] - expect).abs() < 1e-9 * (1.0 + expect.abs()));
+        }
+    }
+
+    #[test]
+    fn compressed_radial_path_matches_generic() {
+        // §A.4 fast path must produce (near-)identical MVMs.
+        let pts = uniform_points(500, 3, 123);
+        let mut rng = Pcg32::seeded(124);
+        let w = rng.normal_vec(500);
+        for fam in [Family::Exponential, Family::Matern32, Family::Gaussian, Family::Coulomb] {
+            let kern = Kernel::new(fam, 1.3);
+            let base = FktConfig { p: 5, theta: 0.5, leaf_capacity: 32, ..Default::default() };
+            let generic = FktOperator::square(&pts, kern, base).matvec(&w);
+            let comp = FktOperator::square(
+                &pts,
+                kern,
+                FktConfig { compression: true, ..base },
+            );
+            assert!(comp.num_terms() <= 5 * 60, "sanity");
+            let z = comp.matvec(&w);
+            let e = rel_err(&z, &generic);
+            assert!(e < 1e-9, "{fam:?}: compressed vs generic rel err {e}");
+        }
+    }
+
+    #[test]
+    fn compression_reduces_terms() {
+        let pts = uniform_points(200, 3, 125);
+        let kern = Kernel::canonical(Family::Exponential);
+        let base = FktConfig { p: 6, theta: 0.5, leaf_capacity: 32, ..Default::default() };
+        let generic = FktOperator::square(&pts, kern, base);
+        let comp = FktOperator::square(&pts, kern, FktConfig { compression: true, ..base });
+        assert!(
+            comp.num_terms() < generic.num_terms(),
+            "{} !< {}",
+            comp.num_terms(),
+            generic.num_terms()
+        );
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let pts = uniform_points(900, 2, 126);
+        let mut rng = Pcg32::seeded(127);
+        let w = rng.normal_vec(900);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 40, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let serial = op.matvec(&w);
+        for threads in [2usize, 4, 7] {
+            let par = op.matvec_parallel(&w, threads);
+            for i in 0..900 {
+                assert!(
+                    (par[i] - serial[i]).abs() < 1e-10 * (1.0 + serial[i].abs()),
+                    "threads={threads} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn high_dim_5d_works() {
+        let pts = uniform_points(400, 5, 121);
+        let mut rng = Pcg32::seeded(122);
+        let w = rng.normal_vec(400);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let dense = dense_mvm(&kern, &pts, &pts, &w);
+        let cfg = FktConfig { p: 4, theta: 0.6, leaf_capacity: 32, ..Default::default() };
+        let e = rel_err(&FktOperator::square(&pts, kern, cfg).matvec(&w), &dense);
+        assert!(e < 1e-2, "rel err {e}");
+    }
+}

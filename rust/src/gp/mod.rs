@@ -1,0 +1,298 @@
+//! Gaussian-process regression through FKT MVMs (paper §5.3, §B.3).
+//!
+//! The posterior mean (paper eq. 23) is
+//! `μ_p(X*) = κ(X*, X) (κ(X,X) + Σ_noise)^{-1} y`
+//! and both pieces reduce to kernel MVMs: the inverse is applied with
+//! conjugate gradients whose operator is one FKT MVM plus the diagonal,
+//! and the cross-covariance term is one rectangular FKT MVM — so the whole
+//! inference is quasilinear, the Wang et al. (2019)-style MVM-only GP the
+//! paper invokes.
+
+use crate::coordinator::Coordinator;
+use crate::fkt::{FktConfig, FktOperator};
+use crate::kernels::Kernel;
+use crate::linalg::{cholesky, cholesky_solve, preconditioned_cg, CgResult, Mat};
+use crate::points::Points;
+
+/// GP regression configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct GpConfig {
+    /// FKT operator settings (p, θ, leaf size, compression).
+    pub fkt: FktConfig,
+    /// CG relative-residual tolerance.
+    pub cg_tol: f64,
+    /// CG iteration cap.
+    pub cg_max_iters: usize,
+    /// Extra jitter added to the diagonal (numerical safety).
+    pub jitter: f64,
+    /// Block-Jacobi preconditioning with per-leaf Cholesky factors of
+    /// `K_leaf + Σ_leaf`. Satellite-track data (dense along-track sampling)
+    /// makes the kernel system ill-conditioned; the leaf blocks capture
+    /// exactly those short-range couplings and cut CG iterations by an
+    /// order of magnitude (EXPERIMENTS.md §Perf).
+    pub precondition: bool,
+}
+
+impl Default for GpConfig {
+    fn default() -> Self {
+        GpConfig {
+            fkt: FktConfig::default(),
+            cg_tol: 1e-6,
+            cg_max_iters: 200,
+            jitter: 1e-8,
+            precondition: true,
+        }
+    }
+}
+
+/// Leaf-block Jacobi preconditioner: per-leaf Cholesky of K+Σ.
+struct BlockJacobi {
+    /// Per-leaf (original indices, Cholesky factor).
+    blocks: Vec<(Vec<usize>, Mat)>,
+}
+
+impl BlockJacobi {
+    fn build(op: &FktOperator, kernel: &Kernel, noise: &[f64], jitter: f64) -> BlockJacobi {
+        let tree = op.tree();
+        let mut blocks = Vec::with_capacity(tree.leaves.len());
+        for &leaf in &tree.leaves {
+            let node = &tree.nodes[leaf];
+            let idx: Vec<usize> = (node.start..node.end).map(|i| tree.perm[i]).collect();
+            let m = idx.len();
+            let mut k = Mat::zeros(m, m);
+            for a in 0..m {
+                // tree.points are kernel-scaled; canonical profile applies.
+                let pa = tree.points.point(node.start + a);
+                for b in 0..=a {
+                    let pb = tree.points.point(node.start + b);
+                    let r = crate::linalg::vecops::dist2(pa, pb).sqrt();
+                    let v = if r == 0.0 {
+                        kernel.family.value_at_zero()
+                    } else {
+                        kernel.family.eval(r)
+                    };
+                    k[(a, b)] = v;
+                    k[(b, a)] = v;
+                }
+                k[(a, a)] += noise[idx[a]] + jitter;
+            }
+            let l = cholesky(&k).unwrap_or_else(|| {
+                // Extremely degenerate block: fall back to the diagonal.
+                let mut dl = Mat::zeros(m, m);
+                for a in 0..m {
+                    dl[(a, a)] = k[(a, a)].max(jitter).sqrt();
+                }
+                dl
+            });
+            blocks.push((idx, l));
+        }
+        BlockJacobi { blocks }
+    }
+
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        let mut z = vec![0.0; r.len()];
+        let mut rl = Vec::new();
+        for (idx, l) in &self.blocks {
+            rl.clear();
+            rl.extend(idx.iter().map(|&i| r[i]));
+            let sol = cholesky_solve(l, &rl);
+            for (slot, &i) in idx.iter().enumerate() {
+                z[i] = sol[slot];
+            }
+        }
+        z
+    }
+}
+
+/// Result of a posterior-mean computation.
+pub struct GpResult {
+    /// Posterior mean at the prediction points.
+    pub mean: Vec<f64>,
+    /// CG solve diagnostics.
+    pub cg: CgResult,
+    /// Representer weights α = (K+Σ)^{-1} y.
+    pub alpha: Vec<f64>,
+}
+
+/// A GP regressor: kernel + training data + per-point noise variances.
+pub struct GpRegressor {
+    kernel: Kernel,
+    train: Points,
+    noise_var: Vec<f64>,
+    cfg: GpConfig,
+    op: FktOperator,
+}
+
+impl GpRegressor {
+    /// Build the regressor (plans the square FKT operator over X).
+    pub fn new(train: Points, noise_var: Vec<f64>, kernel: Kernel, cfg: GpConfig) -> Self {
+        assert_eq!(train.len(), noise_var.len());
+        let op = FktOperator::square(&train, kernel, cfg.fkt);
+        GpRegressor { kernel, train, noise_var, cfg, op }
+    }
+
+    /// Solve (K + Σ + jitter·I) α = y with (preconditioned) CG over
+    /// coordinator MVMs.
+    pub fn fit_alpha(&self, y: &[f64], coord: &mut Coordinator) -> CgResult {
+        assert_eq!(y.len(), self.train.len());
+        let noise = &self.noise_var;
+        let jitter = self.cfg.jitter;
+        let op = &self.op;
+        let mut apply = |v: &[f64]| -> Vec<f64> {
+            let mut kv = coord.mvm(op, v);
+            for i in 0..v.len() {
+                kv[i] += (noise[i] + jitter) * v[i];
+            }
+            kv
+        };
+        if self.cfg.precondition {
+            let pre = BlockJacobi::build(op, &self.kernel, noise, jitter);
+            let mut precond = |r: &[f64]| pre.apply(r);
+            preconditioned_cg(&mut apply, &mut precond, y, self.cfg.cg_tol, self.cfg.cg_max_iters)
+        } else {
+            let mut identity = |r: &[f64]| r.to_vec();
+            preconditioned_cg(&mut apply, &mut identity, y, self.cfg.cg_tol, self.cfg.cg_max_iters)
+        }
+    }
+
+    /// Posterior mean at `x_star` (builds the rectangular cross operator).
+    pub fn posterior_mean(
+        &self,
+        y: &[f64],
+        x_star: &Points,
+        coord: &mut Coordinator,
+    ) -> GpResult {
+        let cg = self.fit_alpha(y, coord);
+        let cross = FktOperator::new(&self.train, Some(x_star), self.kernel, self.cfg.fkt);
+        let mean = coord.mvm(&cross, &cg.x);
+        GpResult { mean, alpha: cg.x.clone(), cg }
+    }
+
+    /// Training-set size.
+    pub fn len(&self) -> usize {
+        self.train.len()
+    }
+
+    /// True when there is no training data.
+    pub fn is_empty(&self) -> bool {
+        self.train.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::dense_matrix;
+    use crate::linalg::{cholesky, cholesky_solve};
+    use crate::rng::Pcg32;
+
+    /// Exact dense GP posterior mean (Cholesky) — the test oracle.
+    fn dense_gp_mean(
+        kernel: &Kernel,
+        train: &Points,
+        noise: &[f64],
+        y: &[f64],
+        xs: &Points,
+    ) -> Vec<f64> {
+        let mut k = dense_matrix(kernel, train, train);
+        for i in 0..train.len() {
+            k[(i, i)] += noise[i] + 1e-8;
+        }
+        let l = cholesky(&k).expect("SPD");
+        let alpha = cholesky_solve(&l, y);
+        let kx = dense_matrix(kernel, train, xs);
+        kx.matvec(&alpha)
+    }
+
+    #[test]
+    fn matches_dense_gp_small() {
+        let mut rng = Pcg32::seeded(221);
+        let n = 300;
+        let train = Points::new(2, rng.uniform_vec(n * 2, 0.0, 1.0));
+        let noise: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.01, 0.05)).collect();
+        // Targets from a smooth function + noise.
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let p = train.point(i);
+                (3.0 * p[0]).sin() + (2.0 * p[1]).cos() + 0.1 * rng.normal()
+            })
+            .collect();
+        let xs = Points::new(2, rng.uniform_vec(40 * 2, 0.1, 0.9));
+        let kernel = Kernel::matern32(0.5);
+        let oracle = dense_gp_mean(&kernel, &train, &noise, &y, &xs);
+        let cfg = GpConfig {
+            fkt: FktConfig { p: 6, theta: 0.4, leaf_capacity: 32, ..Default::default() },
+            cg_tol: 1e-9,
+            cg_max_iters: 400,
+            jitter: 1e-8,
+            precondition: true,
+        };
+        let gp = GpRegressor::new(train, noise, kernel, cfg);
+        let mut coord = Coordinator::native(2);
+        let res = gp.posterior_mean(&y, &xs, &mut coord);
+        assert!(res.cg.converged, "CG residual {}", res.cg.rel_residual);
+        for i in 0..40 {
+            assert!(
+                (res.mean[i] - oracle[i]).abs() < 2e-3 * (1.0 + oracle[i].abs()),
+                "i={i}: {} vs {}",
+                res.mean[i],
+                oracle[i]
+            );
+        }
+    }
+
+    #[test]
+    fn posterior_interpolates_low_noise_data() {
+        // With tiny noise, the posterior mean at training points ≈ y.
+        let mut rng = Pcg32::seeded(222);
+        let n = 200;
+        let train = Points::new(2, rng.uniform_vec(n * 2, 0.0, 1.0));
+        let noise = vec![1e-6; n];
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let p = train.point(i);
+                (2.0 * p[0] + p[1]).sin()
+            })
+            .collect();
+        let kernel = Kernel::matern32(0.7);
+        let cfg = GpConfig {
+            fkt: FktConfig { p: 6, theta: 0.4, leaf_capacity: 32, ..Default::default() },
+            cg_tol: 1e-10,
+            cg_max_iters: 600,
+            jitter: 1e-10,
+            precondition: true,
+        };
+        let train2 = train.clone();
+        let gp = GpRegressor::new(train, noise, kernel, cfg);
+        let mut coord = Coordinator::native(2);
+        let res = gp.posterior_mean(&y, &train2, &mut coord);
+        let mut worst = 0.0f64;
+        for i in 0..n {
+            worst = worst.max((res.mean[i] - y[i]).abs());
+        }
+        assert!(worst < 5e-3, "max interpolation error {worst}");
+    }
+
+    #[test]
+    fn cg_converges_with_reported_noise() {
+        // SST-like heteroscedastic noise keeps the system well conditioned.
+        let mut rng = Pcg32::seeded(223);
+        let ds = crate::data::sst::simulate(2.0, 2000, &mut rng);
+        let pts = ds.unit_sphere_points();
+        let y = ds.temperatures();
+        let noise = ds.noise_variances();
+        let kernel = Kernel::matern32(0.3);
+        let cfg = GpConfig {
+            fkt: FktConfig { p: 4, theta: 0.6, leaf_capacity: 64, ..Default::default() },
+            cg_tol: 1e-6,
+            cg_max_iters: 300,
+            jitter: 1e-8,
+            precondition: false, // exercise the unpreconditioned path too
+        };
+        let gp = GpRegressor::new(pts, noise, kernel, cfg);
+        let mut coord = Coordinator::native(4);
+        let res = gp.fit_alpha(&y, &mut coord);
+        assert!(res.converged, "CG residual {}", res.rel_residual);
+        assert!(res.iterations < 300);
+    }
+}

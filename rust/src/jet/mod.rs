@@ -1,0 +1,380 @@
+//! Truncated Taylor-series forward automatic differentiation ("jets").
+//!
+//! This module plays the role TaylorSeries.jl plays in the paper's Julia
+//! implementation: given a kernel's radial profile `K(r)` written against the
+//! [`Jet`] API, a *single* evaluation at `r` produces all derivatives
+//! `K(r), K'(r), …, K^(P)(r)` at once — exactly what the m2t matrices of the
+//! generalized multipole expansion (Theorem 3.1) consume.
+//!
+//! A [`Jet`] of order `P` stores the coefficients `c_m = K^(m)(r)/m!` of the
+//! Taylor polynomial around the evaluation point. Arithmetic is truncated
+//! polynomial arithmetic; transcendental functions use the standard
+//! differential-equation recurrences (see e.g. Griewank & Walther,
+//! *Evaluating Derivatives*, ch. 13).
+
+/// Truncated Taylor polynomial: `coeffs[m] = f^(m)(x0)/m!`, length `order+1`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Jet {
+    /// Taylor coefficients around the (implicit) evaluation point.
+    pub coeffs: Vec<f64>,
+}
+
+impl Jet {
+    /// The independent variable at value `x0`: x0 + t.
+    pub fn variable(x0: f64, order: usize) -> Self {
+        let mut coeffs = vec![0.0; order + 1];
+        coeffs[0] = x0;
+        if order >= 1 {
+            coeffs[1] = 1.0;
+        }
+        Jet { coeffs }
+    }
+
+    /// A constant jet.
+    pub fn constant(c: f64, order: usize) -> Self {
+        let mut coeffs = vec![0.0; order + 1];
+        coeffs[0] = c;
+        Jet { coeffs }
+    }
+
+    /// Truncation order (highest derivative captured).
+    #[inline]
+    pub fn order(&self) -> usize {
+        self.coeffs.len() - 1
+    }
+
+    /// The m-th derivative value: `coeffs[m] * m!`.
+    pub fn derivative(&self, m: usize) -> f64 {
+        let mut fact = 1.0;
+        for i in 2..=m {
+            fact *= i as f64;
+        }
+        self.coeffs[m] * fact
+    }
+
+    /// The function value.
+    #[inline]
+    pub fn value(&self) -> f64 {
+        self.coeffs[0]
+    }
+
+    fn zip(&self, other: &Jet, f: impl Fn(f64, f64) -> f64) -> Jet {
+        debug_assert_eq!(self.coeffs.len(), other.coeffs.len());
+        Jet {
+            coeffs: self
+                .coeffs
+                .iter()
+                .zip(&other.coeffs)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    /// Sum.
+    pub fn add(&self, other: &Jet) -> Jet {
+        self.zip(other, |a, b| a + b)
+    }
+
+    /// Difference.
+    pub fn sub(&self, other: &Jet) -> Jet {
+        self.zip(other, |a, b| a - b)
+    }
+
+    /// Add a scalar.
+    pub fn add_scalar(&self, s: f64) -> Jet {
+        let mut out = self.clone();
+        out.coeffs[0] += s;
+        out
+    }
+
+    /// Scale by a scalar.
+    pub fn scale(&self, s: f64) -> Jet {
+        Jet { coeffs: self.coeffs.iter().map(|&a| a * s).collect() }
+    }
+
+    /// Negation.
+    pub fn neg(&self) -> Jet {
+        self.scale(-1.0)
+    }
+
+    /// Truncated product (Cauchy convolution).
+    pub fn mul(&self, other: &Jet) -> Jet {
+        let n = self.coeffs.len();
+        debug_assert_eq!(n, other.coeffs.len());
+        let mut out = vec![0.0; n];
+        for i in 0..n {
+            let a = self.coeffs[i];
+            if a == 0.0 {
+                continue;
+            }
+            for j in 0..n - i {
+                out[i + j] += a * other.coeffs[j];
+            }
+        }
+        Jet { coeffs: out }
+    }
+
+    /// Truncated quotient; requires `other.value() != 0`.
+    pub fn div(&self, other: &Jet) -> Jet {
+        let n = self.coeffs.len();
+        debug_assert_eq!(n, other.coeffs.len());
+        let b0 = other.coeffs[0];
+        assert!(b0 != 0.0, "Jet::div by zero-valued jet");
+        let mut out = vec![0.0; n];
+        for k in 0..n {
+            let mut acc = self.coeffs[k];
+            for j in 1..=k {
+                acc -= other.coeffs[j] * out[k - j];
+            }
+            out[k] = acc / b0;
+        }
+        Jet { coeffs: out }
+    }
+
+    /// Reciprocal 1/self.
+    pub fn recip(&self) -> Jet {
+        Jet::constant(1.0, self.order()).div(self)
+    }
+
+    /// Square root; requires a positive value part.
+    pub fn sqrt(&self) -> Jet {
+        let n = self.coeffs.len();
+        let a0 = self.coeffs[0];
+        assert!(a0 > 0.0, "Jet::sqrt of non-positive value {a0}");
+        let s0 = a0.sqrt();
+        let mut out = vec![0.0; n];
+        out[0] = s0;
+        // (s^2)' relation: a_k = sum_{j} s_j s_{k-j}  =>  solve for s_k.
+        for k in 1..n {
+            let mut acc = self.coeffs[k];
+            for j in 1..k {
+                acc -= out[j] * out[k - j];
+            }
+            out[k] = acc / (2.0 * s0);
+        }
+        Jet { coeffs: out }
+    }
+
+    /// Exponential.
+    pub fn exp(&self) -> Jet {
+        let n = self.coeffs.len();
+        let mut out = vec![0.0; n];
+        out[0] = self.coeffs[0].exp();
+        // e' = e * a'  =>  k*e_k = sum_{j=1..k} j*a_j*e_{k-j}
+        for k in 1..n {
+            let mut acc = 0.0;
+            for j in 1..=k {
+                acc += j as f64 * self.coeffs[j] * out[k - j];
+            }
+            out[k] = acc / k as f64;
+        }
+        Jet { coeffs: out }
+    }
+
+    /// Natural log; requires a positive value part.
+    pub fn ln(&self) -> Jet {
+        let n = self.coeffs.len();
+        let a0 = self.coeffs[0];
+        assert!(a0 > 0.0, "Jet::ln of non-positive value {a0}");
+        let mut out = vec![0.0; n];
+        out[0] = a0.ln();
+        // l' = a'/a  =>  k*a_0*l_k = k*a_k - sum_{j=1..k-1} j*l_j*a_{k-j}
+        for k in 1..n {
+            let mut acc = k as f64 * self.coeffs[k];
+            for j in 1..k {
+                acc -= j as f64 * out[j] * self.coeffs[k - j];
+            }
+            out[k] = acc / (k as f64 * a0);
+        }
+        Jet { coeffs: out }
+    }
+
+    /// Sine and cosine simultaneously (they share the recurrence).
+    pub fn sin_cos(&self) -> (Jet, Jet) {
+        let n = self.coeffs.len();
+        let mut s = vec![0.0; n];
+        let mut c = vec![0.0; n];
+        s[0] = self.coeffs[0].sin();
+        c[0] = self.coeffs[0].cos();
+        for k in 1..n {
+            let mut sa = 0.0;
+            let mut ca = 0.0;
+            for j in 1..=k {
+                let w = j as f64 * self.coeffs[j];
+                sa += w * c[k - j];
+                ca -= w * s[k - j];
+            }
+            s[k] = sa / k as f64;
+            c[k] = ca / k as f64;
+        }
+        (Jet { coeffs: s }, Jet { coeffs: c })
+    }
+
+    /// Sine.
+    pub fn sin(&self) -> Jet {
+        self.sin_cos().0
+    }
+
+    /// Cosine.
+    pub fn cos(&self) -> Jet {
+        self.sin_cos().1
+    }
+
+    /// Real power `self^p` via exp(p ln self); requires positive value part.
+    pub fn powf(&self, p: f64) -> Jet {
+        self.ln().scale(p).exp()
+    }
+
+    /// Integer power by repeated squaring (works for any value part).
+    pub fn powi(&self, e: u32) -> Jet {
+        let mut acc = Jet::constant(1.0, self.order());
+        let mut base = self.clone();
+        let mut e = e;
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = acc.mul(&base);
+            }
+            base = base.mul(&base);
+            e >>= 1;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ORDER: usize = 8;
+
+    fn assert_close(a: f64, b: f64, tol: f64, msg: &str) {
+        let scale = 1.0f64.max(a.abs()).max(b.abs());
+        assert!((a - b).abs() <= tol * scale, "{msg}: {a} vs {b}");
+    }
+
+    #[test]
+    fn exp_derivatives_are_exp() {
+        let x = Jet::variable(1.3, ORDER);
+        let e = x.exp();
+        for m in 0..=ORDER {
+            assert_close(e.derivative(m), 1.3f64.exp(), 1e-12, &format!("d^{m} exp"));
+        }
+    }
+
+    #[test]
+    fn exp_neg_r_matches_sign_pattern() {
+        // K(r) = e^{-r}: K^(m)(r) = (-1)^m e^{-r}
+        let r = 0.7;
+        let x = Jet::variable(r, ORDER);
+        let k = x.neg().exp();
+        for m in 0..=ORDER {
+            let expect = (-r).exp() * if m % 2 == 0 { 1.0 } else { -1.0 };
+            assert_close(k.derivative(m), expect, 1e-12, &format!("d^{m}"));
+        }
+    }
+
+    #[test]
+    fn reciprocal_power_derivatives() {
+        // K(r) = 1/r: K^(m)(r) = (-1)^m m! / r^{m+1}
+        let r = 2.0;
+        let x = Jet::variable(r, ORDER);
+        let k = x.recip();
+        let mut fact = 1.0;
+        for m in 0..=ORDER {
+            if m > 0 {
+                fact *= m as f64;
+            }
+            let sign = if m % 2 == 0 { 1.0 } else { -1.0 };
+            assert_close(k.derivative(m), sign * fact / r.powi(m as i32 + 1), 1e-12, &format!("d^{m}"));
+        }
+    }
+
+    #[test]
+    fn sqrt_consistency() {
+        let x = Jet::variable(3.0, ORDER);
+        let s = x.sqrt();
+        let back = s.mul(&s);
+        for m in 0..=ORDER {
+            let expect = if m == 0 { 3.0 } else if m == 1 { 1.0 } else { 0.0 };
+            assert_close(back.coeffs[m], expect, 1e-12, &format!("coef {m}"));
+        }
+    }
+
+    #[test]
+    fn ln_and_exp_invert() {
+        let x = Jet::variable(2.2, ORDER);
+        let y = x.ln().exp();
+        for m in 0..=ORDER {
+            assert_close(y.coeffs[m], x.coeffs[m], 1e-12, &format!("coef {m}"));
+        }
+    }
+
+    #[test]
+    fn sin_cos_pythagoras_and_derivs() {
+        let x = Jet::variable(0.9, ORDER);
+        let (s, c) = x.sin_cos();
+        let one = s.mul(&s).add(&c.mul(&c));
+        for m in 0..=ORDER {
+            let expect = if m == 0 { 1.0 } else { 0.0 };
+            assert_close(one.coeffs[m], expect, 1e-12, &format!("pythagoras coef {m}"));
+        }
+        // d^m sin = sin(x + m pi/2)
+        for m in 0..=ORDER {
+            assert_close(
+                s.derivative(m),
+                (0.9 + m as f64 * std::f64::consts::FRAC_PI_2).sin(),
+                1e-12,
+                &format!("d^{m} sin"),
+            );
+        }
+    }
+
+    #[test]
+    fn cauchy_kernel_derivatives_match_finite_difference() {
+        // K(r) = 1/(1+r^2)
+        let f = |r: f64| 1.0 / (1.0 + r * r);
+        let r0 = 1.7;
+        let x = Jet::variable(r0, 4);
+        let k = x.mul(&x).add_scalar(1.0).recip();
+        assert_close(k.value(), f(r0), 1e-14, "value");
+        // first derivative via central difference
+        let h = 1e-5;
+        let d1 = (f(r0 + h) - f(r0 - h)) / (2.0 * h);
+        assert_close(k.derivative(1), d1, 1e-8, "d1");
+        let d2 = (f(r0 + h) - 2.0 * f(r0) + f(r0 - h)) / (h * h);
+        assert_close(k.derivative(2), d2, 1e-5, "d2");
+    }
+
+    #[test]
+    fn powf_matches_powi_for_integer_exponents() {
+        let x = Jet::variable(1.9, ORDER);
+        let a = x.powf(3.0);
+        let b = x.powi(3);
+        for m in 0..=ORDER {
+            assert_close(a.coeffs[m], b.coeffs[m], 1e-11, &format!("coef {m}"));
+        }
+    }
+
+    #[test]
+    fn rational_quadratic_derivs_vs_closed_form() {
+        // K(r) = (1+r^2)^{-1/2}; K'(r) = -r (1+r^2)^{-3/2}
+        let r0 = 0.8;
+        let x = Jet::variable(r0, 3);
+        let k = x.mul(&x).add_scalar(1.0).powf(-0.5);
+        let expect1 = -r0 * (1.0 + r0 * r0).powf(-1.5);
+        assert_close(k.derivative(1), expect1, 1e-12, "K'");
+    }
+
+    #[test]
+    fn composition_chain_rule_deep() {
+        // f(r) = exp(-sqrt(1+r^2)) — exercised the full chain at once;
+        // compare against high-accuracy finite differences of order 4.
+        let f = |r: f64| (-(1.0 + r * r).sqrt()).exp();
+        let r0 = 1.1;
+        let x = Jet::variable(r0, 5);
+        let k = x.mul(&x).add_scalar(1.0).sqrt().neg().exp();
+        let h = 1e-4;
+        let d1 = (-f(r0 + 2.0 * h) + 8.0 * f(r0 + h) - 8.0 * f(r0 - h) + f(r0 - 2.0 * h)) / (12.0 * h);
+        assert_close(k.derivative(1), d1, 1e-9, "d1");
+    }
+}

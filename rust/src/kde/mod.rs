@@ -1,0 +1,151 @@
+//! Kernel density estimation and Nadaraya–Watson kernel regression —
+//! the first two applications the paper's introduction motivates
+//! ("kernel density estimation, kernel regression, Gaussian processes…"),
+//! both reducible to FKT MVMs:
+//!
+//! * KDE: `f̂(y) = (1/N h^d c_K) Σ_j K(|y − x_j|/h)` — one MVM with the
+//!   all-ones weight vector;
+//! * Nadaraya–Watson: `m̂(y) = Σ_j K(…) v_j / Σ_j K(…)` — a ratio of two
+//!   MVMs sharing one operator (the coordinator amortizes the plan).
+
+use crate::coordinator::Coordinator;
+use crate::fkt::{FktConfig, FktOperator};
+use crate::kernels::{Family, Kernel};
+use crate::points::Points;
+
+/// Gaussian-kernel normalization `c_K = (2π)^{d/2}·2^{-d/2}… `; for the
+/// canonical `e^{-u²}` profile the normalizing constant is `π^{d/2}`
+/// (∫ e^{-|u|²} du = π^{d/2}).
+fn gaussian_norm(d: usize) -> f64 {
+    std::f64::consts::PI.powf(d as f64 / 2.0)
+}
+
+/// Kernel density estimator with bandwidth `h` (Gaussian kernel).
+pub struct KernelDensity {
+    op: FktOperator,
+    n: usize,
+    h: f64,
+    d: usize,
+}
+
+impl KernelDensity {
+    /// Build the estimator for evaluation at `eval_points`.
+    pub fn new(data: &Points, eval_points: &Points, h: f64, cfg: FktConfig) -> KernelDensity {
+        assert!(h > 0.0);
+        // K(|x−y|/h) with the canonical Gaussian = kernel scale 1/h.
+        let kernel = Kernel::new(Family::Gaussian, 1.0 / h);
+        let op = FktOperator::new(data, Some(eval_points), kernel, cfg);
+        KernelDensity { op, n: data.len(), h, d: data.d }
+    }
+
+    /// Density estimates at the evaluation points.
+    pub fn densities(&self, coord: &mut Coordinator) -> Vec<f64> {
+        let ones = vec![1.0; self.n];
+        let mut z = coord.mvm(&self.op, &ones);
+        let norm = 1.0 / (self.n as f64 * self.h.powi(self.d as i32) * gaussian_norm(self.d));
+        for v in &mut z {
+            *v *= norm;
+        }
+        z
+    }
+}
+
+/// Nadaraya–Watson kernel regression estimate at `eval_points`.
+pub fn kernel_regression(
+    data: &Points,
+    values: &[f64],
+    eval_points: &Points,
+    h: f64,
+    cfg: FktConfig,
+    coord: &mut Coordinator,
+) -> Vec<f64> {
+    assert_eq!(data.len(), values.len());
+    let kernel = Kernel::new(Family::Gaussian, 1.0 / h);
+    let op = FktOperator::new(data, Some(eval_points), kernel, cfg);
+    let num = coord.mvm(&op, values);
+    let den = coord.mvm(&op, &vec![1.0; values.len()]);
+    num.iter()
+        .zip(&den)
+        .map(|(a, b)| if b.abs() > 1e-12 { a / b } else { 0.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn kde_integrates_to_one_roughly() {
+        // Density over a grid ≈ probability mass 1.
+        let mut rng = Pcg32::seeded(501);
+        let n = 2000;
+        let data = Points::new(2, rng.normal_vec(n * 2));
+        // Evaluation grid over [-4,4]².
+        let g = 40;
+        let mut grid = Points::empty(2);
+        for i in 0..g {
+            for j in 0..g {
+                grid.push(&[
+                    -4.0 + 8.0 * (i as f64 + 0.5) / g as f64,
+                    -4.0 + 8.0 * (j as f64 + 0.5) / g as f64,
+                ]);
+            }
+        }
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
+        let kde = KernelDensity::new(&data, &grid, 0.35, cfg);
+        let mut coord = Coordinator::native(1);
+        let dens = kde.densities(&mut coord);
+        let cell = (8.0 / g as f64) * (8.0 / g as f64);
+        let mass: f64 = dens.iter().sum::<f64>() * cell;
+        assert!((mass - 1.0).abs() < 0.05, "mass {mass}");
+        assert!(dens.iter().all(|&v| v >= -1e-12));
+    }
+
+    #[test]
+    fn kde_matches_exact_sum() {
+        let mut rng = Pcg32::seeded(502);
+        let n = 800;
+        let data = Points::new(2, rng.normal_vec(n * 2));
+        let eval = Points::new(2, rng.normal_vec(50 * 2));
+        let h = 0.4;
+        let cfg = FktConfig { p: 6, theta: 0.4, leaf_capacity: 50, ..Default::default() };
+        let kde = KernelDensity::new(&data, &eval, h, cfg);
+        let mut coord = Coordinator::native(1);
+        let fast = kde.densities(&mut coord);
+        let norm = 1.0 / (n as f64 * h * h * gaussian_norm(2));
+        for t in 0..eval.len() {
+            let mut acc = 0.0;
+            for s in 0..n {
+                let d2 = crate::linalg::vecops::dist2(eval.point(t), data.point(s));
+                acc += (-d2 / (h * h)).exp();
+            }
+            let exact = acc * norm;
+            assert!(
+                (fast[t] - exact).abs() < 1e-4 * (1.0 + exact),
+                "t={t}: {} vs {exact}",
+                fast[t]
+            );
+        }
+    }
+
+    #[test]
+    fn regression_recovers_smooth_function() {
+        let mut rng = Pcg32::seeded(503);
+        let n = 3000;
+        let data = Points::new(1, rng.uniform_vec(n, 0.0, 1.0));
+        let f = |x: f64| (6.0 * x).sin() + 0.5 * x;
+        let values: Vec<f64> = (0..n)
+            .map(|i| f(data.point(i)[0]) + 0.1 * rng.normal())
+            .collect();
+        let eval = Points::new(1, (0..50).map(|i| 0.05 + 0.9 * i as f64 / 49.0).collect());
+        let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 64, ..Default::default() };
+        let mut coord = Coordinator::native(1);
+        let pred = kernel_regression(&data, &values, &eval, 0.05, cfg, &mut coord);
+        let mut worst = 0.0f64;
+        for (t, p) in pred.iter().enumerate() {
+            worst = worst.max((p - f(eval.point(t)[0])).abs());
+        }
+        assert!(worst < 0.15, "max regression error {worst}");
+    }
+}

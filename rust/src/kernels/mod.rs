@@ -1,0 +1,468 @@
+//! Isotropic kernel zoo.
+//!
+//! Every kernel the paper evaluates (Table 1, Table 2, Table 4, and the
+//! experiments of §5) expressed in a *canonical* parameter-free radial form
+//! `K(u)`; user length-scales are handled by scaling the input coordinates
+//! (`u = scale · r`), which keeps the §A.4 symbolic path exactly rational
+//! and means the expansion machinery never needs a chain rule.
+//!
+//! Three evaluation surfaces:
+//! * [`Kernel::eval`] — plain f64 value (dense baselines, near field),
+//! * [`Kernel::eval_jet`] — all derivatives `K⁽ᵐ⁾(u)` at once via truncated
+//!   Taylor autodiff ([`crate::jet`]), the paper's TaylorSeries.jl role,
+//! * [`Kernel::symbolic`] — exact `L(u)·exp(s(u))` form when the kernel
+//!   satisfies `K' = q·K` with Laurent `q` (enables the §A.4 compression).
+
+mod derivs;
+
+use crate::exact::Rational;
+use crate::jet::Jet;
+use crate::symbolic::{ExpPoly, Laurent};
+
+/// Canonical kernel families (see module docs; `u` denotes scaled radius).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// `e^{-u}` — Exponential / Matérn ν=1/2 (paper Table 1).
+    Exponential,
+    /// `(1+u)e^{-u}` — Matérn ν=3/2 with `u = √3 r/ρ` (paper Table 1, Fig 4).
+    Matern32,
+    /// `(1+u+u²/3)e^{-u}` — Matérn ν=5/2 with `u = √5 r/ρ`.
+    Matern52,
+    /// `1/(1+u²)` — Cauchy (paper Table 1; the t-SNE kernel).
+    Cauchy,
+    /// `(1+u²)^{-1/2}` — Rational Quadratic α=1/2 (paper Table 1).
+    RationalQuadratic,
+    /// `e^{-u²}` — Gaussian / squared exponential (paper Table 4).
+    Gaussian,
+    /// `1/u` — Coulomb / Laplace Green's function (paper §3.3, Table 2).
+    Coulomb,
+    /// `1/u^a` — inverse power (paper Table 2 rows 1/r, 1/r², 1/r³).
+    InversePower(u8),
+    /// `cos(u)/u` — oscillatory Helmholtz-like kernel (paper Table 4).
+    OscillatoryCoulomb,
+    /// `e^{-u}/u` — screened Coulomb / Yukawa (paper Table 2).
+    ExpOverR,
+    /// `u·e^{-u}` (paper Table 2).
+    RTimesExp,
+    /// `e^{-1/u}` (paper Table 2).
+    ExpInvR,
+    /// `e^{-1/u²}` (paper Table 2).
+    ExpInvR2,
+    /// `(1+u²)^{-2}` — squared Cauchy; the t-SNE repulsive-force kernel.
+    CauchySquared,
+}
+
+impl Family {
+    /// Canonical value at radius `u > 0`.
+    pub fn eval(self, u: f64) -> f64 {
+        match self {
+            Family::Exponential => (-u).exp(),
+            Family::Matern32 => (1.0 + u) * (-u).exp(),
+            Family::Matern52 => (1.0 + u + u * u / 3.0) * (-u).exp(),
+            Family::Cauchy => 1.0 / (1.0 + u * u),
+            Family::RationalQuadratic => 1.0 / (1.0 + u * u).sqrt(),
+            Family::Gaussian => (-u * u).exp(),
+            Family::Coulomb => 1.0 / u,
+            Family::InversePower(a) => u.powi(-(a as i32)),
+            Family::OscillatoryCoulomb => u.cos() / u,
+            Family::ExpOverR => (-u).exp() / u,
+            Family::RTimesExp => u * (-u).exp(),
+            Family::ExpInvR => (-1.0 / u).exp(),
+            Family::ExpInvR2 => (-1.0 / (u * u)).exp(),
+            Family::CauchySquared => {
+                let w = 1.0 / (1.0 + u * u);
+                w * w
+            }
+        }
+    }
+
+    /// Value at u = 0 (the diagonal of the kernel matrix). Kernels singular
+    /// at the origin follow the N-body convention of excluding
+    /// self-interaction, i.e. a zero diagonal.
+    pub fn value_at_zero(self) -> f64 {
+        match self {
+            Family::Exponential
+            | Family::Matern32
+            | Family::Matern52
+            | Family::Cauchy
+            | Family::RationalQuadratic
+            | Family::Gaussian
+            | Family::CauchySquared => 1.0,
+            Family::Coulomb
+            | Family::InversePower(_)
+            | Family::OscillatoryCoulomb
+            | Family::ExpOverR => 0.0,
+            Family::RTimesExp | Family::ExpInvR | Family::ExpInvR2 => 0.0,
+        }
+    }
+
+    /// True when K(u) → ±∞ as u → 0.
+    pub fn singular_at_origin(self) -> bool {
+        matches!(
+            self,
+            Family::Coulomb
+                | Family::InversePower(_)
+                | Family::OscillatoryCoulomb
+                | Family::ExpOverR
+        )
+    }
+
+    /// Evaluate as a jet: pass the radius jet through the kernel formula,
+    /// producing all Taylor coefficients (hence all derivatives) at once.
+    pub fn eval_jet(self, u: &Jet) -> Jet {
+        let order = u.order();
+        match self {
+            Family::Exponential => u.neg().exp(),
+            Family::Matern32 => {
+                let poly = u.add_scalar(1.0);
+                poly.mul(&u.neg().exp())
+            }
+            Family::Matern52 => {
+                let poly = u.mul(u).scale(1.0 / 3.0).add(u).add_scalar(1.0);
+                poly.mul(&u.neg().exp())
+            }
+            Family::Cauchy => u.mul(u).add_scalar(1.0).recip(),
+            Family::RationalQuadratic => u.mul(u).add_scalar(1.0).powf(-0.5),
+            Family::Gaussian => u.mul(u).neg().exp(),
+            Family::Coulomb => u.recip(),
+            Family::InversePower(a) => u.powi(a as u32).recip(),
+            Family::OscillatoryCoulomb => u.cos().div(u),
+            Family::ExpOverR => u.neg().exp().div(u),
+            Family::RTimesExp => u.mul(&u.neg().exp()),
+            Family::ExpInvR => u.recip().neg().exp(),
+            Family::ExpInvR2 => u.mul(u).recip().neg().exp(),
+            Family::CauchySquared => {
+                let w = u.mul(u).add_scalar(1.0).recip();
+                let _ = order;
+                w.mul(&w)
+            }
+        }
+    }
+
+    /// Exact symbolic form `L(u)·exp(s(u))` when the kernel admits one
+    /// (equivalently: satisfies `K'(u) = q(u)K(u)` with Laurent `q`). This
+    /// is the user-toggled fast path of §A.4; `None` falls back to jets.
+    pub fn symbolic(self) -> Option<ExpPoly> {
+        let one = Rational::one;
+        let m1 = || Rational::from_i64(-1);
+        match self {
+            Family::Exponential => Some(ExpPoly::new(
+                Laurent::one(),
+                Laurent::monomial(m1(), 1),
+            )),
+            Family::Matern32 => Some(ExpPoly::new(
+                Laurent::from_terms(&[(one(), 0), (one(), 1)]),
+                Laurent::monomial(m1(), 1),
+            )),
+            Family::Matern52 => Some(ExpPoly::new(
+                Laurent::from_terms(&[(one(), 0), (one(), 1), (Rational::ratio(1, 3), 2)]),
+                Laurent::monomial(m1(), 1),
+            )),
+            Family::Gaussian => Some(ExpPoly::new(
+                Laurent::one(),
+                Laurent::monomial(m1(), 2),
+            )),
+            Family::Coulomb => Some(ExpPoly::new(
+                Laurent::monomial(one(), -1),
+                Laurent::zero(),
+            )),
+            Family::InversePower(a) => Some(ExpPoly::new(
+                Laurent::monomial(one(), -(a as i64)),
+                Laurent::zero(),
+            )),
+            Family::ExpOverR => Some(ExpPoly::new(
+                Laurent::monomial(one(), -1),
+                Laurent::monomial(m1(), 1),
+            )),
+            Family::RTimesExp => Some(ExpPoly::new(
+                Laurent::monomial(one(), 1),
+                Laurent::monomial(m1(), 1),
+            )),
+            Family::ExpInvR => Some(ExpPoly::new(
+                Laurent::one(),
+                Laurent::monomial(m1(), -1),
+            )),
+            Family::ExpInvR2 => Some(ExpPoly::new(
+                Laurent::one(),
+                Laurent::monomial(m1(), -2),
+            )),
+            // No Laurent q: rational functions and the oscillatory kernel.
+            Family::Cauchy
+            | Family::RationalQuadratic
+            | Family::OscillatoryCoulomb
+            | Family::CauchySquared => None,
+        }
+    }
+
+    /// Stable identifier (artifact names, CLI).
+    pub fn name(self) -> String {
+        match self {
+            Family::Exponential => "exponential".into(),
+            Family::Matern32 => "matern32".into(),
+            Family::Matern52 => "matern52".into(),
+            Family::Cauchy => "cauchy".into(),
+            Family::RationalQuadratic => "rq".into(),
+            Family::Gaussian => "gaussian".into(),
+            Family::Coulomb => "coulomb".into(),
+            Family::InversePower(a) => format!("invpow{a}"),
+            Family::OscillatoryCoulomb => "osc_coulomb".into(),
+            Family::ExpOverR => "exp_over_r".into(),
+            Family::RTimesExp => "r_times_exp".into(),
+            Family::ExpInvR => "exp_inv_r".into(),
+            Family::ExpInvR2 => "exp_inv_r2".into(),
+            Family::CauchySquared => "cauchy_sq".into(),
+        }
+    }
+
+    /// Parse a family name (inverse of [`Family::name`]).
+    pub fn from_name(name: &str) -> Option<Family> {
+        Some(match name {
+            "exponential" | "matern12" | "exp" => Family::Exponential,
+            "matern32" => Family::Matern32,
+            "matern52" => Family::Matern52,
+            "cauchy" => Family::Cauchy,
+            "rq" | "rational_quadratic" => Family::RationalQuadratic,
+            "gaussian" | "sqexp" => Family::Gaussian,
+            "coulomb" | "invpow1" => Family::Coulomb,
+            "invpow2" => Family::InversePower(2),
+            "invpow3" => Family::InversePower(3),
+            "osc_coulomb" => Family::OscillatoryCoulomb,
+            "exp_over_r" => Family::ExpOverR,
+            "r_times_exp" => Family::RTimesExp,
+            "exp_inv_r" => Family::ExpInvR,
+            "exp_inv_r2" => Family::ExpInvR2,
+            "cauchy_sq" => Family::CauchySquared,
+            _ => return None,
+        })
+    }
+
+    /// All families (used by sweep examples and tests).
+    pub fn all() -> Vec<Family> {
+        vec![
+            Family::Exponential,
+            Family::Matern32,
+            Family::Matern52,
+            Family::Cauchy,
+            Family::RationalQuadratic,
+            Family::Gaussian,
+            Family::Coulomb,
+            Family::InversePower(2),
+            Family::InversePower(3),
+            Family::OscillatoryCoulomb,
+            Family::ExpOverR,
+            Family::RTimesExp,
+            Family::ExpInvR,
+            Family::ExpInvR2,
+            Family::CauchySquared,
+        ]
+    }
+}
+
+/// An isotropic kernel: canonical family + coordinate scale.
+///
+/// `K(r) = family(scale · r)`; e.g. Matérn-3/2 with length-scale ρ is
+/// `Kernel::new(Family::Matern32, sqrt(3)/ρ)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Kernel {
+    /// Canonical radial profile.
+    pub family: Family,
+    /// Coordinate scale applied before the profile (`u = scale·r`).
+    pub scale: f64,
+}
+
+impl Kernel {
+    /// Kernel with explicit scale.
+    pub fn new(family: Family, scale: f64) -> Self {
+        assert!(scale > 0.0, "kernel scale must be positive");
+        Kernel { family, scale }
+    }
+
+    /// Canonical kernel (scale 1).
+    pub fn canonical(family: Family) -> Self {
+        Kernel { family, scale: 1.0 }
+    }
+
+    /// Matérn ν=3/2 with length-scale ρ (paper Table 1 with σ²=1).
+    pub fn matern32(rho: f64) -> Self {
+        Kernel::new(Family::Matern32, 3f64.sqrt() / rho)
+    }
+
+    /// Matérn ν=1/2 (Exponential) with length-scale ρ.
+    pub fn matern12(rho: f64) -> Self {
+        Kernel::new(Family::Exponential, 1.0 / rho)
+    }
+
+    /// Cauchy kernel `1/(1+r²/σ²)`.
+    pub fn cauchy(sigma: f64) -> Self {
+        Kernel::new(Family::Cauchy, 1.0 / sigma)
+    }
+
+    /// Gaussian kernel `e^{-r²/σ²}`.
+    pub fn gaussian(sigma: f64) -> Self {
+        Kernel::new(Family::Gaussian, 1.0 / sigma)
+    }
+
+    /// Kernel value at distance `r ≥ 0`.
+    #[inline]
+    pub fn eval(&self, r: f64) -> f64 {
+        if r == 0.0 {
+            return self.family.value_at_zero();
+        }
+        self.family.eval(self.scale * r)
+    }
+
+    /// Kernel value between two points.
+    #[inline]
+    pub fn eval_points(&self, x: &[f64], y: &[f64]) -> f64 {
+        self.eval(crate::linalg::vecops::dist2(x, y).sqrt())
+    }
+
+    /// All canonical derivatives `K⁽ᵐ⁾(u)` for `m = 0..=order` at scaled
+    /// radius `u` (one jet evaluation).
+    pub fn derivatives_canonical(&self, u: f64, order: usize) -> Vec<f64> {
+        let x = Jet::variable(u, order);
+        let k = self.family.eval_jet(&x);
+        (0..=order).map(|m| k.derivative(m)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_matches_table1_formulas() {
+        let r: f64 = 0.7;
+        // Exponential
+        assert!((Family::Exponential.eval(r) - (-r).exp()).abs() < 1e-15);
+        // Matérn 3/2 with rho: sigma^2 (1 + sqrt3 r/rho) exp(-sqrt3 r/rho)
+        let rho = 2.0;
+        let k = Kernel::matern32(rho);
+        let u = 3f64.sqrt() * r / rho;
+        assert!((k.eval(r) - (1.0 + u) * (-u).exp()).abs() < 1e-15);
+        // Cauchy with sigma
+        let k = Kernel::cauchy(1.5);
+        assert!((k.eval(r) - 1.0 / (1.0 + r * r / 2.25)).abs() < 1e-15);
+        // RQ alpha=1/2
+        assert!(
+            (Family::RationalQuadratic.eval(r) - 1.0 / (1.0 + r * r).sqrt()).abs() < 1e-15
+        );
+    }
+
+    #[test]
+    fn jet_derivatives_match_finite_differences_all_families() {
+        let h = 1e-5;
+        for fam in Family::all() {
+            let u0 = 1.3; // away from origin so singular kernels are fine
+            let d = Kernel::canonical(fam).derivatives_canonical(u0, 3);
+            let f = |u: f64| fam.eval(u);
+            assert!((d[0] - f(u0)).abs() < 1e-12, "{fam:?} value");
+            let fd1 = (f(u0 + h) - f(u0 - h)) / (2.0 * h);
+            assert!(
+                (d[1] - fd1).abs() < 1e-6 * (1.0 + fd1.abs()),
+                "{fam:?} d1: {} vs {fd1}",
+                d[1]
+            );
+            let fd2 = (f(u0 + h) - 2.0 * f(u0) + f(u0 - h)) / (h * h);
+            assert!(
+                (d[2] - fd2).abs() < 1e-4 * (1.0 + fd2.abs()),
+                "{fam:?} d2: {} vs {fd2}",
+                d[2]
+            );
+        }
+    }
+
+    #[test]
+    fn symbolic_matches_jet_derivatives() {
+        for fam in Family::all() {
+            let Some(sym) = fam.symbolic() else { continue };
+            let u0 = 0.9;
+            let order = 6;
+            let jd = Kernel::canonical(fam).derivatives_canonical(u0, order);
+            let ds = sym.derivatives(order);
+            for m in 0..=order {
+                let sv = ds[m].eval(u0);
+                let scale = 1.0f64.max(jd[m].abs());
+                assert!(
+                    (sv - jd[m]).abs() < 1e-9 * scale,
+                    "{fam:?} m={m}: symbolic {sv} vs jet {}",
+                    jd[m]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn symbolic_presence_matches_paper_table2_rows() {
+        // Kernels in Table 2 all satisfy K' = qK.
+        for fam in [
+            Family::Coulomb,
+            Family::InversePower(2),
+            Family::InversePower(3),
+            Family::ExpOverR,
+            Family::Exponential,
+            Family::RTimesExp,
+            Family::ExpInvR,
+            Family::ExpInvR2,
+        ] {
+            assert!(fam.symbolic().is_some(), "{fam:?} should be symbolic");
+        }
+        // Cauchy/RQ/oscillatory do not.
+        for fam in [
+            Family::Cauchy,
+            Family::RationalQuadratic,
+            Family::OscillatoryCoulomb,
+        ] {
+            assert!(fam.symbolic().is_none(), "{fam:?} should not be symbolic");
+        }
+    }
+
+    #[test]
+    fn scale_behaves_as_length_scale() {
+        let k = Kernel::new(Family::Exponential, 2.0);
+        assert!((k.eval(1.0) - (-2.0f64).exp()).abs() < 1e-15);
+        // eval_points
+        let x = [0.0, 0.0];
+        let y = [3.0, 4.0]; // dist 5
+        assert!((k.eval_points(&x, &y) - (-10.0f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn diagonal_values() {
+        assert_eq!(Kernel::canonical(Family::Cauchy).eval(0.0), 1.0);
+        assert_eq!(Kernel::canonical(Family::Coulomb).eval(0.0), 0.0);
+        assert_eq!(Kernel::canonical(Family::Gaussian).eval(0.0), 1.0);
+        assert!(Family::Coulomb.singular_at_origin());
+        assert!(!Family::Gaussian.singular_at_origin());
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for fam in Family::all() {
+            assert_eq!(Family::from_name(&fam.name()), Some(fam), "{fam:?}");
+        }
+        assert_eq!(Family::from_name("nope"), None);
+    }
+
+    #[test]
+    fn matern_decreasing_and_positive() {
+        for fam in [Family::Exponential, Family::Matern32, Family::Matern52] {
+            let mut prev = fam.eval(1e-6);
+            for i in 1..100 {
+                let u = i as f64 * 0.1;
+                let v = fam.eval(u);
+                assert!(v > 0.0 && v < prev, "{fam:?} at {u}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn cauchy_squared_is_cauchy_squared() {
+        for i in 1..20 {
+            let u = i as f64 * 0.3;
+            let c = Family::Cauchy.eval(u);
+            assert!((Family::CauchySquared.eval(u) - c * c).abs() < 1e-15);
+        }
+    }
+}

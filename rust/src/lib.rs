@@ -1,0 +1,35 @@
+//! # The Fast Kernel Transform (FKT)
+//!
+//! A from-scratch reproduction of *The Fast Kernel Transform* (Ryan, Ament,
+//! Gomes, Damle, 2021): quasilinear-time matrix–vector multiplication with
+//! isotropic kernel matrices via automatically generated multipole
+//! expansions, embedded in a three-layer Rust + JAX + Pallas stack.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the paper
+//! reproduction results.
+
+pub mod benchkit;
+pub mod baselines;
+pub mod cli;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod exact;
+pub mod gp;
+pub mod fkt;
+pub mod jet;
+pub mod kde;
+pub mod kernels;
+pub mod linalg;
+pub mod points;
+pub mod rng;
+pub mod runtime;
+pub mod expansion;
+pub mod symbolic;
+pub mod tree;
+pub mod tsne;
+
+/// Library version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

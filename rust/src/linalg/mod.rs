@@ -1,0 +1,548 @@
+//! Small dense linear algebra substrate.
+//!
+//! Everything the FKT stack needs and nothing more: a row-major matrix type
+//! with matvec/gemm, conjugate gradients (the GP solver pairs CG with FKT
+//! MVMs), Cholesky (small-scale exact reference for tests), a column-pivoted
+//! Householder QR for numerical rank estimates, and an *exact rational* rank
+//! factorization used by the §A.4 radial compression.
+
+use crate::exact::Rational;
+
+pub mod qr;
+pub use qr::{col_pivoted_qr, numerical_rank, PivotedQr};
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major storage, length rows*cols.
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From a row-major vec.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for j in 0..self.cols {
+                acc += row[j] * x[j];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// y = Aᵀ x.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for j in 0..self.cols {
+                y[j] += row[j] * xi;
+            }
+        }
+        y
+    }
+
+    /// C = A·B (naive; fine for the expansion-sized matrices this library
+    /// multiplies — the large near-field products go through the PJRT tiles
+    /// or the specialized kernels in `fkt::nearfield`).
+    pub fn gemm(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                let crow = c.row_mut(i);
+                for j in 0..b.cols {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Vector helpers used throughout.
+pub mod vecops {
+    /// Dot product.
+    #[inline]
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0.0;
+        for i in 0..a.len() {
+            acc += a[i] * b[i];
+        }
+        acc
+    }
+
+    /// Euclidean norm.
+    #[inline]
+    pub fn norm2(a: &[f64]) -> f64 {
+        dot(a, a).sqrt()
+    }
+
+    /// y += alpha * x.
+    #[inline]
+    pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        for i in 0..x.len() {
+            y[i] += alpha * x[i];
+        }
+    }
+
+    /// Squared Euclidean distance between points.
+    #[inline]
+    pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0.0;
+        for i in 0..a.len() {
+            let d = a[i] - b[i];
+            acc += d * d;
+        }
+        acc
+    }
+}
+
+/// Result of a conjugate-gradient solve.
+#[derive(Clone, Debug)]
+pub struct CgResult {
+    /// Solution estimate.
+    pub x: Vec<f64>,
+    /// Number of iterations taken.
+    pub iterations: usize,
+    /// Final relative residual ‖b − Ax‖/‖b‖.
+    pub rel_residual: f64,
+    /// Whether the tolerance was reached.
+    pub converged: bool,
+}
+
+/// Conjugate gradients on a symmetric positive-definite operator given as a
+/// matvec closure. This is how the GP posterior mean is computed: `apply` is
+/// the FKT MVM plus the diagonal noise term (paper §5.3, eq. 23).
+pub fn conjugate_gradient(
+    apply: &mut dyn FnMut(&[f64]) -> Vec<f64>,
+    b: &[f64],
+    tol: f64,
+    max_iters: usize,
+) -> CgResult {
+    let n = b.len();
+    let bnorm = vecops::norm2(b);
+    if bnorm == 0.0 {
+        return CgResult { x: vec![0.0; n], iterations: 0, rel_residual: 0.0, converged: true };
+    }
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut rsold = vecops::dot(&r, &r);
+    let mut iters = 0;
+    while iters < max_iters {
+        let ap = apply(&p);
+        let denom = vecops::dot(&p, &ap);
+        if denom.abs() < f64::MIN_POSITIVE {
+            break;
+        }
+        let alpha = rsold / denom;
+        vecops::axpy(alpha, &p, &mut x);
+        vecops::axpy(-alpha, &ap, &mut r);
+        let rsnew = vecops::dot(&r, &r);
+        iters += 1;
+        if rsnew.sqrt() <= tol * bnorm {
+            return CgResult {
+                x,
+                iterations: iters,
+                rel_residual: rsnew.sqrt() / bnorm,
+                converged: true,
+            };
+        }
+        let beta = rsnew / rsold;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rsold = rsnew;
+    }
+    let res = vecops::norm2(&r) / bnorm;
+    CgResult { x, iterations: iters, rel_residual: res, converged: res <= tol }
+}
+
+/// Preconditioned conjugate gradients: solves `A x = b` given `apply`
+/// (the A matvec) and `precond` (an approximate A⁻¹ matvec, e.g. the GP's
+/// leaf-block Jacobi preconditioner). Falls back to plain CG behaviour
+/// when `precond` is the identity.
+pub fn preconditioned_cg(
+    apply: &mut dyn FnMut(&[f64]) -> Vec<f64>,
+    precond: &mut dyn FnMut(&[f64]) -> Vec<f64>,
+    b: &[f64],
+    tol: f64,
+    max_iters: usize,
+) -> CgResult {
+    let n = b.len();
+    let bnorm = vecops::norm2(b);
+    if bnorm == 0.0 {
+        return CgResult { x: vec![0.0; n], iterations: 0, rel_residual: 0.0, converged: true };
+    }
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut zv = precond(&r);
+    let mut p = zv.clone();
+    let mut rz = vecops::dot(&r, &zv);
+    let mut iters = 0;
+    while iters < max_iters {
+        let ap = apply(&p);
+        let denom = vecops::dot(&p, &ap);
+        if denom.abs() < f64::MIN_POSITIVE {
+            break;
+        }
+        let alpha = rz / denom;
+        vecops::axpy(alpha, &p, &mut x);
+        vecops::axpy(-alpha, &ap, &mut r);
+        iters += 1;
+        let rnorm = vecops::norm2(&r);
+        if rnorm <= tol * bnorm {
+            return CgResult { x, iterations: iters, rel_residual: rnorm / bnorm, converged: true };
+        }
+        zv = precond(&r);
+        let rz_new = vecops::dot(&r, &zv);
+        let beta = rz_new / rz;
+        for i in 0..n {
+            p[i] = zv[i] + beta * p[i];
+        }
+        rz = rz_new;
+    }
+    let res = vecops::norm2(&r) / bnorm;
+    CgResult { x, iterations: iters, rel_residual: res, converged: res <= tol }
+}
+
+/// Cholesky factorization A = L Lᵀ (lower triangular), for SPD matrices.
+/// Small-scale exact reference used in GP tests; returns None if not SPD.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve A x = b given the Cholesky factor L (forward/back substitution).
+pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[(i, k)] * y[k];
+        }
+        y[i] = sum / l[(i, i)];
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[(k, i)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    x
+}
+
+/// Exact rank factorization of a rational matrix via fraction-free Gaussian
+/// elimination with full pivoting: returns (rank, L, U) with
+/// `A = L · U`, `L` is m×R, `U` is R×n, all entries exact rationals.
+///
+/// This is the engine of the §A.4 compression: because arithmetic is exact,
+/// the returned rank is the true rank `R_k` of the radial coefficient matrix
+/// (the paper keeps the factorization rational for exactly this reason), and
+/// the factors give the functions `F_{k,i}` (from L) and `G_{k,i}` (from U).
+pub fn rational_rank_factor(
+    a: &[Vec<Rational>],
+) -> (usize, Vec<Vec<Rational>>, Vec<Vec<Rational>>) {
+    let m = a.len();
+    let n = if m == 0 { 0 } else { a[0].len() };
+    let mut work: Vec<Vec<Rational>> = a.to_vec();
+    let mut l: Vec<Vec<Rational>> = vec![Vec::new(); m];
+    let mut u: Vec<Vec<Rational>> = Vec::new();
+    let mut rank = 0;
+    loop {
+        // Find any nonzero pivot (full pivoting for stability is moot in
+        // exact arithmetic; pick the first nonzero for determinism).
+        let mut pivot: Option<(usize, usize)> = None;
+        'outer: for i in 0..m {
+            for j in 0..n {
+                if !work[i][j].is_zero() {
+                    pivot = Some((i, j));
+                    break 'outer;
+                }
+            }
+        }
+        let Some((pi, pj)) = pivot else { break };
+        let pval = work[pi][pj].clone();
+        // Column of L: A[:, pj] / pval at the current residual.
+        for i in 0..m {
+            l[i].push(work[i][pj].div(&pval));
+        }
+        // Row of U: residual row pi.
+        u.push(work[pi].clone());
+        rank += 1;
+        // Residual update: work -= l_col * u_row / 1 (u row already includes pval).
+        let urow = u[rank - 1].clone();
+        for i in 0..m {
+            let li = l[i][rank - 1].clone();
+            if li.is_zero() {
+                continue;
+            }
+            for j in 0..n {
+                if !urow[j].is_zero() {
+                    work[i][j] = work[i][j].sub(&li.mul(&urow[j]));
+                }
+            }
+        }
+    }
+    (rank, l, u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn matvec_and_gemm_agree_with_hand_values() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let x = vec![1.0, 0.0, -1.0];
+        assert_eq!(a.matvec(&x), vec![-2.0, -2.0]);
+        let b = Mat::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let c = a.gemm(&b);
+        assert_eq!(c.data, vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip_and_matvec_t() {
+        let mut rng = Pcg32::seeded(1);
+        let a = Mat::from_vec(4, 3, rng.normal_vec(12));
+        let x = rng.normal_vec(4);
+        let t = a.transpose();
+        let y1 = a.matvec_t(&x);
+        let y2 = t.matvec(&x);
+        for i in 0..3 {
+            assert!((y1[i] - y2[i]).abs() < 1e-14);
+        }
+        assert_eq!(a, t.transpose());
+    }
+
+    #[test]
+    fn cg_solves_spd_system() {
+        let mut rng = Pcg32::seeded(2);
+        let n = 30;
+        // SPD: A = B Bᵀ + n I
+        let b = Mat::from_vec(n, n, rng.normal_vec(n * n));
+        let mut a = b.gemm(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        let xtrue = rng.normal_vec(n);
+        let rhs = a.matvec(&xtrue);
+        let mut apply = |v: &[f64]| a.matvec(v);
+        let res = conjugate_gradient(&mut apply, &rhs, 1e-12, 500);
+        assert!(res.converged, "residual {}", res.rel_residual);
+        for i in 0..n {
+            assert!((res.x[i] - xtrue[i]).abs() < 1e-6, "i={i}");
+        }
+    }
+
+    #[test]
+    fn cg_zero_rhs() {
+        let mut apply = |v: &[f64]| v.to_vec();
+        let res = conjugate_gradient(&mut apply, &[0.0, 0.0], 1e-10, 10);
+        assert!(res.converged);
+        assert_eq!(res.x, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn cholesky_matches_cg() {
+        let mut rng = Pcg32::seeded(3);
+        let n = 12;
+        let b = Mat::from_vec(n, n, rng.normal_vec(n * n));
+        let mut a = b.gemm(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        let l = cholesky(&a).expect("SPD");
+        let rhs = rng.normal_vec(n);
+        let x1 = cholesky_solve(&l, &rhs);
+        let mut apply = |v: &[f64]| a.matvec(v);
+        let x2 = conjugate_gradient(&mut apply, &rhs, 1e-13, 500).x;
+        for i in 0..n {
+            assert!((x1[i] - x2[i]).abs() < 1e-7);
+        }
+        // And L Lᵀ reproduces A.
+        let llt = l.gemm(&l.transpose());
+        for i in 0..n * n {
+            assert!((llt.data[i] - a.data[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn rational_rank_exact_rank_one() {
+        // outer product of [1,2,3] and [4,5] has rank 1.
+        let r = |v: i64| Rational::from_i64(v);
+        let a = vec![
+            vec![r(4), r(5)],
+            vec![r(8), r(10)],
+            vec![r(12), r(15)],
+        ];
+        let (rank, l, u) = rational_rank_factor(&a);
+        assert_eq!(rank, 1);
+        // Check A == L U.
+        for i in 0..3 {
+            for j in 0..2 {
+                let mut acc = Rational::zero();
+                for k in 0..rank {
+                    acc = acc.add(&l[i][k].mul(&u[k][j]));
+                }
+                assert_eq!(acc, a[i][j]);
+            }
+        }
+    }
+
+    #[test]
+    fn rational_rank_detects_near_but_not_exact_dependence() {
+        // Rows [1,2], [2,4+epsilon-as-rational] -> rank 2 exactly.
+        let a = vec![
+            vec![Rational::from_i64(1), Rational::from_i64(2)],
+            vec![Rational::from_i64(2), Rational::ratio(400000001, 100000000)],
+        ];
+        let (rank, _, _) = rational_rank_factor(&a);
+        assert_eq!(rank, 2);
+    }
+
+    #[test]
+    fn rational_rank_randomized_reconstruction() {
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..20 {
+            let m = 2 + rng.below(4);
+            let n = 2 + rng.below(4);
+            let r = 1 + rng.below(2.min(m.min(n)));
+            // A = sum of r rational rank-1 terms.
+            let ri = |rng: &mut Pcg32| Rational::ratio(rng.below(11) as i64 - 5, 1 + rng.below(4) as i64);
+            let mut a = vec![vec![Rational::zero(); n]; m];
+            for _ in 0..r {
+                let u: Vec<Rational> = (0..m).map(|_| ri(&mut rng)).collect();
+                let v: Vec<Rational> = (0..n).map(|_| ri(&mut rng)).collect();
+                for i in 0..m {
+                    for j in 0..n {
+                        a[i][j] = a[i][j].add(&u[i].mul(&v[j]));
+                    }
+                }
+            }
+            let (rank, l, u) = rational_rank_factor(&a);
+            assert!(rank <= r, "rank {rank} > construction {r}");
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = Rational::zero();
+                    for k in 0..rank {
+                        acc = acc.add(&l[i][k].mul(&u[k][j]));
+                    }
+                    assert_eq!(acc, a[i][j], "mismatch at ({i},{j})");
+                }
+            }
+        }
+    }
+}

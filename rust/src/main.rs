@@ -1,0 +1,193 @@
+//! `fkt` — command-line launcher for the Fast Kernel Transform library.
+//!
+//! Subcommands:
+//!   info                     environment/artifact/runtime diagnostics
+//!   mvm    [--n --d --p …]   one fast MVM with accuracy + timing report
+//!   gp     [--n …]           GP regression on the simulated SST workload
+//!   tsne   [--n …]           t-SNE embedding of the MNIST surrogate
+//!   plan   [--n …]           print the far/near plan statistics
+//!
+//! Every experiment from the paper has a dedicated example/bench binary
+//! (see README); this launcher covers interactive use of the same API.
+
+use fkt::baselines::dense_mvm;
+use fkt::benchkit::fmt_time;
+use fkt::cli::Args;
+use fkt::coordinator::{Backend, Coordinator, CoordinatorConfig};
+use fkt::fkt::{FktConfig, FktOperator};
+use fkt::kernels::{Family, Kernel};
+use fkt::points::Points;
+use fkt::rng::Pcg32;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "info" => info(),
+        "mvm" => mvm(&args),
+        "plan" => plan(&args),
+        "gp" => gp(&args),
+        "tsne" => tsne(&args),
+        other => {
+            eprintln!("unknown subcommand {other:?}; see `fkt info`");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn backend_from(args: &Args) -> CoordinatorConfig {
+    let backend = match args.get_str("backend", "auto").as_str() {
+        "native" => Backend::Native,
+        "pjrt" => Backend::Pjrt,
+        _ => Backend::Auto,
+    };
+    CoordinatorConfig { threads: args.get("threads", 0), backend }
+}
+
+fn info() {
+    println!("fkt {} — The Fast Kernel Transform (Ryan, Ament, Gomes, Damle, 2021)", fkt::version());
+    println!("kernels: {}", Family::all().iter().map(|f| f.name()).collect::<Vec<_>>().join(", "));
+    match fkt::runtime::Runtime::open_default() {
+        Some(rt) => {
+            println!("artifacts: {} entries (platform {})", rt.entries().len(), rt.platform());
+            for e in rt.entries() {
+                println!("  {} {} d={} B={} T={}", e.kind, e.family, e.dim, e.batch, e.tile);
+            }
+        }
+        None => println!("artifacts: not built (run `make artifacts`; native fallback active)"),
+    }
+    println!(
+        "threads available: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+}
+
+fn build_op(args: &Args) -> (FktOperator, Vec<f64>, Points, Kernel) {
+    let n: usize = args.get("n", 20000);
+    let d: usize = args.get("d", 3);
+    let p: usize = args.get("p", 4);
+    let theta: f64 = args.get("theta", 0.5);
+    let leaf: usize = args.get("leaf", 512);
+    let seed: u64 = args.get("seed", 1);
+    let family = Family::from_name(&args.get_str("kernel", "matern32")).expect("kernel");
+    let kernel = Kernel::canonical(family);
+    let mut rng = Pcg32::seeded(seed);
+    let pts = if args.get_str("dist", "sphere") == "cube" {
+        fkt::data::uniform_cube(n, d, &mut rng)
+    } else {
+        fkt::data::uniform_hypersphere(n, d, &mut rng)
+    };
+    let w = rng.normal_vec(n);
+    let cfg = FktConfig {
+        p,
+        theta,
+        leaf_capacity: leaf,
+        compression: args.has_flag("compress"),
+        ..Default::default()
+    };
+    let op = FktOperator::square(&pts, kernel, cfg);
+    (op, w, pts, kernel)
+}
+
+fn mvm(args: &Args) {
+    let t0 = Instant::now();
+    let (op, w, pts, kernel) = build_op(args);
+    println!("build: {}", fmt_time(t0.elapsed().as_secs_f64()));
+    let mut coord = Coordinator::new(backend_from(args));
+    let t1 = Instant::now();
+    let z = coord.mvm(&op, &w);
+    println!(
+        "mvm: {} (backend {})",
+        fmt_time(t1.elapsed().as_secs_f64()),
+        if coord.last_metrics.used_pjrt { "pjrt" } else { "native" }
+    );
+    // Spot accuracy on a subsample.
+    let m = pts.len().min(1000);
+    let sub = Points::new(pts.d, pts.coords[..m * pts.d].to_vec());
+    let dense = dense_mvm(&kernel, &pts, &sub, &w);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..m {
+        num += (z[i] - dense[i]) * (z[i] - dense[i]);
+        den += dense[i] * dense[i];
+    }
+    println!("rel l2 error (subsample {m}): {:.3e}", (num / den).sqrt());
+}
+
+fn plan(args: &Args) {
+    let (op, _, _, _) = build_op(args);
+    let stats = op.plan().stats(op.tree());
+    println!("nodes: {}", op.tree().nodes.len());
+    println!("leaves: {}", op.tree().leaves.len());
+    println!("max depth: {}", op.tree().max_depth());
+    println!("multipole terms/node: {}", op.num_terms());
+    println!("far (node,target) pairs: {}", stats.far_pairs);
+    println!("near (leaf,target) pairs: {}", stats.near_pairs);
+    println!("near-field flops (mul-adds): {}", stats.near_flops);
+    println!("largest far set: {}", stats.far_targets_max);
+}
+
+fn gp(args: &Args) {
+    use fkt::data::sst;
+    use fkt::gp::{GpConfig, GpRegressor};
+    let n: usize = args.get("n", 20000);
+    let rho: f64 = args.get("rho", 0.22);
+    let mut rng = Pcg32::seeded(args.get("seed", 17));
+    let ds = sst::simulate(7.0, n, &mut rng);
+    let y = ds.temperatures();
+    let mean_y: f64 = y.iter().sum::<f64>() / y.len() as f64;
+    let y0: Vec<f64> = y.iter().map(|v| v - mean_y).collect();
+    let cfg = GpConfig {
+        fkt: FktConfig {
+            p: args.get("p", 4),
+            theta: args.get("theta", 0.6),
+            leaf_capacity: args.get("leaf", 512),
+            ..Default::default()
+        },
+        cg_tol: args.get("cg-tol", 1e-5),
+        cg_max_iters: args.get("cg-max", 300),
+        jitter: 1e-6,
+        precondition: true,
+    };
+    let gp = GpRegressor::new(ds.unit_sphere_points(), ds.noise_variances(), Kernel::matern32(rho), cfg);
+    let mut coord = Coordinator::new(backend_from(args));
+    let t0 = Instant::now();
+    let fit = gp.fit_alpha(&y0, &mut coord);
+    println!(
+        "CG: {} iters, residual {:.2e}, {}",
+        fit.iterations,
+        fit.rel_residual,
+        fmt_time(t0.elapsed().as_secs_f64())
+    );
+}
+
+fn tsne(args: &Args) {
+    use fkt::tsne::{knn_purity, run, TsneConfig};
+    let n: usize = args.get("n", 5000);
+    let mut rng = Pcg32::seeded(args.get("seed", 11));
+    let (data, labels) = fkt::data::mnist_like(n, args.get("dim", 50), &mut rng);
+    let cfg = TsneConfig {
+        perplexity: args.get("perplexity", 30.0),
+        iterations: args.get("iters", 300),
+        exaggeration_iters: args.get("exag-iters", 100),
+        learning_rate: (n as f64 / 12.0).max(100.0),
+        fkt: FktConfig {
+            p: args.get("p", 3),
+            theta: args.get("theta", 0.6),
+            leaf_capacity: 256,
+            ..Default::default()
+        },
+        exact_repulsion: args.has_flag("exact"),
+        seed: args.get("seed", 11),
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(backend_from(args));
+    let t0 = Instant::now();
+    let res = run(&data, &cfg, &mut coord);
+    println!("t-SNE: {}", fmt_time(t0.elapsed().as_secs_f64()));
+    for (it, kl) in &res.kl_trace {
+        println!("  iter {it:>5}: KL = {kl:.4}");
+    }
+    println!("10-NN purity: {:.3}", knn_purity(&res.embedding, &labels, 10));
+}

@@ -1,0 +1,136 @@
+//! Flat point-cloud container shared by the tree, the FKT operator, the
+//! applications, and the data generators.
+
+/// `n` points in `R^d`, row-major contiguous storage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Points {
+    /// Ambient dimension.
+    pub d: usize,
+    /// Row-major coordinates, length `n*d`.
+    pub coords: Vec<f64>,
+}
+
+impl Points {
+    /// Build from row-major coordinates.
+    pub fn new(d: usize, coords: Vec<f64>) -> Self {
+        assert!(d > 0, "dimension must be positive");
+        assert_eq!(coords.len() % d, 0, "coords length not divisible by d");
+        Points { d, coords }
+    }
+
+    /// Empty set in dimension d.
+    pub fn empty(d: usize) -> Self {
+        Points { d, coords: Vec::new() }
+    }
+
+    /// Number of points.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.coords.len() / self.d
+    }
+
+    /// True when there are no points.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.coords.is_empty()
+    }
+
+    /// The i-th point as a slice.
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.coords[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Mutable access to the i-th point.
+    #[inline]
+    pub fn point_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.coords[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Append a point.
+    pub fn push(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.d);
+        self.coords.extend_from_slice(p);
+    }
+
+    /// Squared distance between stored points i and j.
+    #[inline]
+    pub fn dist2(&self, i: usize, j: usize) -> f64 {
+        crate::linalg::vecops::dist2(self.point(i), self.point(j))
+    }
+
+    /// Scale all coordinates in place (used to fold kernel length-scales
+    /// into the geometry — see `kernels`).
+    pub fn scale(&mut self, s: f64) {
+        for c in &mut self.coords {
+            *c *= s;
+        }
+    }
+
+    /// Scaled copy.
+    pub fn scaled(&self, s: f64) -> Points {
+        let mut out = self.clone();
+        out.scale(s);
+        out
+    }
+
+    /// Axis-aligned bounding box (lo, hi); panics when empty.
+    pub fn bounding_box(&self) -> (Vec<f64>, Vec<f64>) {
+        assert!(!self.is_empty(), "bounding box of empty point set");
+        let mut lo = self.point(0).to_vec();
+        let mut hi = lo.clone();
+        for i in 1..self.len() {
+            let p = self.point(i);
+            for a in 0..self.d {
+                lo[a] = lo[a].min(p[a]);
+                hi[a] = hi[a].max(p[a]);
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Gather a subset by indices.
+    pub fn gather(&self, idx: &[usize]) -> Points {
+        let mut out = Points::empty(self.d);
+        out.coords.reserve(idx.len() * self.d);
+        for &i in idx {
+            out.coords.extend_from_slice(self.point(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_accessors() {
+        let p = Points::new(2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.point(1), &[2.0, 3.0]);
+        assert!((p.dist2(0, 2) - (16.0 + 16.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn bounding_box_and_gather() {
+        let p = Points::new(2, vec![1.0, -1.0, -2.0, 5.0, 0.0, 0.0]);
+        let (lo, hi) = p.bounding_box();
+        assert_eq!(lo, vec![-2.0, -1.0]);
+        assert_eq!(hi, vec![1.0, 5.0]);
+        let g = p.gather(&[2, 0]);
+        assert_eq!(g.coords, vec![0.0, 0.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn scale_folds_lengthscale() {
+        let p = Points::new(1, vec![1.0, 2.0]).scaled(3.0);
+        assert_eq!(p.coords, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_dims_panic() {
+        Points::new(3, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,223 @@
+//! PJRT runtime — loads and executes the AOT artifacts.
+//!
+//! `make artifacts` lowers the L2/L1 graphs to HLO **text** once; this
+//! module is the only place the rust binary touches XLA: parse the text
+//! (`HloModuleProto::from_text_file`, which reassigns instruction ids and
+//! therefore accepts jax ≥ 0.5 output that the 0.5.1 proto path rejects),
+//! compile each module once on the PJRT CPU client, and execute from the
+//! coordinator's hot path. Python never runs at request time.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact entry from `artifacts/manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    /// "near_batch" or "dense_chunk".
+    pub kind: String,
+    /// Kernel family name (matches `kernels::Family::name`).
+    pub family: String,
+    /// Ambient dimension the artifact was compiled for.
+    pub dim: usize,
+    /// Batch size (near_batch only).
+    pub batch: usize,
+    /// Tile size (near_batch) / target chunk (dense_chunk).
+    pub tile: usize,
+    /// Source block size (dense_chunk only).
+    pub n_src: usize,
+    /// HLO text file name within the artifact dir.
+    pub file: String,
+}
+
+/// Compiled near-batch executable with its shape metadata.
+pub struct NearBatchExec {
+    exe: xla::PjRtLoadedExecutable,
+    /// Batch size B.
+    pub batch: usize,
+    /// Tile size T.
+    pub tile: usize,
+    /// Dimension d.
+    pub dim: usize,
+}
+
+impl NearBatchExec {
+    /// Execute one batch: x (B,T,d), w (B,T), y (B,T,d) as flat f32 slices;
+    /// returns z (B,T) flat.
+    pub fn execute(&self, x: &[f32], w: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        let b = self.batch as i64;
+        let t = self.tile as i64;
+        let d = self.dim as i64;
+        assert_eq!(x.len(), (b * t * d) as usize);
+        assert_eq!(w.len(), (b * t) as usize);
+        assert_eq!(y.len(), (b * t * d) as usize);
+        let lx = xla::Literal::vec1(x).reshape(&[b, t, d])?;
+        let lw = xla::Literal::vec1(w).reshape(&[b, t])?;
+        let ly = xla::Literal::vec1(y).reshape(&[b, t, d])?;
+        let result = self.exe.execute::<xla::Literal>(&[lx, lw, ly])?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+}
+
+/// The artifact runtime: a PJRT CPU client plus compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    entries: Vec<ManifestEntry>,
+    near_cache: HashMap<(String, usize), NearBatchExec>,
+}
+
+impl Runtime {
+    /// Open the artifact directory; does not compile anything yet.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?} — run `make artifacts`"))?;
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 7 {
+                continue;
+            }
+            entries.push(ManifestEntry {
+                kind: parts[0].to_string(),
+                family: parts[1].to_string(),
+                dim: parts[2].parse()?,
+                batch: parts[3].parse()?,
+                tile: parts[4].parse()?,
+                n_src: parts[5].parse()?,
+                file: parts[6].to_string(),
+            });
+        }
+        if entries.is_empty() {
+            return Err(anyhow!("empty manifest at {manifest:?}"));
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { client, dir, entries, near_cache: HashMap::new() })
+    }
+
+    /// Default artifact location relative to the repo root, honoring
+    /// `FKT_ARTIFACTS` when set.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("FKT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Try to open the default artifact dir; `None` (with no error) when
+    /// artifacts have not been built — callers fall back to native compute.
+    pub fn open_default() -> Option<Runtime> {
+        Runtime::open(Self::default_dir()).ok()
+    }
+
+    /// Manifest entries.
+    pub fn entries(&self) -> &[ManifestEntry] {
+        &self.entries
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
+    }
+
+    /// Get (compiling and caching on first use) the near-batch executable
+    /// for a kernel family and dimension.
+    pub fn near_batch(&mut self, family: &str, dim: usize) -> Result<&NearBatchExec> {
+        let key = (family.to_string(), dim);
+        if !self.near_cache.contains_key(&key) {
+            let entry = self
+                .entries
+                .iter()
+                .find(|e| e.kind == "near_batch" && e.family == family && e.dim == dim)
+                .ok_or_else(|| {
+                    anyhow!("no near_batch artifact for family={family} d={dim}")
+                })?
+                .clone();
+            let exe = self.compile(&entry.file)?;
+            self.near_cache.insert(
+                key.clone(),
+                NearBatchExec { exe, batch: entry.batch, tile: entry.tile, dim: entry.dim },
+            );
+        }
+        Ok(&self.near_cache[&key])
+    }
+
+    /// Whether an artifact exists for (family, dim).
+    pub fn has_near_batch(&self, family: &str, dim: usize) -> bool {
+        self.entries
+            .iter()
+            .any(|e| e.kind == "near_batch" && e.family == family && e.dim == dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        // Tests run from the repo root; skip gracefully when artifacts are
+        // absent (e.g. fresh checkout before `make artifacts`).
+        Runtime::open_default()
+    }
+
+    #[test]
+    fn manifest_parses_when_present() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(!rt.entries().is_empty());
+        assert!(rt.entries().iter().any(|e| e.kind == "near_batch"));
+        assert!(rt.has_near_batch("cauchy", 2));
+    }
+
+    #[test]
+    fn near_batch_executes_and_matches_native() {
+        let Some(mut rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let exe = rt.near_batch("cauchy", 2).expect("compile cauchy d2");
+        let (b, t, d) = (exe.batch, exe.tile, exe.dim);
+        let mut rng = crate::rng::Pcg32::seeded(7);
+        let x: Vec<f32> = (0..b * t * d).map(|_| rng.uniform() as f32).collect();
+        let w: Vec<f32> = (0..b * t).map(|_| rng.uniform() as f32 - 0.5).collect();
+        let y: Vec<f32> = (0..b * t * d).map(|_| rng.uniform() as f32).collect();
+        let z = exe.execute(&x, &w, &y).expect("execute");
+        assert_eq!(z.len(), b * t);
+        // Native f64 comparison on the first tile.
+        let xf: Vec<f64> = x[..t * d].iter().map(|&v| v as f64).collect();
+        let wf: Vec<f64> = w[..t].iter().map(|&v| v as f64).collect();
+        let yf: Vec<f64> = y[..t * d].iter().map(|&v| v as f64).collect();
+        let mut out = vec![0.0f64; t];
+        crate::fkt::nearfield::block_mvm(
+            crate::kernels::Family::Cauchy,
+            d,
+            &xf,
+            &wf,
+            &yf,
+            &mut out,
+        );
+        for i in 0..t {
+            assert!(
+                (z[i] as f64 - out[i]).abs() < 1e-4 * (1.0 + out[i].abs()),
+                "tile mismatch at {i}: {} vs {}",
+                z[i],
+                out[i]
+            );
+        }
+    }
+}

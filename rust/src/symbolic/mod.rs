@@ -1,0 +1,348 @@
+//! Symbolic Laurent polynomials over exact rationals.
+//!
+//! The §A.4 compression applies to kernels satisfying `K'(r) = q(r) K(r)`
+//! with `q` a Laurent polynomial — equivalently `K(r) = L(r)·exp(s(r))` with
+//! `L`, `s` Laurent. Differentiating such kernels symbolically keeps every
+//! coefficient rational, which is what makes the rank-revealing QR of the
+//! radial coefficient matrix *exact* and the recovered ranks `R_k`
+//! certificates rather than numerical guesses (paper Tables 2 & 3).
+
+use crate::exact::Rational;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Laurent polynomial `Σ_e c_e r^e`, exponents possibly negative.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Laurent {
+    /// exponent → nonzero coefficient.
+    terms: BTreeMap<i64, Rational>,
+}
+
+impl Laurent {
+    /// The zero polynomial.
+    pub fn zero() -> Self {
+        Laurent { terms: BTreeMap::new() }
+    }
+
+    /// The constant 1.
+    pub fn one() -> Self {
+        Laurent::monomial(Rational::one(), 0)
+    }
+
+    /// `c · r^e`.
+    pub fn monomial(c: Rational, e: i64) -> Self {
+        let mut terms = BTreeMap::new();
+        if !c.is_zero() {
+            terms.insert(e, c);
+        }
+        Laurent { terms }
+    }
+
+    /// Build from (coefficient, exponent) pairs.
+    pub fn from_terms(pairs: &[(Rational, i64)]) -> Self {
+        let mut out = Laurent::zero();
+        for (c, e) in pairs {
+            out.add_term(c.clone(), *e);
+        }
+        out
+    }
+
+    /// In-place add of a single term.
+    pub fn add_term(&mut self, c: Rational, e: i64) {
+        if c.is_zero() {
+            return;
+        }
+        let entry = self.terms.entry(e).or_insert_with(Rational::zero);
+        *entry = entry.add(&c);
+        if entry.is_zero() {
+            self.terms.remove(&e);
+        }
+    }
+
+    /// True iff identically zero.
+    pub fn is_zero(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// Number of nonzero terms.
+    pub fn num_terms(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// Iterate (exponent, coefficient), ascending exponent.
+    pub fn iter(&self) -> impl Iterator<Item = (i64, &Rational)> {
+        self.terms.iter().map(|(&e, c)| (e, c))
+    }
+
+    /// Lowest exponent present (None if zero).
+    pub fn min_exponent(&self) -> Option<i64> {
+        self.terms.keys().next().copied()
+    }
+
+    /// Highest exponent present (None if zero).
+    pub fn max_exponent(&self) -> Option<i64> {
+        self.terms.keys().next_back().copied()
+    }
+
+    /// Coefficient of `r^e` (zero if absent).
+    pub fn coeff(&self, e: i64) -> Rational {
+        self.terms.get(&e).cloned().unwrap_or_else(Rational::zero)
+    }
+
+    /// Sum.
+    pub fn add(&self, other: &Self) -> Self {
+        let mut out = self.clone();
+        for (&e, c) in &other.terms {
+            out.add_term(c.clone(), e);
+        }
+        out
+    }
+
+    /// Difference.
+    pub fn sub(&self, other: &Self) -> Self {
+        let mut out = self.clone();
+        for (&e, c) in &other.terms {
+            out.add_term(c.neg(), e);
+        }
+        out
+    }
+
+    /// Product.
+    pub fn mul(&self, other: &Self) -> Self {
+        let mut out = Laurent::zero();
+        for (&e1, c1) in &self.terms {
+            for (&e2, c2) in &other.terms {
+                out.add_term(c1.mul(c2), e1 + e2);
+            }
+        }
+        out
+    }
+
+    /// Scale by a rational constant.
+    pub fn scale(&self, s: &Rational) -> Self {
+        if s.is_zero() {
+            return Laurent::zero();
+        }
+        Laurent {
+            terms: self.terms.iter().map(|(&e, c)| (e, c.mul(s))).collect(),
+        }
+    }
+
+    /// Multiply by `r^e`.
+    pub fn shift(&self, e: i64) -> Self {
+        Laurent {
+            terms: self.terms.iter().map(|(&ex, c)| (ex + e, c.clone())).collect(),
+        }
+    }
+
+    /// Formal derivative d/dr.
+    pub fn derivative(&self) -> Self {
+        let mut out = Laurent::zero();
+        for (&e, c) in &self.terms {
+            if e != 0 {
+                out.add_term(c.mul(&Rational::from_i64(e)), e - 1);
+            }
+        }
+        out
+    }
+
+    /// Evaluate at a positive real r.
+    pub fn eval(&self, r: f64) -> f64 {
+        let mut acc = 0.0;
+        for (&e, c) in &self.terms {
+            acc += c.to_f64() * r.powi(e as i32);
+        }
+        acc
+    }
+
+    /// Evaluate using precomputed powers (see [`Laurent::eval`]); powers maps
+    /// exponent e → r^e for every exponent present.
+    pub fn eval_with(&self, pow: impl Fn(i64) -> f64) -> f64 {
+        let mut acc = 0.0;
+        for (&e, c) in &self.terms {
+            acc += c.to_f64() * pow(e);
+        }
+        acc
+    }
+}
+
+impl fmt::Display for Laurent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_zero() {
+            return write!(f, "0");
+        }
+        let mut first = true;
+        // Print descending exponent, like the paper's Table 3.
+        for (&e, c) in self.terms.iter().rev() {
+            let neg = c.is_negative();
+            let mag = c.abs();
+            if first {
+                if neg {
+                    write!(f, "-")?;
+                }
+                first = false;
+            } else if neg {
+                write!(f, " - ")?;
+            } else {
+                write!(f, " + ")?;
+            }
+            let coeff_is_one = mag == Rational::one();
+            match (e, coeff_is_one) {
+                (0, _) => write!(f, "{mag}")?,
+                (1, true) => write!(f, "r")?,
+                (1, false) => write!(f, "{mag}*r")?,
+                (_, true) => write!(f, "r^{e}")?,
+                (_, false) => write!(f, "{mag}*r^{e}")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A function of the form `L(r) · exp(s(r))` with `L`, `s` Laurent.
+///
+/// Closed under differentiation: `(L e^s)' = (L' + L s') e^s`. This is the
+/// symbolic representation used by the §A.4 compression path; the class
+/// covers `1/r^a`, `e^{-r}`, `r e^{-r}`, `e^{-r}/r`, `e^{-r²}` (Gaussian),
+/// `e^{-1/r}`, `e^{-1/r²}`, and all Matérn half-integer kernels.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExpPoly {
+    /// The Laurent prefactor `L(r)`.
+    pub prefactor: Laurent,
+    /// The Laurent exponent `s(r)`.
+    pub exponent: Laurent,
+}
+
+impl ExpPoly {
+    /// Build `L(r)·exp(s(r))`.
+    pub fn new(prefactor: Laurent, exponent: Laurent) -> Self {
+        ExpPoly { prefactor, exponent }
+    }
+
+    /// Derivative: `(L' + L·s') e^s`.
+    pub fn derivative(&self) -> Self {
+        ExpPoly {
+            prefactor: self
+                .prefactor
+                .derivative()
+                .add(&self.prefactor.mul(&self.exponent.derivative())),
+            exponent: self.exponent.clone(),
+        }
+    }
+
+    /// All derivatives 0..=m as ExpPoly (shared exponent).
+    pub fn derivatives(&self, m: usize) -> Vec<Self> {
+        let mut out = Vec::with_capacity(m + 1);
+        out.push(self.clone());
+        for i in 0..m {
+            let next = out[i].derivative();
+            out.push(next);
+        }
+        out
+    }
+
+    /// Evaluate at r > 0.
+    pub fn eval(&self, r: f64) -> f64 {
+        self.prefactor.eval(r) * self.exponent.eval(r).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(a: i64, b: i64) -> Rational {
+        Rational::ratio(a, b)
+    }
+
+    #[test]
+    fn construction_cancels_zero_terms() {
+        let mut p = Laurent::monomial(r(1, 1), 2);
+        p.add_term(r(-1, 1), 2);
+        assert!(p.is_zero());
+    }
+
+    #[test]
+    fn polynomial_product() {
+        // (r + 1)(r - 1) = r^2 - 1
+        let a = Laurent::from_terms(&[(r(1, 1), 1), (r(1, 1), 0)]);
+        let b = Laurent::from_terms(&[(r(1, 1), 1), (r(-1, 1), 0)]);
+        let p = a.mul(&b);
+        assert_eq!(p.coeff(2), r(1, 1));
+        assert_eq!(p.coeff(0), r(-1, 1));
+        assert_eq!(p.coeff(1), Rational::zero());
+        assert_eq!(p.num_terms(), 2);
+    }
+
+    #[test]
+    fn laurent_negative_exponents() {
+        // (1/r)(1/r) = 1/r^2, and derivative d/dr r^{-2} = -2 r^{-3}
+        let invr = Laurent::monomial(r(1, 1), -1);
+        let p = invr.mul(&invr);
+        assert_eq!(p.coeff(-2), r(1, 1));
+        let d = p.derivative();
+        assert_eq!(d.coeff(-3), r(-2, 1));
+    }
+
+    #[test]
+    fn derivative_of_constant_is_zero() {
+        assert!(Laurent::one().derivative().is_zero());
+    }
+
+    #[test]
+    fn eval_matches_f64_poly() {
+        // p(r) = 3r^2 - 1/2 r^{-1} + 4
+        let p = Laurent::from_terms(&[(r(3, 1), 2), (r(-1, 2), -1), (r(4, 1), 0)]);
+        let x = 1.7;
+        let expect = 3.0 * x * x - 0.5 / x + 4.0;
+        assert!((p.eval(x) - expect).abs() < 1e-14);
+    }
+
+    #[test]
+    fn exp_poly_derivatives_of_exponential_kernel() {
+        // K = e^{-r}: K^(m) = (-1)^m e^{-r}
+        let k = ExpPoly::new(Laurent::one(), Laurent::monomial(r(-1, 1), 1));
+        let ds = k.derivatives(5);
+        for (m, d) in ds.iter().enumerate() {
+            let sign = if m % 2 == 0 { r(1, 1) } else { r(-1, 1) };
+            assert_eq!(d.prefactor, Laurent::monomial(sign, 0), "m={m}");
+        }
+    }
+
+    #[test]
+    fn exp_poly_derivative_matches_jet() {
+        // K = r e^{-2r}; check derivatives against jets numerically.
+        let k = ExpPoly::new(
+            Laurent::monomial(r(1, 1), 1),
+            Laurent::monomial(r(-2, 1), 1),
+        );
+        let order = 6;
+        let r0 = 0.9;
+        let x = crate::jet::Jet::variable(r0, order);
+        let jet = x.mul(&x.scale(-2.0).exp());
+        let ds = k.derivatives(order);
+        for m in 0..=order {
+            let sym = ds[m].eval(r0);
+            let num = jet.derivative(m);
+            let scale = 1.0f64.max(num.abs());
+            assert!((sym - num).abs() < 1e-10 * scale, "m={m}: {sym} vs {num}");
+        }
+    }
+
+    #[test]
+    fn exp_poly_gaussian_and_inverse_exponent() {
+        // K = e^{-r^2}: K' = -2r e^{-r^2};  K = e^{-1/r}: K' = (1/r^2) e^{-1/r}
+        let gauss = ExpPoly::new(Laurent::one(), Laurent::monomial(r(-1, 1), 2));
+        let d = gauss.derivative();
+        assert_eq!(d.prefactor, Laurent::monomial(r(-2, 1), 1));
+        let invexp = ExpPoly::new(Laurent::one(), Laurent::monomial(r(-1, 1), -1));
+        let d2 = invexp.derivative();
+        assert_eq!(d2.prefactor, Laurent::monomial(r(1, 1), -2));
+    }
+
+    #[test]
+    fn display_is_readable() {
+        let p = Laurent::from_terms(&[(r(1, 3), 3), (r(-1, 1), 1), (r(1, 1), 0)]);
+        assert_eq!(p.to_string(), "1/3*r^3 - r + 1");
+    }
+}

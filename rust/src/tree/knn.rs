@@ -1,0 +1,172 @@
+//! Best-first k-nearest-neighbour search on the BSP tree.
+//!
+//! Fills the role NearestNeighbors.jl plays in the paper's implementation:
+//! t-SNE's perplexity calibration needs the `3·perplexity` nearest
+//! neighbours of every input point. The search descends the tree
+//! best-first, pruning nodes whose box distance exceeds the current k-th
+//! best, which is `O(log N)` per query on reasonably distributed data.
+
+use super::Tree;
+use crate::linalg::vecops;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Max-heap entry for the running k-best set.
+#[derive(PartialEq)]
+struct Best {
+    dist2: f64,
+    idx: usize,
+}
+impl Eq for Best {}
+impl PartialOrd for Best {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Best {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.dist2.partial_cmp(&other.dist2).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Min-heap entry (via reversed ordering) for the node frontier.
+#[derive(PartialEq)]
+struct Frontier {
+    dist2: f64,
+    node: usize,
+}
+impl Eq for Frontier {}
+impl PartialOrd for Frontier {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Frontier {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: smallest distance first.
+        other
+            .dist2
+            .partial_cmp(&self.dist2)
+            .unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Find the k nearest neighbours of `query` among the tree's points.
+/// Returns (original index, distance) pairs sorted by increasing distance.
+/// `exclude` (an original index) is skipped — pass the query's own index
+/// for self-excluding neighbourhoods, or `usize::MAX` for none.
+pub fn knn(tree: &Tree, query: &[f64], k: usize, exclude: usize) -> Vec<(usize, f64)> {
+    assert_eq!(query.len(), tree.d);
+    let mut best: BinaryHeap<Best> = BinaryHeap::with_capacity(k + 1);
+    let mut frontier: BinaryHeap<Frontier> = BinaryHeap::new();
+    frontier.push(Frontier { dist2: tree.box_dist2(0, query), node: 0 });
+    while let Some(Frontier { dist2, node }) = frontier.pop() {
+        if best.len() == k && dist2 > best.peek().unwrap().dist2 {
+            break; // every remaining node is further than the k-th best
+        }
+        let nd = &tree.nodes[node];
+        match nd.children {
+            Some((l, r)) => {
+                frontier.push(Frontier { dist2: tree.box_dist2(l, query), node: l });
+                frontier.push(Frontier { dist2: tree.box_dist2(r, query), node: r });
+            }
+            None => {
+                for i in nd.start..nd.end {
+                    let orig = tree.perm[i];
+                    if orig == exclude {
+                        continue;
+                    }
+                    let d2 = vecops::dist2(tree.points.point(i), query);
+                    if best.len() < k {
+                        best.push(Best { dist2: d2, idx: orig });
+                    } else if d2 < best.peek().unwrap().dist2 {
+                        best.pop();
+                        best.push(Best { dist2: d2, idx: orig });
+                    }
+                }
+            }
+        }
+    }
+    let mut out: Vec<(usize, f64)> = best
+        .into_iter()
+        .map(|b| (b.idx, b.dist2.sqrt()))
+        .collect();
+    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::points::Points;
+    use crate::rng::Pcg32;
+
+    fn brute_knn(pts: &Points, q: &[f64], k: usize, exclude: usize) -> Vec<(usize, f64)> {
+        let mut all: Vec<(usize, f64)> = (0..pts.len())
+            .filter(|&i| i != exclude)
+            .map(|i| (i, vecops::dist2(pts.point(i), q).sqrt()))
+            .collect();
+        all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn knn_matches_brute_force() {
+        let mut rng = Pcg32::seeded(31);
+        for d in [2usize, 3, 6] {
+            let n = 400;
+            let pts = Points::new(d, rng.uniform_vec(n * d, 0.0, 1.0));
+            let tree = Tree::build(&pts, 16);
+            for qi in [0usize, 17, 399] {
+                let q = pts.point(qi).to_vec();
+                let fast = knn(&tree, &q, 10, qi);
+                let slow = brute_knn(&pts, &q, 10, qi);
+                assert_eq!(fast.len(), 10);
+                for (f, s) in fast.iter().zip(&slow) {
+                    // Distances must agree; indices may differ under ties.
+                    assert!((f.1 - s.1).abs() < 1e-12, "d={d} qi={qi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn knn_without_exclusion_includes_self() {
+        let mut rng = Pcg32::seeded(32);
+        let pts = Points::new(2, rng.uniform_vec(100 * 2, 0.0, 1.0));
+        let tree = Tree::build(&pts, 8);
+        let q = pts.point(5).to_vec();
+        let res = knn(&tree, &q, 3, usize::MAX);
+        assert_eq!(res[0].0, 5);
+        assert!(res[0].1 < 1e-15);
+    }
+
+    #[test]
+    fn knn_k_larger_than_n() {
+        let mut rng = Pcg32::seeded(33);
+        let pts = Points::new(2, rng.uniform_vec(5 * 2, 0.0, 1.0));
+        let tree = Tree::build(&pts, 2);
+        let res = knn(&tree, pts.point(0), 10, 0);
+        assert_eq!(res.len(), 4);
+    }
+
+    #[test]
+    fn knn_on_clustered_data() {
+        // Points in two clusters; neighbours of a cluster point must come
+        // from the same cluster.
+        let mut rng = Pcg32::seeded(34);
+        let mut coords = Vec::new();
+        for i in 0..200 {
+            let base = if i < 100 { 0.0 } else { 50.0 };
+            coords.push(base + rng.normal() * 0.1);
+            coords.push(base + rng.normal() * 0.1);
+        }
+        let pts = Points::new(2, coords);
+        let tree = Tree::build(&pts, 10);
+        let res = knn(&tree, pts.point(3), 20, 3);
+        for (idx, _) in res {
+            assert!(idx < 100, "neighbour from wrong cluster");
+        }
+    }
+}

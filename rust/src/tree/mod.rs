@@ -1,0 +1,560 @@
+//! Binary space partitioning per paper §3.1, the far/near interaction plan
+//! per eq. (2), and a best-first k-nearest-neighbour search (the
+//! NearestNeighbors.jl role, needed by t-SNE's perplexity calibration).
+//!
+//! The decomposition starts from a hypercube root and repeatedly splits the
+//! longest axis, placing the hyperplane at the point median *clamped* to the
+//! window that keeps every child's aspect ratio (max side / min side) at or
+//! below two — the paper's constraints (a)–(c). Nodes with at most
+//! `leaf_capacity` points become leaves.
+
+pub mod knn;
+pub mod plan;
+
+pub use knn::knn;
+pub use plan::{FarFieldPlan, NodeInteraction};
+
+use crate::points::Points;
+
+/// A node of the BSP tree.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Hyperrectangle lower corner.
+    pub lo: Vec<f64>,
+    /// Hyperrectangle upper corner.
+    pub hi: Vec<f64>,
+    /// Expansion center (hyperrectangle center).
+    pub center: Vec<f64>,
+    /// Max distance from `center` to a *contained point* (the `max_{r'∈node}`
+    /// of paper eq. 2, taken over the points actually present).
+    pub radius: f64,
+    /// Start of this node's range in the permuted order.
+    pub start: usize,
+    /// One-past-end of the range.
+    pub end: usize,
+    /// Child node ids (left, right); None for leaves.
+    pub children: Option<(usize, usize)>,
+    /// Parent node id; None for the root.
+    pub parent: Option<usize>,
+    /// Depth (root = 0).
+    pub depth: usize,
+}
+
+impl Node {
+    /// Number of points contained.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Whether the node holds no points.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    /// Whether the node is a leaf.
+    #[inline]
+    pub fn is_leaf(&self) -> bool {
+        self.children.is_none()
+    }
+
+    /// Aspect ratio: longest side / shortest side.
+    pub fn aspect_ratio(&self) -> f64 {
+        let mut smin = f64::INFINITY;
+        let mut smax = 0.0f64;
+        for a in 0..self.lo.len() {
+            let s = self.hi[a] - self.lo[a];
+            smin = smin.min(s);
+            smax = smax.max(s);
+        }
+        if smin <= 0.0 {
+            f64::INFINITY
+        } else {
+            smax / smin
+        }
+    }
+}
+
+/// BSP tree over a point set.
+///
+/// Points are permuted so every node's points are contiguous; `perm[i]`
+/// gives the original index of the point at tree position `i`.
+#[derive(Clone, Debug)]
+pub struct Tree {
+    /// Ambient dimension.
+    pub d: usize,
+    /// All nodes; `nodes[0]` is the root, children always after parents.
+    pub nodes: Vec<Node>,
+    /// Permutation from tree position to original index.
+    pub perm: Vec<usize>,
+    /// Permuted copy of the points (contiguous per node, cache friendly).
+    pub points: Points,
+    /// Leaf node ids in order.
+    pub leaves: Vec<usize>,
+    /// Maximum points per leaf used at build time.
+    pub leaf_capacity: usize,
+}
+
+/// Aspect-ratio bound from paper §3.1 ("keep the aspect ratio below two").
+const MAX_ASPECT: f64 = 2.0;
+
+impl Tree {
+    /// Build the §3.1 decomposition with the given leaf capacity.
+    pub fn build(points: &Points, leaf_capacity: usize) -> Tree {
+        assert!(leaf_capacity >= 1);
+        assert!(!points.is_empty(), "cannot build tree over empty set");
+        let n = points.len();
+        let d = points.d;
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut pts = points.clone();
+        // Root: bounding box inflated to a hypercube (plus epsilon so points
+        // on the boundary stay strictly inside).
+        let (mut lo, mut hi) = points.bounding_box();
+        let side = (0..d)
+            .map(|a| hi[a] - lo[a])
+            .fold(0.0f64, f64::max)
+            .max(1e-12);
+        for a in 0..d {
+            let mid = 0.5 * (lo[a] + hi[a]);
+            lo[a] = mid - 0.55 * side;
+            hi[a] = mid + 0.55 * side;
+        }
+        let mut tree = Tree {
+            d,
+            nodes: Vec::new(),
+            perm: Vec::new(),
+            points: Points::empty(d),
+            leaves: Vec::new(),
+            leaf_capacity,
+        };
+        let root = tree.push_node(lo, hi, 0, n, None, 0, &pts, &perm);
+        let mut stack = vec![root];
+        while let Some(id) = stack.pop() {
+            if tree.nodes[id].len() <= leaf_capacity {
+                tree.leaves.push(id);
+                continue;
+            }
+            match tree.split_node(id, &mut pts, &mut perm) {
+                Some((l, r)) => {
+                    // Push right first so left is processed first (stable
+                    // ordering: leaves end up in left-to-right order).
+                    stack.push(r);
+                    stack.push(l);
+                }
+                None => tree.leaves.push(id),
+            }
+        }
+        tree.perm = perm;
+        tree.points = pts;
+        tree
+    }
+
+    fn push_node(
+        &mut self,
+        lo: Vec<f64>,
+        hi: Vec<f64>,
+        start: usize,
+        end: usize,
+        parent: Option<usize>,
+        depth: usize,
+        pts: &Points,
+        _perm: &[usize],
+    ) -> usize {
+        let d = self.d;
+        let center: Vec<f64> = (0..d).map(|a| 0.5 * (lo[a] + hi[a])).collect();
+        let mut radius2 = 0.0f64;
+        for i in start..end {
+            let p = pts.point(i);
+            let mut acc = 0.0;
+            for a in 0..d {
+                let t = p[a] - center[a];
+                acc += t * t;
+            }
+            radius2 = radius2.max(acc);
+        }
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            lo,
+            hi,
+            center,
+            radius: radius2.sqrt(),
+            start,
+            end,
+            children: None,
+            parent,
+            depth,
+        });
+        id
+    }
+
+    /// Split a node per §3.1; returns child ids, or None if unsplittable
+    /// (all points coincident).
+    ///
+    /// Before splitting, the box is shrink-wrapped to the points' bounding
+    /// box and re-inflated just enough to keep its own aspect ratio ≤ 2.
+    /// With that normalization the aspect-window below always straddles the
+    /// point median's axis range, so both children are provably non-empty
+    /// and satisfy the aspect bound — no fallback paths needed.
+    fn split_node(
+        &mut self,
+        id: usize,
+        pts: &mut Points,
+        perm: &mut [usize],
+    ) -> Option<(usize, usize)> {
+        let d = self.d;
+        let (start, end, depth) = {
+            let n = &self.nodes[id];
+            (n.start, n.end, n.depth)
+        };
+        // Shrink-wrap: bounding box of the node's points.
+        let mut blo = pts.point(start).to_vec();
+        let mut bhi = blo.clone();
+        for i in start + 1..end {
+            let p = pts.point(i);
+            for a in 0..d {
+                blo[a] = blo[a].min(p[a]);
+                bhi[a] = bhi[a].max(p[a]);
+            }
+        }
+        let smax = (0..d).map(|a| bhi[a] - blo[a]).fold(0.0f64, f64::max);
+        if smax <= 0.0 {
+            return None; // all points coincident: leaf
+        }
+        // Re-inflate thin axes so the wrapped box has aspect ≤ 2.
+        for a in 0..d {
+            let s = bhi[a] - blo[a];
+            if s < smax / MAX_ASPECT {
+                let mid = 0.5 * (blo[a] + bhi[a]);
+                blo[a] = mid - 0.5 * smax / MAX_ASPECT;
+                bhi[a] = mid + 0.5 * smax / MAX_ASPECT;
+            }
+        }
+        // Update this node's box to the wrapped one (tighter expansion
+        // centers and radii; children need not tile the parent box).
+        {
+            let node = &mut self.nodes[id];
+            node.lo = blo.clone();
+            node.hi = bhi.clone();
+            node.center = (0..d).map(|a| 0.5 * (blo[a] + bhi[a])).collect();
+            let mut r2 = 0.0f64;
+            for i in start..end {
+                let p = pts.point(i);
+                let mut acc = 0.0;
+                for a in 0..d {
+                    let t = p[a] - node.center[a];
+                    acc += t * t;
+                }
+                r2 = r2.max(acc);
+            }
+            node.radius = r2.sqrt();
+        }
+        // Longest axis of the wrapped box (its point spread equals the side).
+        let (axis, side) = (0..d)
+            .map(|a| (a, bhi[a] - blo[a]))
+            .fold((0, -1.0), |best, cur| if cur.1 > best.1 { cur } else { best });
+        let lo_a = blo[axis];
+        // Aspect window for the hyperplane offset t from lo_a.
+        let mut other_min = f64::INFINITY;
+        let mut other_max = 0.0f64;
+        for a in 0..d {
+            if a == axis {
+                continue;
+            }
+            let s = bhi[a] - blo[a];
+            other_min = other_min.min(s);
+            other_max = other_max.max(s);
+        }
+        let (w_lo, w_hi) = if d == 1 {
+            (0.0, side)
+        } else {
+            (
+                (other_max / MAX_ASPECT).max(side - MAX_ASPECT * other_min),
+                (MAX_ASPECT * other_min).min(side - other_max / MAX_ASPECT),
+            )
+        };
+        debug_assert!(w_lo <= w_hi + 1e-12, "infeasible aspect window");
+        // Median of point coordinates along the axis, clamped to the window.
+        let mut coords: Vec<f64> = (start..end).map(|i| pts.point(i)[axis]).collect();
+        coords.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = coords[coords.len() / 2];
+        let eps = 1e-9 * side;
+        let t = (median - lo_a).clamp((w_lo + eps).min(w_hi), w_hi.max(w_lo + eps));
+        let plane = lo_a + t;
+        // Partition [start,end) by coordinate < plane. Points at the wrapped
+        // box's extremes guarantee both sides are non-empty (plane strictly
+        // inside the point spread), except for pathological float ties —
+        // handle those by a midpoint fallback.
+        let mut mid = partition_points(pts, perm, start, end, axis, plane);
+        if mid == start || mid == end {
+            let plane2 = 0.5 * (coords[0] + *coords.last().unwrap());
+            mid = partition_points(pts, perm, start, end, axis, plane2);
+            if mid == start || mid == end {
+                return None;
+            }
+            let (l, r) = self.make_children(id, start, mid, end, depth, pts, perm);
+            return Some((l, r));
+        }
+        let (l, r) = self.make_children(id, start, mid, end, depth, pts, perm);
+        Some((l, r))
+    }
+
+    fn make_children(
+        &mut self,
+        id: usize,
+        start: usize,
+        mid: usize,
+        end: usize,
+        depth: usize,
+        pts: &Points,
+        perm: &[usize],
+    ) -> (usize, usize) {
+        // Children start from their own shrink-wrapped bounding boxes
+        // (inflated for aspect at their own split time).
+        let wrap = |s: usize, e: usize| -> (Vec<f64>, Vec<f64>) {
+            let d = pts.d;
+            let mut lo = pts.point(s).to_vec();
+            let mut hi = lo.clone();
+            for i in s + 1..e {
+                let p = pts.point(i);
+                for a in 0..d {
+                    lo[a] = lo[a].min(p[a]);
+                    hi[a] = hi[a].max(p[a]);
+                }
+            }
+            // Inflate for aspect ≤ 2 immediately so `aspect_ratio()` holds
+            // for leaves too.
+            let smax = (0..d).map(|a| hi[a] - lo[a]).fold(0.0f64, f64::max).max(1e-300);
+            for a in 0..d {
+                let s2 = hi[a] - lo[a];
+                if s2 < smax / MAX_ASPECT {
+                    let m = 0.5 * (lo[a] + hi[a]);
+                    lo[a] = m - 0.5 * smax / MAX_ASPECT;
+                    hi[a] = m + 0.5 * smax / MAX_ASPECT;
+                }
+            }
+            (lo, hi)
+        };
+        let (llo, lhi) = wrap(start, mid);
+        let (rlo, rhi) = wrap(mid, end);
+        let left = self.push_node(llo, lhi, start, mid, Some(id), depth + 1, pts, perm);
+        let right = self.push_node(rlo, rhi, mid, end, Some(id), depth + 1, pts, perm);
+        self.nodes[id].children = Some((left, right));
+        (left, right)
+    }
+
+    /// Number of points in the tree.
+    pub fn len(&self) -> usize {
+        self.nodes[0].len()
+    }
+
+    /// True when the tree holds no points (never: build panics on empty).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Maximum leaf depth.
+    pub fn max_depth(&self) -> usize {
+        self.leaves.iter().map(|&l| self.nodes[l].depth).max().unwrap_or(0)
+    }
+
+    /// Original indices of the points in `node`.
+    pub fn node_indices(&self, node: usize) -> &[usize] {
+        let n = &self.nodes[node];
+        &self.perm[n.start..n.end]
+    }
+
+    /// Minimum squared distance from a query point to a node's box.
+    #[inline]
+    pub fn box_dist2(&self, node: usize, q: &[f64]) -> f64 {
+        let nd = &self.nodes[node];
+        let mut acc = 0.0;
+        for a in 0..self.d {
+            let v = q[a];
+            let lo = nd.lo[a];
+            let hi = nd.hi[a];
+            let t = if v < lo {
+                lo - v
+            } else if v > hi {
+                v - hi
+            } else {
+                0.0
+            };
+            acc += t * t;
+        }
+        acc
+    }
+}
+
+/// Partition tree positions [start,end) so points with coord < plane come
+/// first; returns the split position. Keeps `pts` and `perm` in sync.
+fn partition_points(
+    pts: &mut Points,
+    perm: &mut [usize],
+    start: usize,
+    end: usize,
+    axis: usize,
+    plane: f64,
+) -> usize {
+    let d = pts.d;
+    let mut i = start;
+    let mut j = end;
+    while i < j {
+        if pts.coords[i * d + axis] < plane {
+            i += 1;
+        } else {
+            j -= 1;
+            // swap points i and j
+            for a in 0..d {
+                pts.coords.swap(i * d + a, j * d + a);
+            }
+            perm.swap(i, j);
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn uniform_points(n: usize, d: usize, seed: u64) -> Points {
+        let mut rng = Pcg32::seeded(seed);
+        Points::new(d, rng.uniform_vec(n * d, 0.0, 1.0))
+    }
+
+    #[test]
+    fn all_points_in_exactly_one_leaf() {
+        let pts = uniform_points(500, 3, 1);
+        let tree = Tree::build(&pts, 32);
+        let mut seen = vec![0usize; 500];
+        for &l in &tree.leaves {
+            for &orig in tree.node_indices(l) {
+                seen[orig] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn leaves_respect_capacity() {
+        let pts = uniform_points(1000, 2, 2);
+        let tree = Tree::build(&pts, 50);
+        for &l in &tree.leaves {
+            assert!(tree.nodes[l].len() <= 50, "leaf overflow");
+            assert!(!tree.nodes[l].is_empty(), "empty leaf");
+        }
+    }
+
+    #[test]
+    fn children_partition_parents() {
+        let pts = uniform_points(400, 3, 3);
+        let tree = Tree::build(&pts, 16);
+        for (id, node) in tree.nodes.iter().enumerate() {
+            if let Some((l, r)) = node.children {
+                assert_eq!(tree.nodes[l].start, node.start);
+                assert_eq!(tree.nodes[l].end, tree.nodes[r].start);
+                assert_eq!(tree.nodes[r].end, node.end);
+                assert_eq!(tree.nodes[l].parent, Some(id));
+                assert_eq!(tree.nodes[r].parent, Some(id));
+            }
+        }
+    }
+
+    #[test]
+    fn points_inside_their_boxes() {
+        let pts = uniform_points(300, 4, 4);
+        let tree = Tree::build(&pts, 20);
+        for node in &tree.nodes {
+            for i in node.start..node.end {
+                let p = tree.points.point(i);
+                for a in 0..tree.d {
+                    assert!(
+                        p[a] >= node.lo[a] - 1e-12 && p[a] <= node.hi[a] + 1e-12,
+                        "point escapes box"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aspect_ratio_bounded_by_two() {
+        for d in [2usize, 3, 5] {
+            let pts = uniform_points(800, d, 5 + d as u64);
+            let tree = Tree::build(&pts, 10);
+            for node in &tree.nodes {
+                assert!(
+                    node.aspect_ratio() <= MAX_ASPECT + 1e-9,
+                    "aspect {} in d={d}",
+                    node.aspect_ratio()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn radius_covers_contained_points() {
+        let pts = uniform_points(300, 3, 6);
+        let tree = Tree::build(&pts, 25);
+        for node in &tree.nodes {
+            for i in node.start..node.end {
+                let p = tree.points.point(i);
+                let dist = crate::linalg::vecops::dist2(p, &node.center).sqrt();
+                assert!(dist <= node.radius + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicated_points_become_a_leaf_not_infinite_loop() {
+        let mut coords = Vec::new();
+        for _ in 0..100 {
+            coords.extend_from_slice(&[0.25, 0.75]);
+        }
+        let pts = Points::new(2, coords);
+        let tree = Tree::build(&pts, 10);
+        // Can't split identical points: one (over-full) leaf is acceptable.
+        assert_eq!(tree.len(), 100);
+        let total: usize = tree.leaves.iter().map(|&l| tree.nodes[l].len()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn splits_are_roughly_balanced_on_uniform_data() {
+        let pts = uniform_points(4096, 2, 7);
+        let tree = Tree::build(&pts, 64);
+        // Expected depth ~ log2(4096/64) = 6; allow slack for clamping.
+        assert!(tree.max_depth() <= 10, "depth {}", tree.max_depth());
+    }
+
+    #[test]
+    fn clustered_data_adapts() {
+        // Two tight clusters far apart: tree must terminate and give leaves
+        // within capacity.
+        let mut rng = Pcg32::seeded(8);
+        let mut coords = Vec::new();
+        for i in 0..600 {
+            let base = if i % 2 == 0 { 0.0 } else { 100.0 };
+            coords.push(base + rng.normal() * 0.01);
+            coords.push(base + rng.normal() * 0.01);
+        }
+        let pts = Points::new(2, coords);
+        let tree = Tree::build(&pts, 30);
+        for &l in &tree.leaves {
+            assert!(tree.nodes[l].len() <= 30);
+        }
+    }
+
+    #[test]
+    fn box_dist2_is_zero_inside_positive_outside() {
+        let pts = uniform_points(50, 2, 9);
+        let tree = Tree::build(&pts, 10);
+        let root = &tree.nodes[0];
+        let inside: Vec<f64> = root.center.clone();
+        assert_eq!(tree.box_dist2(0, &inside), 0.0);
+        let outside: Vec<f64> = root.hi.iter().map(|&h| h + 1.0).collect();
+        assert!(tree.box_dist2(0, &outside) > 0.0);
+    }
+}

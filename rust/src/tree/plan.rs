@@ -1,0 +1,262 @@
+//! Far/near interaction planning — paper §3.1 eq. (2) and §3.2.
+//!
+//! Given a source tree and a set of target points, compute for every node
+//! `b` the set `F_b` of targets far enough for compression, and for every
+//! leaf `l` the residual near set `N_l`, such that every (target, source)
+//! pair is covered **exactly once**: by the unique shallowest ancestor of
+//! the source's leaf whose far set contains the target, or by the leaf's
+//! near set. This exact-cover property is what makes Algorithm 1 an
+//! (approximate) evaluation of the full kernel sum, and it is property-
+//! tested in `rust/tests/`.
+
+use super::Tree;
+use crate::linalg::vecops;
+use crate::points::Points;
+
+/// Interaction lists for one node.
+#[derive(Clone, Debug, Default)]
+pub struct NodeInteraction {
+    /// Target indices judged far by eq. (2) at this node.
+    pub far: Vec<u32>,
+    /// Target indices remaining at this leaf (empty for internal nodes).
+    pub near: Vec<u32>,
+}
+
+/// The complete far/near plan for a (source tree, target set, θ) triple.
+#[derive(Clone, Debug)]
+pub struct FarFieldPlan {
+    /// Per-node interaction lists, indexed like `tree.nodes`.
+    pub interactions: Vec<NodeInteraction>,
+    /// Distance criterion parameter θ ∈ (0, 1) of eq. (2).
+    pub theta: f64,
+    /// Total number of (node, far-target) pairs.
+    pub far_pairs: usize,
+    /// Total number of (leaf, near-target) pairs.
+    pub near_pairs: usize,
+}
+
+impl FarFieldPlan {
+    /// Build the plan. `targets` may be the tree's own (original-order)
+    /// points for a square MVM, or any other point set (GP prediction).
+    ///
+    /// A target t is *far* from node b when `radius_b / |t - c_b| < θ`
+    /// (paper eq. 2 rearranged), i.e. the node subtends a small enough
+    /// angle. θ < 1 guarantees the separation `r' < r` required for the
+    /// expansion of Theorem 3.1 to converge.
+    pub fn build(tree: &Tree, targets: &Points, theta: f64) -> FarFieldPlan {
+        assert!(theta > 0.0 && theta < 1.0, "theta must be in (0,1)");
+        assert_eq!(targets.d, tree.d, "dimension mismatch");
+        let nnodes = tree.nodes.len();
+        let mut interactions: Vec<NodeInteraction> = vec![NodeInteraction::default(); nnodes];
+        let mut far_pairs = 0usize;
+        let mut near_pairs = 0usize;
+        // Depth-first with explicit stack carrying the candidate target set.
+        let all: Vec<u32> = (0..targets.len() as u32).collect();
+        let mut stack: Vec<(usize, Vec<u32>)> = vec![(0, all)];
+        while let Some((id, cand)) = stack.pop() {
+            let node = &tree.nodes[id];
+            let mut far = Vec::new();
+            let mut rest = Vec::new();
+            // Tightened criterion: a node containing a single point has
+            // radius 0 and everything (except coincident points) is far.
+            let rad = node.radius;
+            for &t in &cand {
+                let tp = targets.point(t as usize);
+                let dist = vecops::dist2(tp, &node.center).sqrt();
+                if dist > 0.0 && rad / dist < theta {
+                    far.push(t);
+                } else {
+                    rest.push(t);
+                }
+            }
+            far_pairs += far.len();
+            match node.children {
+                Some((l, r)) => {
+                    interactions[id].far = far;
+                    stack.push((r, rest.clone()));
+                    stack.push((l, rest));
+                }
+                None => {
+                    near_pairs += rest.len();
+                    interactions[id].far = far;
+                    interactions[id].near = rest;
+                }
+            }
+        }
+        FarFieldPlan { interactions, theta, far_pairs, near_pairs }
+    }
+
+    /// Estimated dense-equivalent work: near pairs × leaf sizes etc.
+    /// (used by the coordinator's cost model and by the benches' reporting).
+    pub fn stats(&self, tree: &Tree) -> PlanStats {
+        let mut near_flops = 0usize;
+        let mut far_targets_max = 0usize;
+        for (id, it) in self.interactions.iter().enumerate() {
+            let node = &tree.nodes[id];
+            if node.is_leaf() {
+                near_flops += it.near.len() * node.len();
+            }
+            far_targets_max = far_targets_max.max(it.far.len());
+        }
+        PlanStats {
+            far_pairs: self.far_pairs,
+            near_pairs: self.near_pairs,
+            near_flops,
+            far_targets_max,
+        }
+    }
+}
+
+/// Summary statistics of a plan.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanStats {
+    /// Total (node, far target) pairs.
+    pub far_pairs: usize,
+    /// Total (leaf, near target) pairs.
+    pub near_pairs: usize,
+    /// Σ_leaf |N_l|·|l| — multiply-adds in the dense near field.
+    pub near_flops: usize,
+    /// Largest single far set (batching granularity).
+    pub far_targets_max: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn uniform_points(n: usize, d: usize, seed: u64) -> Points {
+        let mut rng = Pcg32::seeded(seed);
+        Points::new(d, rng.uniform_vec(n * d, 0.0, 1.0))
+    }
+
+    /// The exact-cover invariant: summing indicator contributions over the
+    /// plan reproduces the all-ones N×N matrix.
+    fn check_exact_cover(n: usize, d: usize, theta: f64, leaf: usize, seed: u64) {
+        let pts = uniform_points(n, d, seed);
+        let tree = Tree::build(&pts, leaf);
+        let plan = FarFieldPlan::build(&tree, &pts, theta);
+        // count[t][s] via flattened vec
+        let mut count = vec![0u8; n * n];
+        for (id, it) in plan.interactions.iter().enumerate() {
+            let srcs = tree.node_indices(id);
+            for &t in &it.far {
+                for &s in srcs {
+                    count[t as usize * n + s] += 1;
+                }
+            }
+            if tree.nodes[id].is_leaf() {
+                for &t in &it.near {
+                    for &s in srcs {
+                        count[t as usize * n + s] += 1;
+                    }
+                }
+            }
+        }
+        for t in 0..n {
+            for s in 0..n {
+                assert_eq!(count[t * n + s], 1, "pair ({t},{s}) covered {} times", count[t * n + s]);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_cover_2d() {
+        check_exact_cover(300, 2, 0.5, 16, 1);
+    }
+
+    #[test]
+    fn exact_cover_3d_aggressive_theta() {
+        check_exact_cover(200, 3, 0.75, 8, 2);
+    }
+
+    #[test]
+    fn exact_cover_conservative_theta() {
+        check_exact_cover(150, 2, 0.25, 32, 3);
+    }
+
+    #[test]
+    fn exact_cover_high_dim() {
+        check_exact_cover(120, 5, 0.6, 10, 4);
+    }
+
+    #[test]
+    fn far_sets_respect_separation() {
+        let pts = uniform_points(400, 3, 5);
+        let tree = Tree::build(&pts, 20);
+        let theta = 0.6;
+        let plan = FarFieldPlan::build(&tree, &pts, theta);
+        for (id, it) in plan.interactions.iter().enumerate() {
+            let node = &tree.nodes[id];
+            for &t in &it.far {
+                let dist = vecops::dist2(pts.point(t as usize), &node.center).sqrt();
+                assert!(node.radius / dist < theta);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_targets_cover_all_pairs() {
+        // Distinct target set (GP prediction scenario).
+        let src = uniform_points(150, 2, 6);
+        let tgt = uniform_points(80, 2, 7);
+        let tree = Tree::build(&src, 16);
+        let plan = FarFieldPlan::build(&tree, &tgt, 0.5);
+        let n = src.len();
+        let m = tgt.len();
+        let mut count = vec![0u8; m * n];
+        for (id, it) in plan.interactions.iter().enumerate() {
+            let srcs = tree.node_indices(id);
+            for &t in &it.far {
+                for &s in srcs {
+                    count[t as usize * n + s] += 1;
+                }
+            }
+            if tree.nodes[id].is_leaf() {
+                for &t in &it.near {
+                    for &s in srcs {
+                        count[t as usize * n + s] += 1;
+                    }
+                }
+            }
+        }
+        assert!(count.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn smaller_theta_shifts_mass_from_far_to_near() {
+        let pts = uniform_points(500, 2, 8);
+        let tree = Tree::build(&pts, 32);
+        let loose = FarFieldPlan::build(&tree, &pts, 0.75);
+        let tight = FarFieldPlan::build(&tree, &pts, 0.25);
+        // A tighter θ compresses less: more dense near-field work.
+        assert!(tight.near_pairs > loose.near_pairs);
+        // Interaction mass (pairs of points covered far vs near) conserves:
+        // Σ_far |b| + Σ_near |l| = N².
+        let mass = |plan: &FarFieldPlan| -> (usize, usize) {
+            let mut farm = 0;
+            let mut nearm = 0;
+            for (id, it) in plan.interactions.iter().enumerate() {
+                farm += it.far.len() * tree.nodes[id].len();
+                nearm += it.near.len() * tree.nodes[id].len();
+            }
+            (farm, nearm)
+        };
+        let (lf, ln) = mass(&loose);
+        let (tf, tn) = mass(&tight);
+        assert_eq!(lf + ln, 500 * 500);
+        assert_eq!(tf + tn, 500 * 500);
+        assert!(tf < lf, "tight θ must compress less mass");
+    }
+
+    #[test]
+    fn stats_consistent() {
+        let pts = uniform_points(300, 2, 9);
+        let tree = Tree::build(&pts, 16);
+        let plan = FarFieldPlan::build(&tree, &pts, 0.5);
+        let st = plan.stats(&tree);
+        assert_eq!(st.far_pairs, plan.far_pairs);
+        assert_eq!(st.near_pairs, plan.near_pairs);
+        assert!(st.near_flops >= st.near_pairs);
+    }
+}

@@ -1,0 +1,385 @@
+//! t-distributed Stochastic Neighbor Embedding accelerated by the FKT
+//! (paper §5.2, Fig 3).
+//!
+//! The gradient of the t-SNE objective splits into a sparse attractive
+//! term over the kNN graph and a dense repulsive term
+//! `F_rep,i = (1/Z) Σ_j w_ij² (y_i − y_j)`, `w_ij = (1+|y_i−y_j|²)^{-1}`,
+//! `Z = Σ_{k≠l} w_kl` — sums of Cauchy and squared-Cauchy kernel MVMs over
+//! the 2-D embedding, "a prime candidate for the application of FKT"
+//! (paper). Per iteration the embedding moves, so the operator (tree +
+//! plan) is rebuilt — the quasilinear build is part of the method's cost,
+//! exactly as in the paper's comparison with van der Maaten's Barnes–Hut
+//! t-SNE.
+
+use crate::coordinator::Coordinator;
+use crate::fkt::{FktConfig, FktOperator};
+use crate::kernels::{Family, Kernel};
+use crate::points::Points;
+use crate::rng::Pcg32;
+use crate::tree::{knn, Tree};
+
+/// Sparse symmetric affinity matrix P in COO-per-row form.
+#[derive(Clone, Debug)]
+pub struct Affinities {
+    /// Neighbor indices per row.
+    pub cols: Vec<Vec<u32>>,
+    /// p_ij values per row (same layout as cols).
+    pub vals: Vec<Vec<f64>>,
+}
+
+/// t-SNE configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TsneConfig {
+    /// Perplexity (paper/standard default 30).
+    pub perplexity: f64,
+    /// Total gradient iterations.
+    pub iterations: usize,
+    /// Early-exaggeration factor and duration.
+    pub exaggeration: f64,
+    /// Iterations with exaggeration active.
+    pub exaggeration_iters: usize,
+    /// Learning rate.
+    pub learning_rate: f64,
+    /// Momentum before/after the exaggeration phase.
+    pub momentum_early: f64,
+    /// Momentum after.
+    pub momentum_late: f64,
+    /// FKT settings for the repulsive field (2-D, Cauchy kernels).
+    pub fkt: FktConfig,
+    /// Compute repulsion exactly (O(N²)) — testing/small N only.
+    pub exact_repulsion: bool,
+    /// RNG seed for the embedding init.
+    pub seed: u64,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig {
+            perplexity: 30.0,
+            iterations: 500,
+            exaggeration: 12.0,
+            exaggeration_iters: 200,
+            learning_rate: 200.0,
+            momentum_early: 0.5,
+            momentum_late: 0.8,
+            fkt: FktConfig { p: 3, theta: 0.6, leaf_capacity: 128, ..Default::default() },
+            exact_repulsion: false,
+            seed: 7,
+        }
+    }
+}
+
+/// Compute the symmetrized perplexity-calibrated affinities on the kNN
+/// graph (k = 3·perplexity, van der Maaten's convention).
+pub fn compute_affinities(data: &Points, perplexity: f64) -> Affinities {
+    let n = data.len();
+    let k = ((3.0 * perplexity) as usize).min(n - 1).max(1);
+    let tree = Tree::build(data, 32.max(k / 2));
+    // Conditional distributions p_{j|i} on the kNN sets.
+    let mut cond_cols: Vec<Vec<u32>> = Vec::with_capacity(n);
+    let mut cond_vals: Vec<Vec<f64>> = Vec::with_capacity(n);
+    let target_entropy = perplexity.ln();
+    for i in 0..n {
+        let neigh = knn(&tree, data.point(i), k, i);
+        let d2: Vec<f64> = neigh.iter().map(|&(_, d)| d * d).collect();
+        // Binary search the precision β for the target entropy.
+        let mut beta = 1.0f64;
+        let mut lo = 0.0f64;
+        let mut hi = f64::INFINITY;
+        let mut probs = vec![0.0; neigh.len()];
+        for _ in 0..64 {
+            let mut sum = 0.0;
+            let dmin = d2.iter().cloned().fold(f64::INFINITY, f64::min);
+            for (t, &dd) in d2.iter().enumerate() {
+                probs[t] = (-beta * (dd - dmin)).exp();
+                sum += probs[t];
+            }
+            let mut entropy = 0.0;
+            for p in probs.iter_mut() {
+                *p /= sum;
+                if *p > 1e-300 {
+                    entropy -= *p * p.ln();
+                }
+            }
+            let diff = entropy - target_entropy;
+            if diff.abs() < 1e-5 {
+                break;
+            }
+            if diff > 0.0 {
+                lo = beta;
+                beta = if hi.is_finite() { 0.5 * (beta + hi) } else { beta * 2.0 };
+            } else {
+                hi = beta;
+                beta = 0.5 * (beta + lo);
+            }
+        }
+        cond_cols.push(neigh.iter().map(|&(j, _)| j as u32).collect());
+        cond_vals.push(probs);
+    }
+    // Symmetrize: p_ij = (p_{j|i} + p_{i|j}) / (2N), union sparsity.
+    use std::collections::HashMap;
+    let mut maps: Vec<HashMap<u32, f64>> = vec![HashMap::new(); n];
+    for i in 0..n {
+        for (t, &j) in cond_cols[i].iter().enumerate() {
+            let v = cond_vals[i][t] / (2.0 * n as f64);
+            *maps[i].entry(j).or_insert(0.0) += v;
+            *maps[j as usize].entry(i as u32).or_insert(0.0) += v;
+        }
+    }
+    let mut cols = Vec::with_capacity(n);
+    let mut vals = Vec::with_capacity(n);
+    for map in maps {
+        let mut row: Vec<(u32, f64)> = map.into_iter().collect();
+        row.sort_unstable_by_key(|&(j, _)| j);
+        cols.push(row.iter().map(|&(j, _)| j).collect());
+        vals.push(row.iter().map(|&(_, v)| v).collect());
+    }
+    Affinities { cols, vals }
+}
+
+/// The repulsive field and partition function via three kernel MVMs.
+///
+/// Returns (rep_x, rep_y, Z) with
+/// `rep_i = Σ_j w_ij² (y_i − y_j)` (division by Z left to the caller).
+pub fn repulsive_field(
+    embedding: &Points,
+    cfg: &TsneConfig,
+    coord: &mut Coordinator,
+) -> (Vec<f64>, Vec<f64>, f64) {
+    let n = embedding.len();
+    if cfg.exact_repulsion {
+        let mut rep = vec![0.0; 2 * n];
+        let mut z = 0.0;
+        for i in 0..n {
+            let yi = embedding.point(i);
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let yj = embedding.point(j);
+                let d2 = crate::linalg::vecops::dist2(yi, yj);
+                let w = 1.0 / (1.0 + d2);
+                z += w;
+                let w2 = w * w;
+                rep[2 * i] += w2 * (yi[0] - yj[0]);
+                rep[2 * i + 1] += w2 * (yi[1] - yj[1]);
+            }
+        }
+        let (rx, ry): (Vec<f64>, Vec<f64>) = (
+            (0..n).map(|i| rep[2 * i]).collect(),
+            (0..n).map(|i| rep[2 * i + 1]).collect(),
+        );
+        return (rx, ry, z);
+    }
+    let ones = vec![1.0; n];
+    let y0: Vec<f64> = (0..n).map(|i| embedding.point(i)[0]).collect();
+    let y1: Vec<f64> = (0..n).map(|i| embedding.point(i)[1]).collect();
+    // Z: Cauchy MVM with ones (subtracting the N diagonal terms).
+    let cauchy = FktOperator::square(embedding, Kernel::canonical(Family::Cauchy), cfg.fkt);
+    let s1 = coord.mvm(&cauchy, &ones);
+    let z: f64 = s1.iter().sum::<f64>() - n as f64;
+    // Repulsion: squared-Cauchy MVMs with [1, y_x, y_y].
+    let csq = FktOperator::square(embedding, Kernel::canonical(Family::CauchySquared), cfg.fkt);
+    let a = coord.mvm(&csq, &ones);
+    let bx = coord.mvm(&csq, &y0);
+    let by = coord.mvm(&csq, &y1);
+    let mut rx = vec![0.0; n];
+    let mut ry = vec![0.0; n];
+    for i in 0..n {
+        // Subtract the self term w_ii²·(…)=1·0 — already zero.
+        rx[i] = (a[i] - 1.0) * y0[i] - (bx[i] - y0[i]);
+        ry[i] = (a[i] - 1.0) * y1[i] - (by[i] - y1[i]);
+    }
+    (rx, ry, z)
+}
+
+/// Result of a t-SNE run.
+pub struct TsneResult {
+    /// Final 2-D embedding.
+    pub embedding: Points,
+    /// KL divergence trace (sampled every 25 iterations).
+    pub kl_trace: Vec<(usize, f64)>,
+}
+
+/// Run t-SNE on `data`, returning the 2-D embedding.
+pub fn run(data: &Points, cfg: &TsneConfig, coord: &mut Coordinator) -> TsneResult {
+    let n = data.len();
+    let aff = compute_affinities(data, cfg.perplexity);
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut y: Vec<f64> = (0..2 * n).map(|_| 1e-4 * rng.normal()).collect();
+    let mut vel = vec![0.0; 2 * n];
+    let mut kl_trace = Vec::new();
+    for iter in 0..cfg.iterations {
+        let exag = if iter < cfg.exaggeration_iters { cfg.exaggeration } else { 1.0 };
+        let momentum = if iter < cfg.exaggeration_iters {
+            cfg.momentum_early
+        } else {
+            cfg.momentum_late
+        };
+        let embedding = Points::new(2, y.clone());
+        let (rx, ry, z) = repulsive_field(&embedding, cfg, coord);
+        // Attractive term over the sparse P.
+        let mut grad = vec![0.0; 2 * n];
+        for i in 0..n {
+            let yi = [y[2 * i], y[2 * i + 1]];
+            let mut gx = 0.0;
+            let mut gy = 0.0;
+            for (t, &j) in aff.cols[i].iter().enumerate() {
+                let j = j as usize;
+                let dx = yi[0] - y[2 * j];
+                let dy = yi[1] - y[2 * j + 1];
+                let w = 1.0 / (1.0 + dx * dx + dy * dy);
+                let c = exag * aff.vals[i][t] * w;
+                gx += c * dx;
+                gy += c * dy;
+            }
+            grad[2 * i] = 4.0 * (gx - rx[i] / z);
+            grad[2 * i + 1] = 4.0 * (gy - ry[i] / z);
+        }
+        // Momentum update.
+        for t in 0..2 * n {
+            vel[t] = momentum * vel[t] - cfg.learning_rate * grad[t];
+            y[t] += vel[t];
+        }
+        // Re-center (the objective is translation invariant).
+        let (mut mx, mut my) = (0.0, 0.0);
+        for i in 0..n {
+            mx += y[2 * i];
+            my += y[2 * i + 1];
+        }
+        mx /= n as f64;
+        my /= n as f64;
+        for i in 0..n {
+            y[2 * i] -= mx;
+            y[2 * i + 1] -= my;
+        }
+        if iter % 25 == 0 || iter + 1 == cfg.iterations {
+            let kl = kl_divergence(&aff, &y, z);
+            kl_trace.push((iter, kl));
+        }
+    }
+    TsneResult { embedding: Points::new(2, y), kl_trace }
+}
+
+/// KL(P‖Q) over the sparse support of P (the dominant part of the
+/// objective; the off-support contribution is O(p_ij → 0)).
+pub fn kl_divergence(aff: &Affinities, y: &[f64], z: f64) -> f64 {
+    let mut kl = 0.0;
+    for i in 0..aff.cols.len() {
+        for (t, &j) in aff.cols[i].iter().enumerate() {
+            let j = j as usize;
+            let p = aff.vals[i][t];
+            if p <= 0.0 {
+                continue;
+            }
+            let dx = y[2 * i] - y[2 * j];
+            let dy = y[2 * i + 1] - y[2 * j + 1];
+            let w = 1.0 / (1.0 + dx * dx + dy * dy);
+            let q = (w / z).max(1e-300);
+            kl += p * (p / q).ln();
+        }
+    }
+    kl
+}
+
+/// kNN label purity of an embedding — the quantitative stand-in for the
+/// qualitative Fig 3-right cluster plot.
+pub fn knn_purity(embedding: &Points, labels: &[usize], k: usize) -> f64 {
+    let tree = Tree::build(embedding, 32);
+    let n = embedding.len();
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for i in 0..n {
+        for (j, _) in knn(&tree, embedding.point(i), k, i) {
+            if labels[j] == labels[i] {
+                agree += 1;
+            }
+            total += 1;
+        }
+    }
+    agree as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mnist_like;
+
+    #[test]
+    fn affinity_rows_are_calibrated() {
+        let mut rng = Pcg32::seeded(231);
+        let data = Points::new(5, rng.normal_vec(200 * 5));
+        let aff = compute_affinities(&data, 15.0);
+        // Rows sum to ~1/N each after symmetrization (total mass 1).
+        let total: f64 = aff.vals.iter().flatten().sum();
+        assert!((total - 1.0).abs() < 1e-6, "total {total}");
+        // Symmetry: p_ij == p_ji.
+        for i in 0..200 {
+            for (t, &j) in aff.cols[i].iter().enumerate() {
+                let j = j as usize;
+                let pos = aff.cols[j].binary_search(&(i as u32)).expect("symmetric support");
+                assert!((aff.vals[i][t] - aff.vals[j][pos]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fkt_repulsion_matches_exact() {
+        let mut rng = Pcg32::seeded(232);
+        let emb = Points::new(2, rng.normal_vec(400 * 2));
+        let mut coord = Coordinator::native(2);
+        let cfg_exact = TsneConfig { exact_repulsion: true, ..Default::default() };
+        let cfg_fkt = TsneConfig {
+            exact_repulsion: false,
+            fkt: FktConfig { p: 5, theta: 0.4, leaf_capacity: 32, ..Default::default() },
+            ..Default::default()
+        };
+        let (ex, ey, ez) = repulsive_field(&emb, &cfg_exact, &mut coord);
+        let (fx, fy, fz) = repulsive_field(&emb, &cfg_fkt, &mut coord);
+        assert!((ez - fz).abs() < 1e-3 * ez, "Z: {ez} vs {fz}");
+        let norm: f64 = ex.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let mut err = 0.0;
+        for i in 0..400 {
+            err += (ex[i] - fx[i]).powi(2) + (ey[i] - fy[i]).powi(2);
+        }
+        let rel = err.sqrt() / norm;
+        assert!(rel < 1e-3, "repulsion rel err {rel}");
+    }
+
+    #[test]
+    fn kl_decreases_on_clustered_data() {
+        let mut rng = Pcg32::seeded(233);
+        let (data, _) = mnist_like(300, 10, &mut rng);
+        let mut coord = Coordinator::native(2);
+        let cfg = TsneConfig {
+            iterations: 120,
+            exaggeration_iters: 50,
+            perplexity: 10.0,
+            learning_rate: 100.0,
+            exact_repulsion: true, // small N: exact is fastest & cleanest
+            ..Default::default()
+        };
+        let res = run(&data, &cfg, &mut coord);
+        let first = res.kl_trace.first().unwrap().1;
+        let last = res.kl_trace.last().unwrap().1;
+        assert!(last < first, "KL did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn embedding_separates_clusters() {
+        let mut rng = Pcg32::seeded(234);
+        let (data, labels) = mnist_like(400, 12, &mut rng);
+        let mut coord = Coordinator::native(2);
+        let cfg = TsneConfig {
+            iterations: 250,
+            exaggeration_iters: 100,
+            perplexity: 15.0,
+            learning_rate: 100.0,
+            exact_repulsion: true,
+            ..Default::default()
+        };
+        let res = run(&data, &cfg, &mut coord);
+        let purity = knn_purity(&res.embedding, &labels, 10);
+        assert!(purity > 0.8, "embedding purity {purity}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Cross-module integration tests: the full operator pipeline against the
+//! dense oracle, coordinator backends, GP end-to-end, and (when artifacts
+//! are built) the PJRT seam.
+
+use fkt::baselines::dense_mvm;
+use fkt::coordinator::{Backend, Coordinator, CoordinatorConfig};
+use fkt::fkt::{FktConfig, FktOperator};
+use fkt::kernels::{Family, Kernel};
+use fkt::points::Points;
+use fkt::rng::Pcg32;
+
+fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        num += (x - y) * (x - y);
+        den += y * y;
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+#[test]
+fn full_pipeline_all_default_artifact_families() {
+    // Every family the AOT artifact set ships must pass the dense check
+    // through the coordinator (native backend).
+    let mut rng = Pcg32::seeded(401);
+    let pts = Points::new(2, rng.uniform_vec(600 * 2, 0.0, 1.0));
+    let w = rng.normal_vec(600);
+    let mut coord = Coordinator::native(1);
+    for fam in [
+        Family::Cauchy,
+        Family::CauchySquared,
+        Family::Exponential,
+        Family::Matern32,
+        Family::Gaussian,
+        Family::Coulomb,
+    ] {
+        let kern = Kernel::canonical(fam);
+        let dense = dense_mvm(&kern, &pts, &pts, &w);
+        let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 50, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let z = coord.mvm(&op, &w);
+        let e = rel_err(&z, &dense);
+        assert!(e < 2e-3, "{fam:?}: rel err {e}");
+    }
+}
+
+#[test]
+fn pjrt_backend_end_to_end_when_artifacts_built() {
+    let mut coord = Coordinator::new(CoordinatorConfig { threads: 1, backend: Backend::Pjrt });
+    if !coord.will_use_pjrt("gaussian", 3) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Pcg32::seeded(402);
+    let pts = Points::new(3, rng.uniform_vec(700 * 3, 0.0, 1.0));
+    let w = rng.normal_vec(700);
+    let kern = Kernel::canonical(Family::Gaussian);
+    let dense = dense_mvm(&kern, &pts, &pts, &w);
+    let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 80, ..Default::default() };
+    let op = FktOperator::square(&pts, kern, cfg);
+    let z = coord.mvm(&op, &w);
+    assert!(coord.last_metrics.used_pjrt);
+    let e = rel_err(&z, &dense);
+    assert!(e < 2e-3, "pjrt pipeline rel err {e}");
+}
+
+#[test]
+fn gp_end_to_end_smoke() {
+    use fkt::data::sst;
+    use fkt::gp::{GpConfig, GpRegressor};
+    let mut rng = Pcg32::seeded(403);
+    let ds = sst::simulate(1.0, 1500, &mut rng);
+    let y = ds.temperatures();
+    let mean_y: f64 = y.iter().sum::<f64>() / y.len() as f64;
+    let y0: Vec<f64> = y.iter().map(|v| v - mean_y).collect();
+    let cfg = GpConfig {
+        fkt: FktConfig { p: 4, theta: 0.6, leaf_capacity: 128, ..Default::default() },
+        cg_tol: 1e-5,
+        cg_max_iters: 200,
+        jitter: 1e-6,
+        precondition: true,
+    };
+    let gp = GpRegressor::new(ds.unit_sphere_points(), ds.noise_variances(), Kernel::matern32(0.25), cfg);
+    let mut coord = Coordinator::native(1);
+    let (grid, coords) = sst::prediction_grid(12, 36, 60.0);
+    let res = gp.posterior_mean(&y0, &grid, &mut coord);
+    assert!(res.cg.converged, "CG residual {}", res.cg.rel_residual);
+    // Posterior should beat the mean-only baseline handily.
+    let mut se = 0.0;
+    let mut base = 0.0;
+    for (i, &(lat, lon)) in coords.iter().enumerate() {
+        let truth = sst::true_field(lat, lon);
+        se += (res.mean[i] + mean_y - truth).powi(2);
+        base += (mean_y - truth).powi(2);
+    }
+    assert!(se < 0.05 * base, "rmse ratio {}", (se / base).sqrt());
+}
+
+#[test]
+fn tsne_pipeline_smoke() {
+    use fkt::tsne::{knn_purity, run, TsneConfig};
+    let mut rng = Pcg32::seeded(404);
+    let (data, labels) = fkt::data::mnist_like(250, 8, &mut rng);
+    let cfg = TsneConfig {
+        iterations: 120,
+        exaggeration_iters: 50,
+        perplexity: 10.0,
+        learning_rate: 80.0,
+        fkt: FktConfig { p: 3, theta: 0.5, leaf_capacity: 64, ..Default::default() },
+        exact_repulsion: false, // exercise the FKT repulsion path
+        ..Default::default()
+    };
+    let mut coord = Coordinator::native(1);
+    let res = run(&data, &cfg, &mut coord);
+    let purity = knn_purity(&res.embedding, &labels, 8);
+    assert!(purity > 0.7, "purity {purity}");
+    let first = res.kl_trace.first().unwrap().1;
+    let last = res.kl_trace.last().unwrap().1;
+    assert!(last < first, "KL {first} -> {last}");
+}
