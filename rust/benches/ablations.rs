@@ -41,7 +41,8 @@ fn main() {
     let w = rng.uniform_vec(n, 0.0, 1.0);
     let kern = Kernel::canonical(Family::Exponential);
     let dense = dense_mvm(&kern, &pts, &pts, &w);
-    let mut coord = Coordinator::native(1);
+    // Uniform `--threads` knob (0 = all cores) shared across benches.
+    let mut coord = Coordinator::native(args.threads());
 
     println!("Ablation 1: expansion center (N={n}, exponential 2-D, θ=0.5, positive weights)");
     let mut t1 = Table::new(&["p", "center", "runtime", "rel_err"]);

@@ -34,7 +34,7 @@ fn main() {
     let leaf: usize = args.get("leaf", 512);
     let dense_cap: usize = args.get("dense-cap", 20000);
     let bench = if full { Bencher::default() } else { Bencher::quick() };
-    let mut coord = Coordinator::native(0);
+    let mut coord = Coordinator::native(args.threads());
 
     println!("Fig 2 (left): FKT vs dense MVM, Matérn ν=1/2, θ={theta}, leaf={leaf}");
     let mut table = Table::new(&[

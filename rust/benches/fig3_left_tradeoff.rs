@@ -35,7 +35,7 @@ fn main() {
     println!("computing dense reference…");
     let dense = dense_mvm(&kern, &pts, &pts, &w);
     let dense_norm: f64 = dense.iter().map(|v| v * v).sum::<f64>().sqrt();
-    let mut coord = Coordinator::native(0);
+    let mut coord = Coordinator::native(args.threads());
 
     let rel_err = |z: &[f64]| -> f64 {
         let mut num = 0.0;

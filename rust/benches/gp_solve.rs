@@ -26,7 +26,7 @@ fn main() {
     let p: usize = args.get("p", 4);
     let theta: f64 = args.get("theta", 0.6);
     let rho: f64 = args.get("rho", 0.22);
-    let mut coord = Coordinator::native(0);
+    let mut coord = Coordinator::native(args.threads());
 
     println!("GP solve (Fig 4 workload): Matérn-3/2 ρ={rho}, p={p}, θ={theta}");
     let mut table = Table::new(&[

@@ -5,10 +5,11 @@
 //! cargo bench --bench tsne_step [-- --full]
 //! ```
 
-use fkt::benchkit::{fmt_time, Bencher, Table};
+use fkt::benchkit::{fmt_time, BenchJson, Bencher, Table};
 use fkt::cli::Args;
 use fkt::coordinator::Coordinator;
-use fkt::fkt::FktConfig;
+use fkt::fkt::{FktConfig, FktOperator};
+use fkt::kernels::{Family, Kernel};
 use fkt::points::Points;
 use fkt::rng::Pcg32;
 use fkt::tsne::{repulsive_field, TsneConfig};
@@ -22,7 +23,7 @@ fn main() {
         args.get_list("ns", &[2000, 10000])
     };
     let bench = if full { Bencher::default() } else { Bencher::quick() };
-    let mut coord = Coordinator::native(0);
+    let mut coord = Coordinator::native(args.threads());
 
     println!("t-SNE repulsive-field step: exact vs B-H-like (p=0) vs FKT");
     let mut table = Table::new(&["N", "method", "time/step", "Z rel err"]);
@@ -64,4 +65,53 @@ fn main() {
     table.print();
     println!("\nShape check: exact grows ~N², tree methods quasilinearly; FKT pays a");
     println!("modest constant over p=0 for orders-of-magnitude better accuracy.");
+
+    // The multi-RHS lever behind the fused t-SNE step: one 3-column
+    // mvm_batch (shared traversal) vs three sequential single-RHS MVMs of
+    // the same squared-Cauchy operator. The ratio lands in BENCH json.
+    println!("\nBatched multi-RHS: 3-column mvm_batch vs 3 looped mvm");
+    let mut json = BenchJson::new();
+    let mut btable = Table::new(&["N", "looped(3 mvm)", "batched(m=3)", "speedup"]);
+    let batch_ns: Vec<usize> = args.get_list("batch-ns", &ns);
+    let mut last_ratio = f64::NAN;
+    for &n in &batch_ns {
+        let mut rng = Pcg32::seeded(78);
+        let (emb, _) = fkt::data::gaussian_mixture(n, 2, 10, 0.5, &mut rng);
+        let emb = Points::new(2, emb.coords.iter().map(|c| c * 10.0).collect());
+        let cfg = FktConfig { p: 3, theta: 0.5, leaf_capacity: 128, ..Default::default() };
+        let op = FktOperator::square(&emb, Kernel::canonical(Family::CauchySquared), cfg);
+        let ones = vec![1.0; n];
+        let y0: Vec<f64> = (0..n).map(|i| emb.point(i)[0]).collect();
+        let y1: Vec<f64> = (0..n).map(|i| emb.point(i)[1]).collect();
+        let mut wb = Vec::with_capacity(3 * n);
+        wb.extend_from_slice(&ones);
+        wb.extend_from_slice(&y0);
+        wb.extend_from_slice(&y1);
+        let st_loop = bench.run(|| {
+            let a = coord.mvm(&op, &ones);
+            let bx = coord.mvm(&op, &y0);
+            let by = coord.mvm(&op, &y1);
+            (a, bx, by)
+        });
+        let st_batch = bench.run(|| coord.mvm_batch(&op, &wb, 3));
+        assert_eq!(coord.last_metrics.moment_passes, 1, "batch must be one traversal");
+        let ratio = st_loop.median / st_batch.median;
+        last_ratio = ratio;
+        btable.row(&[
+            n.to_string(),
+            fmt_time(st_loop.median),
+            fmt_time(st_batch.median),
+            format!("{ratio:.2}x"),
+        ]);
+        json.record(&format!("batched_vs_looped_mvm_n{n}"), ratio);
+        json.record(&format!("batched_mvm_seconds_n{n}"), st_batch.median);
+        json.record(&format!("looped_mvm_seconds_n{n}"), st_loop.median);
+    }
+    btable.print();
+    json.record("batched_vs_looped_mvm", last_ratio);
+    let path = BenchJson::default_path();
+    match json.save(&path) {
+        Ok(()) => println!("\nBENCH json written to {}", path.display()),
+        Err(e) => eprintln!("\nBENCH json write failed ({}): {e}", path.display()),
+    }
 }

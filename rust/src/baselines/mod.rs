@@ -1,7 +1,16 @@
 //! Baselines the paper compares against: the exact dense MVM and (via
 //! `FktConfig::barnes_hut`) the Barnes–Hut treecode of Fig 3-left.
+//!
+//! [`DenseOperator`] wraps the exact sum as a [`KernelOp`] so the dense
+//! baseline is a drop-in backend anywhere the coordinator or applications
+//! take an operator; its fused `apply_batch` shares each distance/kernel
+//! evaluation across all RHS columns (the dense analogue of the FKT's
+//! shared-traversal `matmat`). The Barnes–Hut baseline needs no wrapper —
+//! it is `FktOperator` with `FktConfig::barnes_hut`, which already
+//! implements the trait.
 
 use crate::kernels::Kernel;
+use crate::op::KernelOp;
 use crate::points::Points;
 
 /// Exact dense kernel MVM: `z_t = Σ_s K(|t − s|) w_s`. O(N·M) — the
@@ -46,6 +55,78 @@ pub fn dense_matrix(kernel: &Kernel, sources: &Points, targets: &Points) -> crat
     out
 }
 
+/// The exact dense kernel sum as a reusable [`KernelOp`] backend.
+pub struct DenseOperator {
+    kernel: Kernel,
+    sources: Points,
+    /// `None` for the square case — targets alias the sources.
+    targets: Option<Points>,
+}
+
+impl DenseOperator {
+    /// Build for `z = K(targets, sources) · w`; `targets = None` for the
+    /// square case (which then stores the point set once).
+    pub fn new(sources: &Points, targets: Option<&Points>, kernel: Kernel) -> DenseOperator {
+        if let Some(t) = targets {
+            assert_eq!(t.d, sources.d, "source/target dimension mismatch");
+        }
+        DenseOperator { kernel, sources: sources.clone(), targets: targets.cloned() }
+    }
+
+    /// Square operator: targets = sources.
+    pub fn square(sources: &Points, kernel: Kernel) -> DenseOperator {
+        Self::new(sources, None, kernel)
+    }
+
+    fn targets(&self) -> &Points {
+        self.targets.as_ref().unwrap_or(&self.sources)
+    }
+}
+
+impl KernelOp for DenseOperator {
+    fn num_sources(&self) -> usize {
+        self.sources.len()
+    }
+
+    fn num_targets(&self) -> usize {
+        self.targets().len()
+    }
+
+    fn apply(&self, w: &[f64]) -> Vec<f64> {
+        dense_mvm(&self.kernel, &self.sources, self.targets(), w)
+    }
+
+    fn apply_batch(&self, w: &[f64], m: usize) -> Vec<f64> {
+        // Fused: each K(|t−s|) is evaluated once and applied to all columns.
+        let targets = self.targets();
+        let n = self.sources.len();
+        let t_total = targets.len();
+        let d = self.sources.d;
+        assert!(m > 0);
+        assert_eq!(w.len(), n * m);
+        let mut out = vec![0.0; t_total * m];
+        for t in 0..t_total {
+            let tp = targets.point(t);
+            for s in 0..n {
+                let sp = self.sources.point(s);
+                let mut d2 = 0.0;
+                for a in 0..d {
+                    let dd = tp[a] - sp[a];
+                    d2 += dd * dd;
+                }
+                let k = self.kernel.eval(d2.sqrt());
+                if k == 0.0 {
+                    continue;
+                }
+                for c in 0..m {
+                    out[c * t_total + t] += k * w[c * n + s];
+                }
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,6 +145,26 @@ mod tests {
         let z2 = m.matvec(&w);
         for (a, b) in z1.iter().zip(&z2) {
             assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dense_operator_fused_batch_matches_looped() {
+        let mut rng = Pcg32::seeded(93);
+        let src = Points::new(3, rng.uniform_vec(60 * 3, 0.0, 1.0));
+        let tgt = Points::new(3, rng.uniform_vec(25 * 3, 0.0, 1.0));
+        let m = 3;
+        let w = rng.normal_vec(60 * m);
+        let op = DenseOperator::new(&src, Some(&tgt), Kernel::canonical(Family::Matern32));
+        let fused = op.apply_batch(&w, m);
+        for c in 0..m {
+            let single = op.apply(&w[c * 60..(c + 1) * 60]);
+            for t in 0..25 {
+                assert!(
+                    (fused[c * 25 + t] - single[t]).abs() <= 1e-12 * (1.0 + single[t].abs()),
+                    "col={c} t={t}"
+                );
+            }
         }
     }
 

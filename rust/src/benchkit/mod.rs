@@ -95,6 +95,65 @@ impl Bencher {
     }
 }
 
+/// Minimal machine-readable bench recorder (no `serde` available offline):
+/// accumulates flat `key → number` pairs and serializes them as a JSON
+/// object so CI / the driver can diff bench results across PRs. Non-finite
+/// values serialize as `null`.
+#[derive(Clone, Debug, Default)]
+pub struct BenchJson {
+    entries: Vec<(String, f64)>,
+}
+
+impl BenchJson {
+    /// Empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record (or append) one metric.
+    pub fn record(&mut self, key: &str, value: f64) {
+        self.entries.push((key.to_string(), value));
+    }
+
+    /// Serialize as a JSON object (keys in insertion order).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            // Escape the minimal set a metric key could plausibly contain.
+            let key: String = k
+                .chars()
+                .flat_map(|c| match c {
+                    '"' | '\\' => vec!['\\', c],
+                    _ => vec![c],
+                })
+                .collect();
+            if v.is_finite() {
+                out.push_str(&format!("\"{key}\": {v}"));
+            } else {
+                out.push_str(&format!("\"{key}\": null"));
+            }
+        }
+        out.push('}');
+        out
+    }
+
+    /// Write the JSON to `path` (with a trailing newline).
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json() + "\n")
+    }
+
+    /// Default output path: `$FKT_BENCH_JSON` or `BENCH.json` in the
+    /// working directory.
+    pub fn default_path() -> std::path::PathBuf {
+        std::env::var_os("FKT_BENCH_JSON")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("BENCH.json"))
+    }
+}
+
 /// Render seconds human-readably.
 pub fn fmt_time(s: f64) -> String {
     if s < 1e-6 {
@@ -188,6 +247,15 @@ mod tests {
         assert!(fmt_time(2.5e-6).contains("µs"));
         assert!(fmt_time(2.5e-3).contains("ms"));
         assert!(fmt_time(2.5).contains("s"));
+    }
+
+    #[test]
+    fn bench_json_serializes() {
+        let mut j = BenchJson::new();
+        j.record("batched_vs_looped_mvm", 2.5);
+        j.record("weird\"key", f64::NAN);
+        let s = j.to_json();
+        assert_eq!(s, "{\"batched_vs_looped_mvm\": 2.5, \"weird\\\"key\": null}");
     }
 
     #[test]

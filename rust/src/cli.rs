@@ -69,6 +69,15 @@ impl Args {
         self.flags.iter().any(|f| f == flag)
     }
 
+    /// Worker-thread count from the uniform `--threads` flag: the single
+    /// knob the binary and benches share for both single-RHS and batched
+    /// MVMs. Returns the raw value — 0 (the default, also for an absent
+    /// flag) means "all available cores", resolved in exactly one place:
+    /// `Coordinator::threads()` (via `available_parallelism`).
+    pub fn threads(&self) -> usize {
+        self.get("threads", 0)
+    }
+
     /// Parse a comma-separated list option, e.g. `--dims 3,4,5`.
     pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
     where
@@ -126,6 +135,16 @@ mod tests {
         // A value starting with '-' but not '--' is consumed as a value.
         let a = parse(&["--shift", "-1.5"]);
         assert!((a.get("shift", 0.0f64) + 1.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn threads_flag_parses() {
+        let a = parse(&["--threads", "3"]);
+        assert_eq!(a.threads(), 3);
+        // Absent or explicit zero: 0 = "all cores", resolved by the
+        // coordinator (`Coordinator::threads()`), not here.
+        assert_eq!(parse(&[]).threads(), 0);
+        assert_eq!(parse(&["--threads", "0"]).threads(), 0);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! * metrics — per-phase wall times and tile counts for EXPERIMENTS.md.
 
 use crate::fkt::FktOperator;
+use crate::op::KernelOp;
 use crate::runtime::Runtime;
 use std::time::Instant;
 
@@ -54,6 +55,16 @@ pub struct MvmMetrics {
     pub tiles: usize,
     /// Which backend the near field used.
     pub used_pjrt: bool,
+    /// RHS columns this MVM carried (1 for `mvm`, m for `mvm_batch`).
+    pub columns: usize,
+    /// Moment-phase tree traversals the call cost (from the operator's
+    /// phase counters; 0 when the backend does not track phases). A fused
+    /// m-column batch reports 1 — the batching win in one number.
+    pub moment_passes: usize,
+    /// Far-field (m2t) traversals.
+    pub far_passes: usize,
+    /// Near-field traversals.
+    pub near_passes: usize,
 }
 
 /// The coordinator.
@@ -119,19 +130,53 @@ impl Coordinator {
     }
 
     /// Execute one MVM through the configured backend, recording metrics.
-    pub fn mvm(&mut self, op: &FktOperator, w: &[f64]) -> Vec<f64> {
-        let family = op.kernel.family.name();
-        let dim = op.tree().d;
-        let use_pjrt = self.will_use_pjrt(&family, dim);
-        let mut metrics = MvmMetrics { used_pjrt: use_pjrt, ..Default::default() };
+    /// Takes any [`KernelOp`] — FKT, dense, Barnes–Hut-configured FKT —
+    /// so backends are swappable; the PJRT tile path engages only for FKT
+    /// operators (via [`KernelOp::as_fkt`]) with a matching artifact.
+    pub fn mvm(&mut self, op: &dyn KernelOp, w: &[f64]) -> Vec<f64> {
+        self.mvm_batch(op, w, 1)
+    }
+
+    /// Execute one batched multi-RHS MVM: `m` column-major columns in `w`
+    /// (`w[c*n..(c+1)*n]` is column c), column-major result over targets.
+    /// Fused backends perform one traversal for all m columns — the
+    /// recorded `MvmMetrics` phase counters say how many it actually took.
+    pub fn mvm_batch(&mut self, op: &dyn KernelOp, w: &[f64], m: usize) -> Vec<f64> {
+        assert!(m > 0, "mvm_batch needs at least one column");
+        assert_eq!(w.len(), op.num_sources() * m, "weight block shape mismatch");
+        let before = op.phase_counts();
+        let use_pjrt = match op.as_fkt() {
+            Some(f) => self.will_use_pjrt(&f.kernel.family.name(), f.tree().d),
+            None => false,
+        };
+        let mut metrics = MvmMetrics { used_pjrt: use_pjrt, columns: m, ..Default::default() };
         let z = if use_pjrt {
-            self.mvm_pjrt(op, w, &mut metrics)
+            // The AOT tile executable is single-RHS; columns loop through
+            // it (the tile metrics accumulate across columns).
+            let f = op.as_fkt().expect("pjrt requires an FKT operator");
+            let n = op.num_sources();
+            let ntg = op.num_targets();
+            let mut out = vec![0.0; ntg * m];
+            for c in 0..m {
+                let zc = self.mvm_pjrt(f, &w[c * n..(c + 1) * n], &mut metrics);
+                out[c * ntg..(c + 1) * ntg].copy_from_slice(&zc);
+            }
+            out
         } else {
             let t0 = Instant::now();
-            let z = op.matvec_parallel(w, self.threads());
+            let z = if m == 1 {
+                op.apply_threaded(w, self.threads())
+            } else {
+                op.apply_batch_threaded(w, m, self.threads())
+            };
             metrics.far_seconds = t0.elapsed().as_secs_f64();
             z
         };
+        if let (Some((m0, f0, n0)), Some((m1, f1, n1))) = (before, op.phase_counts()) {
+            metrics.moment_passes = m1 - m0;
+            metrics.far_passes = f1 - f0;
+            metrics.near_passes = n1 - n0;
+        }
         self.last_metrics = metrics;
         z
     }
@@ -202,12 +247,12 @@ impl Coordinator {
                 }
             }
         }
-        metrics.tiles = jobs.len();
+        metrics.tiles += jobs.len();
         // Far field natively while building is done; now run it.
         let mut z = op.matvec_with_near(w, &mut |_leaf, _near, _w, _z| {
             // near handled below through PJRT tiles
         });
-        metrics.far_seconds = t0.elapsed().as_secs_f64();
+        metrics.far_seconds += t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
         // Execute tile jobs in batches of B.
         let mut xbuf = vec![0.0f32; bsz * tile * d];
@@ -231,7 +276,7 @@ impl Coordinator {
             }
             metrics.pjrt_batches += 1;
         }
-        metrics.near_seconds = t1.elapsed().as_secs_f64();
+        metrics.near_seconds += t1.elapsed().as_secs_f64();
         z
     }
 }
@@ -264,6 +309,62 @@ mod tests {
             assert!((z[i] - direct[i]).abs() < 1e-10 * (1.0 + direct[i].abs()));
         }
         assert!(!coord.last_metrics.used_pjrt);
+    }
+
+    #[test]
+    fn batched_mvm_is_one_traversal_and_matches_looped() {
+        let pts = uniform_points(600, 2, 137);
+        let mut rng = Pcg32::seeded(138);
+        let w = rng.normal_vec(600 * 3);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let mut coord = Coordinator::native(4);
+        let batched = coord.mvm_batch(&op, &w, 3);
+        // The whole 3-column batch cost exactly one traversal per phase.
+        assert_eq!(coord.last_metrics.columns, 3);
+        assert_eq!(coord.last_metrics.moment_passes, 1);
+        assert_eq!(coord.last_metrics.far_passes, 1);
+        assert_eq!(coord.last_metrics.near_passes, 1);
+        // And each column matches the looped single-RHS coordinator MVM.
+        for c in 0..3 {
+            let single = coord.mvm(&op, &w[c * 600..(c + 1) * 600]);
+            assert_eq!(coord.last_metrics.moment_passes, 1);
+            for t in 0..600 {
+                let b = batched[c * 600 + t];
+                assert!(
+                    (b - single[t]).abs() <= 1e-12 * (1.0 + single[t].abs()),
+                    "col={c} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coordinator_accepts_any_kernel_op_backend() {
+        use crate::baselines::DenseOperator;
+        let pts = uniform_points(300, 2, 139);
+        let mut rng = Pcg32::seeded(140);
+        let w = rng.normal_vec(300);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let dense_op = DenseOperator::square(&pts, kern);
+        let fkt_op = FktOperator::square(
+            &pts,
+            kern,
+            FktConfig { p: 6, theta: 0.4, leaf_capacity: 32, ..Default::default() },
+        );
+        let mut coord = Coordinator::native(2);
+        let zd = coord.mvm(&dense_op, &w);
+        assert!(!coord.last_metrics.used_pjrt);
+        assert_eq!(coord.last_metrics.moment_passes, 0); // dense: no phases
+        let zf = coord.mvm(&fkt_op, &w);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (a, b) in zf.iter().zip(&zd) {
+            num += (a - b) * (a - b);
+            den += b * b;
+        }
+        assert!((num / den).sqrt() < 1e-4, "backends disagree");
     }
 
     #[test]

@@ -22,8 +22,44 @@ pub mod nearfield;
 use crate::expansion::{Expansion, HarmonicWorkspace};
 use crate::kernels::Kernel;
 use crate::linalg::vecops;
+use crate::op::KernelOp;
 use crate::points::Points;
 use crate::tree::{FarFieldPlan, Tree};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Cumulative full-phase pass counters (interior-mutable so `&self` MVM
+/// entry points can bump them). One unit = one complete pass over the whole
+/// tree for that phase, regardless of how many RHS columns rode along or
+/// how many threads chunked the pass — which is exactly what makes the
+/// counters usable as a "batched MVM costs one traversal" assertion.
+#[derive(Debug, Default)]
+pub struct PhaseCounters {
+    moments: AtomicUsize,
+    far: AtomicUsize,
+    near: AtomicUsize,
+}
+
+impl PhaseCounters {
+    fn snapshot(&self) -> (usize, usize, usize) {
+        (
+            self.moments.load(Ordering::Relaxed),
+            self.far.load(Ordering::Relaxed),
+            self.near.load(Ordering::Relaxed),
+        )
+    }
+
+    fn reset(&self) {
+        self.moments.store(0, Ordering::Relaxed);
+        self.far.store(0, Ordering::Relaxed);
+        self.near.store(0, Ordering::Relaxed);
+    }
+
+    fn bump_all(&self) {
+        self.moments.fetch_add(1, Ordering::Relaxed);
+        self.far.fetch_add(1, Ordering::Relaxed);
+        self.near.fetch_add(1, Ordering::Relaxed);
+    }
+}
 
 /// Where each node's expansion is centered.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -98,6 +134,8 @@ pub struct FktOperator {
     centers: Vec<Vec<f64>>,
     /// Number of sources.
     n_src: usize,
+    /// Traversal counters (see [`PhaseCounters`]).
+    counters: PhaseCounters,
 }
 
 impl FktOperator {
@@ -201,6 +239,7 @@ impl FktOperator {
             radial,
             centers,
             tree,
+            counters: PhaseCounters::default(),
         }
     }
 
@@ -235,6 +274,18 @@ impl FktOperator {
     /// Access the source tree.
     pub fn tree(&self) -> &Tree {
         &self.tree
+    }
+
+    /// Cumulative (moments, far, near) full-phase pass counts since build
+    /// or the last [`FktOperator::reset_traversal_counts`]. A single-RHS
+    /// `matvec` and an m-column `matmat` each cost exactly (1, 1, 1).
+    pub fn traversal_counts(&self) -> (usize, usize, usize) {
+        self.counters.snapshot()
+    }
+
+    /// Zero the traversal counters.
+    pub fn reset_traversal_counts(&self) {
+        self.counters.reset()
     }
 
     /// Upward pass: compute the moment vector of every node.
@@ -439,6 +490,357 @@ impl FktOperator {
         }
     }
 
+    // ------------------------------------------------------------------
+    // Batched multi-RHS engine: the three phases generalized to m columns
+    // sharing one traversal. Internally the column index is innermost
+    // ("interleaved" layout: `w[src*m + c]`, `z[tgt*m + c]`, moments
+    // `mu[term*m + c]`) so every per-point/per-pair coefficient — harmonic
+    // value, radial factor, kernel value — is computed once and contracted
+    // against a contiguous m-vector.
+    // ------------------------------------------------------------------
+
+    /// Moments for `m` interleaved RHS columns, nodes in `range` only:
+    /// `moments[id - offset]` receives `num_terms·m` values laid out
+    /// term-major. The `offset` lets threaded callers hand each worker
+    /// just its own chunk of the moment table (no per-worker full-length
+    /// scratch allocation); serial callers pass the whole table and 0.
+    fn compute_moments_block_range(
+        &self,
+        w: &[f64],
+        m: usize,
+        range: std::ops::Range<usize>,
+        moments: &mut [Vec<f64>],
+        offset: usize,
+    ) {
+        let p = self.cfg.p;
+        let nt = self.num_terms();
+        let mut ws = HarmonicWorkspace::default();
+        let mut yx = vec![0.0; self.exp.basis.total()];
+        let mut rel = vec![0.0; self.tree.d];
+        for id in range {
+            let node = &self.tree.nodes[id];
+            let mut mu = vec![0.0; nt * m];
+            // Skip nodes whose far set is empty — their moments are unused.
+            if self.plan.interactions[id].far.is_empty() {
+                moments[id - offset] = mu;
+                continue;
+            }
+            let center = &self.centers[id];
+            for i in node.start..node.end {
+                let wrow = &w[self.tree.perm[i] * m..self.tree.perm[i] * m + m];
+                if wrow.iter().all(|&v| v == 0.0) {
+                    continue;
+                }
+                let x = self.tree.points.point(i);
+                for a in 0..self.tree.d {
+                    rel[a] = x[a] - center[a];
+                }
+                let r_src = vecops::norm2(&rel);
+                self.exp.basis.eval_into(&rel, &mut ws, &mut yx);
+                match &self.radial {
+                    RadialRep::Generic => {
+                        let mut term = 0usize;
+                        for k in 0..=p {
+                            let o = self.exp.basis.offset(k);
+                            let c = self.exp.basis.count(k);
+                            let nj = self.exp.table.num_j(k);
+                            let s_k = self.exp.inv_rho[k];
+                            // r'^j for j = k, k+2, …
+                            let mut rj = r_src.powi(k as i32);
+                            let r2 = r_src * r_src;
+                            for jj in 0..nj {
+                                for h in 0..c {
+                                    let coef = yx[o + h] * rj * s_k;
+                                    if coef == 0.0 {
+                                        continue;
+                                    }
+                                    let base = (term + h * nj + jj) * m;
+                                    let row = &mut mu[base..base + m];
+                                    for (slot, &wc) in row.iter_mut().zip(wrow) {
+                                        *slot += coef * wc;
+                                    }
+                                }
+                                rj *= r2;
+                            }
+                            term += c * nj;
+                        }
+                    }
+                    RadialRep::Compressed(comp) => {
+                        let mut term = 0usize;
+                        for k in 0..=p {
+                            let o = self.exp.basis.offset(k);
+                            let c = self.exp.basis.count(k);
+                            let gs = comp.eval_g(k, r_src);
+                            let s_k = self.exp.inv_rho[k];
+                            for (i_g, g) in gs.iter().enumerate() {
+                                for h in 0..c {
+                                    let coef = yx[o + h] * g * s_k;
+                                    if coef == 0.0 {
+                                        continue;
+                                    }
+                                    let base = (term + h * gs.len() + i_g) * m;
+                                    let row = &mut mu[base..base + m];
+                                    for (slot, &wc) in row.iter_mut().zip(wrow) {
+                                        *slot += coef * wc;
+                                    }
+                                }
+                            }
+                            term += c * gs.len();
+                        }
+                    }
+                }
+            }
+            moments[id - offset] = mu;
+        }
+    }
+
+    /// Far-field contributions for `m` interleaved columns from nodes in
+    /// `range`: target harmonics and radial factors are evaluated once per
+    /// (node, target) and contracted against the m-column moment block.
+    fn far_field_block_range(
+        &self,
+        moments: &[Vec<f64>],
+        m: usize,
+        range: std::ops::Range<usize>,
+        z: &mut [f64],
+    ) {
+        let p = self.cfg.p;
+        let mut ws = HarmonicWorkspace::default();
+        let mut yy = vec![0.0; self.exp.basis.total()];
+        let mut rel = vec![0.0; self.tree.d];
+        let mut radial = vec![0.0; self.exp.table.num_j(0).max(1) * (p + 1)];
+        let mut derivs = vec![0.0; p + 1];
+        let mut acc = vec![0.0; m];
+        for id in range {
+            let far = &self.plan.interactions[id].far;
+            if far.is_empty() {
+                continue;
+            }
+            let center = &self.centers[id];
+            let mu = &moments[id];
+            for &t in far {
+                let y = self.targets.point(t as usize);
+                for a in 0..self.tree.d {
+                    rel[a] = y[a] - center[a];
+                }
+                let r = vecops::norm2(&rel);
+                self.exp.basis.eval_into(&rel, &mut ws, &mut yy);
+                acc.iter_mut().for_each(|v| *v = 0.0);
+                match &self.radial {
+                    RadialRep::Generic => {
+                        self.kernel.family.derivatives_into(r, p, &mut derivs);
+                        let mut term = 0usize;
+                        for k in 0..=p {
+                            let o = self.exp.basis.offset(k);
+                            let c = self.exp.basis.count(k);
+                            let nj = self.exp.table.num_j(k);
+                            for (jj, slot) in radial.iter_mut().take(nj).enumerate() {
+                                *slot = self.exp.table.radial_m(k, jj, r, &derivs);
+                            }
+                            for h in 0..c {
+                                let yh = yy[o + h];
+                                if yh == 0.0 {
+                                    continue;
+                                }
+                                let base = term + h * nj;
+                                for (jj, &rad) in radial.iter().take(nj).enumerate() {
+                                    let coef = yh * rad;
+                                    if coef == 0.0 {
+                                        continue;
+                                    }
+                                    let mrow = &mu[(base + jj) * m..(base + jj) * m + m];
+                                    for (slot, &mv) in acc.iter_mut().zip(mrow) {
+                                        *slot += coef * mv;
+                                    }
+                                }
+                            }
+                            term += c * nj;
+                        }
+                    }
+                    RadialRep::Compressed(comp) => {
+                        let mut term = 0usize;
+                        for k in 0..=p {
+                            let o = self.exp.basis.offset(k);
+                            let c = self.exp.basis.count(k);
+                            let fs = comp.eval_f(k, r);
+                            for h in 0..c {
+                                let yh = yy[o + h];
+                                if yh == 0.0 {
+                                    continue;
+                                }
+                                let base = term + h * fs.len();
+                                for (i_f, &f) in fs.iter().enumerate() {
+                                    let coef = yh * f;
+                                    if coef == 0.0 {
+                                        continue;
+                                    }
+                                    let mrow = &mu[(base + i_f) * m..(base + i_f) * m + m];
+                                    for (slot, &mv) in acc.iter_mut().zip(mrow) {
+                                        *slot += coef * mv;
+                                    }
+                                }
+                            }
+                            term += c * fs.len();
+                        }
+                    }
+                }
+                let zrow = &mut z[t as usize * m..t as usize * m + m];
+                for (slot, &v) in zrow.iter_mut().zip(acc.iter()) {
+                    *slot += v;
+                }
+            }
+        }
+    }
+
+    /// Near-field contributions for `m` interleaved columns from leaves
+    /// `self.tree.leaves[range]`: one dense GEMM per (leaf, target-block)
+    /// through [`nearfield::block_matmat`] and the `linalg` micro-kernel,
+    /// so each kernel value K(|t−s|) is evaluated once for all columns.
+    fn near_field_block_range(
+        &self,
+        w: &[f64],
+        m: usize,
+        range: std::ops::Range<usize>,
+        z: &mut [f64],
+    ) {
+        let d = self.tree.d;
+        let mut wbuf: Vec<f64> = Vec::new();
+        let mut tbuf: Vec<f64> = Vec::new();
+        let mut obuf: Vec<f64> = Vec::new();
+        for li in range {
+            let leaf = self.tree.leaves[li];
+            let node = &self.tree.nodes[leaf];
+            let near = &self.plan.interactions[leaf].near;
+            if near.is_empty() {
+                continue;
+            }
+            // Gather the leaf's weight rows (n_leaf × m, row-major).
+            wbuf.clear();
+            for i in node.start..node.end {
+                let orig = self.tree.perm[i];
+                wbuf.extend_from_slice(&w[orig * m..orig * m + m]);
+            }
+            let src = &self.tree.points.coords[node.start * d..node.end * d];
+            // Gather near-target coordinates.
+            tbuf.clear();
+            for &t in near {
+                tbuf.extend_from_slice(self.targets.point(t as usize));
+            }
+            obuf.clear();
+            obuf.resize(near.len() * m, 0.0);
+            nearfield::block_matmat(self.kernel.family, d, src, &wbuf, m, &tbuf, &mut obuf);
+            for (slot, &t) in near.iter().enumerate() {
+                let zrow = &mut z[t as usize * m..t as usize * m + m];
+                for (zc, &oc) in zrow.iter_mut().zip(&obuf[slot * m..slot * m + m]) {
+                    *zc += oc;
+                }
+            }
+        }
+    }
+
+    /// Interleaved-layout batched MVM core shared by the serial and
+    /// threaded public entry points; bumps each phase counter exactly once.
+    fn matmat_interleaved(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
+        let nnodes = self.tree.nodes.len();
+        let ntg = self.targets.len();
+        let threads = threads.max(1).min(nnodes.max(1));
+        let mut z = vec![0.0; ntg * m];
+        if threads == 1 {
+            let mut moments: Vec<Vec<f64>> = vec![Vec::new(); nnodes];
+            self.compute_moments_block_range(w, m, 0..nnodes, &mut moments, 0);
+            self.counters.moments.fetch_add(1, Ordering::Relaxed);
+            self.far_field_block_range(&moments, m, 0..nnodes, &mut z);
+            self.counters.far.fetch_add(1, Ordering::Relaxed);
+            self.near_field_block_range(w, m, 0..self.tree.leaves.len(), &mut z);
+            self.counters.near.fetch_add(1, Ordering::Relaxed);
+            return z;
+        }
+        // Phase 1: moments, parallel over disjoint node ranges — the same
+        // crossbeam chunking as `matvec_parallel`, extended to m columns.
+        let mut moments: Vec<Vec<f64>> = vec![Vec::new(); nnodes];
+        let chunk = nnodes.div_ceil(threads);
+        crossbeam_utils::thread::scope(|s| {
+            for (ti, mchunk) in moments.chunks_mut(chunk).enumerate() {
+                let lo = ti * chunk;
+                let hi = (lo + mchunk.len()).min(nnodes);
+                s.spawn(move |_| {
+                    // Each worker writes straight into its own chunk of the
+                    // moment table (ids shifted by `lo`).
+                    self.compute_moments_block_range(w, m, lo..hi, mchunk, lo);
+                });
+            }
+        })
+        .expect("moment threads");
+        self.counters.moments.fetch_add(1, Ordering::Relaxed);
+        // Phase 2 + 3: far + near, per-thread z buffers reduced at the end.
+        let mut partials: Vec<Vec<f64>> = Vec::with_capacity(threads);
+        crossbeam_utils::thread::scope(|s| {
+            let moments = &moments;
+            let mut handles = Vec::new();
+            let nleaves = self.tree.leaves.len();
+            let lchunk = nleaves.div_ceil(threads);
+            for ti in 0..threads {
+                let nlo = (ti * chunk).min(nnodes);
+                let nhi = ((ti + 1) * chunk).min(nnodes);
+                let llo = (ti * lchunk).min(nleaves);
+                let lhi = ((ti + 1) * lchunk).min(nleaves);
+                handles.push(s.spawn(move |_| {
+                    let mut zt = vec![0.0; ntg * m];
+                    self.far_field_block_range(moments, m, nlo..nhi, &mut zt);
+                    self.near_field_block_range(w, m, llo..lhi, &mut zt);
+                    zt
+                }));
+            }
+            for h in handles {
+                partials.push(h.join().expect("matmat worker"));
+            }
+        })
+        .expect("matmat threads");
+        for part in &partials {
+            for (slot, &v) in z.iter_mut().zip(part) {
+                *slot += v;
+            }
+        }
+        self.counters.far.fetch_add(1, Ordering::Relaxed);
+        self.counters.near.fetch_add(1, Ordering::Relaxed);
+        z
+    }
+
+    /// Batched multi-RHS MVM: `Z = K(targets, sources) · W` for `m`
+    /// column-major columns (`w[c*n..(c+1)*n]` is column c; the result is
+    /// column-major over targets likewise). All columns share one tree
+    /// traversal — the per-point harmonics, per-pair radial jets, and
+    /// near-field kernel values are computed once and contracted against
+    /// all m columns. Column c equals `matvec` of column c to round-off.
+    pub fn matmat(&self, w: &[f64], m: usize) -> Vec<f64> {
+        self.matmat_parallel(w, m, 1)
+    }
+
+    /// Multi-threaded batched MVM (see [`FktOperator::matmat`]); preserves
+    /// `matvec_parallel`'s node/leaf chunking scheme.
+    pub fn matmat_parallel(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
+        assert!(m > 0, "matmat needs at least one column");
+        assert_eq!(w.len(), self.n_src * m, "weight block shape mismatch");
+        let n = self.n_src;
+        let ntg = self.targets.len();
+        // Column-major API boundary → column-innermost internal layout.
+        let mut wi = vec![0.0; n * m];
+        for c in 0..m {
+            let col = &w[c * n..(c + 1) * n];
+            for (i, &v) in col.iter().enumerate() {
+                wi[i * m + c] = v;
+            }
+        }
+        let zi = self.matmat_interleaved(&wi, m, threads);
+        let mut out = vec![0.0; ntg * m];
+        for t in 0..ntg {
+            for c in 0..m {
+                out[c * ntg + t] = zi[t * m + c];
+            }
+        }
+        out
+    }
+
     /// Full MVM: `z = K(targets, sources) · w`, both in original order.
     pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
         assert_eq!(w.len(), self.n_src);
@@ -446,6 +848,7 @@ impl FktOperator {
         let moments = self.compute_moments(w);
         self.far_field(&moments, &mut z);
         self.near_field_native(w, &mut z);
+        self.counters.bump_all();
         z
     }
 
@@ -464,6 +867,7 @@ impl FktOperator {
         let t2 = Instant::now();
         self.near_field_native(w, &mut z);
         let t_near = t2.elapsed().as_secs_f64();
+        self.counters.bump_all();
         (z, t_mom, t_far, t_near)
     }
 
@@ -527,6 +931,7 @@ impl FktOperator {
                 z[i] += part[i];
             }
         }
+        self.counters.bump_all();
         z
     }
 
@@ -549,12 +954,51 @@ impl FktOperator {
                 near_exec(leaf, near, w, &mut z);
             }
         }
+        self.counters.bump_all();
         z
     }
 
     /// Scaled target point accessor (for the coordinator's tile gather).
     pub fn target_point(&self, t: usize) -> &[f64] {
         self.targets.point(t)
+    }
+}
+
+impl KernelOp for FktOperator {
+    fn num_sources(&self) -> usize {
+        self.n_src
+    }
+
+    fn num_targets(&self) -> usize {
+        self.targets.len()
+    }
+
+    fn apply(&self, w: &[f64]) -> Vec<f64> {
+        self.matvec(w)
+    }
+
+    fn apply_batch(&self, w: &[f64], m: usize) -> Vec<f64> {
+        self.matmat(w, m)
+    }
+
+    fn apply_threaded(&self, w: &[f64], threads: usize) -> Vec<f64> {
+        self.matvec_parallel(w, threads)
+    }
+
+    fn apply_batch_threaded(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
+        self.matmat_parallel(w, m, threads)
+    }
+
+    fn phase_counts(&self) -> Option<(usize, usize, usize)> {
+        Some(self.traversal_counts())
+    }
+
+    fn reset_phase_counts(&self) {
+        self.reset_traversal_counts()
+    }
+
+    fn as_fkt(&self) -> Option<&FktOperator> {
+        Some(self)
     }
 }
 
@@ -709,7 +1153,7 @@ mod tests {
         let pts = uniform_points(200, 2, 118);
         let kern = Kernel::canonical(Family::Cauchy);
         let op = FktOperator::square(&pts, kern, FktConfig::default());
-        let z = op.matvec(&vec![0.0; 200]);
+        let z = op.matvec(&[0.0; 200]);
         assert!(z.iter().all(|&v| v == 0.0));
     }
 
@@ -787,6 +1231,112 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Batched-vs-looped agreement: column c of `matmat_parallel(w, m, t)`
+    /// must equal the looped single-RHS MVM of column c (same thread
+    /// count, hence same reduction order) to ≤ 1e-12 relative.
+    fn assert_batched_matches_looped(op: &FktOperator, w: &[f64], m: usize, threads: usize) {
+        let n = op.num_sources();
+        let ntg = op.num_targets();
+        let batched = op.matmat_parallel(w, m, threads);
+        assert_eq!(batched.len(), ntg * m);
+        for c in 0..m {
+            let single = op.matvec_parallel(&w[c * n..(c + 1) * n], threads);
+            for t in 0..ntg {
+                let b = batched[c * ntg + t];
+                let s = single[t];
+                assert!(
+                    (b - s).abs() <= 1e-12 * (1.0 + s.abs()),
+                    "m={m} threads={threads} col={c} t={t}: {b} vs {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_matches_looped_across_kernels_and_threads() {
+        let pts = uniform_points(700, 3, 140);
+        let mut rng = Pcg32::seeded(141);
+        let w = rng.normal_vec(700 * 3);
+        for fam in [Family::Gaussian, Family::Matern32, Family::Cauchy] {
+            let kern = Kernel::canonical(fam);
+            let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 40, ..Default::default() };
+            let op = FktOperator::square(&pts, kern, cfg);
+            for threads in [1usize, 4, 7] {
+                assert_batched_matches_looped(&op, &w, 3, threads);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_matches_looped_rectangular() {
+        // GP-prediction shape: targets ≠ sources, m = 2.
+        let src = uniform_points(400, 2, 142);
+        let tgt = uniform_points(230, 2, 143);
+        let mut rng = Pcg32::seeded(144);
+        let w = rng.normal_vec(400 * 2);
+        for fam in [Family::Gaussian, Family::Cauchy] {
+            let kern = Kernel::canonical(fam);
+            let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 25, ..Default::default() };
+            let op = FktOperator::new(&src, Some(&tgt), kern, cfg);
+            for threads in [1usize, 4, 7] {
+                assert_batched_matches_looped(&op, &w, 2, threads);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_matches_looped_compressed_radial() {
+        let pts = uniform_points(500, 3, 145);
+        let mut rng = Pcg32::seeded(146);
+        let w = rng.normal_vec(500 * 3);
+        let kern = Kernel::new(Family::Matern32, 1.3);
+        let cfg = FktConfig {
+            p: 5,
+            theta: 0.5,
+            leaf_capacity: 32,
+            compression: true,
+            ..Default::default()
+        };
+        let op = FktOperator::square(&pts, kern, cfg);
+        assert_batched_matches_looped(&op, &w, 3, 1);
+        assert_batched_matches_looped(&op, &w, 3, 4);
+    }
+
+    #[test]
+    fn batched_single_column_matches_matvec() {
+        let pts = uniform_points(300, 2, 147);
+        let mut rng = Pcg32::seeded(148);
+        let w = rng.normal_vec(300);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 30, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        assert_batched_matches_looped(&op, &w, 1, 1);
+    }
+
+    #[test]
+    fn phase_counters_count_traversals() {
+        let pts = uniform_points(400, 2, 149);
+        let mut rng = Pcg32::seeded(150);
+        let w3 = rng.normal_vec(400 * 3);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let cfg = FktConfig { p: 3, theta: 0.5, leaf_capacity: 32, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        op.reset_traversal_counts();
+        // One 3-column batch = exactly one traversal of every phase.
+        let _ = op.matmat(&w3, 3);
+        assert_eq!(op.traversal_counts(), (1, 1, 1));
+        // A threaded batch is still one traversal.
+        let _ = op.matmat_parallel(&w3, 3, 4);
+        assert_eq!(op.traversal_counts(), (2, 2, 2));
+        // Three looped single-RHS MVMs cost three.
+        for c in 0..3 {
+            let _ = op.matvec(&w3[c * 400..(c + 1) * 400]);
+        }
+        assert_eq!(op.traversal_counts(), (5, 5, 5));
+        op.reset_traversal_counts();
+        assert_eq!(op.traversal_counts(), (0, 0, 0));
     }
 
     #[test]

@@ -97,6 +97,63 @@ fn block_mvm_generic(
     }
 }
 
+/// Targets per kernel block in [`block_matmat`]: keeps the materialized
+/// K-block (`TGT_CHUNK × n_leaf` f64s, ≤ 128 KiB at leaf capacity 512)
+/// L2-resident between the distance pass and the GEMM.
+const TGT_CHUNK: usize = 32;
+
+/// Multi-RHS near-field block: `out[t][c] += Σ_s K(|t−s|) w[s][c]` for a
+/// dense (leaf, target-block) pair. `w` is `n×m` row-major weights, `out`
+/// is `t×m` row-major accumulators. The kernel profile is evaluated once
+/// per (target, source) pair — shared across all m columns — into a small
+/// block which is then contracted with the weight block through the
+/// [`crate::linalg::gemm_accum`] micro-kernel.
+pub fn block_matmat(
+    family: Family,
+    d: usize,
+    src: &[f64],
+    w: &[f64],
+    m: usize,
+    tgt: &[f64],
+    out: &mut [f64],
+) {
+    let n = src.len() / d;
+    let t_total = tgt.len() / d;
+    debug_assert_eq!(src.len(), n * d);
+    debug_assert_eq!(w.len(), n * m);
+    debug_assert_eq!(out.len(), t_total * m);
+    let zero = family.value_at_zero();
+    let mut kblock = vec![0.0f64; TGT_CHUNK.min(t_total.max(1)) * n];
+    let mut t0 = 0;
+    while t0 < t_total {
+        let tc = TGT_CHUNK.min(t_total - t0);
+        // Pass 1: kernel block rows (distance + profile, RHS-independent).
+        for ti in 0..tc {
+            let tp = &tgt[(t0 + ti) * d..(t0 + ti) * d + d];
+            let krow = &mut kblock[ti * n..(ti + 1) * n];
+            for (s, slot) in krow.iter_mut().enumerate() {
+                let sp = &src[s * d..s * d + d];
+                let mut d2 = 0.0;
+                for a in 0..d {
+                    let dd = tp[a] - sp[a];
+                    d2 += dd * dd;
+                }
+                *slot = if d2 == 0.0 { zero } else { family.eval(d2.sqrt()) };
+            }
+        }
+        // Pass 2: contract against all m weight columns at once.
+        crate::linalg::gemm_accum(
+            &kblock[..tc * n],
+            tc,
+            n,
+            w,
+            m,
+            &mut out[t0 * m..(t0 + tc) * m],
+        );
+        t0 += tc;
+    }
+}
+
 /// Reference implementation used to pin `block_mvm` (and the Pallas tile).
 pub fn block_mvm_reference(
     kernel: &Kernel,
@@ -164,6 +221,52 @@ mod tests {
         let base = block_mvm_reference(&Kernel::canonical(Family::Gaussian), 2, &src, &w, &tgt);
         for (a, b) in out.iter().zip(&base) {
             assert!((a - (b + 1.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn block_matmat_matches_looped_block_mvm() {
+        let mut rng = Pcg32::seeded(97);
+        for d in [2usize, 3, 5] {
+            // n spans below/at/above TGT_CHUNK-sized leaves, m several widths.
+            for (n, t, m) in [(17, 9, 1), (40, 33, 3), (64, 70, 4)] {
+                let src = rng.uniform_vec(n * d, 0.0, 1.0);
+                let tgt = rng.uniform_vec(t * d, 0.0, 1.0);
+                let w = rng.normal_vec(n * m);
+                for fam in [Family::Cauchy, Family::Coulomb, Family::Gaussian] {
+                    let mut out = vec![0.0; t * m];
+                    block_matmat(fam, d, &src, &w, m, &tgt, &mut out);
+                    for c in 0..m {
+                        // Column c of the row-major weight block.
+                        let wc: Vec<f64> = (0..n).map(|s| w[s * m + c]).collect();
+                        let mut expect = vec![0.0; t];
+                        block_mvm(fam, d, &src, &wc, &tgt, &mut expect);
+                        for ti in 0..t {
+                            assert!(
+                                (out[ti * m + c] - expect[ti]).abs()
+                                    <= 1e-12 * (1.0 + expect[ti].abs()),
+                                "{fam:?} d={d} n={n} t={t} m={m} col={c} row={ti}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_matmat_accumulates_into_out() {
+        let mut rng = Pcg32::seeded(98);
+        let (n, t, m) = (12, 5, 2);
+        let src = rng.uniform_vec(n * 2, 0.0, 1.0);
+        let tgt = rng.uniform_vec(t * 2, 0.0, 1.0);
+        let w = rng.normal_vec(n * m);
+        let mut out = vec![2.0; t * m];
+        block_matmat(Family::Gaussian, 2, &src, &w, m, &tgt, &mut out);
+        let mut base = vec![0.0; t * m];
+        block_matmat(Family::Gaussian, 2, &src, &w, m, &tgt, &mut base);
+        for i in 0..t * m {
+            assert!((out[i] - (base[i] + 2.0)).abs() < 1e-12);
         }
     }
 

@@ -6,7 +6,10 @@
 //! conjugate gradients whose operator is one FKT MVM plus the diagonal,
 //! and the cross-covariance term is one rectangular FKT MVM — so the whole
 //! inference is quasilinear, the Wang et al. (2019)-style MVM-only GP the
-//! paper invokes.
+//! paper invokes. Every MVM flows through the coordinator's `KernelOp`
+//! surface (see DESIGN.md §KernelOp), so the solver is backend-agnostic;
+//! CG is inherently sequential in its single RHS, while batched multi-RHS
+//! probes (block-CG, posterior sampling) ride `Coordinator::mvm_batch`.
 
 use crate::coordinator::Coordinator;
 use crate::fkt::{FktConfig, FktOperator};

@@ -50,7 +50,9 @@ impl KernelDensity {
     }
 }
 
-/// Nadaraya–Watson kernel regression estimate at `eval_points`.
+/// Nadaraya–Watson kernel regression estimate at `eval_points`. The
+/// numerator (`K·v`) and denominator (`K·1`) MVMs are fused into one
+/// 2-column batch sharing a single tree traversal.
 pub fn kernel_regression(
     data: &Points,
     values: &[f64],
@@ -62,10 +64,14 @@ pub fn kernel_regression(
     assert_eq!(data.len(), values.len());
     let kernel = Kernel::new(Family::Gaussian, 1.0 / h);
     let op = FktOperator::new(data, Some(eval_points), kernel, cfg);
-    let num = coord.mvm(&op, values);
-    let den = coord.mvm(&op, &vec![1.0; values.len()]);
+    let n = values.len();
+    let mut wb = Vec::with_capacity(2 * n);
+    wb.extend_from_slice(values);
+    wb.resize(2 * n, 1.0);
+    let nd = coord.mvm_batch(&op, &wb, 2);
+    let (num, den) = nd.split_at(eval_points.len());
     num.iter()
-        .zip(&den)
+        .zip(den)
         .map(|(a, b)| if b.abs() > 1e-12 { a / b } else { 0.0 })
         .collect()
 }
@@ -125,6 +131,36 @@ mod tests {
                 (fast[t] - exact).abs() < 1e-4 * (1.0 + exact),
                 "t={t}: {} vs {exact}",
                 fast[t]
+            );
+        }
+    }
+
+    #[test]
+    fn fused_regression_matches_two_separate_mvms() {
+        // The fused numerator/denominator batch must reproduce the
+        // pre-fusion code path (two independent MVMs) to round-off.
+        let mut rng = Pcg32::seeded(504);
+        let n = 600;
+        let data = Points::new(2, rng.normal_vec(n * 2));
+        let values = rng.normal_vec(n);
+        let eval = Points::new(2, rng.normal_vec(40 * 2));
+        let h = 0.5;
+        let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 48, ..Default::default() };
+        let mut coord = Coordinator::native(2);
+        let fused = kernel_regression(&data, &values, &eval, h, cfg, &mut coord);
+        // One traversal for both columns.
+        assert_eq!(coord.last_metrics.columns, 2);
+        assert_eq!(coord.last_metrics.moment_passes, 1);
+        let kernel = Kernel::new(Family::Gaussian, 1.0 / h);
+        let op = FktOperator::new(&data, Some(&eval), kernel, cfg);
+        let num = coord.mvm(&op, &values);
+        let den = coord.mvm(&op, &vec![1.0; n]);
+        for t in 0..eval.len() {
+            let expect = if den[t].abs() > 1e-12 { num[t] / den[t] } else { 0.0 };
+            assert!(
+                (fused[t] - expect).abs() <= 1e-10 * (1.0 + expect.abs()),
+                "t={t}: {} vs {expect}",
+                fused[t]
             );
         }
     }

@@ -140,6 +140,29 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
+/// Accumulating dense GEMM micro-kernel: `C += A · B` with row-major
+/// `A (ra×n)`, `B (n×m)`, `C (ra×m)` given as flat slices. The i-k-j loop
+/// order keeps the inner loop a contiguous axpy over B's rows so it
+/// auto-vectorizes for the small m (2–8 RHS columns) the batched near
+/// field produces; `B` may be a leading sub-block of a longer slice.
+pub fn gemm_accum(a: &[f64], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [f64]) {
+    assert_eq!(a.len(), ra * n, "A shape mismatch");
+    assert!(b.len() >= n * m, "B too short");
+    assert_eq!(c.len(), ra * m, "C shape mismatch");
+    for i in 0..ra {
+        let arow = &a[i * n..(i + 1) * n];
+        let crow = &mut c[i * m..(i + 1) * m];
+        for (&aik, brow) in arow.iter().zip(b.chunks_exact(m)) {
+            if aik == 0.0 {
+                continue;
+            }
+            for (slot, &bv) in crow.iter_mut().zip(brow) {
+                *slot += aik * bv;
+            }
+        }
+    }
+}
+
 /// Vector helpers used throughout.
 pub mod vecops {
     /// Dot product.
@@ -405,6 +428,20 @@ mod tests {
         let b = Mat::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
         let c = a.gemm(&b);
         assert_eq!(c.data, vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn gemm_accum_matches_mat_gemm_and_accumulates() {
+        let mut rng = Pcg32::seeded(8);
+        let (ra, n, m) = (5, 7, 3);
+        let a = Mat::from_vec(ra, n, rng.normal_vec(ra * n));
+        let b = Mat::from_vec(n, m, rng.normal_vec(n * m));
+        let expect = a.gemm(&b);
+        let mut c = vec![1.0; ra * m];
+        gemm_accum(&a.data, ra, n, &b.data, m, &mut c);
+        for i in 0..ra * m {
+            assert!((c[i] - (expect.data[i] + 1.0)).abs() < 1e-12, "i={i}");
+        }
     }
 
     #[test]

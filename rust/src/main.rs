@@ -42,7 +42,9 @@ fn backend_from(args: &Args) -> CoordinatorConfig {
         "pjrt" => Backend::Pjrt,
         _ => Backend::Auto,
     };
-    CoordinatorConfig { threads: args.get("threads", 0), backend }
+    // `--threads N` (0/absent ⇒ all cores, resolved by the coordinator)
+    // governs single and batched MVMs alike.
+    CoordinatorConfig { threads: args.threads(), backend }
 }
 
 fn info() {
@@ -95,13 +97,32 @@ fn mvm(args: &Args) {
     let (op, w, pts, kernel) = build_op(args);
     println!("build: {}", fmt_time(t0.elapsed().as_secs_f64()));
     let mut coord = Coordinator::new(backend_from(args));
+    let cols: usize = args.get("cols", 1);
     let t1 = Instant::now();
-    let z = coord.mvm(&op, &w);
-    println!(
-        "mvm: {} (backend {})",
-        fmt_time(t1.elapsed().as_secs_f64()),
-        if coord.last_metrics.used_pjrt { "pjrt" } else { "native" }
-    );
+    let z = if cols > 1 {
+        // Batched demo: `--cols m` runs one m-column mvm_batch (replicated
+        // weights) sharing a single traversal; column 0 is reported below.
+        let mut wb = Vec::with_capacity(cols * w.len());
+        for _ in 0..cols {
+            wb.extend_from_slice(&w);
+        }
+        let zb = coord.mvm_batch(&op, &wb, cols);
+        println!(
+            "mvm_batch: {} for {cols} columns in {} moment traversal(s) (backend {})",
+            fmt_time(t1.elapsed().as_secs_f64()),
+            coord.last_metrics.moment_passes,
+            if coord.last_metrics.used_pjrt { "pjrt" } else { "native" }
+        );
+        zb[..op.num_targets()].to_vec()
+    } else {
+        let z = coord.mvm(&op, &w);
+        println!(
+            "mvm: {} (backend {})",
+            fmt_time(t1.elapsed().as_secs_f64()),
+            if coord.last_metrics.used_pjrt { "pjrt" } else { "native" }
+        );
+        z
+    };
     // Spot accuracy on a subsample.
     let m = pts.len().min(1000);
     let sub = Points::new(pts.d, pts.coords[..m * pts.d].to_vec());

@@ -1,0 +1,166 @@
+//! The unified kernel-operator layer.
+//!
+//! Every fast (or exact) kernel summation backend in this crate is a linear
+//! operator `z = K(targets, sources) · w`, and every downstream workload —
+//! GP regression, t-SNE repulsion, KDE / Nadaraya–Watson regression, the
+//! CLI, the benches — consumes it only through that algebraic surface. The
+//! [`KernelOp`] trait makes the surface explicit so backends are swappable
+//! (FKT, dense, Barnes–Hut-configured FKT, PJRT-tiled near field) and so
+//! the coordinator can stay concrete-type agnostic.
+//!
+//! The trait's second pillar is **multi-RHS batching**: workloads are
+//! inherently multi-column (t-SNE needs three squared-Cauchy MVMs per
+//! gradient step, Nadaraya–Watson needs a numerator and a denominator, GP
+//! prediction wants blocks of probe vectors), while all the expensive,
+//! RHS-independent work of a fast transform — tree traversal, harmonic
+//! evaluations `Y_k^h`, radial jets `M_kj`, near-field distances — can be
+//! shared across columns. [`KernelOp::apply_batch`] takes `m` columns at
+//! once; fused implementations (see `FktOperator::matmat`) perform exactly
+//! one traversal for all `m` columns, while the default implementation
+//! falls back to looping [`KernelOp::apply`].
+//!
+//! **Layout convention.** Batched weights and results are column-major:
+//! column `c` of the input occupies `w[c*n .. (c+1)*n]` (`n` sources), and
+//! column `c` of the output occupies `z[c*t .. (c+1)*t]` (`t` targets).
+//! Column `c` of `apply_batch(w, m)` equals `apply` of column `c`.
+
+/// A linear kernel-summation operator `z = K(targets, sources) · w`.
+///
+/// Implementors: [`crate::fkt::FktOperator`] (fast transform, fused batch),
+/// [`crate::baselines::DenseOperator`] (exact O(N·M), shared-distance
+/// batch), and — via [`KernelOp::as_fkt`] — the coordinator's PJRT-tiled
+/// near-field path.
+pub trait KernelOp {
+    /// Number of source points (the length of one weight column).
+    fn num_sources(&self) -> usize;
+
+    /// Number of target points (the length of one result column).
+    fn num_targets(&self) -> usize;
+
+    /// Single-RHS product `z = K · w` with `w.len() == num_sources()`.
+    fn apply(&self, w: &[f64]) -> Vec<f64>;
+
+    /// Multi-RHS product over `m` column-major columns (see module docs for
+    /// the layout). The default loops [`KernelOp::apply`]; fused backends
+    /// override it to share one traversal across all columns.
+    fn apply_batch(&self, w: &[f64], m: usize) -> Vec<f64> {
+        looped(self.num_sources(), self.num_targets(), w, m, |col| self.apply(col))
+    }
+
+    /// Threaded single-RHS product. The default ignores `threads`; backends
+    /// with an internal pool (FKT's crossbeam node/leaf chunking) override.
+    fn apply_threaded(&self, w: &[f64], threads: usize) -> Vec<f64> {
+        let _ = threads;
+        self.apply(w)
+    }
+
+    /// Threaded multi-RHS product (same column-major layout).
+    fn apply_batch_threaded(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
+        let _ = threads;
+        self.apply_batch(w, m)
+    }
+
+    /// Cumulative (moments, far-field, near-field) full-phase pass counts,
+    /// for backends that track them — the coordinator diffs these around an
+    /// MVM to report how many traversals it cost (`MvmMetrics`). `None`
+    /// when the backend has no phase structure.
+    fn phase_counts(&self) -> Option<(usize, usize, usize)> {
+        None
+    }
+
+    /// Reset the phase counters behind [`KernelOp::phase_counts`].
+    fn reset_phase_counts(&self) {}
+
+    /// Downcast hook for the coordinator's PJRT tile path, which needs the
+    /// FKT tree/plan to gather near-field tiles. `None` for other backends
+    /// (they simply run natively).
+    fn as_fkt(&self) -> Option<&crate::fkt::FktOperator> {
+        None
+    }
+}
+
+/// The one looping implementation behind both the `apply_batch` default
+/// and [`apply_batch_looped`].
+fn looped(
+    n: usize,
+    t: usize,
+    w: &[f64],
+    m: usize,
+    mut apply: impl FnMut(&[f64]) -> Vec<f64>,
+) -> Vec<f64> {
+    assert!(m > 0, "apply_batch needs at least one column");
+    assert_eq!(w.len(), n * m, "weight block shape mismatch");
+    let mut out = vec![0.0; t * m];
+    for c in 0..m {
+        let z = apply(&w[c * n..(c + 1) * n]);
+        out[c * t..(c + 1) * t].copy_from_slice(&z);
+    }
+    out
+}
+
+/// Reference semantics of [`KernelOp::apply_batch`]: `m` looped single-RHS
+/// applications, regardless of any fused override. Used by tests and the
+/// `batched_vs_looped_mvm` bench to pin fused implementations.
+pub fn apply_batch_looped(op: &dyn KernelOp, w: &[f64], m: usize) -> Vec<f64> {
+    looped(op.num_sources(), op.num_targets(), w, m, |col| op.apply(col))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::DenseOperator;
+    use crate::fkt::{FktConfig, FktOperator};
+    use crate::kernels::{Family, Kernel};
+    use crate::points::Points;
+    use crate::rng::Pcg32;
+
+    fn uniform_points(n: usize, d: usize, seed: u64) -> Points {
+        let mut rng = Pcg32::seeded(seed);
+        Points::new(d, rng.uniform_vec(n * d, 0.0, 1.0))
+    }
+
+    #[test]
+    fn default_apply_batch_loops_columns() {
+        let pts = uniform_points(150, 2, 301);
+        let mut rng = Pcg32::seeded(302);
+        let w = rng.normal_vec(150 * 2);
+        let op = DenseOperator::square(&pts, Kernel::canonical(Family::Gaussian));
+        let fused = op.apply_batch(&w, 2);
+        let looped = apply_batch_looped(&op, &w, 2);
+        assert_eq!(fused.len(), looped.len());
+        for (a, b) in fused.iter().zip(&looped) {
+            assert!((a - b).abs() <= 1e-12 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn trait_objects_swap_backends() {
+        // The same workload through two backends via &dyn KernelOp.
+        let pts = uniform_points(300, 2, 303);
+        let mut rng = Pcg32::seeded(304);
+        let w = rng.normal_vec(300);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let cfg = FktConfig { p: 6, theta: 0.4, leaf_capacity: 32, ..Default::default() };
+        let fkt_op = FktOperator::square(&pts, kern, cfg);
+        let dense_op = DenseOperator::square(&pts, kern);
+        let backends: Vec<&dyn KernelOp> = vec![&fkt_op, &dense_op];
+        let results: Vec<Vec<f64>> = backends.iter().map(|b| b.apply(&w)).collect();
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (x, y) in results[0].iter().zip(&results[1]) {
+            num += (x - y) * (x - y);
+            den += y * y;
+        }
+        assert!((num / den).sqrt() < 1e-4, "backends disagree");
+    }
+
+    #[test]
+    fn as_fkt_downcast() {
+        let pts = uniform_points(50, 2, 305);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let fkt_op = FktOperator::square(&pts, kern, FktConfig::default());
+        let dense_op = DenseOperator::square(&pts, kern);
+        assert!((&fkt_op as &dyn KernelOp).as_fkt().is_some());
+        assert!((&dense_op as &dyn KernelOp).as_fkt().is_none());
+    }
+}

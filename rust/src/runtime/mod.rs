@@ -6,10 +6,18 @@
 //! therefore accepts jax ≥ 0.5 output that the 0.5.1 proto path rejects),
 //! compile each module once on the PJRT CPU client, and execute from the
 //! coordinator's hot path. Python never runs at request time.
+//!
+//! The XLA bindings are not available offline, so the whole PJRT surface
+//! is gated behind the off-by-default `pjrt` cargo feature (which also
+//! needs the `xla` dependency added in `Cargo.toml`). Without it this
+//! module compiles a native-only stub with the same public surface:
+//! [`Runtime::open_default`] reports no runtime, `has_near_batch` is
+//! always false, and the coordinator's backend selection falls through to
+//! the specialized rust block kernels — so every caller (coordinator,
+//! CLI `info`, the `runtime_tiles` bench) typechecks identically in both
+//! configurations.
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 /// One artifact entry from `artifacts/manifest.txt`.
 #[derive(Clone, Debug)]
@@ -30,138 +38,228 @@ pub struct ManifestEntry {
     pub file: String,
 }
 
-/// Compiled near-batch executable with its shape metadata.
-pub struct NearBatchExec {
-    exe: xla::PjRtLoadedExecutable,
-    /// Batch size B.
-    pub batch: usize,
-    /// Tile size T.
-    pub tile: usize,
-    /// Dimension d.
-    pub dim: usize,
+/// Default artifact location relative to the repo root, honoring
+/// `FKT_ARTIFACTS` when set.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("FKT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-impl NearBatchExec {
-    /// Execute one batch: x (B,T,d), w (B,T), y (B,T,d) as flat f32 slices;
-    /// returns z (B,T) flat.
-    pub fn execute(&self, x: &[f32], w: &[f32], y: &[f32]) -> Result<Vec<f32>> {
-        let b = self.batch as i64;
-        let t = self.tile as i64;
-        let d = self.dim as i64;
-        assert_eq!(x.len(), (b * t * d) as usize);
-        assert_eq!(w.len(), (b * t) as usize);
-        assert_eq!(y.len(), (b * t * d) as usize);
-        let lx = xla::Literal::vec1(x).reshape(&[b, t, d])?;
-        let lw = xla::Literal::vec1(w).reshape(&[b, t])?;
-        let ly = xla::Literal::vec1(y).reshape(&[b, t, d])?;
-        let result = self.exe.execute::<xla::Literal>(&[lx, lw, ly])?[0][0]
-            .to_literal_sync()?;
-        let tuple = result.to_tuple1()?;
-        Ok(tuple.to_vec::<f32>()?)
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::{default_artifact_dir, ManifestEntry};
+    use anyhow::{anyhow, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    /// Compiled near-batch executable with its shape metadata.
+    pub struct NearBatchExec {
+        exe: xla::PjRtLoadedExecutable,
+        /// Batch size B.
+        pub batch: usize,
+        /// Tile size T.
+        pub tile: usize,
+        /// Dimension d.
+        pub dim: usize,
     }
-}
 
-/// The artifact runtime: a PJRT CPU client plus compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    entries: Vec<ManifestEntry>,
-    near_cache: HashMap<(String, usize), NearBatchExec>,
-}
+    impl NearBatchExec {
+        /// Execute one batch: x (B,T,d), w (B,T), y (B,T,d) as flat f32
+        /// slices; returns z (B,T) flat.
+        pub fn execute(&self, x: &[f32], w: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+            let b = self.batch as i64;
+            let t = self.tile as i64;
+            let d = self.dim as i64;
+            assert_eq!(x.len(), (b * t * d) as usize);
+            assert_eq!(w.len(), (b * t) as usize);
+            assert_eq!(y.len(), (b * t * d) as usize);
+            let lx = xla::Literal::vec1(x).reshape(&[b, t, d])?;
+            let lw = xla::Literal::vec1(w).reshape(&[b, t])?;
+            let ly = xla::Literal::vec1(y).reshape(&[b, t, d])?;
+            let result = self.exe.execute::<xla::Literal>(&[lx, lw, ly])?[0][0]
+                .to_literal_sync()?;
+            let tuple = result.to_tuple1()?;
+            Ok(tuple.to_vec::<f32>()?)
+        }
+    }
 
-impl Runtime {
-    /// Open the artifact directory; does not compile anything yet.
-    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {manifest:?} — run `make artifacts`"))?;
-        let mut entries = Vec::new();
-        for line in text.lines() {
-            let parts: Vec<&str> = line.split_whitespace().collect();
-            if parts.len() != 7 {
-                continue;
+    /// The artifact runtime: a PJRT CPU client plus compiled executables.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        entries: Vec<ManifestEntry>,
+        near_cache: HashMap<(String, usize), NearBatchExec>,
+    }
+
+    impl Runtime {
+        /// Open the artifact directory; does not compile anything yet.
+        pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest = dir.join("manifest.txt");
+            let text = std::fs::read_to_string(&manifest)
+                .with_context(|| format!("reading {manifest:?} — run `make artifacts`"))?;
+            let mut entries = Vec::new();
+            for line in text.lines() {
+                let parts: Vec<&str> = line.split_whitespace().collect();
+                if parts.len() != 7 {
+                    continue;
+                }
+                entries.push(ManifestEntry {
+                    kind: parts[0].to_string(),
+                    family: parts[1].to_string(),
+                    dim: parts[2].parse()?,
+                    batch: parts[3].parse()?,
+                    tile: parts[4].parse()?,
+                    n_src: parts[5].parse()?,
+                    file: parts[6].to_string(),
+                });
             }
-            entries.push(ManifestEntry {
-                kind: parts[0].to_string(),
-                family: parts[1].to_string(),
-                dim: parts[2].parse()?,
-                batch: parts[3].parse()?,
-                tile: parts[4].parse()?,
-                n_src: parts[5].parse()?,
-                file: parts[6].to_string(),
-            });
+            if entries.is_empty() {
+                return Err(anyhow!("empty manifest at {manifest:?}"));
+            }
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+            Ok(Runtime { client, dir, entries, near_cache: HashMap::new() })
         }
-        if entries.is_empty() {
-            return Err(anyhow!("empty manifest at {manifest:?}"));
+
+        /// Default artifact location (see [`super::default_artifact_dir`]).
+        pub fn default_dir() -> PathBuf {
+            default_artifact_dir()
         }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        Ok(Runtime { client, dir, entries, near_cache: HashMap::new() })
-    }
 
-    /// Default artifact location relative to the repo root, honoring
-    /// `FKT_ARTIFACTS` when set.
-    pub fn default_dir() -> PathBuf {
-        std::env::var_os("FKT_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
-    }
+        /// Try to open the default artifact dir; `None` (with no error)
+        /// when artifacts have not been built — callers fall back to
+        /// native compute.
+        pub fn open_default() -> Option<Runtime> {
+            Runtime::open(Self::default_dir()).ok()
+        }
 
-    /// Try to open the default artifact dir; `None` (with no error) when
-    /// artifacts have not been built — callers fall back to native compute.
-    pub fn open_default() -> Option<Runtime> {
-        Runtime::open(Self::default_dir()).ok()
-    }
+        /// Manifest entries.
+        pub fn entries(&self) -> &[ManifestEntry] {
+            &self.entries
+        }
 
-    /// Manifest entries.
-    pub fn entries(&self) -> &[ManifestEntry] {
-        &self.entries
-    }
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+        fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
+        }
 
-    fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
-        let path = self.dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
-    }
+        /// Get (compiling and caching on first use) the near-batch
+        /// executable for a kernel family and dimension.
+        pub fn near_batch(&mut self, family: &str, dim: usize) -> Result<&NearBatchExec> {
+            let key = (family.to_string(), dim);
+            if !self.near_cache.contains_key(&key) {
+                let entry = self
+                    .entries
+                    .iter()
+                    .find(|e| e.kind == "near_batch" && e.family == family && e.dim == dim)
+                    .ok_or_else(|| {
+                        anyhow!("no near_batch artifact for family={family} d={dim}")
+                    })?
+                    .clone();
+                let exe = self.compile(&entry.file)?;
+                self.near_cache.insert(
+                    key.clone(),
+                    NearBatchExec { exe, batch: entry.batch, tile: entry.tile, dim: entry.dim },
+                );
+            }
+            Ok(&self.near_cache[&key])
+        }
 
-    /// Get (compiling and caching on first use) the near-batch executable
-    /// for a kernel family and dimension.
-    pub fn near_batch(&mut self, family: &str, dim: usize) -> Result<&NearBatchExec> {
-        let key = (family.to_string(), dim);
-        if !self.near_cache.contains_key(&key) {
-            let entry = self
-                .entries
+        /// Whether an artifact exists for (family, dim).
+        pub fn has_near_batch(&self, family: &str, dim: usize) -> bool {
+            self.entries
                 .iter()
-                .find(|e| e.kind == "near_batch" && e.family == family && e.dim == dim)
-                .ok_or_else(|| {
-                    anyhow!("no near_batch artifact for family={family} d={dim}")
-                })?
-                .clone();
-            let exe = self.compile(&entry.file)?;
-            self.near_cache.insert(
-                key.clone(),
-                NearBatchExec { exe, batch: entry.batch, tile: entry.tile, dim: entry.dim },
-            );
+                .any(|e| e.kind == "near_batch" && e.family == family && e.dim == dim)
         }
-        Ok(&self.near_cache[&key])
-    }
-
-    /// Whether an artifact exists for (family, dim).
-    pub fn has_near_batch(&self, family: &str, dim: usize) -> bool {
-        self.entries
-            .iter()
-            .any(|e| e.kind == "near_batch" && e.family == family && e.dim == dim)
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{NearBatchExec, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::{default_artifact_dir, ManifestEntry};
+    use anyhow::{anyhow, Result};
+    use std::path::{Path, PathBuf};
+
+    /// Stub tile executable: present so the coordinator/bench PJRT seams
+    /// typecheck; never constructible without the `pjrt` feature.
+    pub struct NearBatchExec {
+        /// Batch size B.
+        pub batch: usize,
+        /// Tile size T.
+        pub tile: usize,
+        /// Dimension d.
+        pub dim: usize,
+    }
+
+    impl NearBatchExec {
+        /// Always fails: the crate was built without the `pjrt` feature.
+        pub fn execute(&self, _x: &[f32], _w: &[f32], _y: &[f32]) -> Result<Vec<f32>> {
+            Err(anyhow!("fkt was built without the `pjrt` feature"))
+        }
+    }
+
+    /// Native-only runtime stub: no artifacts are ever reported, so every
+    /// caller falls back to the specialized rust block kernels.
+    pub struct Runtime {
+        entries: Vec<ManifestEntry>,
+    }
+
+    impl Runtime {
+        /// Always fails: the crate was built without the `pjrt` feature.
+        pub fn open(_dir: impl AsRef<Path>) -> Result<Runtime> {
+            Err(anyhow!("fkt was built without the `pjrt` feature"))
+        }
+
+        /// Default artifact location (see [`super::default_artifact_dir`]).
+        pub fn default_dir() -> PathBuf {
+            default_artifact_dir()
+        }
+
+        /// `None`: no PJRT runtime in a native-only build.
+        pub fn open_default() -> Option<Runtime> {
+            None
+        }
+
+        /// Manifest entries (always empty).
+        pub fn entries(&self) -> &[ManifestEntry] {
+            &self.entries
+        }
+
+        /// Diagnostics placeholder.
+        pub fn platform(&self) -> String {
+            "unavailable (built without the pjrt feature)".into()
+        }
+
+        /// Always fails in a native-only build.
+        pub fn near_batch(&mut self, family: &str, dim: usize) -> Result<&NearBatchExec> {
+            Err(anyhow!(
+                "no pjrt runtime for family={family} d={dim}: built without the `pjrt` feature"
+            ))
+        }
+
+        /// Always false in a native-only build.
+        pub fn has_near_batch(&self, _family: &str, _dim: usize) -> bool {
+            false
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{NearBatchExec, Runtime};
 
 #[cfg(test)]
 mod tests {
@@ -169,8 +267,16 @@ mod tests {
 
     fn runtime() -> Option<Runtime> {
         // Tests run from the repo root; skip gracefully when artifacts are
-        // absent (e.g. fresh checkout before `make artifacts`).
+        // absent (e.g. fresh checkout before `make artifacts`) or the crate
+        // was built without the `pjrt` feature.
         Runtime::open_default()
+    }
+
+    #[test]
+    fn stub_or_real_open_default_is_safe() {
+        // In a native-only build this is always None; with pjrt it may be
+        // Some. Either way the probe itself must not panic.
+        let _ = runtime();
     }
 
     #[test]

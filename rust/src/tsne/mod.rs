@@ -178,11 +178,17 @@ pub fn repulsive_field(
     let cauchy = FktOperator::square(embedding, Kernel::canonical(Family::Cauchy), cfg.fkt);
     let s1 = coord.mvm(&cauchy, &ones);
     let z: f64 = s1.iter().sum::<f64>() - n as f64;
-    // Repulsion: squared-Cauchy MVMs with [1, y_x, y_y].
+    // Repulsion: the three squared-Cauchy MVMs with [1, y_x, y_y] fused
+    // into one 3-column batch — a single tree traversal per gradient step
+    // instead of three (the per-pair harmonics and radial jets are shared).
     let csq = FktOperator::square(embedding, Kernel::canonical(Family::CauchySquared), cfg.fkt);
-    let a = coord.mvm(&csq, &ones);
-    let bx = coord.mvm(&csq, &y0);
-    let by = coord.mvm(&csq, &y1);
+    let mut wb = Vec::with_capacity(3 * n);
+    wb.extend_from_slice(&ones);
+    wb.extend_from_slice(&y0);
+    wb.extend_from_slice(&y1);
+    let abxy = coord.mvm_batch(&csq, &wb, 3);
+    let (a, rest) = abxy.split_at(n);
+    let (bx, by) = rest.split_at(n);
     let mut rx = vec![0.0; n];
     let mut ry = vec![0.0; n];
     for i in 0..n {
@@ -344,6 +350,36 @@ mod tests {
         }
         let rel = err.sqrt() / norm;
         assert!(rel < 1e-3, "repulsion rel err {rel}");
+    }
+
+    #[test]
+    fn fused_repulsion_matches_three_separate_mvms() {
+        // The fused 3-column batch must reproduce the pre-fusion code path
+        // (three independent squared-Cauchy MVMs) to round-off.
+        let mut rng = Pcg32::seeded(235);
+        let emb = Points::new(2, rng.normal_vec(500 * 2));
+        let n = emb.len();
+        let cfg = TsneConfig {
+            exact_repulsion: false,
+            fkt: FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() },
+            ..Default::default()
+        };
+        let mut coord = Coordinator::native(2);
+        let (fx, fy, _) = repulsive_field(&emb, &cfg, &mut coord);
+        // Pre-fusion reference: the same operator, three single-RHS MVMs.
+        let ones = vec![1.0; n];
+        let y0: Vec<f64> = (0..n).map(|i| emb.point(i)[0]).collect();
+        let y1: Vec<f64> = (0..n).map(|i| emb.point(i)[1]).collect();
+        let csq = FktOperator::square(&emb, Kernel::canonical(Family::CauchySquared), cfg.fkt);
+        let a = coord.mvm(&csq, &ones);
+        let bx = coord.mvm(&csq, &y0);
+        let by = coord.mvm(&csq, &y1);
+        for i in 0..n {
+            let rx = (a[i] - 1.0) * y0[i] - (bx[i] - y0[i]);
+            let ry = (a[i] - 1.0) * y1[i] - (by[i] - y1[i]);
+            assert!((fx[i] - rx).abs() <= 1e-10 * (1.0 + rx.abs()), "i={i}");
+            assert!((fy[i] - ry).abs() <= 1e-10 * (1.0 + ry.abs()), "i={i}");
+        }
     }
 
     #[test]

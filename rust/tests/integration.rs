@@ -66,6 +66,89 @@ fn pjrt_backend_end_to_end_when_artifacts_built() {
 }
 
 #[test]
+fn batched_mvm_matches_looped_through_coordinator() {
+    // The full multi-RHS pipeline: one 3-column mvm_batch equals three
+    // looped coordinator MVMs to ≤ 1e-12, in exactly one traversal,
+    // across kernels and thread counts.
+    let mut rng = Pcg32::seeded(405);
+    let n = 900;
+    let pts = Points::new(3, rng.uniform_vec(n * 3, 0.0, 1.0));
+    let w = rng.normal_vec(n * 3);
+    for fam in [Family::Cauchy, Family::Gaussian, Family::Matern32] {
+        let kern = Kernel::canonical(fam);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        for threads in [1usize, 4, 7] {
+            let mut coord = Coordinator::native(threads);
+            let batched = coord.mvm_batch(&op, &w, 3);
+            assert_eq!(coord.last_metrics.columns, 3);
+            assert_eq!(coord.last_metrics.moment_passes, 1, "{fam:?} threads={threads}");
+            assert_eq!(coord.last_metrics.far_passes, 1);
+            assert_eq!(coord.last_metrics.near_passes, 1);
+            for c in 0..3 {
+                let single = coord.mvm(&op, &w[c * n..(c + 1) * n]);
+                for t in 0..n {
+                    let b = batched[c * n + t];
+                    assert!(
+                        (b - single[t]).abs() <= 1e-12 * (1.0 + single[t].abs()),
+                        "{fam:?} threads={threads} col={c} t={t}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_rectangular_operator_through_coordinator() {
+    // GP-prediction shape (targets ≠ sources) through the full stack.
+    let mut rng = Pcg32::seeded(406);
+    let src = Points::new(2, rng.uniform_vec(500 * 2, 0.0, 1.0));
+    let tgt = Points::new(2, rng.uniform_vec(170 * 2, 0.0, 1.0));
+    let w = rng.normal_vec(500 * 2);
+    let kern = Kernel::canonical(Family::Gaussian);
+    let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 40, ..Default::default() };
+    let op = FktOperator::new(&src, Some(&tgt), kern, cfg);
+    for threads in [1usize, 4] {
+        let mut coord = Coordinator::native(threads);
+        let batched = coord.mvm_batch(&op, &w, 2);
+        assert_eq!(batched.len(), 170 * 2);
+        for c in 0..2 {
+            let single = coord.mvm(&op, &w[c * 500..(c + 1) * 500]);
+            for t in 0..170 {
+                let b = batched[c * 170 + t];
+                assert!(
+                    (b - single[t]).abs() <= 1e-12 * (1.0 + single[t].abs()),
+                    "threads={threads} col={c} t={t}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_backend_swaps_in_through_kernel_op() {
+    use fkt::baselines::DenseOperator;
+    use fkt::op::KernelOp;
+    let mut rng = Pcg32::seeded(407);
+    let pts = Points::new(2, rng.uniform_vec(400 * 2, 0.0, 1.0));
+    let w = rng.normal_vec(400);
+    let kern = Kernel::canonical(Family::Cauchy);
+    let mut coord = Coordinator::native(2);
+    let dense_op = DenseOperator::square(&pts, kern);
+    let fkt_op = FktOperator::square(
+        &pts,
+        kern,
+        FktConfig { p: 6, theta: 0.4, leaf_capacity: 32, ..Default::default() },
+    );
+    // Same call site, two backends — the coordinator only sees KernelOp.
+    let ops: [&dyn KernelOp; 2] = [&dense_op, &fkt_op];
+    let results: Vec<Vec<f64>> = ops.iter().map(|op| coord.mvm(*op, &w)).collect();
+    let e = rel_err(&results[1], &results[0]);
+    assert!(e < 1e-4, "backend mismatch {e}");
+}
+
+#[test]
 fn gp_end_to_end_smoke() {
     use fkt::data::sst;
     use fkt::gp::{GpConfig, GpRegressor};
