@@ -13,12 +13,12 @@
 use fkt::baselines::{dense_matrix, dense_mvm};
 use fkt::benchkit::{fmt_time, Bencher, Table};
 use fkt::cli::Args;
-use fkt::coordinator::Coordinator;
-use fkt::fkt::{ExpansionCenter, FktConfig, FktOperator};
+use fkt::fkt::{ExpansionCenter, FktConfig};
 use fkt::kernels::{Family, Kernel};
 use fkt::linalg::numerical_rank;
 use fkt::points::Points;
 use fkt::rng::Pcg32;
+use fkt::session::{Backend, Session};
 
 fn rel_err(a: &[f64], b: &[f64]) -> f64 {
     let mut num = 0.0;
@@ -42,16 +42,28 @@ fn main() {
     let kern = Kernel::canonical(Family::Exponential);
     let dense = dense_mvm(&kern, &pts, &pts, &w);
     // Uniform `--threads` knob (0 = all cores) shared across benches.
-    let mut coord = Coordinator::native(args.threads());
+    // Tiny registry: each ablation config is requested once — no reuse to
+    // cache, no reason to retain every swept operator.
+    let mut session = Session::builder()
+        .threads(args.threads())
+        .backend(Backend::Native)
+        .registry_capacity(2)
+        .build();
 
     println!("Ablation 1: expansion center (N={n}, exponential 2-D, θ=0.5, positive weights)");
     let mut t1 = Table::new(&["p", "center", "runtime", "rel_err"]);
     for p in [0usize, 2, 4] {
         for (name, center) in [("box", ExpansionCenter::BoxCenter), ("centroid", ExpansionCenter::Centroid)] {
-            let cfg = FktConfig { p, theta: 0.5, leaf_capacity: 128, center, ..Default::default() };
-            let op = FktOperator::square(&pts, kern, cfg);
-            let st = bench.run(|| coord.mvm(&op, &w));
-            let e = rel_err(&coord.mvm(&op, &w), &dense);
+            let op = session
+                .operator(&pts)
+                .kernel(Family::Exponential)
+                .order(p)
+                .theta(0.5)
+                .leaf_capacity(128)
+                .center(center)
+                .build();
+            let st = bench.run(|| session.mvm(&op, &w));
+            let e = rel_err(&session.mvm(&op, &w), &dense);
             t1.row(&[p.to_string(), name.into(), fmt_time(st.median), format!("{e:.2e}")]);
         }
     }
@@ -63,17 +75,23 @@ fn main() {
     let dense3 = dense_mvm(&kern, &pts3, &pts3, &w);
     let mut t2 = Table::new(&["p", "terms generic", "terms compressed", "t generic", "t compressed", "err ratio"]);
     for p in [4usize, 6, 8] {
+        // One shared config keeps the generic/compressed pair identical in
+        // everything but the compression toggle.
         let base = FktConfig { p, theta: 0.5, leaf_capacity: 128, ..Default::default() };
-        let op_g = FktOperator::square(&pts3, kern, base);
-        let op_c = FktOperator::square(&pts3, kern, FktConfig { compression: true, ..base });
-        let st_g = bench.run(|| coord.mvm(&op_g, &w));
-        let st_c = bench.run(|| coord.mvm(&op_c, &w));
-        let e_g = rel_err(&coord.mvm(&op_g, &w), &dense3);
-        let e_c = rel_err(&coord.mvm(&op_c, &w), &dense3);
+        let op_g = session.operator(&pts3).kernel(Family::Exponential).config(base).build();
+        let op_c = session
+            .operator(&pts3)
+            .kernel(Family::Exponential)
+            .config(FktConfig { compression: true, ..base })
+            .build();
+        let st_g = bench.run(|| session.mvm(&op_g, &w));
+        let st_c = bench.run(|| session.mvm(&op_c, &w));
+        let e_g = rel_err(&session.mvm(&op_g, &w), &dense3);
+        let e_c = rel_err(&session.mvm(&op_c, &w), &dense3);
         t2.row(&[
             p.to_string(),
-            op_g.num_terms().to_string(),
-            op_c.num_terms().to_string(),
+            op_g.as_fkt().expect("fkt").num_terms().to_string(),
+            op_c.as_fkt().expect("fkt").num_terms().to_string(),
             fmt_time(st_g.median),
             fmt_time(st_c.median),
             format!("{:.2}", e_c / e_g.max(1e-300)),

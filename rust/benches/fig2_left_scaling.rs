@@ -13,12 +13,11 @@
 use fkt::baselines::dense_mvm;
 use fkt::benchkit::{fmt_time, Bencher, Table};
 use fkt::cli::Args;
-use fkt::coordinator::Coordinator;
 use fkt::data::uniform_hypersphere;
-use fkt::fkt::{FktConfig, FktOperator};
 use fkt::kernels::{Family, Kernel};
 use fkt::points::Points;
 use fkt::rng::Pcg32;
+use fkt::session::{Backend, Session};
 
 fn main() {
     let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
@@ -34,7 +33,13 @@ fn main() {
     let leaf: usize = args.get("leaf", 512);
     let dense_cap: usize = args.get("dense-cap", 20000);
     let bench = if full { Bencher::default() } else { Bencher::quick() };
-    let mut coord = Coordinator::native(args.threads());
+    // Tiny registry: every (d, N, p) key is distinct here, so caching can't
+    // help — a small LRU keeps the paper-scale sweep's memory flat.
+    let mut session = Session::builder()
+        .threads(args.threads())
+        .backend(Backend::Native)
+        .registry_capacity(2)
+        .build();
 
     println!("Fig 2 (left): FKT vs dense MVM, Matérn ν=1/2, θ={theta}, leaf={leaf}");
     let mut table = Table::new(&[
@@ -52,11 +57,16 @@ fn main() {
             let st = bench.run(|| dense_mvm(&kern, &pts, &sub, &w));
             let dense_time = st.median * n as f64 / m as f64;
             for &p in &ps {
-                let cfg = FktConfig { p, theta, leaf_capacity: leaf, ..Default::default() };
                 let t0 = std::time::Instant::now();
-                let op = FktOperator::square(&pts, kern, cfg);
+                let op = session
+                    .operator(&pts)
+                    .kernel(Family::Exponential)
+                    .order(p)
+                    .theta(theta)
+                    .leaf_capacity(leaf)
+                    .build();
                 let build = t0.elapsed().as_secs_f64();
-                let st = bench.run(|| coord.mvm(&op, &w));
+                let st = bench.run(|| session.mvm(&op, &w));
                 table.row(&[
                     d.to_string(),
                     n.to_string(),
@@ -65,7 +75,7 @@ fn main() {
                     fmt_time(st.median),
                     fmt_time(dense_time),
                     format!("{:.1}x", dense_time / st.median),
-                    op.num_terms().to_string(),
+                    op.as_fkt().expect("fkt").num_terms().to_string(),
                 ]);
             }
         }

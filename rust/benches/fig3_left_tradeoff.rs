@@ -13,11 +13,10 @@
 use fkt::baselines::dense_mvm;
 use fkt::benchkit::{fmt_time, Bencher, Table};
 use fkt::cli::Args;
-use fkt::coordinator::Coordinator;
 use fkt::data::uniform_cube;
-use fkt::fkt::{FktConfig, FktOperator};
 use fkt::kernels::{Family, Kernel};
 use fkt::rng::Pcg32;
+use fkt::session::{Backend, Session};
 
 fn main() {
     let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
@@ -35,7 +34,13 @@ fn main() {
     println!("computing dense reference…");
     let dense = dense_mvm(&kern, &pts, &pts, &w);
     let dense_norm: f64 = dense.iter().map(|v| v * v).sum::<f64>().sqrt();
-    let mut coord = Coordinator::native(args.threads());
+    // Tiny registry: every (p, θ) key in the sweep is requested exactly
+    // once, so caching can't help — don't retain ~25 dead operators.
+    let mut session = Session::builder()
+        .threads(args.threads())
+        .backend(Backend::Native)
+        .registry_capacity(2)
+        .build();
 
     let rel_err = |z: &[f64]| -> f64 {
         let mut num = 0.0;
@@ -48,9 +53,9 @@ fn main() {
     let mut table = Table::new(&["method", "theta", "runtime", "rel_err"]);
     for &theta in &thetas {
         // Barnes–Hut: p=0 with centroid expansion centers (the paper's B-H).
-        let op = FktOperator::square(&pts, kern, FktConfig::barnes_hut(theta, leaf));
-        let st = bench.run(|| coord.mvm(&op, &w));
-        let e = rel_err(&coord.mvm(&op, &w));
+        let op = session.operator(&pts).kernel(Family::Cauchy).barnes_hut(theta, leaf).build();
+        let st = bench.run(|| session.mvm(&op, &w));
+        let e = rel_err(&session.mvm(&op, &w));
         table.row(&[
             "B-H".into(),
             format!("{theta}"),
@@ -60,10 +65,15 @@ fn main() {
     }
     for &p in &ps {
         for &theta in &thetas {
-            let cfg = FktConfig { p, theta, leaf_capacity: leaf, ..Default::default() };
-            let op = FktOperator::square(&pts, kern, cfg);
-            let st = bench.run(|| coord.mvm(&op, &w));
-            let e = rel_err(&coord.mvm(&op, &w));
+            let op = session
+                .operator(&pts)
+                .kernel(Family::Cauchy)
+                .order(p)
+                .theta(theta)
+                .leaf_capacity(leaf)
+                .build();
+            let st = bench.run(|| session.mvm(&op, &w));
+            let e = rel_err(&session.mvm(&op, &w));
             table.row(&[
                 format!("FKT p={p}"),
                 format!("{theta}"),

@@ -7,12 +7,12 @@
 
 use fkt::benchkit::{fmt_time, Table};
 use fkt::cli::Args;
-use fkt::coordinator::Coordinator;
 use fkt::data::sst;
 use fkt::fkt::FktConfig;
 use fkt::gp::{GpConfig, GpRegressor};
 use fkt::kernels::Kernel;
 use fkt::rng::Pcg32;
+use fkt::session::Session;
 use std::time::Instant;
 
 fn main() {
@@ -26,7 +26,7 @@ fn main() {
     let p: usize = args.get("p", 4);
     let theta: f64 = args.get("theta", 0.6);
     let rho: f64 = args.get("rho", 0.22);
-    let mut coord = Coordinator::native(args.threads());
+    let mut session = Session::native(args.threads());
 
     println!("GP solve (Fig 4 workload): Matérn-3/2 ρ={rho}, p={p}, θ={theta}");
     let mut table = Table::new(&[
@@ -44,18 +44,19 @@ fn main() {
             cg_tol: 1e-5,
             cg_max_iters: 300,
             jitter: 1e-6,
-            precondition: true,
+            ..Default::default()
         };
         let t0 = Instant::now();
-        let gp = GpRegressor::new(pts, ds.noise_variances(), Kernel::matern32(rho), cfg);
+        let gp =
+            GpRegressor::new(&mut session, pts, ds.noise_variances(), Kernel::matern32(rho), cfg);
         let build = t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
-        let fit = gp.fit_alpha(&y0, &mut coord);
+        let fit = gp.fit_alpha(&y0, &mut session);
         let cg_time = t1.elapsed().as_secs_f64();
         // Prediction on a small grid + RMSE vs known truth.
         let (grid, coords) = sst::prediction_grid(40, 120, 60.0);
         let t2 = Instant::now();
-        let res = gp.posterior_mean(&y0, &grid, &mut coord);
+        let res = gp.posterior_mean(&y0, &grid, &mut session);
         let pred_time = t2.elapsed().as_secs_f64();
         let mut se = 0.0;
         for (i, &(lat, lon)) in coords.iter().enumerate() {

@@ -1,0 +1,99 @@
+//! Session-registry benchmark: what operator reuse is worth.
+//!
+//! A service answering repeated requests over one dataset should pay the
+//! O(N log N) tree/plan/expansion build once. This bench measures the cold
+//! build against the registry-cached re-request (fingerprint + hash
+//! lookup) and records the ratio — plus the tolerance-resolution choices —
+//! into BENCH.json (merged, so other benches' keys survive).
+//!
+//! ```text
+//! cargo bench --bench session_registry [-- --n 40000]
+//! ```
+
+use fkt::benchkit::{fmt_time, BenchJson, Bencher, Table};
+use fkt::cli::Args;
+use fkt::kernels::Family;
+use fkt::rng::Pcg32;
+use fkt::session::Session;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n: usize = args.get("n", if args.has_flag("full") { 60000 } else { 20000 });
+    let d: usize = args.get("d", 3);
+    let bench = Bencher::quick();
+    let mut rng = Pcg32::seeded(55);
+    let pts = fkt::data::uniform_hypersphere(n, d, &mut rng);
+    let w = rng.normal_vec(n);
+    let mut json = BenchJson::new();
+
+    println!("Session registry: cold build vs cached re-request (N={n}, d={d}, matern32)");
+    let mut session = Session::native(args.threads());
+    // Cold build: first request pays tree + plan + expansion.
+    let t0 = std::time::Instant::now();
+    let op = session
+        .operator(&pts)
+        .kernel(Family::Matern32)
+        .order(args.get("p", 4))
+        .theta(args.get("theta", 0.5))
+        .leaf_capacity(args.get("leaf", 512))
+        .build();
+    let build_s = t0.elapsed().as_secs_f64();
+    // Cached: the identical request is a fingerprint + registry hit.
+    let st_hit = bench.run(|| {
+        session
+            .operator(&pts)
+            .kernel(Family::Matern32)
+            .order(args.get("p", 4))
+            .theta(args.get("theta", 0.5))
+            .leaf_capacity(args.get("leaf", 512))
+            .build()
+    });
+    let stats = session.registry_stats();
+    assert!(stats.hits >= 1, "re-requests must hit the cache");
+    let speedup = build_s / st_hit.median;
+    let mut table = Table::new(&["phase", "time", "speedup"]);
+    table.row(&["cold build".into(), fmt_time(build_s), "1.0x".into()]);
+    table.row(&["cached re-request".into(), fmt_time(st_hit.median), format!("{speedup:.1}x")]);
+    table.print();
+    println!(
+        "registry: {} hits / {} misses, {:.3}s total build seconds (misses only)",
+        stats.hits, stats.misses, stats.build_seconds
+    );
+    json.record("operator_build_seconds", build_s);
+    json.record("operator_cached_seconds", st_hit.median);
+    json.record("cache_speedup", speedup);
+
+    // The cached handle is live: one MVM through it as a sanity check that
+    // reuse returns a working operator (and to time the request→result
+    // path a warm service actually serves).
+    let t1 = std::time::Instant::now();
+    let z = session.mvm(&op, &w);
+    json.record("warm_mvm_seconds", t1.elapsed().as_secs_f64());
+    assert_eq!(z.len(), n);
+
+    // Tolerance resolution: what the accuracy dial costs and chooses.
+    println!("\nTolerance resolution (matern32, unit hypersphere):");
+    let mut ttable = Table::new(&["eps", "p", "theta", "bound", "resolve+build"]);
+    for eps in [1e-2, 1e-4, 1e-6] {
+        let t2 = std::time::Instant::now();
+        let h = session.operator(&pts).kernel(Family::Matern32).tolerance(eps).build();
+        let dt = t2.elapsed().as_secs_f64();
+        let res = h.resolved().expect("resolved");
+        ttable.row(&[
+            format!("{eps:.0e}"),
+            res.p.to_string(),
+            format!("{}", res.theta),
+            format!("{:.1e}", res.bound),
+            fmt_time(dt),
+        ]);
+        json.record(&format!("tolerance_resolved_p_eps{eps:.0e}"), res.p as f64);
+        json.record(&format!("tolerance_resolved_theta_eps{eps:.0e}"), res.theta);
+    }
+    ttable.print();
+
+    let path = BenchJson::default_path();
+    match json.save_merged(&path) {
+        Ok(()) => println!("\nBENCH json merged into {}", path.display()),
+        Err(e) => eprintln!("\nBENCH json write failed ({}): {e}", path.display()),
+    }
+}

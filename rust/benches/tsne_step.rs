@@ -7,11 +7,11 @@
 
 use fkt::benchkit::{fmt_time, BenchJson, Bencher, Table};
 use fkt::cli::Args;
-use fkt::coordinator::Coordinator;
-use fkt::fkt::{FktConfig, FktOperator};
-use fkt::kernels::{Family, Kernel};
+use fkt::fkt::FktConfig;
+use fkt::kernels::Family;
 use fkt::points::Points;
 use fkt::rng::Pcg32;
+use fkt::session::Session;
 use fkt::tsne::{repulsive_field, TsneConfig};
 
 fn main() {
@@ -23,7 +23,7 @@ fn main() {
         args.get_list("ns", &[2000, 10000])
     };
     let bench = if full { Bencher::default() } else { Bencher::quick() };
-    let mut coord = Coordinator::native(args.threads());
+    let mut session = Session::native(args.threads());
 
     println!("t-SNE repulsive-field step: exact vs B-H-like (p=0) vs FKT");
     let mut table = Table::new(&["N", "method", "time/step", "Z rel err"]);
@@ -36,7 +36,7 @@ fn main() {
         let mut z_exact = 0.0;
         if n <= 20000 {
             let st = bench.run(|| {
-                let r = repulsive_field(&emb, &exact_cfg, &mut coord);
+                let r = repulsive_field(&emb, &exact_cfg, &mut session);
                 z_exact = r.2;
                 r
             });
@@ -50,7 +50,7 @@ fn main() {
             };
             let mut z_fkt = 0.0;
             let st = bench.run(|| {
-                let r = repulsive_field(&emb, &cfg, &mut coord);
+                let r = repulsive_field(&emb, &cfg, &mut session);
                 z_fkt = r.2;
                 r
             });
@@ -78,8 +78,13 @@ fn main() {
         let mut rng = Pcg32::seeded(78);
         let (emb, _) = fkt::data::gaussian_mixture(n, 2, 10, 0.5, &mut rng);
         let emb = Points::new(2, emb.coords.iter().map(|c| c * 10.0).collect());
-        let cfg = FktConfig { p: 3, theta: 0.5, leaf_capacity: 128, ..Default::default() };
-        let op = FktOperator::square(&emb, Kernel::canonical(Family::CauchySquared), cfg);
+        let op = session
+            .operator(&emb)
+            .kernel(Family::CauchySquared)
+            .order(3)
+            .theta(0.5)
+            .leaf_capacity(128)
+            .build();
         let ones = vec![1.0; n];
         let y0: Vec<f64> = (0..n).map(|i| emb.point(i)[0]).collect();
         let y1: Vec<f64> = (0..n).map(|i| emb.point(i)[1]).collect();
@@ -88,13 +93,13 @@ fn main() {
         wb.extend_from_slice(&y0);
         wb.extend_from_slice(&y1);
         let st_loop = bench.run(|| {
-            let a = coord.mvm(&op, &ones);
-            let bx = coord.mvm(&op, &y0);
-            let by = coord.mvm(&op, &y1);
+            let a = session.mvm(&op, &ones);
+            let bx = session.mvm(&op, &y0);
+            let by = session.mvm(&op, &y1);
             (a, bx, by)
         });
-        let st_batch = bench.run(|| coord.mvm_batch(&op, &wb, 3));
-        assert_eq!(coord.last_metrics.moment_passes, 1, "batch must be one traversal");
+        let st_batch = bench.run(|| session.mvm_batch(&op, &wb, 3));
+        assert_eq!(session.last_metrics().moment_passes, 1, "batch must be one traversal");
         let ratio = st_loop.median / st_batch.median;
         last_ratio = ratio;
         btable.row(&[
@@ -110,8 +115,8 @@ fn main() {
     btable.print();
     json.record("batched_vs_looped_mvm", last_ratio);
     let path = BenchJson::default_path();
-    match json.save(&path) {
-        Ok(()) => println!("\nBENCH json written to {}", path.display()),
+    match json.save_merged(&path) {
+        Ok(()) => println!("\nBENCH json merged into {}", path.display()),
         Err(e) => eprintln!("\nBENCH json write failed ({}): {e}", path.display()),
     }
 }

@@ -1,0 +1,111 @@
+//! Quickstart: open a session, request an operator, multiply, compare to
+//! dense — the whole public API in one file.
+//!
+//! ```text
+//! cargo run --release --example quickstart -- --n 20000 --d 3 --tol 1e-5
+//! cargo run --release --example quickstart -- --n 20000 --d 3 --p 4 --theta 0.5
+//! ```
+
+use fkt::baselines::dense_mvm;
+use fkt::benchkit::fmt_time;
+use fkt::cli::Args;
+use fkt::kernels::{Family, Kernel};
+use fkt::rng::Pcg32;
+use fkt::session::{Backend, Session};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse();
+    let n: usize = args.get("n", 20_000);
+    let d: usize = args.get("d", 3);
+    let leaf: usize = args.get("leaf", 512);
+    let seed: u64 = args.get("seed", 1);
+    let family = Family::from_name(&args.get_str("kernel", "matern32")).expect("kernel name");
+    let kernel = Kernel::canonical(family);
+
+    println!("FKT quickstart: N={n} d={d} kernel={}", family.name());
+    let mut rng = Pcg32::seeded(seed);
+    let pts = fkt::data::uniform_hypersphere(n, d, &mut rng);
+    let w = rng.normal_vec(n);
+
+    // One session owns the coordinator, the operator registry, and
+    // tolerance resolution (PJRT tiles engage automatically when built).
+    let backend =
+        Backend::from_name(&args.get_str("backend", "auto")).unwrap_or(Backend::Auto);
+    let mut session = Session::builder().threads(args.threads()).backend(backend).build();
+
+    // Request the operator: `--tol ε` auto-tunes (p, θ) from the requested
+    // accuracy via the truncation bound, with explicit `--p/--theta` as
+    // overrides (OpSpec rules); without `--tol` the flags or their
+    // defaults apply. One closure builds the request so the cached
+    // re-request below is byte-for-byte the same spec.
+    let request = |session: &mut Session| {
+        let mut spec = session.operator(&pts).kernel(family).leaf_capacity(leaf);
+        match args.tolerance() {
+            Some(eps) => {
+                spec = spec.tolerance(eps);
+                if let Some(p) = args.get_opt("p") {
+                    spec = spec.order(p);
+                }
+                if let Some(t) = args.get_opt("theta") {
+                    spec = spec.theta(t);
+                }
+            }
+            None => spec = spec.order(args.get("p", 4)).theta(args.get("theta", 0.5)),
+        }
+        spec.build()
+    };
+    let t0 = Instant::now();
+    let op = request(&mut session);
+    let fkt_op = op.as_fkt().expect("fkt backend");
+    println!(
+        "build: {} (p={} θ={}, {} nodes, {} multipole terms/node, {} far pairs, {} near pairs)",
+        fmt_time(t0.elapsed().as_secs_f64()),
+        op.order(),
+        op.theta(),
+        fkt_op.tree().nodes.len(),
+        fkt_op.num_terms(),
+        fkt_op.plan().far_pairs,
+        fkt_op.plan().near_pairs,
+    );
+    if let Some(res) = op.resolved() {
+        println!("tolerance resolved: bound estimate {:.2e}", res.bound);
+    }
+
+    // Fast multiply through the session.
+    let t1 = Instant::now();
+    let z = session.mvm(&op, &w);
+    let fkt_time = t1.elapsed().as_secs_f64();
+    println!(
+        "FKT multiply: {} (backend: {})",
+        fmt_time(fkt_time),
+        if session.last_metrics().used_pjrt { "PJRT tiles" } else { "native" }
+    );
+
+    // A repeated request is a registry hit — the service-side win.
+    let t2 = Instant::now();
+    let op2 = request(&mut session);
+    assert!(op.ptr_eq(&op2), "same request must hit the registry");
+    println!(
+        "cached re-request: {} ({} hits / {} misses)",
+        fmt_time(t2.elapsed().as_secs_f64()),
+        session.registry_stats().hits,
+        session.registry_stats().misses,
+    );
+
+    // Dense comparison on a subsample (full dense above 30k is slow).
+    let m = n.min(2000);
+    let sub = fkt::points::Points::new(d, pts.coords[..m * d].to_vec());
+    let t3 = Instant::now();
+    let dense = dense_mvm(&kernel, &pts, &sub, &w);
+    let dense_time = t3.elapsed().as_secs_f64() * n as f64 / m as f64;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..m {
+        num += (z[i] - dense[i]) * (z[i] - dense[i]);
+        den += dense[i] * dense[i];
+    }
+    println!("dense multiply (extrapolated): {}", fmt_time(dense_time));
+    println!("relative ℓ2 error vs dense: {:.3e}", (num / den).sqrt());
+    println!("speedup: {:.1}×", dense_time / fkt_time);
+}

@@ -145,6 +145,69 @@ impl BenchJson {
         std::fs::write(path, self.to_json() + "\n")
     }
 
+    /// Parse a flat `{"key": number, ...}` object as produced by
+    /// [`BenchJson::to_json`]. Tolerant of whitespace; unparsable values
+    /// (including `null`) are skipped. Not a general JSON parser — just
+    /// the inverse of our own writer, for merging across bench binaries.
+    pub fn parse_flat(text: &str) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        let mut chars = text.chars().peekable();
+        loop {
+            // Scan to the next opening quote (key start).
+            if !chars.any(|c| c == '"') {
+                break;
+            }
+            let mut key = String::new();
+            let mut escaped = false;
+            for c in chars.by_ref() {
+                if escaped {
+                    key.push(c);
+                    escaped = false;
+                } else if c == '\\' {
+                    escaped = true;
+                } else if c == '"' {
+                    break;
+                } else {
+                    key.push(c);
+                }
+            }
+            // Scan to the colon, then collect the value token.
+            if !chars.any(|c| c == ':') {
+                break;
+            }
+            let mut value = String::new();
+            while let Some(&c) = chars.peek() {
+                if c == ',' || c == '}' {
+                    break;
+                }
+                value.push(c);
+                chars.next();
+            }
+            if let Ok(v) = value.trim().parse::<f64>() {
+                out.push((key, v));
+            }
+        }
+        out
+    }
+
+    /// Merge-save: keep existing keys from the file (recorded by other
+    /// bench binaries), overridden by this recorder's entries where keys
+    /// collide, so several benches can accumulate into one BENCH.json.
+    pub fn save_merged(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut merged = BenchJson::new();
+        if let Ok(existing) = std::fs::read_to_string(path) {
+            for (k, v) in Self::parse_flat(&existing) {
+                if !self.entries.iter().any(|(ek, _)| ek == &k) {
+                    merged.record(&k, v);
+                }
+            }
+        }
+        for (k, v) in &self.entries {
+            merged.record(k, *v);
+        }
+        merged.save(path)
+    }
+
     /// Default output path: `$FKT_BENCH_JSON` or `BENCH.json` in the
     /// working directory.
     pub fn default_path() -> std::path::PathBuf {
@@ -256,6 +319,43 @@ mod tests {
         j.record("weird\"key", f64::NAN);
         let s = j.to_json();
         assert_eq!(s, "{\"batched_vs_looped_mvm\": 2.5, \"weird\\\"key\": null}");
+    }
+
+    #[test]
+    fn parse_flat_inverts_to_json() {
+        let mut j = BenchJson::new();
+        j.record("cache_speedup", 12.5);
+        j.record("operator_build_seconds", 3.25e-2);
+        j.record("skipped_null", f64::INFINITY); // serializes as null
+        let parsed = BenchJson::parse_flat(&j.to_json());
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].0, "cache_speedup");
+        assert!((parsed[0].1 - 12.5).abs() < 1e-12);
+        assert_eq!(parsed[1].0, "operator_build_seconds");
+        assert!((parsed[1].1 - 3.25e-2).abs() < 1e-12);
+        assert!(BenchJson::parse_flat("").is_empty());
+        assert!(BenchJson::parse_flat("{}").is_empty());
+    }
+
+    #[test]
+    fn save_merged_keeps_foreign_keys() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("fkt_bench_merge_{}.json", std::process::id()));
+        let mut a = BenchJson::new();
+        a.record("from_bench_a", 1.0);
+        a.record("shared", 1.0);
+        a.save(&path).expect("write");
+        let mut b = BenchJson::new();
+        b.record("shared", 2.0);
+        b.record("from_bench_b", 3.0);
+        b.save_merged(&path).expect("merge");
+        let text = std::fs::read_to_string(&path).expect("read");
+        let parsed = BenchJson::parse_flat(&text);
+        let get = |k: &str| parsed.iter().find(|(pk, _)| pk == k).map(|(_, v)| *v);
+        assert_eq!(get("from_bench_a"), Some(1.0));
+        assert_eq!(get("shared"), Some(2.0), "newer value wins");
+        assert_eq!(get("from_bench_b"), Some(3.0));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

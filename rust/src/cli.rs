@@ -51,17 +51,29 @@ impl Args {
 
     /// Get an option value parsed as T, or the default.
     pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
-        match self.options.get(key) {
-            Some(v) => v.parse().unwrap_or_else(|_| {
-                panic!("--{key}: cannot parse {v:?}");
-            }),
-            None => default,
-        }
+        self.get_opt(key).unwrap_or(default)
     }
 
     /// Get an option value as String, or the default.
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Get an option value parsed as T, or `None` when the flag is absent
+    /// (panics on an unparsable value, like [`Args::get`]).
+    pub fn get_opt<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.options.get(key).map(|v| {
+            v.parse().unwrap_or_else(|_| {
+                panic!("--{key}: cannot parse {v:?}");
+            })
+        })
+    }
+
+    /// The uniform `--tol ε` accuracy flag: when present, session operator
+    /// requests resolve `(p, θ)` from ε via the truncation bound instead
+    /// of taking `--p`/`--theta` literally.
+    pub fn tolerance(&self) -> Option<f64> {
+        self.get_opt("tol")
     }
 
     /// Whether `--flag` was passed.
@@ -145,6 +157,15 @@ mod tests {
         // coordinator (`Coordinator::threads()`), not here.
         assert_eq!(parse(&[]).threads(), 0);
         assert_eq!(parse(&["--threads", "0"]).threads(), 0);
+    }
+
+    #[test]
+    fn tol_flag_parses() {
+        assert_eq!(parse(&[]).tolerance(), None);
+        let a = parse(&["--tol", "1e-6"]);
+        assert!((a.tolerance().unwrap() - 1e-6).abs() < 1e-20);
+        assert_eq!(parse(&["--n", "10"]).get_opt::<usize>("n"), Some(10));
+        assert_eq!(parse(&[]).get_opt::<usize>("n"), None);
     }
 
     #[test]

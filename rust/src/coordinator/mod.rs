@@ -27,6 +27,19 @@ pub enum Backend {
     Auto,
 }
 
+impl Backend {
+    /// Parse a backend name (`"native"` / `"pjrt"` / `"auto"`) — the one
+    /// mapping every CLI surface shares.
+    pub fn from_name(name: &str) -> Option<Backend> {
+        Some(match name {
+            "native" => Backend::Native,
+            "pjrt" => Backend::Pjrt,
+            "auto" => Backend::Auto,
+            _ => return None,
+        })
+    }
+}
+
 /// Coordinator configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
@@ -195,16 +208,25 @@ impl Coordinator {
         let (bsz, tile) = (exe.batch, exe.tile);
         let t0 = Instant::now();
         // Far field (and moments) natively; near blocks collected as tiles.
-        struct TileJob {
+        // Source-chunk buffers are built once per chunk and *shared* (by
+        // index) across every target chunk that pairs with them — a leaf
+        // with many near targets reuses one (x, w) gather instead of
+        // cloning it per tile.
+        struct SrcChunk {
             /// Flat (T,d) f32 source coords (padded).
             x: Vec<f32>,
             /// (T,) weights (zero-padded).
             w: Vec<f32>,
+        }
+        struct TileJob {
+            /// Index into the shared source-chunk table.
+            src: usize,
             /// Flat (T,d) f32 target coords (padded by repeating the last).
             y: Vec<f32>,
             /// Original target indices for scatter (≤ T).
             tgt: Vec<u32>,
         }
+        let mut src_chunks: Vec<SrcChunk> = Vec::new();
         let mut jobs: Vec<TileJob> = Vec::new();
         let tree = op.tree();
         let plan = op.plan();
@@ -229,6 +251,8 @@ impl Coordinator {
                 // Padding sources stay at the origin with zero weight —
                 // exact by the padding convention (kernel value finite,
                 // weight zero).
+                let src = src_chunks.len();
+                src_chunks.push(SrcChunk { x, w: wv });
                 for t_chunk in near.chunks(tile) {
                     let mut y = vec![0.0f32; tile * d];
                     for (slot, &t) in t_chunk.iter().enumerate() {
@@ -243,7 +267,7 @@ impl Coordinator {
                             y[slot * d + a] = y[(t_chunk.len().max(1) - 1) * d + a];
                         }
                     }
-                    jobs.push(TileJob { x: x.clone(), w: wv.clone(), y, tgt: t_chunk.to_vec() });
+                    jobs.push(TileJob { src, y, tgt: t_chunk.to_vec() });
                 }
             }
         }
@@ -260,8 +284,9 @@ impl Coordinator {
         let mut ybuf = vec![0.0f32; bsz * tile * d];
         for batch in jobs.chunks(bsz) {
             for (bi, job) in batch.iter().enumerate() {
-                xbuf[bi * tile * d..(bi + 1) * tile * d].copy_from_slice(&job.x);
-                wbuf[bi * tile..(bi + 1) * tile].copy_from_slice(&job.w);
+                let chunk = &src_chunks[job.src];
+                xbuf[bi * tile * d..(bi + 1) * tile * d].copy_from_slice(&chunk.x);
+                wbuf[bi * tile..(bi + 1) * tile].copy_from_slice(&chunk.w);
                 ybuf[bi * tile * d..(bi + 1) * tile * d].copy_from_slice(&job.y);
             }
             // Unused batch slots: zero weights make them no-ops.

@@ -61,8 +61,9 @@ impl PhaseCounters {
     }
 }
 
-/// Where each node's expansion is centered.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Where each node's expansion is centered. `Hash` lets the session's
+/// operator registry key cache entries by the full resolved configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ExpansionCenter {
     /// Hyperrectangle center (default FKT).
     BoxCenter,

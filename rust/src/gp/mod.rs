@@ -6,22 +6,28 @@
 //! conjugate gradients whose operator is one FKT MVM plus the diagonal,
 //! and the cross-covariance term is one rectangular FKT MVM — so the whole
 //! inference is quasilinear, the Wang et al. (2019)-style MVM-only GP the
-//! paper invokes. Every MVM flows through the coordinator's `KernelOp`
-//! surface (see DESIGN.md §KernelOp), so the solver is backend-agnostic;
-//! CG is inherently sequential in its single RHS, while batched multi-RHS
-//! probes (block-CG, posterior sampling) ride `Coordinator::mvm_batch`.
+//! paper invokes. Every operation flows through the [`Session`] layer:
+//! the training operator and the rectangular prediction operator are
+//! session-registry handles (repeated fits and predictions over the same
+//! dataset reuse the cached tree/plan/expansion), the representer-weight
+//! system is one first-class [`Session::solve`] call, and accuracy can be
+//! requested as a tolerance (`GpConfig::tolerance`) instead of raw
+//! `(p, θ)` hyperparameters.
 
-use crate::coordinator::Coordinator;
-use crate::fkt::{FktConfig, FktOperator};
+use crate::fkt::FktConfig;
 use crate::kernels::Kernel;
-use crate::linalg::{cholesky, cholesky_solve, preconditioned_cg, CgResult, Mat};
+use crate::linalg::CgResult;
 use crate::points::Points;
+use crate::session::{OpHandle, Session, SolveOpts};
 
 /// GP regression configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct GpConfig {
     /// FKT operator settings (p, θ, leaf size, compression).
     pub fkt: FktConfig,
+    /// When set, the session resolves `(p, θ)` from this tolerance via the
+    /// truncation bound instead of using `fkt.p`/`fkt.theta`.
+    pub tolerance: Option<f64>,
     /// CG relative-residual tolerance.
     pub cg_tol: f64,
     /// CG iteration cap.
@@ -29,10 +35,11 @@ pub struct GpConfig {
     /// Extra jitter added to the diagonal (numerical safety).
     pub jitter: f64,
     /// Block-Jacobi preconditioning with per-leaf Cholesky factors of
-    /// `K_leaf + Σ_leaf`. Satellite-track data (dense along-track sampling)
-    /// makes the kernel system ill-conditioned; the leaf blocks capture
-    /// exactly those short-range couplings and cut CG iterations by an
-    /// order of magnitude (EXPERIMENTS.md §Perf).
+    /// `K_leaf + Σ_leaf` (see `Session::solve`). Satellite-track data
+    /// (dense along-track sampling) makes the kernel system
+    /// ill-conditioned; the leaf blocks capture exactly those short-range
+    /// couplings and cut CG iterations by an order of magnitude
+    /// (EXPERIMENTS.md §Perf).
     pub precondition: bool,
 }
 
@@ -40,70 +47,12 @@ impl Default for GpConfig {
     fn default() -> Self {
         GpConfig {
             fkt: FktConfig::default(),
+            tolerance: None,
             cg_tol: 1e-6,
             cg_max_iters: 200,
             jitter: 1e-8,
             precondition: true,
         }
-    }
-}
-
-/// Leaf-block Jacobi preconditioner: per-leaf Cholesky of K+Σ.
-struct BlockJacobi {
-    /// Per-leaf (original indices, Cholesky factor).
-    blocks: Vec<(Vec<usize>, Mat)>,
-}
-
-impl BlockJacobi {
-    fn build(op: &FktOperator, kernel: &Kernel, noise: &[f64], jitter: f64) -> BlockJacobi {
-        let tree = op.tree();
-        let mut blocks = Vec::with_capacity(tree.leaves.len());
-        for &leaf in &tree.leaves {
-            let node = &tree.nodes[leaf];
-            let idx: Vec<usize> = (node.start..node.end).map(|i| tree.perm[i]).collect();
-            let m = idx.len();
-            let mut k = Mat::zeros(m, m);
-            for a in 0..m {
-                // tree.points are kernel-scaled; canonical profile applies.
-                let pa = tree.points.point(node.start + a);
-                for b in 0..=a {
-                    let pb = tree.points.point(node.start + b);
-                    let r = crate::linalg::vecops::dist2(pa, pb).sqrt();
-                    let v = if r == 0.0 {
-                        kernel.family.value_at_zero()
-                    } else {
-                        kernel.family.eval(r)
-                    };
-                    k[(a, b)] = v;
-                    k[(b, a)] = v;
-                }
-                k[(a, a)] += noise[idx[a]] + jitter;
-            }
-            let l = cholesky(&k).unwrap_or_else(|| {
-                // Extremely degenerate block: fall back to the diagonal.
-                let mut dl = Mat::zeros(m, m);
-                for a in 0..m {
-                    dl[(a, a)] = k[(a, a)].max(jitter).sqrt();
-                }
-                dl
-            });
-            blocks.push((idx, l));
-        }
-        BlockJacobi { blocks }
-    }
-
-    fn apply(&self, r: &[f64]) -> Vec<f64> {
-        let mut z = vec![0.0; r.len()];
-        let mut rl = Vec::new();
-        for (idx, l) in &self.blocks {
-            rl.clear();
-            rl.extend(idx.iter().map(|&i| r[i]));
-            let sol = cholesky_solve(l, &rl);
-            for (slot, &i) in idx.iter().enumerate() {
-                z[i] = sol[slot];
-            }
-        }
-        z
     }
 }
 
@@ -123,52 +72,75 @@ pub struct GpRegressor {
     train: Points,
     noise_var: Vec<f64>,
     cfg: GpConfig,
-    op: FktOperator,
+    /// Session handle to the square training-covariance operator.
+    op: OpHandle,
 }
 
 impl GpRegressor {
-    /// Build the regressor (plans the square FKT operator over X).
-    pub fn new(train: Points, noise_var: Vec<f64>, kernel: Kernel, cfg: GpConfig) -> Self {
+    /// Build the regressor: requests the square FKT operator over X from
+    /// the session (a repeated construction over the same training set is
+    /// a registry hit, not a rebuild).
+    pub fn new(
+        session: &mut Session,
+        train: Points,
+        noise_var: Vec<f64>,
+        kernel: Kernel,
+        cfg: GpConfig,
+    ) -> Self {
         assert_eq!(train.len(), noise_var.len());
-        let op = FktOperator::square(&train, kernel, cfg.fkt);
+        let op = Self::request(session, &train, None, kernel, &cfg);
         GpRegressor { kernel, train, noise_var, cfg, op }
     }
 
-    /// Solve (K + Σ + jitter·I) α = y with (preconditioned) CG over
-    /// coordinator MVMs.
-    pub fn fit_alpha(&self, y: &[f64], coord: &mut Coordinator) -> CgResult {
-        assert_eq!(y.len(), self.train.len());
-        let noise = &self.noise_var;
-        let jitter = self.cfg.jitter;
-        let op = &self.op;
-        let mut apply = |v: &[f64]| -> Vec<f64> {
-            let mut kv = coord.mvm(op, v);
-            for i in 0..v.len() {
-                kv[i] += (noise[i] + jitter) * v[i];
-            }
-            kv
-        };
-        if self.cfg.precondition {
-            let pre = BlockJacobi::build(op, &self.kernel, noise, jitter);
-            let mut precond = |r: &[f64]| pre.apply(r);
-            preconditioned_cg(&mut apply, &mut precond, y, self.cfg.cg_tol, self.cfg.cg_max_iters)
-        } else {
-            let mut identity = |r: &[f64]| r.to_vec();
-            preconditioned_cg(&mut apply, &mut identity, y, self.cfg.cg_tol, self.cfg.cg_max_iters)
+    /// One operator request carrying the shared config/tolerance policy.
+    fn request(
+        session: &mut Session,
+        sources: &Points,
+        targets: Option<&Points>,
+        kernel: Kernel,
+        cfg: &GpConfig,
+    ) -> OpHandle {
+        let mut spec = session.operator(sources).scaled_kernel(kernel).config(cfg.fkt);
+        if let Some(t) = targets {
+            spec = spec.targets(t);
         }
+        if let Some(eps) = cfg.tolerance {
+            spec = spec.tolerance(eps);
+        }
+        spec.build()
     }
 
-    /// Posterior mean at `x_star` (builds the rectangular cross operator).
+    /// Solve (K + Σ + jitter·I) α = y — one first-class session solve.
+    pub fn fit_alpha(&self, y: &[f64], session: &mut Session) -> CgResult {
+        assert_eq!(y.len(), self.train.len());
+        let opts = SolveOpts {
+            tol: self.cfg.cg_tol,
+            max_iters: self.cfg.cg_max_iters,
+            jitter: self.cfg.jitter,
+            noise: Some(&self.noise_var),
+            precondition: self.cfg.precondition,
+        };
+        session.solve(&self.op, y, &opts)
+    }
+
+    /// Posterior mean at `x_star` (requests the rectangular cross operator
+    /// from the session — cached across repeated predictions on the same
+    /// grid).
     pub fn posterior_mean(
         &self,
         y: &[f64],
         x_star: &Points,
-        coord: &mut Coordinator,
+        session: &mut Session,
     ) -> GpResult {
-        let cg = self.fit_alpha(y, coord);
-        let cross = FktOperator::new(&self.train, Some(x_star), self.kernel, self.cfg.fkt);
-        let mean = coord.mvm(&cross, &cg.x);
+        let cg = self.fit_alpha(y, session);
+        let cross = Self::request(session, &self.train, Some(x_star), self.kernel, &self.cfg);
+        let mean = session.mvm(&cross, &cg.x);
         GpResult { mean, alpha: cg.x.clone(), cg }
+    }
+
+    /// The session handle to the training-covariance operator.
+    pub fn operator(&self) -> &OpHandle {
+        &self.op
     }
 
     /// Training-set size.
@@ -186,6 +158,7 @@ impl GpRegressor {
 mod tests {
     use super::*;
     use crate::baselines::dense_matrix;
+    use crate::kernels::Family;
     use crate::linalg::{cholesky, cholesky_solve};
     use crate::rng::Pcg32;
 
@@ -228,11 +201,11 @@ mod tests {
             cg_tol: 1e-9,
             cg_max_iters: 400,
             jitter: 1e-8,
-            precondition: true,
+            ..Default::default()
         };
-        let gp = GpRegressor::new(train, noise, kernel, cfg);
-        let mut coord = Coordinator::native(2);
-        let res = gp.posterior_mean(&y, &xs, &mut coord);
+        let mut session = Session::native(2);
+        let gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
+        let res = gp.posterior_mean(&y, &xs, &mut session);
         assert!(res.cg.converged, "CG residual {}", res.cg.rel_residual);
         for i in 0..40 {
             assert!(
@@ -263,12 +236,12 @@ mod tests {
             cg_tol: 1e-10,
             cg_max_iters: 600,
             jitter: 1e-10,
-            precondition: true,
+            ..Default::default()
         };
         let train2 = train.clone();
-        let gp = GpRegressor::new(train, noise, kernel, cfg);
-        let mut coord = Coordinator::native(2);
-        let res = gp.posterior_mean(&y, &train2, &mut coord);
+        let mut session = Session::native(2);
+        let gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
+        let res = gp.posterior_mean(&y, &train2, &mut session);
         let mut worst = 0.0f64;
         for i in 0..n {
             worst = worst.max((res.mean[i] - y[i]).abs());
@@ -291,11 +264,75 @@ mod tests {
             cg_max_iters: 300,
             jitter: 1e-8,
             precondition: false, // exercise the unpreconditioned path too
+            ..Default::default()
         };
-        let gp = GpRegressor::new(pts, noise, kernel, cfg);
-        let mut coord = Coordinator::native(4);
-        let res = gp.fit_alpha(&y, &mut coord);
+        let mut session = Session::native(4);
+        let gp = GpRegressor::new(&mut session, pts, noise, kernel, cfg);
+        let res = gp.fit_alpha(&y, &mut session);
         assert!(res.converged, "CG residual {}", res.rel_residual);
         assert!(res.iterations < 300);
+    }
+
+    #[test]
+    fn tolerance_driven_gp_matches_dense_oracle() {
+        // The GP with a requested tolerance (no hand-picked p/θ) must
+        // track the dense oracle as closely as the hand-tuned config.
+        let mut rng = Pcg32::seeded(224);
+        let n = 250;
+        let train = Points::new(2, rng.uniform_vec(n * 2, 0.0, 1.0));
+        let noise: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.02, 0.06)).collect();
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let p = train.point(i);
+                (4.0 * p[0]).sin() * (3.0 * p[1]).cos()
+            })
+            .collect();
+        let xs = Points::new(2, rng.uniform_vec(30 * 2, 0.1, 0.9));
+        let kernel = Kernel::matern32(0.5);
+        let oracle = dense_gp_mean(&kernel, &train, &noise, &y, &xs);
+        let cfg = GpConfig {
+            fkt: FktConfig { leaf_capacity: 32, ..Default::default() },
+            tolerance: Some(1e-6),
+            cg_tol: 1e-9,
+            cg_max_iters: 400,
+            jitter: 1e-8,
+            ..Default::default()
+        };
+        let mut session = Session::native(2);
+        let gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
+        // The tolerance request resolved real hyperparameters.
+        assert!(gp.operator().resolved().is_some());
+        let res = gp.posterior_mean(&y, &xs, &mut session);
+        assert!(res.cg.converged);
+        for i in 0..30 {
+            assert!(
+                (res.mean[i] - oracle[i]).abs() < 2e-3 * (1.0 + oracle[i].abs()),
+                "i={i}: {} vs {}",
+                res.mean[i],
+                oracle[i]
+            );
+        }
+    }
+
+    #[test]
+    fn repeated_fits_reuse_the_cached_operator() {
+        let mut rng = Pcg32::seeded(225);
+        let n = 300;
+        let train = Points::new(2, rng.uniform_vec(n * 2, 0.0, 1.0));
+        let noise = vec![0.05; n];
+        let y = rng.normal_vec(n);
+        let cfg = GpConfig {
+            fkt: FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() },
+            ..Default::default()
+        };
+        let mut session = Session::native(1);
+        let kernel = Kernel::canonical(Family::Gaussian);
+        let gp1 = GpRegressor::new(&mut session, train.clone(), noise.clone(), kernel, cfg);
+        let misses_after_first = session.registry_stats().misses;
+        let gp2 = GpRegressor::new(&mut session, train, noise, kernel, cfg);
+        assert!(gp1.operator().ptr_eq(gp2.operator()), "same data ⇒ same operator");
+        assert_eq!(session.registry_stats().misses, misses_after_first);
+        assert!(session.registry_stats().hits >= 1);
+        let _ = gp2.fit_alpha(&y, &mut session);
     }
 }

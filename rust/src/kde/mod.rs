@@ -6,12 +6,13 @@
 //! * KDE: `f̂(y) = (1/N h^d c_K) Σ_j K(|y − x_j|/h)` — one MVM with the
 //!   all-ones weight vector;
 //! * Nadaraya–Watson: `m̂(y) = Σ_j K(…) v_j / Σ_j K(…)` — a ratio of two
-//!   MVMs sharing one operator (the coordinator amortizes the plan).
+//!   MVMs sharing one operator (the session registry amortizes the plan
+//!   across repeated density/regression requests on the same data).
 
-use crate::coordinator::Coordinator;
-use crate::fkt::{FktConfig, FktOperator};
+use crate::fkt::FktConfig;
 use crate::kernels::{Family, Kernel};
 use crate::points::Points;
+use crate::session::{OpHandle, Session};
 
 /// Gaussian-kernel normalization `c_K = (2π)^{d/2}·2^{-d/2}… `; for the
 /// canonical `e^{-u²}` profile the normalizing constant is `π^{d/2}`
@@ -22,26 +23,39 @@ fn gaussian_norm(d: usize) -> f64 {
 
 /// Kernel density estimator with bandwidth `h` (Gaussian kernel).
 pub struct KernelDensity {
-    op: FktOperator,
+    op: OpHandle,
     n: usize,
     h: f64,
     d: usize,
 }
 
 impl KernelDensity {
-    /// Build the estimator for evaluation at `eval_points`.
-    pub fn new(data: &Points, eval_points: &Points, h: f64, cfg: FktConfig) -> KernelDensity {
+    /// Build the estimator for evaluation at `eval_points` (an operator
+    /// request against the session registry — repeated estimators over the
+    /// same data/grid/bandwidth share one operator).
+    pub fn new(
+        session: &mut Session,
+        data: &Points,
+        eval_points: &Points,
+        h: f64,
+        cfg: FktConfig,
+    ) -> KernelDensity {
         assert!(h > 0.0);
         // K(|x−y|/h) with the canonical Gaussian = kernel scale 1/h.
         let kernel = Kernel::new(Family::Gaussian, 1.0 / h);
-        let op = FktOperator::new(data, Some(eval_points), kernel, cfg);
+        let op = session
+            .operator(data)
+            .targets(eval_points)
+            .scaled_kernel(kernel)
+            .config(cfg)
+            .build();
         KernelDensity { op, n: data.len(), h, d: data.d }
     }
 
     /// Density estimates at the evaluation points.
-    pub fn densities(&self, coord: &mut Coordinator) -> Vec<f64> {
+    pub fn densities(&self, session: &mut Session) -> Vec<f64> {
         let ones = vec![1.0; self.n];
-        let mut z = coord.mvm(&self.op, &ones);
+        let mut z = session.mvm(&self.op, &ones);
         let norm = 1.0 / (self.n as f64 * self.h.powi(self.d as i32) * gaussian_norm(self.d));
         for v in &mut z {
             *v *= norm;
@@ -54,21 +68,26 @@ impl KernelDensity {
 /// numerator (`K·v`) and denominator (`K·1`) MVMs are fused into one
 /// 2-column batch sharing a single tree traversal.
 pub fn kernel_regression(
+    session: &mut Session,
     data: &Points,
     values: &[f64],
     eval_points: &Points,
     h: f64,
     cfg: FktConfig,
-    coord: &mut Coordinator,
 ) -> Vec<f64> {
     assert_eq!(data.len(), values.len());
     let kernel = Kernel::new(Family::Gaussian, 1.0 / h);
-    let op = FktOperator::new(data, Some(eval_points), kernel, cfg);
+    let op = session
+        .operator(data)
+        .targets(eval_points)
+        .scaled_kernel(kernel)
+        .config(cfg)
+        .build();
     let n = values.len();
     let mut wb = Vec::with_capacity(2 * n);
     wb.extend_from_slice(values);
     wb.resize(2 * n, 1.0);
-    let nd = coord.mvm_batch(&op, &wb, 2);
+    let nd = session.mvm_batch(&op, &wb, 2);
     let (num, den) = nd.split_at(eval_points.len());
     num.iter()
         .zip(den)
@@ -99,9 +118,9 @@ mod tests {
             }
         }
         let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
-        let kde = KernelDensity::new(&data, &grid, 0.35, cfg);
-        let mut coord = Coordinator::native(1);
-        let dens = kde.densities(&mut coord);
+        let mut session = Session::native(1);
+        let kde = KernelDensity::new(&mut session, &data, &grid, 0.35, cfg);
+        let dens = kde.densities(&mut session);
         let cell = (8.0 / g as f64) * (8.0 / g as f64);
         let mass: f64 = dens.iter().sum::<f64>() * cell;
         assert!((mass - 1.0).abs() < 0.05, "mass {mass}");
@@ -116,9 +135,9 @@ mod tests {
         let eval = Points::new(2, rng.normal_vec(50 * 2));
         let h = 0.4;
         let cfg = FktConfig { p: 6, theta: 0.4, leaf_capacity: 50, ..Default::default() };
-        let kde = KernelDensity::new(&data, &eval, h, cfg);
-        let mut coord = Coordinator::native(1);
-        let fast = kde.densities(&mut coord);
+        let mut session = Session::native(1);
+        let kde = KernelDensity::new(&mut session, &data, &eval, h, cfg);
+        let fast = kde.densities(&mut session);
         let norm = 1.0 / (n as f64 * h * h * gaussian_norm(2));
         for t in 0..eval.len() {
             let mut acc = 0.0;
@@ -146,15 +165,23 @@ mod tests {
         let eval = Points::new(2, rng.normal_vec(40 * 2));
         let h = 0.5;
         let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 48, ..Default::default() };
-        let mut coord = Coordinator::native(2);
-        let fused = kernel_regression(&data, &values, &eval, h, cfg, &mut coord);
+        let mut session = Session::native(2);
+        let fused = kernel_regression(&mut session, &data, &values, &eval, h, cfg);
         // One traversal for both columns.
-        assert_eq!(coord.last_metrics.columns, 2);
-        assert_eq!(coord.last_metrics.moment_passes, 1);
+        assert_eq!(session.last_metrics().columns, 2);
+        assert_eq!(session.last_metrics().moment_passes, 1);
         let kernel = Kernel::new(Family::Gaussian, 1.0 / h);
-        let op = FktOperator::new(&data, Some(&eval), kernel, cfg);
-        let num = coord.mvm(&op, &values);
-        let den = coord.mvm(&op, &vec![1.0; n]);
+        let op = session
+            .operator(&data)
+            .targets(&eval)
+            .scaled_kernel(kernel)
+            .config(cfg)
+            .build();
+        // The reference operator is the registry-cached one from the fused
+        // call — same request, same Arc.
+        assert!(session.registry_stats().hits >= 1);
+        let num = session.mvm(&op, &values);
+        let den = session.mvm(&op, &vec![1.0; n]);
         for t in 0..eval.len() {
             let expect = if den[t].abs() > 1e-12 { num[t] / den[t] } else { 0.0 };
             assert!(
@@ -176,8 +203,8 @@ mod tests {
             .collect();
         let eval = Points::new(1, (0..50).map(|i| 0.05 + 0.9 * i as f64 / 49.0).collect());
         let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 64, ..Default::default() };
-        let mut coord = Coordinator::native(1);
-        let pred = kernel_regression(&data, &values, &eval, 0.05, cfg, &mut coord);
+        let mut session = Session::native(1);
+        let pred = kernel_regression(&mut session, &data, &values, &eval, 0.05, cfg);
         let mut worst = 0.0f64;
         for (t, p) in pred.iter().enumerate() {
             worst = worst.max((p - f(eval.point(t)[0])).abs());

@@ -20,7 +20,8 @@ use crate::jet::Jet;
 use crate::symbolic::{ExpPoly, Laurent};
 
 /// Canonical kernel families (see module docs; `u` denotes scaled radius).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `Hash` lets the session's operator registry key cache entries by family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Family {
     /// `e^{-u}` — Exponential / Matérn ν=1/2 (paper Table 1).
     Exponential,

@@ -2,10 +2,15 @@
 //!
 //! Subcommands:
 //!   info                     environment/artifact/runtime diagnostics
-//!   mvm    [--n --d --p …]   one fast MVM with accuracy + timing report
+//!   mvm    [--n --d --tol …]  one fast MVM with accuracy + timing report
 //!   gp     [--n …]           GP regression on the simulated SST workload
 //!   tsne   [--n …]           t-SNE embedding of the MNIST surrogate
 //!   plan   [--n …]           print the far/near plan statistics
+//!
+//! Every subcommand talks to the library through one `Session` — the
+//! public entry point that owns the coordinator, the operator registry,
+//! and tolerance resolution. `--tol ε` asks the session to auto-tune
+//! `(p, θ)` from the requested accuracy; `--p/--theta` set them manually.
 //!
 //! Every experiment from the paper has a dedicated example/bench binary
 //! (see README); this launcher covers interactive use of the same API.
@@ -13,11 +18,10 @@
 use fkt::baselines::dense_mvm;
 use fkt::benchkit::fmt_time;
 use fkt::cli::Args;
-use fkt::coordinator::{Backend, Coordinator, CoordinatorConfig};
-use fkt::fkt::{FktConfig, FktOperator};
 use fkt::kernels::{Family, Kernel};
 use fkt::points::Points;
 use fkt::rng::Pcg32;
+use fkt::session::{Backend, OpHandle, Session};
 use std::time::Instant;
 
 fn main() {
@@ -36,15 +40,12 @@ fn main() {
     }
 }
 
-fn backend_from(args: &Args) -> CoordinatorConfig {
-    let backend = match args.get_str("backend", "auto").as_str() {
-        "native" => Backend::Native,
-        "pjrt" => Backend::Pjrt,
-        _ => Backend::Auto,
-    };
+fn session_from(args: &Args) -> Session {
+    let backend =
+        Backend::from_name(&args.get_str("backend", "auto")).unwrap_or(Backend::Auto);
     // `--threads N` (0/absent ⇒ all cores, resolved by the coordinator)
     // governs single and batched MVMs alike.
-    CoordinatorConfig { threads: args.threads(), backend }
+    Session::builder().threads(args.threads()).backend(backend).build()
 }
 
 fn info() {
@@ -65,12 +66,13 @@ fn info() {
     );
 }
 
-fn build_op(args: &Args) -> (FktOperator, Vec<f64>, Points, Kernel) {
+/// Build the benchmark operator from the uniform flags, with the same
+/// precedence as `OpSpec`: `--tol ε` routes through tolerance resolution,
+/// and any explicit `--p`/`--theta` override the resolved values; without
+/// `--tol` the explicit flags (or their defaults p=4, θ=0.5) apply.
+fn build_op(args: &Args, session: &mut Session) -> (OpHandle, Vec<f64>, Points, Kernel) {
     let n: usize = args.get("n", 20000);
     let d: usize = args.get("d", 3);
-    let p: usize = args.get("p", 4);
-    let theta: f64 = args.get("theta", 0.5);
-    let leaf: usize = args.get("leaf", 512);
     let seed: u64 = args.get("seed", 1);
     let family = Family::from_name(&args.get_str("kernel", "matern32")).expect("kernel");
     let kernel = Kernel::canonical(family);
@@ -81,22 +83,42 @@ fn build_op(args: &Args) -> (FktOperator, Vec<f64>, Points, Kernel) {
         fkt::data::uniform_hypersphere(n, d, &mut rng)
     };
     let w = rng.normal_vec(n);
-    let cfg = FktConfig {
-        p,
-        theta,
-        leaf_capacity: leaf,
-        compression: args.has_flag("compress"),
-        ..Default::default()
-    };
-    let op = FktOperator::square(&pts, kernel, cfg);
+    let mut spec = session
+        .operator(&pts)
+        .kernel(family)
+        .leaf_capacity(args.get("leaf", 512))
+        .compression(args.has_flag("compress"));
+    match args.tolerance() {
+        Some(eps) => {
+            spec = spec.tolerance(eps);
+            // Explicit flags override the resolved values (OpSpec rules).
+            if let Some(p) = args.get_opt("p") {
+                spec = spec.order(p);
+            }
+            if let Some(t) = args.get_opt("theta") {
+                spec = spec.theta(t);
+            }
+        }
+        None => spec = spec.order(args.get("p", 4)).theta(args.get("theta", 0.5)),
+    }
+    let op = spec.build();
+    if let Some(res) = op.resolved() {
+        println!(
+            "tolerance {:.1e} resolved to p={} θ={} (bound estimate {:.2e})",
+            args.tolerance().unwrap_or(f64::NAN),
+            res.p,
+            res.theta,
+            res.bound
+        );
+    }
     (op, w, pts, kernel)
 }
 
 fn mvm(args: &Args) {
+    let mut session = session_from(args);
     let t0 = Instant::now();
-    let (op, w, pts, kernel) = build_op(args);
+    let (op, w, pts, kernel) = build_op(args, &mut session);
     println!("build: {}", fmt_time(t0.elapsed().as_secs_f64()));
-    let mut coord = Coordinator::new(backend_from(args));
     let cols: usize = args.get("cols", 1);
     let t1 = Instant::now();
     let z = if cols > 1 {
@@ -106,20 +128,20 @@ fn mvm(args: &Args) {
         for _ in 0..cols {
             wb.extend_from_slice(&w);
         }
-        let zb = coord.mvm_batch(&op, &wb, cols);
+        let zb = session.mvm_batch(&op, &wb, cols);
         println!(
             "mvm_batch: {} for {cols} columns in {} moment traversal(s) (backend {})",
             fmt_time(t1.elapsed().as_secs_f64()),
-            coord.last_metrics.moment_passes,
-            if coord.last_metrics.used_pjrt { "pjrt" } else { "native" }
+            session.last_metrics().moment_passes,
+            if session.last_metrics().used_pjrt { "pjrt" } else { "native" }
         );
         zb[..op.num_targets()].to_vec()
     } else {
-        let z = coord.mvm(&op, &w);
+        let z = session.mvm(&op, &w);
         println!(
             "mvm: {} (backend {})",
             fmt_time(t1.elapsed().as_secs_f64()),
-            if coord.last_metrics.used_pjrt { "pjrt" } else { "native" }
+            if session.last_metrics().used_pjrt { "pjrt" } else { "native" }
         );
         z
     };
@@ -137,12 +159,14 @@ fn mvm(args: &Args) {
 }
 
 fn plan(args: &Args) {
-    let (op, _, _, _) = build_op(args);
-    let stats = op.plan().stats(op.tree());
-    println!("nodes: {}", op.tree().nodes.len());
-    println!("leaves: {}", op.tree().leaves.len());
-    println!("max depth: {}", op.tree().max_depth());
-    println!("multipole terms/node: {}", op.num_terms());
+    let mut session = session_from(args);
+    let (op, _, _, _) = build_op(args, &mut session);
+    let fkt_op = op.as_fkt().expect("plan statistics need an FKT operator");
+    let stats = fkt_op.plan().stats(fkt_op.tree());
+    println!("nodes: {}", fkt_op.tree().nodes.len());
+    println!("leaves: {}", fkt_op.tree().leaves.len());
+    println!("max depth: {}", fkt_op.tree().max_depth());
+    println!("multipole terms/node: {}", fkt_op.num_terms());
     println!("far (node,target) pairs: {}", stats.far_pairs);
     println!("near (leaf,target) pairs: {}", stats.near_pairs);
     println!("near-field flops (mul-adds): {}", stats.near_flops);
@@ -151,6 +175,7 @@ fn plan(args: &Args) {
 
 fn gp(args: &Args) {
     use fkt::data::sst;
+    use fkt::fkt::FktConfig;
     use fkt::gp::{GpConfig, GpRegressor};
     let n: usize = args.get("n", 20000);
     let rho: f64 = args.get("rho", 0.22);
@@ -166,15 +191,25 @@ fn gp(args: &Args) {
             leaf_capacity: args.get("leaf", 512),
             ..Default::default()
         },
+        tolerance: args.tolerance(),
         cg_tol: args.get("cg-tol", 1e-5),
         cg_max_iters: args.get("cg-max", 300),
         jitter: 1e-6,
         precondition: true,
     };
-    let gp = GpRegressor::new(ds.unit_sphere_points(), ds.noise_variances(), Kernel::matern32(rho), cfg);
-    let mut coord = Coordinator::new(backend_from(args));
+    let mut session = session_from(args);
+    let gp = GpRegressor::new(
+        &mut session,
+        ds.unit_sphere_points(),
+        ds.noise_variances(),
+        Kernel::matern32(rho),
+        cfg,
+    );
+    if let Some(res) = gp.operator().resolved() {
+        println!("tolerance resolved to p={} θ={}", res.p, res.theta);
+    }
     let t0 = Instant::now();
-    let fit = gp.fit_alpha(&y0, &mut coord);
+    let fit = gp.fit_alpha(&y0, &mut session);
     println!(
         "CG: {} iters, residual {:.2e}, {}",
         fit.iterations,
@@ -184,6 +219,7 @@ fn gp(args: &Args) {
 }
 
 fn tsne(args: &Args) {
+    use fkt::fkt::FktConfig;
     use fkt::tsne::{knn_purity, run, TsneConfig};
     let n: usize = args.get("n", 5000);
     let mut rng = Pcg32::seeded(args.get("seed", 11));
@@ -203,9 +239,9 @@ fn tsne(args: &Args) {
         seed: args.get("seed", 11),
         ..Default::default()
     };
-    let mut coord = Coordinator::new(backend_from(args));
+    let mut session = session_from(args);
     let t0 = Instant::now();
-    let res = run(&data, &cfg, &mut coord);
+    let res = run(&data, &cfg, &mut session);
     println!("t-SNE: {}", fmt_time(t0.elapsed().as_secs_f64()));
     for (it, kl) in &res.kl_trace {
         println!("  iter {it:>5}: KL = {kl:.4}");

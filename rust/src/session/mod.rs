@@ -1,0 +1,952 @@
+//! The session layer — the crate's public entry point.
+//!
+//! A [`Session`] owns everything a kernel-summation service needs between
+//! requests: the [`Coordinator`] (threads, backend selection, metrics), a
+//! keyed **operator registry** that caches built operators across requests
+//! (see [`registry`]), and a tolerance-resolution cache (see [`tune`]).
+//! Consumers never construct `FktOperator`s or talk to the coordinator
+//! directly; they describe *what* they want and the session decides *how*:
+//!
+//! ```no_run
+//! use fkt::kernels::Family;
+//! use fkt::session::{Session, SolveOpts};
+//! # let pts = fkt::points::Points::new(2, vec![0.0; 20]);
+//! # let w = vec![0.0; 10];
+//! # let y = vec![0.0; 10];
+//! let mut session = Session::builder().threads(4).build();
+//! let op = session
+//!     .operator(&pts)
+//!     .kernel(Family::Matern52)
+//!     .tolerance(1e-6) // ← the paper's controllable-accuracy dial
+//!     .build();
+//! let z = session.mvm(&op, &w);                    // fast MVM
+//! let sol = session.solve(&op, &y, &SolveOpts::default()); // CG solve
+//! ```
+//!
+//! Three verbs cover every workload in the crate: [`Session::mvm`] /
+//! [`Session::mvm_batch`] for products, and [`Session::solve`] for the
+//! linear systems GP regression needs — promoted to a first-class verb so
+//! "apply the inverse" is as ordinary as "apply the matrix".
+//!
+//! Requests are expressed through the [`OpSpec`] builder. Its headline
+//! knob is `.tolerance(ε)`: instead of hand-picking `(p, θ)` the caller
+//! states the accuracy they need and the session resolves the cheapest
+//! hyperparameters whose Lemma 4.1 truncation bound meets ε (explicit
+//! `.order(p)` / `.theta(t)` still override). Identical requests against
+//! identical data return the *same* cached operator — pointer-equal
+//! `Arc`s — so a service answering many queries over one dataset builds
+//! its tree/plan/expansion once.
+
+pub mod registry;
+pub mod tune;
+
+pub use crate::coordinator::{Backend, MvmMetrics};
+pub use registry::RegistryStats;
+pub use tune::{max_order, resolve as resolve_tolerance, Resolved, THETA_CANDIDATES};
+
+use crate::baselines::DenseOperator;
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::fkt::{ExpansionCenter, FktConfig, FktOperator};
+use crate::kernels::{Family, Kernel};
+use crate::linalg::{cholesky, cholesky_solve, preconditioned_cg, CgResult, Mat};
+use crate::op::KernelOp;
+use crate::points::Points;
+use registry::{fingerprint, OpKey, Registry};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Default maximum number of cached operators per session.
+const DEFAULT_REGISTRY_CAPACITY: usize = 64;
+
+/// Tolerance-resolution cache flush threshold (entries are a few dozen
+/// bytes, so this bounds the map at trivial memory while still caching
+/// every realistic steady-state request mix).
+const TUNE_CACHE_FLUSH: usize = 1024;
+
+/// Builder for [`Session`].
+#[derive(Clone, Copy, Debug)]
+pub struct SessionBuilder {
+    threads: usize,
+    backend: Backend,
+    registry_capacity: usize,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            threads: 0,
+            backend: Backend::Auto,
+            registry_capacity: DEFAULT_REGISTRY_CAPACITY,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Worker threads for the native phases (0 ⇒ all available cores).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Near-field backend selection (default [`Backend::Auto`]).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Operator-registry LRU capacity (default 64, min 1).
+    pub fn registry_capacity(mut self, capacity: usize) -> Self {
+        self.registry_capacity = capacity;
+        self
+    }
+
+    /// Build the session (probes PJRT artifacts unless backend is Native).
+    pub fn build(self) -> Session {
+        Session {
+            coord: Coordinator::new(CoordinatorConfig {
+                threads: self.threads,
+                backend: self.backend,
+            }),
+            registry: Registry::new(self.registry_capacity),
+            tune_cache: HashMap::new(),
+        }
+    }
+}
+
+/// A long-lived service context: coordinator + operator registry +
+/// tolerance-resolution cache. See the module docs for the request model.
+pub struct Session {
+    coord: Coordinator,
+    registry: Registry,
+    tune_cache: HashMap<TuneKey, Resolved>,
+}
+
+/// Identity of one tolerance resolution: kernel × dimension × ε × the
+/// scaled dataset diameter the bound was maximized over (bit patterns, so
+/// caching is exact).
+type TuneKey = (Family, u64, usize, u64, u64);
+
+impl Session {
+    /// Start building a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Native-only session (no PJRT artifact probe) — the common
+    /// bench/test configuration.
+    pub fn native(threads: usize) -> Session {
+        Session::builder().threads(threads).backend(Backend::Native).build()
+    }
+
+    /// Begin an operator request over `sources` (see [`OpSpec`]).
+    pub fn operator<'a>(&'a mut self, sources: &'a Points) -> OpSpec<'a> {
+        OpSpec {
+            session: self,
+            sources,
+            targets: None,
+            kernel: Kernel::canonical(Family::Gaussian),
+            cfg: FktConfig::default(),
+            tolerance: None,
+            p_override: None,
+            theta_override: None,
+            dense: false,
+            transient: false,
+        }
+    }
+
+    /// Single-RHS product `z = K · w` through the configured backend.
+    pub fn mvm(&mut self, op: &OpHandle, w: &[f64]) -> Vec<f64> {
+        self.coord.mvm(op.op.as_ref(), w)
+    }
+
+    /// Batched multi-RHS product over `m` column-major columns
+    /// (`w[c*n..(c+1)*n]` is column c) — fused backends share one
+    /// traversal across all columns.
+    pub fn mvm_batch(&mut self, op: &OpHandle, w: &[f64], m: usize) -> Vec<f64> {
+        self.coord.mvm_batch(op.op.as_ref(), w, m)
+    }
+
+    /// First-class linear solve: `(K + diag(noise) + jitter·I) x = y` by
+    /// (optionally block-Jacobi preconditioned) conjugate gradients over
+    /// session MVMs. This is the GP representer-weight system of paper
+    /// §5.3 promoted to a session verb — any consumer with a square
+    /// operator can invert it without knowing about CG or preconditioners.
+    pub fn solve(&mut self, op: &OpHandle, y: &[f64], opts: &SolveOpts) -> CgResult {
+        // Equal counts are not enough — a rectangular operator over 500
+        // sources and 500 *different* targets is not symmetric, and CG on
+        // it would silently return garbage.
+        assert!(
+            op.is_square(),
+            "solve needs a square operator (built without .targets(..))"
+        );
+        assert_eq!(y.len(), op.num_sources(), "right-hand side length mismatch");
+        let zeros;
+        let noise: &[f64] = match opts.noise {
+            Some(n) => {
+                assert_eq!(n.len(), y.len(), "noise diagonal length mismatch");
+                n
+            }
+            None => {
+                zeros = vec![0.0; y.len()];
+                &zeros
+            }
+        };
+        let jitter = opts.jitter;
+        let coord = &mut self.coord;
+        let kernel_op = op.op.as_ref();
+        let mut apply = |v: &[f64]| -> Vec<f64> {
+            let mut kv = coord.mvm(kernel_op, v);
+            for i in 0..v.len() {
+                kv[i] += (noise[i] + jitter) * v[i];
+            }
+            kv
+        };
+        if opts.precondition {
+            if let Some(fkt) = op.as_fkt() {
+                let pre = BlockJacobi::build(fkt, noise, jitter);
+                let mut precond = |r: &[f64]| pre.apply(r);
+                return preconditioned_cg(&mut apply, &mut precond, y, opts.tol, opts.max_iters);
+            }
+        }
+        let mut identity = |r: &[f64]| r.to_vec();
+        preconditioned_cg(&mut apply, &mut identity, y, opts.tol, opts.max_iters)
+    }
+
+    /// Metrics of the most recent `mvm`/`mvm_batch` (solves record their
+    /// last internal MVM).
+    pub fn last_metrics(&self) -> MvmMetrics {
+        self.coord.last_metrics
+    }
+
+    /// Operator-registry counters (hits, misses, evictions, build time).
+    pub fn registry_stats(&self) -> RegistryStats {
+        self.registry.stats()
+    }
+
+    /// Drop all cached operators (counters survive).
+    pub fn clear_registry(&mut self) {
+        self.registry.clear()
+    }
+
+    /// Effective worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.coord.threads()
+    }
+
+    /// Whether the PJRT tile path would be used for this kernel family.
+    pub fn will_use_pjrt(&self, family: &str, dim: usize) -> bool {
+        self.coord.will_use_pjrt(family, dim)
+    }
+
+    /// Resolve (and cache) a tolerance request. The cache is flushed when
+    /// it reaches [`TUNE_CACHE_FLUSH`] entries — r_max is a bit-exact
+    /// diameter, so a stream of distinct datasets would otherwise grow
+    /// this map without bound while the operator registry stays flat.
+    fn resolve_cached(
+        &mut self,
+        kernel: &Kernel,
+        d: usize,
+        eps: f64,
+        r_max: f64,
+    ) -> Option<Resolved> {
+        let key: TuneKey =
+            (kernel.family, kernel.scale.to_bits(), d.max(2), eps.to_bits(), r_max.to_bits());
+        if let Some(r) = self.tune_cache.get(&key) {
+            return Some(*r);
+        }
+        let res = tune::resolve(kernel, d, eps, r_max)?;
+        if self.tune_cache.len() >= TUNE_CACHE_FLUSH {
+            self.tune_cache.clear();
+        }
+        self.tune_cache.insert(key, res);
+        Some(res)
+    }
+}
+
+/// Scaled diameter of the request's geometry: the bounding-box diagonal
+/// over sources ∪ targets, times the kernel's coordinate scale — the
+/// largest radius the truncation bound needs to cover.
+fn scaled_diameter(sources: &Points, targets: Option<&Points>, scale: f64) -> f64 {
+    if sources.is_empty() {
+        return 1.0;
+    }
+    let (mut lo, mut hi) = sources.bounding_box();
+    if let Some(t) = targets {
+        if !t.is_empty() {
+            let (tlo, thi) = t.bounding_box();
+            for a in 0..sources.d.min(t.d) {
+                lo[a] = lo[a].min(tlo[a]);
+                hi[a] = hi[a].max(thi[a]);
+            }
+        }
+    }
+    let mut acc = 0.0;
+    for a in 0..lo.len() {
+        let w = hi[a] - lo[a];
+        acc += w * w;
+    }
+    acc.sqrt() * scale
+}
+
+/// One operator request, builder-style. Created by [`Session::operator`];
+/// finished by [`OpSpec::build`], which consults the registry (so equal
+/// requests over equal data return pointer-equal cached operators).
+pub struct OpSpec<'a> {
+    session: &'a mut Session,
+    sources: &'a Points,
+    targets: Option<&'a Points>,
+    kernel: Kernel,
+    cfg: FktConfig,
+    tolerance: Option<f64>,
+    p_override: Option<usize>,
+    theta_override: Option<f64>,
+    dense: bool,
+    transient: bool,
+}
+
+impl<'a> OpSpec<'a> {
+    /// Rectangular operator `K(targets, sources)` (GP prediction shape);
+    /// without this the operator is square (targets = sources).
+    pub fn targets(mut self, targets: &'a Points) -> Self {
+        self.targets = Some(targets);
+        self
+    }
+
+    /// Canonical kernel of `family` (scale 1). Default: Gaussian.
+    pub fn kernel(mut self, family: Family) -> Self {
+        self.kernel = Kernel::canonical(family);
+        self
+    }
+
+    /// Full kernel with an explicit coordinate scale / length-scale.
+    pub fn scaled_kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Wholesale FKT configuration (p, θ, leaf size, center, compression).
+    /// `.tolerance()` and the per-field setters still override on top.
+    pub fn config(mut self, cfg: FktConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Request accuracy ε: the session resolves the cheapest `(p, θ)`
+    /// whose Lemma 4.1 truncation bound is ≤ ε for this kernel and this
+    /// dataset's scaled diameter. Panics at [`OpSpec::build`] if ε is
+    /// unattainable within the order cap — pass explicit `.order()` /
+    /// `.theta()` instead for out-of-range demands.
+    pub fn tolerance(mut self, eps: f64) -> Self {
+        self.tolerance = Some(eps);
+        self
+    }
+
+    /// Explicit truncation order p (overrides `.tolerance()`'s choice).
+    pub fn order(mut self, p: usize) -> Self {
+        self.p_override = Some(p);
+        self
+    }
+
+    /// Explicit separation parameter θ (overrides `.tolerance()`'s choice).
+    pub fn theta(mut self, theta: f64) -> Self {
+        self.theta_override = Some(theta);
+        self
+    }
+
+    /// Maximum points per leaf.
+    pub fn leaf_capacity(mut self, leaf: usize) -> Self {
+        self.cfg.leaf_capacity = leaf;
+        self
+    }
+
+    /// Expansion-center convention.
+    pub fn center(mut self, center: ExpansionCenter) -> Self {
+        self.cfg.center = center;
+        self
+    }
+
+    /// Toggle the §A.4 compressed radial representation.
+    pub fn compression(mut self, on: bool) -> Self {
+        self.cfg.compression = on;
+        self
+    }
+
+    /// The paper's Barnes–Hut baseline: p = 0, centroid centers.
+    pub fn barnes_hut(mut self, theta: f64, leaf_capacity: usize) -> Self {
+        self.cfg = FktConfig::barnes_hut(theta, leaf_capacity);
+        self
+    }
+
+    /// Exact dense backend instead of the FKT (O(N·M) reference).
+    pub fn dense(mut self) -> Self {
+        self.dense = true;
+        self
+    }
+
+    /// Build without touching the registry: no fingerprinting, no caching,
+    /// no eviction pressure. The right mode for operators that can never
+    /// be requested twice — t-SNE's per-iteration embedding operators —
+    /// which would otherwise fill the LRU with dead entries and evict
+    /// genuinely reusable ones.
+    pub fn transient(mut self) -> Self {
+        self.transient = true;
+        self
+    }
+
+    /// Resolve the final configuration, consult the registry, and return a
+    /// cheap cloneable handle to the (possibly cached) operator.
+    pub fn build(self) -> OpHandle {
+        let OpSpec {
+            session,
+            sources,
+            targets,
+            kernel,
+            mut cfg,
+            tolerance,
+            p_override,
+            theta_override,
+            dense,
+            transient,
+        } = self;
+        let mut resolved = None;
+        if dense {
+            // DenseOperator ignores every FKT hyperparameter; canonicalize
+            // them so semantically identical dense requests share one
+            // registry key regardless of stray .config()/.order() calls.
+            cfg = FktConfig::default();
+        } else {
+            // Resolution is skipped when both hyperparameters are forced
+            // (nothing left to resolve — and a forced config must not
+            // panic on an unattainable ε it will ignore anyway).
+            let fully_forced = p_override.is_some() && theta_override.is_some();
+            if let Some(eps) = tolerance {
+                if !fully_forced {
+                    let r_max = scaled_diameter(sources, targets, kernel.scale);
+                    let res = session
+                        .resolve_cached(&kernel, sources.d, eps, r_max)
+                        .unwrap_or_else(|| {
+                            panic!(
+                                "tolerance {eps:.1e} unattainable for {:?} (d={}, scaled \
+                                 diameter {r_max:.2}); pass explicit .order(p)/.theta(t)",
+                                kernel.family, sources.d
+                            )
+                        });
+                    cfg.p = res.p;
+                    cfg.theta = res.theta;
+                    resolved = Some(res);
+                }
+            }
+            if let Some(p) = p_override {
+                cfg.p = p;
+            }
+            if let Some(t) = theta_override {
+                cfg.theta = t;
+            }
+            // An override invalidates the resolution's (p, θ, bound) as a
+            // description of the operator actually built — don't let the
+            // handle report hyperparameters it doesn't have.
+            if p_override.is_some() || theta_override.is_some() {
+                resolved = None;
+            }
+        }
+        let build_op = || -> Arc<dyn KernelOp + Send + Sync> {
+            if dense {
+                Arc::new(DenseOperator::new(sources, targets, kernel))
+            } else {
+                Arc::new(FktOperator::new(sources, targets, kernel, cfg))
+            }
+        };
+        let square = targets.is_none();
+        if transient {
+            return OpHandle { op: build_op(), kernel, cfg, dense, square, resolved };
+        }
+        let key = OpKey {
+            src_fp: fingerprint(sources),
+            tgt_fp: targets.map(fingerprint),
+            family: kernel.family,
+            scale_bits: kernel.scale.to_bits(),
+            p: cfg.p,
+            theta_bits: cfg.theta.to_bits(),
+            leaf_capacity: cfg.leaf_capacity,
+            center: cfg.center,
+            compression: cfg.compression,
+            dense,
+        };
+        let op = session.registry.get_or_build(key, build_op);
+        OpHandle { op, kernel, cfg, dense, square, resolved }
+    }
+}
+
+/// A cheap, cloneable handle to a session-owned operator. Holding a handle
+/// keeps the operator alive even after the registry evicts it.
+#[derive(Clone)]
+pub struct OpHandle {
+    op: Arc<dyn KernelOp + Send + Sync>,
+    kernel: Kernel,
+    cfg: FktConfig,
+    dense: bool,
+    /// Built without `.targets(..)` — targets literally are the sources.
+    square: bool,
+    resolved: Option<Resolved>,
+}
+
+impl OpHandle {
+    /// Number of source points.
+    pub fn num_sources(&self) -> usize {
+        self.op.num_sources()
+    }
+
+    /// Number of target points.
+    pub fn num_targets(&self) -> usize {
+        self.op.num_targets()
+    }
+
+    /// The kernel this operator applies.
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    /// The fully resolved configuration (not meaningful for `.dense()`
+    /// handles, which ignore FKT hyperparameters).
+    pub fn config(&self) -> &FktConfig {
+        &self.cfg
+    }
+
+    /// Resolved truncation order p.
+    pub fn order(&self) -> usize {
+        self.cfg.p
+    }
+
+    /// Resolved separation parameter θ.
+    pub fn theta(&self) -> f64 {
+        self.cfg.theta
+    }
+
+    /// The tolerance resolution behind this handle, when `.tolerance(ε)`
+    /// chose the hyperparameters.
+    pub fn resolved(&self) -> Option<Resolved> {
+        self.resolved
+    }
+
+    /// Whether this is the exact dense backend.
+    pub fn is_dense(&self) -> bool {
+        self.dense
+    }
+
+    /// Whether the operator is square in the strong sense — built without
+    /// `.targets(..)`, so targets are the sources (a requirement for
+    /// [`Session::solve`], where equal *counts* would not suffice).
+    pub fn is_square(&self) -> bool {
+        self.square
+    }
+
+    /// Downcast to the FKT operator (None for dense handles) — used by
+    /// diagnostics (tree/plan statistics) and the solve preconditioner.
+    pub fn as_fkt(&self) -> Option<&FktOperator> {
+        self.op.as_fkt()
+    }
+
+    /// The shared operator itself.
+    pub fn op(&self) -> &Arc<dyn KernelOp + Send + Sync> {
+        &self.op
+    }
+
+    /// Whether two handles share one cached operator (registry hit).
+    pub fn ptr_eq(&self, other: &OpHandle) -> bool {
+        Arc::ptr_eq(&self.op, &other.op)
+    }
+}
+
+/// Options for [`Session::solve`]. Borrows the noise diagonal so
+/// repeated solves (every GP fit) don't copy an O(n) vector per call.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveOpts<'a> {
+    /// CG relative-residual tolerance.
+    pub tol: f64,
+    /// CG iteration cap.
+    pub max_iters: usize,
+    /// Diagonal jitter added for numerical safety.
+    pub jitter: f64,
+    /// Optional per-point noise variances added to the diagonal
+    /// (the GP's Σ); `None` solves `(K + jitter·I) x = y`.
+    pub noise: Option<&'a [f64]>,
+    /// Leaf-block Jacobi preconditioning (FKT operators only; dense
+    /// handles fall back to unpreconditioned CG).
+    pub precondition: bool,
+}
+
+impl Default for SolveOpts<'_> {
+    fn default() -> Self {
+        SolveOpts {
+            tol: 1e-6,
+            max_iters: 200,
+            jitter: 1e-8,
+            noise: None,
+            precondition: true,
+        }
+    }
+}
+
+/// Leaf-block Jacobi preconditioner: per-leaf Cholesky factors of
+/// `K_leaf + Σ_leaf + jitter·I`. The FKT tree's leaves capture exactly the
+/// short-range couplings that make kernel systems ill-conditioned (e.g.
+/// dense along-track satellite sampling), cutting CG iterations by an
+/// order of magnitude (EXPERIMENTS.md §Perf).
+struct BlockJacobi {
+    /// Per-leaf (original indices, Cholesky factor).
+    blocks: Vec<(Vec<usize>, Mat)>,
+}
+
+impl BlockJacobi {
+    fn build(op: &FktOperator, noise: &[f64], jitter: f64) -> BlockJacobi {
+        let kernel = &op.kernel;
+        let tree = op.tree();
+        let mut blocks = Vec::with_capacity(tree.leaves.len());
+        for &leaf in &tree.leaves {
+            let node = &tree.nodes[leaf];
+            let idx: Vec<usize> = (node.start..node.end).map(|i| tree.perm[i]).collect();
+            let m = idx.len();
+            let mut k = Mat::zeros(m, m);
+            for a in 0..m {
+                // tree.points are kernel-scaled; canonical profile applies.
+                let pa = tree.points.point(node.start + a);
+                for b in 0..=a {
+                    let pb = tree.points.point(node.start + b);
+                    let r = crate::linalg::vecops::dist2(pa, pb).sqrt();
+                    let v = if r == 0.0 {
+                        kernel.family.value_at_zero()
+                    } else {
+                        kernel.family.eval(r)
+                    };
+                    k[(a, b)] = v;
+                    k[(b, a)] = v;
+                }
+                k[(a, a)] += noise[idx[a]] + jitter;
+            }
+            let l = cholesky(&k).unwrap_or_else(|| {
+                // Extremely degenerate block: fall back to the diagonal.
+                let mut dl = Mat::zeros(m, m);
+                for a in 0..m {
+                    dl[(a, a)] = k[(a, a)].max(jitter).sqrt();
+                }
+                dl
+            });
+            blocks.push((idx, l));
+        }
+        BlockJacobi { blocks }
+    }
+
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        let mut z = vec![0.0; r.len()];
+        let mut rl = Vec::new();
+        for (idx, l) in &self.blocks {
+            rl.clear();
+            rl.extend(idx.iter().map(|&i| r[i]));
+            let sol = cholesky_solve(l, &rl);
+            for (slot, &i) in idx.iter().enumerate() {
+                z[i] = sol[slot];
+            }
+        }
+        z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{dense_matrix, dense_mvm};
+    use crate::rng::Pcg32;
+
+    fn uniform_points(n: usize, d: usize, seed: u64) -> Points {
+        let mut rng = Pcg32::seeded(seed);
+        Points::new(d, rng.uniform_vec(n * d, 0.0, 1.0))
+    }
+
+    fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            num += (x - y) * (x - y);
+            den += y * y;
+        }
+        (num / den.max(1e-300)).sqrt()
+    }
+
+    #[test]
+    fn session_mvm_matches_direct_operator() {
+        let pts = uniform_points(500, 2, 701);
+        let mut rng = Pcg32::seeded(702);
+        let w = rng.normal_vec(500);
+        // One thread: the session path then reduces in exactly the serial
+        // operator's order, so the comparison is to round-off.
+        let mut session = Session::native(1);
+        let h = session
+            .operator(&pts)
+            .kernel(Family::Cauchy)
+            .order(4)
+            .theta(0.5)
+            .leaf_capacity(64)
+            .build();
+        let z = session.mvm(&h, &w);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
+        let direct = FktOperator::square(&pts, Kernel::canonical(Family::Cauchy), cfg).matvec(&w);
+        for i in 0..500 {
+            assert!((z[i] - direct[i]).abs() < 1e-12 * (1.0 + direct[i].abs()), "i={i}");
+        }
+    }
+
+    #[test]
+    fn repeated_requests_hit_the_registry() {
+        let pts = uniform_points(400, 2, 703);
+        let mut session = Session::native(1);
+        let a = session.operator(&pts).kernel(Family::Gaussian).order(4).theta(0.5).build();
+        let b = session.operator(&pts).kernel(Family::Gaussian).order(4).theta(0.5).build();
+        assert!(a.ptr_eq(&b), "identical requests must share one operator");
+        let s = session.registry_stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        // A different configuration is a different operator.
+        let c = session.operator(&pts).kernel(Family::Gaussian).order(5).theta(0.5).build();
+        assert!(!a.ptr_eq(&c));
+        assert_eq!(session.registry_stats().misses, 2);
+        // A perturbed dataset is a different operator.
+        let mut pts2 = pts.clone();
+        pts2.point_mut(0)[0] += 1e-13;
+        let d = session.operator(&pts2).kernel(Family::Gaussian).order(4).theta(0.5).build();
+        assert!(!a.ptr_eq(&d));
+    }
+
+    #[test]
+    fn registry_capacity_bounds_memory() {
+        let mut session = Session::builder()
+            .threads(1)
+            .backend(Backend::Native)
+            .registry_capacity(2)
+            .build();
+        let pts = uniform_points(200, 2, 704);
+        for p in 2..6 {
+            let _ = session.operator(&pts).kernel(Family::Cauchy).order(p).theta(0.5).build();
+        }
+        let s = session.registry_stats();
+        assert!(s.len <= 2, "len {} exceeds capacity", s.len);
+        assert_eq!(s.evictions, 2);
+    }
+
+    #[test]
+    fn tolerance_resolves_and_explicit_overrides_win() {
+        let pts = uniform_points(300, 2, 705);
+        let mut session = Session::native(1);
+        let auto = session.operator(&pts).kernel(Family::Matern52).tolerance(1e-5).build();
+        let res = auto.resolved().expect("tolerance path resolves");
+        assert!(res.bound <= 1e-5);
+        assert_eq!(auto.order(), res.p);
+        assert!((auto.theta() - res.theta).abs() < 1e-15);
+        // Explicit order wins over the resolved one; θ stays resolved. The
+        // handle then reports no resolution — its (p, θ) are not the
+        // resolver's choice.
+        let forced =
+            session.operator(&pts).kernel(Family::Matern52).tolerance(1e-5).order(3).build();
+        assert_eq!(forced.order(), 3);
+        assert!((forced.theta() - res.theta).abs() < 1e-15);
+        assert!(forced.resolved().is_none());
+        // Fully-forced hyperparameters skip resolution entirely — even an
+        // unattainable ε must not panic when it would be ignored anyway.
+        let pinned = session
+            .operator(&pts)
+            .kernel(Family::Matern52)
+            .tolerance(1e-30)
+            .order(4)
+            .theta(0.5)
+            .build();
+        assert_eq!((pinned.order(), pinned.theta()), (4, 0.5));
+        // Tolerance resolutions are cached: same request re-resolves free
+        // and yields the same hyperparameters.
+        let again = session.operator(&pts).kernel(Family::Matern52).tolerance(1e-5).build();
+        assert!(auto.ptr_eq(&again));
+    }
+
+    #[test]
+    fn transient_requests_bypass_the_registry() {
+        let pts = uniform_points(300, 2, 718);
+        let mut rng = Pcg32::seeded(719);
+        let w = rng.normal_vec(300);
+        let mut session = Session::native(1);
+        let a = session
+            .operator(&pts)
+            .kernel(Family::Cauchy)
+            .order(4)
+            .theta(0.5)
+            .transient()
+            .build();
+        let b = session
+            .operator(&pts)
+            .kernel(Family::Cauchy)
+            .order(4)
+            .theta(0.5)
+            .transient()
+            .build();
+        assert!(!a.ptr_eq(&b), "transient builds are never shared");
+        let s = session.registry_stats();
+        assert_eq!((s.hits, s.misses, s.len), (0, 0, 0), "registry untouched");
+        // The handle still works through every session verb.
+        let za = session.mvm(&a, &w);
+        let zb = session.mvm(&b, &w);
+        for (x, y) in za.iter().zip(&zb) {
+            assert!((x - y).abs() <= 1e-12 * (1.0 + y.abs()));
+        }
+    }
+
+    #[test]
+    fn dense_handles_are_cached_separately() {
+        let pts = uniform_points(250, 2, 706);
+        let mut rng = Pcg32::seeded(707);
+        let w = rng.normal_vec(250);
+        let mut session = Session::native(1);
+        let fast = session.operator(&pts).kernel(Family::Cauchy).order(6).theta(0.4).build();
+        let exact = session.operator(&pts).kernel(Family::Cauchy).dense().build();
+        assert!(exact.is_dense());
+        assert!(exact.as_fkt().is_none());
+        assert!(!fast.ptr_eq(&exact));
+        let zf = session.mvm(&fast, &w);
+        let ze = session.mvm(&exact, &w);
+        assert!(rel_err(&zf, &ze) < 1e-4, "backends disagree");
+        // Dense requests cache like any other, and FKT hyperparameters —
+        // which the dense backend ignores — don't fragment the key.
+        let exact2 = session.operator(&pts).kernel(Family::Cauchy).dense().build();
+        assert!(exact.ptr_eq(&exact2));
+        let exact3 =
+            session.operator(&pts).kernel(Family::Cauchy).order(9).theta(0.2).dense().build();
+        assert!(exact.ptr_eq(&exact3));
+    }
+
+    #[test]
+    fn mvm_batch_matches_looped_mvm() {
+        let pts = uniform_points(400, 2, 708);
+        let mut rng = Pcg32::seeded(709);
+        let w = rng.normal_vec(400 * 3);
+        let mut session = Session::native(4);
+        let h = session.operator(&pts).kernel(Family::Cauchy).order(4).theta(0.5).build();
+        let batched = session.mvm_batch(&h, &w, 3);
+        assert_eq!(session.last_metrics().moment_passes, 1);
+        for c in 0..3 {
+            let single = session.mvm(&h, &w[c * 400..(c + 1) * 400]);
+            for t in 0..400 {
+                let b = batched[c * 400 + t];
+                assert!((b - single[t]).abs() <= 1e-12 * (1.0 + single[t].abs()), "c={c} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_dense_cholesky() {
+        let n = 220;
+        let pts = uniform_points(n, 2, 710);
+        let mut rng = Pcg32::seeded(711);
+        let y = rng.normal_vec(n);
+        let noise: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.05, 0.1)).collect();
+        let kernel = Kernel::matern32(0.5);
+        // Dense oracle.
+        let mut k = dense_matrix(&kernel, &pts, &pts);
+        for i in 0..n {
+            k[(i, i)] += noise[i] + 1e-8;
+        }
+        let l = cholesky(&k).expect("SPD");
+        let oracle = cholesky_solve(&l, &y);
+        let mut session = Session::native(2);
+        let h = session
+            .operator(&pts)
+            .scaled_kernel(kernel)
+            .order(8)
+            .theta(0.3)
+            .leaf_capacity(32)
+            .build();
+        for precondition in [true, false] {
+            let opts = SolveOpts {
+                tol: 1e-8,
+                max_iters: 800,
+                jitter: 1e-8,
+                noise: Some(&noise),
+                precondition,
+            };
+            let sol = session.solve(&h, &y, &opts);
+            assert!(sol.converged, "precondition={precondition}: residual {}", sol.rel_residual);
+            let e = rel_err(&sol.x, &oracle);
+            assert!(e < 1e-3, "precondition={precondition}: rel err {e}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "square operator")]
+    fn solve_rejects_rectangular_operator_even_with_equal_counts() {
+        // 100 sources and 100 *different* targets: counts match but the
+        // system is not symmetric — solve must refuse.
+        let src = uniform_points(100, 2, 720);
+        let tgt = uniform_points(100, 2, 721);
+        let mut session = Session::native(1);
+        let h = session
+            .operator(&src)
+            .targets(&tgt)
+            .kernel(Family::Gaussian)
+            .order(3)
+            .theta(0.5)
+            .build();
+        let y = vec![1.0; 100];
+        let _ = session.solve(&h, &y, &SolveOpts::default());
+    }
+
+    #[test]
+    fn tolerance_yields_measured_error_within_eps() {
+        // The tentpole promise in one unit test (the integration suite
+        // sweeps more kernels): auto-tuned (p, θ) must deliver ≤ ε
+        // measured against the exact dense sum.
+        let pts = uniform_points(600, 2, 712);
+        let mut rng = Pcg32::seeded(713);
+        let w = rng.normal_vec(600);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let dense = dense_mvm(&kern, &pts, &pts, &w);
+        let mut session = Session::native(2);
+        for eps in [1e-3, 1e-6] {
+            let h = session
+                .operator(&pts)
+                .kernel(Family::Gaussian)
+                .tolerance(eps)
+                .leaf_capacity(64)
+                .build();
+            let z = session.mvm(&h, &w);
+            let e = rel_err(&z, &dense);
+            assert!(e <= eps, "eps={eps}: measured {e} (resolved {:?})", h.resolved());
+        }
+    }
+
+    #[test]
+    fn rectangular_request_through_session() {
+        let src = uniform_points(300, 2, 714);
+        let tgt = uniform_points(120, 2, 715);
+        let mut rng = Pcg32::seeded(716);
+        let w = rng.normal_vec(300);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let dense = dense_mvm(&kern, &src, &tgt, &w);
+        let mut session = Session::native(1);
+        let h = session
+            .operator(&src)
+            .targets(&tgt)
+            .kernel(Family::Gaussian)
+            .order(5)
+            .theta(0.5)
+            .leaf_capacity(25)
+            .build();
+        assert_eq!(h.num_targets(), 120);
+        let z = session.mvm(&h, &w);
+        assert!(rel_err(&z, &dense) < 1e-3);
+        // Swapping targets changes the key.
+        let h2 = session.operator(&src).kernel(Family::Gaussian).order(5).theta(0.5).build();
+        assert!(!h.ptr_eq(&h2));
+    }
+
+    #[test]
+    #[should_panic(expected = "unattainable")]
+    fn unattainable_tolerance_panics_with_guidance() {
+        let pts = uniform_points(50, 6, 717);
+        let mut session = Session::native(1);
+        let _ = session.operator(&pts).kernel(Family::Gaussian).tolerance(1e-14).build();
+    }
+}

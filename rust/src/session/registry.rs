@@ -1,0 +1,265 @@
+//! The session's keyed operator registry.
+//!
+//! An FKT operator is expensive to build (tree + interaction plan + exact
+//! expansion coefficients) but cheap to *reuse* — the whole point of a
+//! service handling many requests over the same dataset. The registry maps
+//! a structural key — dataset fingerprint(s) × kernel × fully resolved
+//! configuration — to a cached `Arc<dyn KernelOp>`, so a repeated request
+//! returns the *same* operator (pointer-equal Arc) without rebuilding.
+//!
+//! **Fingerprinting.** Datasets have no identity of their own (`Points` is
+//! a plain coordinate buffer), so the registry derives one: two
+//! independent word-wise hash lanes (128 bits total) over `(d, n, every
+//! coordinate's f64 bit pattern)`. Any change to any coordinate changes
+//! the fingerprint, so a moving dataset (t-SNE's per-iteration embedding)
+//! naturally misses the cache while a static dataset (a GP's training
+//! set) always hits it. The fingerprint is *probabilistic* identity: an
+//! accidental collision (≈2⁻¹²⁸ for unrelated data) would serve the wrong
+//! operator, and the hash is non-cryptographic — adversarially crafted
+//! point sets are out of scope for this cache.
+//!
+//! **Eviction.** Bounded LRU: every hit/insert stamps a monotone tick, and
+//! inserting past capacity evicts the least-recently-used entry. Workloads
+//! that churn operators (t-SNE rebuilds two per gradient step) therefore
+//! hold memory constant instead of accumulating dead trees.
+
+use crate::fkt::ExpansionCenter;
+use crate::kernels::Family;
+use crate::op::KernelOp;
+use crate::points::Points;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Two-lane word-wise hash over the point set: dimension, count, and the
+/// bit pattern of every coordinate. Lane 1 is FNV-1a (xor-then-multiply);
+/// lane 2 multiplies first and folds in a rotated word, so the lanes don't
+/// share collision structure. Two multiplies per u64 word keep the hash
+/// far cheaper than the O(N log N) operator build it guards. See the
+/// module docs for what this identity does and does not guarantee.
+pub fn fingerprint(points: &Points) -> u128 {
+    const OFFSET1: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME1: u64 = 0x0000_0100_0000_01b3;
+    const OFFSET2: u64 = 0x6c62_272e_07bb_0142;
+    const PRIME2: u64 = 0x9e37_79b9_7f4a_7c15;
+    let mut h1 = OFFSET1;
+    let mut h2 = OFFSET2;
+    let mut mix = |word: u64| {
+        h1 = (h1 ^ word).wrapping_mul(PRIME1);
+        h2 = h2.wrapping_mul(PRIME2) ^ word.rotate_left(32);
+    };
+    mix(points.d as u64);
+    mix(points.len() as u64);
+    for &c in &points.coords {
+        mix(c.to_bits());
+    }
+    ((h1 as u128) << 64) | h2 as u128
+}
+
+/// Structural identity of one operator request. Configuration fields are
+/// exact (floating-point parameters are keyed by bit pattern, not by
+/// value); dataset identity is the 128-bit [`fingerprint`], so equal keys
+/// build identical operators up to that fingerprint's collision bound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct OpKey {
+    /// Source-dataset fingerprint.
+    pub src_fp: u128,
+    /// Target-dataset fingerprint; `None` for the square case.
+    pub tgt_fp: Option<u128>,
+    /// Kernel family.
+    pub family: Family,
+    /// Kernel coordinate scale (bit pattern).
+    pub scale_bits: u64,
+    /// Resolved truncation order p.
+    pub p: usize,
+    /// Resolved separation parameter θ (bit pattern).
+    pub theta_bits: u64,
+    /// Leaf capacity.
+    pub leaf_capacity: usize,
+    /// Expansion-center convention.
+    pub center: ExpansionCenter,
+    /// §A.4 compression toggle.
+    pub compression: bool,
+    /// Exact dense backend instead of the FKT.
+    pub dense: bool,
+}
+
+/// Registry counters — the observable behaviour of the cache. `hits` vs
+/// `misses` is asserted in tests; `build_seconds` accumulates the time the
+/// cache has *saved callers from paying again*.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegistryStats {
+    /// Requests answered from the cache.
+    pub hits: u64,
+    /// Requests that had to build a new operator.
+    pub misses: u64,
+    /// Entries evicted by the LRU policy.
+    pub evictions: u64,
+    /// Total seconds spent building operators (misses only).
+    pub build_seconds: f64,
+    /// Current number of cached operators.
+    pub len: usize,
+}
+
+struct Entry {
+    op: Arc<dyn KernelOp + Send + Sync>,
+    last_used: u64,
+}
+
+/// Bounded LRU map from [`OpKey`] to a shared operator.
+pub struct Registry {
+    entries: HashMap<OpKey, Entry>,
+    capacity: usize,
+    tick: u64,
+    stats: RegistryStats,
+}
+
+impl Registry {
+    /// Empty registry holding at most `capacity` operators (min 1).
+    pub fn new(capacity: usize) -> Registry {
+        Registry {
+            entries: HashMap::new(),
+            capacity: capacity.max(1),
+            tick: 0,
+            stats: RegistryStats::default(),
+        }
+    }
+
+    /// Look up `key`, building (and caching) the operator on a miss.
+    /// Returns a clone of the cached Arc — repeated calls with the same
+    /// key return pointer-equal operators until the entry is evicted.
+    pub fn get_or_build(
+        &mut self,
+        key: OpKey,
+        build: impl FnOnce() -> Arc<dyn KernelOp + Send + Sync>,
+    ) -> Arc<dyn KernelOp + Send + Sync> {
+        self.tick += 1;
+        if let Some(entry) = self.entries.get_mut(&key) {
+            entry.last_used = self.tick;
+            self.stats.hits += 1;
+            self.stats.len = self.entries.len();
+            return Arc::clone(&entry.op);
+        }
+        self.stats.misses += 1;
+        let t0 = std::time::Instant::now();
+        let op = build();
+        self.stats.build_seconds += t0.elapsed().as_secs_f64();
+        // Evict least-recently-used entries until the newcomer fits.
+        while self.entries.len() >= self.capacity {
+            let oldest = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("non-empty registry");
+            self.entries.remove(&oldest);
+            self.stats.evictions += 1;
+        }
+        self.entries.insert(key, Entry { op: Arc::clone(&op), last_used: self.tick });
+        self.stats.len = self.entries.len();
+        op
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> RegistryStats {
+        self.stats
+    }
+
+    /// Drop every cached operator (counters are preserved).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.stats.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::DenseOperator;
+    use crate::kernels::Kernel;
+    use crate::rng::Pcg32;
+
+    fn key(src_fp: u128) -> OpKey {
+        OpKey {
+            src_fp,
+            tgt_fp: None,
+            family: Family::Gaussian,
+            scale_bits: 1.0f64.to_bits(),
+            p: 4,
+            theta_bits: 0.5f64.to_bits(),
+            leaf_capacity: 64,
+            center: ExpansionCenter::BoxCenter,
+            compression: false,
+            dense: false,
+        }
+    }
+
+    fn tiny_op() -> Arc<dyn KernelOp + Send + Sync> {
+        let pts = Points::new(2, vec![0.0, 0.0, 1.0, 1.0]);
+        Arc::new(DenseOperator::square(&pts, Kernel::canonical(Family::Gaussian)))
+    }
+
+    #[test]
+    fn fingerprint_is_coordinate_sensitive() {
+        let mut rng = Pcg32::seeded(601);
+        let a = Points::new(3, rng.uniform_vec(60, 0.0, 1.0));
+        let mut b = a.clone();
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        b.point_mut(7)[1] += 1e-14;
+        assert_ne!(fingerprint(&a), fingerprint(&b), "single-coordinate perturbation");
+        // Dimension is part of the identity even with identical buffers.
+        let c = Points::new(2, a.coords.clone());
+        assert_ne!(fingerprint(&a), fingerprint(&c));
+    }
+
+    #[test]
+    fn hits_return_pointer_equal_arcs() {
+        let mut reg = Registry::new(8);
+        let first = reg.get_or_build(key(1), tiny_op);
+        let second = reg.get_or_build(key(1), || panic!("must not rebuild"));
+        assert!(Arc::ptr_eq(&first, &second));
+        let s = reg.stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_keys_build_distinct_operators() {
+        let mut reg = Registry::new(8);
+        let a = reg.get_or_build(key(1), tiny_op);
+        let b = reg.get_or_build(key(2), tiny_op);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.stats().misses, 2);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut reg = Registry::new(2);
+        let a = reg.get_or_build(key(1), tiny_op);
+        let _b = reg.get_or_build(key(2), tiny_op);
+        // Touch key 1 so key 2 is the LRU entry.
+        let a2 = reg.get_or_build(key(1), || panic!("cached"));
+        assert!(Arc::ptr_eq(&a, &a2));
+        let _c = reg.get_or_build(key(3), tiny_op); // evicts key 2
+        let s = reg.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.len, 2);
+        // Key 1 survived; key 2 was evicted and must rebuild.
+        let a3 = reg.get_or_build(key(1), || panic!("cached"));
+        assert!(Arc::ptr_eq(&a, &a3));
+        let mut rebuilt = false;
+        let _b2 = reg.get_or_build(key(2), || {
+            rebuilt = true;
+            tiny_op()
+        });
+        assert!(rebuilt, "evicted entry must rebuild");
+    }
+
+    #[test]
+    fn build_time_is_accounted() {
+        let mut reg = Registry::new(4);
+        let _ = reg.get_or_build(key(9), || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            tiny_op()
+        });
+        assert!(reg.stats().build_seconds > 0.0);
+    }
+}

@@ -9,13 +9,17 @@
 //! (paper). Per iteration the embedding moves, so the operator (tree +
 //! plan) is rebuilt — the quasilinear build is part of the method's cost,
 //! exactly as in the paper's comparison with van der Maaten's Barnes–Hut
-//! t-SNE.
+//! t-SNE. Operators are requested through the [`Session`] as *transient*
+//! builds: the moving embedding means an operator can never be requested
+//! twice, so caching them would only fill the registry with dead entries
+//! and evict genuinely reusable ones — each step's operators are built,
+//! used, and dropped, exactly as the per-iteration cost model assumes.
 
-use crate::coordinator::Coordinator;
-use crate::fkt::{FktConfig, FktOperator};
-use crate::kernels::{Family, Kernel};
+use crate::fkt::FktConfig;
+use crate::kernels::Family;
 use crate::points::Points;
 use crate::rng::Pcg32;
+use crate::session::Session;
 use crate::tree::{knn, Tree};
 
 /// Sparse symmetric affinity matrix P in COO-per-row form.
@@ -144,7 +148,7 @@ pub fn compute_affinities(data: &Points, perplexity: f64) -> Affinities {
 pub fn repulsive_field(
     embedding: &Points,
     cfg: &TsneConfig,
-    coord: &mut Coordinator,
+    session: &mut Session,
 ) -> (Vec<f64>, Vec<f64>, f64) {
     let n = embedding.len();
     if cfg.exact_repulsion {
@@ -175,18 +179,28 @@ pub fn repulsive_field(
     let y0: Vec<f64> = (0..n).map(|i| embedding.point(i)[0]).collect();
     let y1: Vec<f64> = (0..n).map(|i| embedding.point(i)[1]).collect();
     // Z: Cauchy MVM with ones (subtracting the N diagonal terms).
-    let cauchy = FktOperator::square(embedding, Kernel::canonical(Family::Cauchy), cfg.fkt);
-    let s1 = coord.mvm(&cauchy, &ones);
+    let cauchy = session
+        .operator(embedding)
+        .kernel(Family::Cauchy)
+        .config(cfg.fkt)
+        .transient()
+        .build();
+    let s1 = session.mvm(&cauchy, &ones);
     let z: f64 = s1.iter().sum::<f64>() - n as f64;
     // Repulsion: the three squared-Cauchy MVMs with [1, y_x, y_y] fused
     // into one 3-column batch — a single tree traversal per gradient step
     // instead of three (the per-pair harmonics and radial jets are shared).
-    let csq = FktOperator::square(embedding, Kernel::canonical(Family::CauchySquared), cfg.fkt);
+    let csq = session
+        .operator(embedding)
+        .kernel(Family::CauchySquared)
+        .config(cfg.fkt)
+        .transient()
+        .build();
     let mut wb = Vec::with_capacity(3 * n);
     wb.extend_from_slice(&ones);
     wb.extend_from_slice(&y0);
     wb.extend_from_slice(&y1);
-    let abxy = coord.mvm_batch(&csq, &wb, 3);
+    let abxy = session.mvm_batch(&csq, &wb, 3);
     let (a, rest) = abxy.split_at(n);
     let (bx, by) = rest.split_at(n);
     let mut rx = vec![0.0; n];
@@ -208,7 +222,7 @@ pub struct TsneResult {
 }
 
 /// Run t-SNE on `data`, returning the 2-D embedding.
-pub fn run(data: &Points, cfg: &TsneConfig, coord: &mut Coordinator) -> TsneResult {
+pub fn run(data: &Points, cfg: &TsneConfig, session: &mut Session) -> TsneResult {
     let n = data.len();
     let aff = compute_affinities(data, cfg.perplexity);
     let mut rng = Pcg32::seeded(cfg.seed);
@@ -223,7 +237,7 @@ pub fn run(data: &Points, cfg: &TsneConfig, coord: &mut Coordinator) -> TsneResu
             cfg.momentum_late
         };
         let embedding = Points::new(2, y.clone());
-        let (rx, ry, z) = repulsive_field(&embedding, cfg, coord);
+        let (rx, ry, z) = repulsive_field(&embedding, cfg, session);
         // Attractive term over the sparse P.
         let mut grad = vec![0.0; 2 * n];
         for i in 0..n {
@@ -333,15 +347,15 @@ mod tests {
     fn fkt_repulsion_matches_exact() {
         let mut rng = Pcg32::seeded(232);
         let emb = Points::new(2, rng.normal_vec(400 * 2));
-        let mut coord = Coordinator::native(2);
+        let mut session = Session::native(2);
         let cfg_exact = TsneConfig { exact_repulsion: true, ..Default::default() };
         let cfg_fkt = TsneConfig {
             exact_repulsion: false,
             fkt: FktConfig { p: 5, theta: 0.4, leaf_capacity: 32, ..Default::default() },
             ..Default::default()
         };
-        let (ex, ey, ez) = repulsive_field(&emb, &cfg_exact, &mut coord);
-        let (fx, fy, fz) = repulsive_field(&emb, &cfg_fkt, &mut coord);
+        let (ex, ey, ez) = repulsive_field(&emb, &cfg_exact, &mut session);
+        let (fx, fy, fz) = repulsive_field(&emb, &cfg_fkt, &mut session);
         assert!((ez - fz).abs() < 1e-3 * ez, "Z: {ez} vs {fz}");
         let norm: f64 = ex.iter().map(|v| v * v).sum::<f64>().sqrt();
         let mut err = 0.0;
@@ -364,16 +378,19 @@ mod tests {
             fkt: FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() },
             ..Default::default()
         };
-        let mut coord = Coordinator::native(2);
-        let (fx, fy, _) = repulsive_field(&emb, &cfg, &mut coord);
-        // Pre-fusion reference: the same operator, three single-RHS MVMs.
+        let mut session = Session::native(2);
+        let (fx, fy, _) = repulsive_field(&emb, &cfg, &mut session);
+        // Pre-fusion reference: an identically-configured operator (the
+        // deterministic build makes it numerically identical to the
+        // transient one inside repulsive_field), three single-RHS MVMs.
         let ones = vec![1.0; n];
         let y0: Vec<f64> = (0..n).map(|i| emb.point(i)[0]).collect();
         let y1: Vec<f64> = (0..n).map(|i| emb.point(i)[1]).collect();
-        let csq = FktOperator::square(&emb, Kernel::canonical(Family::CauchySquared), cfg.fkt);
-        let a = coord.mvm(&csq, &ones);
-        let bx = coord.mvm(&csq, &y0);
-        let by = coord.mvm(&csq, &y1);
+        let csq =
+            session.operator(&emb).kernel(Family::CauchySquared).config(cfg.fkt).build();
+        let a = session.mvm(&csq, &ones);
+        let bx = session.mvm(&csq, &y0);
+        let by = session.mvm(&csq, &y1);
         for i in 0..n {
             let rx = (a[i] - 1.0) * y0[i] - (bx[i] - y0[i]);
             let ry = (a[i] - 1.0) * y1[i] - (by[i] - y1[i]);
@@ -386,7 +403,7 @@ mod tests {
     fn kl_decreases_on_clustered_data() {
         let mut rng = Pcg32::seeded(233);
         let (data, _) = mnist_like(300, 10, &mut rng);
-        let mut coord = Coordinator::native(2);
+        let mut session = Session::native(2);
         let cfg = TsneConfig {
             iterations: 120,
             exaggeration_iters: 50,
@@ -395,7 +412,7 @@ mod tests {
             exact_repulsion: true, // small N: exact is fastest & cleanest
             ..Default::default()
         };
-        let res = run(&data, &cfg, &mut coord);
+        let res = run(&data, &cfg, &mut session);
         let first = res.kl_trace.first().unwrap().1;
         let last = res.kl_trace.last().unwrap().1;
         assert!(last < first, "KL did not decrease: {first} -> {last}");
@@ -405,7 +422,7 @@ mod tests {
     fn embedding_separates_clusters() {
         let mut rng = Pcg32::seeded(234);
         let (data, labels) = mnist_like(400, 12, &mut rng);
-        let mut coord = Coordinator::native(2);
+        let mut session = Session::native(2);
         let cfg = TsneConfig {
             iterations: 250,
             exaggeration_iters: 100,
@@ -414,7 +431,7 @@ mod tests {
             exact_repulsion: true,
             ..Default::default()
         };
-        let res = run(&data, &cfg, &mut coord);
+        let res = run(&data, &cfg, &mut session);
         let purity = knn_purity(&res.embedding, &labels, 10);
         assert!(purity > 0.8, "embedding purity {purity}");
     }

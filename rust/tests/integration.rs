@@ -1,13 +1,14 @@
-//! Cross-module integration tests: the full operator pipeline against the
-//! dense oracle, coordinator backends, GP end-to-end, and (when artifacts
-//! are built) the PJRT seam.
+//! Cross-module integration tests: the full session-fronted pipeline
+//! against the dense oracle, tolerance-driven auto-tuning, operator-
+//! registry reuse, GP/t-SNE end-to-end, and (when artifacts are built)
+//! the PJRT seam. Application-level code goes through [`Session`] only —
+//! no direct `FktOperator`/`Coordinator` construction anywhere here.
 
 use fkt::baselines::dense_mvm;
-use fkt::coordinator::{Backend, Coordinator, CoordinatorConfig};
-use fkt::fkt::{FktConfig, FktOperator};
 use fkt::kernels::{Family, Kernel};
 use fkt::points::Points;
 use fkt::rng::Pcg32;
+use fkt::session::{Backend, Session};
 
 fn rel_err(a: &[f64], b: &[f64]) -> f64 {
     let mut num = 0.0;
@@ -22,11 +23,11 @@ fn rel_err(a: &[f64], b: &[f64]) -> f64 {
 #[test]
 fn full_pipeline_all_default_artifact_families() {
     // Every family the AOT artifact set ships must pass the dense check
-    // through the coordinator (native backend).
+    // through the session (native backend).
     let mut rng = Pcg32::seeded(401);
     let pts = Points::new(2, rng.uniform_vec(600 * 2, 0.0, 1.0));
     let w = rng.normal_vec(600);
-    let mut coord = Coordinator::native(1);
+    let mut session = Session::native(1);
     for fam in [
         Family::Cauchy,
         Family::CauchySquared,
@@ -37,56 +38,116 @@ fn full_pipeline_all_default_artifact_families() {
     ] {
         let kern = Kernel::canonical(fam);
         let dense = dense_mvm(&kern, &pts, &pts, &w);
-        let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 50, ..Default::default() };
-        let op = FktOperator::square(&pts, kern, cfg);
-        let z = coord.mvm(&op, &w);
+        let op = session.operator(&pts).kernel(fam).order(5).theta(0.5).leaf_capacity(50).build();
+        let z = session.mvm(&op, &w);
         let e = rel_err(&z, &dense);
         assert!(e < 2e-3, "{fam:?}: rel err {e}");
     }
 }
 
 #[test]
-fn pjrt_backend_end_to_end_when_artifacts_built() {
-    let mut coord = Coordinator::new(CoordinatorConfig { threads: 1, backend: Backend::Pjrt });
-    if !coord.will_use_pjrt("gaussian", 3) {
-        eprintln!("skipping: artifacts not built");
-        return;
-    }
-    let mut rng = Pcg32::seeded(402);
-    let pts = Points::new(3, rng.uniform_vec(700 * 3, 0.0, 1.0));
+fn tolerance_requests_meet_measured_error() {
+    // The tentpole acceptance check: for Gaussian / Matérn-5/2 / Cauchy,
+    // `.tolerance(ε)` must auto-tune (p, θ) such that the *measured*
+    // relative error against the exact dense sum is ≤ ε.
+    let mut rng = Pcg32::seeded(408);
+    let pts = Points::new(2, rng.uniform_vec(700 * 2, 0.0, 1.0));
     let w = rng.normal_vec(700);
-    let kern = Kernel::canonical(Family::Gaussian);
-    let dense = dense_mvm(&kern, &pts, &pts, &w);
-    let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 80, ..Default::default() };
-    let op = FktOperator::square(&pts, kern, cfg);
-    let z = coord.mvm(&op, &w);
-    assert!(coord.last_metrics.used_pjrt);
-    let e = rel_err(&z, &dense);
-    assert!(e < 2e-3, "pjrt pipeline rel err {e}");
+    let mut session = Session::native(2);
+    for fam in [Family::Gaussian, Family::Matern52, Family::Cauchy] {
+        let kern = Kernel::canonical(fam);
+        let dense = dense_mvm(&kern, &pts, &pts, &w);
+        for eps in [1e-2, 1e-4, 1e-6] {
+            let op = session
+                .operator(&pts)
+                .kernel(fam)
+                .tolerance(eps)
+                .leaf_capacity(64)
+                .build();
+            let res = op.resolved().expect("tolerance must resolve");
+            assert!(res.bound <= eps, "{fam:?} eps={eps}: bound {}", res.bound);
+            let z = session.mvm(&op, &w);
+            let e = rel_err(&z, &dense);
+            assert!(
+                e <= eps,
+                "{fam:?} eps={eps}: measured {e} with resolved p={} theta={}",
+                res.p,
+                res.theta
+            );
+        }
+    }
 }
 
 #[test]
-fn batched_mvm_matches_looped_through_coordinator() {
+fn tolerance_requests_meet_measured_error_3d_scaled() {
+    // Same promise with a non-unit kernel scale and 3-D data: resolution
+    // accounts for the scaled diameter, not the raw coordinates.
+    let mut rng = Pcg32::seeded(409);
+    let pts = Points::new(3, rng.uniform_vec(500 * 3, 0.0, 1.0));
+    let w = rng.normal_vec(500);
+    let kern = Kernel::matern32(0.8); // scale √3/0.8 ≈ 2.17
+    let dense = dense_mvm(&kern, &pts, &pts, &w);
+    let mut session = Session::native(2);
+    for eps in [1e-3, 1e-5] {
+        let op = session
+            .operator(&pts)
+            .scaled_kernel(kern)
+            .tolerance(eps)
+            .leaf_capacity(48)
+            .build();
+        let z = session.mvm(&op, &w);
+        let e = rel_err(&z, &dense);
+        assert!(e <= eps, "eps={eps}: measured {e} (resolved {:?})", op.resolved());
+    }
+}
+
+#[test]
+fn registry_reuses_operators_pointer_equal() {
+    // Repeated requests against the same dataset must return the same
+    // cached operator (pointer-equal Arc), with the hit counter advancing
+    // and no extra build time accrued.
+    let mut rng = Pcg32::seeded(410);
+    let pts = Points::new(2, rng.uniform_vec(800 * 2, 0.0, 1.0));
+    let mut session = Session::native(1);
+    let first = session.operator(&pts).kernel(Family::Matern52).tolerance(1e-5).build();
+    let stats_after_build = session.registry_stats();
+    assert_eq!(stats_after_build.misses, 1);
+    let built_seconds = stats_after_build.build_seconds;
+    let second = session.operator(&pts).kernel(Family::Matern52).tolerance(1e-5).build();
+    let third = session.operator(&pts).kernel(Family::Matern52).tolerance(1e-5).build();
+    assert!(first.ptr_eq(&second), "cache hit must be pointer-equal");
+    assert!(first.ptr_eq(&third));
+    let stats = session.registry_stats();
+    assert_eq!(stats.hits, 2, "hit-count metric");
+    assert_eq!(stats.misses, 1);
+    assert_eq!(stats.build_seconds, built_seconds, "hits must not rebuild");
+    // Different tolerance ⇒ possibly different (p, θ) ⇒ at most one more
+    // build; same resolved config would legitimately hit again.
+    let relaxed = session.operator(&pts).kernel(Family::Matern52).tolerance(1e-2).build();
+    assert!(relaxed.resolved().expect("resolved").bound <= 1e-2);
+}
+
+#[test]
+fn batched_mvm_matches_looped_through_session() {
     // The full multi-RHS pipeline: one 3-column mvm_batch equals three
-    // looped coordinator MVMs to ≤ 1e-12, in exactly one traversal,
+    // looped session MVMs to ≤ 1e-12, in exactly one traversal,
     // across kernels and thread counts.
     let mut rng = Pcg32::seeded(405);
     let n = 900;
     let pts = Points::new(3, rng.uniform_vec(n * 3, 0.0, 1.0));
     let w = rng.normal_vec(n * 3);
     for fam in [Family::Cauchy, Family::Gaussian, Family::Matern32] {
-        let kern = Kernel::canonical(fam);
-        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
-        let op = FktOperator::square(&pts, kern, cfg);
         for threads in [1usize, 4, 7] {
-            let mut coord = Coordinator::native(threads);
-            let batched = coord.mvm_batch(&op, &w, 3);
-            assert_eq!(coord.last_metrics.columns, 3);
-            assert_eq!(coord.last_metrics.moment_passes, 1, "{fam:?} threads={threads}");
-            assert_eq!(coord.last_metrics.far_passes, 1);
-            assert_eq!(coord.last_metrics.near_passes, 1);
+            let mut session = Session::native(threads);
+            let op =
+                session.operator(&pts).kernel(fam).order(4).theta(0.5).leaf_capacity(64).build();
+            let batched = session.mvm_batch(&op, &w, 3);
+            assert_eq!(session.last_metrics().columns, 3);
+            assert_eq!(session.last_metrics().moment_passes, 1, "{fam:?} threads={threads}");
+            assert_eq!(session.last_metrics().far_passes, 1);
+            assert_eq!(session.last_metrics().near_passes, 1);
             for c in 0..3 {
-                let single = coord.mvm(&op, &w[c * n..(c + 1) * n]);
+                let single = session.mvm(&op, &w[c * n..(c + 1) * n]);
                 for t in 0..n {
                     let b = batched[c * n + t];
                     assert!(
@@ -100,21 +161,26 @@ fn batched_mvm_matches_looped_through_coordinator() {
 }
 
 #[test]
-fn batched_rectangular_operator_through_coordinator() {
+fn batched_rectangular_operator_through_session() {
     // GP-prediction shape (targets ≠ sources) through the full stack.
     let mut rng = Pcg32::seeded(406);
     let src = Points::new(2, rng.uniform_vec(500 * 2, 0.0, 1.0));
     let tgt = Points::new(2, rng.uniform_vec(170 * 2, 0.0, 1.0));
     let w = rng.normal_vec(500 * 2);
-    let kern = Kernel::canonical(Family::Gaussian);
-    let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 40, ..Default::default() };
-    let op = FktOperator::new(&src, Some(&tgt), kern, cfg);
     for threads in [1usize, 4] {
-        let mut coord = Coordinator::native(threads);
-        let batched = coord.mvm_batch(&op, &w, 2);
+        let mut session = Session::native(threads);
+        let op = session
+            .operator(&src)
+            .targets(&tgt)
+            .kernel(Family::Gaussian)
+            .order(5)
+            .theta(0.5)
+            .leaf_capacity(40)
+            .build();
+        let batched = session.mvm_batch(&op, &w, 2);
         assert_eq!(batched.len(), 170 * 2);
         for c in 0..2 {
-            let single = coord.mvm(&op, &w[c * 500..(c + 1) * 500]);
+            let single = session.mvm(&op, &w[c * 500..(c + 1) * 500]);
             for t in 0..170 {
                 let b = batched[c * 170 + t];
                 assert!(
@@ -127,30 +193,25 @@ fn batched_rectangular_operator_through_coordinator() {
 }
 
 #[test]
-fn dense_backend_swaps_in_through_kernel_op() {
-    use fkt::baselines::DenseOperator;
-    use fkt::op::KernelOp;
+fn dense_backend_swaps_in_through_session() {
+    // Same session surface, two backends — consumers never name the
+    // concrete operator type.
     let mut rng = Pcg32::seeded(407);
     let pts = Points::new(2, rng.uniform_vec(400 * 2, 0.0, 1.0));
     let w = rng.normal_vec(400);
-    let kern = Kernel::canonical(Family::Cauchy);
-    let mut coord = Coordinator::native(2);
-    let dense_op = DenseOperator::square(&pts, kern);
-    let fkt_op = FktOperator::square(
-        &pts,
-        kern,
-        FktConfig { p: 6, theta: 0.4, leaf_capacity: 32, ..Default::default() },
-    );
-    // Same call site, two backends — the coordinator only sees KernelOp.
-    let ops: [&dyn KernelOp; 2] = [&dense_op, &fkt_op];
-    let results: Vec<Vec<f64>> = ops.iter().map(|op| coord.mvm(*op, &w)).collect();
-    let e = rel_err(&results[1], &results[0]);
+    let mut session = Session::native(2);
+    let exact = session.operator(&pts).kernel(Family::Cauchy).dense().build();
+    let fast = session.operator(&pts).kernel(Family::Cauchy).order(6).theta(0.4).build();
+    let ze = session.mvm(&exact, &w);
+    let zf = session.mvm(&fast, &w);
+    let e = rel_err(&zf, &ze);
     assert!(e < 1e-4, "backend mismatch {e}");
 }
 
 #[test]
-fn gp_end_to_end_smoke() {
+fn solve_then_predict_gp_end_to_end() {
     use fkt::data::sst;
+    use fkt::fkt::FktConfig;
     use fkt::gp::{GpConfig, GpRegressor};
     let mut rng = Pcg32::seeded(403);
     let ds = sst::simulate(1.0, 1500, &mut rng);
@@ -162,12 +223,18 @@ fn gp_end_to_end_smoke() {
         cg_tol: 1e-5,
         cg_max_iters: 200,
         jitter: 1e-6,
-        precondition: true,
+        ..Default::default()
     };
-    let gp = GpRegressor::new(ds.unit_sphere_points(), ds.noise_variances(), Kernel::matern32(0.25), cfg);
-    let mut coord = Coordinator::native(1);
+    let mut session = Session::native(1);
+    let gp = GpRegressor::new(
+        &mut session,
+        ds.unit_sphere_points(),
+        ds.noise_variances(),
+        Kernel::matern32(0.25),
+        cfg,
+    );
     let (grid, coords) = sst::prediction_grid(12, 36, 60.0);
-    let res = gp.posterior_mean(&y0, &grid, &mut coord);
+    let res = gp.posterior_mean(&y0, &grid, &mut session);
     assert!(res.cg.converged, "CG residual {}", res.cg.rel_residual);
     // Posterior should beat the mean-only baseline handily.
     let mut se = 0.0;
@@ -178,10 +245,19 @@ fn gp_end_to_end_smoke() {
         base += (mean_y - truth).powi(2);
     }
     assert!(se < 0.05 * base, "rmse ratio {}", (se / base).sqrt());
+    // A second posterior mean over the same grid reuses both cached
+    // operators — only registry hits, no new builds.
+    let misses_before = session.registry_stats().misses;
+    let res2 = gp.posterior_mean(&y0, &grid, &mut session);
+    assert_eq!(session.registry_stats().misses, misses_before, "warm predict rebuilds nothing");
+    for (a, b) in res.mean.iter().zip(&res2.mean) {
+        assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()));
+    }
 }
 
 #[test]
 fn tsne_pipeline_smoke() {
+    use fkt::fkt::FktConfig;
     use fkt::tsne::{knn_purity, run, TsneConfig};
     let mut rng = Pcg32::seeded(404);
     let (data, labels) = fkt::data::mnist_like(250, 8, &mut rng);
@@ -194,11 +270,42 @@ fn tsne_pipeline_smoke() {
         exact_repulsion: false, // exercise the FKT repulsion path
         ..Default::default()
     };
-    let mut coord = Coordinator::native(1);
-    let res = run(&data, &cfg, &mut coord);
+    let mut session = Session::native(1);
+    let res = run(&data, &cfg, &mut session);
     let purity = knn_purity(&res.embedding, &labels, 8);
     assert!(purity > 0.7, "purity {purity}");
     let first = res.kl_trace.first().unwrap().1;
     let last = res.kl_trace.last().unwrap().1;
     assert!(last < first, "KL {first} -> {last}");
+    // t-SNE's per-iteration operators are transient: the registry must be
+    // completely untouched (no dead entries retained, nothing evicted).
+    let stats = session.registry_stats();
+    assert_eq!(stats.len, 0, "transient t-SNE operators must not be cached");
+    assert_eq!(stats.misses, 0);
+    assert_eq!(stats.evictions, 0);
+}
+
+#[test]
+fn pjrt_backend_end_to_end_when_artifacts_built() {
+    let mut session = Session::builder().threads(1).backend(Backend::Pjrt).build();
+    if !session.will_use_pjrt("gaussian", 3) {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rng = Pcg32::seeded(402);
+    let pts = Points::new(3, rng.uniform_vec(700 * 3, 0.0, 1.0));
+    let w = rng.normal_vec(700);
+    let kern = Kernel::canonical(Family::Gaussian);
+    let dense = dense_mvm(&kern, &pts, &pts, &w);
+    let op = session
+        .operator(&pts)
+        .kernel(Family::Gaussian)
+        .order(5)
+        .theta(0.5)
+        .leaf_capacity(80)
+        .build();
+    let z = session.mvm(&op, &w);
+    assert!(session.last_metrics().used_pjrt);
+    let e = rel_err(&z, &dense);
+    assert!(e < 2e-3, "pjrt pipeline rel err {e}");
 }
