@@ -1,0 +1,138 @@
+//! Apply-time throughput: what the cached-panel far field is worth to an
+//! iterative consumer (CG, t-SNE, GP training) that applies one operator
+//! many times.
+//!
+//! Measures, on a fig2-style workload (Gaussian kernel, uniform
+//! hypersphere, N = 20k, d = 3 by default):
+//! * `build_seconds` — tree + plan + expansion (panels are lazy);
+//! * `first_apply_seconds` — pays panel materialization on top of the
+//!   apply;
+//! * `amortized_apply_seconds` — mean over repeated applies against
+//!   materialized panels (the steady state an iterative solver sees);
+//! * `streamed_apply_seconds` — the same apply with `panel_budget(0)`,
+//!   i.e. the pre-panel recompute-every-apply behavior;
+//! * `panel_bytes` — resident panel storage after materialization.
+//!
+//! All keys merge into BENCH.json via `BenchJson::save_merged`. Headline
+//! ratio: `apply_speedup_vs_first = first / amortized` (the PR's ≥ 2×
+//! acceptance bar), with `apply_speedup_vs_streamed` isolating the pure
+//! panel win from the materialization overhead.
+//!
+//! ```text
+//! cargo bench --bench apply_throughput [-- --n 20000 --applies 20]
+//! ```
+
+use fkt::benchkit::{fmt_time, BenchJson, Table};
+use fkt::cli::Args;
+use fkt::kernels::Family;
+use fkt::rng::Pcg32;
+use fkt::session::Session;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n: usize = args.get("n", 20000);
+    let d: usize = args.get("d", 3);
+    let p: usize = args.get("p", 4);
+    let theta: f64 = args.get("theta", 0.5);
+    let leaf: usize = args.get("leaf", 256);
+    let applies: usize = args.get("applies", 20);
+    let budget: usize = args.get("budget-mb", 1024usize) << 20;
+    let mut rng = Pcg32::seeded(77);
+    let pts = fkt::data::uniform_hypersphere(n, d, &mut rng);
+    let w = rng.normal_vec(n);
+    let mut session = Session::native(args.threads());
+    let mut json = BenchJson::new();
+
+    println!(
+        "Apply throughput: gaussian, N={n}, d={d}, p={p}, θ={theta}, leaf={leaf}, \
+         {applies} applies, panel budget {} MiB",
+        budget >> 20
+    );
+
+    // Build: tree + plan + expansion. Panels are lazy, so this is the
+    // same cost with or without a budget.
+    let t0 = Instant::now();
+    let op = session
+        .operator(&pts)
+        .kernel(Family::Gaussian)
+        .order(p)
+        .theta(theta)
+        .leaf_capacity(leaf)
+        .panel_budget(budget)
+        .build();
+    let build_s = t0.elapsed().as_secs_f64();
+
+    // First apply: materializes every in-budget panel along the way.
+    let t1 = Instant::now();
+    let z_first = session.mvm(&op, &w);
+    let first_s = t1.elapsed().as_secs_f64();
+    let panel_bytes = session.last_metrics().panel_bytes;
+
+    // Amortized: the steady state — panels resident, far field pure GEMM.
+    let t2 = Instant::now();
+    let mut z_last = Vec::new();
+    for _ in 0..applies.max(1) {
+        z_last = std::hint::black_box(session.mvm(&op, &w));
+    }
+    let amortized_s = t2.elapsed().as_secs_f64() / applies.max(1) as f64;
+    let pm = session.last_metrics();
+    assert!(pm.panel_reuse >= applies, "panels must be reused");
+
+    // Streaming baseline: identical operator with a zero budget —
+    // recompute-per-apply, the pre-panel behavior. One warmup apply so
+    // both steady states are measured warm.
+    let sop = session
+        .operator(&pts)
+        .kernel(Family::Gaussian)
+        .order(p)
+        .theta(theta)
+        .leaf_capacity(leaf)
+        .panel_budget(0)
+        .build();
+    let z_stream = std::hint::black_box(session.mvm(&sop, &w));
+    let t3 = Instant::now();
+    for _ in 0..applies.max(1) {
+        std::hint::black_box(session.mvm(&sop, &w));
+    }
+    let streamed_s = t3.elapsed().as_secs_f64() / applies.max(1) as f64;
+
+    // Equivalence smoke: cached and streamed paths agree to round-off.
+    for (i, (a, b)) in z_first.iter().zip(&z_stream).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-12 * (1.0 + b.abs()),
+            "panel vs streamed mismatch at {i}: {a} vs {b}"
+        );
+    }
+    assert_eq!(z_last.len(), n);
+
+    let vs_first = first_s / amortized_s;
+    let vs_streamed = streamed_s / amortized_s;
+    let mut table = Table::new(&["phase", "time", "vs amortized"]);
+    table.row(&["build".into(), fmt_time(build_s), "".into()]);
+    table.row(&["first apply (materializes)".into(), fmt_time(first_s), format!("{vs_first:.2}x")]);
+    table.row(&["amortized apply (cached)".into(), fmt_time(amortized_s), "1.00x".into()]);
+    table.row(&[
+        "streamed apply (budget 0)".into(),
+        fmt_time(streamed_s),
+        format!("{vs_streamed:.2}x"),
+    ]);
+    table.print();
+    println!(
+        "panels: {} resident bytes, {} cached / {} streamed, {} reuses",
+        panel_bytes, pm.panels_cached, pm.panels_streamed, pm.panel_reuse
+    );
+
+    json.record("build_seconds", build_s);
+    json.record("first_apply_seconds", first_s);
+    json.record("amortized_apply_seconds", amortized_s);
+    json.record("streamed_apply_seconds", streamed_s);
+    json.record("panel_bytes", panel_bytes as f64);
+    json.record("apply_speedup_vs_first", vs_first);
+    json.record("apply_speedup_vs_streamed", vs_streamed);
+    let path = BenchJson::default_path();
+    match json.save_merged(&path) {
+        Ok(()) => println!("\nBENCH json merged into {}", path.display()),
+        Err(e) => eprintln!("\nBENCH json write failed ({}): {e}", path.display()),
+    }
+}

@@ -78,6 +78,16 @@ pub struct MvmMetrics {
     pub far_passes: usize,
     /// Near-field traversals.
     pub near_passes: usize,
+    /// Far-field panel bytes resident after this MVM (FKT backends only —
+    /// panels materialize lazily on the first apply).
+    pub panel_bytes: usize,
+    /// Panels (source + target) the operator's byte budget admitted.
+    pub panels_cached: usize,
+    /// Panel candidates past the budget, recomputed on every apply.
+    pub panels_streamed: usize,
+    /// Applies beyond the first this operator has served since build —
+    /// the reuse count the panel cache's amortization rests on.
+    pub panel_reuse: usize,
 }
 
 /// The coordinator.
@@ -189,6 +199,13 @@ impl Coordinator {
             metrics.moment_passes = m1 - m0;
             metrics.far_passes = f1 - f0;
             metrics.near_passes = n1 - n0;
+        }
+        if let Some(f) = op.as_fkt() {
+            let ps = f.panel_stats();
+            metrics.panel_bytes = ps.resident_bytes;
+            metrics.panels_cached = ps.panels_cached;
+            metrics.panels_streamed = ps.panels_streamed;
+            metrics.panel_reuse = ps.applies.saturating_sub(1);
         }
         self.last_metrics = metrics;
         z
@@ -363,6 +380,31 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn metrics_surface_panel_cache_state() {
+        let pts = uniform_points(400, 2, 141);
+        let mut rng = Pcg32::seeded(142);
+        let w = rng.normal_vec(400);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let mut coord = Coordinator::native(2);
+        let _ = coord.mvm(&op, &w);
+        let m1 = coord.last_metrics;
+        assert!(m1.panels_cached > 0, "default budget caches panels");
+        assert!(m1.panel_bytes > 0, "first apply materializes panels");
+        assert_eq!(m1.panel_reuse, 0, "first apply is not a reuse");
+        let _ = coord.mvm(&op, &w);
+        assert_eq!(coord.last_metrics.panel_reuse, 1);
+        assert_eq!(coord.last_metrics.panel_bytes, m1.panel_bytes, "no growth on reuse");
+        // Budget 0 forces pure streaming: nothing cached, nothing resident.
+        let streamed = FktOperator::square(&pts, kern, FktConfig { panel_budget_bytes: 0, ..cfg });
+        let _ = coord.mvm(&streamed, &w);
+        let m2 = coord.last_metrics;
+        assert_eq!((m2.panels_cached, m2.panel_bytes), (0, 0));
+        assert!(m2.panels_streamed > 0);
     }
 
     #[test]

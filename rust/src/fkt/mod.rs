@@ -16,8 +16,16 @@
 //! Sources and targets may differ (GP prediction); the Barnes–Hut baseline
 //! of Fig 3-left is the `p = 0` configuration with centroid expansion
 //! centers, exactly as the paper describes.
+//!
+//! The s2m and m2t phases are bilinear in RHS-independent coefficient
+//! rows; the [`panels`] module caches those rows as per-node evaluation
+//! matrices (within [`FktConfig::panel_budget_bytes`]) so *repeated*
+//! applies of one operator run the far field as pure GEMM.
 
 pub mod nearfield;
+pub mod panels;
+
+pub use panels::PanelStats;
 
 use crate::expansion::{Expansion, HarmonicWorkspace};
 use crate::kernels::Kernel;
@@ -25,6 +33,7 @@ use crate::linalg::vecops;
 use crate::op::KernelOp;
 use crate::points::Points;
 use crate::tree::{FarFieldPlan, Tree};
+use panels::{PanelScratch, PanelSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Cumulative full-phase pass counters (interior-mutable so `&self` MVM
@@ -71,6 +80,11 @@ pub enum ExpansionCenter {
     Centroid,
 }
 
+/// Default [`FktConfig::panel_budget_bytes`]: generous enough to cache
+/// every panel at bench scale (N ≈ 20k, p ≤ 6) while bounding worst-case
+/// residency for a long-lived service.
+pub const DEFAULT_PANEL_BUDGET_BYTES: usize = 256 << 20;
+
 /// FKT configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct FktConfig {
@@ -85,6 +99,11 @@ pub struct FktConfig {
     /// Use the §A.4 compressed radial representation when the kernel
     /// admits one (`K' = qK`, paper's user-toggled flag).
     pub compression: bool,
+    /// Byte budget for the cached far-field evaluation panels (per-node
+    /// source/target coefficient matrices, see [`panels`]). Panels past
+    /// the budget stream — recomputed on every apply; 0 forces pure
+    /// streaming. Part of the session registry key.
+    pub panel_budget_bytes: usize,
 }
 
 impl Default for FktConfig {
@@ -95,6 +114,7 @@ impl Default for FktConfig {
             leaf_capacity: 512,
             center: ExpansionCenter::BoxCenter,
             compression: false,
+            panel_budget_bytes: DEFAULT_PANEL_BUDGET_BYTES,
         }
     }
 }
@@ -108,8 +128,19 @@ impl FktConfig {
             leaf_capacity,
             center: ExpansionCenter::Centroid,
             compression: false,
+            panel_budget_bytes: DEFAULT_PANEL_BUDGET_BYTES,
         }
     }
+}
+
+/// One unit of phase-2/3 work for the work-stealing apply scheduler:
+/// a far-field panel (node id) or a near-field leaf block (leaf index).
+#[derive(Clone, Copy, Debug)]
+enum ApplyJob {
+    /// Far-field node id; cost ∝ |F_b| × num_terms.
+    Far(u32),
+    /// Near-field index into `tree.leaves`; cost ∝ |N_l| × |l|.
+    Near(u32),
 }
 
 /// Radial representation used by the far-field pass.
@@ -137,6 +168,14 @@ pub struct FktOperator {
     n_src: usize,
     /// Traversal counters (see [`PhaseCounters`]).
     counters: PhaseCounters,
+    /// Budget-planned, lazily materialized far-field panels.
+    panels: PanelSet,
+    /// Moment-phase job list: nodes with far targets, size-sorted
+    /// descending (built once — it depends only on the immutable plan).
+    moment_jobs: Vec<u32>,
+    /// Phase-2/3 job list: far panels and near leaves merged,
+    /// size-sorted descending for the work-stealing scheduler.
+    apply_jobs: Vec<ApplyJob>,
 }
 
 impl FktOperator {
@@ -230,6 +269,34 @@ impl FktOperator {
         } else {
             RadialRep::Generic
         };
+        let nt = match &radial {
+            RadialRep::Generic => exp.num_terms,
+            RadialRep::Compressed(c) => c.num_terms(&exp.basis),
+        };
+        let panels = PanelSet::plan(&tree, &plan, nt, cfg.panel_budget_bytes);
+        // Work-stealing job lists, built once: biggest jobs first so the
+        // greedy claim order approximates longest-processing-time
+        // scheduling. Sizes are multiply-add proxies: moments |node|·𝒫,
+        // far |F_b|·𝒫, near |N_l|·|l|.
+        let mut moment_jobs: Vec<u32> = plan.nodes_with_far().map(|id| id as u32).collect();
+        moment_jobs.sort_unstable_by_key(|&id| std::cmp::Reverse(tree.nodes[id as usize].len()));
+        let mut apply_jobs: Vec<ApplyJob> =
+            plan.nodes_with_far().map(|id| ApplyJob::Far(id as u32)).collect();
+        for (li, &leaf) in tree.leaves.iter().enumerate() {
+            if !plan.interactions[leaf].near.is_empty() {
+                apply_jobs.push(ApplyJob::Near(li as u32));
+            }
+        }
+        let job_cost = |job: &ApplyJob| -> usize {
+            match *job {
+                ApplyJob::Far(id) => plan.interactions[id as usize].far.len() * nt,
+                ApplyJob::Near(li) => {
+                    let leaf = tree.leaves[li as usize];
+                    plan.interactions[leaf].near.len() * tree.nodes[leaf].len()
+                }
+            }
+        };
+        apply_jobs.sort_unstable_by_key(|j| std::cmp::Reverse(job_cost(j)));
         FktOperator {
             kernel,
             cfg,
@@ -241,6 +308,9 @@ impl FktOperator {
             centers,
             tree,
             counters: PhaseCounters::default(),
+            panels,
+            moment_jobs,
+            apply_jobs,
         }
     }
 
@@ -492,314 +562,169 @@ impl FktOperator {
     }
 
     // ------------------------------------------------------------------
-    // Batched multi-RHS engine: the three phases generalized to m columns
-    // sharing one traversal. Internally the column index is innermost
-    // ("interleaved" layout: `w[src*m + c]`, `z[tgt*m + c]`, moments
-    // `mu[term*m + c]`) so every per-point/per-pair coefficient — harmonic
-    // value, radial factor, kernel value — is computed once and contracted
-    // against a contiguous m-vector.
+    // Panelized batched engine: the three phases generalized to m columns
+    // sharing one traversal, with the RHS-independent far-field
+    // coefficients lifted into cached per-node panels (see [`panels`]).
+    // Internally the column index is innermost ("interleaved" layout:
+    // `w[src*m + c]`, `z[tgt*m + c]`, moments `mu[term*m + c]`) so the
+    // GEMM contractions run over contiguous m-vectors. Work is scheduled
+    // by stealing from a shared, size-sorted job list instead of fixed
+    // node ranges, so skewed interaction lists no longer serialize a
+    // phase behind one unlucky worker.
     // ------------------------------------------------------------------
 
-    /// Moments for `m` interleaved RHS columns, nodes in `range` only:
-    /// `moments[id - offset]` receives `num_terms·m` values laid out
-    /// term-major. The `offset` lets threaded callers hand each worker
-    /// just its own chunk of the moment table (no per-worker full-length
-    /// scratch allocation); serial callers pass the whole table and 0.
-    fn compute_moments_block_range(
-        &self,
-        w: &[f64],
-        m: usize,
-        range: std::ops::Range<usize>,
-        moments: &mut [Vec<f64>],
-        offset: usize,
-    ) {
-        let p = self.cfg.p;
-        let nt = self.num_terms();
-        let mut ws = HarmonicWorkspace::default();
-        let mut yx = vec![0.0; self.exp.basis.total()];
-        let mut rel = vec![0.0; self.tree.d];
-        for id in range {
-            let node = &self.tree.nodes[id];
-            let mut mu = vec![0.0; nt * m];
-            // Skip nodes whose far set is empty — their moments are unused.
-            if self.plan.interactions[id].far.is_empty() {
-                moments[id - offset] = mu;
-                continue;
-            }
-            let center = &self.centers[id];
-            for i in node.start..node.end {
-                let wrow = &w[self.tree.perm[i] * m..self.tree.perm[i] * m + m];
-                if wrow.iter().all(|&v| v == 0.0) {
-                    continue;
-                }
-                let x = self.tree.points.point(i);
-                for a in 0..self.tree.d {
-                    rel[a] = x[a] - center[a];
-                }
-                let r_src = vecops::norm2(&rel);
-                self.exp.basis.eval_into(&rel, &mut ws, &mut yx);
-                match &self.radial {
-                    RadialRep::Generic => {
-                        let mut term = 0usize;
-                        for k in 0..=p {
-                            let o = self.exp.basis.offset(k);
-                            let c = self.exp.basis.count(k);
-                            let nj = self.exp.table.num_j(k);
-                            let s_k = self.exp.inv_rho[k];
-                            // r'^j for j = k, k+2, …
-                            let mut rj = r_src.powi(k as i32);
-                            let r2 = r_src * r_src;
-                            for jj in 0..nj {
-                                for h in 0..c {
-                                    let coef = yx[o + h] * rj * s_k;
-                                    if coef == 0.0 {
-                                        continue;
-                                    }
-                                    let base = (term + h * nj + jj) * m;
-                                    let row = &mut mu[base..base + m];
-                                    for (slot, &wc) in row.iter_mut().zip(wrow) {
-                                        *slot += coef * wc;
-                                    }
-                                }
-                                rj *= r2;
-                            }
-                            term += c * nj;
-                        }
-                    }
-                    RadialRep::Compressed(comp) => {
-                        let mut term = 0usize;
-                        for k in 0..=p {
-                            let o = self.exp.basis.offset(k);
-                            let c = self.exp.basis.count(k);
-                            let gs = comp.eval_g(k, r_src);
-                            let s_k = self.exp.inv_rho[k];
-                            for (i_g, g) in gs.iter().enumerate() {
-                                for h in 0..c {
-                                    let coef = yx[o + h] * g * s_k;
-                                    if coef == 0.0 {
-                                        continue;
-                                    }
-                                    let base = (term + h * gs.len() + i_g) * m;
-                                    let row = &mut mu[base..base + m];
-                                    for (slot, &wc) in row.iter_mut().zip(wrow) {
-                                        *slot += coef * wc;
-                                    }
-                                }
-                            }
-                            term += c * gs.len();
-                        }
-                    }
-                }
-            }
-            moments[id - offset] = mu;
-        }
-    }
-
-    /// Far-field contributions for `m` interleaved columns from nodes in
-    /// `range`: target harmonics and radial factors are evaluated once per
-    /// (node, target) and contracted against the m-column moment block.
-    fn far_field_block_range(
-        &self,
-        moments: &[Vec<f64>],
-        m: usize,
-        range: std::ops::Range<usize>,
-        z: &mut [f64],
-    ) {
-        let p = self.cfg.p;
-        let mut ws = HarmonicWorkspace::default();
-        let mut yy = vec![0.0; self.exp.basis.total()];
-        let mut rel = vec![0.0; self.tree.d];
-        let mut radial = vec![0.0; self.exp.table.num_j(0).max(1) * (p + 1)];
-        let mut derivs = vec![0.0; p + 1];
-        let mut acc = vec![0.0; m];
-        for id in range {
-            let far = &self.plan.interactions[id].far;
-            if far.is_empty() {
-                continue;
-            }
-            let center = &self.centers[id];
-            let mu = &moments[id];
-            for &t in far {
-                let y = self.targets.point(t as usize);
-                for a in 0..self.tree.d {
-                    rel[a] = y[a] - center[a];
-                }
-                let r = vecops::norm2(&rel);
-                self.exp.basis.eval_into(&rel, &mut ws, &mut yy);
-                acc.iter_mut().for_each(|v| *v = 0.0);
-                match &self.radial {
-                    RadialRep::Generic => {
-                        self.kernel.family.derivatives_into(r, p, &mut derivs);
-                        let mut term = 0usize;
-                        for k in 0..=p {
-                            let o = self.exp.basis.offset(k);
-                            let c = self.exp.basis.count(k);
-                            let nj = self.exp.table.num_j(k);
-                            for (jj, slot) in radial.iter_mut().take(nj).enumerate() {
-                                *slot = self.exp.table.radial_m(k, jj, r, &derivs);
-                            }
-                            for h in 0..c {
-                                let yh = yy[o + h];
-                                if yh == 0.0 {
-                                    continue;
-                                }
-                                let base = term + h * nj;
-                                for (jj, &rad) in radial.iter().take(nj).enumerate() {
-                                    let coef = yh * rad;
-                                    if coef == 0.0 {
-                                        continue;
-                                    }
-                                    let mrow = &mu[(base + jj) * m..(base + jj) * m + m];
-                                    for (slot, &mv) in acc.iter_mut().zip(mrow) {
-                                        *slot += coef * mv;
-                                    }
-                                }
-                            }
-                            term += c * nj;
-                        }
-                    }
-                    RadialRep::Compressed(comp) => {
-                        let mut term = 0usize;
-                        for k in 0..=p {
-                            let o = self.exp.basis.offset(k);
-                            let c = self.exp.basis.count(k);
-                            let fs = comp.eval_f(k, r);
-                            for h in 0..c {
-                                let yh = yy[o + h];
-                                if yh == 0.0 {
-                                    continue;
-                                }
-                                let base = term + h * fs.len();
-                                for (i_f, &f) in fs.iter().enumerate() {
-                                    let coef = yh * f;
-                                    if coef == 0.0 {
-                                        continue;
-                                    }
-                                    let mrow = &mu[(base + i_f) * m..(base + i_f) * m + m];
-                                    for (slot, &mv) in acc.iter_mut().zip(mrow) {
-                                        *slot += coef * mv;
-                                    }
-                                }
-                            }
-                            term += c * fs.len();
-                        }
-                    }
-                }
-                let zrow = &mut z[t as usize * m..t as usize * m + m];
-                for (slot, &v) in zrow.iter_mut().zip(acc.iter()) {
-                    *slot += v;
-                }
-            }
-        }
-    }
-
-    /// Near-field contributions for `m` interleaved columns from leaves
-    /// `self.tree.leaves[range]`: one dense GEMM per (leaf, target-block)
+    /// Near-field contributions for one leaf (`self.tree.leaves[li]`) and
+    /// `m` interleaved columns: one dense GEMM per (leaf, target-block)
     /// through [`nearfield::block_matmat`] and the `linalg` micro-kernel,
     /// so each kernel value K(|t−s|) is evaluated once for all columns.
-    fn near_field_block_range(
-        &self,
-        w: &[f64],
-        m: usize,
-        range: std::ops::Range<usize>,
-        z: &mut [f64],
-    ) {
+    fn near_leaf_apply(&self, li: usize, w: &[f64], m: usize, z: &mut [f64], s: &mut PanelScratch) {
         let d = self.tree.d;
-        let mut wbuf: Vec<f64> = Vec::new();
-        let mut tbuf: Vec<f64> = Vec::new();
-        let mut obuf: Vec<f64> = Vec::new();
-        for li in range {
-            let leaf = self.tree.leaves[li];
-            let node = &self.tree.nodes[leaf];
-            let near = &self.plan.interactions[leaf].near;
-            if near.is_empty() {
-                continue;
-            }
-            // Gather the leaf's weight rows (n_leaf × m, row-major).
-            wbuf.clear();
-            for i in node.start..node.end {
-                let orig = self.tree.perm[i];
-                wbuf.extend_from_slice(&w[orig * m..orig * m + m]);
-            }
-            let src = &self.tree.points.coords[node.start * d..node.end * d];
-            // Gather near-target coordinates.
-            tbuf.clear();
-            for &t in near {
-                tbuf.extend_from_slice(self.targets.point(t as usize));
-            }
-            obuf.clear();
-            obuf.resize(near.len() * m, 0.0);
-            nearfield::block_matmat(self.kernel.family, d, src, &wbuf, m, &tbuf, &mut obuf);
-            for (slot, &t) in near.iter().enumerate() {
-                let zrow = &mut z[t as usize * m..t as usize * m + m];
-                for (zc, &oc) in zrow.iter_mut().zip(&obuf[slot * m..slot * m + m]) {
-                    *zc += oc;
-                }
+        let leaf = self.tree.leaves[li];
+        let node = &self.tree.nodes[leaf];
+        let near = &self.plan.interactions[leaf].near;
+        if near.is_empty() {
+            return;
+        }
+        // Gather the leaf's weight rows (n_leaf × m, row-major).
+        s.wgather.clear();
+        for i in node.start..node.end {
+            let orig = self.tree.perm[i];
+            s.wgather.extend_from_slice(&w[orig * m..orig * m + m]);
+        }
+        let src = &self.tree.points.coords[node.start * d..node.end * d];
+        // Gather near-target coordinates.
+        s.tgather.clear();
+        for &t in near {
+            s.tgather.extend_from_slice(self.targets.point(t as usize));
+        }
+        s.zpanel.clear();
+        s.zpanel.resize(near.len() * m, 0.0);
+        nearfield::block_matmat(
+            self.kernel.family,
+            d,
+            src,
+            &s.wgather,
+            m,
+            &s.tgather,
+            &mut s.zpanel,
+        );
+        for (slot, &t) in near.iter().enumerate() {
+            let zrow = &mut z[t as usize * m..t as usize * m + m];
+            for (zc, &oc) in zrow.iter_mut().zip(&s.zpanel[slot * m..slot * m + m]) {
+                *zc += oc;
             }
         }
     }
 
-    /// Interleaved-layout batched MVM core shared by the serial and
-    /// threaded public entry points; bumps each phase counter exactly once.
+    /// One phase-2/3 unit of work for the stealing scheduler.
+    fn run_apply_job(
+        &self,
+        job: ApplyJob,
+        moments: &[Vec<f64>],
+        w: &[f64],
+        m: usize,
+        z: &mut [f64],
+        s: &mut PanelScratch,
+    ) {
+        match job {
+            ApplyJob::Far(id) => self.far_node_apply(id as usize, &moments[id as usize], m, z, s),
+            ApplyJob::Near(li) => self.near_leaf_apply(li as usize, w, m, z, s),
+        }
+    }
+
+    /// Interleaved-layout batched MVM core shared by every public entry
+    /// point (single- and multi-RHS, serial and threaded); bumps each
+    /// phase counter exactly once.
     fn matmat_interleaved(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
-        let nnodes = self.tree.nodes.len();
         let ntg = self.targets.len();
-        let threads = threads.max(1).min(nnodes.max(1));
+        let threads = threads.max(1).min(self.tree.nodes.len().max(1));
+        self.panels.note_apply();
+        // Job lists are prebuilt at operator construction (they depend
+        // only on the immutable tree and plan): `moment_jobs` for phase 1,
+        // the merged far/near `apply_jobs` for phases 2–3, both
+        // size-sorted descending for the work-stealing scheduler.
+        let mjobs = &self.moment_jobs;
+        let jobs = &self.apply_jobs;
+        // Phase 1: moments. Workers claim nodes from the shared cursor and
+        // return (id, μ) pairs merged into the table afterwards.
+        let mut moments: Vec<Vec<f64>> = vec![Vec::new(); self.tree.nodes.len()];
+        if threads == 1 {
+            let mut s = PanelScratch::new(self, m);
+            for &id in mjobs {
+                moments[id as usize] = self.node_moments(id as usize, w, m, &mut s);
+            }
+        } else {
+            let cursor = AtomicUsize::new(0);
+            let mut produced: Vec<Vec<(usize, Vec<f64>)>> = Vec::with_capacity(threads);
+            crossbeam_utils::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for _ in 0..threads {
+                    let cursor = &cursor;
+                    handles.push(scope.spawn(move |_| {
+                        let mut s = PanelScratch::new(self, m);
+                        let mut out: Vec<(usize, Vec<f64>)> = Vec::new();
+                        loop {
+                            let j = cursor.fetch_add(1, Ordering::Relaxed);
+                            if j >= mjobs.len() {
+                                break;
+                            }
+                            let id = mjobs[j] as usize;
+                            out.push((id, self.node_moments(id, w, m, &mut s)));
+                        }
+                        out
+                    }));
+                }
+                for h in handles {
+                    produced.push(h.join().expect("moment worker"));
+                }
+            })
+            .expect("moment threads");
+            for part in produced {
+                for (id, mu) in part {
+                    moments[id] = mu;
+                }
+            }
+        }
+        self.counters.moments.fetch_add(1, Ordering::Relaxed);
+        // Phases 2 + 3: far panels + near leaves from one stolen job list,
+        // per-thread z buffers reduced at the end (targets are shared
+        // across jobs, so workers never write one z concurrently).
         let mut z = vec![0.0; ntg * m];
         if threads == 1 {
-            let mut moments: Vec<Vec<f64>> = vec![Vec::new(); nnodes];
-            self.compute_moments_block_range(w, m, 0..nnodes, &mut moments, 0);
-            self.counters.moments.fetch_add(1, Ordering::Relaxed);
-            self.far_field_block_range(&moments, m, 0..nnodes, &mut z);
-            self.counters.far.fetch_add(1, Ordering::Relaxed);
-            self.near_field_block_range(w, m, 0..self.tree.leaves.len(), &mut z);
-            self.counters.near.fetch_add(1, Ordering::Relaxed);
-            return z;
-        }
-        // Phase 1: moments, parallel over disjoint node ranges — the same
-        // crossbeam chunking as `matvec_parallel`, extended to m columns.
-        let mut moments: Vec<Vec<f64>> = vec![Vec::new(); nnodes];
-        let chunk = nnodes.div_ceil(threads);
-        crossbeam_utils::thread::scope(|s| {
-            for (ti, mchunk) in moments.chunks_mut(chunk).enumerate() {
-                let lo = ti * chunk;
-                let hi = (lo + mchunk.len()).min(nnodes);
-                s.spawn(move |_| {
-                    // Each worker writes straight into its own chunk of the
-                    // moment table (ids shifted by `lo`).
-                    self.compute_moments_block_range(w, m, lo..hi, mchunk, lo);
-                });
+            let mut s = PanelScratch::new(self, m);
+            for &job in jobs {
+                self.run_apply_job(job, &moments, w, m, &mut z, &mut s);
             }
-        })
-        .expect("moment threads");
-        self.counters.moments.fetch_add(1, Ordering::Relaxed);
-        // Phase 2 + 3: far + near, per-thread z buffers reduced at the end.
-        let mut partials: Vec<Vec<f64>> = Vec::with_capacity(threads);
-        crossbeam_utils::thread::scope(|s| {
-            let moments = &moments;
-            let mut handles = Vec::new();
-            let nleaves = self.tree.leaves.len();
-            let lchunk = nleaves.div_ceil(threads);
-            for ti in 0..threads {
-                let nlo = (ti * chunk).min(nnodes);
-                let nhi = ((ti + 1) * chunk).min(nnodes);
-                let llo = (ti * lchunk).min(nleaves);
-                let lhi = ((ti + 1) * lchunk).min(nleaves);
-                handles.push(s.spawn(move |_| {
-                    let mut zt = vec![0.0; ntg * m];
-                    self.far_field_block_range(moments, m, nlo..nhi, &mut zt);
-                    self.near_field_block_range(w, m, llo..lhi, &mut zt);
-                    zt
-                }));
-            }
-            for h in handles {
-                partials.push(h.join().expect("matmat worker"));
-            }
-        })
-        .expect("matmat threads");
-        for part in &partials {
-            for (slot, &v) in z.iter_mut().zip(part) {
-                *slot += v;
+        } else {
+            let cursor = AtomicUsize::new(0);
+            let mut partials: Vec<Vec<f64>> = Vec::with_capacity(threads);
+            crossbeam_utils::thread::scope(|scope| {
+                let moments = &moments;
+                let cursor = &cursor;
+                let mut handles = Vec::new();
+                for _ in 0..threads {
+                    handles.push(scope.spawn(move |_| {
+                        let mut s = PanelScratch::new(self, m);
+                        let mut zt = vec![0.0; ntg * m];
+                        loop {
+                            let j = cursor.fetch_add(1, Ordering::Relaxed);
+                            if j >= jobs.len() {
+                                break;
+                            }
+                            self.run_apply_job(jobs[j], moments, w, m, &mut zt, &mut s);
+                        }
+                        zt
+                    }));
+                }
+                for h in handles {
+                    partials.push(h.join().expect("apply worker"));
+                }
+            })
+            .expect("apply threads");
+            for part in &partials {
+                for (slot, &v) in z.iter_mut().zip(part) {
+                    *slot += v;
+                }
             }
         }
         self.counters.far.fetch_add(1, Ordering::Relaxed);
@@ -817,8 +742,9 @@ impl FktOperator {
         self.matmat_parallel(w, m, 1)
     }
 
-    /// Multi-threaded batched MVM (see [`FktOperator::matmat`]); preserves
-    /// `matvec_parallel`'s node/leaf chunking scheme.
+    /// Multi-threaded batched MVM (see [`FktOperator::matmat`]): workers
+    /// steal size-sorted node/leaf jobs from a shared list, like
+    /// [`FktOperator::matvec_parallel`].
     pub fn matmat_parallel(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
         assert!(m > 0, "matmat needs at least one column");
         assert_eq!(w.len(), self.n_src * m, "weight block shape mismatch");
@@ -843,18 +769,17 @@ impl FktOperator {
     }
 
     /// Full MVM: `z = K(targets, sources) · w`, both in original order.
+    /// Runs through the panelized engine (`m = 1`): cached nodes apply
+    /// their precomputed panels, the rest stream.
     pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
         assert_eq!(w.len(), self.n_src);
-        let mut z = vec![0.0; self.targets.len()];
-        let moments = self.compute_moments(w);
-        self.far_field(&moments, &mut z);
-        self.near_field_native(w, &mut z);
-        self.counters.bump_all();
-        z
+        self.matmat_interleaved(w, 1, 1)
     }
 
     /// MVM with per-phase wall times: (moments, far, near) seconds.
-    /// Drives the §Perf profiling in EXPERIMENTS.md.
+    /// Drives the §Perf profiling in EXPERIMENTS.md. Always streams
+    /// (legacy scalar path) so the profile reflects per-pair evaluation
+    /// cost, independent of panel-cache state.
     pub fn matvec_profiled(&self, w: &[f64]) -> (Vec<f64>, f64, f64, f64) {
         use std::time::Instant;
         assert_eq!(w.len(), self.n_src);
@@ -872,74 +797,21 @@ impl FktOperator {
         (z, t_mom, t_far, t_near)
     }
 
-    /// Multi-threaded MVM: all three phases are parallelized over node /
-    /// leaf chunks with per-thread accumulation buffers (targets are shared
-    /// across nodes, so threads never write the same z concurrently —
-    /// each reduces its own buffer which are summed at the end).
+    /// Multi-threaded MVM through the panelized engine: workers steal
+    /// size-sorted node/leaf jobs from a shared list, with per-thread
+    /// accumulation buffers (targets are shared across nodes, so threads
+    /// never write the same z concurrently — each reduces its own buffer
+    /// which are summed at the end).
     pub fn matvec_parallel(&self, w: &[f64], threads: usize) -> Vec<f64> {
         assert_eq!(w.len(), self.n_src);
-        let threads = threads.max(1).min(self.tree.nodes.len().max(1));
-        if threads == 1 {
-            return self.matvec(w);
-        }
-        let nnodes = self.tree.nodes.len();
-        // Phase 1: moments, parallel over disjoint node ranges.
-        let mut moments: Vec<Vec<f64>> = vec![Vec::new(); nnodes];
-        let chunk = nnodes.div_ceil(threads);
-        crossbeam_utils::thread::scope(|s| {
-            for (ti, mchunk) in moments.chunks_mut(chunk).enumerate() {
-                let lo = ti * chunk;
-                let hi = (lo + mchunk.len()).min(nnodes);
-                s.spawn(move |_| {
-                    // The helper writes by absolute id; give it a shifted view.
-                    let mut local: Vec<Vec<f64>> = vec![Vec::new(); nnodes];
-                    self.compute_moments_range(w, lo..hi, &mut local);
-                    for (j, slot) in mchunk.iter_mut().enumerate() {
-                        *slot = std::mem::take(&mut local[lo + j]);
-                    }
-                });
-            }
-        })
-        .expect("moment threads");
-        // Phase 2 + 3: far + near, per-thread z buffers.
-        let m = self.targets.len();
-        let mut partials: Vec<Vec<f64>> = Vec::with_capacity(threads);
-        crossbeam_utils::thread::scope(|s| {
-            let moments = &moments;
-            let mut handles = Vec::new();
-            let nleaves = self.tree.leaves.len();
-            let lchunk = nleaves.div_ceil(threads);
-            for ti in 0..threads {
-                let nlo = (ti * chunk).min(nnodes);
-                let nhi = ((ti + 1) * chunk).min(nnodes);
-                let llo = (ti * lchunk).min(nleaves);
-                let lhi = ((ti + 1) * lchunk).min(nleaves);
-                handles.push(s.spawn(move |_| {
-                    let mut zt = vec![0.0; m];
-                    self.far_field_range(moments, nlo..nhi, &mut zt);
-                    self.near_field_range(w, llo..lhi, &mut zt);
-                    zt
-                }));
-            }
-            for h in handles {
-                partials.push(h.join().expect("mvm worker"));
-            }
-        })
-        .expect("mvm threads");
-        let mut z = vec![0.0; m];
-        for part in &partials {
-            for i in 0..m {
-                z[i] += part[i];
-            }
-        }
-        self.counters.bump_all();
-        z
+        self.matmat_interleaved(w, 1, threads)
     }
 
     /// MVM with the near field delegated to a caller-provided executor
     /// (the coordinator's PJRT tile path); the executor receives
     /// (leaf node id, near target indices) and must add the dense
-    /// contribution into z itself.
+    /// contribution into z itself. The far field streams (legacy scalar
+    /// path) — panel caching applies to the native entry points only.
     pub fn matvec_with_near(
         &self,
         w: &[f64],

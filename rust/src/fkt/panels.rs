@@ -1,0 +1,623 @@
+//! Apply-time GEMM far field: cached per-node evaluation panels.
+//!
+//! The far-field phases of Algorithm 1 are bilinear in quantities that do
+//! **not** depend on the input vector: per-(node, source) the s2m
+//! coefficient `Y_k^h(x̂_rel) r'^j / ρ_k`, and per-(node, target) the m2t
+//! coefficient `Y_k^h(ŷ_rel) M_{kj}(r)` (or `Y_k^h(ŷ_rel) F_{k,i}(r)` in
+//! the §A.4 compressed representation). The streaming implementation
+//! re-derives those rows — spherical harmonics, kernel derivative jets,
+//! radial powers — on every apply, even though iterative consumers (CG in
+//! `session.solve`, t-SNE gradient steps, GP training) apply the same
+//! cached operator dozens to hundreds of times.
+//!
+//! This module inverts the interaction plan into contiguous per-node
+//! panels and caches the coefficient rows as dense matrices:
+//!
+//! * **source panel** `Sᵀ ∈ R^{𝒫 × |node|}` — the upward pass becomes
+//!   `μ_node = Sᵀ · W_node` (one GEMM per node, `W_node` the gathered
+//!   weight rows);
+//! * **target panel** `E ∈ R^{|F_b| × 𝒫}` — the m2t pass becomes
+//!   `Z[F_b] += E · μ_node` (one GEMM per node).
+//!
+//! Both run through the widened, `mul_add`-unrolled
+//! [`crate::linalg::gemm_accum`] micro-kernel, so the dominant far-field
+//! phase of a *repeated* apply is pure BLAS-3 over precomputed
+//! coefficients.
+//!
+//! **Memory budget.** Panels cost `8·𝒫` bytes per (node, point) /
+//! (node, far-target) pair — potentially hundreds of MB at paper scale —
+//! so the [`PanelSet`] planner admits panels greedily (first-fit; sources
+//! before targets, ascending node id within each class) until
+//! [`crate::fkt::FktConfig::panel_budget_bytes`] is exhausted. Nodes past
+//! the budget *stream*: their rows are recomputed on every apply through
+//! exactly the same row evaluators, so cached and streamed paths agree to
+//! round-off (property-tested below). A budget of 0 forces pure streaming
+//! — the pre-panel behavior.
+//!
+//! **Laziness.** Selection happens at operator build time, but the panel
+//! *data* is materialized behind per-node [`OnceLock`]s on first touch —
+//! during the first apply, by whichever worker thread claims the node —
+//! so building an operator stays cheap and the first apply's
+//! materialization cost is parallelized and overlapped with the apply
+//! itself. [`PanelStats`] reports bytes resident, panels cached vs
+//! streamed, and the reuse count the amortization argument rests on.
+
+use super::{FktOperator, RadialRep};
+use crate::expansion::HarmonicWorkspace;
+use crate::linalg::{gemm_accum, vecops};
+use crate::tree::{FarFieldPlan, Tree};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// One node's lazily materialized panel slots.
+#[derive(Debug, Default)]
+struct NodePanel {
+    /// Budget admitted the source panel (upward pass).
+    src_cached: bool,
+    /// Budget admitted the target panel (m2t pass).
+    tgt_cached: bool,
+    /// `Sᵀ` (𝒫 × |node|, row-major), materialized on first touch.
+    src: OnceLock<Vec<f64>>,
+    /// `E` (|F_b| × 𝒫, row-major), materialized on first touch.
+    tgt: OnceLock<Vec<f64>>,
+}
+
+/// The operator's panel cache: budget plan + lazily filled panel storage.
+#[derive(Debug)]
+pub struct PanelSet {
+    nodes: Vec<NodePanel>,
+    budget_bytes: usize,
+    planned_bytes: usize,
+    cached_panels: usize,
+    streamed_panels: usize,
+    /// Bytes actually materialized so far (lazy ≤ planned).
+    resident: AtomicUsize,
+    /// Applies served since build (each one past the first reuses panels).
+    applies: AtomicUsize,
+}
+
+/// Observable panel-cache state (surfaced through
+/// [`crate::coordinator::MvmMetrics`] and the `apply_throughput` bench).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PanelStats {
+    /// The configured byte budget.
+    pub budget_bytes: usize,
+    /// Bytes the budget planner admitted (upper bound on residency).
+    pub planned_bytes: usize,
+    /// Bytes materialized so far (grows lazily toward `planned_bytes`).
+    pub resident_bytes: usize,
+    /// Panels (source + target) selected for caching.
+    pub panels_cached: usize,
+    /// Panel candidates past the budget, recomputed every apply.
+    pub panels_streamed: usize,
+    /// Applies served since build.
+    pub applies: usize,
+}
+
+impl PanelSet {
+    /// Plan which panels fit the byte budget. Source panels are considered
+    /// first (they also serve the upward pass and are smaller in
+    /// aggregate), then target panels; within each class ascending node
+    /// id. First-fit greedy: a panel that does not fit is streamed, but
+    /// smaller later panels may still claim the remaining budget —
+    /// deterministic for a given (tree, plan, budget).
+    pub(super) fn plan(
+        tree: &Tree,
+        fplan: &FarFieldPlan,
+        num_terms: usize,
+        budget_bytes: usize,
+    ) -> PanelSet {
+        let nnodes = tree.nodes.len();
+        let mut nodes: Vec<NodePanel> = (0..nnodes).map(|_| NodePanel::default()).collect();
+        let mut used = 0usize;
+        let mut cached = 0usize;
+        let mut streamed = 0usize;
+        for id in fplan.nodes_with_far() {
+            let bytes = tree.nodes[id].len() * num_terms * 8;
+            if used + bytes <= budget_bytes {
+                nodes[id].src_cached = true;
+                used += bytes;
+                cached += 1;
+            } else {
+                streamed += 1;
+            }
+        }
+        for id in fplan.nodes_with_far() {
+            let bytes = fplan.interactions[id].far.len() * num_terms * 8;
+            if used + bytes <= budget_bytes {
+                nodes[id].tgt_cached = true;
+                used += bytes;
+                cached += 1;
+            } else {
+                streamed += 1;
+            }
+        }
+        PanelSet {
+            nodes,
+            budget_bytes,
+            planned_bytes: used,
+            cached_panels: cached,
+            streamed_panels: streamed,
+            resident: AtomicUsize::new(0),
+            applies: AtomicUsize::new(0),
+        }
+    }
+
+    /// Count one apply (for the reuse metric).
+    pub(super) fn note_apply(&self) {
+        self.applies.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot the observable state.
+    pub(super) fn stats(&self) -> PanelStats {
+        PanelStats {
+            budget_bytes: self.budget_bytes,
+            planned_bytes: self.planned_bytes,
+            resident_bytes: self.resident.load(Ordering::Relaxed),
+            panels_cached: self.cached_panels,
+            panels_streamed: self.streamed_panels,
+            applies: self.applies.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Per-worker scratch for the panel engine: harmonic workspace, one
+/// coefficient row, and the gather/output buffers of the GEMM phases.
+/// Allocation-free across nodes once warm.
+pub(super) struct PanelScratch {
+    ws: HarmonicWorkspace,
+    /// Harmonic values at the current relative point.
+    yx: Vec<f64>,
+    /// Relative coordinates w.r.t. the node center.
+    rel: Vec<f64>,
+    /// Radial factors `M_{kj}(r)` for one order (len max_j).
+    radial: Vec<f64>,
+    /// Kernel derivative jet (len p + 1).
+    derivs: Vec<f64>,
+    /// One coefficient row (len 𝒫) — written by the row evaluators.
+    pub(super) row: Vec<f64>,
+    /// Gathered weight rows (|node| × m) — moments GEMM and near field.
+    pub(super) wgather: Vec<f64>,
+    /// Gathered near-target coordinates (|N_l| × d).
+    pub(super) tgather: Vec<f64>,
+    /// Per-job GEMM output before scatter (|F_b| × m far, |N_l| × m near
+    /// — one job at a time per worker, so the buffer is shared).
+    pub(super) zpanel: Vec<f64>,
+    /// Single-row accumulator (m) for the streaming target path.
+    pub(super) acc: Vec<f64>,
+}
+
+impl PanelScratch {
+    pub(super) fn new(op: &FktOperator, m: usize) -> PanelScratch {
+        PanelScratch {
+            ws: HarmonicWorkspace::default(),
+            yx: vec![0.0; op.exp.basis.total()],
+            rel: vec![0.0; op.tree.d],
+            radial: vec![0.0; op.exp.table.num_j(0).max(1)],
+            derivs: vec![0.0; op.cfg.p + 1],
+            row: vec![0.0; op.num_terms()],
+            wgather: Vec::new(),
+            tgather: Vec::new(),
+            zpanel: Vec::new(),
+            acc: vec![0.0; m],
+        }
+    }
+}
+
+impl FktOperator {
+    /// Panel-cache counters (residency, cached vs streamed, reuse).
+    pub fn panel_stats(&self) -> PanelStats {
+        self.panels.stats()
+    }
+
+    /// Fill `scratch.row` with the m2t coefficient row of target `t`
+    /// against the node centered at `center`: `row[(k,h,·)] = Y_k^h(ŷ_rel)
+    /// · M_{kj}(r)` (generic) or `· F_{k,i}(r)` (compressed), laid out
+    /// exactly like the moment vector so `z_t += row · μ`.
+    fn eval_target_row_into(&self, center: &[f64], t: usize, s: &mut PanelScratch) {
+        let p = self.cfg.p;
+        let y = self.targets.point(t);
+        for a in 0..self.tree.d {
+            s.rel[a] = y[a] - center[a];
+        }
+        let r = vecops::norm2(&s.rel);
+        self.exp.basis.eval_into(&s.rel, &mut s.ws, &mut s.yx);
+        match &self.radial {
+            RadialRep::Generic => {
+                self.kernel.family.derivatives_into(r, p, &mut s.derivs);
+                let mut term = 0usize;
+                for k in 0..=p {
+                    let o = self.exp.basis.offset(k);
+                    let c = self.exp.basis.count(k);
+                    let nj = self.exp.table.num_j(k);
+                    for (jj, slot) in s.radial.iter_mut().take(nj).enumerate() {
+                        *slot = self.exp.table.radial_m(k, jj, r, &s.derivs);
+                    }
+                    for h in 0..c {
+                        let yh = s.yx[o + h];
+                        let base = term + h * nj;
+                        for (jj, &rad) in s.radial.iter().take(nj).enumerate() {
+                            s.row[base + jj] = yh * rad;
+                        }
+                    }
+                    term += c * nj;
+                }
+            }
+            RadialRep::Compressed(comp) => {
+                let mut term = 0usize;
+                for k in 0..=p {
+                    let o = self.exp.basis.offset(k);
+                    let c = self.exp.basis.count(k);
+                    let fs = comp.eval_f(k, r);
+                    for h in 0..c {
+                        let yh = s.yx[o + h];
+                        let base = term + h * fs.len();
+                        for (i_f, &f) in fs.iter().enumerate() {
+                            s.row[base + i_f] = yh * f;
+                        }
+                    }
+                    term += c * fs.len();
+                }
+            }
+        }
+    }
+
+    /// Fill `scratch.row` with the s2m coefficient row of the point at
+    /// tree position `pos` (inside the node centered at `center`):
+    /// `row[(k,h,·)] = Y_k^h(x̂_rel) r'^j / ρ_k` (generic) or
+    /// `· G_{k,i}(r') / ρ_k` (compressed), so `μ += w · row`.
+    fn eval_source_row_into(&self, center: &[f64], pos: usize, s: &mut PanelScratch) {
+        let p = self.cfg.p;
+        let x = self.tree.points.point(pos);
+        for a in 0..self.tree.d {
+            s.rel[a] = x[a] - center[a];
+        }
+        let r_src = vecops::norm2(&s.rel);
+        self.exp.basis.eval_into(&s.rel, &mut s.ws, &mut s.yx);
+        match &self.radial {
+            RadialRep::Generic => {
+                let mut term = 0usize;
+                for k in 0..=p {
+                    let o = self.exp.basis.offset(k);
+                    let c = self.exp.basis.count(k);
+                    let nj = self.exp.table.num_j(k);
+                    let s_k = self.exp.inv_rho[k];
+                    // r'^j for j = k, k+2, …
+                    let mut rj = r_src.powi(k as i32);
+                    let r2 = r_src * r_src;
+                    for jj in 0..nj {
+                        for h in 0..c {
+                            s.row[term + h * nj + jj] = s.yx[o + h] * rj * s_k;
+                        }
+                        rj *= r2;
+                    }
+                    term += c * nj;
+                }
+            }
+            RadialRep::Compressed(comp) => {
+                let mut term = 0usize;
+                for k in 0..=p {
+                    let o = self.exp.basis.offset(k);
+                    let c = self.exp.basis.count(k);
+                    let gs = comp.eval_g(k, r_src);
+                    let s_k = self.exp.inv_rho[k];
+                    for (i_g, &g) in gs.iter().enumerate() {
+                        for h in 0..c {
+                            s.row[term + h * gs.len() + i_g] = s.yx[o + h] * g * s_k;
+                        }
+                    }
+                    term += c * gs.len();
+                }
+            }
+        }
+    }
+
+    /// The node's cached `Sᵀ` panel, materializing it on first touch;
+    /// `None` when the budget streams this node.
+    fn src_panel(&self, id: usize) -> Option<&[f64]> {
+        let slot = &self.panels.nodes[id];
+        if !slot.src_cached {
+            return None;
+        }
+        Some(
+            slot.src
+                .get_or_init(|| {
+                    let node = &self.tree.nodes[id];
+                    let npts = node.len();
+                    let nt = self.num_terms();
+                    let mut s = PanelScratch::new(self, 1);
+                    let mut st = vec![0.0; nt * npts];
+                    let center = &self.centers[id];
+                    for (col, pos) in (node.start..node.end).enumerate() {
+                        self.eval_source_row_into(center, pos, &mut s);
+                        for term in 0..nt {
+                            st[term * npts + col] = s.row[term];
+                        }
+                    }
+                    self.panels.resident.fetch_add(st.len() * 8, Ordering::Relaxed);
+                    st
+                })
+                .as_slice(),
+        )
+    }
+
+    /// The node's cached `E` panel, materializing it on first touch;
+    /// `None` when the budget streams this node.
+    fn tgt_panel(&self, id: usize) -> Option<&[f64]> {
+        let slot = &self.panels.nodes[id];
+        if !slot.tgt_cached {
+            return None;
+        }
+        Some(
+            slot.tgt
+                .get_or_init(|| {
+                    let far = &self.plan.interactions[id].far;
+                    let nt = self.num_terms();
+                    let mut s = PanelScratch::new(self, 1);
+                    let mut e = vec![0.0; far.len() * nt];
+                    let center = &self.centers[id];
+                    for (row, &t) in far.iter().enumerate() {
+                        self.eval_target_row_into(center, t as usize, &mut s);
+                        e[row * nt..(row + 1) * nt].copy_from_slice(&s.row);
+                    }
+                    self.panels.resident.fetch_add(e.len() * 8, Ordering::Relaxed);
+                    e
+                })
+                .as_slice(),
+        )
+    }
+
+    /// Upward pass for one node and `m` interleaved columns: the cached
+    /// path is one `μ = Sᵀ · W_node` GEMM over the gathered weight rows;
+    /// the streamed path evaluates each point's row and rank-1-updates —
+    /// same products, same per-(term, column) accumulation order.
+    pub(super) fn node_moments(
+        &self,
+        id: usize,
+        w: &[f64],
+        m: usize,
+        s: &mut PanelScratch,
+    ) -> Vec<f64> {
+        let nt = self.num_terms();
+        let node = &self.tree.nodes[id];
+        let npts = node.len();
+        let mut mu = vec![0.0; nt * m];
+        if let Some(st) = self.src_panel(id) {
+            s.wgather.clear();
+            s.wgather.reserve(npts * m);
+            for i in node.start..node.end {
+                let orig = self.tree.perm[i];
+                s.wgather.extend_from_slice(&w[orig * m..orig * m + m]);
+            }
+            gemm_accum(st, nt, npts, &s.wgather, m, &mut mu);
+        } else {
+            let center = &self.centers[id];
+            for i in node.start..node.end {
+                let orig = self.tree.perm[i];
+                let wrow = &w[orig * m..orig * m + m];
+                if wrow.iter().all(|&v| v == 0.0) {
+                    continue;
+                }
+                self.eval_source_row_into(center, i, s);
+                for (term, &coef) in s.row.iter().enumerate() {
+                    if coef == 0.0 {
+                        continue;
+                    }
+                    let slot = &mut mu[term * m..term * m + m];
+                    for (acc, &wc) in slot.iter_mut().zip(wrow) {
+                        *acc = coef.mul_add(wc, *acc);
+                    }
+                }
+            }
+        }
+        mu
+    }
+
+    /// m2t pass for one node and `m` interleaved columns: the cached path
+    /// is one `Z[F_b] += E · μ` GEMM plus a scatter; the streamed path
+    /// evaluates each target's row and contracts it against `μ` through
+    /// the same micro-kernel, so both paths sum in the same order.
+    pub(super) fn far_node_apply(
+        &self,
+        id: usize,
+        mu: &[f64],
+        m: usize,
+        z: &mut [f64],
+        s: &mut PanelScratch,
+    ) {
+        let far = &self.plan.interactions[id].far;
+        let nt = self.num_terms();
+        if let Some(e) = self.tgt_panel(id) {
+            s.zpanel.clear();
+            s.zpanel.resize(far.len() * m, 0.0);
+            gemm_accum(e, far.len(), nt, mu, m, &mut s.zpanel);
+            for (rowi, &t) in far.iter().enumerate() {
+                let zrow = &mut z[t as usize * m..t as usize * m + m];
+                for (slot, &v) in zrow.iter_mut().zip(&s.zpanel[rowi * m..rowi * m + m]) {
+                    *slot += v;
+                }
+            }
+        } else {
+            let center = &self.centers[id];
+            for &t in far {
+                self.eval_target_row_into(center, t as usize, s);
+                s.acc.iter_mut().for_each(|v| *v = 0.0);
+                gemm_accum(&s.row, 1, nt, mu, m, &mut s.acc);
+                let zrow = &mut z[t as usize * m..t as usize * m + m];
+                for (slot, &v) in zrow.iter_mut().zip(s.acc.iter()) {
+                    *slot += v;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::fkt::{FktConfig, FktOperator};
+    use crate::kernels::{Family, Kernel};
+    use crate::points::Points;
+    use crate::rng::Pcg32;
+
+    fn uniform_points(n: usize, d: usize, seed: u64) -> Points {
+        let mut rng = Pcg32::seeded(seed);
+        Points::new(d, rng.uniform_vec(n * d, 0.0, 1.0))
+    }
+
+    fn assert_close(a: &[f64], b: &[f64], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-12 * (1.0 + y.abs()),
+                "{ctx}: i={i}: {x} vs {y}"
+            );
+        }
+    }
+
+    /// Cached-panel applies must match forced-streaming applies across
+    /// kernels, thread counts, and single/multi-RHS entry points.
+    #[test]
+    fn panel_matches_streamed_across_kernels_and_threads() {
+        let pts = uniform_points(700, 3, 201);
+        let mut rng = Pcg32::seeded(202);
+        let w1 = rng.normal_vec(700);
+        let w2 = rng.normal_vec(700 * 2);
+        for fam in [Family::Gaussian, Family::Matern32, Family::Cauchy] {
+            let kern = Kernel::canonical(fam);
+            let base = FktConfig { p: 4, theta: 0.5, leaf_capacity: 40, ..Default::default() };
+            let cached = FktOperator::square(&pts, kern, base);
+            let streamed = FktOperator::square(
+                &pts,
+                kern,
+                FktConfig { panel_budget_bytes: 0, ..base },
+            );
+            assert!(cached.panel_stats().panels_cached > 0, "{fam:?}: nothing cached");
+            assert_eq!(streamed.panel_stats().panels_cached, 0, "{fam:?}: budget 0");
+            assert!(streamed.panel_stats().panels_streamed > 0, "{fam:?}");
+            for threads in [1usize, 4] {
+                assert_close(
+                    &cached.matvec_parallel(&w1, threads),
+                    &streamed.matvec_parallel(&w1, threads),
+                    &format!("{fam:?} matvec threads={threads}"),
+                );
+                assert_close(
+                    &cached.matmat_parallel(&w2, 2, threads),
+                    &streamed.matmat_parallel(&w2, 2, threads),
+                    &format!("{fam:?} matmat threads={threads}"),
+                );
+            }
+            assert_eq!(streamed.panel_stats().resident_bytes, 0, "{fam:?}: streamed stays lazy");
+            assert!(cached.panel_stats().resident_bytes > 0, "{fam:?}: panels materialized");
+        }
+    }
+
+    #[test]
+    fn panel_matches_streamed_compressed_radial() {
+        let pts = uniform_points(500, 3, 203);
+        let mut rng = Pcg32::seeded(204);
+        let w = rng.normal_vec(500 * 3);
+        let kern = Kernel::new(Family::Matern32, 1.3);
+        let base = FktConfig {
+            p: 5,
+            theta: 0.5,
+            leaf_capacity: 32,
+            compression: true,
+            ..Default::default()
+        };
+        let cached = FktOperator::square(&pts, kern, base);
+        let streamed = FktOperator::square(&pts, kern, FktConfig { panel_budget_bytes: 0, ..base });
+        for threads in [1usize, 4] {
+            assert_close(
+                &cached.matmat_parallel(&w, 3, threads),
+                &streamed.matmat_parallel(&w, 3, threads),
+                &format!("compressed threads={threads}"),
+            );
+        }
+    }
+
+    #[test]
+    fn panel_matches_streamed_rectangular() {
+        let src = uniform_points(400, 2, 205);
+        let tgt = uniform_points(230, 2, 206);
+        let mut rng = Pcg32::seeded(207);
+        let w1 = rng.normal_vec(400);
+        let w2 = rng.normal_vec(400 * 2);
+        for fam in [Family::Gaussian, Family::Cauchy] {
+            let kern = Kernel::canonical(fam);
+            let base = FktConfig { p: 5, theta: 0.5, leaf_capacity: 25, ..Default::default() };
+            let cached = FktOperator::new(&src, Some(&tgt), kern, base);
+            let streamed = FktOperator::new(
+                &src,
+                Some(&tgt),
+                kern,
+                FktConfig { panel_budget_bytes: 0, ..base },
+            );
+            for threads in [1usize, 4] {
+                assert_close(
+                    &cached.matvec_parallel(&w1, threads),
+                    &streamed.matvec_parallel(&w1, threads),
+                    &format!("{fam:?} rect matvec threads={threads}"),
+                );
+                assert_close(
+                    &cached.matmat_parallel(&w2, 2, threads),
+                    &streamed.matmat_parallel(&w2, 2, threads),
+                    &format!("{fam:?} rect matmat threads={threads}"),
+                );
+            }
+        }
+    }
+
+    /// A budget between 0 and the full demand caches some panels and
+    /// streams the rest — the mixed regime must still match.
+    #[test]
+    fn partial_budget_mixes_cached_and_streamed() {
+        let pts = uniform_points(600, 2, 208);
+        let mut rng = Pcg32::seeded(209);
+        let w = rng.normal_vec(600);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let base = FktConfig { p: 4, theta: 0.5, leaf_capacity: 32, ..Default::default() };
+        let full = FktOperator::square(&pts, kern, base);
+        let demand = full.panel_stats().planned_bytes;
+        assert!(demand > 0);
+        let partial = FktOperator::square(
+            &pts,
+            kern,
+            FktConfig { panel_budget_bytes: demand / 2, ..base },
+        );
+        let ps = partial.panel_stats();
+        assert!(ps.panels_cached > 0, "half budget caches something");
+        assert!(ps.panels_streamed > 0, "half budget streams something");
+        assert!(ps.planned_bytes <= demand / 2, "plan respects the budget");
+        for threads in [1usize, 4] {
+            assert_close(
+                &partial.matvec_parallel(&w, threads),
+                &full.matvec_parallel(&w, threads),
+                &format!("partial threads={threads}"),
+            );
+        }
+        assert!(partial.panel_stats().resident_bytes <= demand / 2);
+    }
+
+    #[test]
+    fn stats_track_residency_and_reuse() {
+        let pts = uniform_points(300, 2, 210);
+        let mut rng = Pcg32::seeded(211);
+        let w = rng.normal_vec(300);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let cfg = FktConfig { p: 3, theta: 0.5, leaf_capacity: 32, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let s0 = op.panel_stats();
+        assert_eq!(s0.resident_bytes, 0, "panels are lazy");
+        assert_eq!(s0.applies, 0);
+        assert!(s0.planned_bytes > 0);
+        let _ = op.matvec(&w);
+        let s1 = op.panel_stats();
+        assert!(s1.resident_bytes > 0, "first apply materializes");
+        assert_eq!(s1.resident_bytes, s1.planned_bytes, "full budget: all planned panels built");
+        assert_eq!(s1.applies, 1);
+        let _ = op.matvec(&w);
+        let s2 = op.panel_stats();
+        assert_eq!(s2.resident_bytes, s1.resident_bytes, "no growth on reuse");
+        assert_eq!(s2.applies, 2);
+    }
+}

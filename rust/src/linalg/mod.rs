@@ -55,57 +55,33 @@ impl Mat {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// y = A x.
+    /// y = A x, through the unrolled [`gemm_accum`] micro-kernel's `m = 1`
+    /// dot path — the dense baseline and CG inner products no longer pay
+    /// the naive scalar loop.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0; self.rows];
-        for i in 0..self.rows {
-            let row = self.row(i);
-            let mut acc = 0.0;
-            for j in 0..self.cols {
-                acc += row[j] * x[j];
-            }
-            y[i] = acc;
-        }
+        gemm_accum(&self.data, self.rows, self.cols, x, 1, &mut y);
         y
     }
 
-    /// y = Aᵀ x.
+    /// y = Aᵀ x, as the micro-kernel product `xᵀ · A` (one axpy-shaped
+    /// GEMM row over A's rows — same `mul_add` path as [`gemm_accum`]).
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.rows);
         let mut y = vec![0.0; self.cols];
-        for i in 0..self.rows {
-            let row = self.row(i);
-            let xi = x[i];
-            if xi == 0.0 {
-                continue;
-            }
-            for j in 0..self.cols {
-                y[j] += row[j] * xi;
-            }
-        }
+        gemm_accum(x, 1, self.rows, &self.data, self.cols, &mut y);
         y
     }
 
-    /// C = A·B (naive; fine for the expansion-sized matrices this library
-    /// multiplies — the large near-field products go through the PJRT tiles
-    /// or the specialized kernels in `fkt::nearfield`).
+    /// C = A·B through [`gemm_accum`] (fine for the expansion-sized
+    /// matrices this library multiplies — the large near-field products go
+    /// through the PJRT tiles or the specialized kernels in
+    /// `fkt::nearfield`).
     pub fn gemm(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows);
         let mut c = Mat::zeros(self.rows, b.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let aik = self[(i, k)];
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = b.row(k);
-                let crow = c.row_mut(i);
-                for j in 0..b.cols {
-                    crow[j] += aik * brow[j];
-                }
-            }
-        }
+        gemm_accum(&self.data, self.rows, self.cols, &b.data, b.cols, &mut c.data);
         c
     }
 
@@ -141,23 +117,64 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
 }
 
 /// Accumulating dense GEMM micro-kernel: `C += A · B` with row-major
-/// `A (ra×n)`, `B (n×m)`, `C (ra×m)` given as flat slices. The i-k-j loop
-/// order keeps the inner loop a contiguous axpy over B's rows so it
-/// auto-vectorizes for the small m (2–8 RHS columns) the batched near
-/// field produces; `B` may be a leading sub-block of a longer slice.
+/// `A (ra×n)`, `B (n×m)`, `C (ra×m)` given as flat slices; `B` may be a
+/// leading sub-block of a longer slice.
+///
+/// This is the one hot contraction the whole stack funnels through: the
+/// batched near field, the panelized far field (`Z[panel] += E·μ`,
+/// `μ = Sᵀ·W`), and [`Mat::matvec`]/[`Mat::matvec_t`]. Two widened
+/// `mul_add` paths:
+/// * `m == 1` — per-row dot product over four independent fused
+///   accumulators (breaks the serial FMA dependency chain);
+/// * `m > 1` — i-k-j order with the k-loop unrolled two B-rows deep, the
+///   inner loop a contiguous fused axpy over B's rows, so it
+///   auto-vectorizes for the small m (1–8 RHS columns) the engine
+///   produces.
 pub fn gemm_accum(a: &[f64], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [f64]) {
     assert_eq!(a.len(), ra * n, "A shape mismatch");
     assert!(b.len() >= n * m, "B too short");
     assert_eq!(c.len(), ra * m, "C shape mismatch");
+    if m == 1 {
+        let n4 = n & !3;
+        for i in 0..ra {
+            let arow = &a[i * n..(i + 1) * n];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+            let mut k = 0;
+            while k < n4 {
+                s0 = arow[k].mul_add(b[k], s0);
+                s1 = arow[k + 1].mul_add(b[k + 1], s1);
+                s2 = arow[k + 2].mul_add(b[k + 2], s2);
+                s3 = arow[k + 3].mul_add(b[k + 3], s3);
+                k += 4;
+            }
+            let mut acc = (s0 + s2) + (s1 + s3);
+            for kk in n4..n {
+                acc = arow[kk].mul_add(b[kk], acc);
+            }
+            c[i] += acc;
+        }
+        return;
+    }
+    let n2 = n & !1;
     for i in 0..ra {
         let arow = &a[i * n..(i + 1) * n];
         let crow = &mut c[i * m..(i + 1) * m];
-        for (&aik, brow) in arow.iter().zip(b.chunks_exact(m)) {
-            if aik == 0.0 {
-                continue;
+        let mut k = 0;
+        while k < n2 {
+            let a0 = arow[k];
+            let a1 = arow[k + 1];
+            let b0 = &b[k * m..k * m + m];
+            let b1 = &b[(k + 1) * m..(k + 1) * m + m];
+            for j in 0..m {
+                crow[j] = a1.mul_add(b1[j], a0.mul_add(b0[j], crow[j]));
             }
-            for (slot, &bv) in crow.iter_mut().zip(brow) {
-                *slot += aik * bv;
+            k += 2;
+        }
+        if n2 < n {
+            let a0 = arow[n2];
+            let b0 = &b[n2 * m..n2 * m + m];
+            for j in 0..m {
+                crow[j] = a0.mul_add(b0[j], crow[j]);
             }
         }
     }
@@ -441,6 +458,34 @@ mod tests {
         gemm_accum(&a.data, ra, n, &b.data, m, &mut c);
         for i in 0..ra * m {
             assert!((c[i] - (expect.data[i] + 1.0)).abs() < 1e-12, "i={i}");
+        }
+    }
+
+    /// The unrolled paths must agree with a reference triple loop across
+    /// remainder shapes (n ∤ 4 for the dot path, n odd for the axpy path)
+    /// and both the m = 1 and m > 1 dispatches.
+    #[test]
+    fn gemm_accum_unrolled_paths_match_reference() {
+        let mut rng = Pcg32::seeded(9);
+        for (ra, n, m) in [(3, 1, 1), (4, 5, 1), (2, 9, 1), (3, 7, 2), (5, 4, 3), (1, 3, 6)] {
+            let a: Vec<f64> = rng.normal_vec(ra * n);
+            let b: Vec<f64> = rng.normal_vec(n * m);
+            let mut c = rng.normal_vec(ra * m);
+            let mut expect = c.clone();
+            for i in 0..ra {
+                for k in 0..n {
+                    for j in 0..m {
+                        expect[i * m + j] += a[i * n + k] * b[k * m + j];
+                    }
+                }
+            }
+            gemm_accum(&a, ra, n, &b, m, &mut c);
+            for i in 0..ra * m {
+                assert!(
+                    (c[i] - expect[i]).abs() < 1e-12 * (1.0 + expect[i].abs()),
+                    "ra={ra} n={n} m={m} i={i}"
+                );
+            }
         }
     }
 

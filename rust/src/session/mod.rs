@@ -149,6 +149,7 @@ impl Session {
             tolerance: None,
             p_override: None,
             theta_override: None,
+            panel_budget: None,
             dense: false,
             transient: false,
         }
@@ -300,6 +301,7 @@ pub struct OpSpec<'a> {
     tolerance: Option<f64>,
     p_override: Option<usize>,
     theta_override: Option<f64>,
+    panel_budget: Option<usize>,
     dense: bool,
     transient: bool,
 }
@@ -371,6 +373,18 @@ impl<'a> OpSpec<'a> {
         self
     }
 
+    /// Byte budget for the operator's cached far-field evaluation panels
+    /// (see `fkt::panels`): panels past the budget are recomputed on every
+    /// apply (streaming fallback), and 0 forces pure streaming. Part of
+    /// the registry key — requests that differ only in budget build
+    /// distinct operators, since the budget changes the operator's memory
+    /// footprint and apply-time behavior. Held apart from the wholesale
+    /// `.config(..)` setter, so the two compose in either order.
+    pub fn panel_budget(mut self, bytes: usize) -> Self {
+        self.panel_budget = Some(bytes);
+        self
+    }
+
     /// The paper's Barnes–Hut baseline: p = 0, centroid centers.
     pub fn barnes_hut(mut self, theta: f64, leaf_capacity: usize) -> Self {
         self.cfg = FktConfig::barnes_hut(theta, leaf_capacity);
@@ -405,6 +419,7 @@ impl<'a> OpSpec<'a> {
             tolerance,
             p_override,
             theta_override,
+            panel_budget,
             dense,
             transient,
         } = self;
@@ -448,6 +463,11 @@ impl<'a> OpSpec<'a> {
             if p_override.is_some() || theta_override.is_some() {
                 resolved = None;
             }
+            // The budget overrides whatever `.config(..)` carried,
+            // regardless of builder-call order.
+            if let Some(bytes) = panel_budget {
+                cfg.panel_budget_bytes = bytes;
+            }
         }
         let build_op = || -> Arc<dyn KernelOp + Send + Sync> {
             if dense {
@@ -470,6 +490,7 @@ impl<'a> OpSpec<'a> {
             leaf_capacity: cfg.leaf_capacity,
             center: cfg.center,
             compression: cfg.compression,
+            panel_budget: cfg.panel_budget_bytes,
             dense,
         };
         let op = session.registry.get_or_build(key, build_op);
@@ -762,6 +783,48 @@ mod tests {
         // and yields the same hyperparameters.
         let again = session.operator(&pts).kernel(Family::Matern52).tolerance(1e-5).build();
         assert!(auto.ptr_eq(&again));
+    }
+
+    #[test]
+    fn panel_budget_is_part_of_the_registry_key() {
+        let pts = uniform_points(200, 2, 722);
+        let mut rng = Pcg32::seeded(723);
+        let w = rng.normal_vec(200);
+        let mut session = Session::native(1);
+        let cached = session.operator(&pts).kernel(Family::Cauchy).order(3).theta(0.5).build();
+        let streamed = session
+            .operator(&pts)
+            .kernel(Family::Cauchy)
+            .order(3)
+            .theta(0.5)
+            .panel_budget(0)
+            .build();
+        assert!(!cached.ptr_eq(&streamed), "budgets key distinct operators");
+        let streamed2 = session
+            .operator(&pts)
+            .kernel(Family::Cauchy)
+            .order(3)
+            .theta(0.5)
+            .panel_budget(0)
+            .build();
+        assert!(streamed.ptr_eq(&streamed2), "equal budgets share one operator");
+        // Builder-order independence: a wholesale `.config(..)` after
+        // `.panel_budget(0)` must not clobber the budget.
+        let cfg = FktConfig { p: 3, theta: 0.5, ..Default::default() };
+        let reordered = session
+            .operator(&pts)
+            .kernel(Family::Cauchy)
+            .panel_budget(0)
+            .config(cfg)
+            .build();
+        assert!(streamed.ptr_eq(&reordered), "budget survives a later .config()");
+        // And both answer identically.
+        let zc = session.mvm(&cached, &w);
+        let zs = session.mvm(&streamed, &w);
+        for (a, b) in zc.iter().zip(&zs) {
+            assert!((a - b).abs() <= 1e-12 * (1.0 + b.abs()));
+        }
+        assert_eq!(session.last_metrics().panels_cached, 0, "budget 0 streams");
     }
 
     #[test]

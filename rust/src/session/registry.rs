@@ -79,6 +79,10 @@ pub struct OpKey {
     pub center: ExpansionCenter,
     /// §A.4 compression toggle.
     pub compression: bool,
+    /// Far-field panel-cache byte budget (`FktConfig::panel_budget_bytes`)
+    /// — part of the identity because it changes the built operator's
+    /// memory footprint and apply-time behavior.
+    pub panel_budget: usize,
     /// Exact dense backend instead of the FKT.
     pub dense: bool,
 }
@@ -189,6 +193,7 @@ mod tests {
             leaf_capacity: 64,
             center: ExpansionCenter::BoxCenter,
             compression: false,
+            panel_budget: crate::fkt::DEFAULT_PANEL_BUDGET_BYTES,
             dense: false,
         }
     }

@@ -274,10 +274,20 @@ impl Tree {
             )
         };
         debug_assert!(w_lo <= w_hi + 1e-12, "infeasible aspect window");
-        // Median of point coordinates along the axis, clamped to the window.
+        // Median of point coordinates along the axis, clamped to the
+        // window. `select_nth_unstable_by` finds the same element a full
+        // sort would place at position len/2 — identical split planes —
+        // in O(n) instead of O(n log n) per split; min/max (for the
+        // degenerate-tie fallback below) come from a single linear pass.
         let mut coords: Vec<f64> = (start..end).map(|i| pts.point(i)[axis]).collect();
-        coords.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let median = coords[coords.len() / 2];
+        let (mut cmin, mut cmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in &coords {
+            cmin = cmin.min(v);
+            cmax = cmax.max(v);
+        }
+        let mid_pos = coords.len() / 2;
+        let (_, &mut median, _) =
+            coords.select_nth_unstable_by(mid_pos, |a, b| a.partial_cmp(b).unwrap());
         let eps = 1e-9 * side;
         let t = (median - lo_a).clamp((w_lo + eps).min(w_hi), w_hi.max(w_lo + eps));
         let plane = lo_a + t;
@@ -287,7 +297,7 @@ impl Tree {
         // handle those by a midpoint fallback.
         let mut mid = partition_points(pts, perm, start, end, axis, plane);
         if mid == start || mid == end {
-            let plane2 = 0.5 * (coords[0] + *coords.last().unwrap());
+            let plane2 = 0.5 * (cmin + cmax);
             mid = partition_points(pts, perm, start, end, axis, plane2);
             if mid == start || mid == end {
                 return None;

@@ -86,6 +86,18 @@ impl FarFieldPlan {
         FarFieldPlan { interactions, theta, far_pairs, near_pairs }
     }
 
+    /// Ids of nodes with a non-empty far set, in ascending order — the
+    /// nodes whose moments are actually consumed. This is the candidate
+    /// list the panel cache's budget planner and the apply scheduler's
+    /// job construction both iterate (`fkt::panels`).
+    pub fn nodes_with_far(&self) -> impl Iterator<Item = usize> + '_ {
+        self.interactions
+            .iter()
+            .enumerate()
+            .filter(|(_, it)| !it.far.is_empty())
+            .map(|(id, _)| id)
+    }
+
     /// Estimated dense-equivalent work: near pairs × leaf sizes etc.
     /// (used by the coordinator's cost model and by the benches' reporting).
     pub fn stats(&self, tree: &Tree) -> PlanStats {

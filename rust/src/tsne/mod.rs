@@ -179,10 +179,13 @@ pub fn repulsive_field(
     let y0: Vec<f64> = (0..n).map(|i| embedding.point(i)[0]).collect();
     let y1: Vec<f64> = (0..n).map(|i| embedding.point(i)[1]).collect();
     // Z: Cauchy MVM with ones (subtracting the N diagonal terms).
+    // Per-step operators are applied exactly once, so the far-field panel
+    // cache could only add materialization overhead — force streaming.
     let cauchy = session
         .operator(embedding)
         .kernel(Family::Cauchy)
         .config(cfg.fkt)
+        .panel_budget(0)
         .transient()
         .build();
     let s1 = session.mvm(&cauchy, &ones);
@@ -194,6 +197,7 @@ pub fn repulsive_field(
         .operator(embedding)
         .kernel(Family::CauchySquared)
         .config(cfg.fkt)
+        .panel_budget(0)
         .transient()
         .build();
     let mut wb = Vec::with_capacity(3 * n);
