@@ -47,7 +47,7 @@ fn main() {
             ..Default::default()
         };
         let t0 = Instant::now();
-        let gp =
+        let mut gp =
             GpRegressor::new(&mut session, pts, ds.noise_variances(), Kernel::matern32(rho), cfg);
         let build = t0.elapsed().as_secs_f64();
         let t1 = Instant::now();

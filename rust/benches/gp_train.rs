@@ -1,0 +1,109 @@
+//! GP hyperparameter-training throughput: what one LML-ascent iteration
+//! costs when the whole estimator runs through batched FKT verbs.
+//!
+//! Workload: N uniform 2-D points, y from a smooth field plus noise,
+//! Matérn-3/2 kernel trained over (log scale, log σ_n²). Each iteration
+//! is ONE batched solve over `[y | probes]` (lockstep CG, shared
+//! leaf-block-Jacobi factors) + one batched derivative MVM + one D·α MVM
+//! — the cached-panel far field from PR 3 makes the repeated applies
+//! inside CG pure GEMM.
+//!
+//! Records into BENCH.json (merged):
+//! * `gp_train_seconds_per_iteration` — wall time / iterations;
+//! * `gp_train_probe_count` — Hutchinson probes per iteration;
+//! * `gp_train_solve_columns` — columns in the one batched solve (1 + P);
+//! * `gp_train_cg_iterations_mean` — mean lockstep-CG depth;
+//! * `gp_train_batched_solves_per_iteration` — the ≤ 2 acceptance number;
+//! * `gp_train_total_seconds`.
+//!
+//! ```text
+//! cargo bench --bench gp_train [-- --n 20000 --iters 5 --probes 8]
+//! ```
+
+use fkt::benchkit::{fmt_time, BenchJson, Table};
+use fkt::cli::Args;
+use fkt::fkt::FktConfig;
+use fkt::gp::{GpConfig, GpRegressor, TrainOpts};
+use fkt::kernels::Kernel;
+use fkt::rng::Pcg32;
+use fkt::session::Session;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n: usize = args.get("n", 20000);
+    let iters: usize = args.get("iters", 5);
+    let probes: usize = args.get("probes", 8);
+    let p: usize = args.get("p", 4);
+    let theta: f64 = args.get("theta", 0.5);
+    let leaf: usize = args.get("leaf", 256);
+    let mut rng = Pcg32::seeded(55);
+    let pts = fkt::data::uniform_cube(n, 2, &mut rng);
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let pnt = pts.point(i);
+            (8.0 * pnt[0]).sin() * (6.0 * pnt[1]).cos() + 0.3 * rng.normal()
+        })
+        .collect();
+    let cfg = GpConfig {
+        fkt: FktConfig { p, theta, leaf_capacity: leaf, ..Default::default() },
+        cg_tol: args.get("cg-tol", 1e-4),
+        cg_max_iters: args.get("cg-max", 200),
+        jitter: 1e-8,
+        ..Default::default()
+    };
+    // Training churns two operators per iteration (the kernel scale moves
+    // every step); a small LRU keeps dead trees and panels from piling up.
+    let mut session = Session::builder()
+        .threads(args.threads())
+        .backend(fkt::session::Backend::Native)
+        .registry_capacity(args.get("registry-cap", 4))
+        .build();
+    let mut gp = GpRegressor::new(
+        &mut session,
+        pts,
+        vec![0.2; n],
+        Kernel::matern32(args.get("rho0", 0.3)),
+        cfg,
+    );
+    let opts = TrainOpts { iters, probes, seed: 0xbe0c, ..Default::default() };
+
+    println!(
+        "GP training: N={n}, Matérn-3/2, p={p}, θ={theta}, leaf={leaf}, \
+         {iters} iterations × {probes} probes"
+    );
+    let t0 = Instant::now();
+    let res = gp.train(&mut session, &y, &opts);
+    let total = t0.elapsed().as_secs_f64();
+    let per_iter = total / iters.max(1) as f64;
+    let cg_mean = res.trace.iter().map(|s| s.solve_iterations as f64).sum::<f64>()
+        / res.trace.len().max(1) as f64;
+    let solves_per_iter = res.trace.iter().map(|s| s.batched_solves as f64).sum::<f64>()
+        / res.trace.len().max(1) as f64;
+    assert!(solves_per_iter <= 2.0, "acceptance: ≤ 2 batched solves per iteration");
+
+    let mut table = Table::new(&["quantity", "value"]);
+    table.row(&["total".into(), fmt_time(total)]);
+    table.row(&["per iteration".into(), fmt_time(per_iter)]);
+    table.row(&["solve columns".into(), format!("{}", 1 + probes)]);
+    table.row(&["mean CG depth".into(), format!("{cg_mean:.1}")]);
+    table.row(&["batched solves / iter".into(), format!("{solves_per_iter:.1}")]);
+    table.row(&[
+        "trained (ρ, σ_n²)".into(),
+        format!("({:.4}, {:.4})", 3f64.sqrt() / res.kernel.scale, res.noise_var),
+    ]);
+    table.print();
+
+    let mut json = BenchJson::new();
+    json.record("gp_train_seconds_per_iteration", per_iter);
+    json.record("gp_train_probe_count", probes as f64);
+    json.record("gp_train_solve_columns", (1 + probes) as f64);
+    json.record("gp_train_cg_iterations_mean", cg_mean);
+    json.record("gp_train_batched_solves_per_iteration", solves_per_iter);
+    json.record("gp_train_total_seconds", total);
+    let path = BenchJson::default_path();
+    match json.save_merged(&path) {
+        Ok(()) => println!("\nBENCH json merged into {}", path.display()),
+        Err(e) => eprintln!("\nBENCH json write failed ({}): {e}", path.display()),
+    }
+}

@@ -14,9 +14,12 @@
 //! requested as a tolerance (`GpConfig::tolerance`) instead of raw
 //! `(p, θ)` hyperparameters.
 
+pub mod train;
+
+pub use train::{LmlEstimate, LmlOpts, TrainOpts, TrainResult, TrainStep};
+
 use crate::fkt::FktConfig;
 use crate::kernels::Kernel;
-use crate::linalg::CgResult;
 use crate::points::Points;
 use crate::session::{OpHandle, Session, SolveOpts};
 
@@ -56,14 +59,47 @@ impl Default for GpConfig {
     }
 }
 
+/// Diagnostics of the representer-weight fit behind a prediction. The
+/// weights themselves stay cached on the regressor ([`GpRegressor::alpha`])
+/// instead of being cloned into every result.
+#[derive(Clone, Copy, Debug)]
+pub struct FitStats {
+    /// CG iterations the fit took (0 when served from the cache).
+    pub iterations: usize,
+    /// Final relative residual of the fit.
+    pub rel_residual: f64,
+    /// Whether the CG tolerance was reached.
+    pub converged: bool,
+    /// Whether this call reused the cached weights (zero solves issued).
+    pub cached: bool,
+}
+
 /// Result of a posterior-mean computation.
 pub struct GpResult {
     /// Posterior mean at the prediction points.
     pub mean: Vec<f64>,
-    /// CG solve diagnostics.
-    pub cg: CgResult,
-    /// Representer weights α = (K+Σ)^{-1} y.
-    pub alpha: Vec<f64>,
+    /// Fit diagnostics (cached or fresh — see [`FitStats::cached`]).
+    pub cg: FitStats,
+}
+
+/// Cached representer weights: the solve result plus the identity of the
+/// `y` it answers for (word-wise two-lane hash of the bit patterns, same
+/// scheme as the registry's dataset fingerprint — probabilistic identity
+/// with the same ≈2⁻¹²⁸ collision caveat).
+struct Fitted {
+    /// Fingerprint of the fitted `y` (its length is folded into the hash).
+    y_fp: u128,
+    alpha: Vec<f64>,
+    stats: FitStats,
+}
+
+/// Fingerprint of a right-hand side vector (bit-exact: any change to any
+/// entry invalidates the cached weights). Shares the registry's two-lane
+/// word hash so the crate has exactly one cache-identity hashing scheme.
+fn y_fingerprint(y: &[f64]) -> u128 {
+    crate::session::registry::fingerprint_words(
+        std::iter::once(y.len() as u64).chain(y.iter().map(|v| v.to_bits())),
+    )
 }
 
 /// A GP regressor: kernel + training data + per-point noise variances.
@@ -74,6 +110,10 @@ pub struct GpRegressor {
     cfg: GpConfig,
     /// Session handle to the square training-covariance operator.
     op: OpHandle,
+    /// Representer weights of the most recent fit, keyed by the `y` they
+    /// were fitted against. Invalidated whenever `y` or the
+    /// hyperparameters change (training replaces kernel and noise).
+    fitted: Option<Fitted>,
 }
 
 impl GpRegressor {
@@ -89,7 +129,7 @@ impl GpRegressor {
     ) -> Self {
         assert_eq!(train.len(), noise_var.len());
         let op = Self::request(session, &train, None, kernel, &cfg);
-        GpRegressor { kernel, train, noise_var, cfg, op }
+        GpRegressor { kernel, train, noise_var, cfg, op, fitted: None }
     }
 
     /// One operator request carrying the shared config/tolerance policy.
@@ -110,9 +150,19 @@ impl GpRegressor {
         spec.build()
     }
 
-    /// Solve (K + Σ + jitter·I) α = y — one first-class session solve.
-    pub fn fit_alpha(&self, y: &[f64], session: &mut Session) -> CgResult {
+    /// Solve (K + Σ + jitter·I) α = y — one first-class session solve,
+    /// served from the representer-weight cache when `y` (and the
+    /// hyperparameters) are unchanged since the last fit: repeated
+    /// predictions against one `y` issue ZERO additional solves
+    /// (asserted against the session's verb counters in the tests).
+    pub fn fit_alpha(&mut self, y: &[f64], session: &mut Session) -> FitStats {
         assert_eq!(y.len(), self.train.len());
+        let fp = y_fingerprint(y);
+        if let Some(f) = &self.fitted {
+            if f.y_fp == fp {
+                return FitStats { cached: true, ..f.stats };
+            }
+        }
         let opts = SolveOpts {
             tol: self.cfg.cg_tol,
             max_iters: self.cfg.cg_max_iters,
@@ -120,27 +170,84 @@ impl GpRegressor {
             noise: Some(&self.noise_var),
             precondition: self.cfg.precondition,
         };
-        session.solve(&self.op, y, &opts)
+        let cg = session.solve(&self.op, y, &opts);
+        let stats = FitStats {
+            iterations: cg.iterations,
+            rel_residual: cg.rel_residual,
+            converged: cg.converged,
+            cached: false,
+        };
+        // `cg.x` moves straight into the cache — no copy on this path or
+        // on the way out (callers borrow via `alpha()`).
+        self.fitted = Some(Fitted { y_fp: fp, alpha: cg.x, stats });
+        stats
+    }
+
+    /// The cached representer weights α = (K+Σ)⁻¹y of the most recent fit.
+    pub fn alpha(&self) -> Option<&[f64]> {
+        self.fitted.as_ref().map(|f| f.alpha.as_slice())
     }
 
     /// Posterior mean at `x_star` (requests the rectangular cross operator
     /// from the session — cached across repeated predictions on the same
-    /// grid).
+    /// grid, just as the representer weights are cached across repeated
+    /// predictions on the same `y`).
     pub fn posterior_mean(
-        &self,
+        &mut self,
         y: &[f64],
         x_star: &Points,
         session: &mut Session,
     ) -> GpResult {
         let cg = self.fit_alpha(y, session);
         let cross = Self::request(session, &self.train, Some(x_star), self.kernel, &self.cfg);
-        let mean = session.mvm(&cross, &cg.x);
-        GpResult { mean, alpha: cg.x.clone(), cg }
+        let alpha = &self.fitted.as_ref().expect("fit_alpha just ran").alpha;
+        let mean = session.mvm(&cross, alpha);
+        GpResult { mean, cg }
     }
 
     /// The session handle to the training-covariance operator.
     pub fn operator(&self) -> &OpHandle {
         &self.op
+    }
+
+    /// The kernel currently configured (updated by [`GpRegressor::train`]).
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    /// Per-point noise variances currently configured.
+    pub fn noise_variances(&self) -> &[f64] {
+        &self.noise_var
+    }
+
+    /// The GP configuration.
+    pub fn config(&self) -> &GpConfig {
+        &self.cfg
+    }
+
+    /// The training inputs.
+    pub fn points(&self) -> &Points {
+        &self.train
+    }
+
+    /// Replace the hyperparameters (training's commit step): new kernel
+    /// scale, and — when the noise was actually trained — a uniform noise
+    /// variance (`None` leaves the existing, possibly heteroscedastic,
+    /// per-point noise untouched). Re-requests the training operator from
+    /// the session and invalidates the cached representer weights — they
+    /// answered for the old covariance.
+    fn set_hyperparameters(
+        &mut self,
+        session: &mut Session,
+        kernel: Kernel,
+        noise_var: Option<f64>,
+    ) {
+        self.kernel = kernel;
+        if let Some(v) = noise_var {
+            self.noise_var = vec![v; self.train.len()];
+        }
+        self.op = Self::request(session, &self.train, None, kernel, &self.cfg);
+        self.fitted = None;
     }
 
     /// Training-set size.
@@ -204,7 +311,7 @@ mod tests {
             ..Default::default()
         };
         let mut session = Session::native(2);
-        let gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
+        let mut gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
         let res = gp.posterior_mean(&y, &xs, &mut session);
         assert!(res.cg.converged, "CG residual {}", res.cg.rel_residual);
         for i in 0..40 {
@@ -240,7 +347,7 @@ mod tests {
         };
         let train2 = train.clone();
         let mut session = Session::native(2);
-        let gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
+        let mut gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
         let res = gp.posterior_mean(&y, &train2, &mut session);
         let mut worst = 0.0f64;
         for i in 0..n {
@@ -267,7 +374,7 @@ mod tests {
             ..Default::default()
         };
         let mut session = Session::native(4);
-        let gp = GpRegressor::new(&mut session, pts, noise, kernel, cfg);
+        let mut gp = GpRegressor::new(&mut session, pts, noise, kernel, cfg);
         let res = gp.fit_alpha(&y, &mut session);
         assert!(res.converged, "CG residual {}", res.rel_residual);
         assert!(res.iterations < 300);
@@ -299,7 +406,7 @@ mod tests {
             ..Default::default()
         };
         let mut session = Session::native(2);
-        let gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
+        let mut gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
         // The tolerance request resolved real hyperparameters.
         assert!(gp.operator().resolved().is_some());
         let res = gp.posterior_mean(&y, &xs, &mut session);
@@ -312,6 +419,46 @@ mod tests {
                 oracle[i]
             );
         }
+    }
+
+    #[test]
+    fn repeated_predictions_do_zero_additional_solves() {
+        // The representer-weight cache: same y ⇒ no new solve (session
+        // solve counter frozen), new y ⇒ exactly one new solve.
+        let mut rng = Pcg32::seeded(226);
+        let n = 200;
+        let train = Points::new(2, rng.uniform_vec(n * 2, 0.0, 1.0));
+        let noise = vec![0.05; n];
+        let y = rng.normal_vec(n);
+        let xs = Points::new(2, rng.uniform_vec(20 * 2, 0.1, 0.9));
+        let cfg = GpConfig {
+            fkt: FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() },
+            ..Default::default()
+        };
+        let mut session = Session::native(1);
+        let kernel = Kernel::matern32(0.5);
+        let mut gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
+        let r1 = gp.posterior_mean(&y, &xs, &mut session);
+        assert!(!r1.cg.cached);
+        let solves_after_first = session.counters().solve;
+        assert_eq!(solves_after_first, 1);
+        let alpha_first = gp.alpha().expect("weights cached").to_vec();
+        // Second prediction with the same y: zero additional solves, same
+        // weights, identical mean.
+        let r2 = gp.posterior_mean(&y, &xs, &mut session);
+        assert!(r2.cg.cached);
+        assert_eq!(r2.cg.iterations, r1.cg.iterations, "stats replayed from cache");
+        assert_eq!(session.counters().solve, solves_after_first, "no new solve");
+        assert_eq!(gp.alpha().unwrap(), &alpha_first[..]);
+        for (a, b) in r1.mean.iter().zip(&r2.mean) {
+            assert_eq!(a, b, "cached weights must reproduce the mean exactly");
+        }
+        // A perturbed y must refit (bit-exact fingerprint invalidation).
+        let mut y2 = y.clone();
+        y2[17] += 1e-13;
+        let r3 = gp.posterior_mean(&y2, &xs, &mut session);
+        assert!(!r3.cg.cached);
+        assert_eq!(session.counters().solve, solves_after_first + 1);
     }
 
     #[test]
@@ -329,7 +476,7 @@ mod tests {
         let kernel = Kernel::canonical(Family::Gaussian);
         let gp1 = GpRegressor::new(&mut session, train.clone(), noise.clone(), kernel, cfg);
         let misses_after_first = session.registry_stats().misses;
-        let gp2 = GpRegressor::new(&mut session, train, noise, kernel, cfg);
+        let mut gp2 = GpRegressor::new(&mut session, train, noise, kernel, cfg);
         assert!(gp1.operator().ptr_eq(gp2.operator()), "same data ⇒ same operator");
         assert_eq!(session.registry_stats().misses, misses_after_first);
         assert!(session.registry_stats().hits >= 1);

@@ -12,6 +12,13 @@
 
 use super::Family;
 
+/// Stack-scratch capacity for recurrences that need a second derivative
+/// buffer (CauchySquared's Leibniz square, ScaleDeriv's base derivatives).
+/// Covers every order the expansion machinery requests (p ≤ 30 plus bound
+/// tail orders) without allocating; larger orders fall back to one heap
+/// vector instead of indexing out of bounds.
+const SCRATCH: usize = 64;
+
 impl Family {
     /// Write `K(u), K'(u), …, K^{(order)}(u)` into `out[0..=order]`
     /// without allocating. Equivalent to [`super::Kernel::derivatives_canonical`].
@@ -76,8 +83,15 @@ impl Family {
                 // (1+u²)K' + 4u·K·(1+u²)^{-1}… use instead the ODE
                 // (1+u²) K' = −4u (1+u²) K²·… — simpler: differentiate
                 // C = Cauchy and use K = C²: K^{(m)} = Σ C(m,t) C^{(t)}C^{(m−t)}
-                let mut c = [0.0f64; 64];
-                Family::Cauchy.derivatives_into(u, order, &mut c);
+                let mut small = [0.0f64; SCRATCH];
+                let mut heap: Vec<f64>;
+                let c: &mut [f64] = if order < SCRATCH {
+                    &mut small[..=order]
+                } else {
+                    heap = vec![0.0; order + 1];
+                    &mut heap
+                };
+                Family::Cauchy.derivatives_into(u, order, c);
                 for m in 0..=order {
                     let mut acc = 0.0;
                     let mut binom = 1.0f64;
@@ -86,6 +100,24 @@ impl Family {
                         binom *= (m - t) as f64 / (t + 1) as f64;
                     }
                     out[m] = acc;
+                }
+            }
+            Family::ScaleDeriv(b) => {
+                // D = u·K' ⇒ D^{(m)} = u·K^{(m+1)} + m·K^{(m)} (Leibniz on
+                // the product u·K'), so the base family's closed recurrence
+                // at order + 1 is the whole cost — no new ODE per profile.
+                let needed = order + 2;
+                let mut small = [0.0f64; SCRATCH];
+                let mut heap: Vec<f64>;
+                let k: &mut [f64] = if needed <= SCRATCH {
+                    &mut small[..needed]
+                } else {
+                    heap = vec![0.0; needed];
+                    &mut heap
+                };
+                b.base().derivatives_into(u, order + 1, k);
+                for (m, slot) in out.iter_mut().take(order + 1).enumerate() {
+                    *slot = u * k[m + 1] + m as f64 * k[m];
                 }
             }
             Family::RationalQuadratic => {
@@ -221,6 +253,72 @@ mod tests {
         for fam in Family::all() {
             fam.derivatives_into(1.7, 0, &mut buf);
             assert!((buf[0] - fam.eval(1.7)).abs() < 1e-14, "{fam:?}");
+        }
+        for b in super::super::DiffFamily::all() {
+            let fam = Family::ScaleDeriv(b);
+            fam.derivatives_into(1.7, 0, &mut buf);
+            assert!((buf[0] - fam.eval(1.7)).abs() < 1e-14, "{fam:?}");
+        }
+    }
+
+    /// Regression for the fixed-size scratch: `CauchySquared` (and the
+    /// `ScaleDeriv` profiles, which borrow the same pattern) used to index
+    /// out of a `[0.0; 64]` buffer for any `order ≥ 64` while every other
+    /// family worked. High orders must neither panic nor produce
+    /// non-finite garbage, across *all* families.
+    #[test]
+    fn high_order_requests_work_across_all_families() {
+        let mut fams = Family::all();
+        fams.extend(super::super::DiffFamily::all().into_iter().map(Family::ScaleDeriv));
+        for order in [63, 64, 65, 100] {
+            let mut buf = vec![0.0; order + 1];
+            for &fam in &fams {
+                fam.derivatives_into(1.5, order, &mut buf);
+                for (m, v) in buf.iter().enumerate() {
+                    assert!(v.is_finite(), "{fam:?} order={order} m={m}: {v}");
+                }
+            }
+        }
+        // Spot-check the boundary case against jets for the family that
+        // used to panic (values near round-off of the autodiff truth).
+        let order = 70;
+        let mut buf = vec![0.0; order + 1];
+        Family::CauchySquared.derivatives_into(1.5, order, &mut buf);
+        let jet = Kernel::canonical(Family::CauchySquared).derivatives_canonical(1.5, order);
+        for m in 0..=order {
+            let scale = 1.0f64.max(jet[m].abs());
+            assert!(
+                (buf[m] - jet[m]).abs() < 1e-6 * scale,
+                "CauchySquared m={m}: {} vs jet {}",
+                buf[m],
+                jet[m]
+            );
+        }
+    }
+
+    #[test]
+    fn scale_deriv_recurrences_match_jets() {
+        // The Leibniz recurrence D^{(m)} = u·K^{(m+1)} + m·K^{(m)} against
+        // the closed-form jets of each derivative profile.
+        let mut rng = Pcg32::seeded(303);
+        let order = 12;
+        let mut buf = vec![0.0; order + 1];
+        for b in super::super::DiffFamily::all() {
+            let fam = Family::ScaleDeriv(b);
+            for _ in 0..20 {
+                let u = rng.uniform_in(0.3, 4.0);
+                let jet = Kernel::canonical(fam).derivatives_canonical(u, order);
+                fam.derivatives_into(u, order, &mut buf);
+                for m in 0..=order {
+                    let scale = 1.0f64.max(jet[m].abs());
+                    assert!(
+                        (buf[m] - jet[m]).abs() < 1e-8 * scale,
+                        "{fam:?} m={m} u={u}: {} vs {}",
+                        buf[m],
+                        jet[m]
+                    );
+                }
+            }
         }
     }
 }

@@ -51,6 +51,63 @@ pub enum Family {
     ExpInvR2,
     /// `(1+u²)^{-2}` — squared Cauchy; the t-SNE repulsive-force kernel.
     CauchySquared,
+    /// `u·B'(u)` for a smooth base profile `B` — the kernel's derivative
+    /// with respect to its *log coordinate scale*. Length-scales enter as
+    /// `u = s·r`, so `∂K/∂log s = u·B'(u)` is itself an isotropic radial
+    /// profile, which makes the derivative operator GP hyperparameter
+    /// training needs just another FKT operator (same tree/plan machinery,
+    /// no new far-field code). Obtained via [`Family::scale_derivative`].
+    ScaleDeriv(DiffFamily),
+}
+
+/// Base families admitting the [`Family::ScaleDeriv`] surface: the smooth
+/// (non-singular) profiles GP regression actually trains. Families singular
+/// at the origin are excluded — their derivative profile would inherit the
+/// singularity and they are not covariance functions to begin with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DiffFamily {
+    /// Base `e^{-u}`.
+    Exponential,
+    /// Base `(1+u)e^{-u}`.
+    Matern32,
+    /// Base `(1+u+u²/3)e^{-u}`.
+    Matern52,
+    /// Base `e^{-u²}`.
+    Gaussian,
+    /// Base `1/(1+u²)`.
+    Cauchy,
+    /// Base `(1+u²)^{-1/2}`.
+    RationalQuadratic,
+    /// Base `(1+u²)^{-2}`.
+    CauchySquared,
+}
+
+impl DiffFamily {
+    /// The base profile `B` this derivative differentiates.
+    pub fn base(self) -> Family {
+        match self {
+            DiffFamily::Exponential => Family::Exponential,
+            DiffFamily::Matern32 => Family::Matern32,
+            DiffFamily::Matern52 => Family::Matern52,
+            DiffFamily::Gaussian => Family::Gaussian,
+            DiffFamily::Cauchy => Family::Cauchy,
+            DiffFamily::RationalQuadratic => Family::RationalQuadratic,
+            DiffFamily::CauchySquared => Family::CauchySquared,
+        }
+    }
+
+    /// Every differentiable base (tests sweep these).
+    pub fn all() -> Vec<DiffFamily> {
+        vec![
+            DiffFamily::Exponential,
+            DiffFamily::Matern32,
+            DiffFamily::Matern52,
+            DiffFamily::Gaussian,
+            DiffFamily::Cauchy,
+            DiffFamily::RationalQuadratic,
+            DiffFamily::CauchySquared,
+        ]
+    }
 }
 
 impl Family {
@@ -74,7 +131,45 @@ impl Family {
                 let w = 1.0 / (1.0 + u * u);
                 w * w
             }
+            // u·B'(u) in closed form per base (B' from the Table-1 formulas).
+            Family::ScaleDeriv(b) => match b {
+                DiffFamily::Exponential => -u * (-u).exp(),
+                DiffFamily::Matern32 => -u * u * (-u).exp(),
+                DiffFamily::Matern52 => -u * u * (1.0 + u) * (-u).exp() / 3.0,
+                DiffFamily::Gaussian => -2.0 * u * u * (-u * u).exp(),
+                DiffFamily::Cauchy => {
+                    let q = 1.0 + u * u;
+                    -2.0 * u * u / (q * q)
+                }
+                DiffFamily::RationalQuadratic => {
+                    let q = 1.0 + u * u;
+                    -u * u / (q * q.sqrt())
+                }
+                DiffFamily::CauchySquared => {
+                    let q = 1.0 + u * u;
+                    -4.0 * u * u / (q * q * q)
+                }
+            },
         }
+    }
+
+    /// The `∂K/∂log scale` profile `u ↦ u·K'(u)` of this family, when the
+    /// family is smooth enough to admit one (`None` for profiles singular
+    /// at the origin and for profiles that are already derivatives). This
+    /// is the kernel GP hyperparameter training differentiates through:
+    /// with `u = s·r`, `∂/∂(log s) K(s·r) = u·K'(u)`.
+    pub fn scale_derivative(self) -> Option<Family> {
+        let base = match self {
+            Family::Exponential => DiffFamily::Exponential,
+            Family::Matern32 => DiffFamily::Matern32,
+            Family::Matern52 => DiffFamily::Matern52,
+            Family::Gaussian => DiffFamily::Gaussian,
+            Family::Cauchy => DiffFamily::Cauchy,
+            Family::RationalQuadratic => DiffFamily::RationalQuadratic,
+            Family::CauchySquared => DiffFamily::CauchySquared,
+            _ => return None,
+        };
+        Some(Family::ScaleDeriv(base))
     }
 
     /// Value at u = 0 (the diagonal of the kernel matrix). Kernels singular
@@ -94,6 +189,9 @@ impl Family {
             | Family::OscillatoryCoulomb
             | Family::ExpOverR => 0.0,
             Family::RTimesExp | Family::ExpInvR | Family::ExpInvR2 => 0.0,
+            // u·B'(u) → 0 as u → 0 for every smooth base (B' bounded) —
+            // consistent with ∂/∂log s of the constant diagonal B(0).
+            Family::ScaleDeriv(_) => 0.0,
         }
     }
 
@@ -137,6 +235,29 @@ impl Family {
                 let _ = order;
                 w.mul(&w)
             }
+            // Same closed u·B'(u) formulas as `eval`, lifted through jets.
+            Family::ScaleDeriv(b) => match b {
+                DiffFamily::Exponential => u.mul(&u.neg().exp()).neg(),
+                DiffFamily::Matern32 => u.mul(u).mul(&u.neg().exp()).neg(),
+                DiffFamily::Matern52 => {
+                    u.mul(u).mul(&u.add_scalar(1.0)).mul(&u.neg().exp()).scale(-1.0 / 3.0)
+                }
+                DiffFamily::Gaussian => {
+                    u.mul(u).mul(&u.mul(u).neg().exp()).scale(-2.0)
+                }
+                DiffFamily::Cauchy => {
+                    let q = u.mul(u).add_scalar(1.0);
+                    u.mul(u).div(&q.mul(&q)).scale(-2.0)
+                }
+                DiffFamily::RationalQuadratic => {
+                    let q = u.mul(u).add_scalar(1.0);
+                    u.mul(u).mul(&q.powf(-1.5)).neg()
+                }
+                DiffFamily::CauchySquared => {
+                    let q = u.mul(u).add_scalar(1.0);
+                    u.mul(u).div(&q.powi(3)).scale(-4.0)
+                }
+            },
         }
     }
 
@@ -188,10 +309,13 @@ impl Family {
                 Laurent::monomial(m1(), -2),
             )),
             // No Laurent q: rational functions and the oscillatory kernel.
+            // Derivative profiles always take the generic jet path — their
+            // far-field cost is identical and no consumer compresses them.
             Family::Cauchy
             | Family::RationalQuadratic
             | Family::OscillatoryCoulomb
-            | Family::CauchySquared => None,
+            | Family::CauchySquared
+            | Family::ScaleDeriv(_) => None,
         }
     }
 
@@ -212,11 +336,15 @@ impl Family {
             Family::ExpInvR => "exp_inv_r".into(),
             Family::ExpInvR2 => "exp_inv_r2".into(),
             Family::CauchySquared => "cauchy_sq".into(),
+            Family::ScaleDeriv(b) => format!("{}_dlogs", b.base().name()),
         }
     }
 
     /// Parse a family name (inverse of [`Family::name`]).
     pub fn from_name(name: &str) -> Option<Family> {
+        if let Some(base) = name.strip_suffix("_dlogs") {
+            return Family::from_name(base)?.scale_derivative();
+        }
         Some(match name {
             "exponential" | "matern12" | "exp" => Family::Exponential,
             "matern32" => Family::Matern32,
@@ -316,6 +444,14 @@ impl Kernel {
     #[inline]
     pub fn eval_points(&self, x: &[f64], y: &[f64]) -> f64 {
         self.eval(crate::linalg::vecops::dist2(x, y).sqrt())
+    }
+
+    /// The kernel's `∂/∂log(scale)` derivative as a kernel over the *same*
+    /// coordinates: `∂K/∂log s` evaluated at distance `r` equals
+    /// `Kernel { family: ScaleDeriv(..), scale: s }.eval(r)`. `None` when
+    /// the family has no derivative surface ([`Family::scale_derivative`]).
+    pub fn scale_derivative(&self) -> Option<Kernel> {
+        self.family.scale_derivative().map(|family| Kernel { family, scale: self.scale })
     }
 
     /// All canonical derivatives `K⁽ᵐ⁾(u)` for `m = 0..=order` at scaled
@@ -455,6 +591,61 @@ mod tests {
                 assert!(v > 0.0 && v < prev, "{fam:?} at {u}");
                 prev = v;
             }
+        }
+    }
+
+    #[test]
+    fn scale_derivative_matches_finite_difference_in_log_scale() {
+        // ∂/∂log s of B(s·r) is ScaleDeriv(B) evaluated at the same (s, r).
+        let h = 1e-6;
+        let (s, r) = (1.3, 0.9);
+        for b in DiffFamily::all() {
+            let base = b.base();
+            let deriv = base.scale_derivative().expect("smooth family");
+            let fd = (base.eval(s * h.exp() * r) - base.eval(s * (-h).exp() * r)) / (2.0 * h);
+            let v = deriv.eval(s * r);
+            assert!(
+                (v - fd).abs() < 1e-7 * (1.0 + fd.abs()),
+                "{b:?}: {v} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_derivative_surface_basics() {
+        for b in DiffFamily::all() {
+            let fam = Family::ScaleDeriv(b);
+            // Diagonal: ∂/∂log s of the constant B(0) is 0.
+            assert_eq!(fam.value_at_zero(), 0.0, "{b:?}");
+            assert!(!fam.singular_at_origin(), "{b:?}");
+            assert!(fam.symbolic().is_none(), "{b:?} takes the generic path");
+            // Name roundtrip ("<base>_dlogs").
+            assert_eq!(Family::from_name(&fam.name()), Some(fam), "{b:?}");
+            // Derivative-of-derivative is not offered.
+            assert_eq!(fam.scale_derivative(), None, "{b:?}");
+        }
+        // Singular families have no derivative surface.
+        for fam in [Family::Coulomb, Family::ExpOverR, Family::OscillatoryCoulomb] {
+            assert_eq!(fam.scale_derivative(), None, "{fam:?}");
+        }
+        // Kernel-level mapping keeps the coordinate scale.
+        let k = Kernel::matern32(0.4);
+        let d = k.scale_derivative().expect("matern32 differentiates");
+        assert_eq!(d.scale, k.scale);
+        assert_eq!(d.family, Family::ScaleDeriv(DiffFamily::Matern32));
+    }
+
+    #[test]
+    fn scale_derivative_jets_match_finite_differences() {
+        let h = 1e-5;
+        for b in DiffFamily::all() {
+            let fam = Family::ScaleDeriv(b);
+            let u0 = 1.1;
+            let d = Kernel::canonical(fam).derivatives_canonical(u0, 2);
+            let f = |u: f64| fam.eval(u);
+            assert!((d[0] - f(u0)).abs() < 1e-12, "{b:?} value");
+            let fd1 = (f(u0 + h) - f(u0 - h)) / (2.0 * h);
+            assert!((d[1] - fd1).abs() < 1e-6 * (1.0 + fd1.abs()), "{b:?} d1: {} vs {fd1}", d[1]);
         }
     }
 

@@ -330,6 +330,246 @@ pub fn preconditioned_cg(
     CgResult { x, iterations: iters, rel_residual: res, converged: res <= tol }
 }
 
+/// Result of a batched (multi-RHS) conjugate-gradient solve: `m` systems
+/// sharing one operator, solved in lockstep so every iteration costs one
+/// batched MVM instead of `m` single-RHS traversals.
+#[derive(Clone, Debug)]
+pub struct BatchCgResult {
+    /// Column-major solutions: column `c` occupies `x[c*n..(c+1)*n]`.
+    pub x: Vec<f64>,
+    /// Per-column iteration counts (columns stop updating once converged).
+    pub iterations: Vec<usize>,
+    /// Per-column final relative residuals ‖b − Ax‖/‖b‖.
+    pub rel_residual: Vec<f64>,
+    /// Per-column convergence flags.
+    pub converged: Vec<bool>,
+    /// Batched MVMs the whole solve cost (= the slowest column's
+    /// iteration count) — the number the batching win is measured by.
+    pub batched_mvms: usize,
+}
+
+impl BatchCgResult {
+    /// Whether every column met the tolerance.
+    pub fn all_converged(&self) -> bool {
+        self.converged.iter().all(|&c| c)
+    }
+
+    /// Borrow column `c` of the solution block.
+    pub fn column(&self, c: usize) -> &[f64] {
+        let n = self.x.len() / self.iterations.len().max(1);
+        &self.x[c * n..(c + 1) * n]
+    }
+}
+
+/// Batched preconditioned conjugate gradients: solves `A x_c = b_c` for
+/// `m` column-major right-hand sides against ONE symmetric positive-
+/// definite operator. `apply_batch` maps an `n·m` column-major block
+/// through `A` (one fused traversal for fast operators — the whole point);
+/// `precond_batch` applies an approximate `A⁻¹` column-wise (e.g. the GP's
+/// leaf-block Jacobi factors, built once and reused across every column).
+///
+/// Each column runs the *same* recurrence as [`preconditioned_cg`] with its
+/// own scalars (α_c, β_c) and stops updating once its residual meets
+/// `tol`; converged columns ride along as zeroed directions so the batch
+/// shape never changes. Column `c` of the result therefore matches a
+/// looped single-RHS CG on `b_c` to round-off — property-tested in
+/// `session` — while the operator cost drops from `Σ_c iters_c` traversals
+/// to `max_c iters_c` batched ones.
+pub fn preconditioned_cg_batch(
+    apply_batch: &mut dyn FnMut(&[f64]) -> Vec<f64>,
+    precond_batch: &mut dyn FnMut(&[f64]) -> Vec<f64>,
+    b: &[f64],
+    m: usize,
+    tol: f64,
+    max_iters: usize,
+) -> BatchCgResult {
+    assert!(m > 0, "batched solve needs at least one column");
+    assert_eq!(b.len() % m, 0, "rhs block shape mismatch");
+    let n = b.len() / m;
+    let col = |c: usize| c * n..(c + 1) * n;
+    let mut bnorm = vec![0.0; m];
+    let mut active = vec![false; m];
+    let mut iterations = vec![0usize; m];
+    let mut rel_residual = vec![0.0; m];
+    let mut converged = vec![false; m];
+    let mut x = vec![0.0; n * m];
+    let mut r = b.to_vec();
+    for c in 0..m {
+        bnorm[c] = vecops::norm2(&b[col(c)]);
+        if bnorm[c] == 0.0 {
+            converged[c] = true; // x stays zero
+        } else {
+            active[c] = true;
+        }
+    }
+    let mut z = precond_batch(&r);
+    // Inert columns must contribute zero directions from the start.
+    for c in 0..m {
+        if !active[c] {
+            z[col(c)].fill(0.0);
+        }
+    }
+    let mut p = z.clone();
+    let mut rz = vec![0.0; m];
+    for c in 0..m {
+        if active[c] {
+            rz[c] = vecops::dot(&r[col(c)], &z[col(c)]);
+        }
+    }
+    let mut batched_mvms = 0;
+    // Columns freeze themselves on convergence, breakdown, or hitting
+    // `max_iters`, so the loop terminates when the slowest column does.
+    while active.iter().any(|&a| a) {
+        let ap = apply_batch(&p);
+        batched_mvms += 1;
+        let mut any_needs_precond = false;
+        for c in 0..m {
+            if !active[c] {
+                continue;
+            }
+            let denom = vecops::dot(&p[col(c)], &ap[col(c)]);
+            if denom.abs() < f64::MIN_POSITIVE {
+                // Breakdown: freeze this column at its current iterate.
+                active[c] = false;
+                rel_residual[c] = vecops::norm2(&r[col(c)]) / bnorm[c];
+                converged[c] = rel_residual[c] <= tol;
+                p[col(c)].fill(0.0);
+                r[col(c)].fill(0.0); // all-zero ⇒ preconditioners may skip it
+                continue;
+            }
+            let alpha = rz[c] / denom;
+            {
+                let (xs, ps) = (&mut x[col(c)], &p[col(c)]);
+                vecops::axpy(alpha, ps, xs);
+            }
+            {
+                let (rs, aps) = (&mut r[col(c)], &ap[col(c)]);
+                vecops::axpy(-alpha, aps, rs);
+            }
+            iterations[c] += 1;
+            let rnorm = vecops::norm2(&r[col(c)]);
+            if rnorm <= tol * bnorm[c] {
+                active[c] = false;
+                rel_residual[c] = rnorm / bnorm[c];
+                converged[c] = true;
+                p[col(c)].fill(0.0);
+                r[col(c)].fill(0.0);
+            } else if iterations[c] >= max_iters {
+                active[c] = false;
+                rel_residual[c] = rnorm / bnorm[c];
+                converged[c] = rel_residual[c] <= tol;
+                p[col(c)].fill(0.0);
+                r[col(c)].fill(0.0);
+            } else {
+                any_needs_precond = true;
+            }
+        }
+        if !any_needs_precond {
+            continue; // every column finished (or broke down) this round
+        }
+        z = precond_batch(&r);
+        for c in 0..m {
+            if !active[c] {
+                continue;
+            }
+            let rz_new = vecops::dot(&r[col(c)], &z[col(c)]);
+            let beta = rz_new / rz[c];
+            for (pi, &zi) in p[col(c)].iter_mut().zip(&z[col(c)]) {
+                *pi = zi + beta * *pi;
+            }
+            rz[c] = rz_new;
+        }
+    }
+    BatchCgResult { x, iterations, rel_residual, converged, batched_mvms }
+}
+
+/// Eigendecomposition of a symmetric tridiagonal matrix (implicit-shift QL,
+/// the EISPACK `tql2` recurrence) returning the eigenvalues **and the first
+/// component of each eigenvector** — exactly what stochastic Lanczos
+/// quadrature consumes: `zᵀ f(A) z ≈ ‖z‖² Σ_k τ_k² f(λ_k)` with
+/// `τ_k = v_k[0]`. Tracking only the first row of the rotation product
+/// keeps the cost at O(iters·n) instead of O(n³).
+///
+/// `diag` has length `n`, `offdiag` length `n − 1` (coupling `i ↔ i+1`).
+/// Eigenvalues are returned in ascending order.
+pub fn symtridiag_eigen(diag: &[f64], offdiag: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = diag.len();
+    assert!(n > 0, "empty tridiagonal");
+    assert_eq!(offdiag.len() + 1, n, "offdiagonal length mismatch");
+    let mut d = diag.to_vec();
+    // Work copy with a trailing 0 sentinel (the classical formulation).
+    let mut e = vec![0.0; n];
+    e[..n - 1].copy_from_slice(offdiag);
+    // First row of the accumulated eigenvector matrix (starts at e₁ᵀ).
+    let mut tau = vec![0.0; n];
+    tau[0] = 1.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find the first negligible off-diagonal at or after l.
+            let mut mm = l;
+            while mm + 1 < n {
+                let dd = d[mm].abs() + d[mm + 1].abs();
+                if e[mm].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                mm += 1;
+            }
+            if mm == l {
+                break; // d[l] converged
+            }
+            iter += 1;
+            assert!(iter <= 50, "symtridiag_eigen failed to converge");
+            // Wilkinson shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[mm] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            let mut i = mm;
+            let mut deflated = false;
+            while i > l {
+                i -= 1;
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    // Premature deflation: undo the shift and restart the
+                    // search for a negligible off-diagonal.
+                    d[i + 1] -= p;
+                    e[mm] = 0.0;
+                    deflated = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Apply the rotation to the tracked first row only.
+                f = tau[i + 1];
+                tau[i + 1] = s * tau[i] + c * f;
+                tau[i] = c * tau[i] - s * f;
+            }
+            if deflated {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[mm] = 0.0;
+        }
+    }
+    // Sort ascending, carrying the first components along.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let evals: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let firsts: Vec<f64> = order.iter().map(|&i| tau[i]).collect();
+    (evals, firsts)
+}
+
 /// Cholesky factorization A = L Lᵀ (lower triangular), for SPD matrices.
 /// Small-scale exact reference used in GP tests; returns None if not SPD.
 pub fn cholesky(a: &Mat) -> Option<Mat> {
@@ -529,6 +769,117 @@ mod tests {
         let res = conjugate_gradient(&mut apply, &[0.0, 0.0], 1e-10, 10);
         assert!(res.converged);
         assert_eq!(res.x, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn batched_cg_matches_looped_cg_per_column() {
+        // Each column of the lockstep batch must reproduce its own
+        // single-RHS preconditioned CG to round-off, including columns
+        // that converge at different iteration counts.
+        let mut rng = Pcg32::seeded(31);
+        let n = 40;
+        let m = 4;
+        let b_mat = Mat::from_vec(n, n, rng.normal_vec(n * n));
+        let mut a = b_mat.gemm(&b_mat.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        // Jacobi preconditioner (diagonal) to exercise the precond path.
+        let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+        let mut rhs = rng.normal_vec(n * m);
+        // Scale columns very differently so iteration counts differ.
+        for c in 0..m {
+            for v in &mut rhs[c * n..(c + 1) * n] {
+                *v *= 10f64.powi(c as i32);
+            }
+        }
+        // One column all-zero: must come back converged with zero x.
+        rhs[2 * n..3 * n].fill(0.0);
+        let mut apply_b = |v: &[f64]| -> Vec<f64> {
+            let mut out = vec![0.0; v.len()];
+            for c in 0..v.len() / n {
+                out[c * n..(c + 1) * n].copy_from_slice(&a.matvec(&v[c * n..(c + 1) * n]));
+            }
+            out
+        };
+        let mut pre_b = |v: &[f64]| -> Vec<f64> {
+            v.iter().enumerate().map(|(i, x)| x / diag[i % n]).collect()
+        };
+        let res = preconditioned_cg_batch(&mut apply_b, &mut pre_b, &rhs, m, 1e-10, 200);
+        assert!(res.all_converged());
+        assert_eq!(res.x[2 * n..3 * n], vec![0.0; n][..]);
+        assert_eq!(res.iterations[2], 0);
+        for c in 0..m {
+            let mut apply = |v: &[f64]| a.matvec(v);
+            let mut pre = |v: &[f64]| -> Vec<f64> {
+                v.iter().zip(&diag).map(|(x, d)| x / d).collect()
+            };
+            let single = preconditioned_cg(&mut apply, &mut pre, &rhs[c * n..(c + 1) * n], 1e-10, 200);
+            assert_eq!(res.iterations[c], single.iterations, "col {c} iteration count");
+            for i in 0..n {
+                let (bx, sx) = (res.x[c * n + i], single.x[i]);
+                assert!(
+                    (bx - sx).abs() <= 1e-12 * (1.0 + sx.abs()),
+                    "col {c} i={i}: {bx} vs {sx}"
+                );
+            }
+        }
+        // The batch cost is the slowest column, not the sum.
+        let max_it = *res.iterations.iter().max().unwrap();
+        assert_eq!(res.batched_mvms, max_it);
+    }
+
+    #[test]
+    fn symtridiag_eigen_known_cases() {
+        // 1×1 and 2×2 closed forms.
+        let (ev, tau) = symtridiag_eigen(&[3.0], &[]);
+        assert!((ev[0] - 3.0).abs() < 1e-14);
+        assert!((tau[0].abs() - 1.0).abs() < 1e-14);
+        // [[2, 1], [1, 2]] → λ = 1, 3; eigvecs (1,∓1)/√2.
+        let (ev, tau) = symtridiag_eigen(&[2.0, 2.0], &[1.0]);
+        assert!((ev[0] - 1.0).abs() < 1e-12 && (ev[1] - 3.0).abs() < 1e-12);
+        assert!((tau[0] * tau[0] - 0.5).abs() < 1e-12);
+        assert!((tau[1] * tau[1] - 0.5).abs() < 1e-12);
+        // Discrete Laplacian tridiag(−1, 2, −1): λ_k = 2 − 2cos(kπ/(n+1)),
+        // first components τ_k² = 2 sin²(kπ/(n+1))/(n+1).
+        let n = 12;
+        let d = vec![2.0; n];
+        let e = vec![-1.0; n - 1];
+        let (ev, tau) = symtridiag_eigen(&d, &e);
+        for k in 1..=n {
+            let th = k as f64 * std::f64::consts::PI / (n as f64 + 1.0);
+            let lam = 2.0 - 2.0 * th.cos();
+            assert!((ev[k - 1] - lam).abs() < 1e-10, "λ_{k}: {} vs {lam}", ev[k - 1]);
+            let t2 = 2.0 * th.sin().powi(2) / (n as f64 + 1.0);
+            assert!(
+                (tau[k - 1] * tau[k - 1] - t2).abs() < 1e-10,
+                "τ²_{k}: {} vs {t2}",
+                tau[k - 1] * tau[k - 1]
+            );
+        }
+    }
+
+    #[test]
+    fn symtridiag_eigen_quadrature_moments() {
+        // Gauss-quadrature moment identities of the weight vector e₁:
+        // Σ τ² = 1, Σ τ²λ = T₁₁, Σ τ²λ² = T₁₁² + T₁₂² — for random T.
+        let mut rng = Pcg32::seeded(33);
+        for n in [1usize, 2, 3, 8, 25] {
+            let d = rng.normal_vec(n);
+            let e = rng.normal_vec(n.saturating_sub(1));
+            let (ev, tau) = symtridiag_eigen(&d, &e);
+            let m0: f64 = tau.iter().map(|t| t * t).sum();
+            let m1: f64 = tau.iter().zip(&ev).map(|(t, l)| t * t * l).sum();
+            let m2: f64 = tau.iter().zip(&ev).map(|(t, l)| t * t * l * l).sum();
+            assert!((m0 - 1.0).abs() < 1e-10, "n={n} m0={m0}");
+            assert!((m1 - d[0]).abs() < 1e-9 * (1.0 + d[0].abs()), "n={n}");
+            let expect2 = d[0] * d[0] + if n > 1 { e[0] * e[0] } else { 0.0 };
+            assert!((m2 - expect2).abs() < 1e-8 * (1.0 + expect2.abs()), "n={n}");
+            // Eigenvalues ascend.
+            for k in 1..n {
+                assert!(ev[k] >= ev[k - 1] - 1e-12);
+            }
+        }
     }
 
     #[test]

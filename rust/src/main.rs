@@ -4,6 +4,8 @@
 //!   info                     environment/artifact/runtime diagnostics
 //!   mvm    [--n --d --tol …]  one fast MVM with accuracy + timing report
 //!   gp     [--n …]           GP regression on the simulated SST workload
+//!   gp-train [--n --iters …] GP hyperparameter training (LML ascent
+//!                            through batched MVM/solve verbs)
 //!   tsne   [--n …]           t-SNE embedding of the MNIST surrogate
 //!   plan   [--n …]           print the far/near plan statistics
 //!
@@ -32,6 +34,7 @@ fn main() {
         "mvm" => mvm(&args),
         "plan" => plan(&args),
         "gp" => gp(&args),
+        "gp-train" => gp_train(&args),
         "tsne" => tsne(&args),
         other => {
             eprintln!("unknown subcommand {other:?}; see `fkt info`");
@@ -41,11 +44,23 @@ fn main() {
 }
 
 fn session_from(args: &Args) -> Session {
+    // 64 is the library's own registry default; subcommands that churn
+    // operators pass something smaller.
+    session_with_capacity(args, 64)
+}
+
+/// Shared session construction: `--threads N` (0/absent ⇒ all cores,
+/// resolved by the coordinator) governs single and batched MVMs alike,
+/// `--backend` picks the near-field path, and `--registry-cap` overrides
+/// the subcommand's default operator-LRU size.
+fn session_with_capacity(args: &Args, default_capacity: usize) -> Session {
     let backend =
         Backend::from_name(&args.get_str("backend", "auto")).unwrap_or(Backend::Auto);
-    // `--threads N` (0/absent ⇒ all cores, resolved by the coordinator)
-    // governs single and batched MVMs alike.
-    Session::builder().threads(args.threads()).backend(backend).build()
+    Session::builder()
+        .threads(args.threads())
+        .backend(backend)
+        .registry_capacity(args.get("registry-cap", default_capacity))
+        .build()
 }
 
 fn info() {
@@ -198,7 +213,7 @@ fn gp(args: &Args) {
         precondition: true,
     };
     let mut session = session_from(args);
-    let gp = GpRegressor::new(
+    let mut gp = GpRegressor::new(
         &mut session,
         ds.unit_sphere_points(),
         ds.noise_variances(),
@@ -215,6 +230,93 @@ fn gp(args: &Args) {
         fit.iterations,
         fit.rel_residual,
         fmt_time(t0.elapsed().as_secs_f64())
+    );
+}
+
+/// GP hyperparameter training on the simulated SST workload: projected
+/// Adam ascent of the log marginal likelihood over (log scale, log σ_n²),
+/// every iteration one batched solve + O(1) batched derivative MVMs.
+fn gp_train(args: &Args) {
+    use fkt::data::sst;
+    use fkt::fkt::FktConfig;
+    use fkt::gp::{GpConfig, GpRegressor, TrainOpts};
+    let n: usize = args.get("n", 10000);
+    let rho0: f64 = args.get("rho0", 0.45);
+    let noise0: f64 = args.get("noise0", 0.1);
+    let mut rng = Pcg32::seeded(args.get("seed", 17));
+    let ds = sst::simulate(7.0, n, &mut rng);
+    let y = ds.temperatures();
+    let mean_y: f64 = y.iter().sum::<f64>() / y.len() as f64;
+    let y0: Vec<f64> = y.iter().map(|v| v - mean_y).collect();
+    let cfg = GpConfig {
+        fkt: FktConfig {
+            p: args.get("p", 4),
+            theta: args.get("theta", 0.6),
+            leaf_capacity: args.get("leaf", 256),
+            ..Default::default()
+        },
+        tolerance: args.tolerance(),
+        cg_tol: args.get("cg-tol", 1e-4),
+        cg_max_iters: args.get("cg-max", 200),
+        jitter: 1e-8,
+        precondition: true,
+    };
+    let opts = TrainOpts {
+        iters: args.get("iters", 20),
+        lr: args.get("lr", 0.15),
+        probes: args.get("probes", 8),
+        lanczos_steps: args.get("lanczos", 30),
+        seed: args.get("probe-seed", 0x5eed),
+        track_lml: args.has_flag("track-lml"),
+        ..Default::default()
+    };
+    // Training churns operators (every scale step is a new registry key);
+    // bound the LRU so dead trees and panels don't accumulate.
+    let mut session = session_with_capacity(args, 4);
+    let mut gp = GpRegressor::new(
+        &mut session,
+        ds.unit_sphere_points(),
+        vec![noise0; n],
+        Kernel::matern32(rho0),
+        cfg,
+    );
+    println!(
+        "gp-train: N={n}, Matérn-3/2, ρ₀={rho0}, σ_n²₀={noise0}, {} iterations, {} probes",
+        opts.iters, opts.probes
+    );
+    let t0 = Instant::now();
+    let res = gp.train(&mut session, &y0, &opts);
+    let total = t0.elapsed().as_secs_f64();
+    for (i, step) in res.trace.iter().enumerate() {
+        if i % 5 == 0 || i + 1 == res.trace.len() {
+            let rho = 3f64.sqrt() / step.scale;
+            match step.lml {
+                Some(l) => println!(
+                    "  iter {i:>3}: ρ={rho:.4} σ_n²={:.4} LML={l:.2} (cg {} iters)",
+                    step.noise_var, step.solve_iterations
+                ),
+                None => println!(
+                    "  iter {i:>3}: ρ={rho:.4} σ_n²={:.4} ∇=({:+.3}, {:+.3}) (cg {} iters)",
+                    step.noise_var,
+                    step.grad_log_scale,
+                    step.grad_log_noise,
+                    step.solve_iterations
+                ),
+            }
+        }
+    }
+    let rho_hat = 3f64.sqrt() / res.kernel.scale;
+    println!(
+        "trained: ρ={rho_hat:.4} (scale {:.4}), σ_n²={:.4} — {} total, {} per iteration",
+        res.kernel.scale,
+        res.noise_var,
+        fmt_time(total),
+        fmt_time(total / res.iterations.max(1) as f64)
+    );
+    let c = session.counters();
+    println!(
+        "session verbs: {} batched solves, {} batched MVMs, {} single MVMs",
+        c.solve_batch, c.mvm_batch, c.mvm
     );
 }
 

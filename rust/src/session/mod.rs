@@ -23,10 +23,15 @@
 //! let sol = session.solve(&op, &y, &SolveOpts::default()); // CG solve
 //! ```
 //!
-//! Three verbs cover every workload in the crate: [`Session::mvm`] /
-//! [`Session::mvm_batch`] for products, and [`Session::solve`] for the
-//! linear systems GP regression needs — promoted to a first-class verb so
-//! "apply the inverse" is as ordinary as "apply the matrix".
+//! Four verbs cover every workload in the crate: [`Session::mvm`] /
+//! [`Session::mvm_batch`] for products, and [`Session::solve`] /
+//! [`Session::solve_batch`] for the linear systems GP regression and
+//! training need — promoted to first-class verbs so "apply the inverse"
+//! is as ordinary as "apply the matrix". The batched solve runs `m`
+//! right-hand sides in one lockstep block-CG whose every iteration is a
+//! single fused traversal, sharing one leaf-block-Jacobi factorization
+//! across all columns — the workhorse behind `gp::train`'s
+//! Hutchinson-probe estimators.
 //!
 //! Requests are expressed through the [`OpSpec`] builder. Its headline
 //! knob is `.tolerance(ε)`: instead of hand-picking `(p, θ)` the caller
@@ -48,7 +53,10 @@ use crate::baselines::DenseOperator;
 use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::fkt::{ExpansionCenter, FktConfig, FktOperator};
 use crate::kernels::{Family, Kernel};
-use crate::linalg::{cholesky, cholesky_solve, preconditioned_cg, CgResult, Mat};
+use crate::linalg::{
+    cholesky, cholesky_solve, preconditioned_cg, preconditioned_cg_batch, BatchCgResult,
+    CgResult, Mat,
+};
 use crate::op::KernelOp;
 use crate::points::Points;
 use registry::{fingerprint, OpKey, Registry};
@@ -109,6 +117,7 @@ impl SessionBuilder {
             }),
             registry: Registry::new(self.registry_capacity),
             tune_cache: HashMap::new(),
+            counters: SessionCounters::default(),
         }
     }
 }
@@ -119,6 +128,25 @@ pub struct Session {
     coord: Coordinator,
     registry: Registry,
     tune_cache: HashMap<TuneKey, Resolved>,
+    counters: SessionCounters,
+}
+
+/// Cumulative per-verb call counters. These are the session's observable
+/// request log: consumers assert efficiency invariants against them (e.g.
+/// "repeated GP predictions trigger zero additional solves", "one training
+/// iteration issues at most two batched solves") without instrumenting the
+/// operators themselves. Internal MVMs performed *inside* a solve are not
+/// double-counted as `mvm` calls.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionCounters {
+    /// [`Session::mvm`] calls.
+    pub mvm: u64,
+    /// [`Session::mvm_batch`] calls.
+    pub mvm_batch: u64,
+    /// [`Session::solve`] calls.
+    pub solve: u64,
+    /// [`Session::solve_batch`] calls.
+    pub solve_batch: u64,
 }
 
 /// Identity of one tolerance resolution: kernel × dimension × ε × the
@@ -157,6 +185,7 @@ impl Session {
 
     /// Single-RHS product `z = K · w` through the configured backend.
     pub fn mvm(&mut self, op: &OpHandle, w: &[f64]) -> Vec<f64> {
+        self.counters.mvm += 1;
         self.coord.mvm(op.op.as_ref(), w)
     }
 
@@ -164,6 +193,7 @@ impl Session {
     /// (`w[c*n..(c+1)*n]` is column c) — fused backends share one
     /// traversal across all columns.
     pub fn mvm_batch(&mut self, op: &OpHandle, w: &[f64], m: usize) -> Vec<f64> {
+        self.counters.mvm_batch += 1;
         self.coord.mvm_batch(op.op.as_ref(), w, m)
     }
 
@@ -181,6 +211,7 @@ impl Session {
             "solve needs a square operator (built without .targets(..))"
         );
         assert_eq!(y.len(), op.num_sources(), "right-hand side length mismatch");
+        self.counters.solve += 1;
         let zeros;
         let noise: &[f64] = match opts.noise {
             Some(n) => {
@@ -211,6 +242,77 @@ impl Session {
         }
         let mut identity = |r: &[f64]| r.to_vec();
         preconditioned_cg(&mut apply, &mut identity, y, opts.tol, opts.max_iters)
+    }
+
+    /// Batched first-class solve: `(K + diag(noise) + jitter·I) X = Y` for
+    /// `m` column-major right-hand sides in ONE lockstep block-CG run.
+    /// Every CG iteration costs a single [`Session::mvm_batch`]-style fused
+    /// traversal for all columns, and the leaf-block Jacobi preconditioner
+    /// is factorized ONCE and reused across every column and iteration —
+    /// this is what makes Hutchinson-probe workloads (GP hyperparameter
+    /// training solves `[y, z₁ … z_P]` together) cost barely more than a
+    /// single solve. Column `c` of the result matches `solve` on column `c`
+    /// to round-off.
+    pub fn solve_batch(
+        &mut self,
+        op: &OpHandle,
+        y: &[f64],
+        m: usize,
+        opts: &SolveOpts,
+    ) -> BatchCgResult {
+        assert!(
+            op.is_square(),
+            "solve_batch needs a square operator (built without .targets(..))"
+        );
+        assert!(m > 0, "solve_batch needs at least one column");
+        let n = op.num_sources();
+        assert_eq!(y.len(), n * m, "right-hand side block shape mismatch");
+        self.counters.solve_batch += 1;
+        let zeros;
+        let noise: &[f64] = match opts.noise {
+            Some(nz) => {
+                assert_eq!(nz.len(), n, "noise diagonal length mismatch");
+                nz
+            }
+            None => {
+                zeros = vec![0.0; n];
+                &zeros
+            }
+        };
+        let jitter = opts.jitter;
+        let coord = &mut self.coord;
+        let kernel_op = op.op.as_ref();
+        let mut apply = |v: &[f64]| -> Vec<f64> {
+            let mut kv = coord.mvm_batch(kernel_op, v, m);
+            for c in 0..m {
+                for i in 0..n {
+                    kv[c * n + i] += (noise[i] + jitter) * v[c * n + i];
+                }
+            }
+            kv
+        };
+        if opts.precondition {
+            if let Some(fkt) = op.as_fkt() {
+                // One factorization, every column, every iteration.
+                let pre = BlockJacobi::build(fkt, noise, jitter);
+                let mut precond = |r: &[f64]| pre.apply_batch(r, m);
+                return preconditioned_cg_batch(
+                    &mut apply,
+                    &mut precond,
+                    y,
+                    m,
+                    opts.tol,
+                    opts.max_iters,
+                );
+            }
+        }
+        let mut identity = |r: &[f64]| r.to_vec();
+        preconditioned_cg_batch(&mut apply, &mut identity, y, m, opts.tol, opts.max_iters)
+    }
+
+    /// Cumulative per-verb call counters (see [`SessionCounters`]).
+    pub fn counters(&self) -> SessionCounters {
+        self.counters
     }
 
     /// Metrics of the most recent `mvm`/`mvm_batch` (solves record their
@@ -670,6 +772,36 @@ impl BlockJacobi {
         }
         z
     }
+
+    /// Column-wise application to an `n·m` column-major block: the same
+    /// per-leaf Cholesky factors serve every column (the factorization is
+    /// the expensive part — substitutions are cheap), so a batched solve
+    /// pays the build once rather than once per right-hand side.
+    /// All-zero columns (the batched CG zeroes a column's residual when it
+    /// freezes) skip the substitutions entirely — their preimage is zero.
+    fn apply_batch(&self, r: &[f64], m: usize) -> Vec<f64> {
+        let n = r.len() / m;
+        let live: Vec<bool> = (0..m)
+            .map(|c| r[c * n..(c + 1) * n].iter().any(|&v| v != 0.0))
+            .collect();
+        let mut z = vec![0.0; r.len()];
+        let mut rl = Vec::new();
+        for (idx, l) in &self.blocks {
+            for c in 0..m {
+                if !live[c] {
+                    continue;
+                }
+                let col = &r[c * n..(c + 1) * n];
+                rl.clear();
+                rl.extend(idx.iter().map(|&i| col[i]));
+                let sol = cholesky_solve(l, &rl);
+                for (slot, &i) in idx.iter().enumerate() {
+                    z[c * n + i] = sol[slot];
+                }
+            }
+        }
+        z
+    }
 }
 
 #[cfg(test)]
@@ -935,6 +1067,73 @@ mod tests {
             let e = rel_err(&sol.x, &oracle);
             assert!(e < 1e-3, "precondition={precondition}: rel err {e}");
         }
+    }
+
+    #[test]
+    fn solve_batch_columns_match_looped_solve() {
+        // The tentpole equivalence: each column of one batched solve must
+        // match its own single-RHS session solve to ≤ 1e-10, with and
+        // without the (shared) block-Jacobi preconditioner.
+        // Single-threaded, solidly conditioned (noise ≥ 0.3) so both runs
+        // sit deep inside CG's convergent regime and the only perturbation
+        // between them is the fused-vs-single MVM round-off (≤ 1e-12).
+        let n = 250;
+        let m = 5;
+        let pts = uniform_points(n, 2, 730);
+        let mut rng = Pcg32::seeded(731);
+        let ys = rng.normal_vec(n * m);
+        let noise: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.3, 0.5)).collect();
+        let kernel = Kernel::matern32(0.4);
+        let mut session = Session::native(1);
+        let h = session
+            .operator(&pts)
+            .scaled_kernel(kernel)
+            .order(6)
+            .theta(0.4)
+            .leaf_capacity(32)
+            .build();
+        for precondition in [true, false] {
+            let opts = SolveOpts {
+                tol: 1e-11,
+                max_iters: 400,
+                jitter: 1e-8,
+                noise: Some(&noise),
+                precondition,
+            };
+            let batch = session.solve_batch(&h, &ys, m, &opts);
+            assert!(batch.all_converged(), "precondition={precondition}");
+            for c in 0..m {
+                let single = session.solve(&h, &ys[c * n..(c + 1) * n], &opts);
+                assert!(single.converged);
+                for i in 0..n {
+                    let (b, s) = (batch.x[c * n + i], single.x[i]);
+                    assert!(
+                        (b - s).abs() <= 1e-10 * (1.0 + s.abs()),
+                        "precondition={precondition} col={c} i={i}: {b} vs {s}"
+                    );
+                }
+            }
+            // The whole batch cost one fused traversal per CG iteration,
+            // not one per (column × iteration).
+            let max_iters_taken = *batch.iterations.iter().max().unwrap();
+            assert_eq!(batch.batched_mvms, max_iters_taken, "precondition={precondition}");
+        }
+    }
+
+    #[test]
+    fn session_counters_record_each_verb() {
+        let pts = uniform_points(150, 2, 732);
+        let mut rng = Pcg32::seeded(733);
+        let w = rng.normal_vec(150 * 2);
+        let mut session = Session::native(1);
+        assert_eq!(session.counters(), SessionCounters::default());
+        let h = session.operator(&pts).kernel(Family::Gaussian).order(3).theta(0.5).build();
+        let _ = session.mvm(&h, &w[..150]);
+        let _ = session.mvm_batch(&h, &w, 2);
+        let _ = session.solve(&h, &w[..150], &SolveOpts::default());
+        let _ = session.solve_batch(&h, &w, 2, &SolveOpts::default());
+        let c = session.counters();
+        assert_eq!((c.mvm, c.mvm_batch, c.solve, c.solve_batch), (1, 1, 1, 1));
     }
 
     #[test]

@@ -30,29 +30,37 @@ use crate::points::Points;
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// Two-lane word-wise hash over the point set: dimension, count, and the
-/// bit pattern of every coordinate. Lane 1 is FNV-1a (xor-then-multiply);
-/// lane 2 multiplies first and folds in a rotated word, so the lanes don't
-/// share collision structure. Two multiplies per u64 word keep the hash
-/// far cheaper than the O(N log N) operator build it guards. See the
-/// module docs for what this identity does and does not guarantee.
-pub fn fingerprint(points: &Points) -> u128 {
+/// Two-lane word-wise hash over an arbitrary u64 word stream. Lane 1 is
+/// FNV-1a (xor-then-multiply); lane 2 multiplies first and folds in a
+/// rotated word, so the lanes don't share collision structure. Two
+/// multiplies per word keep the hash far cheaper than the work it guards.
+/// This is the one hashing scheme behind every cache identity in the crate
+/// — the registry's dataset [`fingerprint`] and the GP's representer-
+/// weight `y`-fingerprint both feed it — so its mixing evolves in exactly
+/// one place. See the module docs for what this probabilistic identity
+/// does and does not guarantee.
+pub fn fingerprint_words(words: impl IntoIterator<Item = u64>) -> u128 {
     const OFFSET1: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME1: u64 = 0x0000_0100_0000_01b3;
     const OFFSET2: u64 = 0x6c62_272e_07bb_0142;
     const PRIME2: u64 = 0x9e37_79b9_7f4a_7c15;
     let mut h1 = OFFSET1;
     let mut h2 = OFFSET2;
-    let mut mix = |word: u64| {
+    for word in words {
         h1 = (h1 ^ word).wrapping_mul(PRIME1);
         h2 = h2.wrapping_mul(PRIME2) ^ word.rotate_left(32);
-    };
-    mix(points.d as u64);
-    mix(points.len() as u64);
-    for &c in &points.coords {
-        mix(c.to_bits());
     }
     ((h1 as u128) << 64) | h2 as u128
+}
+
+/// Dataset fingerprint: dimension, count, and the bit pattern of every
+/// coordinate through [`fingerprint_words`].
+pub fn fingerprint(points: &Points) -> u128 {
+    fingerprint_words(
+        [points.d as u64, points.len() as u64]
+            .into_iter()
+            .chain(points.coords.iter().map(|c| c.to_bits())),
+    )
 }
 
 /// Structural identity of one operator request. Configuration fields are

@@ -12,9 +12,10 @@
 use super::Tree;
 use crate::linalg::vecops;
 use crate::points::Points;
+use std::rc::Rc;
 
 /// Interaction lists for one node.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct NodeInteraction {
     /// Target indices judged far by eq. (2) at this node.
     pub far: Vec<u32>,
@@ -50,9 +51,15 @@ impl FarFieldPlan {
         let mut interactions: Vec<NodeInteraction> = vec![NodeInteraction::default(); nnodes];
         let mut far_pairs = 0usize;
         let mut near_pairs = 0usize;
-        // Depth-first with explicit stack carrying the candidate target set.
-        let all: Vec<u32> = (0..targets.len() as u32).collect();
-        let mut stack: Vec<(usize, Vec<u32>)> = vec![(0, all)];
+        // Depth-first with an explicit stack. Both children consume the
+        // same surviving candidate list, which is *shared* through an Rc
+        // instead of deep-cloned per internal node (the previous
+        // construction's `rest.clone()` was an O(N log N) redundant
+        // allocation per plan build). An explicit stack rather than
+        // recursion because the aspect-window-clamped splits do not bound
+        // the tree depth by log N on adversarial point sets.
+        let all: Rc<Vec<u32>> = Rc::new((0..targets.len() as u32).collect());
+        let mut stack: Vec<(usize, Rc<Vec<u32>>)> = vec![(0, all)];
         while let Some((id, cand)) = stack.pop() {
             let node = &tree.nodes[id];
             let mut far = Vec::new();
@@ -60,7 +67,7 @@ impl FarFieldPlan {
             // Tightened criterion: a node containing a single point has
             // radius 0 and everything (except coincident points) is far.
             let rad = node.radius;
-            for &t in &cand {
+            for &t in cand.iter() {
                 let tp = targets.point(t as usize);
                 let dist = vecops::dist2(tp, &node.center).sqrt();
                 if dist > 0.0 && rad / dist < theta {
@@ -73,7 +80,8 @@ impl FarFieldPlan {
             match node.children {
                 Some((l, r)) => {
                     interactions[id].far = far;
-                    stack.push((r, rest.clone()));
+                    let rest = Rc::new(rest);
+                    stack.push((r, Rc::clone(&rest)));
                     stack.push((l, rest));
                 }
                 None => {
@@ -259,6 +267,72 @@ mod tests {
         assert_eq!(lf + ln, 500 * 500);
         assert_eq!(tf + tn, 500 * 500);
         assert!(tf < lf, "tight θ must compress less mass");
+    }
+
+    /// The pre-refactor construction (explicit stack, `rest.clone()` per
+    /// internal node) — kept verbatim as the reference the allocation-free
+    /// rewrite must reproduce exactly.
+    fn build_reference(tree: &Tree, targets: &Points, theta: f64) -> FarFieldPlan {
+        let nnodes = tree.nodes.len();
+        let mut interactions: Vec<NodeInteraction> = vec![NodeInteraction::default(); nnodes];
+        let mut far_pairs = 0usize;
+        let mut near_pairs = 0usize;
+        let all: Vec<u32> = (0..targets.len() as u32).collect();
+        let mut stack: Vec<(usize, Vec<u32>)> = vec![(0, all)];
+        while let Some((id, cand)) = stack.pop() {
+            let node = &tree.nodes[id];
+            let mut far = Vec::new();
+            let mut rest = Vec::new();
+            let rad = node.radius;
+            for &t in &cand {
+                let tp = targets.point(t as usize);
+                let dist = vecops::dist2(tp, &node.center).sqrt();
+                if dist > 0.0 && rad / dist < theta {
+                    far.push(t);
+                } else {
+                    rest.push(t);
+                }
+            }
+            far_pairs += far.len();
+            match node.children {
+                Some((l, r)) => {
+                    interactions[id].far = far;
+                    stack.push((r, rest.clone()));
+                    stack.push((l, rest));
+                }
+                None => {
+                    near_pairs += rest.len();
+                    interactions[id].far = far;
+                    interactions[id].near = rest;
+                }
+            }
+        }
+        FarFieldPlan { interactions, theta, far_pairs, near_pairs }
+    }
+
+    #[test]
+    fn clone_free_build_equals_reference_construction() {
+        // Square and rectangular target sets, several θ/leaf shapes: the
+        // rewritten build must produce bit-identical interaction lists
+        // (same targets, same order) and identical pair counts.
+        for (n, m, d, theta, leaf, seed) in [
+            (300, 300, 2, 0.5, 16, 21),
+            (200, 90, 3, 0.75, 8, 22),
+            (150, 150, 2, 0.25, 32, 23),
+            (1, 5, 2, 0.5, 4, 24), // single-source degenerate tree
+        ] {
+            let src = uniform_points(n, d, seed);
+            let tgt = if n == m { src.clone() } else { uniform_points(m, d, seed + 100) };
+            let tree = Tree::build(&src, leaf);
+            let new = FarFieldPlan::build(&tree, &tgt, theta);
+            let old = build_reference(&tree, &tgt, theta);
+            assert_eq!(new.far_pairs, old.far_pairs);
+            assert_eq!(new.near_pairs, old.near_pairs);
+            assert_eq!(new.interactions.len(), old.interactions.len());
+            for (id, (a, b)) in new.interactions.iter().zip(&old.interactions).enumerate() {
+                assert_eq!(a, b, "node {id} interaction lists differ");
+            }
+        }
     }
 
     #[test]

@@ -226,7 +226,7 @@ fn solve_then_predict_gp_end_to_end() {
         ..Default::default()
     };
     let mut session = Session::native(1);
-    let gp = GpRegressor::new(
+    let mut gp = GpRegressor::new(
         &mut session,
         ds.unit_sphere_points(),
         ds.noise_variances(),
@@ -246,13 +246,61 @@ fn solve_then_predict_gp_end_to_end() {
     }
     assert!(se < 0.05 * base, "rmse ratio {}", (se / base).sqrt());
     // A second posterior mean over the same grid reuses both cached
-    // operators — only registry hits, no new builds.
+    // operators AND the cached representer weights — only registry hits,
+    // no new builds, ZERO additional solves.
     let misses_before = session.registry_stats().misses;
+    let solves_before = session.counters().solve;
     let res2 = gp.posterior_mean(&y0, &grid, &mut session);
     assert_eq!(session.registry_stats().misses, misses_before, "warm predict rebuilds nothing");
+    assert_eq!(session.counters().solve, solves_before, "warm predict re-solves nothing");
+    assert!(res2.cg.cached, "second fit served from the weight cache");
     for (a, b) in res.mean.iter().zip(&res2.mean) {
         assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()));
     }
+}
+
+#[test]
+fn gp_training_end_to_end_through_session_verbs() {
+    // Small end-to-end: train on synthetic Matérn-3/2 data, then predict
+    // with the trained regressor — all through one session, with the
+    // per-iteration cost invariants visible in the verb counters.
+    use fkt::fkt::FktConfig;
+    use fkt::gp::{GpConfig, GpRegressor, TrainOpts};
+    let mut rng = Pcg32::seeded(411);
+    let n = 400;
+    let pts = Points::new(2, rng.uniform_vec(n * 2, 0.0, 1.0));
+    // y from a smooth function + noise (length-scale ≈ 0.15 flavor).
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let p = pts.point(i);
+            (9.0 * p[0]).sin() * (7.0 * p[1]).cos() + 0.3 * rng.normal()
+        })
+        .collect();
+    let cfg = GpConfig {
+        fkt: FktConfig { p: 4, theta: 0.5, leaf_capacity: 48, ..Default::default() },
+        cg_tol: 1e-5,
+        cg_max_iters: 300,
+        jitter: 1e-8,
+        ..Default::default()
+    };
+    let mut session = Session::native(2);
+    let mut gp = GpRegressor::new(
+        &mut session,
+        pts.clone(),
+        vec![0.2; n],
+        Kernel::matern32(0.4),
+        cfg,
+    );
+    let c0 = session.counters();
+    let opts = TrainOpts { iters: 10, probes: 4, seed: 77, ..Default::default() };
+    let res = gp.train(&mut session, &y, &opts);
+    let c1 = session.counters();
+    assert_eq!(c1.solve_batch - c0.solve_batch, 10, "one batched solve per iteration");
+    assert_eq!(c1.solve, c0.solve, "no single-RHS solves on the training path");
+    assert!(res.kernel.scale > 0.0 && res.noise_var > 0.0);
+    // The trained regressor predicts through the refreshed operator.
+    let pred = gp.posterior_mean(&y, &pts, &mut session);
+    assert!(pred.cg.converged, "post-training fit converges");
 }
 
 #[test]
