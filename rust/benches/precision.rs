@@ -1,0 +1,155 @@
+//! Precision tiers: what f32 panel storage is worth on the apply path,
+//! and what mixed-precision refinement costs on the solve path.
+//!
+//! Measures, on a GP-style workload (Matérn-3/2, uniform hypersphere,
+//! N = 20k, d = 3 by default):
+//! * `f64_apply_seconds` / `f32_apply_seconds` — amortized apply time per
+//!   tier against materialized panels (the steady state CG sees);
+//! * `f32_vs_f64_apply_speedup` — the headline bandwidth win (panels and
+//!   near-field blocks at half width; acceptance bar ≥ 1.3×);
+//! * `f32_panel_bytes_ratio` — resident f32 panel bytes over f64 (≈ 0.5
+//!   by construction — asserted);
+//! * `refined_solve_sweeps` / `refined_solve_inner_iterations` — the
+//!   mixed-precision refined solve's cost against the f32 operator;
+//! * `f64_solve_iterations` — the pure-f64 solve it must match.
+//!
+//! All keys merge into BENCH.json via `BenchJson::save_merged`.
+//!
+//! ```text
+//! cargo bench --bench precision [-- --n 20000 --applies 20]
+//! ```
+
+use fkt::benchkit::{fmt_time, BenchJson, Table};
+use fkt::cli::Args;
+use fkt::kernels::Kernel;
+use fkt::rng::Pcg32;
+use fkt::session::{Precision, Session, SolveOpts};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n: usize = args.get("n", 20000);
+    let d: usize = args.get("d", 3);
+    let p: usize = args.get("p", 4);
+    let theta: f64 = args.get("theta", 0.5);
+    let leaf: usize = args.get("leaf", 256);
+    let applies: usize = args.get("applies", 20);
+    let mut rng = Pcg32::seeded(79);
+    let pts = fkt::data::uniform_hypersphere(n, d, &mut rng);
+    let w = rng.normal_vec(n);
+    let kernel = Kernel::matern32(1.0);
+    let mut session = Session::native(args.threads());
+    let mut json = BenchJson::new();
+
+    println!(
+        "Precision tiers: matern32, N={n}, d={d}, p={p}, θ={theta}, leaf={leaf}, \
+         {applies} applies per tier"
+    );
+
+    let tiered = |session: &mut Session, tier: Precision| {
+        session
+            .operator(&pts)
+            .scaled_kernel(kernel)
+            .order(p)
+            .theta(theta)
+            .leaf_capacity(leaf)
+            .precision(tier)
+            .build()
+    };
+    let op64 = tiered(&mut session, Precision::F64);
+    let op32 = tiered(&mut session, Precision::F32);
+
+    // Warm both tiers (materializes their panels), keeping the results
+    // for the cross-tier agreement smoke.
+    let z64 = session.mvm(&op64, &w);
+    let bytes64 = session.last_metrics().panel_bytes;
+    let streamed64 = session.last_metrics().panels_streamed;
+    let z32 = session.mvm(&op32, &w);
+    let bytes32 = session.last_metrics().panel_bytes;
+    let streamed32 = session.last_metrics().panels_streamed;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (a, b) in z32.iter().zip(&z64) {
+        num += (a - b) * (a - b);
+        den += b * b;
+    }
+    let tier_err = (num / den.max(1e-300)).sqrt();
+    assert!(tier_err <= 5e-6, "f32 vs f64 apply rel err {tier_err}");
+
+    // Amortized applies per tier: identical loop, panels resident.
+    let t0 = Instant::now();
+    for _ in 0..applies.max(1) {
+        std::hint::black_box(session.mvm(&op64, &w));
+    }
+    let f64_s = t0.elapsed().as_secs_f64() / applies.max(1) as f64;
+    let t1 = Instant::now();
+    for _ in 0..applies.max(1) {
+        std::hint::black_box(session.mvm(&op32, &w));
+    }
+    let f32_s = t1.elapsed().as_secs_f64() / applies.max(1) as f64;
+    let speedup = f64_s / f32_s;
+    let bytes_ratio = bytes32 as f64 / bytes64.max(1) as f64;
+    // Exactly 0.5 when both tiers cache every panel. A saturated budget
+    // legitimately drives the ratio toward 1.0 (the f32 tier admits more
+    // panels into the same bytes), so only assert in the uncapped regime.
+    if streamed64 == 0 && streamed32 == 0 {
+        assert!((bytes_ratio - 0.5).abs() < 0.05, "f32 residency must ~halve: {bytes_ratio}");
+    } else {
+        println!(
+            "panel budget saturated ({streamed64}/{streamed32} panels streamed per tier) — \
+             recording ratio {bytes_ratio:.2} without the 0.5 check"
+        );
+    }
+
+    // Solve comparison: the mixed-precision refined solve against the f32
+    // operator must reach the same residual tolerance as the pure-f64
+    // solve (GP representer-weight system; noise floor keeps κ sane).
+    let noise = vec![0.25; n];
+    let opts = SolveOpts {
+        tol: args.get("solve-tol", 1e-6),
+        max_iters: args.get("solve-max", 800),
+        jitter: 1e-8,
+        noise: Some(&noise),
+        precondition: true,
+    };
+    let t2 = Instant::now();
+    let pure = session.solve(&op64, &w, &opts);
+    let pure_s = t2.elapsed().as_secs_f64();
+    assert!(pure.converged, "f64 solve residual {}", pure.rel_residual);
+    let sweeps_before = session.counters().refine_sweeps;
+    let t3 = Instant::now();
+    let refined = session.solve(&op32, &w, &opts);
+    let refined_s = t3.elapsed().as_secs_f64();
+    let sweeps = session.counters().refine_sweeps - sweeps_before;
+    assert!(refined.converged, "refined solve residual {}", refined.rel_residual);
+    assert!(refined.rel_residual <= opts.tol);
+
+    let mut table = Table::new(&["quantity", "f64", "f32 tier"]);
+    table.row(&["amortized apply".into(), fmt_time(f64_s), fmt_time(f32_s)]);
+    table.row(&[
+        "panel bytes".into(),
+        format!("{bytes64}"),
+        format!("{bytes32} ({bytes_ratio:.2}x)"),
+    ]);
+    table.row(&[
+        "solve".into(),
+        format!("{} iters, {}", pure.iterations, fmt_time(pure_s)),
+        format!("{} iters / {sweeps} sweeps, {}", refined.iterations, fmt_time(refined_s)),
+    ]);
+    table.print();
+    println!("apply speedup: {speedup:.2}x; cross-tier apply rel err {tier_err:.2e}");
+
+    json.record("f64_apply_seconds", f64_s);
+    json.record("f32_apply_seconds", f32_s);
+    json.record("f32_vs_f64_apply_speedup", speedup);
+    json.record("f32_panel_bytes_ratio", bytes_ratio);
+    json.record("f64_solve_iterations", pure.iterations as f64);
+    json.record("refined_solve_inner_iterations", refined.iterations as f64);
+    json.record("refined_solve_sweeps", sweeps as f64);
+    json.record("f32_vs_f64_apply_rel_err", tier_err);
+    let path = BenchJson::default_path();
+    match json.save_merged(&path) {
+        Ok(()) => println!("\nBENCH json merged into {}", path.display()),
+        Err(e) => eprintln!("\nBENCH json write failed ({}): {e}", path.display()),
+    }
+}

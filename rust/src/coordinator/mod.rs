@@ -12,6 +12,7 @@
 //! * metrics — per-phase wall times and tile counts for EXPERIMENTS.md.
 
 use crate::fkt::FktOperator;
+use crate::linalg::Precision;
 use crate::op::KernelOp;
 use crate::runtime::Runtime;
 use std::time::Instant;
@@ -88,6 +89,11 @@ pub struct MvmMetrics {
     /// Applies beyond the first this operator has served since build —
     /// the reuse count the panel cache's amortization rests on.
     pub panel_reuse: usize,
+    /// Storage-precision tier of the operator's apply path (FKT backends;
+    /// defaults to f64 elsewhere). `panel_bytes` is already tier-priced —
+    /// an f32-tier operator reports half the f64 residency for the same
+    /// panels.
+    pub precision: Precision,
 }
 
 /// The coordinator.
@@ -206,6 +212,7 @@ impl Coordinator {
             metrics.panels_cached = ps.panels_cached;
             metrics.panels_streamed = ps.panels_streamed;
             metrics.panel_reuse = ps.applies.saturating_sub(1);
+            metrics.precision = f.cfg.precision;
         }
         self.last_metrics = metrics;
         z

@@ -29,7 +29,7 @@ pub use panels::PanelStats;
 
 use crate::expansion::{Expansion, HarmonicWorkspace};
 use crate::kernels::Kernel;
-use crate::linalg::vecops;
+use crate::linalg::{vecops, Precision};
 use crate::op::KernelOp;
 use crate::points::Points;
 use crate::tree::{FarFieldPlan, Tree};
@@ -104,6 +104,14 @@ pub struct FktConfig {
     /// the budget stream — recomputed on every apply; 0 forces pure
     /// streaming. Part of the session registry key.
     pub panel_budget_bytes: usize,
+    /// Storage-precision tier of the apply path: what the far-field panels
+    /// and near-field kernel blocks are *stored and contracted* in
+    /// (coefficients are always evaluated in f64, accumulation is always
+    /// f64 — see [`crate::linalg::Real`]). The session resolves
+    /// [`Precision::Auto`] from the requested tolerance before building;
+    /// a directly constructed operator treats `Auto` as f64. Part of the
+    /// session registry key.
+    pub precision: Precision,
 }
 
 impl Default for FktConfig {
@@ -115,6 +123,7 @@ impl Default for FktConfig {
             center: ExpansionCenter::BoxCenter,
             compression: false,
             panel_budget_bytes: DEFAULT_PANEL_BUDGET_BYTES,
+            precision: Precision::Auto,
         }
     }
 }
@@ -129,6 +138,7 @@ impl FktConfig {
             center: ExpansionCenter::Centroid,
             compression: false,
             panel_budget_bytes: DEFAULT_PANEL_BUDGET_BYTES,
+            precision: Precision::Auto,
         }
     }
 }
@@ -185,9 +195,14 @@ impl FktOperator {
         sources: &Points,
         targets: Option<&Points>,
         kernel: Kernel,
-        cfg: FktConfig,
+        mut cfg: FktConfig,
     ) -> FktOperator {
         assert!(cfg.p <= 30, "truncation order too large");
+        // Normalize the storage tier to a concrete value: `Auto` is a
+        // session-level request (resolved from the tolerance before the
+        // operator is built); at this level it means f64.
+        cfg.precision =
+            if cfg.precision.is_f32() { Precision::F32 } else { Precision::F64 };
         // The harmonic machinery needs d ≥ 2; lift 1-D data into the plane
         // (zero second coordinate — distances are unchanged).
         let lift = |pts: &Points| -> Points {
@@ -273,7 +288,8 @@ impl FktOperator {
             RadialRep::Generic => exp.num_terms,
             RadialRep::Compressed(c) => c.num_terms(&exp.basis),
         };
-        let panels = PanelSet::plan(&tree, &plan, nt, cfg.panel_budget_bytes);
+        let panels =
+            PanelSet::plan(&tree, &plan, nt, cfg.panel_budget_bytes, cfg.precision.storage_bytes());
         // Work-stealing job lists, built once: biggest jobs first so the
         // greedy claim order approximates longest-processing-time
         // scheduling. Sizes are multiply-add proxies: moments |node|·𝒫,
@@ -575,8 +591,9 @@ impl FktOperator {
 
     /// Near-field contributions for one leaf (`self.tree.leaves[li]`) and
     /// `m` interleaved columns: one dense GEMM per (leaf, target-block)
-    /// through [`nearfield::block_matmat`] and the `linalg` micro-kernel,
-    /// so each kernel value K(|t−s|) is evaluated once for all columns.
+    /// through [`nearfield::block_matmat_t`] and the `linalg` micro-kernel,
+    /// so each kernel value K(|t−s|) is evaluated once for all columns and
+    /// stored in the apply's precision tier (f64 accumulation either way).
     fn near_leaf_apply(&self, li: usize, w: &[f64], m: usize, z: &mut [f64], s: &mut PanelScratch) {
         let d = self.tree.d;
         let leaf = self.tree.leaves[li];
@@ -599,15 +616,27 @@ impl FktOperator {
         }
         s.zpanel.clear();
         s.zpanel.resize(near.len() * m, 0.0);
-        nearfield::block_matmat(
-            self.kernel.family,
-            d,
-            src,
-            &s.wgather,
-            m,
-            &s.tgather,
-            &mut s.zpanel,
-        );
+        if s.tier.is_f32() {
+            nearfield::block_matmat_t::<f32>(
+                self.kernel.family,
+                d,
+                src,
+                &s.wgather,
+                m,
+                &s.tgather,
+                &mut s.zpanel,
+            );
+        } else {
+            nearfield::block_matmat_t::<f64>(
+                self.kernel.family,
+                d,
+                src,
+                &s.wgather,
+                m,
+                &s.tgather,
+                &mut s.zpanel,
+            );
+        }
         for (slot, &t) in near.iter().enumerate() {
             let zrow = &mut z[t as usize * m..t as usize * m + m];
             for (zc, &oc) in zrow.iter_mut().zip(&s.zpanel[slot * m..slot * m + m]) {
@@ -634,11 +663,18 @@ impl FktOperator {
 
     /// Interleaved-layout batched MVM core shared by every public entry
     /// point (single- and multi-RHS, serial and threaded); bumps each
-    /// phase counter exactly once.
-    fn matmat_interleaved(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
+    /// phase counter exactly once. `tier` is the contraction precision of
+    /// this apply: normally the operator's storage tier, but the refined-
+    /// solve residual path passes f64 to force full-precision streaming on
+    /// an f32-tier operator (cached panels serve only their own tier).
+    fn matmat_interleaved(&self, w: &[f64], m: usize, threads: usize, tier: Precision) -> Vec<f64> {
         let ntg = self.targets.len();
         let threads = threads.max(1).min(self.tree.nodes.len().max(1));
-        self.panels.note_apply();
+        // Full-precision applies on an f32-tier operator bypass every
+        // cached panel — don't let them inflate the panel-reuse metric.
+        if tier == self.cfg.precision {
+            self.panels.note_apply();
+        }
         // Job lists are prebuilt at operator construction (they depend
         // only on the immutable tree and plan): `moment_jobs` for phase 1,
         // the merged far/near `apply_jobs` for phases 2–3, both
@@ -649,7 +685,7 @@ impl FktOperator {
         // return (id, μ) pairs merged into the table afterwards.
         let mut moments: Vec<Vec<f64>> = vec![Vec::new(); self.tree.nodes.len()];
         if threads == 1 {
-            let mut s = PanelScratch::new(self, m);
+            let mut s = PanelScratch::new(self, m, tier);
             for &id in mjobs {
                 moments[id as usize] = self.node_moments(id as usize, w, m, &mut s);
             }
@@ -661,7 +697,7 @@ impl FktOperator {
                 for _ in 0..threads {
                     let cursor = &cursor;
                     handles.push(scope.spawn(move |_| {
-                        let mut s = PanelScratch::new(self, m);
+                        let mut s = PanelScratch::new(self, m, tier);
                         let mut out: Vec<(usize, Vec<f64>)> = Vec::new();
                         loop {
                             let j = cursor.fetch_add(1, Ordering::Relaxed);
@@ -691,7 +727,7 @@ impl FktOperator {
         // across jobs, so workers never write one z concurrently).
         let mut z = vec![0.0; ntg * m];
         if threads == 1 {
-            let mut s = PanelScratch::new(self, m);
+            let mut s = PanelScratch::new(self, m, tier);
             for &job in jobs {
                 self.run_apply_job(job, &moments, w, m, &mut z, &mut s);
             }
@@ -704,7 +740,7 @@ impl FktOperator {
                 let mut handles = Vec::new();
                 for _ in 0..threads {
                     handles.push(scope.spawn(move |_| {
-                        let mut s = PanelScratch::new(self, m);
+                        let mut s = PanelScratch::new(self, m, tier);
                         let mut zt = vec![0.0; ntg * m];
                         loop {
                             let j = cursor.fetch_add(1, Ordering::Relaxed);
@@ -746,6 +782,13 @@ impl FktOperator {
     /// steal size-sorted node/leaf jobs from a shared list, like
     /// [`FktOperator::matvec_parallel`].
     pub fn matmat_parallel(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
+        self.matmat_cm(w, m, threads, self.cfg.precision)
+    }
+
+    /// Column-major boundary shared by the tiered and full-precision
+    /// batched entry points: transpose in, run the interleaved engine at
+    /// `tier`, transpose out.
+    fn matmat_cm(&self, w: &[f64], m: usize, threads: usize, tier: Precision) -> Vec<f64> {
         assert!(m > 0, "matmat needs at least one column");
         assert_eq!(w.len(), self.n_src * m, "weight block shape mismatch");
         let n = self.n_src;
@@ -758,7 +801,7 @@ impl FktOperator {
                 wi[i * m + c] = v;
             }
         }
-        let zi = self.matmat_interleaved(&wi, m, threads);
+        let zi = self.matmat_interleaved(&wi, m, threads, tier);
         let mut out = vec![0.0; ntg * m];
         for t in 0..ntg {
             for c in 0..m {
@@ -773,13 +816,32 @@ impl FktOperator {
     /// their precomputed panels, the rest stream.
     pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
         assert_eq!(w.len(), self.n_src);
-        self.matmat_interleaved(w, 1, 1)
+        self.matmat_interleaved(w, 1, 1, self.cfg.precision)
+    }
+
+    /// Full-precision single-RHS apply, regardless of the storage tier: on
+    /// an f32-tier operator every node streams freshly evaluated f64 rows
+    /// and the near field contracts f64 kernel blocks — the residual
+    /// oracle of the session's mixed-precision refined solve. On an
+    /// f64-tier operator this *is* [`FktOperator::matvec_parallel`]
+    /// (cached f64 panels already are full precision).
+    pub fn matvec_full_precision(&self, w: &[f64], threads: usize) -> Vec<f64> {
+        assert_eq!(w.len(), self.n_src);
+        self.matmat_interleaved(w, 1, threads, Precision::F64)
+    }
+
+    /// Full-precision batched apply (see
+    /// [`FktOperator::matvec_full_precision`]); column-major like
+    /// [`FktOperator::matmat_parallel`].
+    pub fn matmat_full_precision(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
+        self.matmat_cm(w, m, threads, Precision::F64)
     }
 
     /// MVM with per-phase wall times: (moments, far, near) seconds.
-    /// Drives the §Perf profiling in EXPERIMENTS.md. Always streams
-    /// (legacy scalar path) so the profile reflects per-pair evaluation
-    /// cost, independent of panel-cache state.
+    /// Drives the §Perf profiling in EXPERIMENTS.md. Always streams the
+    /// legacy f64 scalar path — regardless of the storage tier — so the
+    /// profile reflects per-pair evaluation cost, independent of
+    /// panel-cache or precision state.
     pub fn matvec_profiled(&self, w: &[f64]) -> (Vec<f64>, f64, f64, f64) {
         use std::time::Instant;
         assert_eq!(w.len(), self.n_src);
@@ -804,14 +866,15 @@ impl FktOperator {
     /// which are summed at the end).
     pub fn matvec_parallel(&self, w: &[f64], threads: usize) -> Vec<f64> {
         assert_eq!(w.len(), self.n_src);
-        self.matmat_interleaved(w, 1, threads)
+        self.matmat_interleaved(w, 1, threads, self.cfg.precision)
     }
 
     /// MVM with the near field delegated to a caller-provided executor
     /// (the coordinator's PJRT tile path); the executor receives
     /// (leaf node id, near target indices) and must add the dense
-    /// contribution into z itself. The far field streams (legacy scalar
-    /// path) — panel caching applies to the native entry points only.
+    /// contribution into z itself. The far field streams (legacy f64
+    /// scalar path) — panel caching and precision tiering apply to the
+    /// native entry points only (the PJRT tiles are f32 on their own).
     pub fn matvec_with_near(
         &self,
         w: &[f64],
@@ -1186,6 +1249,134 @@ mod tests {
         let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 30, ..Default::default() };
         let op = FktOperator::square(&pts, kern, cfg);
         assert_batched_matches_looped(&op, &w, 1, 1);
+    }
+
+    /// The f32 storage tier must track the f64 operator to well under the
+    /// 5e-6 acceptance bound across kernels — its only error source is the
+    /// ≈2⁻²⁴ rounding of stored coefficients and near-field kernel values
+    /// (accumulation stays f64).
+    #[test]
+    fn f32_tier_matches_f64_within_bound() {
+        let pts = uniform_points(700, 3, 160);
+        let mut rng = Pcg32::seeded(161);
+        let w = rng.normal_vec(700);
+        for fam in [Family::Gaussian, Family::Matern32, Family::Cauchy] {
+            let kern = Kernel::canonical(fam);
+            let base = FktConfig { p: 4, theta: 0.5, leaf_capacity: 40, ..Default::default() };
+            let op64 = FktOperator::square(&pts, kern, base);
+            let op32 = FktOperator::square(
+                &pts,
+                kern,
+                FktConfig { precision: Precision::F32, ..base },
+            );
+            assert_eq!(op64.cfg.precision, Precision::F64, "Auto normalizes to f64");
+            assert_eq!(op32.cfg.precision, Precision::F32);
+            for threads in [1usize, 4] {
+                let e = rel_err(
+                    &op32.matvec_parallel(&w, threads),
+                    &op64.matvec_parallel(&w, threads),
+                );
+                assert!(e <= 5e-6, "{fam:?} threads={threads}: f32 vs f64 rel err {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_tier_matches_f64_rectangular_and_compressed() {
+        let src = uniform_points(400, 2, 162);
+        let tgt = uniform_points(230, 2, 163);
+        let mut rng = Pcg32::seeded(164);
+        let w = rng.normal_vec(400);
+        let base = FktConfig { p: 5, theta: 0.5, leaf_capacity: 25, ..Default::default() };
+        for fam in [Family::Gaussian, Family::Cauchy] {
+            let kern = Kernel::canonical(fam);
+            let z64 = FktOperator::new(&src, Some(&tgt), kern, base).matvec(&w);
+            let z32 = FktOperator::new(
+                &src,
+                Some(&tgt),
+                kern,
+                FktConfig { precision: Precision::F32, ..base },
+            )
+            .matvec(&w);
+            let e = rel_err(&z32, &z64);
+            assert!(e <= 5e-6, "{fam:?} rect: f32 vs f64 rel err {e}");
+        }
+        // §A.4 compressed radial representation in the f32 tier.
+        let pts = uniform_points(500, 3, 165);
+        let wc = rng.normal_vec(500);
+        let kern = Kernel::new(Family::Matern32, 1.3);
+        let cbase = FktConfig { p: 5, theta: 0.5, leaf_capacity: 32, compression: true, ..base };
+        let z64 = FktOperator::square(&pts, kern, cbase).matvec(&wc);
+        let z32 = FktOperator::square(
+            &pts,
+            kern,
+            FktConfig { precision: Precision::F32, ..cbase },
+        )
+        .matvec(&wc);
+        let e = rel_err(&z32, &z64);
+        assert!(e <= 5e-6, "compressed: f32 vs f64 rel err {e}");
+    }
+
+    /// The ≤1e-12 batched-vs-looped identity must hold *within* the f32
+    /// tier: rounding happens at storage, accumulation stays f64, so
+    /// column c of a batch performs exactly the products of a looped MVM.
+    #[test]
+    fn f32_tier_batched_matches_looped() {
+        let pts = uniform_points(600, 3, 166);
+        let mut rng = Pcg32::seeded(167);
+        let w = rng.normal_vec(600 * 3);
+        for fam in [Family::Gaussian, Family::Cauchy] {
+            let kern = Kernel::canonical(fam);
+            let cfg = FktConfig {
+                p: 4,
+                theta: 0.5,
+                leaf_capacity: 40,
+                precision: Precision::F32,
+                ..Default::default()
+            };
+            let op = FktOperator::square(&pts, kern, cfg);
+            for threads in [1usize, 4] {
+                assert_batched_matches_looped(&op, &w, 3, threads);
+            }
+        }
+    }
+
+    /// `matvec_full_precision` on an f32-tier operator bypasses the f32
+    /// panels and streams f64 rows — it must agree with the f64-tier
+    /// operator to round-off, and with the f64 batched variant.
+    #[test]
+    fn full_precision_apply_bypasses_f32_storage() {
+        let pts = uniform_points(500, 2, 168);
+        let mut rng = Pcg32::seeded(169);
+        let w = rng.normal_vec(500);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let base = FktConfig { p: 4, theta: 0.5, leaf_capacity: 32, ..Default::default() };
+        let op64 = FktOperator::square(&pts, kern, base);
+        let op32 =
+            FktOperator::square(&pts, kern, FktConfig { precision: Precision::F32, ..base });
+        for threads in [1usize, 4] {
+            let full = op32.matvec_full_precision(&w, threads);
+            let oracle = op64.matvec_parallel(&w, threads);
+            for (i, (a, b)) in full.iter().zip(&oracle).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-12 * (1.0 + b.abs()),
+                    "threads={threads} i={i}: {a} vs {b}"
+                );
+            }
+            let fullb = op32.matmat_full_precision(&w, 1, threads);
+            for (a, b) in fullb.iter().zip(&full) {
+                assert!((a - b).abs() <= 1e-12 * (1.0 + b.abs()));
+            }
+            // And the fast tiered apply is genuinely different storage —
+            // close to, but not identical with, the f64 result.
+            let fast = op32.matvec_parallel(&w, threads);
+            let e = rel_err(&fast, &oracle);
+            assert!(e <= 5e-6, "tiered apply within bound: {e}");
+        }
+        // On an f64-tier operator full precision IS the normal path.
+        let a = op64.matvec_full_precision(&w, 1);
+        let b = op64.matvec(&w);
+        assert_eq!(a, b, "f64 tier: full-precision apply is the cached-panel path");
     }
 
     #[test]

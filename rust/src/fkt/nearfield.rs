@@ -9,6 +9,7 @@
 //! integration tests.
 
 use crate::kernels::{Family, Kernel};
+use crate::linalg::Real;
 
 /// Compute `z_t += Σ_s K(|t−s|) w_s` for a dense block given as flat
 /// coordinate slices (already in kernel-scaled coordinates).
@@ -107,8 +108,28 @@ const TGT_CHUNK: usize = 32;
 /// is `t×m` row-major accumulators. The kernel profile is evaluated once
 /// per (target, source) pair — shared across all m columns — into a small
 /// block which is then contracted with the weight block through the
-/// [`crate::linalg::gemm_accum`] micro-kernel.
+/// [`crate::linalg::gemm_accum`] micro-kernel. This is the f64 tier of
+/// [`block_matmat_t`].
 pub fn block_matmat(
+    family: Family,
+    d: usize,
+    src: &[f64],
+    w: &[f64],
+    m: usize,
+    tgt: &[f64],
+    out: &mut [f64],
+) {
+    block_matmat_t::<f64>(family, d, src, w, m, tgt, out)
+}
+
+/// Precision-tiered multi-RHS near-field block (see [`block_matmat`] for
+/// the shape contract): the kernel profile is evaluated in f64 per
+/// (target, source) pair, *stored* in the tier scalar `T`, and contracted
+/// against the f64 weight block with f64 accumulation through
+/// [`crate::linalg::gemm_accum_t`]. The f32 tier halves the materialized
+/// K-block's bandwidth; its error is the ≈2⁻²⁴ storage rounding of each
+/// kernel value, nothing more.
+pub fn block_matmat_t<T: Real>(
     family: Family,
     d: usize,
     src: &[f64],
@@ -123,7 +144,7 @@ pub fn block_matmat(
     debug_assert_eq!(w.len(), n * m);
     debug_assert_eq!(out.len(), t_total * m);
     let zero = family.value_at_zero();
-    let mut kblock = vec![0.0f64; TGT_CHUNK.min(t_total.max(1)) * n];
+    let mut kblock = vec![T::from_f64(0.0); TGT_CHUNK.min(t_total.max(1)) * n];
     let mut t0 = 0;
     while t0 < t_total {
         let tc = TGT_CHUNK.min(t_total - t0);
@@ -138,11 +159,11 @@ pub fn block_matmat(
                     let dd = tp[a] - sp[a];
                     d2 += dd * dd;
                 }
-                *slot = if d2 == 0.0 { zero } else { family.eval(d2.sqrt()) };
+                *slot = T::from_f64(if d2 == 0.0 { zero } else { family.eval(d2.sqrt()) });
             }
         }
         // Pass 2: contract against all m weight columns at once.
-        crate::linalg::gemm_accum(
+        crate::linalg::gemm_accum_t::<T>(
             &kblock[..tc * n],
             tc,
             n,
@@ -248,6 +269,41 @@ mod tests {
                                 "{fam:?} d={d} n={n} t={t} m={m} col={c} row={ti}"
                             );
                         }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The f32 tier stores the kernel block in f32 but accumulates in f64:
+    /// it must equal the f64 contraction of the rounded block exactly, and
+    /// track the full-f64 tier to storage-rounding accuracy.
+    #[test]
+    fn block_matmat_f32_tier_tracks_f64() {
+        let mut rng = Pcg32::seeded(99);
+        for d in [2usize, 3] {
+            let (n, t, m) = (40, 37, 3);
+            let src = rng.uniform_vec(n * d, 0.0, 1.0);
+            let tgt = rng.uniform_vec(t * d, 0.0, 1.0);
+            let w = rng.normal_vec(n * m);
+            for fam in [Family::Gaussian, Family::Matern32, Family::Cauchy] {
+                let mut out64 = vec![0.0; t * m];
+                block_matmat_t::<f64>(fam, d, &src, &w, m, &tgt, &mut out64);
+                let mut out32 = vec![0.0; t * m];
+                block_matmat_t::<f32>(fam, d, &src, &w, m, &tgt, &mut out32);
+                // Scale for the rounding bound: Σ_s |K w_s| per target row.
+                for ti in 0..t {
+                    let wsum: f64 = (0..n).map(|s| w[s * m..s * m + m]
+                        .iter()
+                        .map(|v| v.abs())
+                        .fold(0.0, f64::max))
+                        .sum();
+                    for c in 0..m {
+                        let (a, b) = (out32[ti * m + c], out64[ti * m + c]);
+                        assert!(
+                            (a - b).abs() <= 1e-6 * (1.0 + wsum),
+                            "{fam:?} d={d} t={ti} c={c}: {a} vs {b}"
+                        );
                     }
                 }
             }

@@ -24,8 +24,19 @@
 //! phase of a *repeated* apply is pure BLAS-3 over precomputed
 //! coefficients.
 //!
-//! **Memory budget.** Panels cost `8·𝒫` bytes per (node, point) /
-//! (node, far-target) pair — potentially hundreds of MB at paper scale —
+//! **Precision tiers.** Panels are stored in the operator's precision tier
+//! ([`crate::fkt::FktConfig::precision`]): coefficients are always
+//! *evaluated* in f64 by the row evaluators below, then stored — and later
+//! contracted — as f64 or f32 (`PanelData`), with every contraction
+//! accumulating in f64. The f32 tier halves panel residency (twice the
+//! nodes fit a fixed budget) and the apply's memory bandwidth; streamed
+//! nodes round their freshly evaluated rows through the same tier, so
+//! cached and streamed paths perform bit-identical products in either
+//! tier.
+//!
+//! **Memory budget.** Panels cost `4·𝒫` (f32 tier) or `8·𝒫` (f64) bytes
+//! per (node, point) / (node, far-target) pair — potentially hundreds of
+//! MB at paper scale —
 //! so the [`PanelSet`] planner admits panels greedily (first-fit; sources
 //! before targets, ascending node id within each class) until
 //! [`crate::fkt::FktConfig::panel_budget_bytes`] is exhausted. Nodes past
@@ -44,10 +55,41 @@
 
 use super::{FktOperator, RadialRep};
 use crate::expansion::HarmonicWorkspace;
-use crate::linalg::{gemm_accum, vecops};
+use crate::linalg::{gemm_accum_t, vecops, Precision};
 use crate::tree::{FarFieldPlan, Tree};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
+
+/// One materialized coefficient panel in the operator's storage tier.
+/// Coefficients are always *evaluated* in f64 (the row evaluators below);
+/// the tier governs what is stored and contracted — f32 panels halve both
+/// residency and the apply's memory bandwidth, and every contraction
+/// accumulates in f64 (see [`crate::linalg::Real`]).
+#[derive(Debug)]
+pub(super) enum PanelData {
+    /// Full-precision storage.
+    F64(Vec<f64>),
+    /// Half-width storage (rounded from the f64 evaluation).
+    F32(Vec<f32>),
+}
+
+impl PanelData {
+    /// Round an f64-evaluated panel into `tier` storage.
+    fn store(tier: Precision, data: Vec<f64>) -> PanelData {
+        match tier {
+            Precision::F32 => PanelData::F32(data.iter().map(|&v| v as f32).collect()),
+            _ => PanelData::F64(data),
+        }
+    }
+
+    /// Resident bytes.
+    fn bytes(&self) -> usize {
+        match self {
+            PanelData::F64(v) => v.len() * 8,
+            PanelData::F32(v) => v.len() * 4,
+        }
+    }
+}
 
 /// One node's lazily materialized panel slots.
 #[derive(Debug, Default)]
@@ -57,9 +99,9 @@ struct NodePanel {
     /// Budget admitted the target panel (m2t pass).
     tgt_cached: bool,
     /// `Sᵀ` (𝒫 × |node|, row-major), materialized on first touch.
-    src: OnceLock<Vec<f64>>,
+    src: OnceLock<PanelData>,
     /// `E` (|F_b| × 𝒫, row-major), materialized on first touch.
-    tgt: OnceLock<Vec<f64>>,
+    tgt: OnceLock<PanelData>,
 }
 
 /// The operator's panel cache: budget plan + lazily filled panel storage.
@@ -106,6 +148,7 @@ impl PanelSet {
         fplan: &FarFieldPlan,
         num_terms: usize,
         budget_bytes: usize,
+        elem_bytes: usize,
     ) -> PanelSet {
         let nnodes = tree.nodes.len();
         let mut nodes: Vec<NodePanel> = (0..nnodes).map(|_| NodePanel::default()).collect();
@@ -113,7 +156,7 @@ impl PanelSet {
         let mut cached = 0usize;
         let mut streamed = 0usize;
         for id in fplan.nodes_with_far() {
-            let bytes = tree.nodes[id].len() * num_terms * 8;
+            let bytes = tree.nodes[id].len() * num_terms * elem_bytes;
             if used + bytes <= budget_bytes {
                 nodes[id].src_cached = true;
                 used += bytes;
@@ -123,7 +166,7 @@ impl PanelSet {
             }
         }
         for id in fplan.nodes_with_far() {
-            let bytes = fplan.interactions[id].far.len() * num_terms * 8;
+            let bytes = fplan.interactions[id].far.len() * num_terms * elem_bytes;
             if used + bytes <= budget_bytes {
                 nodes[id].tgt_cached = true;
                 used += bytes;
@@ -163,8 +206,13 @@ impl PanelSet {
 
 /// Per-worker scratch for the panel engine: harmonic workspace, one
 /// coefficient row, and the gather/output buffers of the GEMM phases.
-/// Allocation-free across nodes once warm.
+/// Allocation-free across nodes once warm. Also carries the apply's
+/// contraction `tier` — normally the operator's storage tier, but the
+/// refined-solve residual path runs f64 applies on an f32-tier operator
+/// (cached panels serve only their own tier, so those applies stream).
 pub(super) struct PanelScratch {
+    /// Contraction precision of the apply this scratch serves.
+    pub(super) tier: Precision,
     ws: HarmonicWorkspace,
     /// Harmonic values at the current relative point.
     yx: Vec<f64>,
@@ -176,6 +224,10 @@ pub(super) struct PanelScratch {
     derivs: Vec<f64>,
     /// One coefficient row (len 𝒫) — written by the row evaluators.
     pub(super) row: Vec<f64>,
+    /// The same row rounded into f32 storage — the streamed path of an
+    /// f32-tier apply contracts this copy so streamed and cached nodes
+    /// perform bit-identical products.
+    pub(super) row32: Vec<f32>,
     /// Gathered weight rows (|node| × m) — moments GEMM and near field.
     pub(super) wgather: Vec<f64>,
     /// Gathered near-target coordinates (|N_l| × d).
@@ -188,14 +240,16 @@ pub(super) struct PanelScratch {
 }
 
 impl PanelScratch {
-    pub(super) fn new(op: &FktOperator, m: usize) -> PanelScratch {
+    pub(super) fn new(op: &FktOperator, m: usize, tier: Precision) -> PanelScratch {
         PanelScratch {
+            tier,
             ws: HarmonicWorkspace::default(),
             yx: vec![0.0; op.exp.basis.total()],
             rel: vec![0.0; op.tree.d],
             radial: vec![0.0; op.exp.table.num_j(0).max(1)],
             derivs: vec![0.0; op.cfg.p + 1],
             row: vec![0.0; op.num_terms()],
+            row32: vec![0.0f32; op.num_terms()],
             wgather: Vec::new(),
             tgather: Vec::new(),
             zpanel: Vec::new(),
@@ -312,65 +366,65 @@ impl FktOperator {
         }
     }
 
-    /// The node's cached `Sᵀ` panel, materializing it on first touch;
-    /// `None` when the budget streams this node.
-    fn src_panel(&self, id: usize) -> Option<&[f64]> {
+    /// The node's cached `Sᵀ` panel, materializing it (in the operator's
+    /// storage tier) on first touch; `None` when the budget streams this
+    /// node.
+    fn src_panel(&self, id: usize) -> Option<&PanelData> {
         let slot = &self.panels.nodes[id];
         if !slot.src_cached {
             return None;
         }
-        Some(
-            slot.src
-                .get_or_init(|| {
-                    let node = &self.tree.nodes[id];
-                    let npts = node.len();
-                    let nt = self.num_terms();
-                    let mut s = PanelScratch::new(self, 1);
-                    let mut st = vec![0.0; nt * npts];
-                    let center = &self.centers[id];
-                    for (col, pos) in (node.start..node.end).enumerate() {
-                        self.eval_source_row_into(center, pos, &mut s);
-                        for term in 0..nt {
-                            st[term * npts + col] = s.row[term];
-                        }
-                    }
-                    self.panels.resident.fetch_add(st.len() * 8, Ordering::Relaxed);
-                    st
-                })
-                .as_slice(),
-        )
+        Some(slot.src.get_or_init(|| {
+            let node = &self.tree.nodes[id];
+            let npts = node.len();
+            let nt = self.num_terms();
+            let mut s = PanelScratch::new(self, 1, self.cfg.precision);
+            let mut st = vec![0.0; nt * npts];
+            let center = &self.centers[id];
+            for (col, pos) in (node.start..node.end).enumerate() {
+                self.eval_source_row_into(center, pos, &mut s);
+                for term in 0..nt {
+                    st[term * npts + col] = s.row[term];
+                }
+            }
+            let panel = PanelData::store(self.cfg.precision, st);
+            self.panels.resident.fetch_add(panel.bytes(), Ordering::Relaxed);
+            panel
+        }))
     }
 
-    /// The node's cached `E` panel, materializing it on first touch;
-    /// `None` when the budget streams this node.
-    fn tgt_panel(&self, id: usize) -> Option<&[f64]> {
+    /// The node's cached `E` panel, materializing it (in the operator's
+    /// storage tier) on first touch; `None` when the budget streams this
+    /// node.
+    fn tgt_panel(&self, id: usize) -> Option<&PanelData> {
         let slot = &self.panels.nodes[id];
         if !slot.tgt_cached {
             return None;
         }
-        Some(
-            slot.tgt
-                .get_or_init(|| {
-                    let far = &self.plan.interactions[id].far;
-                    let nt = self.num_terms();
-                    let mut s = PanelScratch::new(self, 1);
-                    let mut e = vec![0.0; far.len() * nt];
-                    let center = &self.centers[id];
-                    for (row, &t) in far.iter().enumerate() {
-                        self.eval_target_row_into(center, t as usize, &mut s);
-                        e[row * nt..(row + 1) * nt].copy_from_slice(&s.row);
-                    }
-                    self.panels.resident.fetch_add(e.len() * 8, Ordering::Relaxed);
-                    e
-                })
-                .as_slice(),
-        )
+        Some(slot.tgt.get_or_init(|| {
+            let far = &self.plan.interactions[id].far;
+            let nt = self.num_terms();
+            let mut s = PanelScratch::new(self, 1, self.cfg.precision);
+            let mut e = vec![0.0; far.len() * nt];
+            let center = &self.centers[id];
+            for (row, &t) in far.iter().enumerate() {
+                self.eval_target_row_into(center, t as usize, &mut s);
+                e[row * nt..(row + 1) * nt].copy_from_slice(&s.row);
+            }
+            let panel = PanelData::store(self.cfg.precision, e);
+            self.panels.resident.fetch_add(panel.bytes(), Ordering::Relaxed);
+            panel
+        }))
     }
 
     /// Upward pass for one node and `m` interleaved columns: the cached
     /// path is one `μ = Sᵀ · W_node` GEMM over the gathered weight rows;
-    /// the streamed path evaluates each point's row and rank-1-updates —
-    /// same products, same per-(term, column) accumulation order.
+    /// the streamed path evaluates each point's row (rounding it through
+    /// `tier` storage, exactly as a cached panel would be stored) and
+    /// rank-1-updates — same products, same per-(term, column) f64
+    /// accumulation order. Cached panels serve only their own tier: a
+    /// full-precision apply on an f32-tier operator (`tier` = f64) streams
+    /// every node.
     pub(super) fn node_moments(
         &self,
         id: usize,
@@ -378,20 +432,26 @@ impl FktOperator {
         m: usize,
         s: &mut PanelScratch,
     ) -> Vec<f64> {
+        let tier = s.tier;
         let nt = self.num_terms();
         let node = &self.tree.nodes[id];
         let npts = node.len();
         let mut mu = vec![0.0; nt * m];
-        if let Some(st) = self.src_panel(id) {
+        let panel = if tier == self.cfg.precision { self.src_panel(id) } else { None };
+        if let Some(panel) = panel {
             s.wgather.clear();
             s.wgather.reserve(npts * m);
             for i in node.start..node.end {
                 let orig = self.tree.perm[i];
                 s.wgather.extend_from_slice(&w[orig * m..orig * m + m]);
             }
-            gemm_accum(st, nt, npts, &s.wgather, m, &mut mu);
+            match panel {
+                PanelData::F64(st) => gemm_accum_t::<f64>(st, nt, npts, &s.wgather, m, &mut mu),
+                PanelData::F32(st) => gemm_accum_t::<f32>(st, nt, npts, &s.wgather, m, &mut mu),
+            }
         } else {
             let center = &self.centers[id];
+            let round32 = tier.is_f32();
             for i in node.start..node.end {
                 let orig = self.tree.perm[i];
                 let wrow = &w[orig * m..orig * m + m];
@@ -400,6 +460,7 @@ impl FktOperator {
                 }
                 self.eval_source_row_into(center, i, s);
                 for (term, &coef) in s.row.iter().enumerate() {
+                    let coef = if round32 { coef as f32 as f64 } else { coef };
                     if coef == 0.0 {
                         continue;
                     }
@@ -415,8 +476,9 @@ impl FktOperator {
 
     /// m2t pass for one node and `m` interleaved columns: the cached path
     /// is one `Z[F_b] += E · μ` GEMM plus a scatter; the streamed path
-    /// evaluates each target's row and contracts it against `μ` through
-    /// the same micro-kernel, so both paths sum in the same order.
+    /// evaluates each target's row (rounded through `tier` storage) and
+    /// contracts it against `μ` through the same micro-kernel, so both
+    /// paths perform bit-identical per-row products.
     pub(super) fn far_node_apply(
         &self,
         id: usize,
@@ -425,12 +487,17 @@ impl FktOperator {
         z: &mut [f64],
         s: &mut PanelScratch,
     ) {
+        let tier = s.tier;
         let far = &self.plan.interactions[id].far;
         let nt = self.num_terms();
-        if let Some(e) = self.tgt_panel(id) {
+        let panel = if tier == self.cfg.precision { self.tgt_panel(id) } else { None };
+        if let Some(panel) = panel {
             s.zpanel.clear();
             s.zpanel.resize(far.len() * m, 0.0);
-            gemm_accum(e, far.len(), nt, mu, m, &mut s.zpanel);
+            match panel {
+                PanelData::F64(e) => gemm_accum_t::<f64>(e, far.len(), nt, mu, m, &mut s.zpanel),
+                PanelData::F32(e) => gemm_accum_t::<f32>(e, far.len(), nt, mu, m, &mut s.zpanel),
+            }
             for (rowi, &t) in far.iter().enumerate() {
                 let zrow = &mut z[t as usize * m..t as usize * m + m];
                 for (slot, &v) in zrow.iter_mut().zip(&s.zpanel[rowi * m..rowi * m + m]) {
@@ -439,10 +506,18 @@ impl FktOperator {
             }
         } else {
             let center = &self.centers[id];
+            let round32 = tier.is_f32();
             for &t in far {
                 self.eval_target_row_into(center, t as usize, s);
                 s.acc.iter_mut().for_each(|v| *v = 0.0);
-                gemm_accum(&s.row, 1, nt, mu, m, &mut s.acc);
+                if round32 {
+                    for (dst, &v) in s.row32.iter_mut().zip(s.row.iter()) {
+                        *dst = v as f32;
+                    }
+                    gemm_accum_t::<f32>(&s.row32, 1, nt, mu, m, &mut s.acc);
+                } else {
+                    gemm_accum_t::<f64>(&s.row, 1, nt, mu, m, &mut s.acc);
+                }
                 let zrow = &mut z[t as usize * m..t as usize * m + m];
                 for (slot, &v) in zrow.iter_mut().zip(s.acc.iter()) {
                     *slot += v;
@@ -596,6 +671,80 @@ mod tests {
             );
         }
         assert!(partial.panel_stats().resident_bytes <= demand / 2);
+    }
+
+    /// Cached-vs-streamed agreement within the f32 tier: streamed nodes
+    /// round their rows through f32 exactly as the panels store them, so
+    /// the mixed regime matches to f64-accumulation round-off.
+    #[test]
+    fn f32_tier_panel_matches_streamed() {
+        use crate::linalg::Precision;
+        let pts = uniform_points(700, 3, 212);
+        let mut rng = Pcg32::seeded(213);
+        let w1 = rng.normal_vec(700);
+        let w2 = rng.normal_vec(700 * 2);
+        for fam in [Family::Gaussian, Family::Matern32, Family::Cauchy] {
+            let kern = Kernel::canonical(fam);
+            let base = FktConfig {
+                p: 4,
+                theta: 0.5,
+                leaf_capacity: 40,
+                precision: Precision::F32,
+                ..Default::default()
+            };
+            let cached = FktOperator::square(&pts, kern, base);
+            let streamed =
+                FktOperator::square(&pts, kern, FktConfig { panel_budget_bytes: 0, ..base });
+            assert!(cached.panel_stats().panels_cached > 0, "{fam:?}");
+            for threads in [1usize, 4] {
+                assert_close(
+                    &cached.matvec_parallel(&w1, threads),
+                    &streamed.matvec_parallel(&w1, threads),
+                    &format!("{fam:?} f32 matvec threads={threads}"),
+                );
+                assert_close(
+                    &cached.matmat_parallel(&w2, 2, threads),
+                    &streamed.matmat_parallel(&w2, 2, threads),
+                    &format!("{fam:?} f32 matmat threads={threads}"),
+                );
+            }
+        }
+    }
+
+    /// f32 panels cost exactly half the bytes of the same spec at f64 —
+    /// both in the budget plan and in materialized residency — so a fixed
+    /// budget admits twice the panel volume.
+    #[test]
+    fn f32_tier_halves_panel_residency() {
+        use crate::linalg::Precision;
+        let pts = uniform_points(600, 2, 214);
+        let mut rng = Pcg32::seeded(215);
+        let w = rng.normal_vec(600);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let base = FktConfig { p: 4, theta: 0.5, leaf_capacity: 32, ..Default::default() };
+        let op64 = FktOperator::square(&pts, kern, base);
+        let op32 =
+            FktOperator::square(&pts, kern, FktConfig { precision: Precision::F32, ..base });
+        let (p64, p32) = (op64.panel_stats(), op32.panel_stats());
+        assert!(p64.planned_bytes > 0);
+        assert_eq!(p32.planned_bytes * 2, p64.planned_bytes, "plan halves exactly");
+        assert_eq!(p32.panels_cached, p64.panels_cached, "same panels admitted");
+        let _ = op64.matvec(&w);
+        let _ = op32.matvec(&w);
+        let (p64, p32) = (op64.panel_stats(), op32.panel_stats());
+        assert_eq!(p32.resident_bytes * 2, p64.resident_bytes, "residency halves exactly");
+        // A budget sized for the f64 demand's half admits everything at
+        // f32 but must stream at f64: twice the nodes fit cached.
+        let half = p64.planned_bytes / 2;
+        let tight64 =
+            FktOperator::square(&pts, kern, FktConfig { panel_budget_bytes: half, ..base });
+        let tight32 = FktOperator::square(
+            &pts,
+            kern,
+            FktConfig { panel_budget_bytes: half, precision: Precision::F32, ..base },
+        );
+        assert!(tight32.panel_stats().panels_cached > tight64.panel_stats().panels_cached);
+        assert_eq!(tight32.panel_stats().panels_streamed, 0, "f32 fits the halved budget");
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub use train::{LmlEstimate, LmlOpts, TrainOpts, TrainResult, TrainStep};
 
 use crate::fkt::FktConfig;
 use crate::kernels::Kernel;
+use crate::linalg::Precision;
 use crate::points::Points;
 use crate::session::{OpHandle, Session, SolveOpts};
 
@@ -31,6 +32,12 @@ pub struct GpConfig {
     /// When set, the session resolves `(p, θ)` from this tolerance via the
     /// truncation bound instead of using `fkt.p`/`fkt.theta`.
     pub tolerance: Option<f64>,
+    /// Storage-precision tier of the GP's operators (default
+    /// [`Precision::Auto`]): with a loose `tolerance` the session stores
+    /// f32 panels — and [`GpRegressor::fit_alpha`]'s solve automatically
+    /// runs mixed-precision iterative refinement, so the representer
+    /// weights still meet `cg_tol` against the f64 operator.
+    pub precision: Precision,
     /// CG relative-residual tolerance.
     pub cg_tol: f64,
     /// CG iteration cap.
@@ -51,6 +58,7 @@ impl Default for GpConfig {
         GpConfig {
             fkt: FktConfig::default(),
             tolerance: None,
+            precision: Precision::Auto,
             cg_tol: 1e-6,
             cg_max_iters: 200,
             jitter: 1e-8,
@@ -140,7 +148,11 @@ impl GpRegressor {
         kernel: Kernel,
         cfg: &GpConfig,
     ) -> OpHandle {
-        let mut spec = session.operator(sources).scaled_kernel(kernel).config(cfg.fkt);
+        let mut spec = session
+            .operator(sources)
+            .scaled_kernel(kernel)
+            .config(cfg.fkt)
+            .precision(cfg.precision);
         if let Some(t) = targets {
             spec = spec.targets(t);
         }
@@ -419,6 +431,54 @@ mod tests {
                 oracle[i]
             );
         }
+    }
+
+    /// The precision loop closed end to end: a GP whose operators store
+    /// f32 panels fits its representer weights through the session's
+    /// mixed-precision refined solve and matches the all-f64 GP far
+    /// beyond the f32 apply error.
+    #[test]
+    fn f32_precision_gp_refines_to_f64_accuracy() {
+        let mut rng = Pcg32::seeded(227);
+        let n = 250;
+        let train = Points::new(2, rng.uniform_vec(n * 2, 0.0, 1.0));
+        let noise: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.05, 0.1)).collect();
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let p = train.point(i);
+                (3.0 * p[0]).sin() * (2.0 * p[1]).cos()
+            })
+            .collect();
+        let kernel = Kernel::matern32(0.5);
+        let base = GpConfig {
+            fkt: FktConfig { p: 6, theta: 0.4, leaf_capacity: 32, ..Default::default() },
+            cg_tol: 1e-8,
+            cg_max_iters: 600,
+            jitter: 1e-8,
+            ..Default::default()
+        };
+        let mut session = Session::native(2);
+        let mut gp64 =
+            GpRegressor::new(&mut session, train.clone(), noise.clone(), kernel, base);
+        let f64_fit = gp64.fit_alpha(&y, &mut session);
+        assert!(f64_fit.converged);
+        assert_eq!(session.counters().refine_sweeps, 0, "f64 GP never sweeps");
+        let cfg32 = GpConfig { precision: crate::linalg::Precision::F32, ..base };
+        let mut gp32 = GpRegressor::new(&mut session, train, noise, kernel, cfg32);
+        assert_eq!(gp32.operator().precision(), crate::linalg::Precision::F32);
+        let f32_fit = gp32.fit_alpha(&y, &mut session);
+        assert!(f32_fit.converged, "refined fit residual {}", f32_fit.rel_residual);
+        assert!(f32_fit.rel_residual <= base.cg_tol, "same cg_tol as the f64 fit");
+        assert!(session.counters().refine_sweeps >= 1, "the f32 fit swept");
+        let (a64, a32) = (gp64.alpha().unwrap(), gp32.alpha().unwrap());
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (x, y) in a32.iter().zip(a64) {
+            num += (x - y) * (x - y);
+            den += y * y;
+        }
+        let e = (num / den.max(1e-300)).sqrt();
+        assert!(e <= 1e-4, "f32-refined vs f64 representer weights: rel err {e}");
     }
 
     #[test]

@@ -11,6 +11,104 @@ use crate::exact::Rational;
 pub mod qr;
 pub use qr::{col_pivoted_qr, numerical_rank, PivotedQr};
 
+/// A storage scalar for the precision-tiered apply engine.
+///
+/// The engine's contract is **store in `Self`, accumulate in `f64`**:
+/// coefficient panels, near-field kernel blocks, and streamed rows are
+/// *stored* (or rounded through) the operator's tier, while every
+/// contraction widens back to `f64` before the fused multiply-add — so the
+/// column-vs-looped and cached-vs-streamed round-off identities hold within
+/// a tier, and the f32 tier's error is pure storage rounding (≈2⁻²⁴
+/// relative per coefficient), not compounding accumulation error.
+pub trait Real: Copy + Send + Sync + std::fmt::Debug + 'static {
+    /// Bytes per stored scalar (drives panel-budget planning).
+    const BYTES: usize;
+    /// Round an `f64` into this storage precision.
+    fn from_f64(v: f64) -> Self;
+    /// Widen back to `f64` (exact for both tiers).
+    fn to_f64(self) -> f64;
+}
+
+impl Real for f64 {
+    const BYTES: usize = 8;
+    #[inline(always)]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+impl Real for f32 {
+    const BYTES: usize = 4;
+    #[inline(always)]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+/// Storage-precision tier of a kernel operator's apply path.
+///
+/// `F64`/`F32` pin the tier; `Auto` lets the session's tolerance resolver
+/// choose (f32 storage when the requested ε leaves margin above f32
+/// round-off — see `session::tune::auto_precision` — f64 otherwise).
+/// Coefficients are always *evaluated* in f64; the tier governs what the
+/// operator *stores and contracts* (see [`Real`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full f64 storage (the classical behavior).
+    #[default]
+    F64,
+    /// f32 panel/near-block storage with f64 accumulation: half the memory
+    /// bandwidth and panel residency, ≈1e-7-level storage rounding.
+    F32,
+    /// Resolve from the requested tolerance (session layer); a directly
+    /// constructed operator treats `Auto` as [`Precision::F64`].
+    Auto,
+}
+
+impl Precision {
+    /// Parse a tier name (`"f64"` / `"f32"` / `"auto"`) — the mapping every
+    /// CLI surface shares.
+    pub fn from_name(name: &str) -> Option<Precision> {
+        Some(match name {
+            "f64" => Precision::F64,
+            "f32" => Precision::F32,
+            "auto" => Precision::Auto,
+            _ => return None,
+        })
+    }
+
+    /// Canonical tier name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+            Precision::Auto => "auto",
+        }
+    }
+
+    /// Bytes per stored panel/near-block scalar in this tier (`Auto`
+    /// reports the conservative f64 size — it resolves before storage).
+    pub fn storage_bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            _ => 8,
+        }
+    }
+
+    /// Whether this tier stores in f32.
+    pub fn is_f32(self) -> bool {
+        matches!(self, Precision::F32)
+    }
+}
+
 /// Dense row-major f64 matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
@@ -131,6 +229,16 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
 ///   auto-vectorizes for the small m (1–8 RHS columns) the engine
 ///   produces.
 pub fn gemm_accum(a: &[f64], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [f64]) {
+    gemm_accum_t::<f64>(a, ra, n, b, m, c)
+}
+
+/// Precision-tiered variant of [`gemm_accum`]: `A` is stored in the tier
+/// scalar `T` (the cached coefficient panel / near-field kernel block),
+/// `B` and `C` stay f64, and every product widens `A`'s entries back to
+/// f64 before the fused multiply-add — storage in `T`, accumulation in
+/// f64 (see [`Real`]). For `T = f64` the widening is the identity and this
+/// *is* [`gemm_accum`], instruction for instruction.
+pub fn gemm_accum_t<T: Real>(a: &[T], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [f64]) {
     assert_eq!(a.len(), ra * n, "A shape mismatch");
     assert!(b.len() >= n * m, "B too short");
     assert_eq!(c.len(), ra * m, "C shape mismatch");
@@ -141,15 +249,15 @@ pub fn gemm_accum(a: &[f64], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [
             let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
             let mut k = 0;
             while k < n4 {
-                s0 = arow[k].mul_add(b[k], s0);
-                s1 = arow[k + 1].mul_add(b[k + 1], s1);
-                s2 = arow[k + 2].mul_add(b[k + 2], s2);
-                s3 = arow[k + 3].mul_add(b[k + 3], s3);
+                s0 = arow[k].to_f64().mul_add(b[k], s0);
+                s1 = arow[k + 1].to_f64().mul_add(b[k + 1], s1);
+                s2 = arow[k + 2].to_f64().mul_add(b[k + 2], s2);
+                s3 = arow[k + 3].to_f64().mul_add(b[k + 3], s3);
                 k += 4;
             }
             let mut acc = (s0 + s2) + (s1 + s3);
             for kk in n4..n {
-                acc = arow[kk].mul_add(b[kk], acc);
+                acc = arow[kk].to_f64().mul_add(b[kk], acc);
             }
             c[i] += acc;
         }
@@ -161,8 +269,8 @@ pub fn gemm_accum(a: &[f64], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [
         let crow = &mut c[i * m..(i + 1) * m];
         let mut k = 0;
         while k < n2 {
-            let a0 = arow[k];
-            let a1 = arow[k + 1];
+            let a0 = arow[k].to_f64();
+            let a1 = arow[k + 1].to_f64();
             let b0 = &b[k * m..k * m + m];
             let b1 = &b[(k + 1) * m..(k + 1) * m + m];
             for j in 0..m {
@@ -171,7 +279,7 @@ pub fn gemm_accum(a: &[f64], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [
             k += 2;
         }
         if n2 < n {
-            let a0 = arow[n2];
+            let a0 = arow[n2].to_f64();
             let b0 = &b[n2 * m..n2 * m + m];
             for j in 0..m {
                 crow[j] = a0.mul_add(b0[j], crow[j]);
@@ -182,18 +290,32 @@ pub fn gemm_accum(a: &[f64], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [
 
 /// Vector helpers used throughout.
 pub mod vecops {
-    /// Dot product.
+    /// Dot product over four independent fused accumulators — the same
+    /// unrolling as [`super::gemm_accum`]'s `m = 1` path, because CG inner
+    /// products (`rᵀz`, `pᵀAp`, residual norms every iteration) are
+    /// otherwise a serial-FMA dependency chain on the solve hot path.
     #[inline]
     pub fn dot(a: &[f64], b: &[f64]) -> f64 {
         debug_assert_eq!(a.len(), b.len());
-        let mut acc = 0.0;
-        for i in 0..a.len() {
-            acc += a[i] * b[i];
+        let n = a.len();
+        let n4 = n & !3;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+        let mut k = 0;
+        while k < n4 {
+            s0 = a[k].mul_add(b[k], s0);
+            s1 = a[k + 1].mul_add(b[k + 1], s1);
+            s2 = a[k + 2].mul_add(b[k + 2], s2);
+            s3 = a[k + 3].mul_add(b[k + 3], s3);
+            k += 4;
+        }
+        let mut acc = (s0 + s2) + (s1 + s3);
+        for kk in n4..n {
+            acc = a[kk].mul_add(b[kk], acc);
         }
         acc
     }
 
-    /// Euclidean norm.
+    /// Euclidean norm (rides [`dot`]'s unrolled accumulators).
     #[inline]
     pub fn norm2(a: &[f64]) -> f64 {
         dot(a, a).sqrt()
@@ -727,6 +849,93 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The unrolled `dot`/`norm2` must agree with the naive serial loop to
+    /// round-off across remainder lengths (n mod 4 ∈ {0,1,2,3}).
+    #[test]
+    fn vecops_unrolled_dot_matches_naive_loop() {
+        let mut rng = Pcg32::seeded(41);
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 33, 100, 257] {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let mut naive = 0.0;
+            for i in 0..n {
+                naive += a[i] * b[i];
+            }
+            let fast = vecops::dot(&a, &b);
+            assert!(
+                (fast - naive).abs() <= 1e-12 * (1.0 + naive.abs()),
+                "n={n}: {fast} vs {naive}"
+            );
+            let mut nn = 0.0;
+            for &x in &a {
+                nn += x * x;
+            }
+            let fastn = vecops::norm2(&a);
+            assert!(
+                (fastn - nn.sqrt()).abs() <= 1e-12 * (1.0 + nn.sqrt()),
+                "n={n} norm: {fastn} vs {}",
+                nn.sqrt()
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_accum_t_f64_is_gemm_accum() {
+        let mut rng = Pcg32::seeded(42);
+        for (ra, n, m) in [(4, 9, 1), (3, 7, 3)] {
+            let a = rng.normal_vec(ra * n);
+            let b = rng.normal_vec(n * m);
+            let mut c1 = rng.normal_vec(ra * m);
+            let mut c2 = c1.clone();
+            gemm_accum(&a, ra, n, &b, m, &mut c1);
+            gemm_accum_t::<f64>(&a, ra, n, &b, m, &mut c2);
+            assert_eq!(c1, c2, "ra={ra} n={n} m={m}: f64 tier must be bit-identical");
+        }
+    }
+
+    /// The f32 tier's error is pure storage rounding: contracting a
+    /// rounded-to-f32 copy of A in f64 accumulation must match the f64
+    /// product of that rounded copy exactly, and sit within a few ulps of
+    /// the unrounded product.
+    #[test]
+    fn gemm_accum_t_f32_rounds_storage_only() {
+        let mut rng = Pcg32::seeded(43);
+        for (ra, n, m) in [(5, 11, 1), (2, 6, 4)] {
+            let a = rng.normal_vec(ra * n);
+            let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let a32_widened: Vec<f64> = a32.iter().map(|&v| v as f64).collect();
+            let b = rng.normal_vec(n * m);
+            let mut c_tier = vec![0.0; ra * m];
+            gemm_accum_t::<f32>(&a32, ra, n, &b, m, &mut c_tier);
+            let mut c_widened = vec![0.0; ra * m];
+            gemm_accum(&a32_widened, ra, n, &b, m, &mut c_widened);
+            assert_eq!(c_tier, c_widened, "f32 tier = f64 product of the rounded panel");
+            let mut c_full = vec![0.0; ra * m];
+            gemm_accum(&a, ra, n, &b, m, &mut c_full);
+            for i in 0..ra * m {
+                let scale: f64 = (0..n).map(|k| (a[i / m * n + k] * b[k * m + i % m]).abs()).sum();
+                assert!(
+                    (c_tier[i] - c_full[i]).abs() <= 1e-6 * (1.0 + scale),
+                    "i={i}: {} vs {}",
+                    c_tier[i],
+                    c_full[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn precision_names_round_trip() {
+        for p in [Precision::F64, Precision::F32, Precision::Auto] {
+            assert_eq!(Precision::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Precision::from_name("half"), None);
+        assert_eq!(Precision::F32.storage_bytes(), 4);
+        assert_eq!(Precision::F64.storage_bytes(), 8);
+        assert_eq!(Precision::default(), Precision::F64);
+        assert!(Precision::F32.is_f32() && !Precision::Auto.is_f32());
     }
 
     #[test]

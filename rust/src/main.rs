@@ -14,6 +14,13 @@
 //! and tolerance resolution. `--tol ε` asks the session to auto-tune
 //! `(p, θ)` from the requested accuracy; `--p/--theta` set them manually.
 //!
+//! `mvm`, `gp`, and `gp-train` additionally take the storage-tier flag
+//!   --precision {f64,f32,auto}   (default auto)
+//! `f32` stores panels and near-field blocks at half width (f64
+//! accumulation; solves refine against the f64 residual), `f64` pins full
+//! precision, and `auto` picks f32 only when `--tol ε` leaves headroom
+//! above f32 round-off (ε ≥ 1e-5).
+//!
 //! Every experiment from the paper has a dedicated example/bench binary
 //! (see README); this launcher covers interactive use of the same API.
 
@@ -23,8 +30,15 @@ use fkt::cli::Args;
 use fkt::kernels::{Family, Kernel};
 use fkt::points::Points;
 use fkt::rng::Pcg32;
-use fkt::session::{Backend, OpHandle, Session};
+use fkt::session::{Backend, OpHandle, Precision, Session};
 use std::time::Instant;
+
+/// The uniform `--precision {f64,f32,auto}` flag (default `auto`).
+fn precision_from(args: &Args) -> Precision {
+    let name = args.get_str("precision", "auto");
+    Precision::from_name(&name)
+        .unwrap_or_else(|| panic!("--precision: expected f64, f32, or auto, got {name:?}"))
+}
 
 fn main() {
     let args = Args::parse();
@@ -102,6 +116,7 @@ fn build_op(args: &Args, session: &mut Session) -> (OpHandle, Vec<f64>, Points, 
         .operator(&pts)
         .kernel(family)
         .leaf_capacity(args.get("leaf", 512))
+        .precision(precision_from(args))
         .compression(args.has_flag("compress"));
     match args.tolerance() {
         Some(eps) => {
@@ -126,6 +141,7 @@ fn build_op(args: &Args, session: &mut Session) -> (OpHandle, Vec<f64>, Points, 
             res.bound
         );
     }
+    println!("storage tier: {}", op.precision().name());
     (op, w, pts, kernel)
 }
 
@@ -207,6 +223,7 @@ fn gp(args: &Args) {
             ..Default::default()
         },
         tolerance: args.tolerance(),
+        precision: precision_from(args),
         cg_tol: args.get("cg-tol", 1e-5),
         cg_max_iters: args.get("cg-max", 300),
         jitter: 1e-6,
@@ -223,6 +240,7 @@ fn gp(args: &Args) {
     if let Some(res) = gp.operator().resolved() {
         println!("tolerance resolved to p={} θ={}", res.p, res.theta);
     }
+    println!("storage tier: {}", gp.operator().precision().name());
     let t0 = Instant::now();
     let fit = gp.fit_alpha(&y0, &mut session);
     println!(
@@ -231,6 +249,10 @@ fn gp(args: &Args) {
         fit.rel_residual,
         fmt_time(t0.elapsed().as_secs_f64())
     );
+    let sweeps = session.counters().refine_sweeps;
+    if sweeps > 0 {
+        println!("mixed-precision refinement: {sweeps} sweeps (f32 operator, f64 residuals)");
+    }
 }
 
 /// GP hyperparameter training on the simulated SST workload: projected
@@ -256,6 +278,7 @@ fn gp_train(args: &Args) {
             ..Default::default()
         },
         tolerance: args.tolerance(),
+        precision: precision_from(args),
         cg_tol: args.get("cg-tol", 1e-4),
         cg_max_iters: args.get("cg-max", 200),
         jitter: 1e-8,

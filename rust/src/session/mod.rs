@@ -46,15 +46,19 @@ pub mod registry;
 pub mod tune;
 
 pub use crate::coordinator::{Backend, MvmMetrics};
+pub use crate::linalg::Precision;
 pub use registry::RegistryStats;
-pub use tune::{max_order, resolve as resolve_tolerance, Resolved, THETA_CANDIDATES};
+pub use tune::{
+    auto_precision, max_order, resolve as resolve_tolerance, Resolved, F32_AUTO_MIN_EPS,
+    THETA_CANDIDATES,
+};
 
 use crate::baselines::DenseOperator;
 use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::fkt::{ExpansionCenter, FktConfig, FktOperator};
 use crate::kernels::{Family, Kernel};
 use crate::linalg::{
-    cholesky, cholesky_solve, preconditioned_cg, preconditioned_cg_batch, BatchCgResult,
+    cholesky, cholesky_solve, preconditioned_cg, preconditioned_cg_batch, vecops, BatchCgResult,
     CgResult, Mat,
 };
 use crate::op::KernelOp;
@@ -70,6 +74,19 @@ const DEFAULT_REGISTRY_CAPACITY: usize = 64;
 /// bytes, so this bounds the map at trivial memory while still caching
 /// every realistic steady-state request mix).
 const TUNE_CACHE_FLUSH: usize = 1024;
+
+/// Inner-CG tolerance floor of the mixed-precision refined solve: the
+/// inner correction system is only the f64 system to f32 storage rounding
+/// (≈1e-6 operator-relative), so solving it much past 1e-5 buys nothing —
+/// the outer f64 residual correction supplies the remaining accuracy, one
+/// geometric contraction per sweep.
+const REFINE_INNER_TOL: f64 = 1e-5;
+
+/// Refinement sweep cap: each sweep contracts the outer residual by
+/// roughly `REFINE_INNER_TOL + κ·ε₃₂`, so realistic solves converge in
+/// 1–4 sweeps; the cap (with the stagnation guard) bounds pathological
+/// systems.
+const REFINE_MAX_SWEEPS: u64 = 16;
 
 /// Builder for [`Session`].
 #[derive(Clone, Copy, Debug)]
@@ -147,6 +164,11 @@ pub struct SessionCounters {
     pub solve: u64,
     /// [`Session::solve_batch`] calls.
     pub solve_batch: u64,
+    /// Mixed-precision refinement sweeps across all refined solves: one
+    /// sweep = one inner CG run against the f32-tier operator plus one
+    /// outer full-precision residual correction. Solves against f64-tier
+    /// operators contribute zero.
+    pub refine_sweeps: u64,
 }
 
 /// Identity of one tolerance resolution: kernel × dimension × ε × the
@@ -178,6 +200,7 @@ impl Session {
             p_override: None,
             theta_override: None,
             panel_budget: None,
+            precision: None,
             dense: false,
             transient: false,
         }
@@ -223,6 +246,13 @@ impl Session {
                 &zeros
             }
         };
+        // f32-tier operators route through mixed-precision iterative
+        // refinement: inner CG rides the fast f32 panels, the outer loop
+        // corrects against the full-precision residual, so the returned
+        // residual is honest w.r.t. the f64 operator.
+        if op.precision().is_f32() && op.as_fkt().is_some() {
+            return self.solve_refined(op, y, noise, opts);
+        }
         let jitter = opts.jitter;
         let coord = &mut self.coord;
         let kernel_op = op.op.as_ref();
@@ -279,6 +309,9 @@ impl Session {
                 &zeros
             }
         };
+        if op.precision().is_f32() && op.as_fkt().is_some() {
+            return self.solve_refined_batch(op, y, m, noise, opts);
+        }
         let jitter = opts.jitter;
         let coord = &mut self.coord;
         let kernel_op = op.op.as_ref();
@@ -308,6 +341,242 @@ impl Session {
         }
         let mut identity = |r: &[f64]| r.to_vec();
         preconditioned_cg_batch(&mut apply, &mut identity, y, m, opts.tol, opts.max_iters)
+    }
+
+    /// Mixed-precision iterative refinement behind [`Session::solve`] for
+    /// f32-tier operators. Each sweep solves the *correction* system
+    /// `(K₃₂ + D) d = r` by preconditioned CG against the fast f32 panels
+    /// (to [`REFINE_INNER_TOL`], no tighter — the f32 system only agrees
+    /// with the f64 one to storage rounding, so over-solving it is wasted
+    /// work), then recomputes the residual `r = y − (K₆₄ + D) x` through
+    /// the operator's full-precision streaming path. The loop ends when
+    /// that f64 residual meets `opts.tol` — the same promise a pure-f64
+    /// solve makes — or when a sweep stops halving it (the f32 error
+    /// floor, reported honestly via `converged = false`). Sweeps
+    /// accumulate in [`SessionCounters::refine_sweeps`].
+    fn solve_refined(
+        &mut self,
+        op: &OpHandle,
+        y: &[f64],
+        noise: &[f64],
+        opts: &SolveOpts,
+    ) -> CgResult {
+        let fkt = op.as_fkt().expect("refined solve requires an FKT operator");
+        let threads = self.coord.threads();
+        let n = y.len();
+        let jitter = opts.jitter;
+        let bnorm = vecops::norm2(y);
+        if bnorm == 0.0 {
+            return CgResult { x: vec![0.0; n], iterations: 0, rel_residual: 0.0, converged: true };
+        }
+        // One factorization serves every sweep (the leaf blocks depend on
+        // the kernel and noise, not on the storage tier).
+        let pre = if opts.precondition {
+            Some(BlockJacobi::build(fkt, noise, jitter))
+        } else {
+            None
+        };
+        let inner_tol = opts.tol.max(REFINE_INNER_TOL);
+        let mut x = vec![0.0; n];
+        let mut r = y.to_vec();
+        let mut rel = 1.0f64;
+        let mut prev_rel = f64::INFINITY;
+        let mut total_iters = 0usize;
+        let mut sweeps = 0u64;
+        let mut stalled = 0u32;
+        let mut converged = false;
+        while sweeps < REFINE_MAX_SWEEPS && total_iters < opts.max_iters {
+            let inner = {
+                let coord = &mut self.coord;
+                let kernel_op = op.op.as_ref();
+                let mut apply = |v: &[f64]| -> Vec<f64> {
+                    let mut kv = coord.mvm(kernel_op, v);
+                    for i in 0..n {
+                        kv[i] += (noise[i] + jitter) * v[i];
+                    }
+                    kv
+                };
+                let budget = opts.max_iters - total_iters;
+                match &pre {
+                    Some(p) => {
+                        let mut precond = |rr: &[f64]| p.apply(rr);
+                        preconditioned_cg(&mut apply, &mut precond, &r, inner_tol, budget)
+                    }
+                    None => {
+                        let mut identity = |rr: &[f64]| rr.to_vec();
+                        preconditioned_cg(&mut apply, &mut identity, &r, inner_tol, budget)
+                    }
+                }
+            };
+            vecops::axpy(1.0, &inner.x, &mut x);
+            total_iters += inner.iterations.max(1);
+            sweeps += 1;
+            // Outer correction: the f64 residual, f32 panels bypassed.
+            let mut kv = fkt.matvec_full_precision(&x, threads);
+            for i in 0..n {
+                kv[i] += (noise[i] + jitter) * x[i];
+            }
+            for i in 0..n {
+                r[i] = y[i] - kv[i];
+            }
+            rel = vecops::norm2(&r) / bnorm;
+            if rel <= opts.tol {
+                converged = true;
+                break;
+            }
+            // Stagnation at the f32 error floor: two CONSECUTIVE sweeps
+            // that fail to halve the residual — one slow sweep is still
+            // geometric progress on an ill-conditioned system.
+            if rel >= 0.5 * prev_rel {
+                stalled += 1;
+                if stalled >= 2 {
+                    break;
+                }
+            } else {
+                stalled = 0;
+            }
+            prev_rel = rel;
+        }
+        self.counters.refine_sweeps += sweeps;
+        CgResult { x, iterations: total_iters, rel_residual: rel, converged }
+    }
+
+    /// Batched mixed-precision refinement behind [`Session::solve_batch`]
+    /// (see [`Session::solve_refined`]): each sweep is ONE lockstep inner
+    /// block-CG against the f32 operator plus ONE full-precision batched
+    /// residual correction, so the whole batch pays one fused traversal
+    /// per inner iteration and one per sweep. Columns freeze as their f64
+    /// residual meets `opts.tol` (their residual block is zeroed, so the
+    /// inner CG skips them); column `c` reports its own inner-iteration
+    /// total and outer residual.
+    fn solve_refined_batch(
+        &mut self,
+        op: &OpHandle,
+        y: &[f64],
+        m: usize,
+        noise: &[f64],
+        opts: &SolveOpts,
+    ) -> BatchCgResult {
+        let fkt = op.as_fkt().expect("refined solve requires an FKT operator");
+        let threads = self.coord.threads();
+        let n = y.len() / m;
+        let jitter = opts.jitter;
+        let col = |c: usize| c * n..(c + 1) * n;
+        let mut bnorm = vec![0.0; m];
+        let mut converged = vec![false; m];
+        let mut rel_residual = vec![0.0; m];
+        let mut x = vec![0.0; n * m];
+        let mut r = y.to_vec();
+        for c in 0..m {
+            bnorm[c] = vecops::norm2(&y[col(c)]);
+            if bnorm[c] == 0.0 {
+                converged[c] = true;
+                r[col(c)].fill(0.0);
+            }
+        }
+        let mut iterations = vec![0usize; m];
+        let mut batched_mvms = 0usize;
+        if converged.iter().all(|&c| c) {
+            return BatchCgResult { x, iterations, rel_residual, converged, batched_mvms };
+        }
+        let pre = if opts.precondition {
+            Some(BlockJacobi::build(fkt, noise, jitter))
+        } else {
+            None
+        };
+        let inner_tol = opts.tol.max(REFINE_INNER_TOL);
+        let mut sweeps = 0u64;
+        let mut stalled = 0u32;
+        let mut prev_worst = f64::INFINITY;
+        while sweeps < REFINE_MAX_SWEEPS {
+            let spent = *iterations.iter().max().expect("m > 0");
+            if spent >= opts.max_iters {
+                break;
+            }
+            let inner = {
+                let coord = &mut self.coord;
+                let kernel_op = op.op.as_ref();
+                let mut apply = |v: &[f64]| -> Vec<f64> {
+                    let mut kv = coord.mvm_batch(kernel_op, v, m);
+                    for c in 0..m {
+                        for i in 0..n {
+                            kv[c * n + i] += (noise[i] + jitter) * v[c * n + i];
+                        }
+                    }
+                    kv
+                };
+                let budget = opts.max_iters - spent;
+                match &pre {
+                    Some(p) => {
+                        let mut precond = |rr: &[f64]| p.apply_batch(rr, m);
+                        preconditioned_cg_batch(&mut apply, &mut precond, &r, m, inner_tol, budget)
+                    }
+                    None => {
+                        let mut identity = |rr: &[f64]| rr.to_vec();
+                        preconditioned_cg_batch(
+                            &mut apply,
+                            &mut identity,
+                            &r,
+                            m,
+                            inner_tol,
+                            budget,
+                        )
+                    }
+                }
+            };
+            vecops::axpy(1.0, &inner.x, &mut x);
+            for c in 0..m {
+                if !converged[c] {
+                    iterations[c] += inner.iterations[c];
+                }
+            }
+            batched_mvms += inner.batched_mvms;
+            sweeps += 1;
+            // Outer correction: batched f64 residual, f32 panels bypassed.
+            let mut kv = fkt.matmat_full_precision(&x, m, threads);
+            batched_mvms += 1;
+            for c in 0..m {
+                for i in 0..n {
+                    kv[c * n + i] += (noise[i] + jitter) * x[c * n + i];
+                }
+            }
+            let mut worst = 0.0f64;
+            let mut all_done = true;
+            for c in 0..m {
+                if converged[c] {
+                    r[col(c)].fill(0.0);
+                    continue;
+                }
+                for i in 0..n {
+                    r[c * n + i] = y[c * n + i] - kv[c * n + i];
+                }
+                let rel = vecops::norm2(&r[col(c)]) / bnorm[c];
+                rel_residual[c] = rel;
+                if rel <= opts.tol {
+                    converged[c] = true;
+                    r[col(c)].fill(0.0);
+                } else {
+                    worst = worst.max(rel);
+                    all_done = false;
+                }
+            }
+            if all_done {
+                break;
+            }
+            // As in the single-RHS path: break only after two consecutive
+            // sweeps fail to halve the worst unconverged residual.
+            if worst >= 0.5 * prev_worst {
+                stalled += 1;
+                if stalled >= 2 {
+                    break;
+                }
+            } else {
+                stalled = 0;
+            }
+            prev_worst = worst;
+        }
+        self.counters.refine_sweeps += sweeps;
+        BatchCgResult { x, iterations, rel_residual, converged, batched_mvms }
     }
 
     /// Cumulative per-verb call counters (see [`SessionCounters`]).
@@ -404,6 +673,7 @@ pub struct OpSpec<'a> {
     p_override: Option<usize>,
     theta_override: Option<f64>,
     panel_budget: Option<usize>,
+    precision: Option<Precision>,
     dense: bool,
     transient: bool,
 }
@@ -487,6 +757,22 @@ impl<'a> OpSpec<'a> {
         self
     }
 
+    /// Storage-precision tier of the apply path (default
+    /// [`Precision::Auto`]): `F64`/`F32` pin the tier; `Auto` lets the
+    /// tolerance resolver pick f32 storage when the requested ε leaves
+    /// headroom above f32 round-off (ε ≥ [`F32_AUTO_MIN_EPS`] — see
+    /// [`auto_precision`]) and keeps f64 otherwise, including when no
+    /// tolerance was requested. The resolved tier joins the registry key:
+    /// the same spec at f32 and f64 caches two distinct operators, while
+    /// an `Auto` request shares its resolved tier's entry. An explicit
+    /// call — including an explicit `Auto` — takes precedence over a tier
+    /// carried in by the wholesale `.config(..)` setter regardless of
+    /// builder-call order.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = Some(precision);
+        self
+    }
+
     /// The paper's Barnes–Hut baseline: p = 0, centroid centers.
     pub fn barnes_hut(mut self, theta: f64, leaf_capacity: usize) -> Self {
         self.cfg = FktConfig::barnes_hut(theta, leaf_capacity);
@@ -522,6 +808,7 @@ impl<'a> OpSpec<'a> {
             p_override,
             theta_override,
             panel_budget,
+            precision,
             dense,
             transient,
         } = self;
@@ -530,8 +817,18 @@ impl<'a> OpSpec<'a> {
             // DenseOperator ignores every FKT hyperparameter; canonicalize
             // them so semantically identical dense requests share one
             // registry key regardless of stray .config()/.order() calls.
-            cfg = FktConfig::default();
+            // (It computes in f64 — precision canonicalizes with the rest.)
+            cfg = FktConfig { precision: Precision::F64, ..FktConfig::default() };
         } else {
+            // Storage tier, resolved before keying so `Auto` never reaches
+            // the registry: an explicit `.precision(..)` call wins (even an
+            // explicit `Auto` — it re-engages the rule over a tier pinned
+            // by `.config(..)`), else the config-carried tier, else Auto.
+            let requested = precision.unwrap_or(cfg.precision);
+            cfg.precision = match requested {
+                Precision::Auto => tune::auto_precision(tolerance),
+                pinned => pinned,
+            };
             // Resolution is skipped when both hyperparameters are forced
             // (nothing left to resolve — and a forced config must not
             // panic on an unattainable ε it will ignore anyway).
@@ -593,6 +890,7 @@ impl<'a> OpSpec<'a> {
             center: cfg.center,
             compression: cfg.compression,
             panel_budget: cfg.panel_budget_bytes,
+            precision: cfg.precision,
             dense,
         };
         let op = session.registry.get_or_build(key, build_op);
@@ -643,6 +941,13 @@ impl OpHandle {
     /// Resolved separation parameter θ.
     pub fn theta(&self) -> f64 {
         self.cfg.theta
+    }
+
+    /// Resolved storage-precision tier ([`Precision::F64`] or
+    /// [`Precision::F32`] — `Auto` is resolved at build). Dense handles
+    /// report `F64` (they compute in f64 throughout).
+    pub fn precision(&self) -> Precision {
+        self.cfg.precision
     }
 
     /// The tolerance resolution behind this handle, when `.tolerance(ε)`
@@ -957,6 +1262,236 @@ mod tests {
             assert!((a - b).abs() <= 1e-12 * (1.0 + b.abs()));
         }
         assert_eq!(session.last_metrics().panels_cached, 0, "budget 0 streams");
+    }
+
+    /// Registry key separation by tier: the same spec at F32 and F64 is
+    /// two distinct cached operators, repeated requests hit pointer-equal
+    /// per tier, and an Auto request shares its resolved tier's entry.
+    #[test]
+    fn precision_tiers_key_distinct_operators() {
+        let pts = uniform_points(300, 2, 750);
+        let mut rng = Pcg32::seeded(751);
+        let w = rng.normal_vec(300);
+        let mut session = Session::native(1);
+        let spec = |s: &mut Session, p: Precision| {
+            s.operator(&pts).kernel(Family::Gaussian).order(4).theta(0.5).precision(p).build()
+        };
+        let h64 = spec(&mut session, Precision::F64);
+        let h32 = spec(&mut session, Precision::F32);
+        assert!(!h64.ptr_eq(&h32), "tiers must cache separately");
+        assert_eq!(h64.precision(), Precision::F64);
+        assert_eq!(h32.precision(), Precision::F32);
+        // Pointer-equal hits within each tier.
+        assert!(h64.ptr_eq(&spec(&mut session, Precision::F64)));
+        assert!(h32.ptr_eq(&spec(&mut session, Precision::F32)));
+        let s = session.registry_stats();
+        assert_eq!((s.hits, s.misses), (2, 2));
+        // An Auto request with a loose tolerance resolves to F32 and
+        // shares the explicit-F32 entry for the same resolved (p, θ).
+        let auto = session
+            .operator(&pts)
+            .kernel(Family::Gaussian)
+            .tolerance(1e-3)
+            .build();
+        assert_eq!(auto.precision(), Precision::F32);
+        let pinned = session
+            .operator(&pts)
+            .kernel(Family::Gaussian)
+            .tolerance(1e-3)
+            .precision(Precision::F32)
+            .build();
+        assert!(auto.ptr_eq(&pinned), "Auto shares its resolved tier's cache entry");
+        // And the two tiers answer within the f32 storage-rounding bound.
+        let z64 = session.mvm(&h64, &w);
+        let z32 = session.mvm(&h32, &w);
+        assert!(rel_err(&z32, &z64) <= 5e-6);
+    }
+
+    /// The Auto rule end to end: loose ε picks f32, tight ε (or no ε at
+    /// all) keeps f64 — never f32 below ε = 1e-5.
+    #[test]
+    fn auto_precision_follows_tolerance() {
+        let pts = uniform_points(250, 2, 752);
+        let mut session = Session::native(1);
+        let at = |s: &mut Session, eps: f64| {
+            s.operator(&pts).kernel(Family::Gaussian).tolerance(eps).build().precision()
+        };
+        assert_eq!(at(&mut session, 1e-2), Precision::F32);
+        assert_eq!(at(&mut session, 1e-4), Precision::F32);
+        assert_eq!(at(&mut session, 1e-5), Precision::F32);
+        assert_eq!(at(&mut session, 9e-6), Precision::F64);
+        assert_eq!(at(&mut session, 1e-6), Precision::F64);
+        // No tolerance ⇒ conservative f64.
+        let h = session.operator(&pts).kernel(Family::Gaussian).order(4).theta(0.5).build();
+        assert_eq!(h.precision(), Precision::F64);
+        // Explicit precision beats the rule in both directions, and a
+        // `.config(..)`-carried tier survives builder-call order.
+        let forced = session
+            .operator(&pts)
+            .kernel(Family::Gaussian)
+            .tolerance(1e-2)
+            .precision(Precision::F64)
+            .build();
+        assert_eq!(forced.precision(), Precision::F64);
+        let cfg = FktConfig { p: 4, theta: 0.5, precision: Precision::F32, ..Default::default() };
+        let via_cfg = session.operator(&pts).kernel(Family::Gaussian).config(cfg).build();
+        assert_eq!(via_cfg.precision(), Precision::F32);
+        // An EXPLICIT `.precision(Auto)` re-engages the tolerance rule
+        // even over a `.config(..)`-pinned tier: ε below the f32 floor
+        // must come back f64.
+        let auto_over_cfg = session
+            .operator(&pts)
+            .kernel(Family::Gaussian)
+            .config(cfg)
+            .precision(Precision::Auto)
+            .tolerance(1e-6)
+            .build();
+        assert_eq!(auto_over_cfg.precision(), Precision::F64);
+        // Dense handles canonicalize to f64 regardless.
+        let dense = session
+            .operator(&pts)
+            .kernel(Family::Gaussian)
+            .precision(Precision::F32)
+            .dense()
+            .build();
+        assert_eq!(dense.precision(), Precision::F64);
+    }
+
+    /// `MvmMetrics` reports the tier and tier-priced panel residency:
+    /// the f32 operator's resident bytes are exactly half the f64 one's.
+    #[test]
+    fn metrics_report_tier_and_halved_panel_bytes() {
+        let pts = uniform_points(400, 2, 753);
+        let mut rng = Pcg32::seeded(754);
+        let w = rng.normal_vec(400);
+        let mut session = Session::native(2);
+        let h64 = session
+            .operator(&pts)
+            .kernel(Family::Cauchy)
+            .order(4)
+            .theta(0.5)
+            .leaf_capacity(64)
+            .build();
+        let _ = session.mvm(&h64, &w);
+        let m64 = session.last_metrics();
+        assert_eq!(m64.precision, Precision::F64);
+        assert!(m64.panel_bytes > 0);
+        let h32 = session
+            .operator(&pts)
+            .kernel(Family::Cauchy)
+            .order(4)
+            .theta(0.5)
+            .leaf_capacity(64)
+            .precision(Precision::F32)
+            .build();
+        let _ = session.mvm(&h32, &w);
+        let m32 = session.last_metrics();
+        assert_eq!(m32.precision, Precision::F32);
+        assert_eq!(m32.panel_bytes * 2, m64.panel_bytes, "halved residency under f32");
+        assert_eq!(m32.panels_cached, m64.panels_cached);
+    }
+
+    /// The refined-solve acceptance: a solve against the f32-tier operator
+    /// must reach the SAME residual tolerance as the pure-f64 solve on a
+    /// GP-style workload, with the sweeps surfaced in `SessionCounters`.
+    #[test]
+    fn refined_f32_solve_matches_f64_solve() {
+        let n = 250;
+        let pts = uniform_points(n, 2, 755);
+        let mut rng = Pcg32::seeded(756);
+        let y = rng.normal_vec(n);
+        let noise: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 0.2)).collect();
+        let kernel = Kernel::matern32(0.5);
+        let mut session = Session::native(2);
+        let build = |s: &mut Session, p: Precision| {
+            s.operator(&pts)
+                .scaled_kernel(kernel)
+                .order(6)
+                .theta(0.4)
+                .leaf_capacity(32)
+                .precision(p)
+                .build()
+        };
+        let h64 = build(&mut session, Precision::F64);
+        let h32 = build(&mut session, Precision::F32);
+        for precondition in [true, false] {
+            let opts = SolveOpts {
+                tol: 1e-8,
+                max_iters: 800,
+                jitter: 1e-8,
+                noise: Some(&noise),
+                precondition,
+            };
+            let sweeps_before = session.counters().refine_sweeps;
+            let pure = session.solve(&h64, &y, &opts);
+            assert!(pure.converged, "precondition={precondition}");
+            assert_eq!(
+                session.counters().refine_sweeps,
+                sweeps_before,
+                "f64-tier solves never sweep"
+            );
+            let refined = session.solve(&h32, &y, &opts);
+            let sweeps = session.counters().refine_sweeps - sweeps_before;
+            assert!(
+                refined.converged,
+                "precondition={precondition}: refined residual {}",
+                refined.rel_residual
+            );
+            assert!(refined.rel_residual <= opts.tol, "same tolerance as the f64 solve");
+            assert!(sweeps >= 1, "refinement must sweep at least once");
+            assert!(sweeps <= 8, "well-conditioned system converges in few sweeps: {sweeps}");
+            // Both solved the same (f64) system to 1e-8: solutions agree
+            // to κ·tol, far beyond what a raw f32 solve could promise.
+            let e = rel_err(&refined.x, &pure.x);
+            assert!(e <= 1e-4, "precondition={precondition}: refined vs pure rel err {e}");
+        }
+    }
+
+    /// Batched refined solve: column c matches its own single refined
+    /// solve (the lockstep inner CG preserves the per-column recurrence,
+    /// and the outer corrections are column-independent).
+    #[test]
+    fn refined_solve_batch_columns_match_single() {
+        let n = 200;
+        let m = 3;
+        let pts = uniform_points(n, 2, 757);
+        let mut rng = Pcg32::seeded(758);
+        let ys = rng.normal_vec(n * m);
+        let noise: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.3, 0.5)).collect();
+        let kernel = Kernel::matern32(0.4);
+        let mut session = Session::native(1);
+        let h32 = session
+            .operator(&pts)
+            .scaled_kernel(kernel)
+            .order(6)
+            .theta(0.4)
+            .leaf_capacity(32)
+            .precision(Precision::F32)
+            .build();
+        let opts = SolveOpts {
+            tol: 1e-8,
+            max_iters: 600,
+            jitter: 1e-8,
+            noise: Some(&noise),
+            precondition: true,
+        };
+        let sweeps_before = session.counters().refine_sweeps;
+        let batch = session.solve_batch(&h32, &ys, m, &opts);
+        let batch_sweeps = session.counters().refine_sweeps - sweeps_before;
+        assert!(batch.all_converged());
+        assert!(batch_sweeps >= 1);
+        for c in 0..m {
+            let single = session.solve(&h32, &ys[c * n..(c + 1) * n], &opts);
+            assert!(single.converged);
+            assert!(single.rel_residual <= opts.tol);
+            for i in 0..n {
+                let (b, s) = (batch.x[c * n + i], single.x[i]);
+                assert!(
+                    (b - s).abs() <= 1e-8 * (1.0 + s.abs()),
+                    "col={c} i={i}: {b} vs {s}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@
 
 use crate::fkt::ExpansionCenter;
 use crate::kernels::Family;
+use crate::linalg::Precision;
 use crate::op::KernelOp;
 use crate::points::Points;
 use std::collections::HashMap;
@@ -91,6 +92,12 @@ pub struct OpKey {
     /// — part of the identity because it changes the built operator's
     /// memory footprint and apply-time behavior.
     pub panel_budget: usize,
+    /// Resolved storage-precision tier (`Auto` never appears here — the
+    /// session resolves it before keying): the same spec at f32 and f64 is
+    /// two distinct operators with different panel storage, residency, and
+    /// error floor, while an `Auto` request that resolves to a tier shares
+    /// that tier's cache entry.
+    pub precision: Precision,
     /// Exact dense backend instead of the FKT.
     pub dense: bool,
 }
@@ -202,6 +209,7 @@ mod tests {
             center: ExpansionCenter::BoxCenter,
             compression: false,
             panel_budget: crate::fkt::DEFAULT_PANEL_BUDGET_BYTES,
+            precision: Precision::F64,
             dense: false,
         }
     }

@@ -30,6 +30,7 @@
 use crate::expansion::bound::truncation_bound_at;
 use crate::expansion::{CoeffTable, Expansion};
 use crate::kernels::Kernel;
+use crate::linalg::Precision;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -62,6 +63,29 @@ const N_RADII: usize = 24;
 /// separation); the 4× margin buys additional headroom for accumulation
 /// so `.tolerance(ε)` keeps its measured-error promise.
 const SAFETY: f64 = 0.25;
+
+/// Smallest requested tolerance for which [`auto_precision`] selects f32
+/// storage. The ε/4 headroom rule (`SAFETY`) reserves the caller's ε for
+/// truncation *plus* accumulation effects; extending it to cover storage
+/// rounding, the f32 tier's contribution — coefficient/kernel-value
+/// rounding of ≈2⁻²⁴ ≈ 6e-8 relative per stored value, amplified by
+/// partial cancellation to the order of 1e-6 in aggregate (measured ≲1e-6
+/// across the tested kernels, asserted ≤5e-6) — must itself sit below
+/// ε·SAFETY. That holds with ≥10× margin once ε·SAFETY ≥ 2.5e-6, i.e.
+/// ε ≥ 1e-5; below that the resolver must keep full f64 storage.
+pub const F32_AUTO_MIN_EPS: f64 = 1e-5;
+
+/// Resolve [`Precision::Auto`] for a request: f32 storage when the
+/// requested ε leaves headroom above f32 round-off (see
+/// [`F32_AUTO_MIN_EPS`]), f64 otherwise — including when no tolerance was
+/// requested at all (explicit `(p, θ)` states no error budget the resolver
+/// could spend on storage rounding, so it stays conservative).
+pub fn auto_precision(tolerance: Option<f64>) -> Precision {
+    match tolerance {
+        Some(eps) if eps >= F32_AUTO_MIN_EPS => Precision::F32,
+        _ => Precision::F64,
+    }
+}
 
 /// Extra tail orders kept beyond the largest candidate p when summing the
 /// Lemma 4.1 tail (the paper sums to 30; the tail decays geometrically in
@@ -199,6 +223,21 @@ mod tests {
             Expansion::expected_num_terms(3, r.p) as f64 * (0.75 / r.theta).powi(3)
         };
         assert!(cost(&small) <= cost(&large), "small {small:?} vs large {large:?}");
+    }
+
+    #[test]
+    fn auto_precision_rule() {
+        // Loose tolerances leave headroom above f32 round-off.
+        assert_eq!(auto_precision(Some(1e-2)), Precision::F32);
+        assert_eq!(auto_precision(Some(1e-4)), Precision::F32);
+        // The boundary is inclusive at ε = 1e-5…
+        assert_eq!(auto_precision(Some(F32_AUTO_MIN_EPS)), Precision::F32);
+        // …and Auto must NEVER pick f32 below it.
+        assert_eq!(auto_precision(Some(9.9e-6)), Precision::F64);
+        assert_eq!(auto_precision(Some(1e-6)), Precision::F64);
+        assert_eq!(auto_precision(Some(1e-12)), Precision::F64);
+        // No tolerance requested ⇒ no budget to spend ⇒ f64.
+        assert_eq!(auto_precision(None), Precision::F64);
     }
 
     #[test]

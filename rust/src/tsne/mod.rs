@@ -233,6 +233,11 @@ pub fn run(data: &Points, cfg: &TsneConfig, session: &mut Session) -> TsneResult
     let mut y: Vec<f64> = (0..2 * n).map(|_| 1e-4 * rng.normal()).collect();
     let mut vel = vec![0.0; 2 * n];
     let mut kl_trace = Vec::new();
+    // One embedding buffer reused across gradient steps: each iteration
+    // copies the current positions in place instead of allocating a fresh
+    // O(N) `Points` per step (the repulsive field only needs a read-only
+    // snapshot of `y`).
+    let mut embedding = Points::new(2, vec![0.0; 2 * n]);
     for iter in 0..cfg.iterations {
         let exag = if iter < cfg.exaggeration_iters { cfg.exaggeration } else { 1.0 };
         let momentum = if iter < cfg.exaggeration_iters {
@@ -240,7 +245,7 @@ pub fn run(data: &Points, cfg: &TsneConfig, session: &mut Session) -> TsneResult
         } else {
             cfg.momentum_late
         };
-        let embedding = Points::new(2, y.clone());
+        embedding.coords.copy_from_slice(&y);
         let (rx, ry, z) = repulsive_field(&embedding, cfg, session);
         // Attractive term over the sparse P.
         let mut grad = vec![0.0; 2 * n];
