@@ -130,6 +130,7 @@ fn main() {
     json.record("panel_bytes", panel_bytes as f64);
     json.record("apply_speedup_vs_first", vs_first);
     json.record("apply_speedup_vs_streamed", vs_streamed);
+    json.record_str("simd_backend", fkt::linalg::simd::backend().name());
     let path = BenchJson::default_path();
     match json.save_merged(&path) {
         Ok(()) => println!("\nBENCH json merged into {}", path.display()),

@@ -101,6 +101,7 @@ fn main() {
     json.record("gp_train_cg_iterations_mean", cg_mean);
     json.record("gp_train_batched_solves_per_iteration", solves_per_iter);
     json.record("gp_train_total_seconds", total);
+    json.record_str("simd_backend", fkt::linalg::simd::backend().name());
     let path = BenchJson::default_path();
     match json.save_merged(&path) {
         Ok(()) => println!("\nBENCH json merged into {}", path.display()),

@@ -147,6 +147,7 @@ fn main() {
     json.record("refined_solve_inner_iterations", refined.iterations as f64);
     json.record("refined_solve_sweeps", sweeps as f64);
     json.record("f32_vs_f64_apply_rel_err", tier_err);
+    json.record_str("simd_backend", fkt::linalg::simd::backend().name());
     let path = BenchJson::default_path();
     match json.save_merged(&path) {
         Ok(()) => println!("\nBENCH json merged into {}", path.display()),

@@ -91,6 +91,7 @@ fn main() {
     }
     ttable.print();
 
+    json.record_str("simd_backend", fkt::linalg::simd::backend().name());
     let path = BenchJson::default_path();
     match json.save_merged(&path) {
         Ok(()) => println!("\nBENCH json merged into {}", path.display()),

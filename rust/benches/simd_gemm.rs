@@ -1,0 +1,114 @@
+//! SIMD micro-kernel speedup: the dispatched `linalg::simd` GEMM against
+//! the forced-scalar fallback, on the panel shapes the engine actually
+//! produces (tall-skinny `ra × n` coefficient panels, m = 1 single-RHS
+//! and m = 8 batched applies, both storage tiers).
+//!
+//! Records into BENCH.json:
+//! * `simd_vs_scalar_gemm_speedup_{f64,f32}_m{1,8}` — per-shape ratios;
+//! * `simd_vs_scalar_gemm_speedup` — the headline f32 m=8 panel shape
+//!   (design target ≥ 2×);
+//! * `simd_backend` — the dispatched backend name; on a machine without
+//!   AVX2+FMA (or under `FKT_FORCE_SCALAR`) every ratio is ≈1 and the
+//!   backend string says why.
+//!
+//! ```text
+//! cargo bench --bench simd_gemm [-- --ra 4096 --n 64]
+//! ```
+
+use fkt::benchkit::{fmt_time, BenchJson, Bencher, Table};
+use fkt::cli::Args;
+use fkt::linalg::simd::{self, SimdBackend};
+use fkt::linalg::Real;
+use fkt::rng::Pcg32;
+
+/// Median-time one (tier, m) shape under `which`, returning seconds.
+fn time_gemm<T: Real>(
+    bench: &Bencher,
+    which: SimdBackend,
+    a: &[T],
+    ra: usize,
+    n: usize,
+    b: &[f64],
+    m: usize,
+) -> f64 {
+    let mut c = vec![0.0; ra * m];
+    let stats = bench.run(|| {
+        c.fill(0.0);
+        simd::gemm_accum_t_with(which, a, ra, n, b, m, &mut c);
+        c[0]
+    });
+    stats.median
+}
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let ra: usize = args.get("ra", 4096);
+    let n: usize = args.get("n", 64);
+    let backend = simd::backend();
+    let mut rng = Pcg32::seeded(2024);
+    let a = rng.normal_vec(ra * n);
+    let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+    let bench = Bencher::default();
+    let mut json = BenchJson::new();
+    let mut table = Table::new(&["tier", "m", "scalar", backend.name(), "speedup"]);
+
+    println!(
+        "SIMD GEMM micro-kernels: panel {ra}×{n}, dispatched backend {} \
+         (avx2+fma available: {})",
+        backend.name(),
+        simd::avx2_available()
+    );
+
+    let mut headline = 1.0;
+    for m in [1usize, 8] {
+        let b = rng.normal_vec(n * m);
+
+        // Correctness smoke before timing: dispatched vs scalar ≤ 1e-10.
+        let mut c_disp = vec![0.0; ra * m];
+        simd::gemm_accum_t_with::<f64>(backend, &a, ra, n, &b, m, &mut c_disp);
+        let mut c_scal = vec![0.0; ra * m];
+        simd::gemm_accum_t_with::<f64>(SimdBackend::Scalar, &a, ra, n, &b, m, &mut c_scal);
+        for i in 0..ra * m {
+            assert!(
+                (c_disp[i] - c_scal[i]).abs() <= 1e-10 * (1.0 + c_scal[i].abs()),
+                "backend disagreement at m={m} i={i}"
+            );
+        }
+
+        let scalar64 = time_gemm::<f64>(&bench, SimdBackend::Scalar, &a, ra, n, &b, m);
+        let simd64 = time_gemm::<f64>(&bench, backend, &a, ra, n, &b, m);
+        let scalar32 = time_gemm::<f32>(&bench, SimdBackend::Scalar, &a32, ra, n, &b, m);
+        let simd32 = time_gemm::<f32>(&bench, backend, &a32, ra, n, &b, m);
+        let speed64 = scalar64 / simd64;
+        let speed32 = scalar32 / simd32;
+        table.row(&[
+            "f64".into(),
+            format!("{m}"),
+            fmt_time(scalar64),
+            fmt_time(simd64),
+            format!("{speed64:.2}x"),
+        ]);
+        table.row(&[
+            "f32".into(),
+            format!("{m}"),
+            fmt_time(scalar32),
+            fmt_time(simd32),
+            format!("{speed32:.2}x"),
+        ]);
+        json.record(&format!("simd_vs_scalar_gemm_speedup_f64_m{m}"), speed64);
+        json.record(&format!("simd_vs_scalar_gemm_speedup_f32_m{m}"), speed32);
+        if m == 8 {
+            // The headline ratio: the f32 batched-apply panel shape.
+            headline = speed32;
+        }
+    }
+    table.print();
+
+    json.record("simd_vs_scalar_gemm_speedup", headline);
+    json.record_str("simd_backend", backend.name());
+    let path = BenchJson::default_path();
+    match json.save_merged(&path) {
+        Ok(()) => println!("\nBENCH json merged into {}", path.display()),
+        Err(e) => eprintln!("\nBENCH json write failed ({}): {e}", path.display()),
+    }
+}

@@ -95,13 +95,34 @@ impl Bencher {
     }
 }
 
+/// A recorded bench metric value: a number (timings, speedups, errors) or
+/// a short string (e.g. the dispatched SIMD backend name).
+#[derive(Clone, Debug, PartialEq)]
+pub enum BenchValue {
+    /// Numeric metric. Non-finite values serialize as `null`.
+    Num(f64),
+    /// String metric, serialized as a JSON string.
+    Str(String),
+}
+
+/// Escape the minimal set a metric key or string value could plausibly
+/// contain inside a JSON string literal.
+fn escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' | '\\' => vec!['\\', c],
+            _ => vec![c],
+        })
+        .collect()
+}
+
 /// Minimal machine-readable bench recorder (no `serde` available offline):
-/// accumulates flat `key → number` pairs and serializes them as a JSON
-/// object so CI / the driver can diff bench results across PRs. Non-finite
-/// values serialize as `null`.
+/// accumulates flat `key → value` pairs ([`BenchValue`] numbers or
+/// strings) and serializes them as a JSON object so CI / the driver can
+/// diff bench results across PRs. Non-finite numbers serialize as `null`.
 #[derive(Clone, Debug, Default)]
 pub struct BenchJson {
-    entries: Vec<(String, f64)>,
+    entries: Vec<(String, BenchValue)>,
 }
 
 impl BenchJson {
@@ -110,9 +131,15 @@ impl BenchJson {
         Self::default()
     }
 
-    /// Record (or append) one metric.
+    /// Record (or append) one numeric metric.
     pub fn record(&mut self, key: &str, value: f64) {
-        self.entries.push((key.to_string(), value));
+        self.entries.push((key.to_string(), BenchValue::Num(value)));
+    }
+
+    /// Record (or append) one string metric — how every bench stamps its
+    /// record with the dispatched `simd_backend` name.
+    pub fn record_str(&mut self, key: &str, value: &str) {
+        self.entries.push((key.to_string(), BenchValue::Str(value.to_string())));
     }
 
     /// Serialize as a JSON object (keys in insertion order).
@@ -122,18 +149,15 @@ impl BenchJson {
             if i > 0 {
                 out.push_str(", ");
             }
-            // Escape the minimal set a metric key could plausibly contain.
-            let key: String = k
-                .chars()
-                .flat_map(|c| match c {
-                    '"' | '\\' => vec!['\\', c],
-                    _ => vec![c],
-                })
-                .collect();
-            if v.is_finite() {
-                out.push_str(&format!("\"{key}\": {v}"));
-            } else {
-                out.push_str(&format!("\"{key}\": null"));
+            let key = escape(k);
+            match v {
+                BenchValue::Num(v) if v.is_finite() => {
+                    out.push_str(&format!("\"{key}\": {v}"));
+                }
+                BenchValue::Num(_) => out.push_str(&format!("\"{key}\": null")),
+                BenchValue::Str(s) => {
+                    out.push_str(&format!("\"{key}\": \"{}\"", escape(s)));
+                }
             }
         }
         out.push('}');
@@ -145,35 +169,49 @@ impl BenchJson {
         std::fs::write(path, self.to_json() + "\n")
     }
 
-    /// Parse a flat `{"key": number, ...}` object as produced by
+    /// Parse a flat `{"key": number-or-string, ...}` object as produced by
     /// [`BenchJson::to_json`]. Tolerant of whitespace; unparsable values
     /// (including `null`) are skipped. Not a general JSON parser — just
     /// the inverse of our own writer, for merging across bench binaries.
-    pub fn parse_flat(text: &str) -> Vec<(String, f64)> {
-        let mut out = Vec::new();
-        let mut chars = text.chars().peekable();
-        loop {
-            // Scan to the next opening quote (key start).
-            if !chars.any(|c| c == '"') {
-                break;
-            }
-            let mut key = String::new();
+    pub fn parse_flat(text: &str) -> Vec<(String, BenchValue)> {
+        // Read a quoted string body (opening quote already consumed).
+        fn read_string(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) -> String {
+            let mut s = String::new();
             let mut escaped = false;
             for c in chars.by_ref() {
                 if escaped {
-                    key.push(c);
+                    s.push(c);
                     escaped = false;
                 } else if c == '\\' {
                     escaped = true;
                 } else if c == '"' {
                     break;
                 } else {
-                    key.push(c);
+                    s.push(c);
                 }
             }
-            // Scan to the colon, then collect the value token.
-            if !chars.any(|c| c == ':') {
+            s
+        }
+        let mut out = Vec::new();
+        let mut chars = text.chars().peekable();
+        loop {
+            // Scan to the next opening quote (key start).
+            if !chars.by_ref().any(|c| c == '"') {
                 break;
+            }
+            let key = read_string(&mut chars);
+            // Scan to the colon, then the value: a quoted string or a
+            // bare token up to the next ',' / '}'.
+            if !chars.by_ref().any(|c| c == ':') {
+                break;
+            }
+            while chars.peek().is_some_and(|c| c.is_whitespace()) {
+                chars.next();
+            }
+            if chars.peek() == Some(&'"') {
+                chars.next();
+                out.push((key, BenchValue::Str(read_string(&mut chars))));
+                continue;
             }
             let mut value = String::new();
             while let Some(&c) = chars.peek() {
@@ -184,7 +222,7 @@ impl BenchJson {
                 chars.next();
             }
             if let Ok(v) = value.trim().parse::<f64>() {
-                out.push((key, v));
+                out.push((key, BenchValue::Num(v)));
             }
         }
         out
@@ -198,12 +236,12 @@ impl BenchJson {
         if let Ok(existing) = std::fs::read_to_string(path) {
             for (k, v) in Self::parse_flat(&existing) {
                 if !self.entries.iter().any(|(ek, _)| ek == &k) {
-                    merged.record(&k, v);
+                    merged.entries.push((k, v));
                 }
             }
         }
         for (k, v) in &self.entries {
-            merged.record(k, *v);
+            merged.entries.push((k.clone(), v.clone()));
         }
         merged.save(path)
     }
@@ -317,8 +355,13 @@ mod tests {
         let mut j = BenchJson::new();
         j.record("batched_vs_looped_mvm", 2.5);
         j.record("weird\"key", f64::NAN);
+        j.record_str("simd_backend", "avx2+fma");
         let s = j.to_json();
-        assert_eq!(s, "{\"batched_vs_looped_mvm\": 2.5, \"weird\\\"key\": null}");
+        assert_eq!(
+            s,
+            "{\"batched_vs_looped_mvm\": 2.5, \"weird\\\"key\": null, \
+             \"simd_backend\": \"avx2+fma\"}"
+        );
     }
 
     #[test]
@@ -327,12 +370,15 @@ mod tests {
         j.record("cache_speedup", 12.5);
         j.record("operator_build_seconds", 3.25e-2);
         j.record("skipped_null", f64::INFINITY); // serializes as null
+        j.record_str("simd_backend", "scalar");
+        j.record_str("weird\"value", "a\\b");
         let parsed = BenchJson::parse_flat(&j.to_json());
-        assert_eq!(parsed.len(), 2);
-        assert_eq!(parsed[0].0, "cache_speedup");
-        assert!((parsed[0].1 - 12.5).abs() < 1e-12);
+        assert_eq!(parsed.len(), 4);
+        assert_eq!(parsed[0], ("cache_speedup".into(), BenchValue::Num(12.5)));
         assert_eq!(parsed[1].0, "operator_build_seconds");
-        assert!((parsed[1].1 - 3.25e-2).abs() < 1e-12);
+        assert_eq!(parsed[1].1, BenchValue::Num(3.25e-2));
+        assert_eq!(parsed[2], ("simd_backend".into(), BenchValue::Str("scalar".into())));
+        assert_eq!(parsed[3], ("weird\"value".into(), BenchValue::Str("a\\b".into())));
         assert!(BenchJson::parse_flat("").is_empty());
         assert!(BenchJson::parse_flat("{}").is_empty());
     }
@@ -344,17 +390,24 @@ mod tests {
         let mut a = BenchJson::new();
         a.record("from_bench_a", 1.0);
         a.record("shared", 1.0);
+        a.record_str("simd_backend", "scalar");
         a.save(&path).expect("write");
         let mut b = BenchJson::new();
         b.record("shared", 2.0);
         b.record("from_bench_b", 3.0);
+        b.record_str("simd_backend", "avx2+fma");
         b.save_merged(&path).expect("merge");
         let text = std::fs::read_to_string(&path).expect("read");
         let parsed = BenchJson::parse_flat(&text);
-        let get = |k: &str| parsed.iter().find(|(pk, _)| pk == k).map(|(_, v)| *v);
-        assert_eq!(get("from_bench_a"), Some(1.0));
-        assert_eq!(get("shared"), Some(2.0), "newer value wins");
-        assert_eq!(get("from_bench_b"), Some(3.0));
+        let get = |k: &str| parsed.iter().find(|(pk, _)| pk == k).map(|(_, v)| v.clone());
+        assert_eq!(get("from_bench_a"), Some(BenchValue::Num(1.0)));
+        assert_eq!(get("shared"), Some(BenchValue::Num(2.0)), "newer value wins");
+        assert_eq!(get("from_bench_b"), Some(BenchValue::Num(3.0)));
+        assert_eq!(
+            get("simd_backend"),
+            Some(BenchValue::Str("avx2+fma".into())),
+            "string values survive the merge round-trip"
+        );
         let _ = std::fs::remove_file(&path);
     }
 

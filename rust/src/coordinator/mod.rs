@@ -12,7 +12,7 @@
 //! * metrics — per-phase wall times and tile counts for EXPERIMENTS.md.
 
 use crate::fkt::FktOperator;
-use crate::linalg::Precision;
+use crate::linalg::{Precision, SimdBackend};
 use crate::op::KernelOp;
 use crate::runtime::Runtime;
 use std::time::Instant;
@@ -94,6 +94,13 @@ pub struct MvmMetrics {
     /// an f32-tier operator reports half the f64 residency for the same
     /// panels.
     pub precision: Precision,
+    /// SIMD micro-kernel backend every native contraction of this MVM
+    /// dispatched to (`"avx2+fma"` on x86_64 with both features,
+    /// `"scalar"` for the portable fallback or under `FKT_FORCE_SCALAR`).
+    /// Resolved once per process — see [`crate::linalg::simd::backend`] —
+    /// so perf reports are self-describing about the kernel tier they
+    /// measured.
+    pub simd_backend: SimdBackend,
 }
 
 /// The coordinator.
@@ -178,7 +185,12 @@ impl Coordinator {
             Some(f) => self.will_use_pjrt(&f.kernel.family.name(), f.tree().d),
             None => false,
         };
-        let mut metrics = MvmMetrics { used_pjrt: use_pjrt, columns: m, ..Default::default() };
+        let mut metrics = MvmMetrics {
+            used_pjrt: use_pjrt,
+            columns: m,
+            simd_backend: crate::linalg::simd::backend(),
+            ..Default::default()
+        };
         let z = if use_pjrt {
             // The AOT tile executable is single-RHS; columns loop through
             // it (the tile metrics accumulate across columns).
@@ -358,6 +370,10 @@ mod tests {
             assert!((z[i] - direct[i]).abs() < 1e-10 * (1.0 + direct[i].abs()));
         }
         assert!(!coord.last_metrics.used_pjrt);
+        // The metrics carry the process-wide dispatched micro-kernel
+        // backend, whatever it resolved to on this machine.
+        assert_eq!(coord.last_metrics.simd_backend, crate::linalg::simd::backend());
+        assert!(!coord.last_metrics.simd_backend.name().is_empty());
     }
 
     #[test]

@@ -108,8 +108,9 @@ const TGT_CHUNK: usize = 32;
 /// is `t×m` row-major accumulators. The kernel profile is evaluated once
 /// per (target, source) pair — shared across all m columns — into a small
 /// block which is then contracted with the weight block through the
-/// [`crate::linalg::gemm_accum`] micro-kernel. This is the f64 tier of
-/// [`block_matmat_t`].
+/// [`crate::linalg::gemm_accum`] micro-kernel (runtime-dispatched to
+/// AVX2+FMA tiles where available — see [`crate::linalg::simd`]). This is
+/// the f64 tier of [`block_matmat_t`].
 pub fn block_matmat(
     family: Family,
     d: usize,

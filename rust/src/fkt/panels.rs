@@ -19,10 +19,11 @@
 //! * **target panel** `E ∈ R^{|F_b| × 𝒫}` — the m2t pass becomes
 //!   `Z[F_b] += E · μ_node` (one GEMM per node).
 //!
-//! Both run through the widened, `mul_add`-unrolled
-//! [`crate::linalg::gemm_accum`] micro-kernel, so the dominant far-field
-//! phase of a *repeated* apply is pure BLAS-3 over precomputed
-//! coefficients.
+//! Both run through the runtime-dispatched [`crate::linalg::simd`]
+//! micro-kernels (AVX2+FMA register-blocked tiles where available, the
+//! widened `mul_add` loops otherwise — see [`crate::linalg::gemm_accum`]),
+//! so the dominant far-field phase of a *repeated* apply is pure BLAS-3
+//! over precomputed coefficients.
 //!
 //! **Precision tiers.** Panels are stored in the operator's precision tier
 //! ([`crate::fkt::FktConfig::precision`]): coefficients are always
@@ -477,8 +478,11 @@ impl FktOperator {
     /// m2t pass for one node and `m` interleaved columns: the cached path
     /// is one `Z[F_b] += E · μ` GEMM plus a scatter; the streamed path
     /// evaluates each target's row (rounded through `tier` storage) and
-    /// contracts it against `μ` through the same micro-kernel, so both
-    /// paths perform bit-identical per-row products.
+    /// contracts it against `μ` through the same micro-kernel. The
+    /// dispatched backends keep their per-row kernel recipe independent of
+    /// the row count (see [`crate::linalg::simd`]'s determinism contract),
+    /// so both paths perform bit-identical per-row products within any one
+    /// backend.
     pub(super) fn far_node_apply(
         &self,
         id: usize,

@@ -4,12 +4,17 @@
 //! with matvec/gemm, conjugate gradients (the GP solver pairs CG with FKT
 //! MVMs), Cholesky (small-scale exact reference for tests), a column-pivoted
 //! Householder QR for numerical rank estimates, and an *exact rational* rank
-//! factorization used by the §A.4 radial compression.
+//! factorization used by the §A.4 radial compression. Every hot contraction
+//! ([`gemm_accum`]/[`gemm_accum_t`], [`vecops`], the [`Mat`] products) runs
+//! on the runtime-dispatched SIMD micro-kernels in [`simd`].
 
 use crate::exact::Rational;
 
 pub mod qr;
 pub use qr::{col_pivoted_qr, numerical_rank, PivotedQr};
+
+pub mod simd;
+pub use simd::SimdBackend;
 
 /// A storage scalar for the precision-tiered apply engine.
 ///
@@ -27,6 +32,18 @@ pub trait Real: Copy + Send + Sync + std::fmt::Debug + 'static {
     fn from_f64(v: f64) -> Self;
     /// Widen back to `f64` (exact for both tiers).
     fn to_f64(self) -> f64;
+    /// Dispatch hook for the SIMD layer: view a storage slice as f64
+    /// storage. `Some` only for `Self = f64`; the default is `None`.
+    #[inline(always)]
+    fn slice_as_f64(_s: &[Self]) -> Option<&[f64]> {
+        None
+    }
+    /// Dispatch hook for the SIMD layer: view a storage slice as f32
+    /// storage. `Some` only for `Self = f32`; the default is `None`.
+    #[inline(always)]
+    fn slice_as_f32(_s: &[Self]) -> Option<&[f32]> {
+        None
+    }
 }
 
 impl Real for f64 {
@@ -39,6 +56,10 @@ impl Real for f64 {
     fn to_f64(self) -> f64 {
         self
     }
+    #[inline(always)]
+    fn slice_as_f64(s: &[f64]) -> Option<&[f64]> {
+        Some(s)
+    }
 }
 
 impl Real for f32 {
@@ -50,6 +71,10 @@ impl Real for f32 {
     #[inline(always)]
     fn to_f64(self) -> f64 {
         self as f64
+    }
+    #[inline(always)]
+    fn slice_as_f32(s: &[f32]) -> Option<&[f32]> {
+        Some(s)
     }
 }
 
@@ -220,16 +245,13 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
 ///
 /// This is the one hot contraction the whole stack funnels through: the
 /// batched near field, the panelized far field (`Z[panel] += E·μ`,
-/// `μ = Sᵀ·W`), and [`Mat::matvec`]/[`Mat::matvec_t`]. Two widened
-/// `mul_add` paths:
-/// * `m == 1` — per-row dot product over four independent fused
-///   accumulators (breaks the serial FMA dependency chain);
-/// * `m > 1` — i-k-j order with the k-loop unrolled two B-rows deep, the
-///   inner loop a contiguous fused axpy over B's rows, so it
-///   auto-vectorizes for the small m (1–8 RHS columns) the engine
-///   produces.
+/// `μ = Sᵀ·W`), and [`Mat::matvec`]/[`Mat::matvec_t`]. It runs on the
+/// process-wide dispatched micro-kernel backend (see [`simd`]): explicit
+/// AVX2+FMA register-blocked tiles where the CPU supports them, the
+/// portable unrolled loops otherwise, with an `m == 1` dot path and an
+/// `m > 1` fused-axpy path in both backends.
 pub fn gemm_accum(a: &[f64], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [f64]) {
-    gemm_accum_t::<f64>(a, ra, n, b, m, c)
+    simd::gemm_accum_t::<f64>(a, ra, n, b, m, c)
 }
 
 /// Precision-tiered variant of [`gemm_accum`]: `A` is stored in the tier
@@ -237,97 +259,35 @@ pub fn gemm_accum(a: &[f64], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [
 /// `B` and `C` stay f64, and every product widens `A`'s entries back to
 /// f64 before the fused multiply-add — storage in `T`, accumulation in
 /// f64 (see [`Real`]). For `T = f64` the widening is the identity and this
-/// *is* [`gemm_accum`], instruction for instruction.
+/// *is* [`gemm_accum`], instruction for instruction. Delegates to the
+/// dispatched micro-kernel layer ([`simd::gemm_accum_t`]).
 pub fn gemm_accum_t<T: Real>(a: &[T], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [f64]) {
-    assert_eq!(a.len(), ra * n, "A shape mismatch");
-    assert!(b.len() >= n * m, "B too short");
-    assert_eq!(c.len(), ra * m, "C shape mismatch");
-    if m == 1 {
-        let n4 = n & !3;
-        for i in 0..ra {
-            let arow = &a[i * n..(i + 1) * n];
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
-            let mut k = 0;
-            while k < n4 {
-                s0 = arow[k].to_f64().mul_add(b[k], s0);
-                s1 = arow[k + 1].to_f64().mul_add(b[k + 1], s1);
-                s2 = arow[k + 2].to_f64().mul_add(b[k + 2], s2);
-                s3 = arow[k + 3].to_f64().mul_add(b[k + 3], s3);
-                k += 4;
-            }
-            let mut acc = (s0 + s2) + (s1 + s3);
-            for kk in n4..n {
-                acc = arow[kk].to_f64().mul_add(b[kk], acc);
-            }
-            c[i] += acc;
-        }
-        return;
-    }
-    let n2 = n & !1;
-    for i in 0..ra {
-        let arow = &a[i * n..(i + 1) * n];
-        let crow = &mut c[i * m..(i + 1) * m];
-        let mut k = 0;
-        while k < n2 {
-            let a0 = arow[k].to_f64();
-            let a1 = arow[k + 1].to_f64();
-            let b0 = &b[k * m..k * m + m];
-            let b1 = &b[(k + 1) * m..(k + 1) * m + m];
-            for j in 0..m {
-                crow[j] = a1.mul_add(b1[j], a0.mul_add(b0[j], crow[j]));
-            }
-            k += 2;
-        }
-        if n2 < n {
-            let a0 = arow[n2].to_f64();
-            let b0 = &b[n2 * m..n2 * m + m];
-            for j in 0..m {
-                crow[j] = a0.mul_add(b0[j], crow[j]);
-            }
-        }
-    }
+    simd::gemm_accum_t(a, ra, n, b, m, c)
 }
 
 /// Vector helpers used throughout.
 pub mod vecops {
-    /// Dot product over four independent fused accumulators — the same
-    /// unrolling as [`super::gemm_accum`]'s `m = 1` path, because CG inner
-    /// products (`rᵀz`, `pᵀAp`, residual norms every iteration) are
-    /// otherwise a serial-FMA dependency chain on the solve hot path.
+    /// Dot product through the dispatched micro-kernel backend
+    /// ([`super::simd::dot`]) — the same shared kernel as
+    /// [`super::gemm_accum`]'s `m = 1` path, because CG inner products
+    /// (`rᵀz`, `pᵀAp`, residual norms every iteration) sit on the solve
+    /// hot path.
     #[inline]
     pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-        debug_assert_eq!(a.len(), b.len());
-        let n = a.len();
-        let n4 = n & !3;
-        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
-        let mut k = 0;
-        while k < n4 {
-            s0 = a[k].mul_add(b[k], s0);
-            s1 = a[k + 1].mul_add(b[k + 1], s1);
-            s2 = a[k + 2].mul_add(b[k + 2], s2);
-            s3 = a[k + 3].mul_add(b[k + 3], s3);
-            k += 4;
-        }
-        let mut acc = (s0 + s2) + (s1 + s3);
-        for kk in n4..n {
-            acc = a[kk].mul_add(b[kk], acc);
-        }
-        acc
+        super::simd::dot(a, b)
     }
 
-    /// Euclidean norm (rides [`dot`]'s unrolled accumulators).
+    /// Euclidean norm (rides [`dot`]'s dispatched kernel).
     #[inline]
     pub fn norm2(a: &[f64]) -> f64 {
         dot(a, a).sqrt()
     }
 
-    /// y += alpha * x.
+    /// Fused y += alpha · x through the dispatched micro-kernel backend
+    /// ([`super::simd::axpy`]).
     #[inline]
     pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-        debug_assert_eq!(x.len(), y.len());
-        for i in 0..x.len() {
-            y[i] += alpha * x[i];
-        }
+        super::simd::axpy(alpha, x, y)
     }
 
     /// Squared Euclidean distance between points.

@@ -1,0 +1,1164 @@
+//! Runtime-dispatched SIMD micro-kernels for the panel GEMM engine.
+//!
+//! Every hot contraction in the stack — the cached-panel far field
+//! (`Z[panel] += E·μ`, `μ = Sᵀ·W`), the near-field kernel blocks, CG/Lanczos
+//! vector ops, and the dense baseline — funnels through the entry points in
+//! this module: [`gemm_accum_t`], [`dot`], and [`axpy`]. Each entry point
+//! consults a once-initialized dispatch table and runs either
+//!
+//! * **`avx2+fma`** — explicit `std::arch` kernels (x86_64 only): 4-wide
+//!   f64 lanes, 8-wide f32 panel loads widened through `cvtps_pd` before the
+//!   fused multiply-add (preserving the store-in-tier / accumulate-in-f64
+//!   contract of [`Real`]), register-blocked 4-row tiles that share the
+//!   B-panel loads, and scalar remainder loops for arbitrary `ra`/`n`/`m`
+//!   and unaligned slices (all loads are `loadu`); or
+//! * **`scalar`** — the portable unrolled loops (four independent fused
+//!   accumulators for dots, two-deep k-unrolled fused axpy for GEMM), the
+//!   universal fallback and the only backend on non-x86_64 targets.
+//!
+//! The backend is chosen once per process, on first use:
+//! `is_x86_feature_detected!("avx2")` + `("fma")` selects `avx2+fma`, the
+//! `FKT_FORCE_SCALAR` environment variable (any value other than `0`)
+//! forces `scalar` for testing, and everything else falls back to `scalar`.
+//! The choice is surfaced in `MvmMetrics::simd_backend`, the CLI summaries,
+//! and every bench's BENCH.json record.
+//!
+//! **Determinism contract.** Each backend is deterministic: the per-row
+//! instruction sequence is fixed and independent of how many rows a call
+//! carries, so cached (many-row panel) and streamed (one-row) products are
+//! bit-identical *within* a backend, and the f32-tier kernels are literal
+//! widening transcriptions of the f64 ones (same loop structure, same
+//! fused-multiply-add order on the widened values), so "f32 tier error is
+//! pure storage rounding" stays an exact identity per backend. *Across*
+//! backends only tolerance holds (≲1e-10 relative for the accumulation
+//! orders used here): the vector dot reduces lanes in a different order
+//! than the scalar accumulators. Tests compare backends with tolerances,
+//! never bitwise.
+
+use super::Real;
+use std::sync::OnceLock;
+
+/// The micro-kernel implementation the process dispatched to.
+///
+/// Resolved once (first kernel use) from CPU features and the
+/// `FKT_FORCE_SCALAR` override; see [`backend`]. The default is the
+/// universal [`SimdBackend::Scalar`] fallback.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SimdBackend {
+    /// Explicit AVX2+FMA `std::arch` kernels (x86_64 with both features).
+    Avx2Fma,
+    /// Portable unrolled scalar loops — the universal fallback and the
+    /// only backend on non-x86_64 targets (aarch64 stays here for now).
+    #[default]
+    Scalar,
+}
+
+impl SimdBackend {
+    /// Canonical backend name (`"avx2+fma"` / `"scalar"`) — the string
+    /// surfaced in metrics, CLI summaries, and BENCH.json.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Avx2Fma => "avx2+fma",
+            SimdBackend::Scalar => "scalar",
+        }
+    }
+}
+
+/// Whether this CPU supports the AVX2+FMA kernels (cached raw feature
+/// detection, independent of the `FKT_FORCE_SCALAR` override). Public so
+/// benches and tests can tell "scalar because forced" from "scalar because
+/// unsupported".
+#[cfg(target_arch = "x86_64")]
+pub fn avx2_available() -> bool {
+    static AVAILABLE: OnceLock<bool> = OnceLock::new();
+    *AVAILABLE.get_or_init(|| is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"))
+}
+
+/// Whether this CPU supports the AVX2+FMA kernels (always false off
+/// x86_64 — the dispatch table has no vector kernels for other targets).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2_available() -> bool {
+    false
+}
+
+/// Whether `FKT_FORCE_SCALAR` requests the scalar fallback (any value
+/// other than empty or `0`). Read once per process at first dispatch.
+fn force_scalar_env() -> bool {
+    match std::env::var_os("FKT_FORCE_SCALAR") {
+        Some(v) => !v.is_empty() && v != "0",
+        None => false,
+    }
+}
+
+/// The dispatch rule behind [`backend`], kept pure for unit testing (the
+/// process-wide choice latches on first use, so the rule itself is what
+/// tests pin).
+fn resolve(force_scalar: bool, avx2: bool) -> SimdBackend {
+    if !force_scalar && avx2 {
+        SimdBackend::Avx2Fma
+    } else {
+        SimdBackend::Scalar
+    }
+}
+
+/// The process-wide dispatched backend, resolved once on first use from
+/// [`avx2_available`] and the `FKT_FORCE_SCALAR` override. Every kernel
+/// entry point in this module routes through it, so all contraction
+/// surfaces in a process agree on one backend (the determinism contract's
+/// "same dispatched backend" premise).
+pub fn backend() -> SimdBackend {
+    static BACKEND: OnceLock<SimdBackend> = OnceLock::new();
+    *BACKEND.get_or_init(|| resolve(force_scalar_env(), avx2_available()))
+}
+
+/// Accumulating tiered GEMM `C += Ã · B` through the dispatched backend:
+/// row-major `A (ra×n)` stored in the tier scalar `T`, `B (n×m)` and
+/// `C (ra×m)` in f64, every product widening `A`'s entries to f64 before
+/// the fused multiply-add (see [`Real`]). `B` may be a leading sub-block
+/// of a longer slice. This is the single kernel entry point behind
+/// `linalg::gemm_accum`/`gemm_accum_t` and everything layered on them.
+pub fn gemm_accum_t<T: Real>(a: &[T], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [f64]) {
+    gemm_accum_t_with(backend(), a, ra, n, b, m, c)
+}
+
+/// [`gemm_accum_t`] with an explicit backend choice — the hook the
+/// `simd_gemm` bench and the cross-backend agreement tests use. Requesting
+/// [`SimdBackend::Avx2Fma`] on a CPU without the features silently runs
+/// the scalar fallback (the vector path is only entered behind
+/// [`avx2_available`], which keeps this function safe to call with any
+/// backend value).
+pub fn gemm_accum_t_with<T: Real>(
+    which: SimdBackend,
+    a: &[T],
+    ra: usize,
+    n: usize,
+    b: &[f64],
+    m: usize,
+    c: &mut [f64],
+) {
+    assert_eq!(a.len(), ra * n, "A shape mismatch");
+    assert!(b.len() >= n * m, "B too short");
+    assert_eq!(c.len(), ra * m, "C shape mismatch");
+    if ra == 0 || m == 0 {
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if which == SimdBackend::Avx2Fma && avx2_available() {
+            if let Some(a64) = T::slice_as_f64(a) {
+                // SAFETY: avx2+fma presence checked just above; shapes
+                // asserted at entry.
+                unsafe { avx2::gemm_accum_f64(a64, ra, n, b, m, c) };
+                return;
+            }
+            if let Some(a32) = T::slice_as_f32(a) {
+                // SAFETY: as above.
+                unsafe { avx2::gemm_accum_f32(a32, ra, n, b, m, c) };
+                return;
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = which;
+    scalar::gemm_accum_t(a, ra, n, b, m, c)
+}
+
+/// Dot product through the dispatched backend — the one shared kernel
+/// behind `vecops::{dot,norm2}` and the `m = 1` GEMM path (CG inner
+/// products `rᵀz`, `pᵀAp`, and residual norms all land here).
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dot_with(backend(), a, b)
+}
+
+/// [`dot`] with an explicit backend choice (see [`gemm_accum_t_with`]).
+pub fn dot_with(which: SimdBackend, a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if which == SimdBackend::Avx2Fma && avx2_available() {
+            // SAFETY: avx2+fma presence checked; lengths asserted equal.
+            return unsafe { avx2::dot_f64(a, b) };
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = which;
+    scalar::row_dot_t::<f64>(a, b)
+}
+
+/// Fused `y += alpha · x` through the dispatched backend (the CG update
+/// recurrences `x += αp`, `r −= αAp`).
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    axpy_with(backend(), alpha, x, y)
+}
+
+/// [`axpy`] with an explicit backend choice (see [`gemm_accum_t_with`]).
+pub fn axpy_with(which: SimdBackend, alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if which == SimdBackend::Avx2Fma && avx2_available() {
+            // SAFETY: avx2+fma presence checked; lengths asserted equal.
+            unsafe { avx2::axpy_f64(alpha, x, y) };
+            return;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = which;
+    scalar::axpy(alpha, x, y)
+}
+
+/// The portable scalar kernels — the universal fallback and the single
+/// source of truth the hand-unrolled loops that used to live in
+/// `gemm_accum_t`, `vecops::dot`, and the `Mat` row dots were deduplicated
+/// into.
+mod scalar {
+    use super::Real;
+
+    /// Canonical scalar row dot: four independent fused accumulators
+    /// striped `k mod 4` (breaking the serial FMA dependency chain),
+    /// combined `(s0 + s2) + (s1 + s3)`, scalar fused tail. `b` may be
+    /// longer than `arow`; only its leading `arow.len()` entries are read.
+    #[inline]
+    pub fn row_dot_t<T: Real>(arow: &[T], b: &[f64]) -> f64 {
+        let n = arow.len();
+        let n4 = n & !3;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+        let mut k = 0;
+        while k < n4 {
+            s0 = arow[k].to_f64().mul_add(b[k], s0);
+            s1 = arow[k + 1].to_f64().mul_add(b[k + 1], s1);
+            s2 = arow[k + 2].to_f64().mul_add(b[k + 2], s2);
+            s3 = arow[k + 3].to_f64().mul_add(b[k + 3], s3);
+            k += 4;
+        }
+        let mut acc = (s0 + s2) + (s1 + s3);
+        for kk in n4..n {
+            acc = arow[kk].to_f64().mul_add(b[kk], acc);
+        }
+        acc
+    }
+
+    /// Scalar tiered GEMM: `m == 1` rides [`row_dot_t`] per row; `m > 1`
+    /// runs i-k-j order with the k-loop unrolled two B-rows deep, the
+    /// inner loop a contiguous fused axpy over B's rows.
+    pub fn gemm_accum_t<T: Real>(
+        a: &[T],
+        ra: usize,
+        n: usize,
+        b: &[f64],
+        m: usize,
+        c: &mut [f64],
+    ) {
+        if m == 1 {
+            for i in 0..ra {
+                c[i] += row_dot_t(&a[i * n..(i + 1) * n], b);
+            }
+            return;
+        }
+        let n2 = n & !1;
+        for i in 0..ra {
+            let arow = &a[i * n..(i + 1) * n];
+            let crow = &mut c[i * m..(i + 1) * m];
+            let mut k = 0;
+            while k < n2 {
+                let a0 = arow[k].to_f64();
+                let a1 = arow[k + 1].to_f64();
+                let b0 = &b[k * m..k * m + m];
+                let b1 = &b[(k + 1) * m..(k + 1) * m + m];
+                for j in 0..m {
+                    crow[j] = a1.mul_add(b1[j], a0.mul_add(b0[j], crow[j]));
+                }
+                k += 2;
+            }
+            if n2 < n {
+                let a0 = arow[n2].to_f64();
+                let b0 = &b[n2 * m..n2 * m + m];
+                for j in 0..m {
+                    crow[j] = a0.mul_add(b0[j], crow[j]);
+                }
+            }
+        }
+    }
+
+    /// Scalar fused `y += alpha · x`.
+    pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        for i in 0..x.len() {
+            y[i] = alpha.mul_add(x[i], y[i]);
+        }
+    }
+}
+
+/// The AVX2+FMA kernels. Every public function here requires avx2+fma at
+/// runtime (callers guard on `avx2_available`). The per-row recipes are
+/// fixed and independent of the row count of a call — a 4-row register
+/// block runs the exact same instruction DAG per row as the single-row
+/// remainder path — so cached (many-row) and streamed (one-row) panel
+/// products stay bit-identical. The f32 functions are literal widening
+/// transcriptions of their f64 twins: same strides, same remainder
+/// handling, same FMA order on `cvtps_pd`-widened values.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of a 4-lane accumulator in the fixed order
+    /// `(l0 + l2) + (l1 + l3)` (low/high 128-bit halves added first).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let pair = _mm_add_pd(lo, hi);
+        let swapped = _mm_unpackhi_pd(pair, pair);
+        _mm_cvtsd_f64(_mm_add_sd(pair, swapped))
+    }
+
+    /// Canonical vector row dot (f64 row): stride-8 main loop over two
+    /// accumulators, one stride-4 step, lane reduction, scalar fused tail.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn row_dot_f64(a: *const f64, b: *const f64, n: usize) -> f64 {
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut k = 0usize;
+        while k + 8 <= n {
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(a.add(k)), _mm256_loadu_pd(b.add(k)), acc0);
+            acc1 =
+                _mm256_fmadd_pd(_mm256_loadu_pd(a.add(k + 4)), _mm256_loadu_pd(b.add(k + 4)), acc1);
+            k += 8;
+        }
+        if k + 4 <= n {
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(a.add(k)), _mm256_loadu_pd(b.add(k)), acc0);
+            k += 4;
+        }
+        let mut s = hsum(_mm256_add_pd(acc0, acc1));
+        while k < n {
+            s = (*a.add(k)).mul_add(*b.add(k), s);
+            k += 1;
+        }
+        s
+    }
+
+    /// Canonical vector row dot, f32-stored row: identical structure to
+    /// [`row_dot_f64`] with 8-wide f32 loads widened to two 4-wide f64
+    /// lanes before the FMA (store-f32 / accumulate-f64 contract).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn row_dot_f32(a: *const f32, b: *const f64, n: usize) -> f64 {
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut k = 0usize;
+        while k + 8 <= n {
+            let a8 = _mm256_loadu_ps(a.add(k));
+            let alo = _mm256_cvtps_pd(_mm256_castps256_ps128(a8));
+            let ahi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(a8));
+            acc0 = _mm256_fmadd_pd(alo, _mm256_loadu_pd(b.add(k)), acc0);
+            acc1 = _mm256_fmadd_pd(ahi, _mm256_loadu_pd(b.add(k + 4)), acc1);
+            k += 8;
+        }
+        if k + 4 <= n {
+            let a4 = _mm256_cvtps_pd(_mm_loadu_ps(a.add(k)));
+            acc0 = _mm256_fmadd_pd(a4, _mm256_loadu_pd(b.add(k)), acc0);
+            k += 4;
+        }
+        let mut s = hsum(_mm256_add_pd(acc0, acc1));
+        while k < n {
+            s = (*a.add(k) as f64).mul_add(*b.add(k), s);
+            k += 1;
+        }
+        s
+    }
+
+    /// 4-row register-blocked dot tile (m = 1 path, f64 rows): shares the
+    /// B loads across four rows while running each row's accumulators in
+    /// the exact per-row order of [`row_dot_f64`].
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot4_f64(a: *const f64, n: usize, b: *const f64, c: *mut f64) {
+        let (a0, a1, a2, a3) = (a, a.add(n), a.add(2 * n), a.add(3 * n));
+        let mut p0 = _mm256_setzero_pd();
+        let mut q0 = _mm256_setzero_pd();
+        let mut p1 = _mm256_setzero_pd();
+        let mut q1 = _mm256_setzero_pd();
+        let mut p2 = _mm256_setzero_pd();
+        let mut q2 = _mm256_setzero_pd();
+        let mut p3 = _mm256_setzero_pd();
+        let mut q3 = _mm256_setzero_pd();
+        let mut k = 0usize;
+        while k + 8 <= n {
+            let b0 = _mm256_loadu_pd(b.add(k));
+            let b1 = _mm256_loadu_pd(b.add(k + 4));
+            p0 = _mm256_fmadd_pd(_mm256_loadu_pd(a0.add(k)), b0, p0);
+            q0 = _mm256_fmadd_pd(_mm256_loadu_pd(a0.add(k + 4)), b1, q0);
+            p1 = _mm256_fmadd_pd(_mm256_loadu_pd(a1.add(k)), b0, p1);
+            q1 = _mm256_fmadd_pd(_mm256_loadu_pd(a1.add(k + 4)), b1, q1);
+            p2 = _mm256_fmadd_pd(_mm256_loadu_pd(a2.add(k)), b0, p2);
+            q2 = _mm256_fmadd_pd(_mm256_loadu_pd(a2.add(k + 4)), b1, q2);
+            p3 = _mm256_fmadd_pd(_mm256_loadu_pd(a3.add(k)), b0, p3);
+            q3 = _mm256_fmadd_pd(_mm256_loadu_pd(a3.add(k + 4)), b1, q3);
+            k += 8;
+        }
+        if k + 4 <= n {
+            let b0 = _mm256_loadu_pd(b.add(k));
+            p0 = _mm256_fmadd_pd(_mm256_loadu_pd(a0.add(k)), b0, p0);
+            p1 = _mm256_fmadd_pd(_mm256_loadu_pd(a1.add(k)), b0, p1);
+            p2 = _mm256_fmadd_pd(_mm256_loadu_pd(a2.add(k)), b0, p2);
+            p3 = _mm256_fmadd_pd(_mm256_loadu_pd(a3.add(k)), b0, p3);
+            k += 4;
+        }
+        let mut s0 = hsum(_mm256_add_pd(p0, q0));
+        let mut s1 = hsum(_mm256_add_pd(p1, q1));
+        let mut s2 = hsum(_mm256_add_pd(p2, q2));
+        let mut s3 = hsum(_mm256_add_pd(p3, q3));
+        while k < n {
+            let bk = *b.add(k);
+            s0 = (*a0.add(k)).mul_add(bk, s0);
+            s1 = (*a1.add(k)).mul_add(bk, s1);
+            s2 = (*a2.add(k)).mul_add(bk, s2);
+            s3 = (*a3.add(k)).mul_add(bk, s3);
+            k += 1;
+        }
+        *c += s0;
+        *c.add(1) += s1;
+        *c.add(2) += s2;
+        *c.add(3) += s3;
+    }
+
+    /// 4-row register-blocked dot tile, f32 rows (widening transcription
+    /// of [`dot4_f64`]).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot4_f32(a: *const f32, n: usize, b: *const f64, c: *mut f64) {
+        let (a0, a1, a2, a3) = (a, a.add(n), a.add(2 * n), a.add(3 * n));
+        let mut p0 = _mm256_setzero_pd();
+        let mut q0 = _mm256_setzero_pd();
+        let mut p1 = _mm256_setzero_pd();
+        let mut q1 = _mm256_setzero_pd();
+        let mut p2 = _mm256_setzero_pd();
+        let mut q2 = _mm256_setzero_pd();
+        let mut p3 = _mm256_setzero_pd();
+        let mut q3 = _mm256_setzero_pd();
+        let mut k = 0usize;
+        while k + 8 <= n {
+            let b0 = _mm256_loadu_pd(b.add(k));
+            let b1 = _mm256_loadu_pd(b.add(k + 4));
+            let r0 = _mm256_loadu_ps(a0.add(k));
+            p0 = _mm256_fmadd_pd(_mm256_cvtps_pd(_mm256_castps256_ps128(r0)), b0, p0);
+            q0 = _mm256_fmadd_pd(_mm256_cvtps_pd(_mm256_extractf128_ps::<1>(r0)), b1, q0);
+            let r1 = _mm256_loadu_ps(a1.add(k));
+            p1 = _mm256_fmadd_pd(_mm256_cvtps_pd(_mm256_castps256_ps128(r1)), b0, p1);
+            q1 = _mm256_fmadd_pd(_mm256_cvtps_pd(_mm256_extractf128_ps::<1>(r1)), b1, q1);
+            let r2 = _mm256_loadu_ps(a2.add(k));
+            p2 = _mm256_fmadd_pd(_mm256_cvtps_pd(_mm256_castps256_ps128(r2)), b0, p2);
+            q2 = _mm256_fmadd_pd(_mm256_cvtps_pd(_mm256_extractf128_ps::<1>(r2)), b1, q2);
+            let r3 = _mm256_loadu_ps(a3.add(k));
+            p3 = _mm256_fmadd_pd(_mm256_cvtps_pd(_mm256_castps256_ps128(r3)), b0, p3);
+            q3 = _mm256_fmadd_pd(_mm256_cvtps_pd(_mm256_extractf128_ps::<1>(r3)), b1, q3);
+            k += 8;
+        }
+        if k + 4 <= n {
+            let b0 = _mm256_loadu_pd(b.add(k));
+            p0 = _mm256_fmadd_pd(_mm256_cvtps_pd(_mm_loadu_ps(a0.add(k))), b0, p0);
+            p1 = _mm256_fmadd_pd(_mm256_cvtps_pd(_mm_loadu_ps(a1.add(k))), b0, p1);
+            p2 = _mm256_fmadd_pd(_mm256_cvtps_pd(_mm_loadu_ps(a2.add(k))), b0, p2);
+            p3 = _mm256_fmadd_pd(_mm256_cvtps_pd(_mm_loadu_ps(a3.add(k))), b0, p3);
+            k += 4;
+        }
+        let mut s0 = hsum(_mm256_add_pd(p0, q0));
+        let mut s1 = hsum(_mm256_add_pd(p1, q1));
+        let mut s2 = hsum(_mm256_add_pd(p2, q2));
+        let mut s3 = hsum(_mm256_add_pd(p3, q3));
+        while k < n {
+            let bk = *b.add(k);
+            s0 = (*a0.add(k) as f64).mul_add(bk, s0);
+            s1 = (*a1.add(k) as f64).mul_add(bk, s1);
+            s2 = (*a2.add(k) as f64).mul_add(bk, s2);
+            s3 = (*a3.add(k) as f64).mul_add(bk, s3);
+            k += 1;
+        }
+        *c += s0;
+        *c.add(1) += s1;
+        *c.add(2) += s2;
+        *c.add(3) += s3;
+    }
+
+    /// One row of the fused-axpy (m > 1) path, f64: k unrolled two B-rows
+    /// deep, j vectorized 4-wide with a scalar tail. Per-(k, j) FMA order
+    /// matches the scalar kernel exactly.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_row_f64(arow: *const f64, n: usize, b: *const f64, m: usize, crow: *mut f64) {
+        let m4 = m & !3;
+        let n2 = n & !1;
+        let mut k = 0usize;
+        while k < n2 {
+            let x0 = *arow.add(k);
+            let x1 = *arow.add(k + 1);
+            let v0 = _mm256_set1_pd(x0);
+            let v1 = _mm256_set1_pd(x1);
+            let b0 = b.add(k * m);
+            let b1 = b.add((k + 1) * m);
+            let mut j = 0usize;
+            while j < m4 {
+                let mut t = _mm256_loadu_pd(crow.add(j));
+                t = _mm256_fmadd_pd(v0, _mm256_loadu_pd(b0.add(j)), t);
+                t = _mm256_fmadd_pd(v1, _mm256_loadu_pd(b1.add(j)), t);
+                _mm256_storeu_pd(crow.add(j), t);
+                j += 4;
+            }
+            while j < m {
+                *crow.add(j) = x1.mul_add(*b1.add(j), x0.mul_add(*b0.add(j), *crow.add(j)));
+                j += 1;
+            }
+            k += 2;
+        }
+        if k < n {
+            let x0 = *arow.add(k);
+            let v0 = _mm256_set1_pd(x0);
+            let b0 = b.add(k * m);
+            let mut j = 0usize;
+            while j < m4 {
+                let t = _mm256_loadu_pd(crow.add(j));
+                let t = _mm256_fmadd_pd(v0, _mm256_loadu_pd(b0.add(j)), t);
+                _mm256_storeu_pd(crow.add(j), t);
+                j += 4;
+            }
+            while j < m {
+                *crow.add(j) = x0.mul_add(*b0.add(j), *crow.add(j));
+                j += 1;
+            }
+        }
+    }
+
+    /// One row of the fused-axpy path, f32 row (widening transcription of
+    /// [`axpy_row_f64`] — the broadcast widens, everything else is
+    /// identical).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_row_f32(arow: *const f32, n: usize, b: *const f64, m: usize, crow: *mut f64) {
+        let m4 = m & !3;
+        let n2 = n & !1;
+        let mut k = 0usize;
+        while k < n2 {
+            let x0 = *arow.add(k) as f64;
+            let x1 = *arow.add(k + 1) as f64;
+            let v0 = _mm256_set1_pd(x0);
+            let v1 = _mm256_set1_pd(x1);
+            let b0 = b.add(k * m);
+            let b1 = b.add((k + 1) * m);
+            let mut j = 0usize;
+            while j < m4 {
+                let mut t = _mm256_loadu_pd(crow.add(j));
+                t = _mm256_fmadd_pd(v0, _mm256_loadu_pd(b0.add(j)), t);
+                t = _mm256_fmadd_pd(v1, _mm256_loadu_pd(b1.add(j)), t);
+                _mm256_storeu_pd(crow.add(j), t);
+                j += 4;
+            }
+            while j < m {
+                *crow.add(j) = x1.mul_add(*b1.add(j), x0.mul_add(*b0.add(j), *crow.add(j)));
+                j += 1;
+            }
+            k += 2;
+        }
+        if k < n {
+            let x0 = *arow.add(k) as f64;
+            let v0 = _mm256_set1_pd(x0);
+            let b0 = b.add(k * m);
+            let mut j = 0usize;
+            while j < m4 {
+                let t = _mm256_loadu_pd(crow.add(j));
+                let t = _mm256_fmadd_pd(v0, _mm256_loadu_pd(b0.add(j)), t);
+                _mm256_storeu_pd(crow.add(j), t);
+                j += 4;
+            }
+            while j < m {
+                *crow.add(j) = x0.mul_add(*b0.add(j), *crow.add(j));
+                j += 1;
+            }
+        }
+    }
+
+    /// 4-row register-blocked fused-axpy tile (m > 1 path, f64): shares
+    /// the B-row vector loads across four A rows; each row's update order
+    /// is exactly [`axpy_row_f64`]'s.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_row4_f64(a: *const f64, n: usize, b: *const f64, m: usize, c: *mut f64) {
+        let (a0, a1, a2, a3) = (a, a.add(n), a.add(2 * n), a.add(3 * n));
+        let (c0, c1, c2, c3) = (c, c.add(m), c.add(2 * m), c.add(3 * m));
+        let m4 = m & !3;
+        let n2 = n & !1;
+        let mut k = 0usize;
+        while k < n2 {
+            let x00 = *a0.add(k);
+            let x01 = *a0.add(k + 1);
+            let x10 = *a1.add(k);
+            let x11 = *a1.add(k + 1);
+            let x20 = *a2.add(k);
+            let x21 = *a2.add(k + 1);
+            let x30 = *a3.add(k);
+            let x31 = *a3.add(k + 1);
+            let v00 = _mm256_set1_pd(x00);
+            let v01 = _mm256_set1_pd(x01);
+            let v10 = _mm256_set1_pd(x10);
+            let v11 = _mm256_set1_pd(x11);
+            let v20 = _mm256_set1_pd(x20);
+            let v21 = _mm256_set1_pd(x21);
+            let v30 = _mm256_set1_pd(x30);
+            let v31 = _mm256_set1_pd(x31);
+            let b0 = b.add(k * m);
+            let b1 = b.add((k + 1) * m);
+            let mut j = 0usize;
+            while j < m4 {
+                let b0j = _mm256_loadu_pd(b0.add(j));
+                let b1j = _mm256_loadu_pd(b1.add(j));
+                let mut t0 = _mm256_loadu_pd(c0.add(j));
+                t0 = _mm256_fmadd_pd(v00, b0j, t0);
+                t0 = _mm256_fmadd_pd(v01, b1j, t0);
+                _mm256_storeu_pd(c0.add(j), t0);
+                let mut t1 = _mm256_loadu_pd(c1.add(j));
+                t1 = _mm256_fmadd_pd(v10, b0j, t1);
+                t1 = _mm256_fmadd_pd(v11, b1j, t1);
+                _mm256_storeu_pd(c1.add(j), t1);
+                let mut t2 = _mm256_loadu_pd(c2.add(j));
+                t2 = _mm256_fmadd_pd(v20, b0j, t2);
+                t2 = _mm256_fmadd_pd(v21, b1j, t2);
+                _mm256_storeu_pd(c2.add(j), t2);
+                let mut t3 = _mm256_loadu_pd(c3.add(j));
+                t3 = _mm256_fmadd_pd(v30, b0j, t3);
+                t3 = _mm256_fmadd_pd(v31, b1j, t3);
+                _mm256_storeu_pd(c3.add(j), t3);
+                j += 4;
+            }
+            while j < m {
+                let p0 = *b0.add(j);
+                let p1 = *b1.add(j);
+                *c0.add(j) = x01.mul_add(p1, x00.mul_add(p0, *c0.add(j)));
+                *c1.add(j) = x11.mul_add(p1, x10.mul_add(p0, *c1.add(j)));
+                *c2.add(j) = x21.mul_add(p1, x20.mul_add(p0, *c2.add(j)));
+                *c3.add(j) = x31.mul_add(p1, x30.mul_add(p0, *c3.add(j)));
+                j += 1;
+            }
+            k += 2;
+        }
+        if k < n {
+            let x00 = *a0.add(k);
+            let x10 = *a1.add(k);
+            let x20 = *a2.add(k);
+            let x30 = *a3.add(k);
+            let v00 = _mm256_set1_pd(x00);
+            let v10 = _mm256_set1_pd(x10);
+            let v20 = _mm256_set1_pd(x20);
+            let v30 = _mm256_set1_pd(x30);
+            let b0 = b.add(k * m);
+            let mut j = 0usize;
+            while j < m4 {
+                let b0j = _mm256_loadu_pd(b0.add(j));
+                let t0 = _mm256_fmadd_pd(v00, b0j, _mm256_loadu_pd(c0.add(j)));
+                _mm256_storeu_pd(c0.add(j), t0);
+                let t1 = _mm256_fmadd_pd(v10, b0j, _mm256_loadu_pd(c1.add(j)));
+                _mm256_storeu_pd(c1.add(j), t1);
+                let t2 = _mm256_fmadd_pd(v20, b0j, _mm256_loadu_pd(c2.add(j)));
+                _mm256_storeu_pd(c2.add(j), t2);
+                let t3 = _mm256_fmadd_pd(v30, b0j, _mm256_loadu_pd(c3.add(j)));
+                _mm256_storeu_pd(c3.add(j), t3);
+                j += 4;
+            }
+            while j < m {
+                let p0 = *b0.add(j);
+                *c0.add(j) = x00.mul_add(p0, *c0.add(j));
+                *c1.add(j) = x10.mul_add(p0, *c1.add(j));
+                *c2.add(j) = x20.mul_add(p0, *c2.add(j));
+                *c3.add(j) = x30.mul_add(p0, *c3.add(j));
+                j += 1;
+            }
+        }
+    }
+
+    /// 4-row register-blocked fused-axpy tile, f32 rows (widening
+    /// transcription of [`axpy_row4_f64`]).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_row4_f32(a: *const f32, n: usize, b: *const f64, m: usize, c: *mut f64) {
+        let (a0, a1, a2, a3) = (a, a.add(n), a.add(2 * n), a.add(3 * n));
+        let (c0, c1, c2, c3) = (c, c.add(m), c.add(2 * m), c.add(3 * m));
+        let m4 = m & !3;
+        let n2 = n & !1;
+        let mut k = 0usize;
+        while k < n2 {
+            let x00 = *a0.add(k) as f64;
+            let x01 = *a0.add(k + 1) as f64;
+            let x10 = *a1.add(k) as f64;
+            let x11 = *a1.add(k + 1) as f64;
+            let x20 = *a2.add(k) as f64;
+            let x21 = *a2.add(k + 1) as f64;
+            let x30 = *a3.add(k) as f64;
+            let x31 = *a3.add(k + 1) as f64;
+            let v00 = _mm256_set1_pd(x00);
+            let v01 = _mm256_set1_pd(x01);
+            let v10 = _mm256_set1_pd(x10);
+            let v11 = _mm256_set1_pd(x11);
+            let v20 = _mm256_set1_pd(x20);
+            let v21 = _mm256_set1_pd(x21);
+            let v30 = _mm256_set1_pd(x30);
+            let v31 = _mm256_set1_pd(x31);
+            let b0 = b.add(k * m);
+            let b1 = b.add((k + 1) * m);
+            let mut j = 0usize;
+            while j < m4 {
+                let b0j = _mm256_loadu_pd(b0.add(j));
+                let b1j = _mm256_loadu_pd(b1.add(j));
+                let mut t0 = _mm256_loadu_pd(c0.add(j));
+                t0 = _mm256_fmadd_pd(v00, b0j, t0);
+                t0 = _mm256_fmadd_pd(v01, b1j, t0);
+                _mm256_storeu_pd(c0.add(j), t0);
+                let mut t1 = _mm256_loadu_pd(c1.add(j));
+                t1 = _mm256_fmadd_pd(v10, b0j, t1);
+                t1 = _mm256_fmadd_pd(v11, b1j, t1);
+                _mm256_storeu_pd(c1.add(j), t1);
+                let mut t2 = _mm256_loadu_pd(c2.add(j));
+                t2 = _mm256_fmadd_pd(v20, b0j, t2);
+                t2 = _mm256_fmadd_pd(v21, b1j, t2);
+                _mm256_storeu_pd(c2.add(j), t2);
+                let mut t3 = _mm256_loadu_pd(c3.add(j));
+                t3 = _mm256_fmadd_pd(v30, b0j, t3);
+                t3 = _mm256_fmadd_pd(v31, b1j, t3);
+                _mm256_storeu_pd(c3.add(j), t3);
+                j += 4;
+            }
+            while j < m {
+                let p0 = *b0.add(j);
+                let p1 = *b1.add(j);
+                *c0.add(j) = x01.mul_add(p1, x00.mul_add(p0, *c0.add(j)));
+                *c1.add(j) = x11.mul_add(p1, x10.mul_add(p0, *c1.add(j)));
+                *c2.add(j) = x21.mul_add(p1, x20.mul_add(p0, *c2.add(j)));
+                *c3.add(j) = x31.mul_add(p1, x30.mul_add(p0, *c3.add(j)));
+                j += 1;
+            }
+            k += 2;
+        }
+        if k < n {
+            let x00 = *a0.add(k) as f64;
+            let x10 = *a1.add(k) as f64;
+            let x20 = *a2.add(k) as f64;
+            let x30 = *a3.add(k) as f64;
+            let v00 = _mm256_set1_pd(x00);
+            let v10 = _mm256_set1_pd(x10);
+            let v20 = _mm256_set1_pd(x20);
+            let v30 = _mm256_set1_pd(x30);
+            let b0 = b.add(k * m);
+            let mut j = 0usize;
+            while j < m4 {
+                let b0j = _mm256_loadu_pd(b0.add(j));
+                let t0 = _mm256_fmadd_pd(v00, b0j, _mm256_loadu_pd(c0.add(j)));
+                _mm256_storeu_pd(c0.add(j), t0);
+                let t1 = _mm256_fmadd_pd(v10, b0j, _mm256_loadu_pd(c1.add(j)));
+                _mm256_storeu_pd(c1.add(j), t1);
+                let t2 = _mm256_fmadd_pd(v20, b0j, _mm256_loadu_pd(c2.add(j)));
+                _mm256_storeu_pd(c2.add(j), t2);
+                let t3 = _mm256_fmadd_pd(v30, b0j, _mm256_loadu_pd(c3.add(j)));
+                _mm256_storeu_pd(c3.add(j), t3);
+                j += 4;
+            }
+            while j < m {
+                let p0 = *b0.add(j);
+                *c0.add(j) = x00.mul_add(p0, *c0.add(j));
+                *c1.add(j) = x10.mul_add(p0, *c1.add(j));
+                *c2.add(j) = x20.mul_add(p0, *c2.add(j));
+                *c3.add(j) = x30.mul_add(p0, *c3.add(j));
+                j += 1;
+            }
+        }
+    }
+
+    /// AVX2+FMA tiered GEMM, f64 storage. Caller asserts shapes and
+    /// guards on feature availability.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_accum_f64(
+        a: &[f64],
+        ra: usize,
+        n: usize,
+        b: &[f64],
+        m: usize,
+        c: &mut [f64],
+    ) {
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let cp = c.as_mut_ptr();
+        let mut i = 0usize;
+        if m == 1 {
+            while i + 4 <= ra {
+                dot4_f64(ap.add(i * n), n, bp, cp.add(i));
+                i += 4;
+            }
+            while i < ra {
+                *cp.add(i) += row_dot_f64(ap.add(i * n), bp, n);
+                i += 1;
+            }
+            return;
+        }
+        while i + 4 <= ra {
+            axpy_row4_f64(ap.add(i * n), n, bp, m, cp.add(i * m));
+            i += 4;
+        }
+        while i < ra {
+            axpy_row_f64(ap.add(i * n), n, bp, m, cp.add(i * m));
+            i += 1;
+        }
+    }
+
+    /// AVX2+FMA tiered GEMM, f32 storage (widened to f64 before every
+    /// FMA). Caller asserts shapes and guards on feature availability.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_accum_f32(
+        a: &[f32],
+        ra: usize,
+        n: usize,
+        b: &[f64],
+        m: usize,
+        c: &mut [f64],
+    ) {
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let cp = c.as_mut_ptr();
+        let mut i = 0usize;
+        if m == 1 {
+            while i + 4 <= ra {
+                dot4_f32(ap.add(i * n), n, bp, cp.add(i));
+                i += 4;
+            }
+            while i < ra {
+                *cp.add(i) += row_dot_f32(ap.add(i * n), bp, n);
+                i += 1;
+            }
+            return;
+        }
+        while i + 4 <= ra {
+            axpy_row4_f32(ap.add(i * n), n, bp, m, cp.add(i * m));
+            i += 4;
+        }
+        while i < ra {
+            axpy_row_f32(ap.add(i * n), n, bp, m, cp.add(i * m));
+            i += 1;
+        }
+    }
+
+    /// AVX2+FMA dot product. Caller asserts equal lengths and guards on
+    /// feature availability.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+        row_dot_f64(a.as_ptr(), b.as_ptr(), a.len().min(b.len()))
+    }
+
+    /// AVX2+FMA fused `y += alpha · x`. Caller asserts equal lengths and
+    /// guards on feature availability.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy_f64(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let va = _mm256_set1_pd(alpha);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let t = _mm256_fmadd_pd(va, _mm256_loadu_pd(xp.add(i)), _mm256_loadu_pd(yp.add(i)));
+            _mm256_storeu_pd(yp.add(i), t);
+            i += 4;
+        }
+        while i < n {
+            *yp.add(i) = alpha.mul_add(*xp.add(i), *yp.add(i));
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    /// The reference triple loop every dispatched kernel is compared to.
+    fn naive_gemm<T: Real>(a: &[T], ra: usize, n: usize, b: &[f64], m: usize, c: &mut [f64]) {
+        for i in 0..ra {
+            for k in 0..n {
+                for j in 0..m {
+                    c[i * m + j] += a[i * n + k].to_f64() * b[k * m + j];
+                }
+            }
+        }
+    }
+
+    /// The backends runnable on this machine (scalar always; avx2+fma
+    /// when the CPU has it).
+    fn runnable_backends() -> Vec<SimdBackend> {
+        let mut v = vec![SimdBackend::Scalar];
+        if avx2_available() {
+            v.push(SimdBackend::Avx2Fma);
+        }
+        v
+    }
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + b.abs())
+    }
+
+    /// The ISSUE's sweep set: every remainder class of the 4/8-wide lanes
+    /// and the 4-row tiles, plus vector-friendly and large shapes.
+    const SIZES: &[usize] = &[
+        1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 31, 32, 33, 64, 100,
+    ];
+
+    #[test]
+    fn backend_resolution_rules() {
+        assert_eq!(resolve(true, true), SimdBackend::Scalar);
+        assert_eq!(resolve(true, false), SimdBackend::Scalar);
+        assert_eq!(resolve(false, false), SimdBackend::Scalar);
+        assert_eq!(resolve(false, true), SimdBackend::Avx2Fma);
+        assert_eq!(SimdBackend::Avx2Fma.name(), "avx2+fma");
+        assert_eq!(SimdBackend::Scalar.name(), "scalar");
+        assert_eq!(SimdBackend::default(), SimdBackend::Scalar);
+        // The latched process-wide choice obeys the same rule.
+        assert_eq!(backend(), resolve(force_scalar_env(), avx2_available()));
+    }
+
+    /// Property sweep: both tiers × every runnable backend × the full
+    /// (ra, n) size grid at m ∈ {1, 8}, against the naive triple loop.
+    /// f64 accumulation in every path keeps 1e-12 relative within reach
+    /// for any summation order.
+    #[test]
+    fn gemm_property_sweep_matches_naive_reference() {
+        let mut rng = Pcg32::seeded(1234);
+        let backends = runnable_backends();
+        for &ra in SIZES {
+            for &n in SIZES {
+                for m in [1usize, 8] {
+                    let a = rng.normal_vec(ra * n);
+                    let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+                    let b = rng.normal_vec(n * m);
+                    let c0 = rng.normal_vec(ra * m);
+                    let mut expect64 = c0.clone();
+                    naive_gemm::<f64>(&a, ra, n, &b, m, &mut expect64);
+                    let mut expect32 = c0.clone();
+                    naive_gemm::<f32>(&a32, ra, n, &b, m, &mut expect32);
+                    for &be in &backends {
+                        let mut c = c0.clone();
+                        gemm_accum_t_with::<f64>(be, &a, ra, n, &b, m, &mut c);
+                        for i in 0..ra * m {
+                            assert!(
+                                close(c[i], expect64[i], 1e-12),
+                                "{} f64 ra={ra} n={n} m={m} i={i}: {} vs {}",
+                                be.name(),
+                                c[i],
+                                expect64[i]
+                            );
+                        }
+                        let mut c = c0.clone();
+                        gemm_accum_t_with::<f32>(be, &a32, ra, n, &b, m, &mut c);
+                        for i in 0..ra * m {
+                            assert!(
+                                close(c[i], expect32[i], 1e-12),
+                                "{} f32 ra={ra} n={n} m={m} i={i}: {} vs {}",
+                                be.name(),
+                                c[i],
+                                expect32[i]
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The m (RHS column) dimension swept over the full size grid at a
+    /// fixed awkward (ra, n), both tiers × every runnable backend.
+    #[test]
+    fn gemm_m_sweep_matches_naive_reference() {
+        let mut rng = Pcg32::seeded(4321);
+        let (ra, n) = (5, 33);
+        for &m in SIZES {
+            let a = rng.normal_vec(ra * n);
+            let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let b = rng.normal_vec(n * m);
+            let c0 = rng.normal_vec(ra * m);
+            let mut expect64 = c0.clone();
+            naive_gemm::<f64>(&a, ra, n, &b, m, &mut expect64);
+            let mut expect32 = c0.clone();
+            naive_gemm::<f32>(&a32, ra, n, &b, m, &mut expect32);
+            for be in runnable_backends() {
+                let mut c = c0.clone();
+                gemm_accum_t_with::<f64>(be, &a, ra, n, &b, m, &mut c);
+                let mut c32 = c0.clone();
+                gemm_accum_t_with::<f32>(be, &a32, ra, n, &b, m, &mut c32);
+                for i in 0..ra * m {
+                    assert!(close(c[i], expect64[i], 1e-12), "{} f64 m={m} i={i}", be.name());
+                    assert!(close(c32[i], expect32[i], 1e-12), "{} f32 m={m} i={i}", be.name());
+                }
+            }
+        }
+    }
+
+    /// Unaligned slice starts: the kernels use unaligned loads throughout,
+    /// so any byte offset must give the same answer. Offsets 1..3 of an
+    /// f64/f32 buffer are never 32-byte aligned.
+    #[test]
+    fn unaligned_slices_match_reference() {
+        let mut rng = Pcg32::seeded(77);
+        let (ra, n) = (7, 33);
+        for m in [1usize, 8] {
+            let abuf = rng.normal_vec(ra * n + 3);
+            let bbuf = rng.normal_vec(n * m + 3);
+            let cbuf = rng.normal_vec(ra * m + 3);
+            for off in 0..4usize {
+                let a = &abuf[off..off + ra * n];
+                let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+                let b = &bbuf[off..off + n * m];
+                let c0 = &cbuf[off..off + ra * m];
+                let mut expect = c0.to_vec();
+                naive_gemm::<f64>(a, ra, n, b, m, &mut expect);
+                let mut expect32 = c0.to_vec();
+                naive_gemm::<f32>(&a32, ra, n, b, m, &mut expect32);
+                for be in runnable_backends() {
+                    let mut c = c0.to_vec();
+                    gemm_accum_t_with::<f64>(be, a, ra, n, b, m, &mut c);
+                    let mut c32 = c0.to_vec();
+                    gemm_accum_t_with::<f32>(be, &a32, ra, n, b, m, &mut c32);
+                    for i in 0..ra * m {
+                        assert!(
+                            close(c[i], expect[i], 1e-12),
+                            "{} off={off} m={m} i={i}",
+                            be.name()
+                        );
+                        assert!(
+                            close(c32[i], expect32[i], 1e-12),
+                            "{} f32 off={off} m={m} i={i}",
+                            be.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// `dot` and `axpy` against naive references over every remainder
+    /// length, every runnable backend, and offset (unaligned) slices.
+    #[test]
+    fn dot_and_axpy_match_reference() {
+        let mut rng = Pcg32::seeded(99);
+        for &n in SIZES {
+            let abuf = rng.normal_vec(n + 2);
+            let bbuf = rng.normal_vec(n + 2);
+            let alpha = rng.normal_vec(1)[0];
+            for off in 0..2usize {
+                let a = &abuf[off..off + n];
+                let b = &bbuf[off..off + n];
+                let mut naive = 0.0;
+                for i in 0..n {
+                    naive += a[i] * b[i];
+                }
+                let mut ynaive = b.to_vec();
+                for (yi, &xi) in ynaive.iter_mut().zip(a) {
+                    *yi += alpha * xi;
+                }
+                for be in runnable_backends() {
+                    let d = dot_with(be, a, b);
+                    assert!(close(d, naive, 1e-12), "{} dot n={n} off={off}", be.name());
+                    let mut y = b.to_vec();
+                    axpy_with(be, alpha, a, &mut y);
+                    for i in 0..n {
+                        assert!(
+                            close(y[i], ynaive[i], 1e-12),
+                            "{} axpy n={n} off={off} i={i}",
+                            be.name()
+                        );
+                    }
+                }
+            }
+        }
+        // Empty slices are no-ops.
+        assert_eq!(dot(&[], &[]), 0.0);
+        let mut y: [f64; 0] = [];
+        axpy(2.0, &[], &mut y);
+    }
+
+    /// The cross-backend determinism contract: scalar and AVX2+FMA agree
+    /// to ≤1e-10 relative on f64 inputs and to the same bound on f32-tier
+    /// panels (both backends accumulate in f64 — only the reduction order
+    /// differs). Skipped (scalar-only) on machines without avx2+fma,
+    /// where `FKT_FORCE_SCALAR=1` CI legs still exercise the fallback.
+    #[test]
+    fn scalar_and_simd_backends_agree() {
+        if !avx2_available() {
+            eprintln!("skipping: avx2+fma not available, scalar is the only backend");
+            return;
+        }
+        let mut rng = Pcg32::seeded(555);
+        for (ra, n, m) in [(33, 100, 1), (33, 100, 8), (4, 8, 4), (1, 257, 1)] {
+            let a = rng.normal_vec(ra * n);
+            let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let b = rng.normal_vec(n * m);
+            let c0 = rng.normal_vec(ra * m);
+            let mut cs = c0.clone();
+            gemm_accum_t_with::<f64>(SimdBackend::Scalar, &a, ra, n, &b, m, &mut cs);
+            let mut cv = c0.clone();
+            gemm_accum_t_with::<f64>(SimdBackend::Avx2Fma, &a, ra, n, &b, m, &mut cv);
+            let mut cs32 = c0.clone();
+            gemm_accum_t_with::<f32>(SimdBackend::Scalar, &a32, ra, n, &b, m, &mut cs32);
+            let mut cv32 = c0.clone();
+            gemm_accum_t_with::<f32>(SimdBackend::Avx2Fma, &a32, ra, n, &b, m, &mut cv32);
+            for i in 0..ra * m {
+                assert!(close(cv[i], cs[i], 1e-10), "f64 ra={ra} n={n} m={m} i={i}");
+                assert!(close(cv32[i], cs32[i], 1e-10), "f32 ra={ra} n={n} m={m} i={i}");
+            }
+        }
+        let x = rng.normal_vec(1000);
+        let y = rng.normal_vec(1000);
+        let ds = dot_with(SimdBackend::Scalar, &x, &y);
+        let dv = dot_with(SimdBackend::Avx2Fma, &x, &y);
+        assert!(close(dv, ds, 1e-10), "dot: {dv} vs {ds}");
+    }
+
+    /// Within one backend the per-row recipe is independent of the row
+    /// count: a many-row GEMM equals its rows computed one at a time,
+    /// bitwise. This is the identity the cached-vs-streamed panel tests
+    /// lean on.
+    #[test]
+    fn row_blocking_is_bitwise_row_independent() {
+        let mut rng = Pcg32::seeded(808);
+        for be in runnable_backends() {
+            for (ra, n, m) in [(9, 33, 1), (9, 33, 8), (6, 17, 3)] {
+                let a = rng.normal_vec(ra * n);
+                let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+                let b = rng.normal_vec(n * m);
+                let mut whole = vec![0.0; ra * m];
+                gemm_accum_t_with::<f64>(be, &a, ra, n, &b, m, &mut whole);
+                let mut whole32 = vec![0.0; ra * m];
+                gemm_accum_t_with::<f32>(be, &a32, ra, n, &b, m, &mut whole32);
+                for i in 0..ra {
+                    let mut row = vec![0.0; m];
+                    gemm_accum_t_with::<f64>(be, &a[i * n..(i + 1) * n], 1, n, &b, m, &mut row);
+                    assert_eq!(&whole[i * m..(i + 1) * m], &row[..], "{} f64 row {i}", be.name());
+                    let mut row32 = vec![0.0; m];
+                    gemm_accum_t_with::<f32>(be, &a32[i * n..(i + 1) * n], 1, n, &b, m, &mut row32);
+                    assert_eq!(
+                        &whole32[i * m..(i + 1) * m],
+                        &row32[..],
+                        "{} f32 row {i}",
+                        be.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// The dispatched entry points are exactly `_with(backend())`.
+    #[test]
+    fn dispatched_entry_points_match_forced_choice() {
+        let mut rng = Pcg32::seeded(31337);
+        let (ra, n, m) = (5, 19, 3);
+        let a = rng.normal_vec(ra * n);
+        let b = rng.normal_vec(n * m);
+        let mut c1 = vec![0.0; ra * m];
+        gemm_accum_t::<f64>(&a, ra, n, &b, m, &mut c1);
+        let mut c2 = vec![0.0; ra * m];
+        gemm_accum_t_with::<f64>(backend(), &a, ra, n, &b, m, &mut c2);
+        assert_eq!(c1, c2);
+        let x = rng.normal_vec(37);
+        let y = rng.normal_vec(37);
+        assert_eq!(dot(&x, &y), dot_with(backend(), &x, &y));
+        let mut y1 = y.clone();
+        axpy(0.7, &x, &mut y1);
+        let mut y2 = y.clone();
+        axpy_with(backend(), 0.7, &x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+}

@@ -30,7 +30,7 @@ use fkt::cli::Args;
 use fkt::kernels::{Family, Kernel};
 use fkt::points::Points;
 use fkt::rng::Pcg32;
-use fkt::session::{Backend, OpHandle, Precision, Session};
+use fkt::session::{simd_backend, Backend, OpHandle, Precision, Session};
 use std::time::Instant;
 
 /// The uniform `--precision {f64,f32,auto}` flag (default `auto`).
@@ -93,6 +93,7 @@ fn info() {
         "threads available: {}",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
+    println!("simd backend: {}", simd_backend().name());
 }
 
 /// Build the benchmark operator from the uniform flags, with the same
@@ -161,18 +162,23 @@ fn mvm(args: &Args) {
         }
         let zb = session.mvm_batch(&op, &wb, cols);
         println!(
-            "mvm_batch: {} for {cols} columns in {} moment traversal(s) (backend {})",
+            "mvm_batch: {} for {cols} columns in {} moment traversal(s) \
+             (backend {}, simd {}, tier {})",
             fmt_time(t1.elapsed().as_secs_f64()),
             session.last_metrics().moment_passes,
-            if session.last_metrics().used_pjrt { "pjrt" } else { "native" }
+            if session.last_metrics().used_pjrt { "pjrt" } else { "native" },
+            session.last_metrics().simd_backend.name(),
+            op.precision().name()
         );
         zb[..op.num_targets()].to_vec()
     } else {
         let z = session.mvm(&op, &w);
         println!(
-            "mvm: {} (backend {})",
+            "mvm: {} (backend {}, simd {}, tier {})",
             fmt_time(t1.elapsed().as_secs_f64()),
-            if session.last_metrics().used_pjrt { "pjrt" } else { "native" }
+            if session.last_metrics().used_pjrt { "pjrt" } else { "native" },
+            session.last_metrics().simd_backend.name(),
+            op.precision().name()
         );
         z
     };
@@ -340,6 +346,11 @@ fn gp_train(args: &Args) {
     println!(
         "session verbs: {} batched solves, {} batched MVMs, {} single MVMs",
         c.solve_batch, c.mvm_batch, c.mvm
+    );
+    println!(
+        "simd backend: {}, storage tier: {}",
+        simd_backend().name(),
+        gp.operator().precision().name()
     );
 }
 

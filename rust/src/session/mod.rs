@@ -46,6 +46,7 @@ pub mod registry;
 pub mod tune;
 
 pub use crate::coordinator::{Backend, MvmMetrics};
+pub use crate::linalg::simd::{backend as simd_backend, SimdBackend};
 pub use crate::linalg::Precision;
 pub use registry::RegistryStats;
 pub use tune::{
