@@ -44,7 +44,7 @@ fn main() {
     // Uniform `--threads` knob (0 = all cores) shared across benches.
     // Tiny registry: each ablation config is requested once — no reuse to
     // cache, no reason to retain every swept operator.
-    let mut session = Session::builder()
+    let session = Session::builder()
         .threads(args.threads())
         .backend(Backend::Native)
         .registry_capacity(2)

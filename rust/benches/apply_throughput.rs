@@ -41,7 +41,7 @@ fn main() {
     let mut rng = Pcg32::seeded(77);
     let pts = fkt::data::uniform_hypersphere(n, d, &mut rng);
     let w = rng.normal_vec(n);
-    let mut session = Session::native(args.threads());
+    let session = Session::native(args.threads());
     let mut json = BenchJson::new();
 
     println!(

@@ -35,7 +35,7 @@ fn main() {
     let bench = if full { Bencher::default() } else { Bencher::quick() };
     // Tiny registry: every (d, N, p) key is distinct here, so caching can't
     // help — a small LRU keeps the paper-scale sweep's memory flat.
-    let mut session = Session::builder()
+    let session = Session::builder()
         .threads(args.threads())
         .backend(Backend::Native)
         .registry_capacity(2)

@@ -36,7 +36,7 @@ fn main() {
     let dense_norm: f64 = dense.iter().map(|v| v * v).sum::<f64>().sqrt();
     // Tiny registry: every (p, θ) key in the sweep is requested exactly
     // once, so caching can't help — don't retain ~25 dead operators.
-    let mut session = Session::builder()
+    let session = Session::builder()
         .threads(args.threads())
         .backend(Backend::Native)
         .registry_capacity(2)

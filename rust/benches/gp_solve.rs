@@ -26,7 +26,7 @@ fn main() {
     let p: usize = args.get("p", 4);
     let theta: f64 = args.get("theta", 0.6);
     let rho: f64 = args.get("rho", 0.22);
-    let mut session = Session::native(args.threads());
+    let session = Session::native(args.threads());
 
     println!("GP solve (Fig 4 workload): Matérn-3/2 ρ={rho}, p={p}, θ={theta}");
     let mut table = Table::new(&[
@@ -48,15 +48,15 @@ fn main() {
         };
         let t0 = Instant::now();
         let mut gp =
-            GpRegressor::new(&mut session, pts, ds.noise_variances(), Kernel::matern32(rho), cfg);
+            GpRegressor::new(&session, pts, ds.noise_variances(), Kernel::matern32(rho), cfg);
         let build = t0.elapsed().as_secs_f64();
         let t1 = Instant::now();
-        let fit = gp.fit_alpha(&y0, &mut session);
+        let fit = gp.fit_alpha(&y0, &session);
         let cg_time = t1.elapsed().as_secs_f64();
         // Prediction on a small grid + RMSE vs known truth.
         let (grid, coords) = sst::prediction_grid(40, 120, 60.0);
         let t2 = Instant::now();
-        let res = gp.posterior_mean(&y0, &grid, &mut session);
+        let res = gp.posterior_mean(&y0, &grid, &session);
         let pred_time = t2.elapsed().as_secs_f64();
         let mut se = 0.0;
         for (i, &(lat, lon)) in coords.iter().enumerate() {

@@ -54,13 +54,13 @@ fn main() {
     };
     // Training churns two operators per iteration (the kernel scale moves
     // every step); a small LRU keeps dead trees and panels from piling up.
-    let mut session = Session::builder()
+    let session = Session::builder()
         .threads(args.threads())
         .backend(fkt::session::Backend::Native)
         .registry_capacity(args.get("registry-cap", 4))
         .build();
     let mut gp = GpRegressor::new(
-        &mut session,
+        &session,
         pts,
         vec![0.2; n],
         Kernel::matern32(args.get("rho0", 0.3)),
@@ -73,7 +73,7 @@ fn main() {
          {iters} iterations × {probes} probes"
     );
     let t0 = Instant::now();
-    let res = gp.train(&mut session, &y, &opts);
+    let res = gp.train(&session, &y, &opts);
     let total = t0.elapsed().as_secs_f64();
     let per_iter = total / iters.max(1) as f64;
     let cg_mean = res.trace.iter().map(|s| s.solve_iterations as f64).sum::<f64>()

@@ -38,7 +38,7 @@ fn main() {
     let pts = fkt::data::uniform_hypersphere(n, d, &mut rng);
     let w = rng.normal_vec(n);
     let kernel = Kernel::matern32(1.0);
-    let mut session = Session::native(args.threads());
+    let session = Session::native(args.threads());
     let mut json = BenchJson::new();
 
     println!(
@@ -46,7 +46,7 @@ fn main() {
          {applies} applies per tier"
     );
 
-    let tiered = |session: &mut Session, tier: Precision| {
+    let tiered = |session: &Session, tier: Precision| {
         session
             .operator(&pts)
             .scaled_kernel(kernel)
@@ -56,8 +56,8 @@ fn main() {
             .precision(tier)
             .build()
     };
-    let op64 = tiered(&mut session, Precision::F64);
-    let op32 = tiered(&mut session, Precision::F32);
+    let op64 = tiered(&session, Precision::F64);
+    let op32 = tiered(&session, Precision::F32);
 
     // Warm both tiers (materializes their panels), keeping the results
     // for the cross-tier agreement smoke.

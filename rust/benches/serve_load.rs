@@ -1,0 +1,206 @@
+//! Serving-layer load bench: C concurrent clients hammering one served
+//! operator with MVM requests, batched vs unbatched.
+//!
+//! Two identical in-process servers are measured under the same load:
+//! one with cross-request micro-batching (the default gather window and
+//! column budget), one with batching disabled (`max_columns = 1`, zero
+//! window — every request is its own apply pass). The throughput ratio
+//! is the headline number: what the fused `apply_batch` traversal buys
+//! a multi-tenant deployment.
+//!
+//! Records `serve_p50_ms`, `serve_p99_ms`, `serve_rps`,
+//! `batched_columns_per_apply`, and
+//! `single_vs_batched_serve_throughput` into BENCH.json (merged).
+//!
+//! ```text
+//! cargo bench --bench serve_load [-- --n 20000 --clients 8 --requests 32]
+//! ```
+
+use fkt::benchkit::{BenchJson, Table};
+use fkt::cli::Args;
+use fkt::rng::Pcg32;
+use fkt::serve::{msg, BatchConfig, Client, Json, ServeConfig, Server};
+use std::net::SocketAddr;
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+/// The open request every client (and both servers) uses — identical
+/// specs alias one cached operator and one micro-batcher.
+fn open_msg(args: &Args) -> Json {
+    msg(
+        "open",
+        &[
+            ("name", Json::str("uniform")),
+            ("n", Json::Num(args.get("n", 20000usize) as f64)),
+            ("d", Json::Num(args.get("d", 3usize) as f64)),
+            ("seed", Json::Num(42.0)),
+            ("kernel", Json::str(args.get_str("kernel", "matern32"))),
+            ("p", Json::Num(args.get("p", 4usize) as f64)),
+            ("theta", Json::Num(args.get("theta", 0.5f64))),
+            ("leaf", Json::Num(args.get("leaf", 256usize) as f64)),
+        ],
+    )
+}
+
+struct LoadResult {
+    latencies_ms: Vec<f64>,
+    wall_s: f64,
+    columns_per_apply: f64,
+}
+
+/// Drive `clients` concurrent connections, each issuing `requests`
+/// sequential MVMs after a barrier release. Returns per-request
+/// latencies, the load-phase wall time, and the server's batching
+/// amortization factor.
+fn run_load(addr: SocketAddr, args: &Args) -> LoadResult {
+    let clients: usize = args.get("clients", 8);
+    let requests: usize = args.get("requests", 32);
+    let n: usize = args.get("n", 20000);
+    let open = open_msg(args);
+
+    // Warm-up connection pays the operator build once, outside timing.
+    let mut warm = Client::connect(addr).expect("connect warm-up client");
+    let opened = warm.call_ok(&open).expect("warm-up open");
+    let id = opened.get("id").and_then(Json::as_usize).expect("open returns id") as u64;
+    let mut wrng = Pcg32::seeded(7);
+    let z = warm.mvm(id, &wrng.normal_vec(n)).expect("warm-up mvm");
+    assert_eq!(z.len(), n);
+
+    let barrier = Barrier::new(clients + 1);
+    let (latencies_ms, wall_s) = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let open = &open;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).expect("connect load client");
+                    let id = client
+                        .call_ok(open)
+                        .expect("client open")
+                        .get("id")
+                        .and_then(Json::as_usize)
+                        .expect("open returns id") as u64;
+                    let mut rng = Pcg32::seeded(1000 + c as u64);
+                    let weights: Vec<Vec<f64>> =
+                        (0..requests).map(|_| rng.normal_vec(n)).collect();
+                    barrier.wait();
+                    let mut lats = Vec::with_capacity(requests);
+                    for w in &weights {
+                        let t0 = Instant::now();
+                        let z = client.mvm(id, w).expect("load mvm");
+                        lats.push(t0.elapsed().as_secs_f64() * 1e3);
+                        assert_eq!(z.len(), n);
+                    }
+                    client.close();
+                    lats
+                })
+            })
+            .collect();
+        let t0 = Instant::now();
+        barrier.wait();
+        let lats: Vec<f64> =
+            handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect();
+        (lats, t0.elapsed().as_secs_f64())
+    });
+
+    let stats = warm.stats().expect("stats");
+    let columns_per_apply = stats
+        .get("ops")
+        .and_then(Json::as_arr)
+        .and_then(|ops| {
+            ops.iter().find(|o| o.get("id").and_then(Json::as_usize) == Some(id as usize))
+        })
+        .and_then(|o| o.get("columns_per_apply"))
+        .and_then(Json::as_f64)
+        .expect("per-op batching stats");
+    warm.close();
+    LoadResult { latencies_ms, wall_s, columns_per_apply }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n: usize = args.get("n", 20000);
+    let clients: usize = args.get("clients", 8);
+    let requests: usize = args.get("requests", 32);
+    let window_us: u64 = args.get("window-us", 1000);
+    let max_cols: usize = args.get("max-cols", 32);
+    let total = clients * requests;
+    println!(
+        "Serve load: {clients} clients × {requests} MVMs, N={n}, matern32 \
+         (window {window_us}µs, budget {max_cols} cols)"
+    );
+
+    let base = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: args.threads(),
+        registry_capacity: 8,
+        ..ServeConfig::default()
+    };
+
+    // Batched server under load.
+    let batched_cfg = ServeConfig {
+        batch: BatchConfig {
+            max_columns: max_cols,
+            gather_window: Duration::from_micros(window_us),
+        },
+        ..base.clone()
+    };
+    let server = Server::spawn(&batched_cfg).expect("spawn batched server");
+    let batched = run_load(server.addr(), &args);
+    server.shutdown().expect("clean batched shutdown");
+
+    // Same load with batching off: every request is one apply pass.
+    let unbatched_cfg = ServeConfig {
+        batch: BatchConfig { max_columns: 1, gather_window: Duration::ZERO },
+        ..base
+    };
+    let server = Server::spawn(&unbatched_cfg).expect("spawn unbatched server");
+    let unbatched = run_load(server.addr(), &args);
+    server.shutdown().expect("clean unbatched shutdown");
+
+    let mut lat_b = batched.latencies_ms.clone();
+    lat_b.sort_by(|a, b| a.total_cmp(b));
+    let mut lat_u = unbatched.latencies_ms.clone();
+    lat_u.sort_by(|a, b| a.total_cmp(b));
+    let rps_b = total as f64 / batched.wall_s;
+    let rps_u = total as f64 / unbatched.wall_s;
+    let ratio = rps_b / rps_u;
+
+    let mut table = Table::new(&["mode", "p50 ms", "p99 ms", "rps", "cols/apply"]);
+    table.row(&[
+        "batched".into(),
+        format!("{:.2}", percentile(&lat_b, 50.0)),
+        format!("{:.2}", percentile(&lat_b, 99.0)),
+        format!("{rps_b:.1}"),
+        format!("{:.2}", batched.columns_per_apply),
+    ]);
+    table.row(&[
+        "unbatched".into(),
+        format!("{:.2}", percentile(&lat_u, 50.0)),
+        format!("{:.2}", percentile(&lat_u, 99.0)),
+        format!("{rps_u:.1}"),
+        format!("{:.2}", unbatched.columns_per_apply),
+    ]);
+    table.print();
+    println!("single vs batched serve throughput: {ratio:.2}x at {clients} clients");
+
+    let mut json = BenchJson::new();
+    json.record("serve_p50_ms", percentile(&lat_b, 50.0));
+    json.record("serve_p99_ms", percentile(&lat_b, 99.0));
+    json.record("serve_rps", rps_b);
+    json.record("serve_unbatched_rps", rps_u);
+    json.record("batched_columns_per_apply", batched.columns_per_apply);
+    json.record("single_vs_batched_serve_throughput", ratio);
+    json.record("serve_clients", clients as f64);
+    json.record_str("simd_backend", fkt::linalg::simd::backend().name());
+    let path = BenchJson::default_path();
+    match json.save_merged(&path) {
+        Ok(()) => println!("\nBENCH json merged into {}", path.display()),
+        Err(e) => eprintln!("\nBENCH json write failed ({}): {e}", path.display()),
+    }
+}

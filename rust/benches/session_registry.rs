@@ -27,7 +27,7 @@ fn main() {
     let mut json = BenchJson::new();
 
     println!("Session registry: cold build vs cached re-request (N={n}, d={d}, matern32)");
-    let mut session = Session::native(args.threads());
+    let session = Session::native(args.threads());
     // Cold build: first request pays tree + plan + expansion.
     let t0 = std::time::Instant::now();
     let op = session

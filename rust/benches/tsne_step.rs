@@ -23,7 +23,7 @@ fn main() {
         args.get_list("ns", &[2000, 10000])
     };
     let bench = if full { Bencher::default() } else { Bencher::quick() };
-    let mut session = Session::native(args.threads());
+    let session = Session::native(args.threads());
 
     println!("t-SNE repulsive-field step: exact vs B-H-like (p=0) vs FKT");
     let mut table = Table::new(&["N", "method", "time/step", "Z rel err"]);
@@ -36,7 +36,7 @@ fn main() {
         let mut z_exact = 0.0;
         if n <= 20000 {
             let st = bench.run(|| {
-                let r = repulsive_field(&emb, &exact_cfg, &mut session);
+                let r = repulsive_field(&emb, &exact_cfg, &session);
                 z_exact = r.2;
                 r
             });
@@ -50,7 +50,7 @@ fn main() {
             };
             let mut z_fkt = 0.0;
             let st = bench.run(|| {
-                let r = repulsive_field(&emb, &cfg, &mut session);
+                let r = repulsive_field(&emb, &cfg, &session);
                 z_fkt = r.2;
                 r
             });

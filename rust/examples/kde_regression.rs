@@ -23,7 +23,7 @@ fn main() {
     let h: f64 = args.get("h", 0.25);
     let seed: u64 = args.get("seed", 23);
     let mut rng = Pcg32::seeded(seed);
-    let mut session = Session::native(args.threads());
+    let session = Session::native(args.threads());
     let cfg =
         FktConfig { p: args.get("p", 4), theta: args.get("theta", 0.5), ..Default::default() };
 
@@ -41,8 +41,8 @@ fn main() {
         }
     }
     let t0 = Instant::now();
-    let kde = KernelDensity::new(&mut session, &data, &grid, h, cfg);
-    let dens = kde.densities(&mut session);
+    let kde = KernelDensity::new(&session, &data, &grid, h, cfg);
+    let dens = kde.densities(&session);
     let cell = (hi[0] - lo[0]) * (hi[1] - lo[1]) / (g * g) as f64;
     let mass: f64 = dens.iter().sum::<f64>() * cell;
     println!(
@@ -61,7 +61,7 @@ fn main() {
         })
         .collect();
     let t1 = Instant::now();
-    let pred = kernel_regression(&mut session, &data, &values, &grid, 0.06, cfg);
+    let pred = kernel_regression(&session, &data, &values, &grid, 0.06, cfg);
     let mut se = 0.0;
     let mut cnt = 0;
     for (t, p) in pred.iter().enumerate() {

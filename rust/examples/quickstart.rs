@@ -32,14 +32,14 @@ fn main() {
     // tolerance resolution (PJRT tiles engage automatically when built).
     let backend =
         Backend::from_name(&args.get_str("backend", "auto")).unwrap_or(Backend::Auto);
-    let mut session = Session::builder().threads(args.threads()).backend(backend).build();
+    let session = Session::builder().threads(args.threads()).backend(backend).build();
 
     // Request the operator: `--tol ε` auto-tunes (p, θ) from the requested
     // accuracy via the truncation bound, with explicit `--p/--theta` as
     // overrides (OpSpec rules); without `--tol` the flags or their
     // defaults apply. One closure builds the request so the cached
     // re-request below is byte-for-byte the same spec.
-    let request = |session: &mut Session| {
+    let request = |session: &Session| {
         let mut spec = session.operator(&pts).kernel(family).leaf_capacity(leaf);
         match args.tolerance() {
             Some(eps) => {
@@ -56,7 +56,7 @@ fn main() {
         spec.build()
     };
     let t0 = Instant::now();
-    let op = request(&mut session);
+    let op = request(&session);
     let fkt_op = op.as_fkt().expect("fkt backend");
     println!(
         "build: {} (p={} θ={}, {} nodes, {} multipole terms/node, {} far pairs, {} near pairs)",
@@ -84,7 +84,7 @@ fn main() {
 
     // A repeated request is a registry hit — the service-side win.
     let t2 = Instant::now();
-    let op2 = request(&mut session);
+    let op2 = request(&session);
     assert!(op.ptr_eq(&op2), "same request must hit the registry");
     println!(
         "cached re-request: {} ({} hits / {} misses)",

@@ -15,7 +15,17 @@ use crate::fkt::FktOperator;
 use crate::linalg::{Precision, SimdBackend};
 use crate::op::KernelOp;
 use crate::runtime::Runtime;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
+
+/// Recover a mutex guard even if a panicking thread poisoned it — the
+/// coordinator's locked state (runtime handle, last-metrics snapshot) is
+/// replaced wholesale at each write, so there is no torn state to fear,
+/// and a multi-tenant server must not let one panicked request poison
+/// metrics for everyone else.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// Near-field execution backend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -103,12 +113,18 @@ pub struct MvmMetrics {
     pub simd_backend: SimdBackend,
 }
 
-/// The coordinator.
+/// The coordinator. All execution verbs take `&self`: the native phases
+/// thread through scoped pools internally, the PJRT runtime handle and
+/// the last-metrics snapshot live behind mutexes, so one coordinator can
+/// serve MVMs from any number of threads concurrently (the serving layer
+/// shares it inside an `Arc<SessionCore>`).
 pub struct Coordinator {
     cfg: CoordinatorConfig,
-    runtime: Option<Runtime>,
-    /// Last MVM's metrics.
-    pub last_metrics: MvmMetrics,
+    /// PJRT runtime handle. The mutex serializes tile execution — the AOT
+    /// executable is stateful — while native-path MVMs never touch it.
+    runtime: Mutex<Option<Runtime>>,
+    /// Metrics of the most recent MVM, read via [`Coordinator::last_metrics`].
+    last_metrics: Mutex<MvmMetrics>,
 }
 
 impl Coordinator {
@@ -119,16 +135,28 @@ impl Coordinator {
             Backend::Native => None,
             _ => Runtime::open_default(),
         };
-        Coordinator { cfg, runtime, last_metrics: MvmMetrics::default() }
+        Coordinator {
+            cfg,
+            runtime: Mutex::new(runtime),
+            last_metrics: Mutex::new(MvmMetrics::default()),
+        }
     }
 
     /// Native-only coordinator (no artifact probe).
     pub fn native(threads: usize) -> Coordinator {
         Coordinator {
             cfg: CoordinatorConfig { threads, backend: Backend::Native },
-            runtime: None,
-            last_metrics: MvmMetrics::default(),
+            runtime: Mutex::new(None),
+            last_metrics: Mutex::new(MvmMetrics::default()),
         }
+    }
+
+    /// Snapshot of the most recent MVM's metrics. Under concurrency this
+    /// is "some recent MVM through this coordinator" — whichever request
+    /// finished last — which is the right semantics for a shared serving
+    /// core's observability surface.
+    pub fn last_metrics(&self) -> MvmMetrics {
+        *lock(&self.last_metrics)
     }
 
     /// Effective thread count.
@@ -151,8 +179,7 @@ impl Coordinator {
     /// set `FKT_PREFER_PJRT=1` (or `Backend::Pjrt`) to route through the
     /// artifacts unconditionally.
     pub fn will_use_pjrt(&self, family: &str, dim: usize) -> bool {
-        let available = self
-            .runtime
+        let available = lock(&self.runtime)
             .as_ref()
             .map(|r| r.has_near_batch(family, dim))
             .unwrap_or(false);
@@ -169,7 +196,7 @@ impl Coordinator {
     /// Takes any [`KernelOp`] — FKT, dense, Barnes–Hut-configured FKT —
     /// so backends are swappable; the PJRT tile path engages only for FKT
     /// operators (via [`KernelOp::as_fkt`]) with a matching artifact.
-    pub fn mvm(&mut self, op: &dyn KernelOp, w: &[f64]) -> Vec<f64> {
+    pub fn mvm(&self, op: &dyn KernelOp, w: &[f64]) -> Vec<f64> {
         self.mvm_batch(op, w, 1)
     }
 
@@ -177,7 +204,7 @@ impl Coordinator {
     /// (`w[c*n..(c+1)*n]` is column c), column-major result over targets.
     /// Fused backends perform one traversal for all m columns — the
     /// recorded `MvmMetrics` phase counters say how many it actually took.
-    pub fn mvm_batch(&mut self, op: &dyn KernelOp, w: &[f64], m: usize) -> Vec<f64> {
+    pub fn mvm_batch(&self, op: &dyn KernelOp, w: &[f64], m: usize) -> Vec<f64> {
         assert!(m > 0, "mvm_batch needs at least one column");
         assert_eq!(w.len(), op.num_sources() * m, "weight block shape mismatch");
         let before = op.phase_counts();
@@ -226,17 +253,20 @@ impl Coordinator {
             metrics.panel_reuse = ps.applies.saturating_sub(1);
             metrics.precision = f.cfg.precision;
         }
-        self.last_metrics = metrics;
+        *lock(&self.last_metrics) = metrics;
         z
     }
 
     /// PJRT near-field path: far field natively (the paper's contribution
     /// lives there), near field batched through the AOT tile executable.
-    fn mvm_pjrt(&mut self, op: &FktOperator, w: &[f64], metrics: &mut MvmMetrics) -> Vec<f64> {
+    fn mvm_pjrt(&self, op: &FktOperator, w: &[f64], metrics: &mut MvmMetrics) -> Vec<f64> {
         let family = op.kernel.family.name();
         let d = op.tree().d;
-        let exe = self
-            .runtime
+        // Holds the runtime lock for the whole tile pass: the AOT
+        // executable is single-stream, so concurrent PJRT MVMs serialize
+        // here (native-path requests are unaffected).
+        let mut runtime = lock(&self.runtime);
+        let exe = runtime
             .as_mut()
             .expect("runtime probed")
             .near_batch(&family, d)
@@ -364,16 +394,16 @@ mod tests {
         let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
         let op = FktOperator::square(&pts, kern, cfg);
         let direct = op.matvec(&w);
-        let mut coord = Coordinator::native(4);
+        let coord = Coordinator::native(4);
         let z = coord.mvm(&op, &w);
         for i in 0..500 {
             assert!((z[i] - direct[i]).abs() < 1e-10 * (1.0 + direct[i].abs()));
         }
-        assert!(!coord.last_metrics.used_pjrt);
+        assert!(!coord.last_metrics().used_pjrt);
         // The metrics carry the process-wide dispatched micro-kernel
         // backend, whatever it resolved to on this machine.
-        assert_eq!(coord.last_metrics.simd_backend, crate::linalg::simd::backend());
-        assert!(!coord.last_metrics.simd_backend.name().is_empty());
+        assert_eq!(coord.last_metrics().simd_backend, crate::linalg::simd::backend());
+        assert!(!coord.last_metrics().simd_backend.name().is_empty());
     }
 
     #[test]
@@ -384,17 +414,17 @@ mod tests {
         let kern = Kernel::canonical(Family::Cauchy);
         let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
         let op = FktOperator::square(&pts, kern, cfg);
-        let mut coord = Coordinator::native(4);
+        let coord = Coordinator::native(4);
         let batched = coord.mvm_batch(&op, &w, 3);
         // The whole 3-column batch cost exactly one traversal per phase.
-        assert_eq!(coord.last_metrics.columns, 3);
-        assert_eq!(coord.last_metrics.moment_passes, 1);
-        assert_eq!(coord.last_metrics.far_passes, 1);
-        assert_eq!(coord.last_metrics.near_passes, 1);
+        assert_eq!(coord.last_metrics().columns, 3);
+        assert_eq!(coord.last_metrics().moment_passes, 1);
+        assert_eq!(coord.last_metrics().far_passes, 1);
+        assert_eq!(coord.last_metrics().near_passes, 1);
         // And each column matches the looped single-RHS coordinator MVM.
         for c in 0..3 {
             let single = coord.mvm(&op, &w[c * 600..(c + 1) * 600]);
-            assert_eq!(coord.last_metrics.moment_passes, 1);
+            assert_eq!(coord.last_metrics().moment_passes, 1);
             for t in 0..600 {
                 let b = batched[c * 600 + t];
                 assert!(
@@ -413,19 +443,19 @@ mod tests {
         let kern = Kernel::canonical(Family::Cauchy);
         let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
         let op = FktOperator::square(&pts, kern, cfg);
-        let mut coord = Coordinator::native(2);
+        let coord = Coordinator::native(2);
         let _ = coord.mvm(&op, &w);
-        let m1 = coord.last_metrics;
+        let m1 = coord.last_metrics();
         assert!(m1.panels_cached > 0, "default budget caches panels");
         assert!(m1.panel_bytes > 0, "first apply materializes panels");
         assert_eq!(m1.panel_reuse, 0, "first apply is not a reuse");
         let _ = coord.mvm(&op, &w);
-        assert_eq!(coord.last_metrics.panel_reuse, 1);
-        assert_eq!(coord.last_metrics.panel_bytes, m1.panel_bytes, "no growth on reuse");
+        assert_eq!(coord.last_metrics().panel_reuse, 1);
+        assert_eq!(coord.last_metrics().panel_bytes, m1.panel_bytes, "no growth on reuse");
         // Budget 0 forces pure streaming: nothing cached, nothing resident.
         let streamed = FktOperator::square(&pts, kern, FktConfig { panel_budget_bytes: 0, ..cfg });
         let _ = coord.mvm(&streamed, &w);
-        let m2 = coord.last_metrics;
+        let m2 = coord.last_metrics();
         assert_eq!((m2.panels_cached, m2.panel_bytes), (0, 0));
         assert!(m2.panels_streamed > 0);
     }
@@ -443,10 +473,10 @@ mod tests {
             kern,
             FktConfig { p: 6, theta: 0.4, leaf_capacity: 32, ..Default::default() },
         );
-        let mut coord = Coordinator::native(2);
+        let coord = Coordinator::native(2);
         let zd = coord.mvm(&dense_op, &w);
-        assert!(!coord.last_metrics.used_pjrt);
-        assert_eq!(coord.last_metrics.moment_passes, 0); // dense: no phases
+        assert!(!coord.last_metrics().used_pjrt);
+        assert_eq!(coord.last_metrics().moment_passes, 0); // dense: no phases
         let zf = coord.mvm(&fkt_op, &w);
         let mut num = 0.0;
         let mut den = 0.0;
@@ -459,7 +489,7 @@ mod tests {
 
     #[test]
     fn pjrt_coordinator_matches_native_when_artifacts_exist() {
-        let mut coord = Coordinator::new(CoordinatorConfig {
+        let coord = Coordinator::new(CoordinatorConfig {
             threads: 2,
             backend: Backend::Pjrt,
         });
@@ -475,8 +505,8 @@ mod tests {
         let op = FktOperator::square(&pts, kern, cfg);
         let native = op.matvec(&w);
         let z = coord.mvm(&op, &w);
-        assert!(coord.last_metrics.used_pjrt);
-        assert!(coord.last_metrics.tiles > 0);
+        assert!(coord.last_metrics().used_pjrt);
+        assert!(coord.last_metrics().tiles > 0);
         let mut num = 0.0;
         let mut den = 0.0;
         for i in 0..800 {
@@ -490,7 +520,7 @@ mod tests {
 
     #[test]
     fn auto_backend_falls_back_for_unknown_family() {
-        let mut coord = Coordinator::new(CoordinatorConfig::default());
+        let coord = Coordinator::new(CoordinatorConfig::default());
         // exp_inv_r has no artifact in the default set.
         assert!(!coord.will_use_pjrt("exp_inv_r", 2));
         let pts = uniform_points(200, 2, 135);
@@ -501,6 +531,6 @@ mod tests {
         let op = FktOperator::square(&pts, kern, cfg);
         let z = coord.mvm(&op, &w);
         assert_eq!(z.len(), 200);
-        assert!(!coord.last_metrics.used_pjrt);
+        assert!(!coord.last_metrics().used_pjrt);
     }
 }

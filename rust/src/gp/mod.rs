@@ -129,7 +129,7 @@ impl GpRegressor {
     /// the session (a repeated construction over the same training set is
     /// a registry hit, not a rebuild).
     pub fn new(
-        session: &mut Session,
+        session: &Session,
         train: Points,
         noise_var: Vec<f64>,
         kernel: Kernel,
@@ -142,7 +142,7 @@ impl GpRegressor {
 
     /// One operator request carrying the shared config/tolerance policy.
     fn request(
-        session: &mut Session,
+        session: &Session,
         sources: &Points,
         targets: Option<&Points>,
         kernel: Kernel,
@@ -167,7 +167,7 @@ impl GpRegressor {
     /// hyperparameters) are unchanged since the last fit: repeated
     /// predictions against one `y` issue ZERO additional solves
     /// (asserted against the session's verb counters in the tests).
-    pub fn fit_alpha(&mut self, y: &[f64], session: &mut Session) -> FitStats {
+    pub fn fit_alpha(&mut self, y: &[f64], session: &Session) -> FitStats {
         assert_eq!(y.len(), self.train.len());
         let fp = y_fingerprint(y);
         if let Some(f) = &self.fitted {
@@ -208,7 +208,7 @@ impl GpRegressor {
         &mut self,
         y: &[f64],
         x_star: &Points,
-        session: &mut Session,
+        session: &Session,
     ) -> GpResult {
         let cg = self.fit_alpha(y, session);
         let cross = Self::request(session, &self.train, Some(x_star), self.kernel, &self.cfg);
@@ -250,7 +250,7 @@ impl GpRegressor {
     /// answered for the old covariance.
     fn set_hyperparameters(
         &mut self,
-        session: &mut Session,
+        session: &Session,
         kernel: Kernel,
         noise_var: Option<f64>,
     ) {
@@ -322,9 +322,9 @@ mod tests {
             jitter: 1e-8,
             ..Default::default()
         };
-        let mut session = Session::native(2);
-        let mut gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
-        let res = gp.posterior_mean(&y, &xs, &mut session);
+        let session = Session::native(2);
+        let mut gp = GpRegressor::new(&session, train, noise, kernel, cfg);
+        let res = gp.posterior_mean(&y, &xs, &session);
         assert!(res.cg.converged, "CG residual {}", res.cg.rel_residual);
         for i in 0..40 {
             assert!(
@@ -358,9 +358,9 @@ mod tests {
             ..Default::default()
         };
         let train2 = train.clone();
-        let mut session = Session::native(2);
-        let mut gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
-        let res = gp.posterior_mean(&y, &train2, &mut session);
+        let session = Session::native(2);
+        let mut gp = GpRegressor::new(&session, train, noise, kernel, cfg);
+        let res = gp.posterior_mean(&y, &train2, &session);
         let mut worst = 0.0f64;
         for i in 0..n {
             worst = worst.max((res.mean[i] - y[i]).abs());
@@ -385,9 +385,9 @@ mod tests {
             precondition: false, // exercise the unpreconditioned path too
             ..Default::default()
         };
-        let mut session = Session::native(4);
-        let mut gp = GpRegressor::new(&mut session, pts, noise, kernel, cfg);
-        let res = gp.fit_alpha(&y, &mut session);
+        let session = Session::native(4);
+        let mut gp = GpRegressor::new(&session, pts, noise, kernel, cfg);
+        let res = gp.fit_alpha(&y, &session);
         assert!(res.converged, "CG residual {}", res.rel_residual);
         assert!(res.iterations < 300);
     }
@@ -417,11 +417,11 @@ mod tests {
             jitter: 1e-8,
             ..Default::default()
         };
-        let mut session = Session::native(2);
-        let mut gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
+        let session = Session::native(2);
+        let mut gp = GpRegressor::new(&session, train, noise, kernel, cfg);
         // The tolerance request resolved real hyperparameters.
         assert!(gp.operator().resolved().is_some());
-        let res = gp.posterior_mean(&y, &xs, &mut session);
+        let res = gp.posterior_mean(&y, &xs, &session);
         assert!(res.cg.converged);
         for i in 0..30 {
             assert!(
@@ -457,16 +457,16 @@ mod tests {
             jitter: 1e-8,
             ..Default::default()
         };
-        let mut session = Session::native(2);
+        let session = Session::native(2);
         let mut gp64 =
-            GpRegressor::new(&mut session, train.clone(), noise.clone(), kernel, base);
-        let f64_fit = gp64.fit_alpha(&y, &mut session);
+            GpRegressor::new(&session, train.clone(), noise.clone(), kernel, base);
+        let f64_fit = gp64.fit_alpha(&y, &session);
         assert!(f64_fit.converged);
         assert_eq!(session.counters().refine_sweeps, 0, "f64 GP never sweeps");
         let cfg32 = GpConfig { precision: crate::linalg::Precision::F32, ..base };
-        let mut gp32 = GpRegressor::new(&mut session, train, noise, kernel, cfg32);
+        let mut gp32 = GpRegressor::new(&session, train, noise, kernel, cfg32);
         assert_eq!(gp32.operator().precision(), crate::linalg::Precision::F32);
-        let f32_fit = gp32.fit_alpha(&y, &mut session);
+        let f32_fit = gp32.fit_alpha(&y, &session);
         assert!(f32_fit.converged, "refined fit residual {}", f32_fit.rel_residual);
         assert!(f32_fit.rel_residual <= base.cg_tol, "same cg_tol as the f64 fit");
         assert!(session.counters().refine_sweeps >= 1, "the f32 fit swept");
@@ -495,17 +495,17 @@ mod tests {
             fkt: FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() },
             ..Default::default()
         };
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let kernel = Kernel::matern32(0.5);
-        let mut gp = GpRegressor::new(&mut session, train, noise, kernel, cfg);
-        let r1 = gp.posterior_mean(&y, &xs, &mut session);
+        let mut gp = GpRegressor::new(&session, train, noise, kernel, cfg);
+        let r1 = gp.posterior_mean(&y, &xs, &session);
         assert!(!r1.cg.cached);
         let solves_after_first = session.counters().solve;
         assert_eq!(solves_after_first, 1);
         let alpha_first = gp.alpha().expect("weights cached").to_vec();
         // Second prediction with the same y: zero additional solves, same
         // weights, identical mean.
-        let r2 = gp.posterior_mean(&y, &xs, &mut session);
+        let r2 = gp.posterior_mean(&y, &xs, &session);
         assert!(r2.cg.cached);
         assert_eq!(r2.cg.iterations, r1.cg.iterations, "stats replayed from cache");
         assert_eq!(session.counters().solve, solves_after_first, "no new solve");
@@ -516,7 +516,7 @@ mod tests {
         // A perturbed y must refit (bit-exact fingerprint invalidation).
         let mut y2 = y.clone();
         y2[17] += 1e-13;
-        let r3 = gp.posterior_mean(&y2, &xs, &mut session);
+        let r3 = gp.posterior_mean(&y2, &xs, &session);
         assert!(!r3.cg.cached);
         assert_eq!(session.counters().solve, solves_after_first + 1);
     }
@@ -532,14 +532,14 @@ mod tests {
             fkt: FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() },
             ..Default::default()
         };
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let kernel = Kernel::canonical(Family::Gaussian);
-        let gp1 = GpRegressor::new(&mut session, train.clone(), noise.clone(), kernel, cfg);
+        let gp1 = GpRegressor::new(&session, train.clone(), noise.clone(), kernel, cfg);
         let misses_after_first = session.registry_stats().misses;
-        let mut gp2 = GpRegressor::new(&mut session, train, noise, kernel, cfg);
+        let mut gp2 = GpRegressor::new(&session, train, noise, kernel, cfg);
         assert!(gp1.operator().ptr_eq(gp2.operator()), "same data ⇒ same operator");
         assert_eq!(session.registry_stats().misses, misses_after_first);
         assert!(session.registry_stats().hits >= 1);
-        let _ = gp2.fit_alpha(&y, &mut session);
+        let _ = gp2.fit_alpha(&y, &session);
     }
 }

@@ -227,7 +227,7 @@ struct EvalCfg {
 /// Operator request with fully pinned configuration (no tolerance
 /// resolution — `cfg` already carries the resolved `(p, θ)`).
 fn request_frozen(
-    session: &mut Session,
+    session: &Session,
     pts: &Points,
     kernel: Kernel,
     cfg: &FktConfig,
@@ -239,7 +239,7 @@ fn request_frozen(
 /// traversal plus a scaled add (the uniform-noise training model is what
 /// makes the diagonal a scalar shift).
 fn shifted_apply_batch(
-    session: &mut Session,
+    session: &Session,
     op: &OpHandle,
     x: &[f64],
     m: usize,
@@ -282,7 +282,7 @@ fn orthonormal_columns(block: &[f64], n: usize, k: usize) -> Vec<Vec<f64>> {
 /// (with full reorthogonalization) feed [`symtridiag_eigen`] and the
 /// Gauss-quadrature rule `‖w‖² Σ_k τ_k² f(λ_k)`.
 fn lanczos_quadrature_batch(
-    session: &mut Session,
+    session: &Session,
     op: &OpHandle,
     w: &[f64],
     n: usize,
@@ -367,7 +367,7 @@ fn lanczos_quadrature_batch(
 /// One stochastic evaluation of the LML (optional) and its gradient at
 /// `(kernel, noise_var)`. See the module docs for the estimator layout.
 fn evaluate(
-    session: &mut Session,
+    session: &Session,
     pts: &Points,
     kernel: Kernel,
     noise_var: f64,
@@ -542,7 +542,7 @@ impl GpRegressor {
     /// registry reuse — same operators, zero rebuilds).
     pub fn lml(
         &self,
-        session: &mut Session,
+        session: &Session,
         y: &[f64],
         noise_var: f64,
         opts: &LmlOpts,
@@ -578,7 +578,7 @@ impl GpRegressor {
     /// σ_n²): a single noise hyperparameter is what the LML gradient
     /// `½σ_n²(‖α‖² − tr A⁻¹)` estimates, and the scalar tail is what the
     /// shifted trace estimators lean on.
-    pub fn train(&mut self, session: &mut Session, y: &[f64], opts: &TrainOpts) -> TrainResult {
+    pub fn train(&mut self, session: &Session, y: &[f64], opts: &TrainOpts) -> TrainResult {
         assert_eq!(y.len(), self.train.len());
         assert!(!self.train.is_empty(), "cannot train on an empty dataset");
         assert!(opts.iters > 0, "train needs at least one iteration");
@@ -711,7 +711,7 @@ mod tests {
         let base = Kernel::matern32(0.4);
         let dker = base.scale_derivative().expect("matern32 differentiates");
         let dense = dense_mvm(&dker, &pts, &pts, &w);
-        let mut session = Session::native(2);
+        let session = Session::native(2);
         let op = session
             .operator(&pts)
             .scaled_kernel(dker)
@@ -796,10 +796,10 @@ mod tests {
             jitter,
             ..Default::default()
         };
-        let mut session = Session::native(2);
-        let gp = GpRegressor::new(&mut session, pts, vec![v; n], eval_kernel, cfg);
+        let session = Session::native(2);
+        let gp = GpRegressor::new(&session, pts, vec![v; n], eval_kernel, cfg);
         let opts = LmlOpts::default();
-        let est = gp.lml(&mut session, &y, v, &opts);
+        let est = gp.lml(&session, &y, v, &opts);
         assert!(est.solve_converged, "probe solve did not converge");
         assert_eq!(est.batched_solves, 1, "one batched solve per evaluation");
         assert_eq!(est.derivative_mvms, 2);
@@ -839,7 +839,7 @@ mod tests {
         // Same seed ⇒ same estimate (up to threaded-reduction round-off),
         // and the second call is pure registry reuse (no new builds).
         let misses = session.registry_stats().misses;
-        let est2 = gp.lml(&mut session, &y, v, &opts);
+        let est2 = gp.lml(&session, &y, v, &opts);
         assert_eq!(session.registry_stats().misses, misses, "warm LML rebuilds nothing");
         assert!(
             (est2.lml.unwrap() - lml).abs() <= 1e-6 * lml.abs(),
@@ -883,21 +883,21 @@ mod tests {
         };
         // Training churns two operators per iteration (new scale ⇒ new
         // key); a small LRU keeps dead trees/panels from accumulating.
-        let mut session = Session::builder()
+        let session = Session::builder()
             .threads(4)
             .backend(crate::session::Backend::Native)
             .registry_capacity(4)
             .build();
         // Start misparameterized: ρ₀ = 0.3 (2× too long), σ_n²₀ = 0.1.
         let mut gp =
-            GpRegressor::new(&mut session, pts, vec![0.1; n], Kernel::matern32(0.3), cfg);
+            GpRegressor::new(&session, pts, vec![0.1; n], Kernel::matern32(0.3), cfg);
         // P = 16 probes: the columns share every traversal, so the extra
         // probes are nearly free, and the offline prototype puts the
         // recovery error at ≤ 10% across data/probe seeds (15% bar).
         let opts =
             TrainOpts { iters: 40, lr: 0.15, probes: 16, seed: 0x51ed, ..Default::default() };
         let c0 = session.counters();
-        let res = gp.train(&mut session, &y, &opts);
+        let res = gp.train(&session, &y, &opts);
         let c1 = session.counters();
 
         // Cost invariants: one batched solve per iteration, O(1) batched
@@ -932,7 +932,7 @@ mod tests {
         assert_eq!(gp.kernel().scale, res.kernel.scale);
         assert!((gp.noise_variances()[0] - res.noise_var).abs() < 1e-15);
         // And the refreshed operator serves predictions immediately.
-        let fit = gp.fit_alpha(&y, &mut session);
+        let fit = gp.fit_alpha(&y, &session);
         assert!(fit.converged);
     }
 
@@ -957,9 +957,9 @@ mod tests {
             jitter: 1e-8,
             ..Default::default()
         };
-        let mut session = Session::native(2);
+        let session = Session::native(2);
         let mut gp =
-            GpRegressor::new(&mut session, pts, vec![0.05; n], Kernel::matern32(0.45), cfg);
+            GpRegressor::new(&session, pts, vec![0.05; n], Kernel::matern32(0.45), cfg);
         let opts = TrainOpts {
             iters: 12,
             probes: 8,
@@ -968,7 +968,7 @@ mod tests {
             seed: 0xabcd,
             ..Default::default()
         };
-        let res = gp.train(&mut session, &y, &opts);
+        let res = gp.train(&session, &y, &opts);
         assert_eq!(res.trace.len(), 12);
         let first = res.trace.first().unwrap().lml.expect("tracked");
         let best = res

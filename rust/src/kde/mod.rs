@@ -34,7 +34,7 @@ impl KernelDensity {
     /// request against the session registry — repeated estimators over the
     /// same data/grid/bandwidth share one operator).
     pub fn new(
-        session: &mut Session,
+        session: &Session,
         data: &Points,
         eval_points: &Points,
         h: f64,
@@ -53,7 +53,7 @@ impl KernelDensity {
     }
 
     /// Density estimates at the evaluation points.
-    pub fn densities(&self, session: &mut Session) -> Vec<f64> {
+    pub fn densities(&self, session: &Session) -> Vec<f64> {
         let ones = vec![1.0; self.n];
         let mut z = session.mvm(&self.op, &ones);
         let norm = 1.0 / (self.n as f64 * self.h.powi(self.d as i32) * gaussian_norm(self.d));
@@ -68,7 +68,7 @@ impl KernelDensity {
 /// numerator (`K·v`) and denominator (`K·1`) MVMs are fused into one
 /// 2-column batch sharing a single tree traversal.
 pub fn kernel_regression(
-    session: &mut Session,
+    session: &Session,
     data: &Points,
     values: &[f64],
     eval_points: &Points,
@@ -118,9 +118,9 @@ mod tests {
             }
         }
         let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
-        let mut session = Session::native(1);
-        let kde = KernelDensity::new(&mut session, &data, &grid, 0.35, cfg);
-        let dens = kde.densities(&mut session);
+        let session = Session::native(1);
+        let kde = KernelDensity::new(&session, &data, &grid, 0.35, cfg);
+        let dens = kde.densities(&session);
         let cell = (8.0 / g as f64) * (8.0 / g as f64);
         let mass: f64 = dens.iter().sum::<f64>() * cell;
         assert!((mass - 1.0).abs() < 0.05, "mass {mass}");
@@ -135,9 +135,9 @@ mod tests {
         let eval = Points::new(2, rng.normal_vec(50 * 2));
         let h = 0.4;
         let cfg = FktConfig { p: 6, theta: 0.4, leaf_capacity: 50, ..Default::default() };
-        let mut session = Session::native(1);
-        let kde = KernelDensity::new(&mut session, &data, &eval, h, cfg);
-        let fast = kde.densities(&mut session);
+        let session = Session::native(1);
+        let kde = KernelDensity::new(&session, &data, &eval, h, cfg);
+        let fast = kde.densities(&session);
         let norm = 1.0 / (n as f64 * h * h * gaussian_norm(2));
         for t in 0..eval.len() {
             let mut acc = 0.0;
@@ -165,8 +165,8 @@ mod tests {
         let eval = Points::new(2, rng.normal_vec(40 * 2));
         let h = 0.5;
         let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 48, ..Default::default() };
-        let mut session = Session::native(2);
-        let fused = kernel_regression(&mut session, &data, &values, &eval, h, cfg);
+        let session = Session::native(2);
+        let fused = kernel_regression(&session, &data, &values, &eval, h, cfg);
         // One traversal for both columns.
         assert_eq!(session.last_metrics().columns, 2);
         assert_eq!(session.last_metrics().moment_passes, 1);
@@ -203,8 +203,8 @@ mod tests {
             .collect();
         let eval = Points::new(1, (0..50).map(|i| 0.05 + 0.9 * i as f64 / 49.0).collect());
         let cfg = FktConfig { p: 5, theta: 0.5, leaf_capacity: 64, ..Default::default() };
-        let mut session = Session::native(1);
-        let pred = kernel_regression(&mut session, &data, &values, &eval, 0.05, cfg);
+        let session = Session::native(1);
+        let pred = kernel_regression(&session, &data, &values, &eval, 0.05, cfg);
         let mut worst = 0.0f64;
         for (t, p) in pred.iter().enumerate() {
             worst = worst.max((p - f(eval.point(t)[0])).abs());

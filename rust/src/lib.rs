@@ -31,6 +31,7 @@ pub mod op;
 pub mod points;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod expansion;
 pub mod symbolic;

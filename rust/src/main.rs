@@ -8,6 +8,11 @@
 //!                            through batched MVM/solve verbs)
 //!   tsne   [--n …]           t-SNE embedding of the MNIST surrogate
 //!   plan   [--n …]           print the far/near plan statistics
+//!   serve  [--port --threads --max-cols --window-us …]
+//!                            multi-tenant TCP serving with cross-request
+//!                            micro-batching (Ctrl-C drains and exits 0)
+//!   serve-probe [--addr …]   scripted open/mvm/solve/stats round-trip
+//!                            against a running server (CI smoke client)
 //!
 //! Every subcommand talks to the library through one `Session` — the
 //! public entry point that owns the coordinator, the operator registry,
@@ -50,6 +55,8 @@ fn main() {
         "gp" => gp(&args),
         "gp-train" => gp_train(&args),
         "tsne" => tsne(&args),
+        "serve" => serve(&args),
+        "serve-probe" => serve_probe(&args),
         other => {
             eprintln!("unknown subcommand {other:?}; see `fkt info`");
             std::process::exit(2);
@@ -100,7 +107,7 @@ fn info() {
 /// precedence as `OpSpec`: `--tol ε` routes through tolerance resolution,
 /// and any explicit `--p`/`--theta` override the resolved values; without
 /// `--tol` the explicit flags (or their defaults p=4, θ=0.5) apply.
-fn build_op(args: &Args, session: &mut Session) -> (OpHandle, Vec<f64>, Points, Kernel) {
+fn build_op(args: &Args, session: &Session) -> (OpHandle, Vec<f64>, Points, Kernel) {
     let n: usize = args.get("n", 20000);
     let d: usize = args.get("d", 3);
     let seed: u64 = args.get("seed", 1);
@@ -147,9 +154,9 @@ fn build_op(args: &Args, session: &mut Session) -> (OpHandle, Vec<f64>, Points, 
 }
 
 fn mvm(args: &Args) {
-    let mut session = session_from(args);
+    let session = session_from(args);
     let t0 = Instant::now();
-    let (op, w, pts, kernel) = build_op(args, &mut session);
+    let (op, w, pts, kernel) = build_op(args, &session);
     println!("build: {}", fmt_time(t0.elapsed().as_secs_f64()));
     let cols: usize = args.get("cols", 1);
     let t1 = Instant::now();
@@ -196,8 +203,8 @@ fn mvm(args: &Args) {
 }
 
 fn plan(args: &Args) {
-    let mut session = session_from(args);
-    let (op, _, _, _) = build_op(args, &mut session);
+    let session = session_from(args);
+    let (op, _, _, _) = build_op(args, &session);
     let fkt_op = op.as_fkt().expect("plan statistics need an FKT operator");
     let stats = fkt_op.plan().stats(fkt_op.tree());
     println!("nodes: {}", fkt_op.tree().nodes.len());
@@ -235,9 +242,9 @@ fn gp(args: &Args) {
         jitter: 1e-6,
         precondition: true,
     };
-    let mut session = session_from(args);
+    let session = session_from(args);
     let mut gp = GpRegressor::new(
-        &mut session,
+        &session,
         ds.unit_sphere_points(),
         ds.noise_variances(),
         Kernel::matern32(rho),
@@ -248,7 +255,7 @@ fn gp(args: &Args) {
     }
     println!("storage tier: {}", gp.operator().precision().name());
     let t0 = Instant::now();
-    let fit = gp.fit_alpha(&y0, &mut session);
+    let fit = gp.fit_alpha(&y0, &session);
     println!(
         "CG: {} iters, residual {:.2e}, {}",
         fit.iterations,
@@ -301,9 +308,9 @@ fn gp_train(args: &Args) {
     };
     // Training churns operators (every scale step is a new registry key);
     // bound the LRU so dead trees and panels don't accumulate.
-    let mut session = session_with_capacity(args, 4);
+    let session = session_with_capacity(args, 4);
     let mut gp = GpRegressor::new(
-        &mut session,
+        &session,
         ds.unit_sphere_points(),
         vec![noise0; n],
         Kernel::matern32(rho0),
@@ -314,7 +321,7 @@ fn gp_train(args: &Args) {
         opts.iters, opts.probes
     );
     let t0 = Instant::now();
-    let res = gp.train(&mut session, &y0, &opts);
+    let res = gp.train(&session, &y0, &opts);
     let total = t0.elapsed().as_secs_f64();
     for (i, step) in res.trace.iter().enumerate() {
         if i % 5 == 0 || i + 1 == res.trace.len() {
@@ -375,12 +382,152 @@ fn tsne(args: &Args) {
         seed: args.get("seed", 11),
         ..Default::default()
     };
-    let mut session = session_from(args);
+    let session = session_from(args);
     let t0 = Instant::now();
-    let res = run(&data, &cfg, &mut session);
+    let res = run(&data, &cfg, &session);
     println!("t-SNE: {}", fmt_time(t0.elapsed().as_secs_f64()));
     for (it, kl) in &res.kl_trace {
         println!("  iter {it:>5}: KL = {kl:.4}");
     }
     println!("10-NN purity: {:.3}", knn_purity(&res.embedding, &labels, 10));
+}
+
+/// Multi-tenant serving: bind, arm graceful Ctrl-C, and run the accept
+/// loop until shutdown. `--window-us 0 --max-cols 1` disables batching
+/// (each request is one apply) — the load bench uses exactly that to
+/// measure what batching buys.
+fn serve(args: &Args) {
+    use fkt::serve::{install_sigint, BatchConfig, ServeConfig, Server};
+    use std::io::Write as _;
+    use std::time::Duration;
+    let port: u16 = args.get("port", 7878);
+    let default_addr = format!("127.0.0.1:{port}");
+    let backend =
+        Backend::from_name(&args.get_str("backend", "auto")).unwrap_or(Backend::Auto);
+    let cfg = ServeConfig {
+        addr: args.get_str("addr", &default_addr),
+        threads: args.threads(),
+        backend,
+        registry_capacity: args.get("registry-cap", 64),
+        batch: BatchConfig {
+            max_columns: args.get("max-cols", 32),
+            gather_window: Duration::from_micros(args.get("window-us", 1000)),
+        },
+    };
+    let server = match Server::bind(&cfg) {
+        Ok(server) => server,
+        Err(e) => {
+            eprintln!("fkt serve: cannot bind {}: {e}", cfg.addr);
+            std::process::exit(1);
+        }
+    };
+    install_sigint();
+    let addr = server.local_addr().expect("bound listener has an address");
+    println!(
+        "fkt serve listening on {addr} (batch ≤{} cols, {}µs window, registry cap {})",
+        cfg.batch.max_columns,
+        cfg.batch.gather_window.as_micros(),
+        cfg.registry_capacity
+    );
+    // Flush before blocking: scripts wait for this line to know the
+    // server is accepting.
+    std::io::stdout().flush().ok();
+    match server.run() {
+        Ok(()) => println!("fkt serve: drained and shut down cleanly"),
+        Err(e) => {
+            eprintln!("fkt serve: accept loop failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Scripted client round-trip against a running server — the CI smoke
+/// test. Opens an operator, checks an `mvm` against a locally built
+/// reference, runs a regularized `solve` to convergence, and reads
+/// `stats`. Exits nonzero on any mismatch.
+fn serve_probe(args: &Args) {
+    use fkt::serve::{msg, Client, Json};
+
+    fn fail(context: &str) -> ! {
+        eprintln!("serve-probe FAILED: {context}");
+        std::process::exit(1);
+    }
+
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let n: usize = args.get("n", 2000);
+    let mut client =
+        Client::connect(&addr).unwrap_or_else(|e| fail(&format!("connect {addr}: {e}")));
+    let open = msg(
+        "open",
+        &[
+            ("name", Json::str("uniform")),
+            ("n", Json::Num(n as f64)),
+            ("d", Json::Num(3.0)),
+            ("seed", Json::Num(7.0)),
+            ("kernel", Json::str("matern32")),
+            ("p", Json::Num(4.0)),
+            ("theta", Json::Num(0.5)),
+        ],
+    );
+    let opened = client.call_ok(&open).unwrap_or_else(|e| fail(&format!("open: {e}")));
+    let id = opened
+        .get("id")
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| fail("open response carries no id")) as u64;
+    println!("serve-probe: opened operator id {id} (n={n})");
+
+    // Local reference: the same dataset and spec through an in-process
+    // session. The served answer must agree to numerical noise.
+    let mut rng = Pcg32::seeded(7);
+    let pts = fkt::data::uniform_hypersphere(n, 3, &mut rng);
+    let session = Session::native(args.threads());
+    let op = session.operator(&pts).kernel(Family::Matern32).order(4).theta(0.5).build();
+    let mut wrng = Pcg32::seeded(123);
+    let w = wrng.normal_vec(n);
+    let z_remote = client.mvm(id, &w).unwrap_or_else(|e| fail(&format!("mvm: {e}")));
+    let z_local = session.mvm(&op, &w);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (a, b) in z_remote.iter().zip(&z_local) {
+        num += (a - b) * (a - b);
+        den += b * b;
+    }
+    let rel = (num / den.max(1e-300)).sqrt();
+    if rel > 1e-5 {
+        fail(&format!("served mvm diverges from local reference: rel l2 {rel:.3e}"));
+    }
+    println!("serve-probe: mvm matches local reference (rel l2 {rel:.3e})");
+
+    let y = wrng.normal_vec(n);
+    let solve = msg(
+        "solve",
+        &[
+            ("id", Json::Num(id as f64)),
+            ("y", Json::from_f64s(&y)),
+            ("noise", Json::Num(0.1)),
+            ("tol", Json::Num(1e-5)),
+            ("max_iters", Json::Num(400.0)),
+        ],
+    );
+    let solved = client.call_ok(&solve).unwrap_or_else(|e| fail(&format!("solve: {e}")));
+    let converged = solved.get("converged").and_then(Json::as_bool).unwrap_or(false);
+    let iters = solved.get("iterations").and_then(Json::as_usize).unwrap_or(0);
+    if !converged {
+        fail(&format!("solve did not converge in {iters} iterations"));
+    }
+    println!("serve-probe: solve converged in {iters} CG iterations");
+
+    let stats = client.stats().unwrap_or_else(|e| fail(&format!("stats: {e}")));
+    let mvms = stats
+        .get("counters")
+        .and_then(|c| c.get("mvm"))
+        .and_then(Json::as_usize)
+        .unwrap_or(0);
+    let ops = stats.get("ops").and_then(Json::as_arr).map_or(0, |a| a.len());
+    if mvms == 0 || ops == 0 {
+        fail(&format!("stats implausible: {mvms} mvms over {ops} ops"));
+    }
+    println!("serve-probe: stats report {mvms} session mvm(s) across {ops} served op(s)");
+    client.close();
+    println!("serve-probe: OK");
 }

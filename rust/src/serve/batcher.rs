@@ -1,0 +1,370 @@
+//! Cross-request micro-batching: many concurrent MVM requests against
+//! one operator, one fused `apply_batch` traversal.
+//!
+//! The FKT's batched apply shares the whole tree walk — P2M, M2L, L2P —
+//! across columns, so m requests answered as one m-column batch cost
+//! barely more than one request answered alone. This module exploits
+//! that across *tenants*: each served operator owns a [`MicroBatcher`]
+//! whose worker thread drains every request pending at that moment
+//! (holding the door open for a short gather window, up to a column
+//! budget), packs the weight vectors column-major, runs ONE
+//! `mvm_batch`, and scatters the result columns back over per-request
+//! channels.
+//!
+//! The tradeoff is explicit: the gather window adds up to `gather_window`
+//! of latency to a lonely request in exchange for near-flat cost under
+//! concurrency. A batch that drains to a single column takes the
+//! single-request fast path (`mvm`, no packing) so an idle tenant pays
+//! only the window, never a copy.
+
+use crate::session::{OpHandle, SessionCore};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Lock with poison recovery: a panicking request must not wedge the
+/// whole operator's queue.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Tuning knobs for one operator's batcher.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    /// Most columns packed into one fused apply. Bounds both the packed
+    /// buffer (`n × max_columns` f64s) and the worst-case head-of-line
+    /// wait behind a full batch.
+    pub max_columns: usize,
+    /// How long the worker holds the door open after the first pending
+    /// request, letting near-simultaneous requests coalesce. Zero
+    /// disables gathering (each drain takes only what is already queued).
+    pub gather_window: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        // 32 columns ≈ the point where the fused apply's per-column cost
+        // dominates the shared traversal; 1 ms is invisible next to a
+        // multi-ms apply but wide enough to capture a concurrent burst.
+        BatchConfig { max_columns: 32, gather_window: Duration::from_millis(1) }
+    }
+}
+
+/// Counters describing how well batching is working.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatcherStats {
+    /// MVM requests submitted.
+    pub requests: u64,
+    /// Apply passes executed (fast-path singles + batched).
+    pub applies: u64,
+    /// Apply passes that carried more than one column.
+    pub batched_applies: u64,
+    /// Total columns carried by those batched passes.
+    pub batched_columns: u64,
+    /// Largest single batch seen.
+    pub max_batch_columns: u64,
+}
+
+impl BatcherStats {
+    /// Mean requests answered per apply pass — the amortization factor.
+    /// 1.0 means batching never engaged.
+    pub fn columns_per_apply(&self) -> f64 {
+        if self.applies == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.applies as f64
+    }
+}
+
+/// One queued request: its weight vector and the channel its result
+/// column goes back on.
+struct Pending {
+    w: Vec<f64>,
+    tx: mpsc::Sender<Vec<f64>>,
+}
+
+struct Queue {
+    pending: VecDeque<Pending>,
+    shutdown: bool,
+}
+
+struct Inner {
+    core: Arc<SessionCore>,
+    op: OpHandle,
+    cfg: BatchConfig,
+    queue: Mutex<Queue>,
+    cv: Condvar,
+    requests: AtomicU64,
+    applies: AtomicU64,
+    batched_applies: AtomicU64,
+    batched_columns: AtomicU64,
+    max_batch_columns: AtomicU64,
+}
+
+/// Per-operator micro-batching engine: a request queue plus one worker
+/// thread that answers pending requests in fused batches. Dropping the
+/// batcher shuts it down, draining anything still queued.
+pub struct MicroBatcher {
+    inner: Arc<Inner>,
+    worker: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl MicroBatcher {
+    /// Spawn the worker for `op`, executing through `core`.
+    pub fn new(core: Arc<SessionCore>, op: OpHandle, cfg: BatchConfig) -> MicroBatcher {
+        let cfg = BatchConfig { max_columns: cfg.max_columns.max(1), ..cfg };
+        let inner = Arc::new(Inner {
+            core,
+            op,
+            cfg,
+            queue: Mutex::new(Queue { pending: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+            requests: AtomicU64::new(0),
+            applies: AtomicU64::new(0),
+            batched_applies: AtomicU64::new(0),
+            batched_columns: AtomicU64::new(0),
+            max_batch_columns: AtomicU64::new(0),
+        });
+        let worker_inner = Arc::clone(&inner);
+        let worker = thread::Builder::new()
+            .name("fkt-batcher".to_string())
+            .spawn(move || worker_loop(&worker_inner))
+            .expect("spawn batcher worker");
+        MicroBatcher { inner, worker: Mutex::new(Some(worker)) }
+    }
+
+    /// The operator this batcher serves.
+    pub fn op(&self) -> &OpHandle {
+        &self.inner.op
+    }
+
+    /// Enqueue one MVM (`w.len()` must equal the operator's source
+    /// count) and return the channel its result will arrive on.
+    pub fn submit(&self, w: Vec<f64>) -> mpsc::Receiver<Vec<f64>> {
+        assert_eq!(w.len(), self.inner.op.num_sources(), "weight vector length");
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = lock(&self.inner.queue);
+            assert!(!q.shutdown, "submit after MicroBatcher shutdown");
+            q.pending.push_back(Pending { w, tx });
+        }
+        self.inner.cv.notify_all();
+        rx
+    }
+
+    /// Blocking MVM through the batch queue.
+    pub fn mvm(&self, w: &[f64]) -> Vec<f64> {
+        self.submit(w.to_vec()).recv().expect("batcher worker answered")
+    }
+
+    /// Snapshot of the batching counters.
+    pub fn stats(&self) -> BatcherStats {
+        let inner = &self.inner;
+        BatcherStats {
+            requests: inner.requests.load(Ordering::Relaxed),
+            applies: inner.applies.load(Ordering::Relaxed),
+            batched_applies: inner.batched_applies.load(Ordering::Relaxed),
+            batched_columns: inner.batched_columns.load(Ordering::Relaxed),
+            max_batch_columns: inner.max_batch_columns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting requests, let the worker drain what is queued, and
+    /// join it. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut q = lock(&self.inner.queue);
+            q.shutdown = true;
+        }
+        self.inner.cv.notify_all();
+        if let Some(worker) = lock(&self.worker).take() {
+            let _ = worker.join();
+        }
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        let batch = {
+            let mut q = lock(&inner.queue);
+            // Sleep until there is work (or we are told to stop).
+            while q.pending.is_empty() && !q.shutdown {
+                q = inner.cv.wait(q).unwrap_or_else(|poisoned| poisoned.into_inner());
+            }
+            if q.pending.is_empty() {
+                return; // shutdown with nothing left to drain
+            }
+            // Gather window: hold the door open for stragglers until the
+            // column budget fills, the window closes, or shutdown (which
+            // must not dally — drain immediately).
+            let deadline = Instant::now() + inner.cfg.gather_window;
+            while q.pending.len() < inner.cfg.max_columns && !q.shutdown {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) = inner
+                    .cv
+                    .wait_timeout(q, deadline - now)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
+                q = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            let take = q.pending.len().min(inner.cfg.max_columns);
+            q.pending.drain(..take).collect::<Vec<Pending>>()
+            // Lock released here: the apply runs with the queue open, so
+            // new requests keep landing while this batch computes.
+        };
+        execute(inner, batch);
+    }
+}
+
+/// Run one drained batch: fast-path a single column, otherwise pack
+/// column-major, apply once, scatter the result columns.
+fn execute(inner: &Inner, batch: Vec<Pending>) {
+    let m = batch.len();
+    inner.requests.fetch_add(m as u64, Ordering::Relaxed);
+    inner.applies.fetch_add(1, Ordering::Relaxed);
+    inner.max_batch_columns.fetch_max(m as u64, Ordering::Relaxed);
+    if m == 1 {
+        let only = &batch[0];
+        let z = inner.core.mvm(&inner.op, &only.w);
+        let _ = only.tx.send(z); // receiver may have given up; fine
+        return;
+    }
+    inner.batched_applies.fetch_add(1, Ordering::Relaxed);
+    inner.batched_columns.fetch_add(m as u64, Ordering::Relaxed);
+    let n = inner.op.num_sources();
+    let t = inner.op.num_targets();
+    let mut packed = vec![0.0f64; n * m];
+    for (c, pending) in batch.iter().enumerate() {
+        packed[c * n..(c + 1) * n].copy_from_slice(&pending.w);
+    }
+    let zb = inner.core.mvm_batch(&inner.op, &packed, m);
+    for (c, pending) in batch.iter().enumerate() {
+        let _ = pending.tx.send(zb[c * t..(c + 1) * t].to_vec());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Family;
+    use crate::points::Points;
+    use crate::rng::Pcg32;
+    use crate::session::Session;
+    use std::sync::Barrier;
+
+    fn setup(n: usize) -> (Arc<SessionCore>, OpHandle, Points, Pcg32) {
+        let mut rng = Pcg32::seeded(9101);
+        let pts = Points::new(3, rng.uniform_vec(n * 3, 0.0, 1.0));
+        let session = Session::native(1);
+        let h = session.operator(&pts).kernel(Family::Matern32).order(4).theta(0.5).build();
+        (session.clone_core(), h, pts, rng)
+    }
+
+    #[test]
+    fn single_request_matches_direct_mvm() {
+        let (core, h, _pts, mut rng) = setup(300);
+        let w = rng.normal_vec(300);
+        let want = core.mvm(&h, &w);
+        let batcher = MicroBatcher::new(
+            Arc::clone(&core),
+            h,
+            BatchConfig { max_columns: 8, gather_window: Duration::ZERO },
+        );
+        let got = batcher.mvm(&w);
+        assert_eq!(got, want, "fast path is the same code path as mvm");
+        let s = batcher.stats();
+        assert_eq!((s.requests, s.applies, s.batched_applies), (1, 1, 0));
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce_and_match_sequential() {
+        const CLIENTS: usize = 8;
+        let (core, h, _pts, mut rng) = setup(400);
+        let weights: Vec<Vec<f64>> = (0..CLIENTS).map(|_| rng.normal_vec(400)).collect();
+        let want: Vec<Vec<f64>> = weights.iter().map(|w| core.mvm(&h, w)).collect();
+        // A wide window so every barrier-released request lands in one
+        // gather; keeps the test deterministic-ish on slow machines.
+        let cfg = BatchConfig { max_columns: CLIENTS, gather_window: Duration::from_millis(200) };
+        let batcher = MicroBatcher::new(Arc::clone(&core), h, cfg);
+        let barrier = Barrier::new(CLIENTS);
+        let got: Vec<Vec<f64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = weights
+                .iter()
+                .map(|w| {
+                    let batcher = &batcher;
+                    let barrier = &barrier;
+                    scope.spawn(move || {
+                        barrier.wait();
+                        batcher.mvm(w)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (g, w) in got.iter().zip(&want) {
+            let err: f64 = g
+                .iter()
+                .zip(w)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            assert!(err <= 1e-12, "batched result must match sequential (err {err:.3e})");
+        }
+        let s = batcher.stats();
+        assert_eq!(s.requests, CLIENTS as u64);
+        assert!(
+            s.applies < s.requests,
+            "coalescing must save apply passes: {} applies for {} requests",
+            s.applies,
+            s.requests
+        );
+        assert!(s.batched_applies >= 1 && s.max_batch_columns >= 2);
+    }
+
+    #[test]
+    fn column_budget_caps_batch_size() {
+        let (core, h, _pts, mut rng) = setup(200);
+        let cfg = BatchConfig { max_columns: 3, gather_window: Duration::from_millis(100) };
+        let batcher = MicroBatcher::new(Arc::clone(&core), h, cfg);
+        let weights: Vec<Vec<f64>> = (0..7).map(|_| rng.normal_vec(200)).collect();
+        let rxs: Vec<_> = weights.iter().map(|w| batcher.submit(w.clone())).collect();
+        for (rx, w) in rxs.into_iter().zip(&weights) {
+            let got = rx.recv().unwrap();
+            let want = core.mvm(batcher.op(), w);
+            assert_eq!(got.len(), want.len());
+        }
+        let s = batcher.stats();
+        assert_eq!(s.requests, 7);
+        assert!(s.max_batch_columns <= 3, "budget respected ({})", s.max_batch_columns);
+        assert!(s.applies >= 3, "7 requests at ≤3 columns need ≥3 passes");
+    }
+
+    #[test]
+    fn shutdown_drains_pending_requests() {
+        let (core, h, _pts, mut rng) = setup(200);
+        // A long window: shutdown must cut it short, not wait it out.
+        let cfg = BatchConfig { max_columns: 16, gather_window: Duration::from_secs(5) };
+        let batcher = MicroBatcher::new(Arc::clone(&core), h, cfg);
+        let rxs: Vec<_> = (0..4).map(|_| batcher.submit(rng.normal_vec(200))).collect();
+        let start = Instant::now();
+        batcher.shutdown();
+        assert!(start.elapsed() < Duration::from_secs(5), "shutdown preempts the window");
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().len(), 200, "drained, not dropped");
+        }
+    }
+}

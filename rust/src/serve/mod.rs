@@ -1,0 +1,37 @@
+//! The serving layer: a concurrent multi-tenant front-end over one
+//! shared [`SessionCore`](crate::session::SessionCore).
+//!
+//! The FKT's value proposition is amortization — an operator is expensive
+//! to build and nearly free to reuse — but amortization only pays at
+//! scale if many requests can touch one hot operator *at the same time*.
+//! This module supplies the three pieces that turn the `&self` session
+//! core into a service:
+//!
+//! * [`batcher`] — the cross-request micro-batching engine. Concurrent
+//!   MVM requests against one operator queue up; a per-operator worker
+//!   drains everything pending (up to a column budget, waiting out a
+//!   short gather window), packs the weights column-major, and answers
+//!   the whole batch with ONE fused `apply_batch` traversal. Eight
+//!   concurrent tenants cost one tree walk, not eight.
+//! * [`server`] — a `TcpListener` + thread-per-connection front-end
+//!   speaking the length-prefixed JSON protocol of [`protocol`], with
+//!   `open`/`mvm`/`solve`/`stats`/`close` verbs against named synthetic
+//!   datasets, and graceful SIGINT shutdown that drains in-flight
+//!   batches.
+//! * [`json`] / [`protocol`] — a dependency-free JSON value type and the
+//!   wire framing, shared by the server, the CLI probe client, the
+//!   integration tests, and the `serve_load` bench.
+//!
+//! Everything here is std-only: threads, mutexes, condvars, TCP. No
+//! async runtime, no serde — the protocol is small enough that a
+//! recursive-descent parser is the simpler dependency story.
+
+pub mod batcher;
+pub mod json;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{BatchConfig, BatcherStats, MicroBatcher};
+pub use json::Json;
+pub use protocol::{msg, Client};
+pub use server::{install_sigint, ServeConfig, Server, ServerHandle};

@@ -1,0 +1,296 @@
+//! Wire protocol: length-prefixed JSON frames, plus the blocking client
+//! used by the CLI probe, the integration tests, and the load bench.
+//!
+//! A frame is `<decimal byte length>\n<json body>\n`. The explicit length
+//! lets the reader allocate once and know exactly when a frame ends — no
+//! streaming JSON parser state across reads — while the trailing newline
+//! keeps the stream eyeball-able with `nc`. Blank lines between frames
+//! are tolerated (a hand-driven client hitting Enter twice stays in
+//! sync).
+//!
+//! [`FrameReader`] is *resumable*: the server reads with a socket
+//! timeout so connection threads can poll the shutdown flag, and a
+//! timeout (`WouldBlock`/`TimedOut`) may land mid-frame. The reader keeps
+//! its partial header/body across such errors and continues exactly
+//! where it stopped on the next call, so a slow client never desyncs the
+//! framing.
+
+use super::json::Json;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// Upper bound on one frame's body. Generous for the workloads served
+/// (an n=1M f64 weight vector in JSON is ~20 MB) while refusing a
+/// nonsense length prefix before it becomes an allocation.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Serialize `msg` as one frame onto `w` (flushes, so a lone request
+/// isn't stuck in a `BufWriter`).
+pub fn write_frame(w: &mut impl Write, msg: &Json) -> io::Result<()> {
+    let body = msg.dump();
+    let mut frame = Vec::with_capacity(body.len() + 16);
+    frame.extend_from_slice(body.len().to_string().as_bytes());
+    frame.push(b'\n');
+    frame.extend_from_slice(body.as_bytes());
+    frame.push(b'\n');
+    w.write_all(&frame)?;
+    w.flush()
+}
+
+/// Incremental frame decoder over any buffered reader. Partial frames
+/// survive read errors (see the module docs); `read_frame` returning
+/// `Ok(None)` means the peer closed cleanly between frames.
+pub struct FrameReader<R> {
+    inner: R,
+    /// Header bytes accumulated so far (up to and including `\n`).
+    header: Vec<u8>,
+    /// Body bytes accumulated so far (body + trailing `\n`).
+    body: Vec<u8>,
+    /// Parsed body length once the header is complete.
+    body_len: Option<usize>,
+}
+
+impl<R: BufRead> FrameReader<R> {
+    /// Wrap a buffered reader.
+    pub fn new(inner: R) -> FrameReader<R> {
+        FrameReader { inner, header: Vec::new(), body: Vec::new(), body_len: None }
+    }
+
+    /// Read one frame. `Ok(None)` on clean EOF at a frame boundary;
+    /// timeouts bubble up as errors with all partial state retained, so
+    /// calling again resumes the same frame.
+    pub fn read_frame(&mut self) -> io::Result<Option<Json>> {
+        loop {
+            let len = match self.body_len {
+                Some(len) => len,
+                None => {
+                    // Header phase. read_until appends everything it
+                    // consumed even when it errors, so a timeout here
+                    // loses nothing.
+                    let got = self.inner.read_until(b'\n', &mut self.header)?;
+                    if !self.header.ends_with(b"\n") {
+                        if got == 0 && self.header.is_empty() {
+                            return Ok(None); // clean EOF between frames
+                        }
+                        if got == 0 {
+                            return Err(io::ErrorKind::UnexpectedEof.into());
+                        }
+                        continue; // more header bytes to come
+                    }
+                    let text = std::str::from_utf8(&self.header)
+                        .map_err(|_| bad_frame("non-utf8 length prefix"))?
+                        .trim();
+                    if text.is_empty() {
+                        // Tolerate blank separator lines.
+                        self.header.clear();
+                        continue;
+                    }
+                    let len: usize =
+                        text.parse().map_err(|_| bad_frame("malformed length prefix"))?;
+                    if len > MAX_FRAME_BYTES {
+                        return Err(bad_frame("frame exceeds MAX_FRAME_BYTES"));
+                    }
+                    self.body.clear();
+                    self.body.reserve(len + 1);
+                    self.body_len = Some(len);
+                    len
+                }
+            };
+            // Body phase: body plus its trailing newline.
+            while self.body.len() < len + 1 {
+                let want = (len + 1 - self.body.len()).min(64 * 1024);
+                let mut chunk = vec![0u8; want];
+                let got = self.inner.read(&mut chunk)?;
+                if got == 0 {
+                    return Err(io::ErrorKind::UnexpectedEof.into());
+                }
+                self.body.extend_from_slice(&chunk[..got]);
+            }
+            if self.body[len] != b'\n' {
+                return Err(bad_frame("missing frame terminator"));
+            }
+            let text = std::str::from_utf8(&self.body[..len])
+                .map_err(|_| bad_frame("non-utf8 frame body"))?;
+            let value = Json::parse(text).map_err(|e| bad_frame(&format!("bad json: {e}")))?;
+            self.header.clear();
+            self.body.clear();
+            self.body_len = None;
+            return Ok(Some(value));
+        }
+    }
+}
+
+fn bad_frame(why: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, why.to_string())
+}
+
+/// Build a request object: `{"verb": <verb>, <fields>...}`.
+pub fn msg(verb: &str, fields: &[(&str, Json)]) -> Json {
+    let mut pairs = vec![("verb".to_string(), Json::str(verb))];
+    pairs.extend(fields.iter().map(|(k, v)| (k.to_string(), v.clone())));
+    Json::Obj(pairs)
+}
+
+/// Blocking request/response client for the serve protocol. One call in
+/// flight at a time — the server answers frames in order per connection.
+pub struct Client {
+    reader: FrameReader<BufReader<TcpStream>>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect to a running `fkt serve` endpoint.
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<Client> {
+        let writer = TcpStream::connect(addr)?;
+        writer.set_nodelay(true).ok();
+        let reader = FrameReader::new(BufReader::new(writer.try_clone()?));
+        Ok(Client { reader, writer })
+    }
+
+    /// Send one request frame and block for its response frame.
+    pub fn call(&mut self, request: &Json) -> io::Result<Json> {
+        write_frame(&mut self.writer, request)?;
+        match self.reader.read_frame()? {
+            Some(response) => Ok(response),
+            None => Err(io::ErrorKind::UnexpectedEof.into()),
+        }
+    }
+
+    /// [`Client::call`] that unwraps the `{"ok": true}` envelope: returns
+    /// the response object on success, an error carrying the server's
+    /// `"error"` text otherwise.
+    pub fn call_ok(&mut self, request: &Json) -> io::Result<Json> {
+        let response = self.call(request)?;
+        match response.get("ok").and_then(Json::as_bool) {
+            Some(true) => Ok(response),
+            _ => {
+                let why = response
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("server reported failure")
+                    .to_string();
+                Err(io::Error::other(why))
+            }
+        }
+    }
+
+    /// `mvm` against an opened operator: returns the product vector.
+    pub fn mvm(&mut self, op_id: u64, w: &[f64]) -> io::Result<Vec<f64>> {
+        let request = msg(
+            "mvm",
+            &[("id", Json::Num(op_id as f64)), ("w", Json::from_f64s(w))],
+        );
+        let response = self.call_ok(&request)?;
+        response
+            .get("z")
+            .and_then(Json::f64s)
+            .ok_or_else(|| io::Error::other("mvm response missing z"))
+    }
+
+    /// `stats` snapshot of the serving process.
+    pub fn stats(&mut self) -> io::Result<Json> {
+        self.call_ok(&msg("stats", &[]))
+    }
+
+    /// Polite `close` (best-effort; the connection drops either way).
+    pub fn close(&mut self) {
+        let _ = self.call(&msg("close", &[]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip() {
+        let messages = vec![
+            msg("open", &[("name", Json::str("uniform")), ("n", Json::Num(100.0))]),
+            msg("mvm", &[("id", Json::Num(1.0)), ("w", Json::from_f64s(&[0.5, -1.25]))]),
+            msg("close", &[]),
+        ];
+        let mut wire = Vec::new();
+        for m in &messages {
+            write_frame(&mut wire, m).unwrap();
+        }
+        let mut reader = FrameReader::new(io::Cursor::new(wire));
+        for m in &messages {
+            assert_eq!(reader.read_frame().unwrap().as_ref(), Some(m));
+        }
+        assert!(reader.read_frame().unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn blank_lines_between_frames_are_tolerated() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(b"\n\n");
+        write_frame(&mut wire, &msg("stats", &[])).unwrap();
+        wire.extend_from_slice(b"\n");
+        write_frame(&mut wire, &msg("close", &[])).unwrap();
+        let mut reader = FrameReader::new(io::Cursor::new(wire));
+        assert_eq!(reader.read_frame().unwrap().unwrap().get("verb").unwrap(), &Json::str("stats"));
+        assert_eq!(reader.read_frame().unwrap().unwrap().get("verb").unwrap(), &Json::str("close"));
+        assert!(reader.read_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_and_malformed_prefixes_are_rejected() {
+        let mut reader =
+            FrameReader::new(io::Cursor::new(format!("{}\nx\n", MAX_FRAME_BYTES + 1)));
+        assert!(reader.read_frame().is_err());
+        let mut reader = FrameReader::new(io::Cursor::new(b"notanumber\n{}\n".to_vec()));
+        assert!(reader.read_frame().is_err());
+        let mut reader = FrameReader::new(io::Cursor::new(b"2\n{}X".to_vec()));
+        assert!(reader.read_frame().is_err(), "missing terminator");
+    }
+
+    /// A reader that injects a timeout error between every chunk — the
+    /// shape of a socket with `set_read_timeout` under a slow client.
+    struct Choppy {
+        data: Vec<u8>,
+        pos: usize,
+        /// Error on every other call.
+        tick: bool,
+    }
+
+    impl Read for Choppy {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.tick = !self.tick;
+            if self.tick {
+                return Err(io::ErrorKind::WouldBlock.into());
+            }
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            // One byte at a time: maximally adversarial chunking.
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn partial_frames_survive_timeouts() {
+        let mut wire = Vec::new();
+        let request = msg("mvm", &[("id", Json::Num(7.0)), ("w", Json::from_f64s(&[1.0, 2.0]))]);
+        write_frame(&mut wire, &request).unwrap();
+        write_frame(&mut wire, &msg("close", &[])).unwrap();
+        let choppy = Choppy { data: wire, pos: 0, tick: false };
+        // BufReader over a 1-byte choppy stream: every read_frame call
+        // may fail mid-header or mid-body many times before completing.
+        let mut reader = FrameReader::new(BufReader::with_capacity(4, choppy));
+        let mut frames = Vec::new();
+        let mut errors = 0;
+        loop {
+            match reader.read_frame() {
+                Ok(Some(v)) => frames.push(v),
+                Ok(None) => break,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => errors += 1,
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0], request);
+        assert!(errors > 10, "the stream really was choppy ({errors} timeouts)");
+    }
+}

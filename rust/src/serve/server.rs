@@ -1,0 +1,559 @@
+//! The TCP front-end: thread-per-connection serving of the length-
+//! prefixed JSON protocol over one shared [`SessionCore`].
+//!
+//! Verbs (all requests are objects with a `"verb"` field):
+//!
+//! * `open`  — build (or re-attach to) an operator over a named synthetic
+//!   dataset. Fields: `name` (`uniform`/`cube`/`sst`), `n`, `d`, `seed`,
+//!   `kernel`, `p`, `theta`, `tol`, `leaf`, `precision`. Returns a small
+//!   integer `id`. Two tenants opening the same spec get the same id —
+//!   and therefore share one cached operator *and* one micro-batcher.
+//! * `mvm`   — `{id, w}` → `{z}`. Routed through the operator's
+//!   [`MicroBatcher`], so concurrent tenants coalesce into fused applies.
+//! * `solve` — `{id, y, noise?, tol?, max_iters?}` → CG solution with
+//!   convergence data. Solves run directly on the core (CG is iterative
+//!   and session-side batching of solves is a different verb).
+//! * `stats` — session counters, registry stats, per-operator batching
+//!   stats, SIMD backend.
+//! * `close` — polite hangup.
+//!
+//! Every verb body runs under `catch_unwind`: a panic (bad geometry, a
+//! non-square solve) becomes an `{"ok": false}` response for that tenant
+//! and the server keeps serving the rest.
+//!
+//! Shutdown: `ServerHandle::shutdown` (in-process) or SIGINT (the CLI
+//! installs a flag-setting handler) stops the accept loop, joins the
+//! connection threads — whose reads time out frequently precisely so
+//! they notice — then shuts every micro-batcher down, draining requests
+//! still queued. In-flight work is answered, never dropped.
+
+use super::batcher::{BatchConfig, MicroBatcher};
+use super::json::Json;
+use super::protocol::{write_frame, FrameReader};
+use crate::data;
+use crate::kernels::Family;
+use crate::points::Points;
+use crate::rng::Pcg32;
+use crate::session::{simd_backend, Backend, OpHandle, Precision, Session, SessionCore, SolveOpts};
+use std::collections::HashMap;
+use std::io::{self, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::Duration;
+
+/// Lock with poison recovery — one panicking connection must not take
+/// the whole server's op table with it.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// How often blocked reads and the accept loop wake to poll the
+/// shutdown flag. Long enough to be free, short enough that Ctrl-C
+/// feels immediate.
+const POLL_INTERVAL: Duration = Duration::from_millis(200);
+
+/// Server construction parameters.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address, e.g. `127.0.0.1:7878` (port 0 ⇒ ephemeral).
+    pub addr: String,
+    /// Session worker threads (0 ⇒ all cores).
+    pub threads: usize,
+    /// Near-field backend selection.
+    pub backend: Backend,
+    /// Operator-registry LRU capacity.
+    pub registry_capacity: usize,
+    /// Micro-batching knobs applied to every served operator.
+    pub batch: BatchConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            threads: 0,
+            backend: Backend::Auto,
+            registry_capacity: 64,
+            batch: BatchConfig::default(),
+        }
+    }
+}
+
+/// One served operator: the session handle plus its batching engine.
+struct OpEntry {
+    id: u64,
+    handle: OpHandle,
+    batcher: MicroBatcher,
+}
+
+/// Operator table. Ids are small sequential integers — JSON numbers are
+/// f64, so raw pointers would not survive the wire — and `by_ptr` maps
+/// the underlying shared operator back to its id so tenants opening the
+/// same spec share one entry (and one batcher).
+#[derive(Default)]
+struct OpsMap {
+    by_ptr: HashMap<usize, u64>,
+    by_id: HashMap<u64, Arc<OpEntry>>,
+    next_id: u64,
+}
+
+type DatasetKey = (String, usize, usize, u64);
+
+/// Shared server state, visible to every connection thread.
+struct ServerState {
+    core: Arc<SessionCore>,
+    batch_cfg: BatchConfig,
+    ops: Mutex<OpsMap>,
+    /// Synthetic datasets are deterministic in `(name, n, d, seed)`, so
+    /// re-opens skip regeneration.
+    datasets: Mutex<HashMap<DatasetKey, Arc<Points>>>,
+    shutdown: AtomicBool,
+}
+
+/// A bound, not-yet-running server. [`Server::run`] blocks on the accept
+/// loop; [`Server::spawn`] runs it on a thread and hands back a handle.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+/// Control handle for a server spawned on a background thread.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    thread: Option<thread::JoinHandle<io::Result<()>>>,
+}
+
+impl Server {
+    /// Build the session and bind the listener (nonblocking, so the
+    /// accept loop can poll the shutdown flag).
+    pub fn bind(cfg: &ServeConfig) -> io::Result<Server> {
+        let session = Session::builder()
+            .threads(cfg.threads)
+            .backend(cfg.backend)
+            .registry_capacity(cfg.registry_capacity)
+            .build();
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let state = Arc::new(ServerState {
+            core: session.clone_core(),
+            batch_cfg: cfg.batch,
+            ops: Mutex::new(OpsMap::default()),
+            datasets: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+        });
+        Ok(Server { listener, state })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Bind and run on a background thread; the handle shuts it down.
+    pub fn spawn(cfg: &ServeConfig) -> io::Result<ServerHandle> {
+        let server = Server::bind(cfg)?;
+        let addr = server.local_addr()?;
+        let state = Arc::clone(&server.state);
+        let thread = thread::Builder::new()
+            .name("fkt-serve".to_string())
+            .spawn(move || server.run())?;
+        Ok(ServerHandle { addr, state, thread: Some(thread) })
+    }
+
+    /// Accept loop. Returns after a shutdown request (or SIGINT, when
+    /// the handler is installed) once every connection thread has been
+    /// joined and every micro-batcher drained.
+    pub fn run(&self) -> io::Result<()> {
+        let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+        while !self.state.shutdown.load(Ordering::SeqCst) && !sigint_pending() {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let state = Arc::clone(&self.state);
+                    let conn = thread::Builder::new()
+                        .name("fkt-serve-conn".to_string())
+                        .spawn(move || serve_connection(stream, &state))?;
+                    conns.push(conn);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    // Nothing pending: nap briefly (short, so connects
+                    // are picked up promptly) and re-check the flag.
+                    thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+            conns.retain(|c| !c.is_finished());
+        }
+        // Graceful drain: stop the connection threads first (they poll
+        // the flag via read timeouts), then let every batcher answer
+        // whatever is still queued before we return.
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        for conn in conns {
+            let _ = conn.join();
+        }
+        let ops = lock(&self.state.ops);
+        for entry in ops.by_id.values() {
+            entry.batcher.shutdown();
+        }
+        Ok(())
+    }
+}
+
+impl ServerHandle {
+    /// The address clients should connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request shutdown and wait for the drain to finish.
+    pub fn shutdown(mut self) -> io::Result<()> {
+        self.stop();
+        match self.thread.take() {
+            Some(t) => t.join().unwrap_or_else(|_| Err(io::Error::other("server panicked"))),
+            None => Ok(()),
+        }
+    }
+
+    fn stop(&self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One connection: read frames until hangup or shutdown, answering each
+/// request in order. Read timeouts are the shutdown polling mechanism —
+/// the resumable `FrameReader` keeps partial frames across them.
+fn serve_connection(stream: TcpStream, state: &Arc<ServerState>) {
+    stream.set_nodelay(true).ok();
+    if stream.set_read_timeout(Some(POLL_INTERVAL)).is_err() {
+        return;
+    }
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = FrameReader::new(BufReader::new(stream));
+    while !state.shutdown.load(Ordering::SeqCst) {
+        match reader.read_frame() {
+            Ok(Some(request)) => {
+                let (response, hangup) = handle_request(state, &request);
+                if write_frame(&mut writer, &response).is_err() || hangup {
+                    break;
+                }
+            }
+            Ok(None) => break, // peer closed cleanly
+            // Poll tick; the reader retains any partial frame.
+            Err(e) if is_timeout(&e) => continue,
+            Err(e) => {
+                // Framing/JSON garbage: tell the peer why, then hang up
+                // (the stream can no longer be trusted to re-sync).
+                let _ = write_frame(&mut writer, &err_response(&e.to_string()));
+                break;
+            }
+        }
+    }
+}
+
+/// Dispatch one request. The bool says whether to hang up afterwards.
+fn handle_request(state: &Arc<ServerState>, request: &Json) -> (Json, bool) {
+    let verb = request.get("verb").and_then(Json::as_str).unwrap_or("").to_string();
+    if verb == "close" {
+        return (ok_response(vec![("bye", Json::Bool(true))]), true);
+    }
+    let outcome = catch_unwind(AssertUnwindSafe(|| match verb.as_str() {
+        "open" => open_verb(state, request),
+        "mvm" => mvm_verb(state, request),
+        "solve" => solve_verb(state, request),
+        "stats" => Ok(stats_verb(state)),
+        other => Err(format!("unknown verb {other:?}")),
+    }));
+    let response = match outcome {
+        Ok(Ok(response)) => response,
+        Ok(Err(message)) => err_response(&message),
+        Err(payload) => err_response(&format!("internal panic: {}", panic_text(&payload))),
+    };
+    (response, false)
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown payload".to_string()
+    }
+}
+
+fn ok_response(fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("ok".to_string(), Json::Bool(true))];
+    pairs.extend(fields.into_iter().map(|(k, v)| (k.to_string(), v)));
+    Json::Obj(pairs)
+}
+
+fn err_response(message: &str) -> Json {
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(false)),
+        ("error".to_string(), Json::str(message)),
+    ])
+}
+
+/// Field helpers: JSON numbers with defaults and range sanity.
+fn get_usize(request: &Json, key: &str, default: usize) -> usize {
+    request.get(key).and_then(Json::as_usize).unwrap_or(default)
+}
+
+fn get_f64(request: &Json, key: &str, default: f64) -> f64 {
+    request.get(key).and_then(Json::as_f64).unwrap_or(default)
+}
+
+/// `open`: materialize the dataset (cached), build or re-attach to the
+/// operator, and hand back its id.
+fn open_verb(state: &Arc<ServerState>, request: &Json) -> Result<Json, String> {
+    let name = request.get("name").and_then(Json::as_str).unwrap_or("uniform").to_string();
+    let n = get_usize(request, "n", 10_000);
+    let d = if name == "sst" { 3 } else { get_usize(request, "d", 3) };
+    let seed = get_usize(request, "seed", 1) as u64;
+    if n == 0 || !(1..=10).contains(&d) {
+        return Err(format!("bad dataset shape n={n} d={d}"));
+    }
+    let pts = dataset(state, &name, n, d, seed)?;
+    let family_name = request.get("kernel").and_then(Json::as_str).unwrap_or("matern32");
+    let family = Family::from_name(family_name)
+        .ok_or_else(|| format!("unknown kernel family {family_name:?}"))?;
+    let precision_name = request.get("precision").and_then(Json::as_str).unwrap_or("auto");
+    let precision = Precision::from_name(precision_name)
+        .ok_or_else(|| format!("unknown precision tier {precision_name:?}"))?;
+    let mut spec = state
+        .core
+        .operator(&pts)
+        .kernel(family)
+        .leaf_capacity(get_usize(request, "leaf", 512))
+        .precision(precision);
+    match request.get("tol").and_then(Json::as_f64) {
+        Some(eps) => spec = spec.tolerance(eps),
+        None => {
+            spec = spec.order(get_usize(request, "p", 4)).theta(get_f64(request, "theta", 0.5));
+        }
+    }
+    let handle = spec.build();
+    let entry = register_op(state, handle);
+    Ok(ok_response(vec![
+        ("id", Json::Num(entry.id as f64)),
+        ("n", Json::Num(entry.handle.num_sources() as f64)),
+        ("d", Json::Num(d as f64)),
+        ("kernel", Json::str(family.name())),
+        ("p", Json::Num(entry.handle.order() as f64)),
+        ("theta", Json::Num(entry.handle.theta())),
+        ("precision", Json::str(entry.handle.precision().name())),
+    ]))
+}
+
+/// Dataset cache lookup/build. The map lock is held across generation,
+/// which serializes concurrent first-opens of the *same* dataset
+/// (desired — generate once) at the cost of briefly serializing
+/// distinct first-opens (rare, and generation is millisecond-scale;
+/// the expensive part of `open` is the operator build, which has its
+/// own coalescing in the registry).
+fn dataset(
+    state: &Arc<ServerState>,
+    name: &str,
+    n: usize,
+    d: usize,
+    seed: u64,
+) -> Result<Arc<Points>, String> {
+    let key = (name.to_string(), n, d, seed);
+    let mut cache = lock(&state.datasets);
+    if let Some(pts) = cache.get(&key) {
+        return Ok(Arc::clone(pts));
+    }
+    let mut rng = Pcg32::seeded(seed);
+    let pts = match name {
+        "uniform" | "sphere" => data::uniform_hypersphere(n, d, &mut rng),
+        "cube" => data::uniform_cube(n, d, &mut rng),
+        "sst" => data::sst::simulate(7.0, n, &mut rng).unit_sphere_points(),
+        other => return Err(format!("unknown dataset {other:?} (uniform, cube, sst)")),
+    };
+    let pts = Arc::new(pts);
+    cache.insert(key, Arc::clone(&pts));
+    Ok(pts)
+}
+
+/// Intern the handle in the op table. Handles aliasing one cached
+/// operator get one entry — and one shared micro-batcher, which is what
+/// makes cross-*tenant* batching work.
+fn register_op(state: &Arc<ServerState>, handle: OpHandle) -> Arc<OpEntry> {
+    let ptr = Arc::as_ptr(handle.op()) as *const () as usize;
+    let mut ops = lock(&state.ops);
+    if let Some(id) = ops.by_ptr.get(&ptr) {
+        if let Some(entry) = ops.by_id.get(id) {
+            return Arc::clone(entry);
+        }
+    }
+    ops.next_id += 1;
+    let id = ops.next_id;
+    let batcher = MicroBatcher::new(Arc::clone(&state.core), handle.clone(), state.batch_cfg);
+    let entry = Arc::new(OpEntry { id, handle, batcher });
+    ops.by_ptr.insert(ptr, id);
+    ops.by_id.insert(id, Arc::clone(&entry));
+    entry
+}
+
+fn lookup_op(state: &Arc<ServerState>, request: &Json) -> Result<Arc<OpEntry>, String> {
+    let id = request
+        .get("id")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "missing operator id".to_string())? as u64;
+    let ops = lock(&state.ops);
+    ops.by_id.get(&id).cloned().ok_or_else(|| format!("no open operator with id {id}"))
+}
+
+/// `mvm`: through the operator's micro-batcher, where concurrent
+/// tenants coalesce.
+fn mvm_verb(state: &Arc<ServerState>, request: &Json) -> Result<Json, String> {
+    let entry = lookup_op(state, request)?;
+    let w = request
+        .get("w")
+        .and_then(Json::f64s)
+        .ok_or_else(|| "mvm needs a numeric weight array w".to_string())?;
+    let n = entry.handle.num_sources();
+    if w.len() != n {
+        return Err(format!("w has {} entries; operator has {} sources", w.len(), n));
+    }
+    let z = entry.batcher.mvm(&w);
+    Ok(ok_response(vec![("z", Json::from_f64s(&z))]))
+}
+
+/// `solve`: CG directly on the shared core (iterative; not batched).
+fn solve_verb(state: &Arc<ServerState>, request: &Json) -> Result<Json, String> {
+    let entry = lookup_op(state, request)?;
+    let y = request
+        .get("y")
+        .and_then(Json::f64s)
+        .ok_or_else(|| "solve needs a numeric right-hand side y".to_string())?;
+    let n = entry.handle.num_sources();
+    if y.len() != n {
+        return Err(format!("y has {} entries; operator has {} sources", y.len(), n));
+    }
+    let noise = request.get("noise").and_then(Json::as_f64).map(|v| vec![v; n]);
+    let opts = SolveOpts {
+        tol: get_f64(request, "tol", 1e-6),
+        max_iters: get_usize(request, "max_iters", 200),
+        jitter: get_f64(request, "jitter", 1e-8),
+        noise: noise.as_deref(),
+        precondition: true,
+    };
+    let result = state.core.solve(&entry.handle, &y, &opts);
+    Ok(ok_response(vec![
+        ("x", Json::from_f64s(&result.x)),
+        ("iterations", Json::Num(result.iterations as f64)),
+        ("rel_residual", Json::Num(result.rel_residual)),
+        ("converged", Json::Bool(result.converged)),
+    ]))
+}
+
+/// `stats`: one snapshot of everything a load test wants to know.
+fn stats_verb(state: &Arc<ServerState>) -> Json {
+    let c = state.core.counters();
+    let counters = Json::Obj(vec![
+        ("mvm".to_string(), Json::Num(c.mvm as f64)),
+        ("mvm_batch".to_string(), Json::Num(c.mvm_batch as f64)),
+        ("solve".to_string(), Json::Num(c.solve as f64)),
+        ("solve_batch".to_string(), Json::Num(c.solve_batch as f64)),
+        ("refine_sweeps".to_string(), Json::Num(c.refine_sweeps as f64)),
+    ]);
+    let r = state.core.registry_stats();
+    let registry = Json::Obj(vec![
+        ("hits".to_string(), Json::Num(r.hits as f64)),
+        ("misses".to_string(), Json::Num(r.misses as f64)),
+        ("coalesced".to_string(), Json::Num(r.coalesced as f64)),
+        ("evictions".to_string(), Json::Num(r.evictions as f64)),
+        ("build_seconds".to_string(), Json::Num(r.build_seconds)),
+        ("len".to_string(), Json::Num(r.len as f64)),
+    ]);
+    let ops = lock(&state.ops);
+    let mut per_op: Vec<Json> = Vec::with_capacity(ops.by_id.len());
+    let mut ids: Vec<&u64> = ops.by_id.keys().collect();
+    ids.sort();
+    for id in ids {
+        let entry = &ops.by_id[id];
+        let s = entry.batcher.stats();
+        per_op.push(Json::Obj(vec![
+            ("id".to_string(), Json::Num(entry.id as f64)),
+            ("n".to_string(), Json::Num(entry.handle.num_sources() as f64)),
+            ("requests".to_string(), Json::Num(s.requests as f64)),
+            ("applies".to_string(), Json::Num(s.applies as f64)),
+            ("batched_applies".to_string(), Json::Num(s.batched_applies as f64)),
+            ("batched_columns".to_string(), Json::Num(s.batched_columns as f64)),
+            ("max_batch_columns".to_string(), Json::Num(s.max_batch_columns as f64)),
+            ("columns_per_apply".to_string(), Json::Num(s.columns_per_apply())),
+        ]));
+    }
+    ok_response(vec![
+        ("counters", counters),
+        ("registry", registry),
+        ("ops", Json::Arr(per_op)),
+        ("threads", Json::Num(state.core.threads() as f64)),
+        ("simd_backend", Json::str(simd_backend().name())),
+    ])
+}
+
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub(super) static SIGINT: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigint(_signum: i32) {
+        // Only async-signal-safe work here: set the flag; the accept
+        // loop and connection reads poll it within POLL_INTERVAL.
+        SIGINT.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        /// POSIX `signal(2)`. Declared locally — the crate takes no
+        /// libc dependency for one syscall.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub(super) fn install() {
+        const SIGINT_NUM: i32 = 2;
+        unsafe {
+            signal(SIGINT_NUM, on_sigint);
+        }
+    }
+}
+
+/// Arm graceful Ctrl-C: after this, SIGINT flips a flag that
+/// [`Server::run`] polls, so the process drains and exits 0 instead of
+/// dying mid-batch. No-op on non-unix targets.
+pub fn install_sigint() {
+    #[cfg(unix)]
+    sig::install();
+}
+
+#[cfg(unix)]
+fn sigint_pending() -> bool {
+    sig::SIGINT.load(Ordering::SeqCst)
+}
+
+#[cfg(not(unix))]
+fn sigint_pending() -> bool {
+    false
+}

@@ -13,7 +13,7 @@
 //! # let pts = fkt::points::Points::new(2, vec![0.0; 20]);
 //! # let w = vec![0.0; 10];
 //! # let y = vec![0.0; 10];
-//! let mut session = Session::builder().threads(4).build();
+//! let session = Session::builder().threads(4).build();
 //! let op = session
 //!     .operator(&pts)
 //!     .kernel(Family::Matern52)
@@ -66,7 +66,16 @@ use crate::op::KernelOp;
 use crate::points::Points;
 use registry::{fingerprint, OpKey, Registry};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Recover a mutex guard even if a panicking thread poisoned it: the
+/// session's locked state (the tune cache) is a pure memo — worst case a
+/// poisoned insert is simply recomputed — and a shared serving core must
+/// not let one panicked request wedge every other tenant.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// Default maximum number of cached operators per session.
 const DEFAULT_REGISTRY_CAPACITY: usize = 64;
@@ -129,24 +138,42 @@ impl SessionBuilder {
     /// Build the session (probes PJRT artifacts unless backend is Native).
     pub fn build(self) -> Session {
         Session {
-            coord: Coordinator::new(CoordinatorConfig {
-                threads: self.threads,
-                backend: self.backend,
+            core: Arc::new(SessionCore {
+                coord: Coordinator::new(CoordinatorConfig {
+                    threads: self.threads,
+                    backend: self.backend,
+                }),
+                registry: Registry::new(self.registry_capacity),
+                tune_cache: Mutex::new(HashMap::new()),
+                counters: CounterCells::default(),
             }),
-            registry: Registry::new(self.registry_capacity),
-            tune_cache: HashMap::new(),
-            counters: SessionCounters::default(),
         }
     }
 }
 
 /// A long-lived service context: coordinator + operator registry +
 /// tolerance-resolution cache. See the module docs for the request model.
+///
+/// `Session` is a thin owner of an [`Arc<SessionCore>`](SessionCore): every
+/// verb takes `&self` and delegates to the core, and
+/// [`Session::clone_core`] hands that same core to other threads — the
+/// serving layer's connection handlers and micro-batch workers — which
+/// then share one registry, one tune cache, and one set of counters.
 pub struct Session {
+    core: Arc<SessionCore>,
+}
+
+/// The shareable heart of a [`Session`]. Every field is either immutable
+/// after construction or internally synchronized — the sharded registry
+/// and the coordinator take `&self`, the tune cache sits behind a mutex,
+/// the per-verb counters are atomics — so the core is `Send + Sync` and
+/// all four request verbs work through a shared reference. This is what
+/// lets one hot operator serve MVMs from many threads at once.
+pub struct SessionCore {
     coord: Coordinator,
     registry: Registry,
-    tune_cache: HashMap<TuneKey, Resolved>,
-    counters: SessionCounters,
+    tune_cache: Mutex<HashMap<TuneKey, Resolved>>,
+    counters: CounterCells,
 }
 
 /// Cumulative per-verb call counters. These are the session's observable
@@ -172,6 +199,30 @@ pub struct SessionCounters {
     pub refine_sweeps: u64,
 }
 
+/// Interior-mutable cells behind [`SessionCounters`]: plain atomics, so
+/// concurrent serving threads bump them through `&self` without a lock
+/// and `counters()` stays readable mid-serve.
+#[derive(Default)]
+struct CounterCells {
+    mvm: AtomicU64,
+    mvm_batch: AtomicU64,
+    solve: AtomicU64,
+    solve_batch: AtomicU64,
+    refine_sweeps: AtomicU64,
+}
+
+impl CounterCells {
+    fn snapshot(&self) -> SessionCounters {
+        SessionCounters {
+            mvm: self.mvm.load(Ordering::Relaxed),
+            mvm_batch: self.mvm_batch.load(Ordering::Relaxed),
+            solve: self.solve.load(Ordering::Relaxed),
+            solve_batch: self.solve_batch.load(Ordering::Relaxed),
+            refine_sweeps: self.refine_sweeps.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Identity of one tolerance resolution: kernel × dimension × ε × the
 /// scaled dataset diameter the bound was maximized over (bit patterns, so
 /// caching is exact).
@@ -189,8 +240,101 @@ impl Session {
         Session::builder().threads(threads).backend(Backend::Native).build()
     }
 
+    /// Wrap an already-shared core in the ergonomic `Session` surface —
+    /// the inverse of [`Session::clone_core`].
+    pub fn from_core(core: Arc<SessionCore>) -> Session {
+        Session { core }
+    }
+
+    /// Borrow the shared core.
+    pub fn core(&self) -> &Arc<SessionCore> {
+        &self.core
+    }
+
+    /// Clone the shared core for another thread. Handles built through
+    /// either surface hit the same registry; counters and metrics
+    /// aggregate across all holders.
+    pub fn clone_core(&self) -> Arc<SessionCore> {
+        Arc::clone(&self.core)
+    }
+
     /// Begin an operator request over `sources` (see [`OpSpec`]).
-    pub fn operator<'a>(&'a mut self, sources: &'a Points) -> OpSpec<'a> {
+    pub fn operator<'a>(&'a self, sources: &'a Points) -> OpSpec<'a> {
+        self.core.operator(sources)
+    }
+
+    /// Single-RHS product `z = K · w` through the configured backend.
+    pub fn mvm(&self, op: &OpHandle, w: &[f64]) -> Vec<f64> {
+        self.core.mvm(op, w)
+    }
+
+    /// Batched multi-RHS product over `m` column-major columns
+    /// (`w[c*n..(c+1)*n]` is column c) — fused backends share one
+    /// traversal across all columns.
+    pub fn mvm_batch(&self, op: &OpHandle, w: &[f64], m: usize) -> Vec<f64> {
+        self.core.mvm_batch(op, w, m)
+    }
+
+    /// First-class linear solve: `(K + diag(noise) + jitter·I) x = y` by
+    /// (optionally block-Jacobi preconditioned) conjugate gradients over
+    /// session MVMs. This is the GP representer-weight system of paper
+    /// §5.3 promoted to a session verb — any consumer with a square
+    /// operator can invert it without knowing about CG or preconditioners.
+    pub fn solve(&self, op: &OpHandle, y: &[f64], opts: &SolveOpts) -> CgResult {
+        self.core.solve(op, y, opts)
+    }
+
+    /// Batched first-class solve: `m` column-major right-hand sides in ONE
+    /// lockstep block-CG run — see [`SessionCore::solve_batch`].
+    pub fn solve_batch(
+        &self,
+        op: &OpHandle,
+        y: &[f64],
+        m: usize,
+        opts: &SolveOpts,
+    ) -> BatchCgResult {
+        self.core.solve_batch(op, y, m, opts)
+    }
+
+    /// Cumulative per-verb call counters (see [`SessionCounters`]).
+    pub fn counters(&self) -> SessionCounters {
+        self.core.counters()
+    }
+
+    /// Metrics of the most recent `mvm`/`mvm_batch` (solves record their
+    /// last internal MVM).
+    pub fn last_metrics(&self) -> MvmMetrics {
+        self.core.last_metrics()
+    }
+
+    /// Operator-registry counters (hits, misses, coalesced builds,
+    /// evictions, build time).
+    pub fn registry_stats(&self) -> RegistryStats {
+        self.core.registry_stats()
+    }
+
+    /// Drop all cached operators (counters survive).
+    pub fn clear_registry(&self) {
+        self.core.clear_registry()
+    }
+
+    /// Effective worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.core.threads()
+    }
+
+    /// Whether the PJRT tile path would be used for this kernel family.
+    pub fn will_use_pjrt(&self, family: &str, dim: usize) -> bool {
+        self.core.will_use_pjrt(family, dim)
+    }
+}
+
+impl SessionCore {
+    /// Begin an operator request over `sources` (see [`OpSpec`]) against
+    /// this shared core. Identical to [`Session::operator`], available
+    /// wherever only the `Arc<SessionCore>` travels (batcher workers,
+    /// connection threads).
+    pub fn operator<'a>(&'a self, sources: &'a Points) -> OpSpec<'a> {
         OpSpec {
             session: self,
             sources,
@@ -207,26 +351,20 @@ impl Session {
         }
     }
 
-    /// Single-RHS product `z = K · w` through the configured backend.
-    pub fn mvm(&mut self, op: &OpHandle, w: &[f64]) -> Vec<f64> {
-        self.counters.mvm += 1;
+    /// [`Session::mvm`] on the shared core.
+    pub fn mvm(&self, op: &OpHandle, w: &[f64]) -> Vec<f64> {
+        self.counters.mvm.fetch_add(1, Ordering::Relaxed);
         self.coord.mvm(op.op.as_ref(), w)
     }
 
-    /// Batched multi-RHS product over `m` column-major columns
-    /// (`w[c*n..(c+1)*n]` is column c) — fused backends share one
-    /// traversal across all columns.
-    pub fn mvm_batch(&mut self, op: &OpHandle, w: &[f64], m: usize) -> Vec<f64> {
-        self.counters.mvm_batch += 1;
+    /// [`Session::mvm_batch`] on the shared core.
+    pub fn mvm_batch(&self, op: &OpHandle, w: &[f64], m: usize) -> Vec<f64> {
+        self.counters.mvm_batch.fetch_add(1, Ordering::Relaxed);
         self.coord.mvm_batch(op.op.as_ref(), w, m)
     }
 
-    /// First-class linear solve: `(K + diag(noise) + jitter·I) x = y` by
-    /// (optionally block-Jacobi preconditioned) conjugate gradients over
-    /// session MVMs. This is the GP representer-weight system of paper
-    /// §5.3 promoted to a session verb — any consumer with a square
-    /// operator can invert it without knowing about CG or preconditioners.
-    pub fn solve(&mut self, op: &OpHandle, y: &[f64], opts: &SolveOpts) -> CgResult {
+    /// [`Session::solve`] on the shared core.
+    pub fn solve(&self, op: &OpHandle, y: &[f64], opts: &SolveOpts) -> CgResult {
         // Equal counts are not enough — a rectangular operator over 500
         // sources and 500 *different* targets is not symmetric, and CG on
         // it would silently return garbage.
@@ -235,7 +373,7 @@ impl Session {
             "solve needs a square operator (built without .targets(..))"
         );
         assert_eq!(y.len(), op.num_sources(), "right-hand side length mismatch");
-        self.counters.solve += 1;
+        self.counters.solve.fetch_add(1, Ordering::Relaxed);
         let zeros;
         let noise: &[f64] = match opts.noise {
             Some(n) => {
@@ -255,7 +393,7 @@ impl Session {
             return self.solve_refined(op, y, noise, opts);
         }
         let jitter = opts.jitter;
-        let coord = &mut self.coord;
+        let coord = &self.coord;
         let kernel_op = op.op.as_ref();
         let mut apply = |v: &[f64]| -> Vec<f64> {
             let mut kv = coord.mvm(kernel_op, v);
@@ -285,7 +423,7 @@ impl Session {
     /// single solve. Column `c` of the result matches `solve` on column `c`
     /// to round-off.
     pub fn solve_batch(
-        &mut self,
+        &self,
         op: &OpHandle,
         y: &[f64],
         m: usize,
@@ -298,7 +436,7 @@ impl Session {
         assert!(m > 0, "solve_batch needs at least one column");
         let n = op.num_sources();
         assert_eq!(y.len(), n * m, "right-hand side block shape mismatch");
-        self.counters.solve_batch += 1;
+        self.counters.solve_batch.fetch_add(1, Ordering::Relaxed);
         let zeros;
         let noise: &[f64] = match opts.noise {
             Some(nz) => {
@@ -314,7 +452,7 @@ impl Session {
             return self.solve_refined_batch(op, y, m, noise, opts);
         }
         let jitter = opts.jitter;
-        let coord = &mut self.coord;
+        let coord = &self.coord;
         let kernel_op = op.op.as_ref();
         let mut apply = |v: &[f64]| -> Vec<f64> {
             let mut kv = coord.mvm_batch(kernel_op, v, m);
@@ -356,7 +494,7 @@ impl Session {
     /// floor, reported honestly via `converged = false`). Sweeps
     /// accumulate in [`SessionCounters::refine_sweeps`].
     fn solve_refined(
-        &mut self,
+        &self,
         op: &OpHandle,
         y: &[f64],
         noise: &[f64],
@@ -388,7 +526,7 @@ impl Session {
         let mut converged = false;
         while sweeps < REFINE_MAX_SWEEPS && total_iters < opts.max_iters {
             let inner = {
-                let coord = &mut self.coord;
+                let coord = &self.coord;
                 let kernel_op = op.op.as_ref();
                 let mut apply = |v: &[f64]| -> Vec<f64> {
                     let mut kv = coord.mvm(kernel_op, v);
@@ -438,7 +576,7 @@ impl Session {
             }
             prev_rel = rel;
         }
-        self.counters.refine_sweeps += sweeps;
+        self.counters.refine_sweeps.fetch_add(sweeps, Ordering::Relaxed);
         CgResult { x, iterations: total_iters, rel_residual: rel, converged }
     }
 
@@ -451,7 +589,7 @@ impl Session {
     /// inner CG skips them); column `c` reports its own inner-iteration
     /// total and outer residual.
     fn solve_refined_batch(
-        &mut self,
+        &self,
         op: &OpHandle,
         y: &[f64],
         m: usize,
@@ -495,7 +633,7 @@ impl Session {
                 break;
             }
             let inner = {
-                let coord = &mut self.coord;
+                let coord = &self.coord;
                 let kernel_op = op.op.as_ref();
                 let mut apply = |v: &[f64]| -> Vec<f64> {
                     let mut kv = coord.mvm_batch(kernel_op, v, m);
@@ -576,28 +714,31 @@ impl Session {
             }
             prev_worst = worst;
         }
-        self.counters.refine_sweeps += sweeps;
+        self.counters.refine_sweeps.fetch_add(sweeps, Ordering::Relaxed);
         BatchCgResult { x, iterations, rel_residual, converged, batched_mvms }
     }
 
-    /// Cumulative per-verb call counters (see [`SessionCounters`]).
+    /// Cumulative per-verb call counters: an atomic snapshot readable
+    /// from any thread mid-serve (see [`SessionCounters`]).
     pub fn counters(&self) -> SessionCounters {
-        self.counters
+        self.counters.snapshot()
     }
 
     /// Metrics of the most recent `mvm`/`mvm_batch` (solves record their
-    /// last internal MVM).
+    /// last internal MVM). Under concurrency: whichever request through
+    /// this core finished last.
     pub fn last_metrics(&self) -> MvmMetrics {
-        self.coord.last_metrics
+        self.coord.last_metrics()
     }
 
-    /// Operator-registry counters (hits, misses, evictions, build time).
+    /// Operator-registry counters (hits, misses, coalesced builds,
+    /// evictions, build time).
     pub fn registry_stats(&self) -> RegistryStats {
         self.registry.stats()
     }
 
     /// Drop all cached operators (counters survive).
-    pub fn clear_registry(&mut self) {
+    pub fn clear_registry(&self) {
         self.registry.clear()
     }
 
@@ -615,23 +756,22 @@ impl Session {
     /// it reaches [`TUNE_CACHE_FLUSH`] entries — r_max is a bit-exact
     /// diameter, so a stream of distinct datasets would otherwise grow
     /// this map without bound while the operator registry stays flat.
-    fn resolve_cached(
-        &mut self,
-        kernel: &Kernel,
-        d: usize,
-        eps: f64,
-        r_max: f64,
-    ) -> Option<Resolved> {
+    /// The mutex is dropped around the actual resolution, so two threads
+    /// may redundantly resolve the same key (a cheap closed-form sweep,
+    /// unlike an operator build) — last writer wins, both get equal
+    /// values.
+    fn resolve_cached(&self, kernel: &Kernel, d: usize, eps: f64, r_max: f64) -> Option<Resolved> {
         let key: TuneKey =
             (kernel.family, kernel.scale.to_bits(), d.max(2), eps.to_bits(), r_max.to_bits());
-        if let Some(r) = self.tune_cache.get(&key) {
+        if let Some(r) = lock(&self.tune_cache).get(&key) {
             return Some(*r);
         }
         let res = tune::resolve(kernel, d, eps, r_max)?;
-        if self.tune_cache.len() >= TUNE_CACHE_FLUSH {
-            self.tune_cache.clear();
+        let mut cache = lock(&self.tune_cache);
+        if cache.len() >= TUNE_CACHE_FLUSH {
+            cache.clear();
         }
-        self.tune_cache.insert(key, res);
+        cache.insert(key, res);
         Some(res)
     }
 }
@@ -661,11 +801,13 @@ fn scaled_diameter(sources: &Points, targets: Option<&Points>, scale: f64) -> f6
     acc.sqrt() * scale
 }
 
-/// One operator request, builder-style. Created by [`Session::operator`];
-/// finished by [`OpSpec::build`], which consults the registry (so equal
-/// requests over equal data return pointer-equal cached operators).
+/// One operator request, builder-style. Created by [`Session::operator`]
+/// (or [`SessionCore::operator`] on a shared core); finished by
+/// [`OpSpec::build`], which consults the registry (so equal requests over
+/// equal data return pointer-equal cached operators — including requests
+/// racing from different threads, which coalesce onto one build).
 pub struct OpSpec<'a> {
-    session: &'a mut Session,
+    session: &'a SessionCore,
     sources: &'a Points,
     targets: Option<&'a Points>,
     kernel: Kernel,
@@ -1138,7 +1280,7 @@ mod tests {
         let w = rng.normal_vec(500);
         // One thread: the session path then reduces in exactly the serial
         // operator's order, so the comparison is to round-off.
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let h = session
             .operator(&pts)
             .kernel(Family::Cauchy)
@@ -1157,7 +1299,7 @@ mod tests {
     #[test]
     fn repeated_requests_hit_the_registry() {
         let pts = uniform_points(400, 2, 703);
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let a = session.operator(&pts).kernel(Family::Gaussian).order(4).theta(0.5).build();
         let b = session.operator(&pts).kernel(Family::Gaussian).order(4).theta(0.5).build();
         assert!(a.ptr_eq(&b), "identical requests must share one operator");
@@ -1176,7 +1318,7 @@ mod tests {
 
     #[test]
     fn registry_capacity_bounds_memory() {
-        let mut session = Session::builder()
+        let session = Session::builder()
             .threads(1)
             .backend(Backend::Native)
             .registry_capacity(2)
@@ -1187,13 +1329,16 @@ mod tests {
         }
         let s = session.registry_stats();
         assert!(s.len <= 2, "len {} exceeds capacity", s.len);
-        assert_eq!(s.evictions, 2);
+        // Four misses against capacity 2: whatever the shard striping,
+        // every built-but-not-resident operator must have been evicted.
+        assert_eq!(s.misses, 4);
+        assert_eq!(s.evictions, s.misses - s.len as u64);
     }
 
     #[test]
     fn tolerance_resolves_and_explicit_overrides_win() {
         let pts = uniform_points(300, 2, 705);
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let auto = session.operator(&pts).kernel(Family::Matern52).tolerance(1e-5).build();
         let res = auto.resolved().expect("tolerance path resolves");
         assert!(res.bound <= 1e-5);
@@ -1228,7 +1373,7 @@ mod tests {
         let pts = uniform_points(200, 2, 722);
         let mut rng = Pcg32::seeded(723);
         let w = rng.normal_vec(200);
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let cached = session.operator(&pts).kernel(Family::Cauchy).order(3).theta(0.5).build();
         let streamed = session
             .operator(&pts)
@@ -1273,18 +1418,18 @@ mod tests {
         let pts = uniform_points(300, 2, 750);
         let mut rng = Pcg32::seeded(751);
         let w = rng.normal_vec(300);
-        let mut session = Session::native(1);
-        let spec = |s: &mut Session, p: Precision| {
+        let session = Session::native(1);
+        let spec = |s: &Session, p: Precision| {
             s.operator(&pts).kernel(Family::Gaussian).order(4).theta(0.5).precision(p).build()
         };
-        let h64 = spec(&mut session, Precision::F64);
-        let h32 = spec(&mut session, Precision::F32);
+        let h64 = spec(&session, Precision::F64);
+        let h32 = spec(&session, Precision::F32);
         assert!(!h64.ptr_eq(&h32), "tiers must cache separately");
         assert_eq!(h64.precision(), Precision::F64);
         assert_eq!(h32.precision(), Precision::F32);
         // Pointer-equal hits within each tier.
-        assert!(h64.ptr_eq(&spec(&mut session, Precision::F64)));
-        assert!(h32.ptr_eq(&spec(&mut session, Precision::F32)));
+        assert!(h64.ptr_eq(&spec(&session, Precision::F64)));
+        assert!(h32.ptr_eq(&spec(&session, Precision::F32)));
         let s = session.registry_stats();
         assert_eq!((s.hits, s.misses), (2, 2));
         // An Auto request with a loose tolerance resolves to F32 and
@@ -1313,15 +1458,15 @@ mod tests {
     #[test]
     fn auto_precision_follows_tolerance() {
         let pts = uniform_points(250, 2, 752);
-        let mut session = Session::native(1);
-        let at = |s: &mut Session, eps: f64| {
+        let session = Session::native(1);
+        let at = |s: &Session, eps: f64| {
             s.operator(&pts).kernel(Family::Gaussian).tolerance(eps).build().precision()
         };
-        assert_eq!(at(&mut session, 1e-2), Precision::F32);
-        assert_eq!(at(&mut session, 1e-4), Precision::F32);
-        assert_eq!(at(&mut session, 1e-5), Precision::F32);
-        assert_eq!(at(&mut session, 9e-6), Precision::F64);
-        assert_eq!(at(&mut session, 1e-6), Precision::F64);
+        assert_eq!(at(&session, 1e-2), Precision::F32);
+        assert_eq!(at(&session, 1e-4), Precision::F32);
+        assert_eq!(at(&session, 1e-5), Precision::F32);
+        assert_eq!(at(&session, 9e-6), Precision::F64);
+        assert_eq!(at(&session, 1e-6), Precision::F64);
         // No tolerance ⇒ conservative f64.
         let h = session.operator(&pts).kernel(Family::Gaussian).order(4).theta(0.5).build();
         assert_eq!(h.precision(), Precision::F64);
@@ -1365,7 +1510,7 @@ mod tests {
         let pts = uniform_points(400, 2, 753);
         let mut rng = Pcg32::seeded(754);
         let w = rng.normal_vec(400);
-        let mut session = Session::native(2);
+        let session = Session::native(2);
         let h64 = session
             .operator(&pts)
             .kernel(Family::Cauchy)
@@ -1403,8 +1548,8 @@ mod tests {
         let y = rng.normal_vec(n);
         let noise: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 0.2)).collect();
         let kernel = Kernel::matern32(0.5);
-        let mut session = Session::native(2);
-        let build = |s: &mut Session, p: Precision| {
+        let session = Session::native(2);
+        let build = |s: &Session, p: Precision| {
             s.operator(&pts)
                 .scaled_kernel(kernel)
                 .order(6)
@@ -1413,8 +1558,8 @@ mod tests {
                 .precision(p)
                 .build()
         };
-        let h64 = build(&mut session, Precision::F64);
-        let h32 = build(&mut session, Precision::F32);
+        let h64 = build(&session, Precision::F64);
+        let h32 = build(&session, Precision::F32);
         for precondition in [true, false] {
             let opts = SolveOpts {
                 tol: 1e-8,
@@ -1460,7 +1605,7 @@ mod tests {
         let ys = rng.normal_vec(n * m);
         let noise: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.3, 0.5)).collect();
         let kernel = Kernel::matern32(0.4);
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let h32 = session
             .operator(&pts)
             .scaled_kernel(kernel)
@@ -1500,7 +1645,7 @@ mod tests {
         let pts = uniform_points(300, 2, 718);
         let mut rng = Pcg32::seeded(719);
         let w = rng.normal_vec(300);
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let a = session
             .operator(&pts)
             .kernel(Family::Cauchy)
@@ -1531,7 +1676,7 @@ mod tests {
         let pts = uniform_points(250, 2, 706);
         let mut rng = Pcg32::seeded(707);
         let w = rng.normal_vec(250);
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let fast = session.operator(&pts).kernel(Family::Cauchy).order(6).theta(0.4).build();
         let exact = session.operator(&pts).kernel(Family::Cauchy).dense().build();
         assert!(exact.is_dense());
@@ -1554,7 +1699,7 @@ mod tests {
         let pts = uniform_points(400, 2, 708);
         let mut rng = Pcg32::seeded(709);
         let w = rng.normal_vec(400 * 3);
-        let mut session = Session::native(4);
+        let session = Session::native(4);
         let h = session.operator(&pts).kernel(Family::Cauchy).order(4).theta(0.5).build();
         let batched = session.mvm_batch(&h, &w, 3);
         assert_eq!(session.last_metrics().moment_passes, 1);
@@ -1582,7 +1727,7 @@ mod tests {
         }
         let l = cholesky(&k).expect("SPD");
         let oracle = cholesky_solve(&l, &y);
-        let mut session = Session::native(2);
+        let session = Session::native(2);
         let h = session
             .operator(&pts)
             .scaled_kernel(kernel)
@@ -1620,7 +1765,7 @@ mod tests {
         let ys = rng.normal_vec(n * m);
         let noise: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.3, 0.5)).collect();
         let kernel = Kernel::matern32(0.4);
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let h = session
             .operator(&pts)
             .scaled_kernel(kernel)
@@ -1661,7 +1806,7 @@ mod tests {
         let pts = uniform_points(150, 2, 732);
         let mut rng = Pcg32::seeded(733);
         let w = rng.normal_vec(150 * 2);
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         assert_eq!(session.counters(), SessionCounters::default());
         let h = session.operator(&pts).kernel(Family::Gaussian).order(3).theta(0.5).build();
         let _ = session.mvm(&h, &w[..150]);
@@ -1679,7 +1824,7 @@ mod tests {
         // system is not symmetric — solve must refuse.
         let src = uniform_points(100, 2, 720);
         let tgt = uniform_points(100, 2, 721);
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let h = session
             .operator(&src)
             .targets(&tgt)
@@ -1701,7 +1846,7 @@ mod tests {
         let w = rng.normal_vec(600);
         let kern = Kernel::canonical(Family::Gaussian);
         let dense = dense_mvm(&kern, &pts, &pts, &w);
-        let mut session = Session::native(2);
+        let session = Session::native(2);
         for eps in [1e-3, 1e-6] {
             let h = session
                 .operator(&pts)
@@ -1723,7 +1868,7 @@ mod tests {
         let w = rng.normal_vec(300);
         let kern = Kernel::canonical(Family::Gaussian);
         let dense = dense_mvm(&kern, &src, &tgt, &w);
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let h = session
             .operator(&src)
             .targets(&tgt)
@@ -1744,7 +1889,71 @@ mod tests {
     #[should_panic(expected = "unattainable")]
     fn unattainable_tolerance_panics_with_guidance() {
         let pts = uniform_points(50, 6, 717);
-        let mut session = Session::native(1);
+        let session = Session::native(1);
         let _ = session.operator(&pts).kernel(Family::Gaussian).tolerance(1e-14).build();
+    }
+
+    /// The serving-layer contract: threads holding clones of one
+    /// `Arc<SessionCore>` build the same spec concurrently, coalesce onto
+    /// ONE operator build, and get pointer-equal handles.
+    #[test]
+    fn cross_thread_requests_share_one_cached_operator() {
+        const THREADS: usize = 8;
+        let pts = uniform_points(300, 2, 760);
+        let session = Session::native(1);
+        let core = session.clone_core();
+        let ptrs: Vec<usize> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    let core = Arc::clone(&core);
+                    let pts = &pts;
+                    scope.spawn(move || {
+                        let h = core
+                            .operator(pts)
+                            .kernel(Family::Cauchy)
+                            .order(4)
+                            .theta(0.5)
+                            .build();
+                        Arc::as_ptr(h.op()) as *const () as usize
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(ptrs.windows(2).all(|w| w[0] == w[1]), "one shared operator");
+        let s = session.registry_stats();
+        assert_eq!(s.misses, 1, "racing requests must coalesce onto one build");
+        assert_eq!(s.hits + s.coalesced, THREADS as u64 - 1);
+    }
+
+    /// Concurrent verbs through a shared core: every thread's MVM matches
+    /// the sequential answer, and the atomic counters account for every
+    /// call with no lost updates.
+    #[test]
+    fn shared_core_serves_concurrent_mvms() {
+        const THREADS: usize = 6;
+        const CALLS: usize = 5;
+        let pts = uniform_points(400, 2, 761);
+        let mut rng = Pcg32::seeded(762);
+        let w = rng.normal_vec(400);
+        let session = Session::native(1);
+        let h = session.operator(&pts).kernel(Family::Cauchy).order(4).theta(0.5).build();
+        let expect = session.mvm(&h, &w);
+        std::thread::scope(|scope| {
+            for _ in 0..THREADS {
+                let core = session.clone_core();
+                let (h, w, expect) = (h.clone(), &w, &expect);
+                scope.spawn(move || {
+                    for _ in 0..CALLS {
+                        let z = core.mvm(&h, w);
+                        for (a, b) in z.iter().zip(expect) {
+                            assert!((a - b).abs() <= 1e-12 * (1.0 + b.abs()));
+                        }
+                    }
+                });
+            }
+        });
+        let c = session.counters();
+        assert_eq!(c.mvm, (THREADS * CALLS) as u64 + 1, "no lost counter updates");
     }
 }

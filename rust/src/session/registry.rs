@@ -1,4 +1,5 @@
-//! The session's keyed operator registry.
+//! The session's keyed operator registry — a sharded, lock-striped
+//! concurrent store.
 //!
 //! An FKT operator is expensive to build (tree + interaction plan + exact
 //! expansion coefficients) but cheap to *reuse* — the whole point of a
@@ -18,10 +19,27 @@
 //! operator, and the hash is non-cryptographic — adversarially crafted
 //! point sets are out of scope for this cache.
 //!
-//! **Eviction.** Bounded LRU: every hit/insert stamps a monotone tick, and
-//! inserting past capacity evicts the least-recently-used entry. Workloads
-//! that churn operators (t-SNE rebuilds two per gradient step) therefore
-//! hold memory constant instead of accumulating dead trees.
+//! **Concurrency.** The store is striped into shards selected by `OpKey`
+//! hash; each shard is an `RwLock` around its own LRU map. A hit takes
+//! only the shard's *read* lock (the LRU stamp is an atomic, so readers
+//! never upgrade), which lets any number of serving threads clone a hot
+//! operator concurrently. A miss takes the shard's *write* lock just long
+//! enough to register an in-flight build latch, then builds **outside**
+//! the lock — other shards, and even hits on the same shard, proceed
+//! while an O(N log N) build runs. Threads that miss on a key whose build
+//! is already in flight wait on that latch and receive the winner's Arc
+//! (counted as `coalesced`), so a thundering herd on a cold operator
+//! performs exactly one build. A build that panics poisons its latch;
+//! waiters observe the poison and retry, so one bad spec cannot wedge the
+//! shard.
+//!
+//! **Eviction.** Bounded LRU per shard: every hit/insert stamps a
+//! monotone tick, and inserting past the shard's capacity evicts its
+//! least-recently-used entry. The per-shard capacity is
+//! `floor(capacity / shards)` (min 1), so the total cached population
+//! never exceeds the requested capacity. Workloads that churn operators
+//! (t-SNE rebuilds two per gradient step) therefore hold memory constant
+//! instead of accumulating dead trees.
 
 use crate::fkt::ExpansionCenter;
 use crate::kernels::Family;
@@ -29,7 +47,13 @@ use crate::linalg::Precision;
 use crate::op::KernelOp;
 use crate::points::Points;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// A cached operator as handed out by the registry: shareable across
+/// threads, applied through `&self`.
+pub type SharedOp = Arc<dyn KernelOp + Send + Sync>;
 
 /// Two-lane word-wise hash over an arbitrary u64 word stream. Lane 1 is
 /// FNV-1a (xor-then-multiply); lane 2 multiplies first and folds in a
@@ -104,13 +128,18 @@ pub struct OpKey {
 
 /// Registry counters — the observable behaviour of the cache. `hits` vs
 /// `misses` is asserted in tests; `build_seconds` accumulates the time the
-/// cache has *saved callers from paying again*.
+/// cache has *saved callers from paying again*; `coalesced` counts
+/// requests that piggybacked on another thread's in-flight build instead
+/// of duplicating it.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RegistryStats {
     /// Requests answered from the cache.
     pub hits: u64,
     /// Requests that had to build a new operator.
     pub misses: u64,
+    /// Requests that waited on another thread's in-flight build of the
+    /// same key and received the winner's Arc (no duplicate build).
+    pub coalesced: u64,
     /// Entries evicted by the LRU policy.
     pub evictions: u64,
     /// Total seconds spent building operators (misses only).
@@ -120,73 +149,261 @@ pub struct RegistryStats {
 }
 
 struct Entry {
-    op: Arc<dyn KernelOp + Send + Sync>,
-    last_used: u64,
+    op: SharedOp,
+    /// LRU stamp. Atomic so cache *hits* can refresh recency under the
+    /// shard's read lock — readers never need the write lock.
+    last_used: AtomicU64,
 }
 
-/// Bounded LRU map from [`OpKey`] to a shared operator.
-pub struct Registry {
+/// One-shot rendezvous for an in-flight build. The building thread
+/// fulfills (or poisons, via the panic guard) the latch exactly once;
+/// any number of coalesced waiters block on the condvar.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+enum LatchState {
+    Pending,
+    Ready(SharedOp),
+    /// The builder panicked. Waiters must retry the whole lookup (one of
+    /// them will become the new builder).
+    Poisoned,
+}
+
+impl Latch {
+    fn new() -> Latch {
+        Latch { state: Mutex::new(LatchState::Pending), cv: Condvar::new() }
+    }
+
+    fn fulfill(&self, op: SharedOp) {
+        *lock_mutex(&self.state) = LatchState::Ready(op);
+        self.cv.notify_all();
+    }
+
+    fn poison(&self) {
+        *lock_mutex(&self.state) = LatchState::Poisoned;
+        self.cv.notify_all();
+    }
+
+    /// Block until the build resolves. `None` means the builder panicked
+    /// and the caller should retry the lookup from scratch.
+    fn wait(&self) -> Option<SharedOp> {
+        let mut st = lock_mutex(&self.state);
+        loop {
+            match &*st {
+                LatchState::Pending => {
+                    st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+                }
+                LatchState::Ready(op) => return Some(Arc::clone(op)),
+                LatchState::Poisoned => return None,
+            }
+        }
+    }
+}
+
+struct Shard {
     entries: HashMap<OpKey, Entry>,
-    capacity: usize,
-    tick: u64,
-    stats: RegistryStats,
+    /// Keys whose build is currently running outside the lock.
+    inflight: HashMap<OpKey, Arc<Latch>>,
+}
+
+/// Sharded, lock-striped LRU map from [`OpKey`] to a shared operator.
+/// All methods take `&self`; the registry is safe to share behind an
+/// `Arc` across any number of serving threads.
+pub struct Registry {
+    shards: Vec<RwLock<Shard>>,
+    shard_capacity: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    evictions: AtomicU64,
+    build_nanos: AtomicU64,
+}
+
+/// Recover a mutex guard even if another thread panicked while holding
+/// it. The registry's invariants hold at every await/unlock point (state
+/// transitions are single assignments), so a poisoned lock carries no
+/// torn state worth propagating — and a serving process must not let one
+/// bad request wedge the cache for every tenant.
+fn lock_mutex<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn lock_read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|p| p.into_inner())
+}
+
+fn lock_write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Removes the in-flight latch and poisons it if the build panics, so
+/// coalesced waiters wake up and retry instead of blocking forever.
+struct BuildGuard<'a> {
+    shard: &'a RwLock<Shard>,
+    key: OpKey,
+    latch: Arc<Latch>,
+    done: bool,
+}
+
+impl Drop for BuildGuard<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            lock_write(self.shard).inflight.remove(&self.key);
+            self.latch.poison();
+        }
+    }
 }
 
 impl Registry {
-    /// Empty registry holding at most `capacity` operators (min 1).
+    /// Empty registry holding at most `capacity` operators (min 1),
+    /// striped over `min(8, capacity)` shards.
     pub fn new(capacity: usize) -> Registry {
+        let capacity = capacity.max(1);
+        Registry::with_shards(capacity, capacity.min(8))
+    }
+
+    /// Explicit shard count — `with_shards(cap, 1)` gives the exact
+    /// single-map LRU semantics the eviction unit tests rely on. Each
+    /// shard holds at most `floor(capacity / nshards)` entries (min 1),
+    /// so the total population never exceeds `capacity`.
+    pub fn with_shards(capacity: usize, nshards: usize) -> Registry {
+        let capacity = capacity.max(1);
+        let nshards = nshards.clamp(1, capacity);
+        let shards = (0..nshards)
+            .map(|_| {
+                RwLock::new(Shard { entries: HashMap::new(), inflight: HashMap::new() })
+            })
+            .collect();
         Registry {
-            entries: HashMap::new(),
-            capacity: capacity.max(1),
-            tick: 0,
-            stats: RegistryStats::default(),
+            shards,
+            shard_capacity: (capacity / nshards).max(1),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            build_nanos: AtomicU64::new(0),
         }
+    }
+
+    fn shard_for(&self, key: &OpKey) -> &RwLock<Shard> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     /// Look up `key`, building (and caching) the operator on a miss.
     /// Returns a clone of the cached Arc — repeated calls with the same
     /// key return pointer-equal operators until the entry is evicted.
-    pub fn get_or_build(
-        &mut self,
-        key: OpKey,
-        build: impl FnOnce() -> Arc<dyn KernelOp + Send + Sync>,
-    ) -> Arc<dyn KernelOp + Send + Sync> {
-        self.tick += 1;
-        if let Some(entry) = self.entries.get_mut(&key) {
-            entry.last_used = self.tick;
-            self.stats.hits += 1;
-            self.stats.len = self.entries.len();
-            return Arc::clone(&entry.op);
+    ///
+    /// Concurrent semantics: a hit holds only the shard's read lock; a
+    /// miss registers an in-flight latch under the write lock and then
+    /// builds with **no** lock held, so hits (and other shards) are never
+    /// blocked behind a build. Concurrent misses on the same key wait on
+    /// the first thread's latch and share its operator; if that build
+    /// panics they retry, and one of them becomes the new builder.
+    pub fn get_or_build(&self, key: OpKey, build: impl FnOnce() -> SharedOp) -> SharedOp {
+        // Each caller owns one builder closure; it is consumed at most
+        // once (a caller that becomes the builder returns immediately
+        // after, or propagates the build's panic).
+        let mut build = Some(build);
+        let shard = self.shard_for(&key);
+        loop {
+            // Fast path: shared read lock, atomic recency stamp.
+            {
+                let guard = lock_read(shard);
+                if let Some(entry) = guard.entries.get(&key) {
+                    entry.last_used.store(self.next_tick(), Ordering::Relaxed);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Arc::clone(&entry.op);
+                }
+            }
+            // Slow path: re-check under the write lock (another thread
+            // may have inserted between our read unlock and here).
+            let latch = {
+                let mut guard = lock_write(shard);
+                if let Some(entry) = guard.entries.get(&key) {
+                    entry.last_used.store(self.next_tick(), Ordering::Relaxed);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Arc::clone(&entry.op);
+                }
+                if let Some(latch) = guard.inflight.get(&key) {
+                    // Someone else is already building this key: wait on
+                    // their latch with no shard lock held.
+                    let latch = Arc::clone(latch);
+                    drop(guard);
+                    self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    match latch.wait() {
+                        Some(op) => return op,
+                        None => continue, // builder panicked — retry
+                    }
+                }
+                let latch = Arc::new(Latch::new());
+                guard.inflight.insert(key, Arc::clone(&latch));
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                latch
+            };
+            // We are the builder. Run the (possibly O(N log N)) build
+            // with no shard lock held; the guard poisons the latch if
+            // the build panics so waiters are not stranded.
+            let mut guard = BuildGuard { shard, key, latch, done: false };
+            let t0 = std::time::Instant::now();
+            let op = build.take().expect("builder closure consumed once")();
+            self.build_nanos
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            {
+                let mut sg = lock_write(shard);
+                sg.inflight.remove(&key);
+                // Evict least-recently-used entries until the newcomer
+                // fits inside this shard's slice of the capacity.
+                while sg.entries.len() >= self.shard_capacity {
+                    let oldest = sg
+                        .entries
+                        .iter()
+                        .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                        .map(|(k, _)| *k)
+                        .expect("non-empty shard");
+                    sg.entries.remove(&oldest);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                sg.entries.insert(
+                    key,
+                    Entry { op: Arc::clone(&op), last_used: AtomicU64::new(self.next_tick()) },
+                );
+            }
+            guard.done = true;
+            guard.latch.fulfill(Arc::clone(&op));
+            return op;
         }
-        self.stats.misses += 1;
-        let t0 = std::time::Instant::now();
-        let op = build();
-        self.stats.build_seconds += t0.elapsed().as_secs_f64();
-        // Evict least-recently-used entries until the newcomer fits.
-        while self.entries.len() >= self.capacity {
-            let oldest = self
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| *k)
-                .expect("non-empty registry");
-            self.entries.remove(&oldest);
-            self.stats.evictions += 1;
-        }
-        self.entries.insert(key, Entry { op: Arc::clone(&op), last_used: self.tick });
-        self.stats.len = self.entries.len();
-        op
     }
 
-    /// Counter snapshot.
+    /// Counter snapshot. Individual counters are read with relaxed
+    /// ordering — the snapshot is monotone but not a single atomic cut
+    /// across counters, which is fine for the observability it serves.
     pub fn stats(&self) -> RegistryStats {
-        self.stats
+        RegistryStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            build_seconds: self.build_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            len: self.shards.iter().map(|s| lock_read(s).entries.len()).sum(),
+        }
     }
 
-    /// Drop every cached operator (counters are preserved).
-    pub fn clear(&mut self) {
-        self.entries.clear();
-        self.stats.len = 0;
+    /// Drop every cached operator (counters are preserved; in-flight
+    /// builds are left to complete and insert normally).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            lock_write(shard).entries.clear();
+        }
     }
 }
 
@@ -196,6 +413,7 @@ mod tests {
     use crate::baselines::DenseOperator;
     use crate::kernels::Kernel;
     use crate::rng::Pcg32;
+    use std::sync::atomic::AtomicUsize;
 
     fn key(src_fp: u128) -> OpKey {
         OpKey {
@@ -214,7 +432,7 @@ mod tests {
         }
     }
 
-    fn tiny_op() -> Arc<dyn KernelOp + Send + Sync> {
+    fn tiny_op() -> SharedOp {
         let pts = Points::new(2, vec![0.0, 0.0, 1.0, 1.0]);
         Arc::new(DenseOperator::square(&pts, Kernel::canonical(Family::Gaussian)))
     }
@@ -234,7 +452,7 @@ mod tests {
 
     #[test]
     fn hits_return_pointer_equal_arcs() {
-        let mut reg = Registry::new(8);
+        let reg = Registry::new(8);
         let first = reg.get_or_build(key(1), tiny_op);
         let second = reg.get_or_build(key(1), || panic!("must not rebuild"));
         assert!(Arc::ptr_eq(&first, &second));
@@ -244,7 +462,7 @@ mod tests {
 
     #[test]
     fn distinct_keys_build_distinct_operators() {
-        let mut reg = Registry::new(8);
+        let reg = Registry::new(8);
         let a = reg.get_or_build(key(1), tiny_op);
         let b = reg.get_or_build(key(2), tiny_op);
         assert!(!Arc::ptr_eq(&a, &b));
@@ -253,7 +471,8 @@ mod tests {
 
     #[test]
     fn lru_evicts_oldest() {
-        let mut reg = Registry::new(2);
+        // Single shard so eviction order is exact, not per-stripe.
+        let reg = Registry::with_shards(2, 1);
         let a = reg.get_or_build(key(1), tiny_op);
         let _b = reg.get_or_build(key(2), tiny_op);
         // Touch key 1 so key 2 is the LRU entry.
@@ -266,21 +485,143 @@ mod tests {
         // Key 1 survived; key 2 was evicted and must rebuild.
         let a3 = reg.get_or_build(key(1), || panic!("cached"));
         assert!(Arc::ptr_eq(&a, &a3));
-        let mut rebuilt = false;
+        let rebuilt = std::cell::Cell::new(false);
         let _b2 = reg.get_or_build(key(2), || {
-            rebuilt = true;
+            rebuilt.set(true);
             tiny_op()
         });
-        assert!(rebuilt, "evicted entry must rebuild");
+        assert!(rebuilt.get(), "evicted entry must rebuild");
     }
 
     #[test]
     fn build_time_is_accounted() {
-        let mut reg = Registry::new(4);
+        let reg = Registry::new(4);
         let _ = reg.get_or_build(key(9), || {
             std::thread::sleep(std::time::Duration::from_millis(2));
             tiny_op()
         });
         assert!(reg.stats().build_seconds > 0.0);
+    }
+
+    #[test]
+    fn concurrent_misses_on_one_key_build_once() {
+        const THREADS: usize = 8;
+        let reg = Registry::new(8);
+        let builds = AtomicUsize::new(0);
+        let ptrs: Vec<usize> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let op = reg.get_or_build(key(7), || {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            // Long enough that the other threads arrive
+                            // while the build is still in flight.
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                            tiny_op()
+                        });
+                        Arc::as_ptr(&op) as *const () as usize
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "exactly one build");
+        assert!(ptrs.windows(2).all(|w| w[0] == w[1]), "all threads share one Arc");
+        let s = reg.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(
+            s.hits + s.coalesced,
+            THREADS as u64 - 1,
+            "losers either coalesced onto the latch or hit the fresh entry"
+        );
+    }
+
+    #[test]
+    fn poisoned_build_unblocks_waiters_who_then_rebuild() {
+        let reg = Registry::new(8);
+        let builds = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            // Builder: registers the latch, then panics mid-build.
+            let bad = scope.spawn(|| {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    reg.get_or_build(key(3), || {
+                        std::thread::sleep(std::time::Duration::from_millis(30));
+                        panic!("injected build failure");
+                    })
+                }));
+                assert!(r.is_err(), "builder's panic propagates to its caller");
+            });
+            // Waiter: arrives while the doomed build is in flight, waits
+            // on the latch, observes the poison, retries, and becomes
+            // the new builder.
+            let good = scope.spawn(|| {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                reg.get_or_build(key(3), || {
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    tiny_op()
+                })
+            });
+            bad.join().unwrap();
+            let op = good.join().unwrap();
+            assert_eq!(op.num_sources(), 2);
+        });
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "waiter rebuilt after poison");
+        // Both the doomed and the successful attempt were misses.
+        assert_eq!(reg.stats().misses, 2);
+        // The entry is cached normally afterwards.
+        let _ = reg.get_or_build(key(3), || panic!("cached"));
+    }
+
+    #[test]
+    fn stress_counters_balance_and_capacity_holds() {
+        const THREADS: usize = 8;
+        const ROUNDS: usize = 40;
+        const KEYSPACE: u128 = 12;
+        const CAPACITY: usize = 6;
+        let reg = Registry::new(CAPACITY);
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let reg = &reg;
+                scope.spawn(move || {
+                    for r in 0..ROUNDS {
+                        let k = ((t * 31 + r * 7) as u128) % KEYSPACE;
+                        let op = reg.get_or_build(key(k), tiny_op);
+                        assert_eq!(op.num_sources(), 2);
+                    }
+                });
+            }
+        });
+        let s = reg.stats();
+        assert_eq!(
+            s.hits + s.misses + s.coalesced,
+            (THREADS * ROUNDS) as u64,
+            "every request is exactly one of hit / miss / coalesced"
+        );
+        assert!(s.len <= CAPACITY, "population {} exceeds capacity {}", s.len, CAPACITY);
+        assert_eq!(s.evictions, s.misses - s.len as u64, "every miss is cached or evicted");
+    }
+
+    #[test]
+    fn hot_keys_stay_pointer_equal_across_threads() {
+        const THREADS: usize = 8;
+        let reg = Registry::new(8);
+        // Warm four keys so every thread should hit.
+        let warm: Vec<usize> = (0..4)
+            .map(|k| Arc::as_ptr(&reg.get_or_build(key(k as u128), tiny_op)) as *const () as usize)
+            .collect();
+        std::thread::scope(|scope| {
+            for _ in 0..THREADS {
+                let reg = &reg;
+                let warm = &warm;
+                scope.spawn(move || {
+                    for round in 0..20 {
+                        let k = round % 4;
+                        let op = reg.get_or_build(key(k as u128), || panic!("must hit"));
+                        assert_eq!(Arc::as_ptr(&op) as *const () as usize, warm[k]);
+                    }
+                });
+            }
+        });
+        assert_eq!(reg.stats().misses, 4);
     }
 }

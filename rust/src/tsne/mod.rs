@@ -148,7 +148,7 @@ pub fn compute_affinities(data: &Points, perplexity: f64) -> Affinities {
 pub fn repulsive_field(
     embedding: &Points,
     cfg: &TsneConfig,
-    session: &mut Session,
+    session: &Session,
 ) -> (Vec<f64>, Vec<f64>, f64) {
     let n = embedding.len();
     if cfg.exact_repulsion {
@@ -226,7 +226,7 @@ pub struct TsneResult {
 }
 
 /// Run t-SNE on `data`, returning the 2-D embedding.
-pub fn run(data: &Points, cfg: &TsneConfig, session: &mut Session) -> TsneResult {
+pub fn run(data: &Points, cfg: &TsneConfig, session: &Session) -> TsneResult {
     let n = data.len();
     let aff = compute_affinities(data, cfg.perplexity);
     let mut rng = Pcg32::seeded(cfg.seed);
@@ -356,15 +356,15 @@ mod tests {
     fn fkt_repulsion_matches_exact() {
         let mut rng = Pcg32::seeded(232);
         let emb = Points::new(2, rng.normal_vec(400 * 2));
-        let mut session = Session::native(2);
+        let session = Session::native(2);
         let cfg_exact = TsneConfig { exact_repulsion: true, ..Default::default() };
         let cfg_fkt = TsneConfig {
             exact_repulsion: false,
             fkt: FktConfig { p: 5, theta: 0.4, leaf_capacity: 32, ..Default::default() },
             ..Default::default()
         };
-        let (ex, ey, ez) = repulsive_field(&emb, &cfg_exact, &mut session);
-        let (fx, fy, fz) = repulsive_field(&emb, &cfg_fkt, &mut session);
+        let (ex, ey, ez) = repulsive_field(&emb, &cfg_exact, &session);
+        let (fx, fy, fz) = repulsive_field(&emb, &cfg_fkt, &session);
         assert!((ez - fz).abs() < 1e-3 * ez, "Z: {ez} vs {fz}");
         let norm: f64 = ex.iter().map(|v| v * v).sum::<f64>().sqrt();
         let mut err = 0.0;
@@ -387,8 +387,8 @@ mod tests {
             fkt: FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() },
             ..Default::default()
         };
-        let mut session = Session::native(2);
-        let (fx, fy, _) = repulsive_field(&emb, &cfg, &mut session);
+        let session = Session::native(2);
+        let (fx, fy, _) = repulsive_field(&emb, &cfg, &session);
         // Pre-fusion reference: an identically-configured operator (the
         // deterministic build makes it numerically identical to the
         // transient one inside repulsive_field), three single-RHS MVMs.
@@ -412,7 +412,7 @@ mod tests {
     fn kl_decreases_on_clustered_data() {
         let mut rng = Pcg32::seeded(233);
         let (data, _) = mnist_like(300, 10, &mut rng);
-        let mut session = Session::native(2);
+        let session = Session::native(2);
         let cfg = TsneConfig {
             iterations: 120,
             exaggeration_iters: 50,
@@ -421,7 +421,7 @@ mod tests {
             exact_repulsion: true, // small N: exact is fastest & cleanest
             ..Default::default()
         };
-        let res = run(&data, &cfg, &mut session);
+        let res = run(&data, &cfg, &session);
         let first = res.kl_trace.first().unwrap().1;
         let last = res.kl_trace.last().unwrap().1;
         assert!(last < first, "KL did not decrease: {first} -> {last}");
@@ -431,7 +431,7 @@ mod tests {
     fn embedding_separates_clusters() {
         let mut rng = Pcg32::seeded(234);
         let (data, labels) = mnist_like(400, 12, &mut rng);
-        let mut session = Session::native(2);
+        let session = Session::native(2);
         let cfg = TsneConfig {
             iterations: 250,
             exaggeration_iters: 100,
@@ -440,7 +440,7 @@ mod tests {
             exact_repulsion: true,
             ..Default::default()
         };
-        let res = run(&data, &cfg, &mut session);
+        let res = run(&data, &cfg, &session);
         let purity = knn_purity(&res.embedding, &labels, 10);
         assert!(purity > 0.8, "embedding purity {purity}");
     }

@@ -27,7 +27,7 @@ fn full_pipeline_all_default_artifact_families() {
     let mut rng = Pcg32::seeded(401);
     let pts = Points::new(2, rng.uniform_vec(600 * 2, 0.0, 1.0));
     let w = rng.normal_vec(600);
-    let mut session = Session::native(1);
+    let session = Session::native(1);
     for fam in [
         Family::Cauchy,
         Family::CauchySquared,
@@ -53,7 +53,7 @@ fn tolerance_requests_meet_measured_error() {
     let mut rng = Pcg32::seeded(408);
     let pts = Points::new(2, rng.uniform_vec(700 * 2, 0.0, 1.0));
     let w = rng.normal_vec(700);
-    let mut session = Session::native(2);
+    let session = Session::native(2);
     for fam in [Family::Gaussian, Family::Matern52, Family::Cauchy] {
         let kern = Kernel::canonical(fam);
         let dense = dense_mvm(&kern, &pts, &pts, &w);
@@ -87,7 +87,7 @@ fn tolerance_requests_meet_measured_error_3d_scaled() {
     let w = rng.normal_vec(500);
     let kern = Kernel::matern32(0.8); // scale √3/0.8 ≈ 2.17
     let dense = dense_mvm(&kern, &pts, &pts, &w);
-    let mut session = Session::native(2);
+    let session = Session::native(2);
     for eps in [1e-3, 1e-5] {
         let op = session
             .operator(&pts)
@@ -108,7 +108,7 @@ fn registry_reuses_operators_pointer_equal() {
     // and no extra build time accrued.
     let mut rng = Pcg32::seeded(410);
     let pts = Points::new(2, rng.uniform_vec(800 * 2, 0.0, 1.0));
-    let mut session = Session::native(1);
+    let session = Session::native(1);
     let first = session.operator(&pts).kernel(Family::Matern52).tolerance(1e-5).build();
     let stats_after_build = session.registry_stats();
     assert_eq!(stats_after_build.misses, 1);
@@ -138,7 +138,7 @@ fn batched_mvm_matches_looped_through_session() {
     let w = rng.normal_vec(n * 3);
     for fam in [Family::Cauchy, Family::Gaussian, Family::Matern32] {
         for threads in [1usize, 4, 7] {
-            let mut session = Session::native(threads);
+            let session = Session::native(threads);
             let op =
                 session.operator(&pts).kernel(fam).order(4).theta(0.5).leaf_capacity(64).build();
             let batched = session.mvm_batch(&op, &w, 3);
@@ -168,7 +168,7 @@ fn batched_rectangular_operator_through_session() {
     let tgt = Points::new(2, rng.uniform_vec(170 * 2, 0.0, 1.0));
     let w = rng.normal_vec(500 * 2);
     for threads in [1usize, 4] {
-        let mut session = Session::native(threads);
+        let session = Session::native(threads);
         let op = session
             .operator(&src)
             .targets(&tgt)
@@ -199,7 +199,7 @@ fn dense_backend_swaps_in_through_session() {
     let mut rng = Pcg32::seeded(407);
     let pts = Points::new(2, rng.uniform_vec(400 * 2, 0.0, 1.0));
     let w = rng.normal_vec(400);
-    let mut session = Session::native(2);
+    let session = Session::native(2);
     let exact = session.operator(&pts).kernel(Family::Cauchy).dense().build();
     let fast = session.operator(&pts).kernel(Family::Cauchy).order(6).theta(0.4).build();
     let ze = session.mvm(&exact, &w);
@@ -225,16 +225,16 @@ fn solve_then_predict_gp_end_to_end() {
         jitter: 1e-6,
         ..Default::default()
     };
-    let mut session = Session::native(1);
+    let session = Session::native(1);
     let mut gp = GpRegressor::new(
-        &mut session,
+        &session,
         ds.unit_sphere_points(),
         ds.noise_variances(),
         Kernel::matern32(0.25),
         cfg,
     );
     let (grid, coords) = sst::prediction_grid(12, 36, 60.0);
-    let res = gp.posterior_mean(&y0, &grid, &mut session);
+    let res = gp.posterior_mean(&y0, &grid, &session);
     assert!(res.cg.converged, "CG residual {}", res.cg.rel_residual);
     // Posterior should beat the mean-only baseline handily.
     let mut se = 0.0;
@@ -250,7 +250,7 @@ fn solve_then_predict_gp_end_to_end() {
     // no new builds, ZERO additional solves.
     let misses_before = session.registry_stats().misses;
     let solves_before = session.counters().solve;
-    let res2 = gp.posterior_mean(&y0, &grid, &mut session);
+    let res2 = gp.posterior_mean(&y0, &grid, &session);
     assert_eq!(session.registry_stats().misses, misses_before, "warm predict rebuilds nothing");
     assert_eq!(session.counters().solve, solves_before, "warm predict re-solves nothing");
     assert!(res2.cg.cached, "second fit served from the weight cache");
@@ -283,9 +283,9 @@ fn gp_training_end_to_end_through_session_verbs() {
         jitter: 1e-8,
         ..Default::default()
     };
-    let mut session = Session::native(2);
+    let session = Session::native(2);
     let mut gp = GpRegressor::new(
-        &mut session,
+        &session,
         pts.clone(),
         vec![0.2; n],
         Kernel::matern32(0.4),
@@ -293,13 +293,13 @@ fn gp_training_end_to_end_through_session_verbs() {
     );
     let c0 = session.counters();
     let opts = TrainOpts { iters: 10, probes: 4, seed: 77, ..Default::default() };
-    let res = gp.train(&mut session, &y, &opts);
+    let res = gp.train(&session, &y, &opts);
     let c1 = session.counters();
     assert_eq!(c1.solve_batch - c0.solve_batch, 10, "one batched solve per iteration");
     assert_eq!(c1.solve, c0.solve, "no single-RHS solves on the training path");
     assert!(res.kernel.scale > 0.0 && res.noise_var > 0.0);
     // The trained regressor predicts through the refreshed operator.
-    let pred = gp.posterior_mean(&y, &pts, &mut session);
+    let pred = gp.posterior_mean(&y, &pts, &session);
     assert!(pred.cg.converged, "post-training fit converges");
 }
 
@@ -318,8 +318,8 @@ fn tsne_pipeline_smoke() {
         exact_repulsion: false, // exercise the FKT repulsion path
         ..Default::default()
     };
-    let mut session = Session::native(1);
-    let res = run(&data, &cfg, &mut session);
+    let session = Session::native(1);
+    let res = run(&data, &cfg, &session);
     let purity = knn_purity(&res.embedding, &labels, 8);
     assert!(purity > 0.7, "purity {purity}");
     let first = res.kl_trace.first().unwrap().1;
@@ -335,7 +335,7 @@ fn tsne_pipeline_smoke() {
 
 #[test]
 fn pjrt_backend_end_to_end_when_artifacts_built() {
-    let mut session = Session::builder().threads(1).backend(Backend::Pjrt).build();
+    let session = Session::builder().threads(1).backend(Backend::Pjrt).build();
     if !session.will_use_pjrt("gaussian", 3) {
         eprintln!("skipping: artifacts not built");
         return;

@@ -1,0 +1,251 @@
+//! Serving-layer integration tests: micro-batching equivalence against
+//! the sequential session verbs, and full TCP round-trips through the
+//! length-prefixed JSON protocol — all through the public `fkt::serve`
+//! surface, the way a deployment would use it.
+
+use fkt::kernels::Family;
+use fkt::points::Points;
+use fkt::rng::Pcg32;
+use fkt::serve::{msg, BatchConfig, Client, Json, MicroBatcher, ServeConfig, Server};
+use fkt::session::{Backend, Session};
+use std::sync::Barrier;
+use std::time::Duration;
+
+fn l2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+fn norm(a: &[f64]) -> f64 {
+    a.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Eight concurrent tenants through one micro-batcher: every answer
+/// matches the sequential verb to 1e-12, and the session's own verb
+/// counters prove the batcher needed fewer apply passes than requests.
+#[test]
+fn batched_serving_matches_sequential_with_fewer_applies() {
+    const CLIENTS: usize = 8;
+    const N: usize = 500;
+    let mut rng = Pcg32::seeded(31_000);
+    let pts = Points::new(3, rng.uniform_vec(N * 3, 0.0, 1.0));
+    let session = Session::native(1);
+    let op = session.operator(&pts).kernel(Family::Matern32).order(4).theta(0.5).build();
+    let weights: Vec<Vec<f64>> = (0..CLIENTS).map(|_| rng.normal_vec(N)).collect();
+    let sequential: Vec<Vec<f64>> = weights.iter().map(|w| session.mvm(&op, w)).collect();
+    let before = session.counters();
+
+    // A wide gather window so the barrier-released burst lands in one
+    // (or few) fused applies.
+    let cfg = BatchConfig { max_columns: CLIENTS, gather_window: Duration::from_millis(150) };
+    let batcher = MicroBatcher::new(session.clone_core(), op, cfg);
+    let barrier = Barrier::new(CLIENTS);
+    let served: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = weights
+            .iter()
+            .map(|w| {
+                let batcher = &batcher;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    barrier.wait();
+                    batcher.mvm(w)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (got, want) in served.iter().zip(&sequential) {
+        let err = l2(got, want);
+        assert!(err <= 1e-12, "served column must match sequential mvm (l2 {err:.3e})");
+    }
+    let stats = batcher.stats();
+    assert_eq!(stats.requests, CLIENTS as u64);
+    assert!(
+        stats.applies < stats.requests,
+        "micro-batching must coalesce: {} applies for {} requests",
+        stats.applies,
+        stats.requests
+    );
+    // The same story from the session's side: fused verb invocations,
+    // not per-request traversals.
+    let after = session.counters();
+    let verb_calls = (after.mvm - before.mvm) + (after.mvm_batch - before.mvm_batch);
+    assert!(
+        verb_calls < CLIENTS as u64,
+        "{verb_calls} session verb calls should serve {CLIENTS} requests"
+    );
+}
+
+fn local_reference(n: usize, seed: u64) -> (Session, Points) {
+    let mut rng = Pcg32::seeded(seed);
+    let pts = fkt::data::uniform_hypersphere(n, 3, &mut rng);
+    let session = Session::builder().threads(1).backend(Backend::Auto).build();
+    (session, pts)
+}
+
+fn open_request(n: usize) -> Json {
+    msg(
+        "open",
+        &[
+            ("name", Json::str("uniform")),
+            ("n", Json::Num(n as f64)),
+            ("d", Json::Num(3.0)),
+            ("seed", Json::Num(9.0)),
+            ("kernel", Json::str("matern32")),
+            ("p", Json::Num(4.0)),
+            ("theta", Json::Num(0.5)),
+        ],
+    )
+}
+
+/// Full TCP round-trip: open, mvm against a local reference, a
+/// regularized solve to convergence, stats, protocol-level errors, close.
+#[test]
+fn tcp_round_trip_serves_correct_answers() {
+    const N: usize = 1200;
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 1,
+        registry_capacity: 4,
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(&cfg).expect("spawn server");
+    let mut client = Client::connect(server.addr()).expect("connect");
+
+    let opened = client.call_ok(&open_request(N)).expect("open");
+    let id = opened.get("id").and_then(Json::as_usize).expect("id") as u64;
+    assert_eq!(opened.get("n").and_then(Json::as_usize), Some(N));
+
+    // Same dataset + spec built locally: the served mvm must agree.
+    let (session, pts) = local_reference(N, 9);
+    let op = session.operator(&pts).kernel(Family::Matern32).order(4).theta(0.5).build();
+    let mut rng = Pcg32::seeded(77);
+    let w = rng.normal_vec(N);
+    let z_remote = client.mvm(id, &w).expect("mvm");
+    let z_local = session.mvm(&op, &w);
+    let err = l2(&z_remote, &z_local) / norm(&z_local).max(1e-300);
+    assert!(err <= 1e-12, "served mvm must match local build (rel l2 {err:.3e})");
+
+    let y = rng.normal_vec(N);
+    let solve = msg(
+        "solve",
+        &[
+            ("id", Json::Num(id as f64)),
+            ("y", Json::from_f64s(&y)),
+            ("noise", Json::Num(0.1)),
+            ("tol", Json::Num(1e-6)),
+            ("max_iters", Json::Num(400.0)),
+        ],
+    );
+    let solved = client.call_ok(&solve).expect("solve");
+    assert_eq!(solved.get("converged").and_then(Json::as_bool), Some(true));
+    let x = solved.get("x").and_then(Json::f64s).expect("solution");
+    // Verify the solution against the local operator: (K + σ²I)x ≈ y.
+    let kx = session.mvm(&op, &x);
+    let residual: Vec<f64> = kx
+        .iter()
+        .zip(&x)
+        .zip(&y)
+        .map(|((kxi, xi), yi)| kxi + 0.1 * xi - yi)
+        .collect();
+    let rel = norm(&residual) / norm(&y);
+    assert!(rel <= 1e-4, "served solve must satisfy the system (rel residual {rel:.3e})");
+
+    let stats = client.stats().expect("stats");
+    let ops = stats.get("ops").and_then(Json::as_arr).expect("ops array");
+    assert_eq!(ops.len(), 1, "one served operator");
+    let registry = stats.get("registry").expect("registry stats");
+    assert_eq!(registry.get("misses").and_then(Json::as_usize), Some(1));
+
+    // Protocol errors come back as ok:false, not hangups.
+    let bad_id = client.call(&msg("mvm", &[("id", Json::Num(999.0))])).expect("frame");
+    assert_eq!(bad_id.get("ok").and_then(Json::as_bool), Some(false));
+    let short = msg("mvm", &[("id", Json::Num(id as f64)), ("w", Json::from_f64s(&[1.0]))]);
+    let short = client.call(&short).expect("frame");
+    assert_eq!(short.get("ok").and_then(Json::as_bool), Some(false));
+    let unknown = client.call(&msg("frobnicate", &[])).expect("frame");
+    assert_eq!(unknown.get("ok").and_then(Json::as_bool), Some(false));
+    // The connection survived all three errors.
+    assert_eq!(client.mvm(id, &w).expect("post-error mvm").len(), N);
+
+    client.close();
+    server.shutdown().expect("clean shutdown");
+}
+
+/// Concurrent TCP tenants against one operator: every client gets the
+/// right answer, the server hands all of them the same operator id, and
+/// the per-op stats show cross-connection coalescing.
+#[test]
+fn concurrent_tcp_clients_share_one_batcher() {
+    const CLIENTS: usize = 6;
+    const N: usize = 600;
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 1,
+        registry_capacity: 4,
+        batch: BatchConfig { max_columns: CLIENTS, gather_window: Duration::from_millis(60) },
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(&cfg).expect("spawn server");
+
+    let (session, pts) = local_reference(N, 9);
+    let op = session.operator(&pts).kernel(Family::Matern32).order(4).theta(0.5).build();
+    let weights: Vec<Vec<f64>> = {
+        let mut rng = Pcg32::seeded(500);
+        (0..CLIENTS).map(|_| rng.normal_vec(N)).collect()
+    };
+    let expected: Vec<Vec<f64>> = weights.iter().map(|w| session.mvm(&op, w)).collect();
+
+    let addr = server.addr();
+    let barrier = Barrier::new(CLIENTS);
+    let outcomes: Vec<(u64, Vec<f64>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = weights
+            .iter()
+            .map(|w| {
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).expect("connect");
+                    let id = client
+                        .call_ok(&open_request(N))
+                        .expect("open")
+                        .get("id")
+                        .and_then(Json::as_usize)
+                        .expect("id") as u64;
+                    barrier.wait();
+                    let z = client.mvm(id, w).expect("mvm");
+                    client.close();
+                    (id, z)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let first_id = outcomes[0].0;
+    for ((id, z), want) in outcomes.iter().zip(&expected) {
+        assert_eq!(*id, first_id, "identical specs must share one operator id");
+        let err = l2(z, want);
+        assert!(err <= 1e-12, "concurrent served mvm must be exact (l2 {err:.3e})");
+    }
+
+    let mut probe = Client::connect(addr).expect("connect probe");
+    let stats = probe.stats().expect("stats");
+    let ops = stats.get("ops").and_then(Json::as_arr).expect("ops");
+    assert_eq!(ops.len(), 1, "six tenants, one served operator");
+    let entry = &ops[0];
+    let requests = entry.get("requests").and_then(Json::as_usize).unwrap();
+    let applies = entry.get("applies").and_then(Json::as_usize).unwrap();
+    assert_eq!(requests, CLIENTS, "all client requests routed through the batcher");
+    assert!(
+        applies < requests,
+        "cross-connection batching must coalesce: {applies} applies for {requests} requests"
+    );
+    let registry = stats.get("registry").expect("registry");
+    assert_eq!(
+        registry.get("misses").and_then(Json::as_usize),
+        Some(1),
+        "one build serves every tenant"
+    );
+    probe.close();
+    server.shutdown().expect("clean shutdown");
+}
