@@ -111,6 +111,7 @@ fn main() {
         jitter: 1e-8,
         noise: Some(&noise),
         precondition: true,
+        deadline: None,
     };
     let t2 = Instant::now();
     let pure = session.solve(&op64, &w, &opts);

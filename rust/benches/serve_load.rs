@@ -8,9 +8,15 @@
 //! is the headline number: what the fused `apply_batch` traversal buys
 //! a multi-tenant deployment.
 //!
+//! A third leg reruns the batched server with fault injection enabled
+//! (probabilistic apply panics plus injected latency) and drives it
+//! through the soak harness: the chaos numbers say what the reliability
+//! layer costs and whether every request still comes back framed.
+//!
 //! Records `serve_p50_ms`, `serve_p99_ms`, `serve_rps`,
-//! `batched_columns_per_apply`, and
-//! `single_vs_batched_serve_throughput` into BENCH.json (merged).
+//! `batched_columns_per_apply`,
+//! `single_vs_batched_serve_throughput`, `chaos_error_rate`,
+//! `shed_rate`, and `p99_under_faults_ms` into BENCH.json (merged).
 //!
 //! ```text
 //! cargo bench --bench serve_load [-- --n 20000 --clients 8 --requests 32]
@@ -19,7 +25,9 @@
 use fkt::benchkit::{BenchJson, Table};
 use fkt::cli::Args;
 use fkt::rng::Pcg32;
-use fkt::serve::{msg, BatchConfig, Client, Json, ServeConfig, Server};
+use fkt::serve::{
+    msg, soak, BatchConfig, Client, FaultConfig, Json, RetryPolicy, ServeConfig, Server,
+};
 use std::net::SocketAddr;
 use std::sync::Barrier;
 use std::time::{Duration, Instant};
@@ -147,6 +155,7 @@ fn main() {
         batch: BatchConfig {
             max_columns: max_cols,
             gather_window: Duration::from_micros(window_us),
+            ..BatchConfig::default()
         },
         ..base.clone()
     };
@@ -156,12 +165,49 @@ fn main() {
 
     // Same load with batching off: every request is one apply pass.
     let unbatched_cfg = ServeConfig {
-        batch: BatchConfig { max_columns: 1, gather_window: Duration::ZERO },
-        ..base
+        batch: BatchConfig {
+            max_columns: 1,
+            gather_window: Duration::ZERO,
+            ..BatchConfig::default()
+        },
+        ..base.clone()
     };
     let server = Server::spawn(&unbatched_cfg).expect("spawn unbatched server");
     let unbatched = run_load(server.addr(), &args);
     server.shutdown().expect("clean unbatched shutdown");
+
+    // Chaos leg: the batched server again, now with fault injection —
+    // probabilistic apply panics plus injected latency — driven through
+    // the soak harness instead of the happy-path loop.
+    let chaos_cfg = ServeConfig {
+        batch: BatchConfig {
+            max_columns: max_cols,
+            gather_window: Duration::from_micros(window_us),
+            max_queue: (clients * 2).max(4),
+        },
+        faults: FaultConfig {
+            panic_p: 0.05,
+            latency: Duration::from_millis(1),
+            inject: true,
+            ..FaultConfig::disabled()
+        },
+        ..base
+    };
+    let server = Server::spawn(&chaos_cfg).expect("spawn chaos server");
+    let soak_cfg = soak::SoakConfig {
+        clients,
+        requests_per_client: requests,
+        open: open_msg(&args),
+        weight_len: n,
+        deadline_ms: None,
+        timeout: Duration::from_secs(60),
+        retry: RetryPolicy::default(),
+        seed: 0xc4a05,
+    };
+    let chaos = soak::run(server.addr(), &soak_cfg);
+    server.shutdown().expect("clean chaos shutdown");
+    assert_eq!(chaos.framed(), chaos.total, "chaos soak: every request must come back framed");
+    assert_eq!(chaos.hung, 0, "chaos soak: no request may hang");
 
     let mut lat_b = batched.latencies_ms.clone();
     lat_b.sort_by(|a, b| a.total_cmp(b));
@@ -188,6 +234,14 @@ fn main() {
     ]);
     table.print();
     println!("single vs batched serve throughput: {ratio:.2}x at {clients} clients");
+    println!(
+        "chaos: {}/{} ok, error rate {:.3}, shed rate {:.3}, p99 {:.2} ms under faults",
+        chaos.ok,
+        chaos.total,
+        chaos.error_rate(),
+        chaos.shed_rate(),
+        chaos.p99_ms()
+    );
 
     let mut json = BenchJson::new();
     json.record("serve_p50_ms", percentile(&lat_b, 50.0));
@@ -197,6 +251,9 @@ fn main() {
     json.record("batched_columns_per_apply", batched.columns_per_apply);
     json.record("single_vs_batched_serve_throughput", ratio);
     json.record("serve_clients", clients as f64);
+    json.record("chaos_error_rate", chaos.error_rate());
+    json.record("shed_rate", chaos.shed_rate());
+    json.record("p99_under_faults_ms", chaos.p99_ms());
     json.record_str("simd_backend", fkt::linalg::simd::backend().name());
     let path = BenchJson::default_path();
     match json.save_merged(&path) {

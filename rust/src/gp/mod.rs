@@ -181,6 +181,7 @@ impl GpRegressor {
             jitter: self.cfg.jitter,
             noise: Some(&self.noise_var),
             precondition: self.cfg.precondition,
+            deadline: None,
         };
         let cg = session.solve(&self.op, y, &opts);
         let stats = FitStats {

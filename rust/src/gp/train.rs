@@ -442,6 +442,7 @@ fn evaluate(
         jitter: cfg.jitter,
         noise: Some(&noise_diag),
         precondition: cfg.precondition,
+        deadline: None,
     };
     let sol = session.solve_batch(&op, &rhs, cols, &sopts);
     let alpha = &sol.x[..n];

@@ -9,6 +9,7 @@
 //! on the runtime-dispatched SIMD micro-kernels in [`simd`].
 
 use crate::exact::Rational;
+use std::time::{Duration, Instant};
 
 pub mod qr;
 pub use qr::{col_pivoted_qr, numerical_rank, PivotedQr};
@@ -364,6 +365,45 @@ pub fn conjugate_gradient(
     CgResult { x, iterations: iters, rel_residual: res, converged: res <= tol }
 }
 
+/// Iteration/time budget for a CG solve.
+///
+/// `max_iters` is the classical cap. `deadline` adds a wall-clock cap for
+/// deadline-aware serving: the solve stops *before* starting an iteration
+/// it does not expect to finish (predicted from the running mean iteration
+/// cost), returning the current iterate with an honest `rel_residual` and
+/// `converged: false` — a partial answer beats a late one, and the caller
+/// can see exactly how partial it is.
+#[derive(Clone, Copy, Debug)]
+pub struct CgBudget {
+    /// Maximum iterations (batched: per column).
+    pub max_iters: usize,
+    /// Optional wall-clock deadline for the whole solve.
+    pub deadline: Option<Instant>,
+}
+
+impl CgBudget {
+    /// A pure iteration budget — the classical CG contract.
+    pub fn iters(max_iters: usize) -> CgBudget {
+        CgBudget { max_iters, deadline: None }
+    }
+
+    /// Whether starting another iteration would be expected to overrun
+    /// the deadline: true once `now + avg_iteration_cost` crosses it.
+    fn out_of_time(&self, started: Instant, iters_done: u32) -> bool {
+        match self.deadline {
+            Some(deadline) => {
+                let avg = if iters_done > 0 {
+                    started.elapsed() / iters_done
+                } else {
+                    Duration::ZERO
+                };
+                Instant::now() + avg >= deadline
+            }
+            None => false,
+        }
+    }
+}
+
 /// Preconditioned conjugate gradients: solves `A x = b` given `apply`
 /// (the A matvec) and `precond` (an approximate A⁻¹ matvec, e.g. the GP's
 /// leaf-block Jacobi preconditioner). Falls back to plain CG behaviour
@@ -375,6 +415,22 @@ pub fn preconditioned_cg(
     tol: f64,
     max_iters: usize,
 ) -> CgResult {
+    preconditioned_cg_budgeted(apply, precond, b, tol, &CgBudget::iters(max_iters))
+}
+
+/// [`preconditioned_cg`] under a [`CgBudget`]: identical recurrence, but
+/// the loop also stops when the budget's deadline is predicted to be
+/// overrun, returning the partial iterate (`converged` reflects the true
+/// residual, so a deadline stop reads as `converged: false` unless the
+/// solve happened to finish anyway).
+pub fn preconditioned_cg_budgeted(
+    apply: &mut dyn FnMut(&[f64]) -> Vec<f64>,
+    precond: &mut dyn FnMut(&[f64]) -> Vec<f64>,
+    b: &[f64],
+    tol: f64,
+    budget: &CgBudget,
+) -> CgResult {
+    let max_iters = budget.max_iters;
     let n = b.len();
     let bnorm = vecops::norm2(b);
     if bnorm == 0.0 {
@@ -386,7 +442,11 @@ pub fn preconditioned_cg(
     let mut p = zv.clone();
     let mut rz = vecops::dot(&r, &zv);
     let mut iters = 0;
+    let started = Instant::now();
     while iters < max_iters {
+        if budget.out_of_time(started, iters as u32) {
+            break;
+        }
         let ap = apply(&p);
         let denom = vecops::dot(&p, &ap);
         if denom.abs() < f64::MIN_POSITIVE {
@@ -465,6 +525,23 @@ pub fn preconditioned_cg_batch(
     tol: f64,
     max_iters: usize,
 ) -> BatchCgResult {
+    let budget = CgBudget::iters(max_iters);
+    preconditioned_cg_batch_budgeted(apply_batch, precond_batch, b, m, tol, &budget)
+}
+
+/// [`preconditioned_cg_batch`] under a [`CgBudget`]: when the deadline is
+/// predicted to be overrun, every still-active column freezes at its
+/// current iterate with its true residual recorded — the partial block is
+/// returned instead of a late one.
+pub fn preconditioned_cg_batch_budgeted(
+    apply_batch: &mut dyn FnMut(&[f64]) -> Vec<f64>,
+    precond_batch: &mut dyn FnMut(&[f64]) -> Vec<f64>,
+    b: &[f64],
+    m: usize,
+    tol: f64,
+    budget: &CgBudget,
+) -> BatchCgResult {
+    let max_iters = budget.max_iters;
     assert!(m > 0, "batched solve needs at least one column");
     assert_eq!(b.len() % m, 0, "rhs block shape mismatch");
     let n = b.len() / m;
@@ -499,9 +576,22 @@ pub fn preconditioned_cg_batch(
         }
     }
     let mut batched_mvms = 0;
+    let started = Instant::now();
     // Columns freeze themselves on convergence, breakdown, or hitting
     // `max_iters`, so the loop terminates when the slowest column does.
+    // A deadline stop freezes every still-active column at once, with its
+    // true residual recorded.
     while active.iter().any(|&a| a) {
+        if budget.out_of_time(started, batched_mvms as u32) {
+            for c in 0..m {
+                if active[c] {
+                    active[c] = false;
+                    rel_residual[c] = vecops::norm2(&r[col(c)]) / bnorm[c];
+                    converged[c] = rel_residual[c] <= tol;
+                }
+            }
+            break;
+        }
         let ap = apply_batch(&p);
         batched_mvms += 1;
         let mut any_needs_precond = false;
@@ -996,6 +1086,88 @@ mod tests {
         // The batch cost is the slowest column, not the sum.
         let max_it = *res.iterations.iter().max().unwrap();
         assert_eq!(res.batched_mvms, max_it);
+    }
+
+    fn spd_system(seed: u64, n: usize) -> (Mat, Vec<f64>) {
+        let mut rng = Pcg32::seeded(seed);
+        let b = Mat::from_vec(n, n, rng.normal_vec(n * n));
+        let mut a = b.gemm(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        let rhs = rng.normal_vec(n);
+        (a, rhs)
+    }
+
+    #[test]
+    fn budgeted_cg_with_no_deadline_matches_plain_cg() {
+        let (a, rhs) = spd_system(77, 25);
+        let mut apply = |v: &[f64]| a.matvec(v);
+        let mut id = |v: &[f64]| v.to_vec();
+        let plain = preconditioned_cg(&mut apply, &mut id, &rhs, 1e-10, 200);
+        let mut apply2 = |v: &[f64]| a.matvec(v);
+        let mut id2 = |v: &[f64]| v.to_vec();
+        let budget = CgBudget::iters(200);
+        let budgeted = preconditioned_cg_budgeted(&mut apply2, &mut id2, &rhs, 1e-10, &budget);
+        assert_eq!(plain.iterations, budgeted.iterations);
+        assert_eq!(plain.x, budgeted.x);
+        assert!(budgeted.converged);
+    }
+
+    #[test]
+    fn budgeted_cg_expired_deadline_returns_partial_result() {
+        let (a, rhs) = spd_system(78, 25);
+        let mut apply = |v: &[f64]| a.matvec(v);
+        let mut id = |v: &[f64]| v.to_vec();
+        let budget =
+            CgBudget { max_iters: 200, deadline: Some(Instant::now() - Duration::from_millis(1)) };
+        let res = preconditioned_cg_budgeted(&mut apply, &mut id, &rhs, 1e-10, &budget);
+        assert_eq!(res.iterations, 0, "expired deadline must stop before the first iteration");
+        assert!(!res.converged);
+        // The honest residual of the zero iterate is ‖b‖/‖b‖ = 1.
+        assert!((res.rel_residual - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budgeted_batch_cg_expired_deadline_freezes_every_column() {
+        let (a, _) = spd_system(79, 20);
+        let n = 20;
+        let m = 3;
+        let mut rng = Pcg32::seeded(80);
+        let rhs = rng.normal_vec(n * m);
+        let mut apply_b = |v: &[f64]| -> Vec<f64> {
+            let mut out = vec![0.0; v.len()];
+            for c in 0..v.len() / n {
+                out[c * n..(c + 1) * n].copy_from_slice(&a.matvec(&v[c * n..(c + 1) * n]));
+            }
+            out
+        };
+        let mut id = |v: &[f64]| v.to_vec();
+        let budget =
+            CgBudget { max_iters: 200, deadline: Some(Instant::now() - Duration::from_millis(1)) };
+        let res = preconditioned_cg_batch_budgeted(&mut apply_b, &mut id, &rhs, m, 1e-10, &budget);
+        assert_eq!(res.batched_mvms, 0);
+        for c in 0..m {
+            assert_eq!(res.iterations[c], 0, "col {c}");
+            assert!(!res.converged[c], "col {c}");
+            assert!((res.rel_residual[c] - 1.0).abs() < 1e-12, "col {c}");
+        }
+        // A generous deadline converges exactly like the plain batch.
+        let mut apply_b2 = |v: &[f64]| -> Vec<f64> {
+            let mut out = vec![0.0; v.len()];
+            for c in 0..v.len() / n {
+                out[c * n..(c + 1) * n].copy_from_slice(&a.matvec(&v[c * n..(c + 1) * n]));
+            }
+            out
+        };
+        let mut id2 = |v: &[f64]| v.to_vec();
+        let budget = CgBudget {
+            max_iters: 200,
+            deadline: Some(Instant::now() + Duration::from_secs(600)),
+        };
+        let res =
+            preconditioned_cg_batch_budgeted(&mut apply_b2, &mut id2, &rhs, m, 1e-10, &budget);
+        assert!(res.converged.iter().all(|&c| c));
     }
 
     #[test]

@@ -8,11 +8,24 @@
 //!                            through batched MVM/solve verbs)
 //!   tsne   [--n …]           t-SNE embedding of the MNIST surrogate
 //!   plan   [--n …]           print the far/near plan statistics
-//!   serve  [--port --threads --max-cols --window-us …]
+//!   serve  [--port --threads --max-cols --window-us --queue-cap
+//!           --faults spec --breaker-failures --breaker-cooldown-ms …]
 //!                            multi-tenant TCP serving with cross-request
-//!                            micro-batching (Ctrl-C drains and exits 0)
-//!   serve-probe [--addr …]   scripted open/mvm/solve/stats round-trip
-//!                            against a running server (CI smoke client)
+//!                            micro-batching, bounded admission, per-op
+//!                            circuit breakers, and optional fault
+//!                            injection (Ctrl-C drains and exits 0)
+//!   serve-probe [--addr --chaos …]
+//!                            scripted open/mvm/solve/stats round-trip
+//!                            against a running server (CI smoke client);
+//!                            always asserts the expired-deadline path,
+//!                            and with --chaos also overload shedding and
+//!                            breaker trip/recovery (needs a server run
+//!                            with --faults …,inject=1)
+//!   serve-soak  [--addr --clients --requests --deadline-ms …]
+//!                            reliability soak: N clients × M requests,
+//!                            every outcome tallied; exits nonzero on
+//!                            hangs, transport failures, or an error rate
+//!                            over --max-error-rate
 //!
 //! Every subcommand talks to the library through one `Session` — the
 //! public entry point that owns the coordinator, the operator registry,
@@ -57,6 +70,7 @@ fn main() {
         "tsne" => tsne(&args),
         "serve" => serve(&args),
         "serve-probe" => serve_probe(&args),
+        "serve-soak" => serve_soak(&args),
         other => {
             eprintln!("unknown subcommand {other:?}; see `fkt info`");
             std::process::exit(2);
@@ -397,13 +411,23 @@ fn tsne(args: &Args) {
 /// (each request is one apply) — the load bench uses exactly that to
 /// measure what batching buys.
 fn serve(args: &Args) {
-    use fkt::serve::{install_sigint, BatchConfig, ServeConfig, Server};
+    use fkt::serve::{install_sigint, BatchConfig, BreakerConfig, FaultConfig, ServeConfig, Server};
     use std::io::Write as _;
     use std::time::Duration;
     let port: u16 = args.get("port", 7878);
     let default_addr = format!("127.0.0.1:{port}");
     let backend =
         Backend::from_name(&args.get_str("backend", "auto")).unwrap_or(Backend::Auto);
+    // `--faults spec` overrides the FKT_FAULTS environment variable.
+    let faults = match args.options.get("faults") {
+        Some(spec) => FaultConfig::parse(spec),
+        None => FaultConfig::from_env(),
+    }
+    .unwrap_or_else(|e| {
+        eprintln!("fkt serve: {e}");
+        std::process::exit(2);
+    });
+    let breaker_defaults = BreakerConfig::default();
     let cfg = ServeConfig {
         addr: args.get_str("addr", &default_addr),
         threads: args.threads(),
@@ -412,7 +436,16 @@ fn serve(args: &Args) {
         batch: BatchConfig {
             max_columns: args.get("max-cols", 32),
             gather_window: Duration::from_micros(args.get("window-us", 1000)),
+            max_queue: args.get("queue-cap", 256),
         },
+        breaker: BreakerConfig {
+            failure_threshold: args.get("breaker-failures", breaker_defaults.failure_threshold),
+            cooldown: Duration::from_millis(
+                args.get("breaker-cooldown-ms", breaker_defaults.cooldown.as_millis() as u64),
+            ),
+            half_open_probes: breaker_defaults.half_open_probes,
+        },
+        faults,
     };
     let server = match Server::bind(&cfg) {
         Ok(server) => server,
@@ -424,11 +457,22 @@ fn serve(args: &Args) {
     install_sigint();
     let addr = server.local_addr().expect("bound listener has an address");
     println!(
-        "fkt serve listening on {addr} (batch ≤{} cols, {}µs window, registry cap {})",
+        "fkt serve listening on {addr} (batch ≤{} cols, {}µs window, queue cap {}, registry cap {})",
         cfg.batch.max_columns,
         cfg.batch.gather_window.as_micros(),
+        cfg.batch.max_queue,
         cfg.registry_capacity
     );
+    if faults.is_active() {
+        println!(
+            "fkt serve: FAULT INJECTION ACTIVE (panic={}, latency={}ms, drop={}, corrupt={}, inject={})",
+            faults.panic_p,
+            faults.latency.as_millis(),
+            faults.drop_p,
+            faults.corrupt_p,
+            faults.inject
+        );
+    }
     // Flush before blocking: scripts wait for this line to know the
     // server is accepting.
     std::io::stdout().flush().ok();
@@ -441,35 +485,81 @@ fn serve(args: &Args) {
     }
 }
 
-/// Scripted client round-trip against a running server — the CI smoke
-/// test. Opens an operator, checks an `mvm` against a locally built
-/// reference, runs a regularized `solve` to convergence, and reads
-/// `stats`. Exits nonzero on any mismatch.
-fn serve_probe(args: &Args) {
-    use fkt::serve::{msg, Client, Json};
+/// Abort a probe/soak client with a nonzero exit.
+fn probe_fail(who: &str, context: &str) -> ! {
+    eprintln!("{who} FAILED: {context}");
+    std::process::exit(1);
+}
 
-    fn fail(context: &str) -> ! {
-        eprintln!("serve-probe FAILED: {context}");
-        std::process::exit(1);
+/// Call until the server answers `ok:true`, riding out transport breaks
+/// (reconnect), backpressure (retried inside `call_retry`), and — under
+/// fault injection — the occasional `worker_panic` response. Used by the
+/// probe so the same script passes against clean and chaos servers.
+fn call_until_ok(
+    client: &mut fkt::serve::Client,
+    request: &fkt::serve::Json,
+    retry: &fkt::serve::RetryPolicy,
+    what: &str,
+) -> fkt::serve::Json {
+    use fkt::serve::Json;
+    let mut last = String::new();
+    for _ in 0..8 {
+        match client.call_retry(request, retry) {
+            Ok(r) if r.get("ok").and_then(Json::as_bool) == Some(true) => return r,
+            Ok(r) => {
+                last = r.get("error").and_then(Json::as_str).unwrap_or("unknown").to_string();
+            }
+            Err(e) => {
+                last = e.to_string();
+                let _ = client.reconnect();
+            }
+        }
     }
+    probe_fail("serve-probe", &format!("{what}: no ok response after retries (last: {last})"));
+}
 
-    let addr = args.get_str("addr", "127.0.0.1:7878");
-    let n: usize = args.get("n", 2000);
-    let mut client =
-        Client::connect(&addr).unwrap_or_else(|e| fail(&format!("connect {addr}: {e}")));
-    let open = msg(
+/// The `open` request every probe/soak client sends: a deterministic
+/// uniform-hypersphere operator, so identical invocations intern to one
+/// served entry (and one shared micro-batcher).
+fn probe_open_msg(n: usize, seed: u64) -> fkt::serve::Json {
+    use fkt::serve::{msg, Json};
+    msg(
         "open",
         &[
             ("name", Json::str("uniform")),
             ("n", Json::Num(n as f64)),
             ("d", Json::Num(3.0)),
-            ("seed", Json::Num(7.0)),
+            ("seed", Json::Num(seed as f64)),
             ("kernel", Json::str("matern32")),
             ("p", Json::Num(4.0)),
             ("theta", Json::Num(0.5)),
         ],
-    );
-    let opened = client.call_ok(&open).unwrap_or_else(|e| fail(&format!("open: {e}")));
+    )
+}
+
+/// Scripted client round-trip against a running server — the CI smoke
+/// test. Opens an operator, checks an `mvm` against a locally built
+/// reference, asserts the expired-deadline error path, runs a
+/// regularized `solve` to convergence, and reads `stats`. With
+/// `--chaos` (against a server run with `--faults …,inject=1`) it also
+/// asserts overload shedding and breaker trip/recovery. Exits nonzero
+/// on any mismatch.
+fn serve_probe(args: &Args) {
+    use fkt::serve::{msg, Client, Json, RetryPolicy};
+    use std::time::Duration;
+
+    fn fail(context: &str) -> ! {
+        probe_fail("serve-probe", context);
+    }
+
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let n: usize = args.get("n", 2000);
+    let retry = RetryPolicy::default();
+    let mut client =
+        Client::connect(&addr).unwrap_or_else(|e| fail(&format!("connect {addr}: {e}")));
+    // A stuck server should fail the probe, not hang it.
+    client.set_timeout(Some(Duration::from_secs(30))).ok();
+    let opened = call_until_ok(&mut client, &probe_open_msg(n, 7), &retry, "open");
     let id = opened
         .get("id")
         .and_then(Json::as_usize)
@@ -484,7 +574,12 @@ fn serve_probe(args: &Args) {
     let op = session.operator(&pts).kernel(Family::Matern32).order(4).theta(0.5).build();
     let mut wrng = Pcg32::seeded(123);
     let w = wrng.normal_vec(n);
-    let z_remote = client.mvm(id, &w).unwrap_or_else(|e| fail(&format!("mvm: {e}")));
+    let mvm_req = msg("mvm", &[("id", Json::Num(id as f64)), ("w", Json::from_f64s(&w))]);
+    let answered = call_until_ok(&mut client, &mvm_req, &retry, "mvm");
+    let z_remote = answered
+        .get("z")
+        .and_then(Json::f64s)
+        .unwrap_or_else(|| fail("mvm response missing z"));
     let z_local = session.mvm(&op, &w);
     let mut num = 0.0;
     let mut den = 0.0;
@@ -498,6 +593,26 @@ fn serve_probe(args: &Args) {
     }
     println!("serve-probe: mvm matches local reference (rel l2 {rel:.3e})");
 
+    // Expired-deadline contract: a non-positive deadline is answered
+    // deterministically with the structured error, on ANY server.
+    let expired_req = msg(
+        "mvm",
+        &[
+            ("id", Json::Num(id as f64)),
+            ("w", Json::from_f64s(&w)),
+            ("deadline_ms", Json::Num(-1.0)),
+        ],
+    );
+    let expired = client
+        .call_retry(&expired_req, &retry)
+        .unwrap_or_else(|e| fail(&format!("expired-deadline mvm: {e}")));
+    if expired.get("ok").and_then(Json::as_bool) != Some(false)
+        || expired.get("error").and_then(Json::as_str) != Some("deadline_exceeded")
+    {
+        fail(&format!("expired deadline answered {} — want deadline_exceeded", expired.dump()));
+    }
+    println!("serve-probe: expired deadline rejected with structured error");
+
     let y = wrng.normal_vec(n);
     let solve = msg(
         "solve",
@@ -509,7 +624,7 @@ fn serve_probe(args: &Args) {
             ("max_iters", Json::Num(400.0)),
         ],
     );
-    let solved = client.call_ok(&solve).unwrap_or_else(|e| fail(&format!("solve: {e}")));
+    let solved = call_until_ok(&mut client, &solve, &retry, "solve");
     let converged = solved.get("converged").and_then(Json::as_bool).unwrap_or(false);
     let iters = solved.get("iterations").and_then(Json::as_usize).unwrap_or(0);
     if !converged {
@@ -517,7 +632,7 @@ fn serve_probe(args: &Args) {
     }
     println!("serve-probe: solve converged in {iters} CG iterations");
 
-    let stats = client.stats().unwrap_or_else(|e| fail(&format!("stats: {e}")));
+    let stats = call_until_ok(&mut client, &msg("stats", &[]), &retry, "stats");
     let mvms = stats
         .get("counters")
         .and_then(|c| c.get("mvm"))
@@ -528,6 +643,281 @@ fn serve_probe(args: &Args) {
         fail(&format!("stats implausible: {mvms} mvms over {ops} ops"));
     }
     println!("serve-probe: stats report {mvms} session mvm(s) across {ops} served op(s)");
+
+    if args.has_flag("chaos") {
+        probe_chaos(&addr, &mut client, id, n, &stats);
+    }
+
     client.close();
     println!("serve-probe: OK");
+}
+
+/// The `--chaos` leg of the probe: overload shedding, breaker trip via
+/// request-tagged panics, and breaker recovery after the cooldown. Uses
+/// a *separate* operator (seed 99) for the breaker checks so the main
+/// operator's health is untouched.
+fn probe_chaos(
+    addr: &str,
+    client: &mut fkt::serve::Client,
+    main_id: u64,
+    n: usize,
+    stats: &fkt::serve::Json,
+) {
+    use fkt::serve::{msg, Client, Json, RetryPolicy};
+    use std::time::Duration;
+
+    fn fail(context: &str) -> ! {
+        probe_fail("serve-probe", context);
+    }
+
+    let retry = RetryPolicy::default();
+    let config = stats.get("config").unwrap_or(&Json::Null);
+    let faults_active = stats
+        .get("faults")
+        .and_then(|f| f.get("active"))
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    if !faults_active {
+        fail("--chaos needs a server running with --faults (…,inject=1)");
+    }
+    let threshold = config
+        .get("breaker_failure_threshold")
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| fail("stats carry no breaker_failure_threshold"));
+    let cooldown_ms = config
+        .get("breaker_cooldown_ms")
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| fail("stats carry no breaker_cooldown_ms"));
+    let queue_cap = config
+        .get("queue_cap")
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| fail("stats carry no queue_cap"));
+
+    // 1. Overload: hammer the main operator from enough concurrent
+    // connections to overflow the admission queue; at least one request
+    // must come back as a structured `overloaded` shed.
+    let flood_clients = (queue_cap + 4).max(8);
+    let per_client = 4;
+    let shed = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..flood_clients {
+            handles.push(scope.spawn(move || {
+                let mut shed = 0u64;
+                let mut flooder = match Client::connect(addr) {
+                    Ok(f) => f,
+                    Err(_) => return shed,
+                };
+                flooder.set_timeout(Some(Duration::from_secs(30))).ok();
+                let mut rng = Pcg32::seeded(0xf100d + c as u64);
+                for _ in 0..per_client {
+                    let w = rng.normal_vec(n);
+                    let req = msg(
+                        "mvm",
+                        &[("id", Json::Num(main_id as f64)), ("w", Json::from_f64s(&w))],
+                    );
+                    if let Ok(r) = flooder.call(&req) {
+                        if r.get("error").and_then(Json::as_str) == Some("overloaded") {
+                            let hint = r.get("retry_after_ms").and_then(Json::as_f64);
+                            if hint.is_none() {
+                                fail("overloaded response carries no retry_after_ms");
+                            }
+                            shed += 1;
+                        }
+                    } else {
+                        let _ = flooder.reconnect();
+                    }
+                }
+                shed
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap_or(0)).sum::<u64>()
+    });
+    if shed == 0 {
+        fail(&format!(
+            "no overload shed across {} flooding requests (queue cap {queue_cap})",
+            flood_clients * per_client
+        ));
+    }
+    println!("serve-probe: overload shed {shed} request(s) with retry hints");
+
+    // 2. Breaker trip: a dedicated operator absorbs request-tagged
+    // panics until its breaker opens.
+    let opened = call_until_ok(client, &probe_open_msg(n.min(512), 99), &retry, "chaos open");
+    let chaos_id = opened
+        .get("id")
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| fail("chaos open response carries no id")) as u64;
+    let mut wrng = Pcg32::seeded(0x0dd);
+    let w = wrng.normal_vec(n.min(512));
+    let inject_req = msg(
+        "mvm",
+        &[
+            ("id", Json::Num(chaos_id as f64)),
+            ("w", Json::from_f64s(&w)),
+            ("inject", Json::str("panic")),
+        ],
+    );
+    let mut panics = 0usize;
+    let mut tripped = false;
+    for _ in 0..(2 * threshold + 4) {
+        match client.call(&inject_req) {
+            Ok(r) => match r.get("error").and_then(Json::as_str) {
+                Some("worker_panic") => panics += 1,
+                Some("breaker_open") => {
+                    if r.get("retry_after_ms").and_then(Json::as_f64).unwrap_or(0.0) <= 0.0 {
+                        fail("breaker_open response carries no positive retry_after_ms");
+                    }
+                    tripped = true;
+                    break;
+                }
+                other => fail(&format!("injected panic answered {other:?}")),
+            },
+            Err(_) => {
+                let _ = client.reconnect();
+            }
+        }
+    }
+    if !tripped || panics < threshold {
+        fail(&format!(
+            "breaker did not trip after {panics} injected panics (threshold {threshold})"
+        ));
+    }
+    println!("serve-probe: breaker tripped open after {panics} injected panics");
+
+    // 3. Recovery: after the cooldown a clean request is admitted as the
+    // half-open probe and closes the breaker. Under probabilistic apply
+    // panics the probe itself may fail and re-open — allow a few rounds.
+    let clean_req = msg("mvm", &[("id", Json::Num(chaos_id as f64)), ("w", Json::from_f64s(&w))]);
+    let mut recovered = false;
+    for _ in 0..10 {
+        std::thread::sleep(Duration::from_millis(cooldown_ms as u64 + 50));
+        match client.call(&clean_req) {
+            Ok(r) if r.get("ok").and_then(Json::as_bool) == Some(true) => {
+                recovered = true;
+                break;
+            }
+            Ok(_) => {}
+            Err(_) => {
+                let _ = client.reconnect();
+            }
+        }
+    }
+    if !recovered {
+        fail("breaker never recovered after cooldown");
+    }
+    let after = call_until_ok(client, &msg("stats", &[]), &retry, "chaos stats");
+    let breaker_state = after
+        .get("ops")
+        .and_then(Json::as_arr)
+        .and_then(|ops| {
+            ops.iter().find(|o| o.get("id").and_then(Json::as_usize) == Some(chaos_id as usize))
+        })
+        .and_then(|o| o.get("breaker"))
+        .and_then(|b| b.get("state"))
+        .and_then(Json::as_str)
+        .unwrap_or("missing")
+        .to_string();
+    if breaker_state != "closed" {
+        fail(&format!("breaker state after recovery is {breaker_state:?}, want closed"));
+    }
+    println!("serve-probe: breaker recovered to closed after cooldown");
+}
+
+/// Reliability soak against a running server: `--clients` connections ×
+/// `--requests` MVMs each (optionally carrying `--deadline-ms`), with
+/// full final-outcome accounting. The reliability contract is enforced
+/// with a nonzero exit: no hangs, no surviving transport failures, the
+/// admission queue observed within its cap, and an error rate within
+/// `--max-error-rate`.
+fn serve_soak(args: &Args) {
+    use fkt::serve::{msg, soak, Client, Json, RetryPolicy, SoakConfig};
+    use std::net::ToSocketAddrs as _;
+    use std::time::Duration;
+
+    fn fail(context: &str) -> ! {
+        probe_fail("serve-soak", context);
+    }
+
+    let addr_str = args.get_str("addr", "127.0.0.1:7878");
+    let addr = addr_str
+        .to_socket_addrs()
+        .ok()
+        .and_then(|mut a| a.next())
+        .unwrap_or_else(|| fail(&format!("cannot resolve {addr_str}")));
+    let n: usize = args.get("n", 1024);
+    let cfg = SoakConfig {
+        clients: args.get("clients", 8),
+        requests_per_client: args.get("requests", 16),
+        open: probe_open_msg(n, 7),
+        weight_len: n,
+        deadline_ms: args.get_opt("deadline-ms"),
+        timeout: Duration::from_millis(args.get("timeout-ms", 10_000)),
+        retry: RetryPolicy::default(),
+        seed: args.get("seed", 0x50af),
+    };
+    let report = soak::run(addr, &cfg);
+    println!(
+        "serve-soak: {} requests → {} ok, {} overloaded, {} deadline_exceeded, {} worker_panic, {} breaker_open, {} other",
+        report.total,
+        report.ok,
+        report.overloaded,
+        report.deadline_exceeded,
+        report.worker_panic,
+        report.breaker_open,
+        report.other_error
+    );
+    println!(
+        "serve-soak: framed {}/{} | transport failures {} | hung {} | open failures {}",
+        report.framed(),
+        report.total,
+        report.transport_failures,
+        report.hung,
+        report.open_failures
+    );
+    println!(
+        "serve-soak: error rate {:.3}, shed rate {:.3}, p50 {:.1} ms, p99 {:.1} ms",
+        report.error_rate(),
+        report.shed_rate(),
+        report.p50_ms(),
+        report.p99_ms()
+    );
+
+    // The queue must be observed within its configured cap.
+    let mut stats_client =
+        Client::connect(addr).unwrap_or_else(|e| fail(&format!("stats connect: {e}")));
+    stats_client.set_timeout(Some(Duration::from_secs(30))).ok();
+    let stats = match stats_client.call_retry(&msg("stats", &[]), &RetryPolicy::default()) {
+        Ok(r) if r.get("ok").and_then(Json::as_bool) == Some(true) => r,
+        Ok(r) => fail(&format!("stats answered {}", r.dump())),
+        Err(e) => fail(&format!("stats: {e}")),
+    };
+    let queue_cap = stats
+        .get("config")
+        .and_then(|c| c.get("queue_cap"))
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| fail("stats carry no config.queue_cap"));
+    if let Some(ops) = stats.get("ops").and_then(Json::as_arr) {
+        for op in ops {
+            let depth = op.get("queue_depth").and_then(Json::as_usize).unwrap_or(0);
+            if depth > queue_cap {
+                fail(&format!("queue depth {depth} exceeds configured cap {queue_cap}"));
+            }
+        }
+    }
+    stats_client.close();
+
+    if report.open_failures > 0 {
+        fail(&format!("{} client(s) never opened the operator", report.open_failures));
+    }
+    if report.hung > 0 {
+        fail(&format!("{} request(s) hung past the client timeout", report.hung));
+    }
+    if report.transport_failures > 0 {
+        fail(&format!("{} request(s) died in transport after retries", report.transport_failures));
+    }
+    let max_error_rate: f64 = args.get("max-error-rate", 0.5);
+    if report.error_rate() > max_error_rate {
+        fail(&format!("error rate {:.3} exceeds budget {max_error_rate:.3}", report.error_rate()));
+    }
+    println!("serve-soak: OK (queue depth within cap {queue_cap})");
 }

@@ -16,9 +16,33 @@
 //! concurrency. A batch that drains to a single column takes the
 //! single-request fast path (`mvm`, no packing) so an idle tenant pays
 //! only the window, never a copy.
+//!
+//! ## Reliability contract
+//!
+//! Every admitted request gets exactly one answer — a result column or
+//! a structured [`BatchError`] — never a dangling channel:
+//!
+//! * **Bounded admission.** The queue holds at most
+//!   [`BatchConfig::max_queue`] requests; beyond that, [`MicroBatcher::submit`]
+//!   sheds synchronously with [`BatchError::Overloaded`] and a
+//!   `retry_after_ms` hint derived from the observed apply time.
+//!   In-flight columns are bounded separately by `max_columns` (the
+//!   worker executes one batch at a time), so total committed memory is
+//!   `(max_queue + max_columns) × n` weights.
+//! * **Deadlines.** A request may carry a deadline; the worker drops
+//!   expired requests *before* packing and answers them with
+//!   [`BatchError::DeadlineExceeded`] — deadline granularity is the
+//!   gather window, since a drained batch runs to completion.
+//! * **Panic isolation.** The fused apply runs under `catch_unwind`:
+//!   one poisoned batch answers every member with
+//!   [`BatchError::WorkerPanic`] (message preserved) and the worker
+//!   thread survives to serve the next batch.
 
+use crate::serve::faults::{panic_message, Faults};
 use crate::session::{OpHandle, SessionCore};
 use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -42,6 +66,9 @@ pub struct BatchConfig {
     /// request, letting near-simultaneous requests coalesce. Zero
     /// disables gathering (each drain takes only what is already queued).
     pub gather_window: Duration,
+    /// Queue-depth cap: requests beyond this many pending are shed
+    /// with [`BatchError::Overloaded`] instead of growing memory.
+    pub max_queue: usize,
 }
 
 impl Default for BatchConfig {
@@ -49,14 +76,93 @@ impl Default for BatchConfig {
         // 32 columns ≈ the point where the fused apply's per-column cost
         // dominates the shared traversal; 1 ms is invisible next to a
         // multi-ms apply but wide enough to capture a concurrent burst.
-        BatchConfig { max_columns: 32, gather_window: Duration::from_millis(1) }
+        // 256 queued requests ≈ 8 full batches of head-of-line wait —
+        // beyond that, shedding beats queueing.
+        BatchConfig {
+            max_columns: 32,
+            gather_window: Duration::from_millis(1),
+            max_queue: 256,
+        }
     }
 }
 
-/// Counters describing how well batching is working.
+/// Structured failure for a batched request. Everything a client needs
+/// to react — back off, retry elsewhere, or give up — without parsing
+/// prose.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BatchError {
+    /// The queue is at capacity; the request was shed at admission.
+    Overloaded {
+        /// Pending requests at the moment of shedding.
+        queue_depth: usize,
+        /// Estimated wait (ms) for the backlog to clear.
+        retry_after_ms: u64,
+    },
+    /// The request's deadline expired before it reached an apply.
+    DeadlineExceeded {
+        /// How long the request sat queued before being dropped (ms).
+        waited_ms: u64,
+    },
+    /// The fused apply panicked; every member of the batch gets this.
+    WorkerPanic(String),
+    /// The batcher is shutting down.
+    Shutdown,
+}
+
+impl BatchError {
+    /// Stable machine-readable kind, used as the wire-level `error`
+    /// field.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            BatchError::Overloaded { .. } => "overloaded",
+            BatchError::DeadlineExceeded { .. } => "deadline_exceeded",
+            BatchError::WorkerPanic(_) => "worker_panic",
+            BatchError::Shutdown => "shutting_down",
+        }
+    }
+}
+
+impl fmt::Display for BatchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BatchError::Overloaded { queue_depth, retry_after_ms } => {
+                write!(f, "overloaded: {queue_depth} queued, retry in ~{retry_after_ms} ms")
+            }
+            BatchError::DeadlineExceeded { waited_ms } => {
+                write!(f, "deadline exceeded after {waited_ms} ms queued")
+            }
+            BatchError::WorkerPanic(msg) => write!(f, "worker panic: {msg}"),
+            BatchError::Shutdown => write!(f, "batcher shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for BatchError {}
+
+/// One MVM request: the weight vector plus reliability metadata.
+#[derive(Clone, Debug)]
+pub struct MvmRequest {
+    /// Weight vector (`len == num_sources`).
+    pub w: Vec<f64>,
+    /// Drop the request unanswered-by-an-apply if still queued past
+    /// this instant.
+    pub deadline: Option<Instant>,
+    /// Chaos hook: panic the worker on this request's batch (honored
+    /// only when the batcher's fault facility has `inject=1`).
+    pub inject_panic: bool,
+}
+
+impl MvmRequest {
+    /// A plain request: no deadline, no chaos.
+    pub fn new(w: Vec<f64>) -> MvmRequest {
+        MvmRequest { w, deadline: None, inject_panic: false }
+    }
+}
+
+/// Counters describing how well batching — and shedding — is working.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BatcherStats {
-    /// MVM requests submitted.
+    /// MVM requests admitted to the queue.
     pub requests: u64,
     /// Apply passes executed (fast-path singles + batched).
     pub applies: u64,
@@ -66,6 +172,15 @@ pub struct BatcherStats {
     pub batched_columns: u64,
     /// Largest single batch seen.
     pub max_batch_columns: u64,
+    /// Requests shed at admission because the queue was full.
+    pub shed_overload: u64,
+    /// Requests dropped at drain because their deadline had expired.
+    pub expired_deadline: u64,
+    /// Fused applies that panicked (each answered its whole batch with
+    /// a structured error; the worker survived).
+    pub worker_panics: u64,
+    /// Requests pending at snapshot time (gauge, not a counter).
+    pub queue_depth: u64,
 }
 
 impl BatcherStats {
@@ -79,11 +194,14 @@ impl BatcherStats {
     }
 }
 
-/// One queued request: its weight vector and the channel its result
-/// column goes back on.
+/// One queued request: payload, reliability metadata, and the channel
+/// its answer goes back on.
 struct Pending {
     w: Vec<f64>,
-    tx: mpsc::Sender<Vec<f64>>,
+    deadline: Option<Instant>,
+    enqueued: Instant,
+    inject_panic: bool,
+    tx: mpsc::Sender<Result<Vec<f64>, BatchError>>,
 }
 
 struct Queue {
@@ -95,6 +213,7 @@ struct Inner {
     core: Arc<SessionCore>,
     op: OpHandle,
     cfg: BatchConfig,
+    faults: Arc<Faults>,
     queue: Mutex<Queue>,
     cv: Condvar,
     requests: AtomicU64,
@@ -102,6 +221,23 @@ struct Inner {
     batched_applies: AtomicU64,
     batched_columns: AtomicU64,
     max_batch_columns: AtomicU64,
+    shed_overload: AtomicU64,
+    expired_deadline: AtomicU64,
+    worker_panics: AtomicU64,
+    /// EWMA of apply wall time (ns); written only by the worker.
+    ewma_apply_nanos: AtomicU64,
+}
+
+impl Inner {
+    /// Estimated time for `queue_depth` pending requests to clear, for
+    /// the `retry_after_ms` hint: batches ahead × (observed apply time
+    /// + gather window). Never zero — a zero hint reads as "hammer me".
+    fn retry_after_ms(&self, queue_depth: usize) -> u64 {
+        let ewma = Duration::from_nanos(self.ewma_apply_nanos.load(Ordering::Relaxed));
+        let per_batch = ewma + self.cfg.gather_window;
+        let batches_ahead = (queue_depth / self.cfg.max_columns + 1) as u32;
+        ((per_batch * batches_ahead).as_millis() as u64).max(1)
+    }
 }
 
 /// Per-operator micro-batching engine: a request queue plus one worker
@@ -113,13 +249,30 @@ pub struct MicroBatcher {
 }
 
 impl MicroBatcher {
-    /// Spawn the worker for `op`, executing through `core`.
+    /// Spawn the worker for `op`, executing through `core`, with fault
+    /// injection disabled.
     pub fn new(core: Arc<SessionCore>, op: OpHandle, cfg: BatchConfig) -> MicroBatcher {
-        let cfg = BatchConfig { max_columns: cfg.max_columns.max(1), ..cfg };
+        MicroBatcher::with_faults(core, op, cfg, Arc::new(Faults::disabled()))
+    }
+
+    /// Spawn the worker with a shared fault-injection facility (the
+    /// server hands every batcher the process-wide one).
+    pub fn with_faults(
+        core: Arc<SessionCore>,
+        op: OpHandle,
+        cfg: BatchConfig,
+        faults: Arc<Faults>,
+    ) -> MicroBatcher {
+        let cfg = BatchConfig {
+            max_columns: cfg.max_columns.max(1),
+            max_queue: cfg.max_queue.max(1),
+            ..cfg
+        };
         let inner = Arc::new(Inner {
             core,
             op,
             cfg,
+            faults,
             queue: Mutex::new(Queue { pending: VecDeque::new(), shutdown: false }),
             cv: Condvar::new(),
             requests: AtomicU64::new(0),
@@ -127,6 +280,10 @@ impl MicroBatcher {
             batched_applies: AtomicU64::new(0),
             batched_columns: AtomicU64::new(0),
             max_batch_columns: AtomicU64::new(0),
+            shed_overload: AtomicU64::new(0),
+            expired_deadline: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            ewma_apply_nanos: AtomicU64::new(0),
         });
         let worker_inner = Arc::clone(&inner);
         let worker = thread::Builder::new()
@@ -141,23 +298,57 @@ impl MicroBatcher {
         &self.inner.op
     }
 
-    /// Enqueue one MVM (`w.len()` must equal the operator's source
-    /// count) and return the channel its result will arrive on.
-    pub fn submit(&self, w: Vec<f64>) -> mpsc::Receiver<Vec<f64>> {
-        assert_eq!(w.len(), self.inner.op.num_sources(), "weight vector length");
+    /// Enqueue one MVM (`req.w.len()` must equal the operator's source
+    /// count) and return the channel its answer will arrive on. Sheds
+    /// synchronously — [`BatchError::Overloaded`] when the queue is at
+    /// capacity, [`BatchError::Shutdown`] after shutdown — so a caller
+    /// holding the error never waits.
+    pub fn submit(
+        &self,
+        req: MvmRequest,
+    ) -> Result<mpsc::Receiver<Result<Vec<f64>, BatchError>>, BatchError> {
+        assert_eq!(req.w.len(), self.inner.op.num_sources(), "weight vector length");
         let (tx, rx) = mpsc::channel();
         {
             let mut q = lock(&self.inner.queue);
-            assert!(!q.shutdown, "submit after MicroBatcher shutdown");
-            q.pending.push_back(Pending { w, tx });
+            if q.shutdown {
+                return Err(BatchError::Shutdown);
+            }
+            let depth = q.pending.len();
+            if depth >= self.inner.cfg.max_queue {
+                self.inner.shed_overload.fetch_add(1, Ordering::Relaxed);
+                return Err(BatchError::Overloaded {
+                    queue_depth: depth,
+                    retry_after_ms: self.inner.retry_after_ms(depth),
+                });
+            }
+            self.inner.requests.fetch_add(1, Ordering::Relaxed);
+            q.pending.push_back(Pending {
+                w: req.w,
+                deadline: req.deadline,
+                enqueued: Instant::now(),
+                inject_panic: req.inject_panic,
+                tx,
+            });
         }
         self.inner.cv.notify_all();
-        rx
+        Ok(rx)
     }
 
-    /// Blocking MVM through the batch queue.
-    pub fn mvm(&self, w: &[f64]) -> Vec<f64> {
-        self.submit(w.to_vec()).recv().expect("batcher worker answered")
+    /// Blocking request through the batch queue.
+    pub fn request(&self, req: MvmRequest) -> Result<Vec<f64>, BatchError> {
+        let rx = self.submit(req)?;
+        rx.recv().unwrap_or(Err(BatchError::Shutdown))
+    }
+
+    /// Blocking MVM with no deadline — the common case.
+    pub fn mvm(&self, w: &[f64]) -> Result<Vec<f64>, BatchError> {
+        self.request(MvmRequest::new(w.to_vec()))
+    }
+
+    /// Requests pending right now (the admission gauge).
+    pub fn queue_depth(&self) -> usize {
+        lock(&self.inner.queue).pending.len()
     }
 
     /// Snapshot of the batching counters.
@@ -169,6 +360,10 @@ impl MicroBatcher {
             batched_applies: inner.batched_applies.load(Ordering::Relaxed),
             batched_columns: inner.batched_columns.load(Ordering::Relaxed),
             max_batch_columns: inner.max_batch_columns.load(Ordering::Relaxed),
+            shed_overload: inner.shed_overload.load(Ordering::Relaxed),
+            expired_deadline: inner.expired_deadline.load(Ordering::Relaxed),
+            worker_panics: inner.worker_panics.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth() as u64,
         }
     }
 
@@ -226,34 +421,79 @@ fn worker_loop(inner: &Inner) {
             // Lock released here: the apply runs with the queue open, so
             // new requests keep landing while this batch computes.
         };
-        execute(inner, batch);
+        // Expired requests are dropped before packing: a late answer a
+        // client has already abandoned is wasted columns for everyone
+        // else in the batch.
+        let now = Instant::now();
+        let (live, expired): (Vec<Pending>, Vec<Pending>) =
+            batch.into_iter().partition(|p| match p.deadline {
+                Some(d) => d > now,
+                None => true,
+            });
+        for p in expired {
+            inner.expired_deadline.fetch_add(1, Ordering::Relaxed);
+            let waited_ms = p.enqueued.elapsed().as_millis() as u64;
+            let _ = p.tx.send(Err(BatchError::DeadlineExceeded { waited_ms }));
+        }
+        if !live.is_empty() {
+            execute(inner, live);
+        }
     }
 }
 
 /// Run one drained batch: fast-path a single column, otherwise pack
-/// column-major, apply once, scatter the result columns.
+/// column-major, apply once, scatter the result columns. The apply
+/// (and the fault hooks inside it) runs under `catch_unwind` so a
+/// panic answers the whole batch with a structured error instead of
+/// killing the worker and stranding the senders.
 fn execute(inner: &Inner, batch: Vec<Pending>) {
     let m = batch.len();
-    inner.requests.fetch_add(m as u64, Ordering::Relaxed);
     inner.applies.fetch_add(1, Ordering::Relaxed);
     inner.max_batch_columns.fetch_max(m as u64, Ordering::Relaxed);
-    if m == 1 {
-        let only = &batch[0];
-        let z = inner.core.mvm(&inner.op, &only.w);
-        let _ = only.tx.send(z); // receiver may have given up; fine
-        return;
+    if m > 1 {
+        inner.batched_applies.fetch_add(1, Ordering::Relaxed);
+        inner.batched_columns.fetch_add(m as u64, Ordering::Relaxed);
     }
-    inner.batched_applies.fetch_add(1, Ordering::Relaxed);
-    inner.batched_columns.fetch_add(m as u64, Ordering::Relaxed);
     let n = inner.op.num_sources();
     let t = inner.op.num_targets();
-    let mut packed = vec![0.0f64; n * m];
-    for (c, pending) in batch.iter().enumerate() {
-        packed[c * n..(c + 1) * n].copy_from_slice(&pending.w);
-    }
-    let zb = inner.core.mvm_batch(&inner.op, &packed, m);
-    for (c, pending) in batch.iter().enumerate() {
-        let _ = pending.tx.send(zb[c * t..(c + 1) * t].to_vec());
+    let inject = batch.iter().any(|p| p.inject_panic) && inner.faults.inject_enabled();
+    let started = Instant::now();
+    let applied = catch_unwind(AssertUnwindSafe(|| {
+        if inject {
+            inner.faults.injected_panic();
+        }
+        inner.faults.before_apply();
+        if m == 1 {
+            inner.core.mvm(&inner.op, &batch[0].w)
+        } else {
+            let mut packed = vec![0.0f64; n * m];
+            for (c, pending) in batch.iter().enumerate() {
+                packed[c * n..(c + 1) * n].copy_from_slice(&pending.w);
+            }
+            inner.core.mvm_batch(&inner.op, &packed, m)
+        }
+    }));
+    match applied {
+        Ok(z) => {
+            let nanos = started.elapsed().as_nanos() as u64;
+            let old = inner.ewma_apply_nanos.load(Ordering::Relaxed);
+            let blended = if old == 0 { nanos } else { (3 * old + nanos) / 4 };
+            inner.ewma_apply_nanos.store(blended, Ordering::Relaxed);
+            if m == 1 {
+                let _ = batch[0].tx.send(Ok(z)); // receiver may have given up; fine
+            } else {
+                for (c, pending) in batch.iter().enumerate() {
+                    let _ = pending.tx.send(Ok(z[c * t..(c + 1) * t].to_vec()));
+                }
+            }
+        }
+        Err(payload) => {
+            inner.worker_panics.fetch_add(1, Ordering::Relaxed);
+            let msg = panic_message(payload.as_ref());
+            for pending in &batch {
+                let _ = pending.tx.send(Err(BatchError::WorkerPanic(msg.clone())));
+            }
+        }
     }
 }
 
@@ -263,6 +503,7 @@ mod tests {
     use crate::kernels::Family;
     use crate::points::Points;
     use crate::rng::Pcg32;
+    use crate::serve::faults::FaultConfig;
     use crate::session::Session;
     use std::sync::Barrier;
 
@@ -282,9 +523,9 @@ mod tests {
         let batcher = MicroBatcher::new(
             Arc::clone(&core),
             h,
-            BatchConfig { max_columns: 8, gather_window: Duration::ZERO },
+            BatchConfig { max_columns: 8, gather_window: Duration::ZERO, ..BatchConfig::default() },
         );
-        let got = batcher.mvm(&w);
+        let got = batcher.mvm(&w).expect("healthy batcher answers");
         assert_eq!(got, want, "fast path is the same code path as mvm");
         let s = batcher.stats();
         assert_eq!((s.requests, s.applies, s.batched_applies), (1, 1, 0));
@@ -298,7 +539,11 @@ mod tests {
         let want: Vec<Vec<f64>> = weights.iter().map(|w| core.mvm(&h, w)).collect();
         // A wide window so every barrier-released request lands in one
         // gather; keeps the test deterministic-ish on slow machines.
-        let cfg = BatchConfig { max_columns: CLIENTS, gather_window: Duration::from_millis(200) };
+        let cfg = BatchConfig {
+            max_columns: CLIENTS,
+            gather_window: Duration::from_millis(200),
+            ..BatchConfig::default()
+        };
         let batcher = MicroBatcher::new(Arc::clone(&core), h, cfg);
         let barrier = Barrier::new(CLIENTS);
         let got: Vec<Vec<f64>> = std::thread::scope(|scope| {
@@ -309,7 +554,7 @@ mod tests {
                     let barrier = &barrier;
                     scope.spawn(move || {
                         barrier.wait();
-                        batcher.mvm(w)
+                        batcher.mvm(w).expect("healthy batcher answers")
                     })
                 })
                 .collect();
@@ -338,12 +583,19 @@ mod tests {
     #[test]
     fn column_budget_caps_batch_size() {
         let (core, h, _pts, mut rng) = setup(200);
-        let cfg = BatchConfig { max_columns: 3, gather_window: Duration::from_millis(100) };
+        let cfg = BatchConfig {
+            max_columns: 3,
+            gather_window: Duration::from_millis(100),
+            ..BatchConfig::default()
+        };
         let batcher = MicroBatcher::new(Arc::clone(&core), h, cfg);
         let weights: Vec<Vec<f64>> = (0..7).map(|_| rng.normal_vec(200)).collect();
-        let rxs: Vec<_> = weights.iter().map(|w| batcher.submit(w.clone())).collect();
+        let rxs: Vec<_> = weights
+            .iter()
+            .map(|w| batcher.submit(MvmRequest::new(w.clone())).expect("admitted"))
+            .collect();
         for (rx, w) in rxs.into_iter().zip(&weights) {
-            let got = rx.recv().unwrap();
+            let got = rx.recv().unwrap().expect("answered");
             let want = core.mvm(batcher.op(), w);
             assert_eq!(got.len(), want.len());
         }
@@ -357,14 +609,90 @@ mod tests {
     fn shutdown_drains_pending_requests() {
         let (core, h, _pts, mut rng) = setup(200);
         // A long window: shutdown must cut it short, not wait it out.
-        let cfg = BatchConfig { max_columns: 16, gather_window: Duration::from_secs(5) };
+        let cfg = BatchConfig {
+            max_columns: 16,
+            gather_window: Duration::from_secs(5),
+            ..BatchConfig::default()
+        };
         let batcher = MicroBatcher::new(Arc::clone(&core), h, cfg);
-        let rxs: Vec<_> = (0..4).map(|_| batcher.submit(rng.normal_vec(200))).collect();
+        let rxs: Vec<_> = (0..4)
+            .map(|_| batcher.submit(MvmRequest::new(rng.normal_vec(200))).expect("admitted"))
+            .collect();
         let start = Instant::now();
         batcher.shutdown();
         assert!(start.elapsed() < Duration::from_secs(5), "shutdown preempts the window");
         for rx in rxs {
-            assert_eq!(rx.recv().unwrap().len(), 200, "drained, not dropped");
+            assert_eq!(rx.recv().unwrap().expect("drained").len(), 200, "drained, not dropped");
         }
+        // Post-shutdown submissions are refused, not queued forever.
+        let late = batcher.submit(MvmRequest::new(rng.normal_vec(200)));
+        assert!(matches!(late, Err(BatchError::Shutdown)));
+    }
+
+    #[test]
+    fn full_queue_sheds_with_retry_hint() {
+        let (core, h, _pts, mut rng) = setup(200);
+        // Inject enough latency that the worker is busy while we flood;
+        // max_queue 2 means the third-through-fifth submissions shed.
+        let faults = Arc::new(Faults::new(FaultConfig {
+            latency: Duration::from_millis(300),
+            ..FaultConfig::disabled()
+        }));
+        let cfg = BatchConfig {
+            max_columns: 1,
+            gather_window: Duration::ZERO,
+            max_queue: 2,
+        };
+        let batcher = MicroBatcher::with_faults(Arc::clone(&core), h, cfg, faults);
+        // First request occupies the worker (300 ms of injected latency).
+        let first = batcher.submit(MvmRequest::new(rng.normal_vec(200))).expect("admitted");
+        thread::sleep(Duration::from_millis(50)); // let the worker pick it up
+        let mut shed = 0;
+        let mut admitted = Vec::new();
+        for _ in 0..5 {
+            match batcher.submit(MvmRequest::new(rng.normal_vec(200))) {
+                Ok(rx) => admitted.push(rx),
+                Err(BatchError::Overloaded { queue_depth, retry_after_ms }) => {
+                    shed += 1;
+                    assert!(queue_depth >= 2, "shed at depth {queue_depth}");
+                    assert!(retry_after_ms >= 1, "retry hint must be positive");
+                }
+                Err(other) => panic!("unexpected error {other}"),
+            }
+        }
+        assert!(shed >= 3, "queue cap of 2 must shed most of 5 extra submissions, shed {shed}");
+        assert!(batcher.stats().shed_overload >= shed as u64);
+        // Admitted requests still complete.
+        assert!(first.recv().unwrap().is_ok());
+        for rx in admitted {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+    }
+
+    #[test]
+    fn expired_deadlines_are_dropped_before_packing() {
+        let (core, h, _pts, mut rng) = setup(200);
+        let cfg = BatchConfig {
+            max_columns: 8,
+            gather_window: Duration::from_millis(120),
+            ..BatchConfig::default()
+        };
+        let batcher = MicroBatcher::new(Arc::clone(&core), h, cfg);
+        // An already-expired deadline: by the time the gather window
+        // closes it is long past.
+        let expired = MvmRequest {
+            w: rng.normal_vec(200),
+            deadline: Some(Instant::now()),
+            inject_panic: false,
+        };
+        let dead_rx = batcher.submit(expired).expect("admitted");
+        let live_rx = batcher.submit(MvmRequest::new(rng.normal_vec(200))).expect("admitted");
+        match dead_rx.recv().unwrap() {
+            Err(BatchError::DeadlineExceeded { .. }) => {}
+            other => panic!("expired request must get DeadlineExceeded, got {other:?}"),
+        }
+        assert!(live_rx.recv().unwrap().is_ok(), "live request unaffected");
+        let s = batcher.stats();
+        assert_eq!(s.expired_deadline, 1);
     }
 }

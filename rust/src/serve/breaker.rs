@@ -1,0 +1,303 @@
+//! Per-operator circuit breaker.
+//!
+//! When an operator's applies start failing — a poisoned dataset, a
+//! backend gone sideways, an injected chaos fault — the worst response
+//! is to keep hammering it: every request pays the full latency of a
+//! doomed apply, and a panicking worker churns. The breaker converts a
+//! run of consecutive failures into *fast* rejections with a retry
+//! hint, then probes its way back:
+//!
+//! ```text
+//!            failures >= threshold              cooldown elapsed
+//!  Closed ───────────────────────────▶ Open ───────────────────────▶ HalfOpen
+//!    ▲                                  ▲                               │
+//!    │            probe succeeds        │        probe fails            │
+//!    └──────────────────────────────────┴───────────────────────────────┘
+//! ```
+//!
+//! * **Closed** — requests flow; each success resets the consecutive-
+//!   failure count, each failure bumps it. At `failure_threshold` the
+//!   breaker trips to Open.
+//! * **Open** — requests are rejected immediately with the remaining
+//!   cooldown as `retry_after_ms`. After `cooldown`, the next request
+//!   is admitted as a probe and the breaker moves to HalfOpen.
+//! * **HalfOpen** — up to `half_open_probes` requests are in flight;
+//!   the first success closes the breaker, a failure re-opens it (and
+//!   restarts the cooldown).
+//!
+//! The state machine lives behind one mutex; trip/reject counters are
+//! atomics so `stats` snapshots don't contend with admissions.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Breaker tuning. Defaults trip after 5 consecutive failures and
+/// probe again after one second.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive failures that trip the breaker open.
+    pub failure_threshold: u32,
+    /// How long the breaker stays open before admitting a probe.
+    pub cooldown: Duration,
+    /// Concurrent probe requests admitted while half-open.
+    pub half_open_probes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            failure_threshold: 5,
+            cooldown: Duration::from_secs(1),
+            half_open_probes: 1,
+        }
+    }
+}
+
+/// The three breaker states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: requests flow.
+    Closed,
+    /// Tripped: requests are rejected until the cooldown elapses.
+    Open,
+    /// Probing: a bounded number of requests test the waters.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Stable lower-case name for wire-level `stats`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    state: BreakerState,
+    consecutive_failures: u32,
+    opened_at: Instant,
+    half_open_in_flight: u32,
+}
+
+/// Snapshot of a breaker for `stats`.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerSnapshot {
+    /// Current state.
+    pub state: BreakerState,
+    /// Consecutive failures observed while closed.
+    pub consecutive_failures: u32,
+    /// Times the breaker tripped open (including re-opens).
+    pub trips: u64,
+    /// Requests rejected while open or probe-saturated.
+    pub rejected: u64,
+}
+
+/// A consecutive-failure circuit breaker (see module docs).
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    inner: Mutex<Inner>,
+    trips: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl CircuitBreaker {
+    /// Build a breaker in the Closed state.
+    pub fn new(cfg: BreakerConfig) -> Self {
+        CircuitBreaker {
+            cfg,
+            inner: Mutex::new(Inner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                opened_at: Instant::now(),
+                half_open_in_flight: 0,
+            }),
+            trips: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// The configuration this breaker was built with.
+    pub fn config(&self) -> &BreakerConfig {
+        &self.cfg
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Ask to admit one request. `Ok(())` means proceed (and report the
+    /// outcome via [`CircuitBreaker::on_success`] /
+    /// [`CircuitBreaker::on_failure`]); `Err(retry_after_ms)` means the
+    /// request is rejected and the client should back off.
+    pub fn try_admit(&self) -> Result<(), u64> {
+        let mut inner = self.lock();
+        match inner.state {
+            BreakerState::Closed => Ok(()),
+            BreakerState::Open => {
+                let elapsed = inner.opened_at.elapsed();
+                if elapsed >= self.cfg.cooldown {
+                    inner.state = BreakerState::HalfOpen;
+                    inner.half_open_in_flight = 1;
+                    Ok(())
+                } else {
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                    let remaining = self.cfg.cooldown - elapsed;
+                    Err((remaining.as_millis() as u64).max(1))
+                }
+            }
+            BreakerState::HalfOpen => {
+                if inner.half_open_in_flight < self.cfg.half_open_probes {
+                    inner.half_open_in_flight += 1;
+                    Ok(())
+                } else {
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                    Err((self.cfg.cooldown.as_millis() as u64).max(1))
+                }
+            }
+        }
+    }
+
+    /// Report that an admitted request completed successfully. A
+    /// half-open probe success closes the breaker.
+    pub fn on_success(&self) {
+        let mut inner = self.lock();
+        match inner.state {
+            BreakerState::HalfOpen => {
+                inner.state = BreakerState::Closed;
+                inner.consecutive_failures = 0;
+                inner.half_open_in_flight = 0;
+            }
+            _ => inner.consecutive_failures = 0,
+        }
+    }
+
+    /// Report that an admitted request ended without a health signal —
+    /// shed at the queue, expired deadline — freeing a half-open probe
+    /// slot without closing or re-opening the breaker.
+    pub fn on_neutral(&self) {
+        let mut inner = self.lock();
+        if inner.state == BreakerState::HalfOpen && inner.half_open_in_flight > 0 {
+            inner.half_open_in_flight -= 1;
+        }
+    }
+
+    /// Report that an admitted request failed. Trips the breaker at
+    /// the threshold; a half-open probe failure re-opens immediately.
+    pub fn on_failure(&self) {
+        let mut inner = self.lock();
+        match inner.state {
+            BreakerState::Closed => {
+                inner.consecutive_failures += 1;
+                if inner.consecutive_failures >= self.cfg.failure_threshold {
+                    inner.state = BreakerState::Open;
+                    inner.opened_at = Instant::now();
+                    inner.half_open_in_flight = 0;
+                    self.trips.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            BreakerState::HalfOpen => {
+                inner.state = BreakerState::Open;
+                inner.opened_at = Instant::now();
+                inner.half_open_in_flight = 0;
+                self.trips.fetch_add(1, Ordering::Relaxed);
+            }
+            // A straggler failing after the trip changes nothing.
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Snapshot state and counters for `stats`.
+    pub fn snapshot(&self) -> BreakerSnapshot {
+        let inner = self.lock();
+        BreakerSnapshot {
+            state: inner.state,
+            consecutive_failures: inner.consecutive_failures,
+            trips: self.trips.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BreakerConfig {
+        BreakerConfig {
+            failure_threshold: 3,
+            cooldown: Duration::from_millis(40),
+            half_open_probes: 1,
+        }
+    }
+
+    #[test]
+    fn trips_after_consecutive_failures_and_rejects_with_hint() {
+        let breaker = CircuitBreaker::new(fast_cfg());
+        for _ in 0..3 {
+            breaker.try_admit().expect("closed breaker admits");
+            breaker.on_failure();
+        }
+        let snap = breaker.snapshot();
+        assert_eq!(snap.state, BreakerState::Open);
+        assert_eq!(snap.trips, 1);
+        let retry_after = breaker.try_admit().expect_err("open breaker rejects");
+        assert!(retry_after >= 1, "retry hint must be positive, got {retry_after}");
+        assert_eq!(breaker.snapshot().rejected, 1);
+    }
+
+    #[test]
+    fn success_resets_the_failure_streak() {
+        let breaker = CircuitBreaker::new(fast_cfg());
+        for _ in 0..2 {
+            breaker.try_admit().unwrap();
+            breaker.on_failure();
+        }
+        breaker.try_admit().unwrap();
+        breaker.on_success();
+        // Two more failures are again below the threshold of three.
+        for _ in 0..2 {
+            breaker.try_admit().unwrap();
+            breaker.on_failure();
+        }
+        assert_eq!(breaker.snapshot().state, BreakerState::Closed);
+    }
+
+    #[test]
+    fn half_open_probe_closes_on_success() {
+        let breaker = CircuitBreaker::new(fast_cfg());
+        for _ in 0..3 {
+            breaker.try_admit().unwrap();
+            breaker.on_failure();
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        breaker.try_admit().expect("cooldown elapsed: probe admitted");
+        assert_eq!(breaker.snapshot().state, BreakerState::HalfOpen);
+        // The probe budget is spent; a second request is rejected.
+        breaker.try_admit().expect_err("probe budget exhausted");
+        breaker.on_success();
+        assert_eq!(breaker.snapshot().state, BreakerState::Closed);
+        breaker.try_admit().expect("closed again");
+    }
+
+    #[test]
+    fn half_open_probe_reopens_on_failure() {
+        let breaker = CircuitBreaker::new(fast_cfg());
+        for _ in 0..3 {
+            breaker.try_admit().unwrap();
+            breaker.on_failure();
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        breaker.try_admit().expect("probe admitted");
+        breaker.on_failure();
+        let snap = breaker.snapshot();
+        assert_eq!(snap.state, BreakerState::Open);
+        assert_eq!(snap.trips, 2, "re-open counts as a trip");
+        breaker.try_admit().expect_err("open again");
+    }
+}

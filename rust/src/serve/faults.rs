@@ -1,0 +1,338 @@
+//! Runtime-configured fault injection for the serving stack.
+//!
+//! Production serving code is exercised by failure, not just by load:
+//! a panic inside a fused apply, a connection that dies mid-frame, a
+//! response corrupted on the wire. This module makes those failures a
+//! *configuration* rather than an accident, so the chaos tests, the
+//! soak harness, and the CI chaos smoke can drive the same binary the
+//! happy-path tests drive and assert the reliability contract holds:
+//! every request still gets a framed answer, the batcher worker
+//! survives, the breaker trips and recovers.
+//!
+//! Faults are specified as a compact spec string — from the
+//! `FKT_FAULTS` environment variable or the `--faults` CLI flag:
+//!
+//! ```text
+//! panic=0.05,latency_ms=20,drop=0.01,corrupt=0.01,inject=1,seed=7
+//! ```
+//!
+//! * `panic=P` — each apply (batched mvm or solve) panics with
+//!   probability `P` *before* touching the operator.
+//! * `latency_ms=L` — each apply sleeps `L` ms first (slow-backend
+//!   simulation; also what makes overload reproducible in tests).
+//! * `drop=P` — each request has probability `P` of the server
+//!   hanging up without answering (client sees EOF, must retry).
+//! * `corrupt=P` — each response frame has probability `P` of being
+//!   mangled on the wire (client sees a clean `bad frame` error, then
+//!   the connection closes).
+//! * `inject=1` — honor per-request `"inject":"panic"` fields, so a
+//!   probe can trip a breaker *deterministically* instead of waiting
+//!   on the dice.
+//! * `seed=N` — seed for the fault dice (deterministic chaos).
+//!
+//! The facility is shared across threads behind an `Arc` and used
+//! through `&self`, so the dice are a lock-free splitmix64 stream on
+//! an atomic (the crate's [`Pcg32`](crate::rng::Pcg32) needs `&mut`).
+//! A disabled facility costs one branch per hook.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Parsed fault-injection configuration. All-zero means disabled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Probability in `[0, 1]` that an apply panics.
+    pub panic_p: f64,
+    /// Latency injected before every apply.
+    pub latency: Duration,
+    /// Probability that a request's connection is dropped unanswered.
+    pub drop_p: f64,
+    /// Probability that a response frame is corrupted on the wire.
+    pub corrupt_p: f64,
+    /// Honor per-request `"inject":"panic"` chaos fields.
+    pub inject: bool,
+    /// Seed for the fault dice.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            panic_p: 0.0,
+            latency: Duration::ZERO,
+            drop_p: 0.0,
+            corrupt_p: 0.0,
+            inject: false,
+            seed: 0x5eed_f417,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// The all-zero configuration: every hook is a no-op.
+    pub fn disabled() -> Self {
+        FaultConfig::default()
+    }
+
+    /// True when any fault can fire (or per-request injection is on).
+    pub fn is_active(&self) -> bool {
+        self.panic_p > 0.0
+            || self.latency > Duration::ZERO
+            || self.drop_p > 0.0
+            || self.corrupt_p > 0.0
+            || self.inject
+    }
+
+    /// Parse a `key=value,key=value` spec string. Empty input yields
+    /// the disabled configuration; unknown keys and unparsable values
+    /// are errors (a chaos run with a typo'd spec should fail loudly,
+    /// not run clean).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut cfg = FaultConfig::disabled();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec `{part}`: expected key=value"))?;
+            let bad = |_| format!("fault spec `{part}`: bad value `{value}`");
+            match key.trim() {
+                "panic" => cfg.panic_p = value.parse::<f64>().map_err(bad)?,
+                "latency_ms" => {
+                    cfg.latency = Duration::from_millis(value.parse::<u64>().map_err(bad)?)
+                }
+                "drop" => cfg.drop_p = value.parse::<f64>().map_err(bad)?,
+                "corrupt" => cfg.corrupt_p = value.parse::<f64>().map_err(bad)?,
+                "inject" => cfg.inject = value.parse::<u8>().map_err(bad)? != 0,
+                "seed" => cfg.seed = value.parse::<u64>().map_err(bad)?,
+                other => return Err(format!("fault spec: unknown key `{other}`")),
+            }
+        }
+        let probs = [("panic", cfg.panic_p), ("drop", cfg.drop_p), ("corrupt", cfg.corrupt_p)];
+        for (name, p) in probs {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("fault spec: {name}={p} outside [0, 1]"));
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Read the spec from the `FKT_FAULTS` environment variable.
+    /// Unset or empty means disabled.
+    pub fn from_env() -> Result<Self, String> {
+        match std::env::var("FKT_FAULTS") {
+            Ok(spec) => FaultConfig::parse(&spec),
+            Err(_) => Ok(FaultConfig::disabled()),
+        }
+    }
+}
+
+/// Counters for every fault actually fired, snapshot into `stats`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultStats {
+    /// Apply panics fired (probabilistic + request-injected).
+    pub injected_panics: u64,
+    /// Applies that slept the injected latency.
+    pub injected_latency: u64,
+    /// Connections dropped without a response.
+    pub dropped_connections: u64,
+    /// Response frames corrupted on the wire.
+    pub corrupted_frames: u64,
+}
+
+/// The shared fault-injection facility: configuration plus lock-free
+/// dice and fire counters. Cheap to consult when disabled.
+#[derive(Debug)]
+pub struct Faults {
+    cfg: FaultConfig,
+    dice: AtomicU64,
+    injected_panics: AtomicU64,
+    injected_latency: AtomicU64,
+    dropped_connections: AtomicU64,
+    corrupted_frames: AtomicU64,
+}
+
+impl Faults {
+    /// Build a facility from a parsed configuration.
+    pub fn new(cfg: FaultConfig) -> Self {
+        Faults {
+            cfg,
+            dice: AtomicU64::new(cfg.seed),
+            injected_panics: AtomicU64::new(0),
+            injected_latency: AtomicU64::new(0),
+            dropped_connections: AtomicU64::new(0),
+            corrupted_frames: AtomicU64::new(0),
+        }
+    }
+
+    /// A facility with every hook disabled.
+    pub fn disabled() -> Self {
+        Faults::new(FaultConfig::disabled())
+    }
+
+    /// The configuration this facility was built with.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// True when per-request `"inject"` fields should be honored.
+    pub fn inject_enabled(&self) -> bool {
+        self.cfg.inject
+    }
+
+    /// One splitmix64 step on the shared atomic state. Each caller
+    /// gets an independent draw; contention is a single `fetch_add`.
+    fn next_u64(&self) -> u64 {
+        let s = self
+            .dice
+            .fetch_add(0x9e37_79b9_7f4a_7c15, Ordering::Relaxed)
+            .wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = s;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// A uniform draw in `[0, 1)`.
+    fn roll(&self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    fn fires(&self, p: f64) -> bool {
+        p > 0.0 && self.roll() < p
+    }
+
+    /// Hook placed inside the apply path (batcher worker, solve verb),
+    /// *inside* the `catch_unwind` that the reliability layer wraps
+    /// around it: sleeps the injected latency, then panics with the
+    /// configured probability.
+    pub fn before_apply(&self) {
+        if self.cfg.latency > Duration::ZERO {
+            self.injected_latency.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.cfg.latency);
+        }
+        if self.fires(self.cfg.panic_p) {
+            self.injected_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("injected fault: apply panic");
+        }
+    }
+
+    /// Record and fire a request-tagged (`"inject":"panic"`) panic.
+    /// Always fires; gate on [`Faults::inject_enabled`] first.
+    pub fn injected_panic(&self) -> ! {
+        self.injected_panics.fetch_add(1, Ordering::Relaxed);
+        panic!("injected fault: request-tagged panic");
+    }
+
+    /// Should this request's connection be dropped without an answer?
+    pub fn drop_connection(&self) -> bool {
+        let fire = self.fires(self.cfg.drop_p);
+        if fire {
+            self.dropped_connections.fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// Maybe corrupt an outbound frame in place. The length prefix and
+    /// terminator are preserved (the stream stays in sync); a run of
+    /// body bytes is overwritten with `0xFE`, which is invalid UTF-8,
+    /// so the peer gets a clean `bad frame` error rather than a
+    /// plausible-but-wrong payload. Returns true when the frame was
+    /// mangled — the caller should hang up afterwards, as real
+    /// corruption rarely leaves a healthy connection behind.
+    pub fn corrupt_frame(&self, frame: &mut [u8]) -> bool {
+        if !self.fires(self.cfg.corrupt_p) {
+            return false;
+        }
+        let body_start = match frame.iter().position(|&b| b == b'\n') {
+            Some(i) => i + 1,
+            None => return false,
+        };
+        let body_end = frame.len().saturating_sub(1); // keep the trailing newline
+        if body_start >= body_end {
+            return false;
+        }
+        let mid = body_start + (body_end - body_start) / 2;
+        let run = (body_end - mid).min(8);
+        for b in &mut frame[mid..mid + run] {
+            *b = 0xfe;
+        }
+        self.corrupted_frames.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Snapshot the fire counters.
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            injected_panics: self.injected_panics.load(Ordering::Relaxed),
+            injected_latency: self.injected_latency.load(Ordering::Relaxed),
+            dropped_connections: self.dropped_connections.load(Ordering::Relaxed),
+            corrupted_frames: self.corrupted_frames.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Render a `catch_unwind` payload as text (panic messages are
+/// `&str` or `String` in practice; anything else gets a placeholder).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_key() {
+        let spec = "panic=0.05, latency_ms=20, drop=0.01, corrupt=0.02, inject=1, seed=7";
+        let cfg = FaultConfig::parse(spec).expect("parse");
+        assert_eq!(cfg.panic_p, 0.05);
+        assert_eq!(cfg.latency, Duration::from_millis(20));
+        assert_eq!(cfg.drop_p, 0.01);
+        assert_eq!(cfg.corrupt_p, 0.02);
+        assert!(cfg.inject);
+        assert_eq!(cfg.seed, 7);
+        assert!(cfg.is_active());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultConfig::parse("panic").is_err(), "missing =");
+        assert!(FaultConfig::parse("panic=lots").is_err(), "non-numeric");
+        assert!(FaultConfig::parse("panic=1.5").is_err(), "probability > 1");
+        assert!(FaultConfig::parse("frobnicate=1").is_err(), "unknown key");
+        let empty = FaultConfig::parse("").expect("empty spec is disabled");
+        assert!(!empty.is_active());
+    }
+
+    #[test]
+    fn dice_respect_probabilities() {
+        let always = Faults::new(FaultConfig { drop_p: 1.0, ..FaultConfig::disabled() });
+        let never = Faults::disabled();
+        assert!(always.drop_connection());
+        assert!(!never.drop_connection());
+
+        // A 30% fault should fire roughly 30% of the time.
+        let biased = Faults::new(FaultConfig { drop_p: 0.3, ..FaultConfig::disabled() });
+        let fired = (0..10_000).filter(|_| biased.drop_connection()).count();
+        assert!((2_500..3_500).contains(&fired), "30% fault fired {fired}/10000 times");
+        assert_eq!(biased.stats().dropped_connections, fired as u64);
+    }
+
+    #[test]
+    fn corrupt_preserves_framing_but_breaks_the_body() {
+        let faults = Faults::new(FaultConfig { corrupt_p: 1.0, ..FaultConfig::disabled() });
+        let mut frame = b"14\n{\"ok\":true,1:}\n".to_vec();
+        let original = frame.clone();
+        assert!(faults.corrupt_frame(&mut frame));
+        assert_eq!(frame.len(), original.len(), "length preserved");
+        assert_eq!(&frame[..3], &original[..3], "length prefix preserved");
+        assert_eq!(*frame.last().unwrap(), b'\n', "terminator preserved");
+        assert!(frame.contains(&0xfe), "body mangled");
+        assert!(std::str::from_utf8(&frame).is_err(), "mangled body is invalid UTF-8");
+    }
+}

@@ -25,13 +25,42 @@
 //! Everything here is std-only: threads, mutexes, condvars, TCP. No
 //! async runtime, no serde — the protocol is small enough that a
 //! recursive-descent parser is the simpler dependency story.
+//!
+//! ## Reliability layer
+//!
+//! Serving at scale means serving through failure, so the stack carries
+//! an explicit reliability contract — every request gets exactly one
+//! framed answer, success or structured error, bounded in time and
+//! memory:
+//!
+//! * [`batcher`] sheds overload at admission (bounded queue, an
+//!   `overloaded` error with a `retry_after_ms` hint), drops expired
+//!   deadlines before packing, and runs the fused apply under
+//!   `catch_unwind` so a poisoned batch answers its members instead of
+//!   stranding them.
+//! * [`breaker`] — a per-operator circuit breaker: consecutive failures
+//!   trip it open, rejections carry the remaining cooldown, a half-open
+//!   probe decides recovery.
+//! * [`faults`] — runtime-configured fault injection (`FKT_FAULTS=` /
+//!   `--faults`): probabilistic apply panics, injected latency,
+//!   connection drops, corrupted frames. Chaos tests and the CI chaos
+//!   smoke drive the same binary production runs.
+//! * [`soak`] — the load driver that checks the contract: N clients ×
+//!   M requests, every final outcome tallied, hangs detected by client
+//!   timeout.
 
 pub mod batcher;
+pub mod breaker;
+pub mod faults;
 pub mod json;
 pub mod protocol;
 pub mod server;
+pub mod soak;
 
-pub use batcher::{BatchConfig, BatcherStats, MicroBatcher};
+pub use batcher::{BatchConfig, BatchError, BatcherStats, MicroBatcher, MvmRequest};
+pub use breaker::{BreakerConfig, BreakerSnapshot, BreakerState, CircuitBreaker};
+pub use faults::{FaultConfig, FaultStats, Faults};
 pub use json::Json;
-pub use protocol::{msg, Client};
+pub use protocol::{msg, Client, RetryPolicy};
 pub use server::{install_sigint, ServeConfig, Server, ServerHandle};
+pub use soak::{SoakConfig, SoakReport};

@@ -17,23 +17,30 @@
 
 use super::json::Json;
 use std::io::{self, BufRead, BufReader, Read, Write};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 /// Upper bound on one frame's body. Generous for the workloads served
 /// (an n=1M f64 weight vector in JSON is ~20 MB) while refusing a
 /// nonsense length prefix before it becomes an allocation.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
-/// Serialize `msg` as one frame onto `w` (flushes, so a lone request
-/// isn't stuck in a `BufWriter`).
-pub fn write_frame(w: &mut impl Write, msg: &Json) -> io::Result<()> {
+/// Serialize `msg` as one frame's raw bytes (the server uses this so
+/// the fault layer can mangle a frame before it hits the wire).
+pub fn frame_bytes(msg: &Json) -> Vec<u8> {
     let body = msg.dump();
     let mut frame = Vec::with_capacity(body.len() + 16);
     frame.extend_from_slice(body.len().to_string().as_bytes());
     frame.push(b'\n');
     frame.extend_from_slice(body.as_bytes());
     frame.push(b'\n');
-    w.write_all(&frame)?;
+    frame
+}
+
+/// Serialize `msg` as one frame onto `w` (flushes, so a lone request
+/// isn't stuck in a `BufWriter`).
+pub fn write_frame(w: &mut impl Write, msg: &Json) -> io::Result<()> {
+    w.write_all(&frame_bytes(msg))?;
     w.flush()
 }
 
@@ -59,7 +66,25 @@ impl<R: BufRead> FrameReader<R> {
     /// Read one frame. `Ok(None)` on clean EOF at a frame boundary;
     /// timeouts bubble up as errors with all partial state retained, so
     /// calling again resumes the same frame.
+    ///
+    /// A *malformed* frame (`InvalidData`) resets the parse state
+    /// instead: the bad bytes are already consumed, so the reader
+    /// resumes at the next byte rather than re-reporting the same
+    /// corpse forever — a corrupted body with a correct length prefix
+    /// leaves the reader exactly at the next frame boundary.
     pub fn read_frame(&mut self) -> io::Result<Option<Json>> {
+        let out = self.read_frame_inner();
+        if let Err(e) = &out {
+            if e.kind() == io::ErrorKind::InvalidData {
+                self.header.clear();
+                self.body.clear();
+                self.body_len = None;
+            }
+        }
+        out
+    }
+
+    fn read_frame_inner(&mut self) -> io::Result<Option<Json>> {
         loop {
             let len = match self.body_len {
                 Some(len) => len,
@@ -131,11 +156,54 @@ pub fn msg(verb: &str, fields: &[(&str, Json)]) -> Json {
     Json::Obj(pairs)
 }
 
+/// Backoff schedule for [`Client::call_retry`]: exponential growth
+/// from `base` capped at `max`, with deterministic multiplicative
+/// jitter in `[0.5, 1.5)` so a herd of retrying clients decorrelates.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included). Zero behaves as one.
+    pub attempts: u32,
+    /// Backoff after the first failure.
+    pub base: Duration,
+    /// Upper bound on any single backoff sleep.
+    pub max: Duration,
+    /// Seed for the jitter (deterministic per client).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 5,
+            base: Duration::from_millis(50),
+            max: Duration::from_secs(2),
+            seed: 0x9a7e,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The sleep before retry number `attempt` (0-based: the sleep
+    /// after the first failure is `backoff(0)`).
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << attempt.min(16));
+        let capped = exp.min(self.max);
+        let mut z = self.seed ^ u64::from(attempt).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z ^= z >> 31;
+        let jitter = 0.5 + (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        capped.mul_f64(jitter)
+    }
+}
+
 /// Blocking request/response client for the serve protocol. One call in
 /// flight at a time — the server answers frames in order per connection.
 pub struct Client {
     reader: FrameReader<BufReader<TcpStream>>,
     writer: TcpStream,
+    /// Resolved peer, kept for [`Client::reconnect`].
+    addr: Option<SocketAddr>,
+    timeout: Option<Duration>,
 }
 
 impl Client {
@@ -143,8 +211,33 @@ impl Client {
     pub fn connect(addr: impl ToSocketAddrs) -> io::Result<Client> {
         let writer = TcpStream::connect(addr)?;
         writer.set_nodelay(true).ok();
+        let peer = writer.peer_addr().ok();
         let reader = FrameReader::new(BufReader::new(writer.try_clone()?));
-        Ok(Client { reader, writer })
+        Ok(Client { reader, writer, addr: peer, timeout: None })
+    }
+
+    /// Bound every read: a server that stops answering becomes a
+    /// `TimedOut`/`WouldBlock` error instead of a hang. `None` restores
+    /// blocking reads.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> io::Result<()> {
+        self.timeout = timeout;
+        self.writer.set_read_timeout(timeout)
+    }
+
+    /// Drop the current connection and dial the same peer again (used
+    /// by [`Client::call_retry`] after transport errors; server-side
+    /// state keyed to the old connection — nothing, in this protocol —
+    /// is lost, which is what makes retry safe).
+    pub fn reconnect(&mut self) -> io::Result<()> {
+        let addr = self
+            .addr
+            .ok_or_else(|| io::Error::other("no resolved peer address to reconnect"))?;
+        let writer = TcpStream::connect(addr)?;
+        writer.set_nodelay(true).ok();
+        writer.set_read_timeout(self.timeout)?;
+        self.reader = FrameReader::new(BufReader::new(writer.try_clone()?));
+        self.writer = writer;
+        Ok(())
     }
 
     /// Send one request frame and block for its response frame.
@@ -154,6 +247,54 @@ impl Client {
             Some(response) => Ok(response),
             None => Err(io::ErrorKind::UnexpectedEof.into()),
         }
+    }
+
+    /// [`Client::call`] with reconnect-and-retry under `policy`, for
+    /// **idempotent** verbs only (`mvm`, `solve`, `stats`, `open` —
+    /// everything here except side-effectful futures; re-sending a
+    /// non-idempotent request after a mid-flight hangup would double
+    /// its effect). Retries transport errors (reconnecting first) and
+    /// the server's backpressure responses (`overloaded`,
+    /// `breaker_open`), honoring `retry_after_ms` when it exceeds the
+    /// policy's own backoff. The final backpressure response is
+    /// returned, not swallowed, so callers still see structured errors.
+    pub fn call_retry(&mut self, request: &Json, policy: &RetryPolicy) -> io::Result<Json> {
+        let attempts = policy.attempts.max(1);
+        let mut last_err: Option<io::Error> = None;
+        for attempt in 0..attempts {
+            if last_err.is_some() {
+                if let Err(e) = self.reconnect() {
+                    last_err = Some(e);
+                    std::thread::sleep(policy.backoff(attempt));
+                    continue;
+                }
+            }
+            match self.call(request) {
+                Ok(response) => {
+                    let backpressure = matches!(
+                        response.get("error").and_then(Json::as_str),
+                        Some("overloaded" | "breaker_open")
+                    );
+                    if backpressure && attempt + 1 < attempts {
+                        let hint_ms = response
+                            .get("retry_after_ms")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0)
+                            .max(0.0);
+                        let hint = Duration::from_millis(hint_ms as u64);
+                        std::thread::sleep(policy.backoff(attempt).max(hint));
+                        last_err = None;
+                        continue;
+                    }
+                    return Ok(response);
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(policy.backoff(attempt));
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| io::Error::other("retries exhausted")))
     }
 
     /// [`Client::call`] that unwraps the `{"ok": true}` envelope: returns
@@ -292,5 +433,96 @@ mod tests {
         assert_eq!(frames.len(), 2);
         assert_eq!(frames[0], request);
         assert!(errors > 10, "the stream really was choppy ({errors} timeouts)");
+    }
+
+    /// Drive a reader over a byte soup to a terminal state, bounding
+    /// the number of calls. Returns (frames decoded, invalid-data
+    /// errors). Panics if the reader neither terminates nor makes
+    /// progress — the property under test.
+    fn drain_reader(data: Vec<u8>) -> (usize, usize) {
+        let cap = data.len() + 8;
+        let mut reader = FrameReader::new(io::Cursor::new(data));
+        let (mut frames, mut invalid, mut eofs) = (0usize, 0usize, 0usize);
+        for _ in 0..cap {
+            match reader.read_frame() {
+                Ok(Some(_)) => frames += 1,
+                Ok(None) => return (frames, invalid), // clean EOF
+                Err(e) if e.kind() == io::ErrorKind::InvalidData => invalid += 1,
+                Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
+                    eofs += 1;
+                    if eofs >= 2 {
+                        return (frames, invalid); // stable truncated-tail state
+                    }
+                }
+                Err(e) => panic!("unexpected error kind from byte soup: {e}"),
+            }
+        }
+        panic!("reader neither terminated nor wedged cleanly within {cap} calls");
+    }
+
+    /// Property: random bytes never panic the reader and never wedge it
+    /// in a livelock — every call yields a frame, a clean `InvalidData`
+    /// error that consumes the bad bytes, or a stable truncated-tail
+    /// EOF error.
+    #[test]
+    fn random_bytes_never_panic_or_wedge_the_reader() {
+        let mut rng = crate::rng::Pcg32::seeded(0xf4a);
+        for _ in 0..200 {
+            let len = rng.below(160) + 1;
+            let mut data = Vec::with_capacity(len);
+            for _ in 0..len {
+                // Bias toward digits and newlines so the header parser
+                // gets exercised, not just rejected at byte one.
+                data.push(match rng.below(4) {
+                    0 => b'0' + (rng.below(10) as u8),
+                    1 => b'\n',
+                    _ => rng.below(256) as u8,
+                });
+            }
+            drain_reader(data); // must not panic or wedge
+        }
+    }
+
+    /// Property: every truncation of a valid multi-frame stream either
+    /// decodes a prefix of the frames or errors cleanly — never panics.
+    #[test]
+    fn truncated_frames_error_cleanly_at_every_cut() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &msg("open", &[("n", Json::Num(64.0))])).unwrap();
+        write_frame(&mut wire, &msg("mvm", &[("w", Json::from_f64s(&[1.5, -2.0]))])).unwrap();
+        for cut in 0..wire.len() {
+            let (frames, invalid) = drain_reader(wire[..cut].to_vec());
+            assert!(frames <= 2 && invalid == 0, "prefix of a valid stream has no bad frames");
+        }
+        let (frames, _) = drain_reader(wire.clone());
+        assert_eq!(frames, 2, "the untruncated stream still decodes fully");
+    }
+
+    /// An oversized length prefix is refused before allocation, and the
+    /// reader recovers to decode a following healthy frame.
+    #[test]
+    fn oversized_prefix_is_rejected_without_allocating() {
+        let mut wire = format!("{}\n", usize::MAX).into_bytes();
+        write_frame(&mut wire, &msg("stats", &[])).unwrap();
+        let mut reader = FrameReader::new(io::Cursor::new(wire));
+        let err = reader.read_frame().expect_err("absurd length must be refused");
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        let next = reader.read_frame().expect("recovered").expect("frame");
+        assert_eq!(next.get("verb").unwrap(), &Json::str("stats"));
+    }
+
+    /// A corrupted body with a correct length prefix yields one clean
+    /// `bad frame` error and leaves the reader at the next frame
+    /// boundary — the wire-corruption fault shape.
+    #[test]
+    fn corrupted_body_resyncs_at_the_next_frame() {
+        let mut wire = b"7\n{\"a\":XY\n".to_vec(); // 7-byte body, invalid JSON
+        write_frame(&mut wire, &msg("close", &[])).unwrap();
+        let mut reader = FrameReader::new(io::Cursor::new(wire));
+        let err = reader.read_frame().expect_err("garbage body must error");
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        let next = reader.read_frame().expect("resynced").expect("frame");
+        assert_eq!(next.get("verb").unwrap(), &Json::str("close"));
+        assert!(reader.read_frame().unwrap().is_none(), "clean EOF after recovery");
     }
 }

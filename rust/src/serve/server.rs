@@ -8,18 +8,32 @@
 //!   `kernel`, `p`, `theta`, `tol`, `leaf`, `precision`. Returns a small
 //!   integer `id`. Two tenants opening the same spec get the same id —
 //!   and therefore share one cached operator *and* one micro-batcher.
-//! * `mvm`   — `{id, w}` → `{z}`. Routed through the operator's
-//!   [`MicroBatcher`], so concurrent tenants coalesce into fused applies.
-//! * `solve` — `{id, y, noise?, tol?, max_iters?}` → CG solution with
-//!   convergence data. Solves run directly on the core (CG is iterative
-//!   and session-side batching of solves is a different verb).
+//! * `mvm`   — `{id, w, deadline_ms?, inject?}` → `{z}`. Routed through
+//!   the operator's [`MicroBatcher`], so concurrent tenants coalesce
+//!   into fused applies.
+//! * `solve` — `{id, y, noise?, tol?, max_iters?, deadline_ms?}` → CG
+//!   solution with convergence data. Solves run directly on the core
+//!   (CG is iterative and session-side batching of solves is a
+//!   different verb). Under deadline pressure the solve stops early and
+//!   returns the partial iterate with `converged:false` and the
+//!   achieved `rel_residual`.
 //! * `stats` — session counters, registry stats, per-operator batching
-//!   stats, SIMD backend.
+//!   + breaker stats, fault counters, reliability config, SIMD backend.
 //! * `close` — polite hangup.
 //!
 //! Every verb body runs under `catch_unwind`: a panic (bad geometry, a
 //! non-square solve) becomes an `{"ok": false}` response for that tenant
 //! and the server keeps serving the rest.
+//!
+//! ## Structured errors
+//!
+//! Reliability outcomes use stable `error` kinds so clients can react
+//! without parsing prose: `overloaded` (+`retry_after_ms`,
+//! `queue_depth`), `deadline_exceeded` (+`waited_ms`), `worker_panic`
+//! (+`detail`), `breaker_open` (+`retry_after_ms`), `shutting_down`.
+//! Each served operator has a [`CircuitBreaker`]: consecutive
+//! `worker_panic` failures trip it, rejections answer instantly, a
+//! half-open probe closes it again.
 //!
 //! Shutdown: `ServerHandle::shutdown` (in-process) or SIGINT (the CLI
 //! installs a flag-setting handler) stops the accept loop, joins the
@@ -27,22 +41,24 @@
 //! they notice — then shuts every micro-batcher down, draining requests
 //! still queued. In-flight work is answered, never dropped.
 
-use super::batcher::{BatchConfig, MicroBatcher};
+use super::batcher::{BatchConfig, BatchError, MicroBatcher, MvmRequest};
+use super::breaker::{BreakerConfig, CircuitBreaker};
+use super::faults::{panic_message, FaultConfig, Faults};
 use super::json::Json;
-use super::protocol::{write_frame, FrameReader};
+use super::protocol::{frame_bytes, write_frame, FrameReader};
 use crate::data;
 use crate::kernels::Family;
 use crate::points::Points;
 use crate::rng::Pcg32;
 use crate::session::{simd_backend, Backend, OpHandle, Precision, Session, SessionCore, SolveOpts};
 use std::collections::HashMap;
-use std::io::{self, BufReader};
+use std::io::{self, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Lock with poison recovery — one panicking connection must not take
 /// the whole server's op table with it.
@@ -66,8 +82,14 @@ pub struct ServeConfig {
     pub backend: Backend,
     /// Operator-registry LRU capacity.
     pub registry_capacity: usize,
-    /// Micro-batching knobs applied to every served operator.
+    /// Micro-batching knobs applied to every served operator
+    /// (including the queue-depth admission cap).
     pub batch: BatchConfig,
+    /// Per-operator circuit-breaker tuning.
+    pub breaker: BreakerConfig,
+    /// Fault injection (disabled unless configured via `FKT_FAULTS`
+    /// or `--faults`).
+    pub faults: FaultConfig,
 }
 
 impl Default for ServeConfig {
@@ -78,15 +100,19 @@ impl Default for ServeConfig {
             backend: Backend::Auto,
             registry_capacity: 64,
             batch: BatchConfig::default(),
+            breaker: BreakerConfig::default(),
+            faults: FaultConfig::disabled(),
         }
     }
 }
 
-/// One served operator: the session handle plus its batching engine.
+/// One served operator: the session handle plus its batching engine
+/// and health breaker.
 struct OpEntry {
     id: u64,
     handle: OpHandle,
     batcher: MicroBatcher,
+    breaker: CircuitBreaker,
 }
 
 /// Operator table. Ids are small sequential integers — JSON numbers are
@@ -106,6 +132,8 @@ type DatasetKey = (String, usize, usize, u64);
 struct ServerState {
     core: Arc<SessionCore>,
     batch_cfg: BatchConfig,
+    breaker_cfg: BreakerConfig,
+    faults: Arc<Faults>,
     ops: Mutex<OpsMap>,
     /// Synthetic datasets are deterministic in `(name, n, d, seed)`, so
     /// re-opens skip regeneration.
@@ -141,6 +169,8 @@ impl Server {
         let state = Arc::new(ServerState {
             core: session.clone_core(),
             batch_cfg: cfg.batch,
+            breaker_cfg: cfg.breaker,
+            faults: Arc::new(Faults::new(cfg.faults)),
             ops: Mutex::new(OpsMap::default()),
             datasets: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
@@ -248,8 +278,20 @@ fn serve_connection(stream: TcpStream, state: &Arc<ServerState>) {
     while !state.shutdown.load(Ordering::SeqCst) {
         match reader.read_frame() {
             Ok(Some(request)) => {
+                // Injected connection drop: vanish without answering —
+                // the client's retry path owns recovery.
+                if state.faults.drop_connection() {
+                    break;
+                }
                 let (response, hangup) = handle_request(state, &request);
-                if write_frame(&mut writer, &response).is_err() || hangup {
+                // The response goes out as raw bytes so the fault layer
+                // can corrupt the frame in flight; a corrupted frame is
+                // followed by hangup (real corruption rarely leaves a
+                // healthy connection behind).
+                let mut bytes = frame_bytes(&response);
+                let corrupted = state.faults.corrupt_frame(&mut bytes);
+                let sent = writer.write_all(&bytes).and_then(|()| writer.flush()).is_ok();
+                if !sent || hangup || corrupted {
                     break;
                 }
             }
@@ -282,23 +324,15 @@ fn handle_request(state: &Arc<ServerState>, request: &Json) -> (Json, bool) {
     let response = match outcome {
         Ok(Ok(response)) => response,
         Ok(Err(message)) => err_response(&message),
-        Err(payload) => err_response(&format!("internal panic: {}", panic_text(&payload))),
+        Err(payload) => {
+            err_response(&format!("internal panic: {}", panic_message(payload.as_ref())))
+        }
     };
     (response, false)
 }
 
 fn is_timeout(e: &io::Error) -> bool {
     matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
-}
-
-fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = payload.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "unknown payload".to_string()
-    }
 }
 
 fn ok_response(fields: Vec<(&str, Json)>) -> Json {
@@ -308,10 +342,50 @@ fn ok_response(fields: Vec<(&str, Json)>) -> Json {
 }
 
 fn err_response(message: &str) -> Json {
-    Json::Obj(vec![
+    err_with(message, vec![])
+}
+
+/// Structured error: a stable `error` kind plus machine-readable
+/// fields (`retry_after_ms`, `waited_ms`, …).
+fn err_with(kind: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
         ("ok".to_string(), Json::Bool(false)),
-        ("error".to_string(), Json::str(message)),
-    ])
+        ("error".to_string(), Json::str(kind)),
+    ];
+    pairs.extend(fields.into_iter().map(|(k, v)| (k.to_string(), v)));
+    Json::Obj(pairs)
+}
+
+/// Map a batcher error onto the wire contract.
+fn batch_error_response(err: &BatchError) -> Json {
+    let fields = match err {
+        BatchError::Overloaded { queue_depth, retry_after_ms } => vec![
+            ("retry_after_ms", Json::Num(*retry_after_ms as f64)),
+            ("queue_depth", Json::Num(*queue_depth as f64)),
+        ],
+        BatchError::DeadlineExceeded { waited_ms } => {
+            vec![("waited_ms", Json::Num(*waited_ms as f64))]
+        }
+        BatchError::WorkerPanic(detail) => vec![("detail", Json::str(detail))],
+        BatchError::Shutdown => vec![],
+    };
+    err_with(err.kind(), fields)
+}
+
+/// Parse a request's `deadline_ms` into an absolute instant. A
+/// non-positive deadline is already expired — answered deterministically
+/// (`Err` carries the ready-made response) without touching the queue,
+/// which is what lets the probe assert this path against any server.
+fn request_deadline(request: &Json) -> Result<Option<Instant>, Json> {
+    match request.get("deadline_ms").and_then(Json::as_f64) {
+        None => Ok(None),
+        Some(ms) if ms.is_nan() || ms <= 0.0 => {
+            Err(err_with("deadline_exceeded", vec![("waited_ms", Json::Num(0.0))]))
+        }
+        // Cap at a day: a deadline that far out is "no deadline", and
+        // the cap keeps Duration::from_secs_f64 off its panic paths.
+        Some(ms) => Ok(Some(Instant::now() + Duration::from_secs_f64((ms / 1e3).min(86_400.0)))),
+    }
 }
 
 /// Field helpers: JSON numbers with defaults and range sanity.
@@ -408,8 +482,14 @@ fn register_op(state: &Arc<ServerState>, handle: OpHandle) -> Arc<OpEntry> {
     }
     ops.next_id += 1;
     let id = ops.next_id;
-    let batcher = MicroBatcher::new(Arc::clone(&state.core), handle.clone(), state.batch_cfg);
-    let entry = Arc::new(OpEntry { id, handle, batcher });
+    let batcher = MicroBatcher::with_faults(
+        Arc::clone(&state.core),
+        handle.clone(),
+        state.batch_cfg,
+        Arc::clone(&state.faults),
+    );
+    let breaker = CircuitBreaker::new(state.breaker_cfg);
+    let entry = Arc::new(OpEntry { id, handle, batcher, breaker });
     ops.by_ptr.insert(ptr, id);
     ops.by_id.insert(id, Arc::clone(&entry));
     entry
@@ -425,7 +505,8 @@ fn lookup_op(state: &Arc<ServerState>, request: &Json) -> Result<Arc<OpEntry>, S
 }
 
 /// `mvm`: through the operator's micro-batcher, where concurrent
-/// tenants coalesce.
+/// tenants coalesce. Reliability outcomes — breaker rejection, shed,
+/// expired deadline, worker panic — come back as structured errors.
 fn mvm_verb(state: &Arc<ServerState>, request: &Json) -> Result<Json, String> {
     let entry = lookup_op(state, request)?;
     let w = request
@@ -436,8 +517,35 @@ fn mvm_verb(state: &Arc<ServerState>, request: &Json) -> Result<Json, String> {
     if w.len() != n {
         return Err(format!("w has {} entries; operator has {} sources", w.len(), n));
     }
-    let z = entry.batcher.mvm(&w);
-    Ok(ok_response(vec![("z", Json::from_f64s(&z))]))
+    let deadline = match request_deadline(request) {
+        Ok(deadline) => deadline,
+        Err(expired) => return Ok(expired),
+    };
+    let inject_panic = request.get("inject").and_then(Json::as_str) == Some("panic");
+    if inject_panic && !state.faults.inject_enabled() {
+        return Err("inject requires a fault config with inject=1".to_string());
+    }
+    if let Err(retry_after_ms) = entry.breaker.try_admit() {
+        return Ok(err_with(
+            "breaker_open",
+            vec![("retry_after_ms", Json::Num(retry_after_ms as f64))],
+        ));
+    }
+    match entry.batcher.request(MvmRequest { w, deadline, inject_panic }) {
+        Ok(z) => {
+            entry.breaker.on_success();
+            Ok(ok_response(vec![("z", Json::from_f64s(&z))]))
+        }
+        Err(err) => {
+            // Only a panicked apply is an operator-health signal; shed
+            // and expired requests say nothing about the operator.
+            match err {
+                BatchError::WorkerPanic(_) => entry.breaker.on_failure(),
+                _ => entry.breaker.on_neutral(),
+            }
+            Ok(batch_error_response(&err))
+        }
+    }
 }
 
 /// `solve`: CG directly on the shared core (iterative; not batched).
@@ -451,21 +559,62 @@ fn solve_verb(state: &Arc<ServerState>, request: &Json) -> Result<Json, String> 
     if y.len() != n {
         return Err(format!("y has {} entries; operator has {} sources", y.len(), n));
     }
+    let deadline = match request_deadline(request) {
+        Ok(deadline) => deadline,
+        Err(expired) => return Ok(expired),
+    };
+    let inject_panic = request.get("inject").and_then(Json::as_str) == Some("panic");
+    if inject_panic && !state.faults.inject_enabled() {
+        return Err("inject requires a fault config with inject=1".to_string());
+    }
+    if let Err(retry_after_ms) = entry.breaker.try_admit() {
+        return Ok(err_with(
+            "breaker_open",
+            vec![("retry_after_ms", Json::Num(retry_after_ms as f64))],
+        ));
+    }
     let noise = request.get("noise").and_then(Json::as_f64).map(|v| vec![v; n]);
+    let max_iters = get_usize(request, "max_iters", 200);
     let opts = SolveOpts {
         tol: get_f64(request, "tol", 1e-6),
-        max_iters: get_usize(request, "max_iters", 200),
+        max_iters,
         jitter: get_f64(request, "jitter", 1e-8),
         noise: noise.as_deref(),
         precondition: true,
+        deadline,
     };
-    let result = state.core.solve(&entry.handle, &y, &opts);
-    Ok(ok_response(vec![
-        ("x", Json::from_f64s(&result.x)),
-        ("iterations", Json::Num(result.iterations as f64)),
-        ("rel_residual", Json::Num(result.rel_residual)),
-        ("converged", Json::Bool(result.converged)),
-    ]))
+    // Panics (including injected faults) feed the breaker, so a sick
+    // operator's solves trip it just like its mvms do.
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        if inject_panic {
+            state.faults.injected_panic();
+        }
+        state.faults.before_apply();
+        state.core.solve(&entry.handle, &y, &opts)
+    }));
+    match outcome {
+        Ok(result) => {
+            entry.breaker.on_success();
+            // Unconverged with iterations to spare means the deadline
+            // (not the iteration budget) stopped the solve.
+            let deadline_hit =
+                deadline.is_some() && !result.converged && result.iterations < max_iters;
+            Ok(ok_response(vec![
+                ("x", Json::from_f64s(&result.x)),
+                ("iterations", Json::Num(result.iterations as f64)),
+                ("rel_residual", Json::Num(result.rel_residual)),
+                ("converged", Json::Bool(result.converged)),
+                ("deadline_hit", Json::Bool(deadline_hit)),
+            ]))
+        }
+        Err(payload) => {
+            entry.breaker.on_failure();
+            Ok(err_with(
+                "worker_panic",
+                vec![("detail", Json::str(&panic_message(payload.as_ref())))],
+            ))
+        }
+    }
 }
 
 /// `stats`: one snapshot of everything a load test wants to know.
@@ -494,6 +643,13 @@ fn stats_verb(state: &Arc<ServerState>) -> Json {
     for id in ids {
         let entry = &ops.by_id[id];
         let s = entry.batcher.stats();
+        let b = entry.breaker.snapshot();
+        let breaker = Json::Obj(vec![
+            ("state".to_string(), Json::str(b.state.name())),
+            ("consecutive_failures".to_string(), Json::Num(b.consecutive_failures as f64)),
+            ("trips".to_string(), Json::Num(b.trips as f64)),
+            ("rejected".to_string(), Json::Num(b.rejected as f64)),
+        ]);
         per_op.push(Json::Obj(vec![
             ("id".to_string(), Json::Num(entry.id as f64)),
             ("n".to_string(), Json::Num(entry.handle.num_sources() as f64)),
@@ -503,12 +659,42 @@ fn stats_verb(state: &Arc<ServerState>) -> Json {
             ("batched_columns".to_string(), Json::Num(s.batched_columns as f64)),
             ("max_batch_columns".to_string(), Json::Num(s.max_batch_columns as f64)),
             ("columns_per_apply".to_string(), Json::Num(s.columns_per_apply())),
+            ("queue_depth".to_string(), Json::Num(s.queue_depth as f64)),
+            ("shed_overload".to_string(), Json::Num(s.shed_overload as f64)),
+            ("expired_deadline".to_string(), Json::Num(s.expired_deadline as f64)),
+            ("worker_panics".to_string(), Json::Num(s.worker_panics as f64)),
+            ("breaker".to_string(), breaker),
         ]));
     }
+    let f = state.faults.stats();
+    let faults = Json::Obj(vec![
+        ("active".to_string(), Json::Bool(state.faults.config().is_active())),
+        ("injected_panics".to_string(), Json::Num(f.injected_panics as f64)),
+        ("injected_latency".to_string(), Json::Num(f.injected_latency as f64)),
+        ("dropped_connections".to_string(), Json::Num(f.dropped_connections as f64)),
+        ("corrupted_frames".to_string(), Json::Num(f.corrupted_frames as f64)),
+    ]);
+    // The reliability knobs, so probes and soaks can read the limits
+    // they are asserting against instead of hard-coding them.
+    let config = Json::Obj(vec![
+        ("max_columns".to_string(), Json::Num(state.batch_cfg.max_columns as f64)),
+        ("window_us".to_string(), Json::Num(state.batch_cfg.gather_window.as_micros() as f64)),
+        ("queue_cap".to_string(), Json::Num(state.batch_cfg.max_queue as f64)),
+        (
+            "breaker_failure_threshold".to_string(),
+            Json::Num(state.breaker_cfg.failure_threshold as f64),
+        ),
+        (
+            "breaker_cooldown_ms".to_string(),
+            Json::Num(state.breaker_cfg.cooldown.as_millis() as f64),
+        ),
+    ]);
     ok_response(vec![
         ("counters", counters),
         ("registry", registry),
         ("ops", Json::Arr(per_op)),
+        ("faults", faults),
+        ("config", config),
         ("threads", Json::Num(state.core.threads() as f64)),
         ("simd_backend", Json::str(simd_backend().name())),
     ])

@@ -1,0 +1,232 @@
+//! Soak/chaos load driver: many clients, many requests, full outcome
+//! accounting.
+//!
+//! The happy-path probe answers "does it work"; the soak driver
+//! answers the reliability question — *under faults and overload, does
+//! every request still come back framed?* It hammers a serve endpoint
+//! with `clients × requests_per_client` MVMs (optionally carrying
+//! deadlines), retries transport breaks and backpressure through
+//! [`Client::call_retry`], and tallies every final outcome into a
+//! [`SoakReport`]: successes, each structured error kind, transport
+//! failures, and hangs (reads that hit the client timeout — the one
+//! outcome a correct server never produces).
+//!
+//! The same driver backs the `fkt serve-soak` subcommand, the chaos
+//! integration test, and the `serve_load` bench's chaos leg, so the
+//! CI smoke and the local repro are literally the same code path.
+
+use crate::rng::Pcg32;
+use crate::serve::json::Json;
+use crate::serve::protocol::{msg, Client, RetryPolicy};
+use std::net::SocketAddr;
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+/// One soak run's shape.
+#[derive(Clone, Debug)]
+pub struct SoakConfig {
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// MVM requests each client issues.
+    pub requests_per_client: usize,
+    /// The `open` request every client sends first (identical specs
+    /// intern to one served operator).
+    pub open: Json,
+    /// Weight-vector length (the opened operator's source count).
+    pub weight_len: usize,
+    /// Optional per-request deadline to propagate.
+    pub deadline_ms: Option<f64>,
+    /// Client read timeout — the hang detector. A request whose final
+    /// outcome is a timeout counts as `hung`.
+    pub timeout: Duration,
+    /// Retry policy for transport breaks and backpressure.
+    pub retry: RetryPolicy,
+    /// Seed for the per-client weight streams.
+    pub seed: u64,
+}
+
+impl Default for SoakConfig {
+    fn default() -> SoakConfig {
+        SoakConfig {
+            clients: 8,
+            requests_per_client: 16,
+            open: msg("open", &[]),
+            weight_len: 0,
+            deadline_ms: None,
+            timeout: Duration::from_secs(10),
+            retry: RetryPolicy::default(),
+            seed: 0x50af,
+        }
+    }
+}
+
+/// Final-outcome tallies for one soak run. `total` counts issued MVM
+/// requests; every one lands in exactly one bucket below it.
+#[derive(Clone, Debug, Default)]
+pub struct SoakReport {
+    /// MVM requests issued.
+    pub total: u64,
+    /// Requests answered `ok:true` with a well-formed result.
+    pub ok: u64,
+    /// Final answer was the structured `overloaded` shed.
+    pub overloaded: u64,
+    /// Final answer was `deadline_exceeded`.
+    pub deadline_exceeded: u64,
+    /// Final answer was `worker_panic` (fault injection landed).
+    pub worker_panic: u64,
+    /// Final answer was `breaker_open`.
+    pub breaker_open: u64,
+    /// Any other `ok:false` response (bad id, malformed, …).
+    pub other_error: u64,
+    /// Transport errors that survived every retry (EOF, refused).
+    pub transport_failures: u64,
+    /// Requests whose final outcome was a read timeout — a hang.
+    pub hung: u64,
+    /// Clients whose `open` never succeeded (their requests are not
+    /// issued and do not count toward `total`).
+    pub open_failures: u64,
+    /// Wall latency of each *successful* request, ms (includes retries).
+    pub latencies_ms: Vec<f64>,
+}
+
+impl SoakReport {
+    /// Requests whose final outcome was a framed response (success or
+    /// structured error). The reliability contract says this equals
+    /// `total`.
+    pub fn framed(&self) -> u64 {
+        self.total - self.transport_failures - self.hung
+    }
+
+    /// Fraction of requests not answered `ok:true`.
+    pub fn error_rate(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        (self.total - self.ok) as f64 / self.total as f64
+    }
+
+    /// Fraction of requests whose final answer was the overload shed.
+    pub fn shed_rate(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.overloaded as f64 / self.total as f64
+    }
+
+    /// p99 of successful-request latency, ms (0 when nothing succeeded).
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 0.99)
+    }
+
+    /// p50 of successful-request latency, ms.
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 0.50)
+    }
+
+    fn absorb(&mut self, other: SoakReport) {
+        self.total += other.total;
+        self.ok += other.ok;
+        self.overloaded += other.overloaded;
+        self.deadline_exceeded += other.deadline_exceeded;
+        self.worker_panic += other.worker_panic;
+        self.breaker_open += other.breaker_open;
+        self.other_error += other.other_error;
+        self.transport_failures += other.transport_failures;
+        self.hung += other.hung;
+        self.open_failures += other.open_failures;
+        self.latencies_ms.extend(other.latencies_ms);
+    }
+}
+
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run one soak: spawn the clients, drive the load, merge the tallies.
+pub fn run(addr: SocketAddr, cfg: &SoakConfig) -> SoakReport {
+    let barrier = Barrier::new(cfg.clients);
+    let reports: Vec<SoakReport> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|c| {
+                let barrier = &barrier;
+                scope.spawn(move || drive_client(addr, cfg, c, barrier))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("soak client thread")).collect()
+    });
+    let mut merged = SoakReport::default();
+    for r in reports {
+        merged.absorb(r);
+    }
+    merged
+}
+
+fn drive_client(addr: SocketAddr, cfg: &SoakConfig, index: usize, barrier: &Barrier) -> SoakReport {
+    let mut report = SoakReport::default();
+    let mut rng = Pcg32::seeded(cfg.seed.wrapping_add(index as u64));
+    let mut client = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(_) => {
+            barrier.wait();
+            report.open_failures += 1;
+            return report;
+        }
+    };
+    let _ = client.set_timeout(Some(cfg.timeout));
+    let id = client
+        .call_retry(&cfg.open, &cfg.retry)
+        .ok()
+        .filter(|r| r.get("ok").and_then(Json::as_bool) == Some(true))
+        .and_then(|r| r.get("id").and_then(Json::as_usize));
+    let id = match id {
+        Some(id) => id as f64,
+        None => {
+            barrier.wait();
+            report.open_failures += 1;
+            return report;
+        }
+    };
+    barrier.wait();
+    for _ in 0..cfg.requests_per_client {
+        let w = rng.normal_vec(cfg.weight_len);
+        let mut fields = vec![("id", Json::Num(id)), ("w", Json::from_f64s(&w))];
+        if let Some(ms) = cfg.deadline_ms {
+            fields.push(("deadline_ms", Json::Num(ms)));
+        }
+        let request = msg("mvm", &fields);
+        report.total += 1;
+        let started = Instant::now();
+        match client.call_retry(&request, &cfg.retry) {
+            Ok(response) => {
+                if response.get("ok").and_then(Json::as_bool) == Some(true) {
+                    report.ok += 1;
+                    report.latencies_ms.push(started.elapsed().as_secs_f64() * 1e3);
+                } else {
+                    match response.get("error").and_then(Json::as_str) {
+                        Some("overloaded") => report.overloaded += 1,
+                        Some("deadline_exceeded") => report.deadline_exceeded += 1,
+                        Some("worker_panic") => report.worker_panic += 1,
+                        Some("breaker_open") => report.breaker_open += 1,
+                        _ => report.other_error += 1,
+                    }
+                }
+            }
+            Err(e) => match e.kind() {
+                std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock => {
+                    report.hung += 1;
+                    // The connection is desynced mid-frame; start clean
+                    // so one hang doesn't cascade.
+                    let _ = client.reconnect();
+                }
+                _ => report.transport_failures += 1,
+            },
+        }
+    }
+    report
+}

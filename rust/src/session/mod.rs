@@ -59,8 +59,8 @@ use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::fkt::{ExpansionCenter, FktConfig, FktOperator};
 use crate::kernels::{Family, Kernel};
 use crate::linalg::{
-    cholesky, cholesky_solve, preconditioned_cg, preconditioned_cg_batch, vecops, BatchCgResult,
-    CgResult, Mat,
+    cholesky, cholesky_solve, preconditioned_cg_batch_budgeted, preconditioned_cg_budgeted,
+    vecops, BatchCgResult, CgBudget, CgResult, Mat,
 };
 use crate::op::KernelOp;
 use crate::points::Points;
@@ -68,6 +68,7 @@ use registry::{fingerprint, OpKey, Registry};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
 
 /// Recover a mutex guard even if a panicking thread poisoned it: the
 /// session's locked state (the tune cache) is a pure memo — worst case a
@@ -402,15 +403,16 @@ impl SessionCore {
             }
             kv
         };
+        let budget = CgBudget { max_iters: opts.max_iters, deadline: opts.deadline };
         if opts.precondition {
             if let Some(fkt) = op.as_fkt() {
                 let pre = BlockJacobi::build(fkt, noise, jitter);
                 let mut precond = |r: &[f64]| pre.apply(r);
-                return preconditioned_cg(&mut apply, &mut precond, y, opts.tol, opts.max_iters);
+                return preconditioned_cg_budgeted(&mut apply, &mut precond, y, opts.tol, &budget);
             }
         }
         let mut identity = |r: &[f64]| r.to_vec();
-        preconditioned_cg(&mut apply, &mut identity, y, opts.tol, opts.max_iters)
+        preconditioned_cg_budgeted(&mut apply, &mut identity, y, opts.tol, &budget)
     }
 
     /// Batched first-class solve: `(K + diag(noise) + jitter·I) X = Y` for
@@ -463,23 +465,24 @@ impl SessionCore {
             }
             kv
         };
+        let budget = CgBudget { max_iters: opts.max_iters, deadline: opts.deadline };
         if opts.precondition {
             if let Some(fkt) = op.as_fkt() {
                 // One factorization, every column, every iteration.
                 let pre = BlockJacobi::build(fkt, noise, jitter);
                 let mut precond = |r: &[f64]| pre.apply_batch(r, m);
-                return preconditioned_cg_batch(
+                return preconditioned_cg_batch_budgeted(
                     &mut apply,
                     &mut precond,
                     y,
                     m,
                     opts.tol,
-                    opts.max_iters,
+                    &budget,
                 );
             }
         }
         let mut identity = |r: &[f64]| r.to_vec();
-        preconditioned_cg_batch(&mut apply, &mut identity, y, m, opts.tol, opts.max_iters)
+        preconditioned_cg_batch_budgeted(&mut apply, &mut identity, y, m, opts.tol, &budget)
     }
 
     /// Mixed-precision iterative refinement behind [`Session::solve`] for
@@ -525,6 +528,11 @@ impl SessionCore {
         let mut stalled = 0u32;
         let mut converged = false;
         while sweeps < REFINE_MAX_SWEEPS && total_iters < opts.max_iters {
+            // Deadline pressure ends the refinement between sweeps; the
+            // result carries the last honest f64 residual.
+            if opts.deadline.is_some_and(|d| Instant::now() >= d) {
+                break;
+            }
             let inner = {
                 let coord = &self.coord;
                 let kernel_op = op.op.as_ref();
@@ -535,15 +543,16 @@ impl SessionCore {
                     }
                     kv
                 };
-                let budget = opts.max_iters - total_iters;
+                let budget =
+                    CgBudget { max_iters: opts.max_iters - total_iters, deadline: opts.deadline };
                 match &pre {
                     Some(p) => {
                         let mut precond = |rr: &[f64]| p.apply(rr);
-                        preconditioned_cg(&mut apply, &mut precond, &r, inner_tol, budget)
+                        preconditioned_cg_budgeted(&mut apply, &mut precond, &r, inner_tol, &budget)
                     }
                     None => {
-                        let mut identity = |rr: &[f64]| rr.to_vec();
-                        preconditioned_cg(&mut apply, &mut identity, &r, inner_tol, budget)
+                        let mut id = |rr: &[f64]| rr.to_vec();
+                        preconditioned_cg_budgeted(&mut apply, &mut id, &r, inner_tol, &budget)
                     }
                 }
             };
@@ -632,6 +641,16 @@ impl SessionCore {
             if spent >= opts.max_iters {
                 break;
             }
+            // Deadline pressure ends the refinement between sweeps; record
+            // the honest residual of whatever iterate each column holds.
+            if opts.deadline.is_some_and(|d| Instant::now() >= d) {
+                for c in 0..m {
+                    if !converged[c] {
+                        rel_residual[c] = vecops::norm2(&r[col(c)]) / bnorm[c];
+                    }
+                }
+                break;
+            }
             let inner = {
                 let coord = &self.coord;
                 let kernel_op = op.op.as_ref();
@@ -644,21 +663,29 @@ impl SessionCore {
                     }
                     kv
                 };
-                let budget = opts.max_iters - spent;
+                let budget =
+                    CgBudget { max_iters: opts.max_iters - spent, deadline: opts.deadline };
                 match &pre {
                     Some(p) => {
                         let mut precond = |rr: &[f64]| p.apply_batch(rr, m);
-                        preconditioned_cg_batch(&mut apply, &mut precond, &r, m, inner_tol, budget)
+                        preconditioned_cg_batch_budgeted(
+                            &mut apply,
+                            &mut precond,
+                            &r,
+                            m,
+                            inner_tol,
+                            &budget,
+                        )
                     }
                     None => {
                         let mut identity = |rr: &[f64]| rr.to_vec();
-                        preconditioned_cg_batch(
+                        preconditioned_cg_batch_budgeted(
                             &mut apply,
                             &mut identity,
                             &r,
                             m,
                             inner_tol,
-                            budget,
+                            &budget,
                         )
                     }
                 }
@@ -1144,6 +1171,11 @@ pub struct SolveOpts<'a> {
     /// Leaf-block Jacobi preconditioning (FKT operators only; dense
     /// handles fall back to unpreconditioned CG).
     pub precondition: bool,
+    /// Optional wall-clock deadline. CG stops before an iteration it does
+    /// not expect to finish in time and returns the partial iterate with
+    /// its honest residual (`converged: false` unless it finished anyway)
+    /// — graceful degradation for deadline-aware serving.
+    pub deadline: Option<Instant>,
 }
 
 impl Default for SolveOpts<'_> {
@@ -1154,6 +1186,7 @@ impl Default for SolveOpts<'_> {
             jitter: 1e-8,
             noise: None,
             precondition: true,
+            deadline: None,
         }
     }
 }
@@ -1567,6 +1600,7 @@ mod tests {
                 jitter: 1e-8,
                 noise: Some(&noise),
                 precondition,
+                deadline: None,
             };
             let sweeps_before = session.counters().refine_sweeps;
             let pure = session.solve(&h64, &y, &opts);
@@ -1620,6 +1654,7 @@ mod tests {
             jitter: 1e-8,
             noise: Some(&noise),
             precondition: true,
+            deadline: None,
         };
         let sweeps_before = session.counters().refine_sweeps;
         let batch = session.solve_batch(&h32, &ys, m, &opts);
@@ -1742,11 +1777,58 @@ mod tests {
                 jitter: 1e-8,
                 noise: Some(&noise),
                 precondition,
+                deadline: None,
             };
             let sol = session.solve(&h, &y, &opts);
             assert!(sol.converged, "precondition={precondition}: residual {}", sol.rel_residual);
             let e = rel_err(&sol.x, &oracle);
             assert!(e < 1e-3, "precondition={precondition}: rel err {e}");
+        }
+    }
+
+    #[test]
+    fn solve_honors_an_expired_deadline_with_a_partial_result() {
+        let n = 200;
+        let pts = uniform_points(n, 2, 715);
+        let mut rng = Pcg32::seeded(716);
+        let y = rng.normal_vec(n);
+        let noise: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.05, 0.1)).collect();
+        let session = Session::native(1);
+        let h = session
+            .operator(&pts)
+            .scaled_kernel(Kernel::matern32(0.5))
+            .order(6)
+            .theta(0.3)
+            .leaf_capacity(32)
+            .build();
+        let expired = SolveOpts {
+            noise: Some(&noise),
+            deadline: Some(std::time::Instant::now() - std::time::Duration::from_millis(1)),
+            ..SolveOpts::default()
+        };
+        let partial = session.solve(&h, &y, &expired);
+        assert_eq!(partial.iterations, 0, "expired deadline must stop before iterating");
+        assert!(!partial.converged);
+        assert!((partial.rel_residual - 1.0).abs() < 1e-12, "zero iterate residual is ‖y‖/‖y‖");
+        // A generous deadline behaves exactly like no deadline.
+        let generous = SolveOpts {
+            noise: Some(&noise),
+            deadline: Some(std::time::Instant::now() + std::time::Duration::from_secs(600)),
+            ..SolveOpts::default()
+        };
+        let full = session.solve(&h, &y, &generous);
+        let plain_opts = SolveOpts { noise: Some(&noise), ..SolveOpts::default() };
+        let plain = session.solve(&h, &y, &plain_opts);
+        assert!(full.converged);
+        assert_eq!(full.iterations, plain.iterations);
+        assert_eq!(full.x, plain.x);
+        // Batched path: expired deadline freezes every column at zero.
+        let m = 3;
+        let ys = rng.normal_vec(n * m);
+        let batch = session.solve_batch(&h, &ys, m, &expired);
+        for c in 0..m {
+            assert_eq!(batch.iterations[c], 0, "col {c}");
+            assert!(!batch.converged[c], "col {c}");
         }
     }
 
@@ -1780,6 +1862,7 @@ mod tests {
                 jitter: 1e-8,
                 noise: Some(&noise),
                 precondition,
+                deadline: None,
             };
             let batch = session.solve_batch(&h, &ys, m, &opts);
             assert!(batch.all_converged(), "precondition={precondition}");

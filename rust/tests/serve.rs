@@ -6,9 +6,12 @@
 use fkt::kernels::Family;
 use fkt::points::Points;
 use fkt::rng::Pcg32;
-use fkt::serve::{msg, BatchConfig, Client, Json, MicroBatcher, ServeConfig, Server};
+use fkt::serve::{
+    msg, soak, BatchConfig, BatchError, BreakerConfig, Client, FaultConfig, Faults, Json,
+    MicroBatcher, MvmRequest, RetryPolicy, ServeConfig, Server, SoakConfig,
+};
 use fkt::session::{Backend, Session};
-use std::sync::Barrier;
+use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
 fn l2(a: &[f64], b: &[f64]) -> f64 {
@@ -36,7 +39,11 @@ fn batched_serving_matches_sequential_with_fewer_applies() {
 
     // A wide gather window so the barrier-released burst lands in one
     // (or few) fused applies.
-    let cfg = BatchConfig { max_columns: CLIENTS, gather_window: Duration::from_millis(150) };
+    let cfg = BatchConfig {
+        max_columns: CLIENTS,
+        gather_window: Duration::from_millis(150),
+        ..BatchConfig::default()
+    };
     let batcher = MicroBatcher::new(session.clone_core(), op, cfg);
     let barrier = Barrier::new(CLIENTS);
     let served: Vec<Vec<f64>> = std::thread::scope(|scope| {
@@ -47,7 +54,7 @@ fn batched_serving_matches_sequential_with_fewer_applies() {
                 let barrier = &barrier;
                 scope.spawn(move || {
                     barrier.wait();
-                    batcher.mvm(w)
+                    batcher.mvm(w).expect("healthy batcher answers")
                 })
             })
             .collect();
@@ -183,7 +190,11 @@ fn concurrent_tcp_clients_share_one_batcher() {
         addr: "127.0.0.1:0".to_string(),
         threads: 1,
         registry_capacity: 4,
-        batch: BatchConfig { max_columns: CLIENTS, gather_window: Duration::from_millis(60) },
+        batch: BatchConfig {
+            max_columns: CLIENTS,
+            gather_window: Duration::from_millis(60),
+            ..BatchConfig::default()
+        },
         ..ServeConfig::default()
     };
     let server = Server::spawn(&cfg).expect("spawn server");
@@ -248,4 +259,196 @@ fn concurrent_tcp_clients_share_one_batcher() {
     );
     probe.close();
     server.shutdown().expect("clean shutdown");
+}
+
+/// A fused apply that panics must answer every member of its batch with
+/// the structured `WorkerPanic` error — and the worker thread must
+/// survive to serve the next request.
+#[test]
+fn worker_panic_answers_the_whole_batch_and_worker_survives() {
+    const N: usize = 300;
+    let mut rng = Pcg32::seeded(52_000);
+    let pts = Points::new(3, rng.uniform_vec(N * 3, 0.0, 1.0));
+    let session = Session::native(1);
+    let op = session.operator(&pts).kernel(Family::Matern32).order(4).theta(0.5).build();
+    let faults = Arc::new(Faults::new(FaultConfig { inject: true, ..FaultConfig::disabled() }));
+    let cfg = BatchConfig {
+        max_columns: 4,
+        gather_window: Duration::from_millis(150),
+        ..BatchConfig::default()
+    };
+    let batcher = MicroBatcher::with_faults(session.clone_core(), op, cfg, faults);
+
+    // One request tagged to panic the fused apply, submitted alongside
+    // clean ones inside the same gather window.
+    let tagged = MvmRequest { w: rng.normal_vec(N), deadline: None, inject_panic: true };
+    let tagged_rx = batcher.submit(tagged).expect("admitted");
+    let clean_rxs: Vec<_> = (0..3)
+        .map(|_| batcher.submit(MvmRequest::new(rng.normal_vec(N))).expect("admitted"))
+        .collect();
+
+    match tagged_rx.recv().unwrap() {
+        Err(BatchError::WorkerPanic(msg)) => {
+            assert!(msg.contains("injected fault"), "panic message must surface: {msg}");
+        }
+        other => panic!("tagged request must get WorkerPanic, got {other:?}"),
+    }
+    // Whatever batch each clean request landed in, it got a framed
+    // answer: the panicked batch answers with the structured error, a
+    // later healthy batch with the result. Nobody hangs.
+    for rx in clean_rxs {
+        match rx.recv().unwrap() {
+            Ok(z) => assert_eq!(z.len(), N),
+            Err(BatchError::WorkerPanic(_)) => {}
+            other => panic!("unexpected clean-request outcome {other:?}"),
+        }
+    }
+    let s = batcher.stats();
+    assert!(s.worker_panics >= 1, "panic must be counted ({})", s.worker_panics);
+    // The worker thread survived the panicked batch and still answers.
+    let z = batcher.mvm(&rng.normal_vec(N)).expect("worker survives a panicked batch");
+    assert_eq!(z.len(), N);
+}
+
+/// Reliability over TCP: expired deadlines answer deterministically,
+/// request-tagged panics surface as structured `worker_panic` errors and
+/// trip the per-operator breaker, and the breaker recovers through its
+/// half-open probe once the cooldown elapses.
+#[test]
+fn tcp_reliability_deadline_breaker_trip_and_recovery() {
+    const N: usize = 400;
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 1,
+        registry_capacity: 4,
+        breaker: BreakerConfig {
+            failure_threshold: 3,
+            cooldown: Duration::from_millis(150),
+            half_open_probes: 1,
+        },
+        faults: FaultConfig { inject: true, ..FaultConfig::disabled() },
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(&cfg).expect("spawn server");
+    let mut client = Client::connect(server.addr()).expect("connect");
+    let opened = client.call_ok(&open_request(N)).expect("open");
+    let id = opened.get("id").and_then(Json::as_usize).expect("id") as f64;
+    let mut rng = Pcg32::seeded(88);
+    let w = Json::from_f64s(&rng.normal_vec(N));
+
+    // An already-expired deadline is refused deterministically, before
+    // the request ever reaches the batch queue.
+    let expired = msg(
+        "mvm",
+        &[("id", Json::Num(id)), ("w", w.clone()), ("deadline_ms", Json::Num(-5.0))],
+    );
+    let refused = client.call(&expired).expect("frame");
+    assert_eq!(refused.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(refused.get("error").and_then(Json::as_str), Some("deadline_exceeded"));
+
+    // Three request-tagged panics in a row: structured errors each time,
+    // then the breaker opens.
+    let inject = msg(
+        "mvm",
+        &[("id", Json::Num(id)), ("w", w.clone()), ("inject", Json::str("panic"))],
+    );
+    for _ in 0..3 {
+        let r = client.call(&inject).expect("frame");
+        assert_eq!(r.get("error").and_then(Json::as_str), Some("worker_panic"));
+    }
+    let clean = msg("mvm", &[("id", Json::Num(id)), ("w", w.clone())]);
+    let rejected = client.call(&clean).expect("frame");
+    assert_eq!(rejected.get("error").and_then(Json::as_str), Some("breaker_open"));
+    assert!(rejected.get("retry_after_ms").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+
+    let stats = client.stats().expect("stats");
+    let entry = &stats.get("ops").and_then(Json::as_arr).expect("ops")[0];
+    let breaker = entry.get("breaker").expect("breaker stats");
+    assert_eq!(breaker.get("state").and_then(Json::as_str), Some("open"));
+    assert_eq!(entry.get("worker_panics").and_then(Json::as_usize), Some(3));
+
+    // After the cooldown the half-open probe admits one clean request,
+    // and its success closes the breaker again.
+    std::thread::sleep(Duration::from_millis(220));
+    let healed = client.call(&clean).expect("frame");
+    assert_eq!(healed.get("ok").and_then(Json::as_bool), Some(true), "half-open probe succeeds");
+    let stats = client.stats().expect("stats");
+    let entry = &stats.get("ops").and_then(Json::as_arr).expect("ops")[0];
+    let breaker = entry.get("breaker").expect("breaker stats");
+    assert_eq!(breaker.get("state").and_then(Json::as_str), Some("closed"));
+    assert!(breaker.get("trips").and_then(Json::as_usize).unwrap_or(0) >= 1);
+    client.close();
+    server.shutdown().expect("clean shutdown");
+}
+
+/// The chaos soak: probabilistic apply panics, injected latency, and
+/// connection drops under eight concurrent clients. The reliability
+/// contract: every request resolves to a framed response (no hangs, no
+/// stranded transports), the admission queue stays within its cap, and
+/// the server still shuts down cleanly.
+#[test]
+fn chaos_soak_every_request_gets_a_framed_response() {
+    const N: usize = 300;
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 1,
+        registry_capacity: 4,
+        batch: BatchConfig {
+            max_columns: 4,
+            gather_window: Duration::from_millis(5),
+            max_queue: 16,
+        },
+        breaker: BreakerConfig {
+            failure_threshold: 4,
+            cooldown: Duration::from_millis(100),
+            half_open_probes: 1,
+        },
+        faults: FaultConfig {
+            panic_p: 0.05,
+            latency: Duration::from_millis(2),
+            drop_p: 0.02,
+            inject: true,
+            ..FaultConfig::disabled()
+        },
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(&cfg).expect("spawn server under faults");
+    let soak_cfg = SoakConfig {
+        clients: 8,
+        requests_per_client: 12,
+        open: open_request(N),
+        weight_len: N,
+        timeout: Duration::from_secs(30),
+        ..SoakConfig::default()
+    };
+    let report = soak::run(server.addr(), &soak_cfg);
+    assert_eq!(report.open_failures, 0, "every client must open through the retries");
+    assert_eq!(report.total, 96);
+    assert_eq!(report.hung, 0, "no request may hang under fault injection");
+    assert_eq!(report.transport_failures, 0, "injected drops must be retried away");
+    assert_eq!(report.framed(), report.total, "every request resolved to a framed response");
+    assert!(report.error_rate() < 0.5, "error rate {:.3}", report.error_rate());
+
+    let mut probe = Client::connect(server.addr()).expect("probe connect");
+    let stats = probe
+        .call_retry(&msg("stats", &[]), &RetryPolicy::default())
+        .expect("stats under faults");
+    assert_eq!(stats.get("ok").and_then(Json::as_bool), Some(true));
+    let cap = stats
+        .get("config")
+        .and_then(|c| c.get("queue_cap"))
+        .and_then(Json::as_usize)
+        .expect("queue cap");
+    for op in stats.get("ops").and_then(Json::as_arr).expect("ops") {
+        let depth = op.get("queue_depth").and_then(Json::as_usize).unwrap_or(0);
+        assert!(depth <= cap, "queue depth {depth} within cap {cap}");
+    }
+    let injected = stats
+        .get("faults")
+        .and_then(|f| f.get("injected_latency"))
+        .and_then(Json::as_usize)
+        .unwrap_or(0);
+    assert!(injected >= 1, "the fault facility must actually have fired");
+    probe.close();
+    server.shutdown().expect("clean shutdown under faults");
 }
