@@ -1,0 +1,114 @@
+//! Additive (ANOVA) composite accuracy vs dimension — the paper-facing
+//! claim behind `session.additive`: a sum of low-arity projected FKT
+//! terms makes high-dimensional kernels feasible, with the requested
+//! tolerance ε split across the terms and every term resolving its own
+//! `(p, θ)` in its *projected* dimension (arXiv:2111.10140 composition
+//! over the FKT of arXiv:2106.04487).
+//!
+//! For d ∈ {10, 20} and ε ∈ {1e-2, 1e-4}, builds a k-term random-subset
+//! composite, checks one MVM against the dense additive baseline on a
+//! target subsample (asserting rel l2 ≤ ε), and times the composite apply
+//! against the dense additive cost (extrapolated from the subsample rows
+//! — the full dense sweep is O(T·N²)).
+//!
+//! Records into BENCH.json (merged):
+//! * `anova_relerr_d{10,20}_eps{1e-2,1e-4}` — rel l2 error vs dense;
+//! * `anova_speedup_d{10,20}` — composite vs dense additive MVM, at ε=1e-2;
+//! * `simd_backend` — the dispatched near-field backend.
+//!
+//! ```text
+//! cargo bench --bench anova_accuracy [-- --n 8000 --k 8 --arity 3]
+//! ```
+
+use fkt::baselines::dense_additive_mvm;
+use fkt::benchkit::{fmt_time, BenchJson, Table};
+use fkt::cli::Args;
+use fkt::kernels::{Family, Kernel};
+use fkt::points::Points;
+use fkt::rng::Pcg32;
+use fkt::session::{Session, Subsets};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n: usize = args.get("n", if args.has_flag("full") { 20000 } else { 8000 });
+    let k: usize = args.get("k", 8);
+    let arity: usize = args.get("arity", 3);
+    let seed: u64 = args.get("seed", 42);
+    let session = Session::native(args.threads());
+    let mut json = BenchJson::new();
+    let mut table =
+        Table::new(&["d", "eps", "terms", "rel l2 err", "build", "fkt mvm", "vs dense"]);
+
+    println!(
+        "ANOVA composite accuracy: N={n}, {k} random subsets of {arity} axes, gaussian kernel"
+    );
+    for d in [10usize, 20] {
+        let mut rng = Pcg32::seeded(seed ^ (d as u64));
+        let pts = fkt::data::uniform_hypersphere(n, d, &mut rng);
+        let w = rng.normal_vec(n);
+        let kernel = Kernel::canonical(Family::Gaussian);
+        let subs = Subsets::Random { k, arity }.materialize(d, seed).expect("subsets");
+        let weights = vec![1.0; subs.len()];
+
+        // Dense additive reference on a row subsample; ε-independent, so
+        // computed once per dimension. Its per-row cost extrapolates to
+        // the full dense additive MVM for the speedup ratio.
+        let m = n.min(1500);
+        let sub = Points::new(d, pts.coords[..m * d].to_vec());
+        let t_dense = Instant::now();
+        let dense = dense_additive_mvm(&kernel, &pts, Some(&sub), &subs, &weights, &w);
+        let dense_s = t_dense.elapsed().as_secs_f64();
+        let dense_full_est = dense_s * (n as f64 / m as f64);
+
+        for (ei, &eps) in [1e-2, 1e-4].iter().enumerate() {
+            let t_build = Instant::now();
+            let op = session
+                .additive(&pts)
+                .kernel(Family::Gaussian)
+                .tolerance(eps)
+                .subsets(Subsets::Explicit(subs.clone()))
+                .build();
+            let build_s = t_build.elapsed().as_secs_f64();
+            assert!(op.as_composite().is_some(), "additive build must yield a composite");
+            let _ = session.mvm(&op, &w); // warm apply: panels, thread pool
+            let t_mvm = Instant::now();
+            let z = session.mvm(&op, &w);
+            let mvm_s = t_mvm.elapsed().as_secs_f64();
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for i in 0..m {
+                num += (z[i] - dense[i]) * (z[i] - dense[i]);
+                den += dense[i] * dense[i];
+            }
+            let rel = (num / den.max(1e-300)).sqrt();
+            assert!(
+                rel <= eps,
+                "composite misses the requested tolerance: rel {rel:.3e} > eps {eps:.1e} at d={d}"
+            );
+            let speedup = dense_full_est / mvm_s.max(1e-12);
+            table.row(&[
+                d.to_string(),
+                format!("{eps:.0e}"),
+                subs.len().to_string(),
+                format!("{rel:.2e}"),
+                fmt_time(build_s),
+                fmt_time(mvm_s),
+                format!("{speedup:.0}x"),
+            ]);
+            json.record(&format!("anova_relerr_d{d}_eps{eps:.0e}"), rel);
+            if ei == 0 {
+                // The headline speedup per dimension: the ε=1e-2 build.
+                json.record(&format!("anova_speedup_d{d}"), speedup);
+            }
+        }
+    }
+    table.print();
+
+    json.record_str("simd_backend", fkt::linalg::simd::backend().name());
+    let path = BenchJson::default_path();
+    match json.save_merged(&path) {
+        Ok(()) => println!("\nBENCH json merged into {}", path.display()),
+        Err(e) => eprintln!("\nBENCH json write failed ({}): {e}", path.display()),
+    }
+}

@@ -255,6 +255,29 @@ impl BenchJson {
     }
 }
 
+/// Parse a required-keys manifest (e.g. `BENCH_KEYS.txt`): one metric key
+/// per line; blank lines and `#` comments (whole-line or trailing) are
+/// ignored.
+pub fn parse_key_manifest(text: &str) -> Vec<String> {
+    text.lines()
+        .map(|l| l.split('#').next().unwrap_or("").trim())
+        .filter(|l| !l.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+/// Keys from `required` absent from a recorded BENCH.json text. A key
+/// whose value serialized as `null` (a non-finite number) also counts as
+/// missing — a promised metric that failed to record a finite value is a
+/// broken promise, and the CI guard should fail loudly rather than ship a
+/// silently hollow artifact.
+pub fn missing_keys(bench_json: &str, required: &[String]) -> Vec<String> {
+    let parsed = BenchJson::parse_flat(bench_json);
+    let present: std::collections::HashSet<&str> =
+        parsed.iter().map(|(k, _)| k.as_str()).collect();
+    required.iter().filter(|k| !present.contains(k.as_str())).cloned().collect()
+}
+
 /// Render seconds human-readably.
 pub fn fmt_time(s: f64) -> String {
     if s < 1e-6 {
@@ -409,6 +432,31 @@ mod tests {
             "string values survive the merge round-trip"
         );
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn key_manifest_parses_comments_and_blanks() {
+        let text = "# promised bench keys\n\nanova_speedup_d10\n\
+                    anova_relerr_d20_eps1e-4   # trailing comment\n   \n";
+        assert_eq!(
+            parse_key_manifest(text),
+            vec!["anova_speedup_d10".to_string(), "anova_relerr_d20_eps1e-4".to_string()]
+        );
+    }
+
+    #[test]
+    fn missing_keys_flags_absent_and_null_metrics() {
+        let mut j = BenchJson::new();
+        j.record("present", 1.0);
+        j.record("went_null", f64::NAN); // serializes as null ⇒ missing
+        j.record_str("simd_backend", "scalar");
+        let required: Vec<String> = ["present", "went_null", "never_recorded", "simd_backend"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let missing = missing_keys(&j.to_json(), &required);
+        assert_eq!(missing, vec!["went_null".to_string(), "never_recorded".to_string()]);
+        assert!(missing_keys(&j.to_json(), &[]).is_empty());
     }
 
     #[test]

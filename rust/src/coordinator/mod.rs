@@ -245,14 +245,16 @@ impl Coordinator {
             metrics.far_passes = f1 - f0;
             metrics.near_passes = n1 - n0;
         }
-        if let Some(f) = op.as_fkt() {
-            let ps = f.panel_stats();
+        // Capability methods, not downcasts: composites and wrappers
+        // aggregate/forward these, so the metrics stay truthful for any
+        // backend with panel/precision structure.
+        if let Some(ps) = op.panel_stats() {
             metrics.panel_bytes = ps.resident_bytes;
             metrics.panels_cached = ps.panels_cached;
             metrics.panels_streamed = ps.panels_streamed;
             metrics.panel_reuse = ps.applies.saturating_sub(1);
-            metrics.precision = f.cfg.precision;
         }
+        metrics.precision = op.storage_precision();
         *lock(&self.last_metrics) = metrics;
         z
     }
@@ -485,6 +487,37 @@ mod tests {
             den += b * b;
         }
         assert!((num / den).sqrt() < 1e-4, "backends disagree");
+    }
+
+    #[test]
+    fn composite_reports_summed_metrics() {
+        use crate::op::composite::{SharedTermOp, SumOp};
+        use std::sync::Arc;
+        let pts = uniform_points(500, 3, 143);
+        let mut rng = Pcg32::seeded(144);
+        let w = rng.normal_vec(500 * 2);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
+        let terms: Vec<(f64, SharedTermOp)> = [[0usize, 1], [1, 2], [0, 2]]
+            .iter()
+            .map(|axes| {
+                let proj = pts.project(axes);
+                (1.0, Arc::new(FktOperator::square(&proj, kern, cfg)) as SharedTermOp)
+            })
+            .collect();
+        let sum = SumOp::new(terms);
+        let coord = Coordinator::native(4);
+        let _ = coord.mvm_batch(&sum, &w, 2);
+        let m = coord.last_metrics();
+        // One traversal per term for the whole 2-column batch, summed
+        // across the composite's three terms — not 3·columns.
+        assert_eq!(m.columns, 2);
+        assert_eq!((m.moment_passes, m.far_passes, m.near_passes), (3, 3, 3));
+        // Panel accounting survives the composite: the summed stats cover
+        // every term's cache.
+        assert!(m.panels_cached > 0, "composite must not lose panel metrics");
+        assert!(m.panel_bytes > 0);
+        assert_eq!(m.precision, Precision::F64);
     }
 
     #[test]

@@ -933,6 +933,14 @@ impl KernelOp for FktOperator {
         self.reset_traversal_counts()
     }
 
+    fn panel_stats(&self) -> Option<PanelStats> {
+        Some(FktOperator::panel_stats(self))
+    }
+
+    fn storage_precision(&self) -> crate::linalg::Precision {
+        self.cfg.precision
+    }
+
     fn as_fkt(&self) -> Option<&FktOperator> {
         Some(self)
     }

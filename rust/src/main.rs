@@ -2,10 +2,18 @@
 //!
 //! Subcommands:
 //!   info                     environment/artifact/runtime diagnostics
-//!   mvm    [--n --d --tol …]  one fast MVM with accuracy + timing report
-//!   gp     [--n …]           GP regression on the simulated SST workload
+//!   mvm    [--n --d --tol …]  one fast MVM with accuracy + timing report;
+//!                            `--subsets random:KxA | i,j;k,l` builds an
+//!                            additive (ANOVA) composite over feature
+//!                            projections and checks it against the dense
+//!                            additive baseline
+//!   gp     [--n …]           GP regression on the simulated SST workload;
+//!                            with `--subsets …` a synthetic additive task
+//!                            at `--d` (default 20) under an additive
+//!                            covariance
 //!   gp-train [--n --iters …] GP hyperparameter training (LML ascent
-//!                            through batched MVM/solve verbs)
+//!                            through batched MVM/solve verbs); accepts
+//!                            `--subsets …` like `gp`
 //!   tsne   [--n …]           t-SNE embedding of the MNIST surrogate
 //!   plan   [--n …]           print the far/near plan statistics
 //!   serve  [--port --threads --max-cols --window-us --queue-cap
@@ -26,6 +34,10 @@
 //!                            every outcome tallied; exits nonzero on
 //!                            hangs, transport failures, or an error rate
 //!                            over --max-error-rate
+//!   bench-check [--bench BENCH.json --keys BENCH_KEYS.txt]
+//!                            CI guard: exit 1 (listing the keys) when the
+//!                            benchmark artifact lacks any key the manifest
+//!                            promises, exit 2 on unreadable inputs
 //!
 //! Every subcommand talks to the library through one `Session` — the
 //! public entry point that owns the coordinator, the operator registry,
@@ -42,13 +54,13 @@
 //! Every experiment from the paper has a dedicated example/bench binary
 //! (see README); this launcher covers interactive use of the same API.
 
-use fkt::baselines::dense_mvm;
+use fkt::baselines::{dense_additive_mvm, dense_mvm};
 use fkt::benchkit::fmt_time;
 use fkt::cli::Args;
 use fkt::kernels::{Family, Kernel};
 use fkt::points::Points;
 use fkt::rng::Pcg32;
-use fkt::session::{simd_backend, Backend, OpHandle, Precision, Session};
+use fkt::session::{simd_backend, Backend, OpHandle, Precision, Session, Subsets};
 use std::time::Instant;
 
 /// The uniform `--precision {f64,f32,auto}` flag (default `auto`).
@@ -71,6 +83,7 @@ fn main() {
         "serve" => serve(&args),
         "serve-probe" => serve_probe(&args),
         "serve-soak" => serve_soak(&args),
+        "bench-check" => bench_check(&args),
         other => {
             eprintln!("unknown subcommand {other:?}; see `fkt info`");
             std::process::exit(2);
@@ -121,9 +134,22 @@ fn info() {
 /// precedence as `OpSpec`: `--tol ε` routes through tolerance resolution,
 /// and any explicit `--p`/`--theta` override the resolved values; without
 /// `--tol` the explicit flags (or their defaults p=4, θ=0.5) apply.
-fn build_op(args: &Args, session: &Session) -> (OpHandle, Vec<f64>, Points, Kernel) {
+///
+/// `--subsets random:KxA | i,j;k,l` routes through `session.additive`
+/// instead: an ANOVA composite whose terms are FKT operators over the
+/// named coordinate projections. The materialized axis lists come back so
+/// callers can check against the dense additive baseline.
+fn build_op(
+    args: &Args,
+    session: &Session,
+) -> (OpHandle, Vec<f64>, Points, Kernel, Option<Vec<Vec<usize>>>) {
+    let subsets = args
+        .options
+        .get("subsets")
+        .map(|s| Subsets::parse(s).unwrap_or_else(|e| panic!("--subsets: {e}")));
     let n: usize = args.get("n", 20000);
-    let d: usize = args.get("d", 3);
+    // Additive composites exist to make high-d feasible; default d there.
+    let d: usize = args.get("d", if subsets.is_some() { 10 } else { 3 });
     let seed: u64 = args.get("seed", 1);
     let family = Family::from_name(&args.get_str("kernel", "matern32")).expect("kernel");
     let kernel = Kernel::canonical(family);
@@ -134,26 +160,53 @@ fn build_op(args: &Args, session: &Session) -> (OpHandle, Vec<f64>, Points, Kern
         fkt::data::uniform_hypersphere(n, d, &mut rng)
     };
     let w = rng.normal_vec(n);
-    let mut spec = session
-        .operator(&pts)
-        .kernel(family)
-        .leaf_capacity(args.get("leaf", 512))
-        .precision(precision_from(args))
-        .compression(args.has_flag("compress"));
-    match args.tolerance() {
-        Some(eps) => {
-            spec = spec.tolerance(eps);
-            // Explicit flags override the resolved values (OpSpec rules).
-            if let Some(p) = args.get_opt("p") {
-                spec = spec.order(p);
-            }
-            if let Some(t) = args.get_opt("theta") {
-                spec = spec.theta(t);
-            }
+    let (op, subs) = match subsets {
+        Some(subsets) => {
+            let mut spec = session
+                .additive(&pts)
+                .kernel(family)
+                .precision(precision_from(args))
+                .seed(seed)
+                .subsets(subsets);
+            spec = match args.tolerance() {
+                // ε splits across terms; each resolves (p, θ) in its own
+                // projected dimension.
+                Some(eps) => spec.tolerance(eps).leaf_capacity(args.get("leaf", 512)),
+                None => spec.config(fkt::fkt::FktConfig {
+                    p: args.get("p", 4),
+                    theta: args.get("theta", 0.5),
+                    leaf_capacity: args.get("leaf", 512),
+                    ..Default::default()
+                }),
+            };
+            let subs = spec.materialized_subsets();
+            println!("additive composite: {} term(s) over axis subsets {subs:?}", subs.len());
+            (spec.build(), Some(subs))
         }
-        None => spec = spec.order(args.get("p", 4)).theta(args.get("theta", 0.5)),
-    }
-    let op = spec.build();
+        None => {
+            let mut spec = session
+                .operator(&pts)
+                .kernel(family)
+                .leaf_capacity(args.get("leaf", 512))
+                .precision(precision_from(args))
+                .compression(args.has_flag("compress"));
+            match args.tolerance() {
+                Some(eps) => {
+                    spec = spec.tolerance(eps);
+                    // Explicit flags override the resolved values (OpSpec
+                    // rules).
+                    if let Some(p) = args.get_opt("p") {
+                        spec = spec.order(p);
+                    }
+                    if let Some(t) = args.get_opt("theta") {
+                        spec = spec.theta(t);
+                    }
+                }
+                None => spec = spec.order(args.get("p", 4)).theta(args.get("theta", 0.5)),
+            }
+            (spec.build(), None)
+        }
+    };
     if let Some(res) = op.resolved() {
         println!(
             "tolerance {:.1e} resolved to p={} θ={} (bound estimate {:.2e})",
@@ -164,13 +217,13 @@ fn build_op(args: &Args, session: &Session) -> (OpHandle, Vec<f64>, Points, Kern
         );
     }
     println!("storage tier: {}", op.precision().name());
-    (op, w, pts, kernel)
+    (op, w, pts, kernel, subs)
 }
 
 fn mvm(args: &Args) {
     let session = session_from(args);
     let t0 = Instant::now();
-    let (op, w, pts, kernel) = build_op(args, &session);
+    let (op, w, pts, kernel, subsets) = build_op(args, &session);
     println!("build: {}", fmt_time(t0.elapsed().as_secs_f64()));
     let cols: usize = args.get("cols", 1);
     let t1 = Instant::now();
@@ -203,10 +256,16 @@ fn mvm(args: &Args) {
         );
         z
     };
-    // Spot accuracy on a subsample.
+    // Spot accuracy on a subsample — against the dense *additive* baseline
+    // when the operator is a composite over feature projections.
     let m = pts.len().min(1000);
     let sub = Points::new(pts.d, pts.coords[..m * pts.d].to_vec());
-    let dense = dense_mvm(&kernel, &pts, &sub, &w);
+    let dense = match &subsets {
+        Some(subs) => {
+            dense_additive_mvm(&kernel, &pts, Some(&sub), subs, &vec![1.0; subs.len()], &w)
+        }
+        None => dense_mvm(&kernel, &pts, &sub, &w),
+    };
     let mut num = 0.0;
     let mut den = 0.0;
     for i in 0..m {
@@ -218,7 +277,7 @@ fn mvm(args: &Args) {
 
 fn plan(args: &Args) {
     let session = session_from(args);
-    let (op, _, _, _) = build_op(args, &session);
+    let (op, _, _, _, _) = build_op(args, &session);
     let fkt_op = op.as_fkt().expect("plan statistics need an FKT operator");
     let stats = fkt_op.plan().stats(fkt_op.tree());
     println!("nodes: {}", fkt_op.tree().nodes.len());
@@ -231,10 +290,92 @@ fn plan(args: &Args) {
     println!("largest far set: {}", stats.far_targets_max);
 }
 
+/// Synthetic regression targets for the high-dimensional additive demos:
+/// a smooth additive function of the coordinates (each axis contributes a
+/// damped sinusoid) plus observation noise — the model class where a sum
+/// of low-arity kernel terms is the right covariance.
+fn additive_dataset(n: usize, d: usize, rng: &mut Pcg32) -> (Points, Vec<f64>) {
+    let pts = fkt::data::uniform_hypersphere(n, d, rng);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = &pts.coords[i * d..(i + 1) * d];
+        let mut v = 0.0;
+        for (j, &xj) in x.iter().enumerate() {
+            let freq = 1.0 + 0.5 * (j as f64 / d as f64);
+            v += (freq * std::f64::consts::PI * xj).sin() / (1.0 + j as f64).sqrt();
+        }
+        y.push(v + 0.05 * rng.normal());
+    }
+    (pts, y)
+}
+
+/// `fkt gp --subsets …`: GP regression with an additive (ANOVA)
+/// covariance on the synthetic high-d task. Every term is an FKT operator
+/// over a feature projection, so d=20 stays feasible as long as the
+/// subsets are low-arity.
+fn gp_additive(args: &Args, subsets: Subsets) {
+    use fkt::fkt::FktConfig;
+    use fkt::gp::{GpConfig, GpRegressor};
+    let n: usize = args.get("n", 4000);
+    let d: usize = args.get("d", 20);
+    let rho: f64 = args.get("rho", 0.4);
+    let noise0: f64 = args.get("noise0", 0.1);
+    let seed: u64 = args.get("seed", 17);
+    let mut rng = Pcg32::seeded(seed);
+    let (pts, y) = additive_dataset(n, d, &mut rng);
+    let mean_y: f64 = y.iter().sum::<f64>() / y.len() as f64;
+    let y0: Vec<f64> = y.iter().map(|v| v - mean_y).collect();
+    let cfg = GpConfig {
+        fkt: FktConfig {
+            p: args.get("p", 6),
+            theta: args.get("theta", 0.4),
+            leaf_capacity: args.get("leaf", 256),
+            ..Default::default()
+        },
+        tolerance: args.tolerance(),
+        precision: precision_from(args),
+        cg_tol: args.get("cg-tol", 1e-5),
+        cg_max_iters: args.get("cg-max", 600),
+        jitter: 1e-6,
+        precondition: true,
+    };
+    let session = session_from(args);
+    let mut gp = GpRegressor::new_additive(
+        &session,
+        pts,
+        vec![noise0; n],
+        Kernel::matern32(rho),
+        cfg,
+        &subsets,
+        seed,
+    );
+    let terms = gp.subsets().map_or(0, |s| s.len());
+    println!(
+        "additive GP: N={n}, d={d}, Matérn-3/2 ρ={rho}, {terms} term(s) over {:?}",
+        gp.subsets().unwrap_or(&[])
+    );
+    if let Some(res) = gp.operator().resolved() {
+        println!("tolerance resolved to p={} θ={}", res.p, res.theta);
+    }
+    println!("storage tier: {}", gp.operator().precision().name());
+    let t0 = Instant::now();
+    let fit = gp.fit_alpha(&y0, &session);
+    println!(
+        "CG: {} iters, residual {:.2e}, {}",
+        fit.iterations,
+        fit.rel_residual,
+        fmt_time(t0.elapsed().as_secs_f64())
+    );
+}
+
 fn gp(args: &Args) {
     use fkt::data::sst;
     use fkt::fkt::FktConfig;
     use fkt::gp::{GpConfig, GpRegressor};
+    if let Some(text) = args.options.get("subsets") {
+        let subsets = Subsets::parse(text).unwrap_or_else(|e| panic!("--subsets: {e}"));
+        return gp_additive(args, subsets);
+    }
     let n: usize = args.get("n", 20000);
     let rho: f64 = args.get("rho", 0.22);
     let mut rng = Pcg32::seeded(args.get("seed", 17));
@@ -289,12 +430,25 @@ fn gp_train(args: &Args) {
     use fkt::data::sst;
     use fkt::fkt::FktConfig;
     use fkt::gp::{GpConfig, GpRegressor, TrainOpts};
-    let n: usize = args.get("n", 10000);
+    let subsets = args
+        .options
+        .get("subsets")
+        .map(|s| Subsets::parse(s).unwrap_or_else(|e| panic!("--subsets: {e}")));
+    let n: usize = args.get("n", if subsets.is_some() { 4000 } else { 10000 });
     let rho0: f64 = args.get("rho0", 0.45);
     let noise0: f64 = args.get("noise0", 0.1);
-    let mut rng = Pcg32::seeded(args.get("seed", 17));
-    let ds = sst::simulate(7.0, n, &mut rng);
-    let y = ds.temperatures();
+    let seed: u64 = args.get("seed", 17);
+    let mut rng = Pcg32::seeded(seed);
+    let (pts, y) = match &subsets {
+        // `--subsets` trains the additive covariance on the synthetic
+        // high-d additive task; every step rebuilds T projected terms
+        // instead of one full-d operator.
+        Some(_) => additive_dataset(n, args.get("d", 20), &mut rng),
+        None => {
+            let ds = sst::simulate(7.0, n, &mut rng);
+            (ds.unit_sphere_points(), ds.temperatures())
+        }
+    };
     let mean_y: f64 = y.iter().sum::<f64>() / y.len() as f64;
     let y0: Vec<f64> = y.iter().map(|v| v - mean_y).collect();
     let cfg = GpConfig {
@@ -321,19 +475,34 @@ fn gp_train(args: &Args) {
         ..Default::default()
     };
     // Training churns operators (every scale step is a new registry key);
-    // bound the LRU so dead trees and panels don't accumulate.
-    let session = session_with_capacity(args, 4);
-    let mut gp = GpRegressor::new(
-        &session,
-        ds.unit_sphere_points(),
-        vec![noise0; n],
-        Kernel::matern32(rho0),
-        cfg,
-    );
-    println!(
-        "gp-train: N={n}, Matérn-3/2, ρ₀={rho0}, σ_n²₀={noise0}, {} iterations, {} probes",
-        opts.iters, opts.probes
-    );
+    // bound the LRU so dead trees and panels don't accumulate. Additive
+    // training churns T terms + composite per step — give it headroom.
+    let session = session_with_capacity(args, if subsets.is_some() { 16 } else { 4 });
+    let mut gp = match &subsets {
+        Some(s) => GpRegressor::new_additive(
+            &session,
+            pts,
+            vec![noise0; n],
+            Kernel::matern32(rho0),
+            cfg,
+            s,
+            seed,
+        ),
+        None => GpRegressor::new(&session, pts, vec![noise0; n], Kernel::matern32(rho0), cfg),
+    };
+    match gp.subsets() {
+        Some(subs) => println!(
+            "gp-train: N={n}, additive Matérn-3/2, ρ₀={rho0}, σ_n²₀={noise0}, \
+             {} term(s) over {subs:?}, {} iterations, {} probes",
+            subs.len(),
+            opts.iters,
+            opts.probes
+        ),
+        None => println!(
+            "gp-train: N={n}, Matérn-3/2, ρ₀={rho0}, σ_n²₀={noise0}, {} iterations, {} probes",
+            opts.iters, opts.probes
+        ),
+    }
     let t0 = Instant::now();
     let res = gp.train(&session, &y0, &opts);
     let total = t0.elapsed().as_secs_f64();
@@ -920,4 +1089,44 @@ fn serve_soak(args: &Args) {
         fail(&format!("error rate {:.3} exceeds budget {max_error_rate:.3}", report.error_rate()));
     }
     println!("serve-soak: OK (queue depth within cap {queue_cap})");
+}
+
+/// CI guard for the benchmark artifact: every key the manifest promises
+/// must be present (and non-null) in BENCH.json, or a bench silently
+/// stopped recording. Exit 0 when complete, 1 listing the missing keys,
+/// 2 when either input is unreadable or the manifest is empty.
+fn bench_check(args: &Args) {
+    use fkt::benchkit::{missing_keys, parse_key_manifest};
+    let bench_path = args.get_str("bench", "BENCH.json");
+    let keys_path = args.get_str("keys", "BENCH_KEYS.txt");
+    let manifest = std::fs::read_to_string(&keys_path).unwrap_or_else(|e| {
+        eprintln!("bench-check: cannot read key manifest {keys_path}: {e}");
+        std::process::exit(2);
+    });
+    let required = parse_key_manifest(&manifest);
+    if required.is_empty() {
+        eprintln!("bench-check: manifest {keys_path} promises no keys");
+        std::process::exit(2);
+    }
+    let bench = std::fs::read_to_string(&bench_path).unwrap_or_else(|e| {
+        eprintln!("bench-check: cannot read benchmark artifact {bench_path}: {e}");
+        std::process::exit(2);
+    });
+    let missing = missing_keys(&bench, &required);
+    if missing.is_empty() {
+        println!(
+            "bench-check: all {} promised key(s) present in {bench_path}",
+            required.len()
+        );
+    } else {
+        eprintln!(
+            "bench-check: {bench_path} is missing {} of {} promised key(s):",
+            missing.len(),
+            required.len()
+        );
+        for key in &missing {
+            eprintln!("  {key}");
+        }
+        std::process::exit(1);
+    }
 }

@@ -1,0 +1,488 @@
+//! The compositional operator algebra: weighted sums, scalings, and
+//! diagonal shifts of [`KernelOp`]s.
+//!
+//! Additive (ANOVA-style) kernels `K(x, y) = Σ_t w_t · K_t(x_{S_t}, y_{S_t})`
+//! over feature subsets `S_t` recover quasilinear MVMs in high dimension by
+//! summing low-dimensional fast operators (Nestler–Stoll–Wagner,
+//! arXiv:2111.10140; additive-kernel follow-up arXiv:2404.17344). The
+//! session builds each term as an ordinary registry-cached FKT operator
+//! over a coordinate projection and hands the bundle to [`SumOp`], which is
+//! itself a `KernelOp` — so `apply_batch`, `solve_batch`, GP training, and
+//! the serving layer all work against a composite unchanged.
+//!
+//! Two invariants matter for performance and observability:
+//!
+//! * **One traversal per term per batch.** `SumOp::apply_batch` calls each
+//!   term's own fused `apply_batch` exactly once and accumulates into one
+//!   output buffer — the batch never decays into per-column traversals.
+//! * **Aggregated capability methods.** Phase counters and panel stats sum
+//!   over terms, and storage precision reports the weakest tier, so the
+//!   coordinator's `MvmMetrics` stay truthful for composites without any
+//!   downcast to a concrete backend.
+//!
+//! [`ScaledOp`] and [`DiagShiftOp`] are the small pieces that make the
+//! algebra closed under what `solve` needs: `α·A` and `A + σ²·I` are again
+//! `KernelOp`s, and `DiagShiftOp(SumOp) · w == SumOp · w + σ²·w` exactly
+//! (the shift commutes with the sum), so a composite slots into the
+//! regularized-system view without special cases.
+
+use super::KernelOp;
+use crate::fkt::PanelStats;
+use crate::linalg::Precision;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// A shareable operator term — the same shape the session registry hands
+/// out, so composite terms are registry-cached Arcs.
+pub type SharedTermOp = Arc<dyn KernelOp + Send + Sync>;
+
+/// Weighted sum of kernel operators over the same source/target sets:
+/// `z = Σ_t w_t · (A_t · w)`.
+pub struct SumOp {
+    terms: Vec<(f64, SharedTermOp)>,
+    n: usize,
+    t: usize,
+}
+
+impl SumOp {
+    /// Build from weighted terms. All terms must agree on source and
+    /// target counts; at least one term is required.
+    pub fn new(terms: Vec<(f64, SharedTermOp)>) -> SumOp {
+        assert!(!terms.is_empty(), "SumOp needs at least one term");
+        let n = terms[0].1.num_sources();
+        let t = terms[0].1.num_targets();
+        for (i, (_, term)) in terms.iter().enumerate() {
+            assert_eq!(term.num_sources(), n, "term {i} source count mismatch");
+            assert_eq!(term.num_targets(), t, "term {i} target count mismatch");
+        }
+        SumOp { terms, n, t }
+    }
+
+    /// Number of terms in the sum.
+    pub fn num_terms(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// The weighted terms, in construction order.
+    pub fn terms(&self) -> &[(f64, SharedTermOp)] {
+        &self.terms
+    }
+
+    /// `out += weight · z` — the one accumulation primitive.
+    fn axpy(out: &mut [f64], weight: f64, z: &[f64]) {
+        for (o, x) in out.iter_mut().zip(z) {
+            *o += weight * x;
+        }
+    }
+}
+
+impl KernelOp for SumOp {
+    fn num_sources(&self) -> usize {
+        self.n
+    }
+
+    fn num_targets(&self) -> usize {
+        self.t
+    }
+
+    fn apply(&self, w: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.t];
+        self.apply_into(w, &mut out);
+        out
+    }
+
+    fn apply_into(&self, w: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.t, "output column length mismatch");
+        out.fill(0.0);
+        for (weight, term) in &self.terms {
+            Self::axpy(out, *weight, &term.apply(w));
+        }
+    }
+
+    /// One fused batch per term, accumulated into a single output block —
+    /// `m` columns cost each term exactly one traversal.
+    fn apply_batch(&self, w: &[f64], m: usize) -> Vec<f64> {
+        assert_eq!(w.len(), self.n * m, "weight block shape mismatch");
+        let mut out = vec![0.0; self.t * m];
+        for (weight, term) in &self.terms {
+            Self::axpy(&mut out, *weight, &term.apply_batch(w, m));
+        }
+        out
+    }
+
+    fn apply_threaded(&self, w: &[f64], threads: usize) -> Vec<f64> {
+        self.apply_batch_threaded(w, 1, threads)
+    }
+
+    /// Splits the thread budget across terms: up to `min(terms, threads)`
+    /// workers pull term indices from a shared cursor, each running its
+    /// term's own threaded batch with the remaining budget and
+    /// accumulating into a worker-local buffer; the locals are summed at
+    /// the end. Still one traversal per term.
+    fn apply_batch_threaded(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
+        assert_eq!(w.len(), self.n * m, "weight block shape mismatch");
+        let workers = self.terms.len().min(threads.max(1));
+        if workers <= 1 {
+            let mut out = vec![0.0; self.t * m];
+            for (weight, term) in &self.terms {
+                Self::axpy(&mut out, *weight, &term.apply_batch_threaded(w, m, threads));
+            }
+            return out;
+        }
+        let inner_threads = (threads / workers).max(1);
+        let cursor = AtomicUsize::new(0);
+        let locals: Vec<Vec<f64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut local = vec![0.0; self.t * m];
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            let Some((weight, term)) = self.terms.get(i) else { break };
+                            Self::axpy(
+                                &mut local,
+                                *weight,
+                                &term.apply_batch_threaded(w, m, inner_threads),
+                            );
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("composite worker panicked")).collect()
+        });
+        let mut out = vec![0.0; self.t * m];
+        for local in &locals {
+            Self::axpy(&mut out, 1.0, local);
+        }
+        out
+    }
+
+    /// Sum of the terms' phase counters — `Some` as soon as any term has
+    /// phase structure, so a composite of FKT terms stays observable.
+    fn phase_counts(&self) -> Option<(usize, usize, usize)> {
+        let mut acc = None;
+        for (_, term) in &self.terms {
+            if let Some((mo, fa, ne)) = term.phase_counts() {
+                let (amo, afa, ane) = acc.unwrap_or((0, 0, 0));
+                acc = Some((amo + mo, afa + fa, ane + ne));
+            }
+        }
+        acc
+    }
+
+    fn reset_phase_counts(&self) {
+        for (_, term) in &self.terms {
+            term.reset_phase_counts();
+        }
+    }
+
+    /// Field-wise sum of the terms' panel stats.
+    fn panel_stats(&self) -> Option<PanelStats> {
+        let mut acc: Option<PanelStats> = None;
+        for (_, term) in &self.terms {
+            if let Some(ps) = term.panel_stats() {
+                let a = acc.get_or_insert_with(PanelStats::default);
+                a.budget_bytes += ps.budget_bytes;
+                a.planned_bytes += ps.planned_bytes;
+                a.resident_bytes += ps.resident_bytes;
+                a.panels_cached += ps.panels_cached;
+                a.panels_streamed += ps.panels_streamed;
+                // Applies are in lockstep across terms; report the max so
+                // the reuse metric counts composite applies, not term·apply
+                // products.
+                a.applies = a.applies.max(ps.applies);
+            }
+        }
+        acc
+    }
+
+    /// `F32` only when every term stores f32 — mixed composites report the
+    /// conservative tier.
+    fn storage_precision(&self) -> Precision {
+        if self.terms.iter().all(|(_, t)| t.storage_precision() == Precision::F32) {
+            Precision::F32
+        } else {
+            Precision::F64
+        }
+    }
+
+    fn as_composite(&self) -> Option<&SumOp> {
+        Some(self)
+    }
+}
+
+/// `α · A` as an operator. Counters and stats delegate to the inner
+/// operator; `as_fkt` stays `None` because the scaled product is not the
+/// inner FKT's product.
+pub struct ScaledOp {
+    scale: f64,
+    inner: SharedTermOp,
+}
+
+impl ScaledOp {
+    /// Wrap `inner` as `scale · inner`.
+    pub fn new(scale: f64, inner: SharedTermOp) -> ScaledOp {
+        ScaledOp { scale, inner }
+    }
+}
+
+impl KernelOp for ScaledOp {
+    fn num_sources(&self) -> usize {
+        self.inner.num_sources()
+    }
+
+    fn num_targets(&self) -> usize {
+        self.inner.num_targets()
+    }
+
+    fn apply(&self, w: &[f64]) -> Vec<f64> {
+        let mut z = self.inner.apply(w);
+        for x in &mut z {
+            *x *= self.scale;
+        }
+        z
+    }
+
+    fn apply_batch(&self, w: &[f64], m: usize) -> Vec<f64> {
+        let mut z = self.inner.apply_batch(w, m);
+        for x in &mut z {
+            *x *= self.scale;
+        }
+        z
+    }
+
+    fn apply_batch_threaded(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
+        let mut z = self.inner.apply_batch_threaded(w, m, threads);
+        for x in &mut z {
+            *x *= self.scale;
+        }
+        z
+    }
+
+    fn phase_counts(&self) -> Option<(usize, usize, usize)> {
+        self.inner.phase_counts()
+    }
+
+    fn reset_phase_counts(&self) {
+        self.inner.reset_phase_counts();
+    }
+
+    fn panel_stats(&self) -> Option<PanelStats> {
+        self.inner.panel_stats()
+    }
+
+    fn storage_precision(&self) -> Precision {
+        self.inner.storage_precision()
+    }
+}
+
+/// `A + σ² · I` as an operator — the regularized-system view `solve` works
+/// against. Square by construction; the shift commutes with any inner
+/// structure (in particular a [`SumOp`]), so
+/// `DiagShiftOp(sum) · w == sum · w + σ²·w` exactly.
+pub struct DiagShiftOp {
+    shift: f64,
+    inner: SharedTermOp,
+}
+
+impl DiagShiftOp {
+    /// Wrap a square `inner` as `inner + shift · I`.
+    pub fn new(shift: f64, inner: SharedTermOp) -> DiagShiftOp {
+        assert_eq!(
+            inner.num_sources(),
+            inner.num_targets(),
+            "diagonal shift needs a square operator"
+        );
+        DiagShiftOp { shift, inner }
+    }
+}
+
+impl KernelOp for DiagShiftOp {
+    fn num_sources(&self) -> usize {
+        self.inner.num_sources()
+    }
+
+    fn num_targets(&self) -> usize {
+        self.inner.num_targets()
+    }
+
+    fn apply(&self, w: &[f64]) -> Vec<f64> {
+        let mut z = self.inner.apply(w);
+        for (o, x) in z.iter_mut().zip(w) {
+            *o += self.shift * x;
+        }
+        z
+    }
+
+    fn apply_batch(&self, w: &[f64], m: usize) -> Vec<f64> {
+        let mut z = self.inner.apply_batch(w, m);
+        for (o, x) in z.iter_mut().zip(w) {
+            *o += self.shift * x;
+        }
+        z
+    }
+
+    fn apply_batch_threaded(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
+        let mut z = self.inner.apply_batch_threaded(w, m, threads);
+        for (o, x) in z.iter_mut().zip(w) {
+            *o += self.shift * x;
+        }
+        z
+    }
+
+    fn phase_counts(&self) -> Option<(usize, usize, usize)> {
+        self.inner.phase_counts()
+    }
+
+    fn reset_phase_counts(&self) {
+        self.inner.reset_phase_counts();
+    }
+
+    fn panel_stats(&self) -> Option<PanelStats> {
+        self.inner.panel_stats()
+    }
+
+    fn storage_precision(&self) -> Precision {
+        self.inner.storage_precision()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::DenseOperator;
+    use crate::fkt::{FktConfig, FktOperator};
+    use crate::kernels::{Family, Kernel};
+    use crate::points::Points;
+    use crate::rng::Pcg32;
+
+    fn uniform_points(n: usize, d: usize, seed: u64) -> Points {
+        let mut rng = Pcg32::seeded(seed);
+        Points::new(d, rng.uniform_vec(n * d, 0.0, 1.0))
+    }
+
+    fn dense_term(pts: &Points, family: Family) -> SharedTermOp {
+        Arc::new(DenseOperator::square(pts, Kernel::canonical(family)))
+    }
+
+    fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn sum_matches_manual_weighted_sum() {
+        let pts = uniform_points(120, 2, 401);
+        let mut rng = Pcg32::seeded(402);
+        let w = rng.normal_vec(120);
+        let (a, b) = (dense_term(&pts, Family::Gaussian), dense_term(&pts, Family::Cauchy));
+        let sum = SumOp::new(vec![(0.7, Arc::clone(&a)), (1.3, Arc::clone(&b))]);
+        let za = a.apply(&w);
+        let zb = b.apply(&w);
+        let manual: Vec<f64> =
+            za.iter().zip(&zb).map(|(x, y)| 0.7 * x + 1.3 * y).collect();
+        assert_close(&sum.apply(&w), &manual, 1e-14);
+        // Batched path agrees column-by-column with the reference loop.
+        let wb = rng.normal_vec(120 * 3);
+        let fused = sum.apply_batch(&wb, 3);
+        let reference = crate::op::apply_batch_looped(&sum, &wb, 3);
+        assert_close(&fused, &reference, 1e-14);
+    }
+
+    #[test]
+    fn threaded_sum_matches_serial() {
+        let pts = uniform_points(200, 2, 403);
+        let mut rng = Pcg32::seeded(404);
+        let wb = rng.normal_vec(200 * 2);
+        let terms: Vec<(f64, SharedTermOp)> = [Family::Gaussian, Family::Cauchy, Family::Matern32]
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| (0.5 + i as f64, dense_term(&pts, f)))
+            .collect();
+        let sum = SumOp::new(terms);
+        let serial = sum.apply_batch(&wb, 2);
+        for threads in [1, 2, 3, 8] {
+            assert_close(&sum.apply_batch_threaded(&wb, 2, threads), &serial, 1e-13);
+        }
+        assert_close(&sum.apply_threaded(&wb[..200], 4), &sum.apply(&wb[..200]), 1e-13);
+    }
+
+    #[test]
+    fn one_traversal_per_term_per_batch() {
+        let pts = uniform_points(400, 2, 405);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let cfg = FktConfig { leaf_capacity: 32, ..Default::default() };
+        let terms: Vec<(f64, SharedTermOp)> = (0..3)
+            .map(|_| {
+                (1.0, Arc::new(FktOperator::square(&pts, kern, cfg)) as SharedTermOp)
+            })
+            .collect();
+        let sum = SumOp::new(terms);
+        sum.reset_phase_counts();
+        let mut rng = Pcg32::seeded(406);
+        let wb = rng.normal_vec(400 * 5);
+        let _ = sum.apply_batch(&wb, 5); // 5 columns, 3 terms
+        let (mo, fa, ne) = sum.phase_counts().expect("FKT terms have phase structure");
+        assert_eq!((mo, fa, ne), (3, 3, 3), "one full pass per term, not per column");
+        sum.reset_phase_counts();
+        assert_eq!(sum.phase_counts(), Some((0, 0, 0)));
+    }
+
+    #[test]
+    fn capability_methods_aggregate() {
+        let pts = uniform_points(300, 2, 407);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let cfg = FktConfig { leaf_capacity: 32, ..Default::default() };
+        let fkt: SharedTermOp = Arc::new(FktOperator::square(&pts, kern, cfg));
+        let dense = dense_term(&pts, Family::Gaussian);
+        // FKT + dense: panel stats come from the FKT term alone; phase
+        // counts likewise; precision conservative (dense stores f64).
+        let sum = SumOp::new(vec![(1.0, Arc::clone(&fkt)), (1.0, dense)]);
+        assert!(sum.panel_stats().is_some());
+        assert_eq!(sum.storage_precision(), Precision::F64);
+        assert!(sum.as_composite().is_some());
+        assert!(sum.as_fkt().is_none());
+        assert_eq!(sum.as_composite().unwrap().num_terms(), 2);
+    }
+
+    #[test]
+    fn scaled_and_shifted_commute_with_sum() {
+        let pts = uniform_points(150, 2, 408);
+        let mut rng = Pcg32::seeded(409);
+        let w = rng.normal_vec(150);
+        let sum: SharedTermOp = Arc::new(SumOp::new(vec![
+            (0.5, dense_term(&pts, Family::Gaussian)),
+            (2.0, dense_term(&pts, Family::Cauchy)),
+        ]));
+        let base = sum.apply(&w);
+
+        let scaled = ScaledOp::new(3.0, Arc::clone(&sum));
+        let expect: Vec<f64> = base.iter().map(|x| 3.0 * x).collect();
+        assert_close(&scaled.apply(&w), &expect, 1e-14);
+
+        // (A + σ²I)·w == A·w + σ²·w — the solve view commutes with the
+        // composite.
+        let sigma2 = 0.37;
+        let shifted = DiagShiftOp::new(sigma2, Arc::clone(&sum));
+        let expect: Vec<f64> = base.iter().zip(&w).map(|(x, wi)| x + sigma2 * wi).collect();
+        assert_close(&shifted.apply(&w), &expect, 1e-14);
+        let wb = rng.normal_vec(150 * 2);
+        let fused = shifted.apply_batch(&wb, 2);
+        let reference = crate::op::apply_batch_looped(&shifted, &wb, 2);
+        assert_close(&fused, &reference, 1e-14);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_terms_panic() {
+        let a = uniform_points(10, 2, 410);
+        let b = uniform_points(20, 2, 411);
+        SumOp::new(vec![
+            (1.0, dense_term(&a, Family::Gaussian)),
+            (1.0, dense_term(&b, Family::Gaussian)),
+        ]);
+    }
+}

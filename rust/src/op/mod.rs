@@ -24,12 +24,20 @@
 //! column `c` of the output occupies `z[c*t .. (c+1)*t]` (`t` targets).
 //! Column `c` of `apply_batch(w, m)` equals `apply` of column `c`.
 
+pub mod composite;
+
 /// A linear kernel-summation operator `z = K(targets, sources) · w`.
 ///
 /// Implementors: [`crate::fkt::FktOperator`] (fast transform, fused batch),
 /// [`crate::baselines::DenseOperator`] (exact O(N·M), shared-distance
-/// batch), and — via [`KernelOp::as_fkt`] — the coordinator's PJRT-tiled
-/// near-field path.
+/// batch), the algebra pieces in [`composite`] (`SumOp`, `ScaledOp`,
+/// `DiagShiftOp`), and — via [`KernelOp::as_fkt`] — the coordinator's
+/// PJRT-tiled near-field path.
+///
+/// Observability (phase counters, panel stats, storage precision) is
+/// exposed through *capability methods* with conservative defaults, not
+/// downcasts, so wrappers and composites forward or aggregate them instead
+/// of silently losing metrics.
 pub trait KernelOp {
     /// Number of source points (the length of one weight column).
     fn num_sources(&self) -> usize;
@@ -40,11 +48,23 @@ pub trait KernelOp {
     /// Single-RHS product `z = K · w` with `w.len() == num_sources()`.
     fn apply(&self, w: &[f64]) -> Vec<f64>;
 
+    /// Single-RHS product written into a caller-provided buffer of length
+    /// `num_targets()`. The default delegates to [`KernelOp::apply`] and
+    /// copies; backends that can write in place override it so batched
+    /// loops avoid one fresh allocation per column.
+    fn apply_into(&self, w: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.num_targets(), "output column length mismatch");
+        out.copy_from_slice(&self.apply(w));
+    }
+
     /// Multi-RHS product over `m` column-major columns (see module docs for
-    /// the layout). The default loops [`KernelOp::apply`]; fused backends
+    /// the layout). The default loops [`KernelOp::apply_into`] straight
+    /// into the output block — no per-column scratch; fused backends
     /// override it to share one traversal across all columns.
     fn apply_batch(&self, w: &[f64], m: usize) -> Vec<f64> {
-        looped(self.num_sources(), self.num_targets(), w, m, |col| self.apply(col))
+        looped(self.num_sources(), self.num_targets(), w, m, |col, out| {
+            self.apply_into(col, out)
+        })
     }
 
     /// Threaded single-RHS product. The default ignores `threads`; backends
@@ -63,7 +83,8 @@ pub trait KernelOp {
     /// Cumulative (moments, far-field, near-field) full-phase pass counts,
     /// for backends that track them — the coordinator diffs these around an
     /// MVM to report how many traversals it cost (`MvmMetrics`). `None`
-    /// when the backend has no phase structure.
+    /// when the backend has no phase structure. Composites report the
+    /// *sum* over their terms.
     fn phase_counts(&self) -> Option<(usize, usize, usize)> {
         None
     }
@@ -71,29 +92,51 @@ pub trait KernelOp {
     /// Reset the phase counters behind [`KernelOp::phase_counts`].
     fn reset_phase_counts(&self) {}
 
+    /// Far-field panel-cache statistics, for backends that keep one.
+    /// Composites report field-wise sums over their terms; `None` for
+    /// backends without a panel cache.
+    fn panel_stats(&self) -> Option<crate::fkt::PanelStats> {
+        None
+    }
+
+    /// Storage precision of the far-field data actually held by this
+    /// backend. Composites report `F32` only when *every* term stores f32.
+    fn storage_precision(&self) -> crate::linalg::Precision {
+        crate::linalg::Precision::F64
+    }
+
     /// Downcast hook for the coordinator's PJRT tile path, which needs the
-    /// FKT tree/plan to gather near-field tiles. `None` for other backends
-    /// (they simply run natively).
+    /// FKT tree/plan to gather near-field tiles, and for the solver's
+    /// block-Jacobi preconditioner / refined-f32 path. `None` for other
+    /// backends (they simply run natively). Metrics readers must use the
+    /// capability methods above instead of this hook.
     fn as_fkt(&self) -> Option<&crate::fkt::FktOperator> {
+        None
+    }
+
+    /// Downcast hook for composite (additive) operators, used by callers
+    /// that need term structure (diagnostics, tests). `None` otherwise.
+    fn as_composite(&self) -> Option<&composite::SumOp> {
         None
     }
 }
 
 /// The one looping implementation behind both the `apply_batch` default
-/// and [`apply_batch_looped`].
+/// and [`apply_batch_looped`]: each column is written directly into its
+/// slice of the output block, so the loop itself allocates nothing beyond
+/// the result.
 fn looped(
     n: usize,
     t: usize,
     w: &[f64],
     m: usize,
-    mut apply: impl FnMut(&[f64]) -> Vec<f64>,
+    mut apply_into: impl FnMut(&[f64], &mut [f64]),
 ) -> Vec<f64> {
     assert!(m > 0, "apply_batch needs at least one column");
     assert_eq!(w.len(), n * m, "weight block shape mismatch");
     let mut out = vec![0.0; t * m];
-    for c in 0..m {
-        let z = apply(&w[c * n..(c + 1) * n]);
-        out[c * t..(c + 1) * t].copy_from_slice(&z);
+    for (c, out_col) in out.chunks_exact_mut(t).enumerate() {
+        apply_into(&w[c * n..(c + 1) * n], out_col);
     }
     out
 }
@@ -102,7 +145,7 @@ fn looped(
 /// applications, regardless of any fused override. Used by tests and the
 /// `batched_vs_looped_mvm` bench to pin fused implementations.
 pub fn apply_batch_looped(op: &dyn KernelOp, w: &[f64], m: usize) -> Vec<f64> {
-    looped(op.num_sources(), op.num_targets(), w, m, |col| op.apply(col))
+    looped(op.num_sources(), op.num_targets(), w, m, |col, out| op.apply_into(col, out))
 }
 
 #[cfg(test)]
@@ -152,6 +195,69 @@ mod tests {
             den += y * y;
         }
         assert!((num / den).sqrt() < 1e-4, "backends disagree");
+    }
+
+    /// A backend that supports only in-place application: `apply` (the
+    /// allocating path) panics, so any default-path call that allocates a
+    /// per-column vector is caught immediately.
+    struct InPlaceOnly {
+        n: usize,
+        calls: std::cell::Cell<usize>,
+    }
+
+    impl KernelOp for InPlaceOnly {
+        fn num_sources(&self) -> usize {
+            self.n
+        }
+        fn num_targets(&self) -> usize {
+            self.n
+        }
+        fn apply(&self, _w: &[f64]) -> Vec<f64> {
+            panic!("default apply_batch must route through apply_into, not apply");
+        }
+        fn apply_into(&self, w: &[f64], out: &mut [f64]) {
+            self.calls.set(self.calls.get() + 1);
+            for (o, x) in out.iter_mut().zip(w) {
+                *o = 2.0 * x; // K = 2·I, easy to verify
+            }
+        }
+    }
+
+    #[test]
+    fn default_apply_batch_is_per_column_allocation_free() {
+        let op = InPlaceOnly { n: 5, calls: std::cell::Cell::new(0) };
+        let w: Vec<f64> = (0..15).map(|i| i as f64).collect();
+        // Both the trait default and the reference loop must go through
+        // apply_into (apply panics), once per column, and agree exactly.
+        let fused = op.apply_batch(&w, 3);
+        assert_eq!(op.calls.get(), 3, "one apply_into per column");
+        let reference = apply_batch_looped(&op, &w, 3);
+        assert_eq!(fused, reference);
+        for (i, x) in w.iter().enumerate() {
+            assert_eq!(fused[i], 2.0 * x);
+        }
+    }
+
+    #[test]
+    fn default_apply_into_matches_apply() {
+        let pts = uniform_points(80, 2, 306);
+        let mut rng = Pcg32::seeded(307);
+        let w = rng.normal_vec(80);
+        let op = DenseOperator::square(&pts, Kernel::canonical(Family::Gaussian));
+        let direct = op.apply(&w);
+        let mut inplace = vec![f64::NAN; 80];
+        op.apply_into(&w, &mut inplace);
+        assert_eq!(direct, inplace);
+    }
+
+    #[test]
+    fn capability_defaults_are_conservative() {
+        let op = InPlaceOnly { n: 2, calls: std::cell::Cell::new(0) };
+        assert!(op.phase_counts().is_none());
+        assert!(op.panel_stats().is_none());
+        assert_eq!(op.storage_precision(), crate::linalg::Precision::F64);
+        assert!(op.as_fkt().is_none());
+        assert!(op.as_composite().is_none());
     }
 
     #[test]

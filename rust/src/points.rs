@@ -89,6 +89,25 @@ impl Points {
         (lo, hi)
     }
 
+    /// Project onto a subset of coordinate axes, producing an owned
+    /// `axes.len()`-dimensional point set with the same number of points.
+    /// Axes may repeat and appear in any order; each must be `< d`.
+    pub fn project(&self, axes: &[usize]) -> Points {
+        assert!(!axes.is_empty(), "projection onto zero axes");
+        for &a in axes {
+            assert!(a < self.d, "projection axis {a} out of range for d={}", self.d);
+        }
+        let n = self.len();
+        let mut coords = Vec::with_capacity(n * axes.len());
+        for i in 0..n {
+            let p = self.point(i);
+            for &a in axes {
+                coords.push(p[a]);
+            }
+        }
+        Points { d: axes.len(), coords }
+    }
+
     /// Gather a subset by indices.
     pub fn gather(&self, idx: &[usize]) -> Points {
         let mut out = Points::empty(self.d);
@@ -132,5 +151,19 @@ mod tests {
     #[should_panic]
     fn mismatched_dims_panic() {
         Points::new(3, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn project_selects_axes() {
+        let p = Points::new(3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let q = p.project(&[2, 0]);
+        assert_eq!(q.d, 2);
+        assert_eq!(q.coords, vec![3.0, 1.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn project_axis_out_of_range() {
+        Points::new(2, vec![0.0, 1.0]).project(&[2]);
     }
 }

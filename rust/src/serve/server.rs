@@ -50,7 +50,9 @@ use crate::data;
 use crate::kernels::Family;
 use crate::points::Points;
 use crate::rng::Pcg32;
-use crate::session::{simd_backend, Backend, OpHandle, Precision, Session, SessionCore, SolveOpts};
+use crate::session::{
+    simd_backend, Backend, OpHandle, Precision, Session, SessionCore, SolveOpts, Subsets,
+};
 use std::collections::HashMap;
 use std::io::{self, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -398,14 +400,23 @@ fn get_f64(request: &Json, key: &str, default: f64) -> f64 {
 }
 
 /// `open`: materialize the dataset (cached), build or re-attach to the
-/// operator, and hand back its id.
+/// operator, and hand back its id. With a `subsets` field the operator is
+/// the additive (ANOVA) composite over those feature subsets
+/// (`"random:KxA"` or explicit `"0,1;2,3"` — same spelling as the CLI),
+/// which lifts the dimension cap: each term only ever runs the FKT at its
+/// own subset arity, so `d` may go up to 32.
 fn open_verb(state: &Arc<ServerState>, request: &Json) -> Result<Json, String> {
     let name = request.get("name").and_then(Json::as_str).unwrap_or("uniform").to_string();
     let n = get_usize(request, "n", 10_000);
     let d = if name == "sst" { 3 } else { get_usize(request, "d", 3) };
     let seed = get_usize(request, "seed", 1) as u64;
-    if n == 0 || !(1..=10).contains(&d) {
-        return Err(format!("bad dataset shape n={n} d={d}"));
+    let subsets = match request.get("subsets").and_then(Json::as_str) {
+        Some(text) => Some(Subsets::parse(text)?),
+        None => None,
+    };
+    let d_max = if subsets.is_some() { 32 } else { 10 };
+    if n == 0 || !(1..=d_max).contains(&d) {
+        return Err(format!("bad dataset shape n={n} d={d} (max d {d_max})"));
     }
     let pts = dataset(state, &name, n, d, seed)?;
     let family_name = request.get("kernel").and_then(Json::as_str).unwrap_or("matern32");
@@ -414,21 +425,55 @@ fn open_verb(state: &Arc<ServerState>, request: &Json) -> Result<Json, String> {
     let precision_name = request.get("precision").and_then(Json::as_str).unwrap_or("auto");
     let precision = Precision::from_name(precision_name)
         .ok_or_else(|| format!("unknown precision tier {precision_name:?}"))?;
-    let mut spec = state
-        .core
-        .operator(&pts)
-        .kernel(family)
-        .leaf_capacity(get_usize(request, "leaf", 512))
-        .precision(precision);
-    match request.get("tol").and_then(Json::as_f64) {
-        Some(eps) => spec = spec.tolerance(eps),
-        None => {
-            spec = spec.order(get_usize(request, "p", 4)).theta(get_f64(request, "theta", 0.5));
+    let leaf = get_usize(request, "leaf", 512);
+    let tol = request.get("tol").and_then(Json::as_f64);
+    let (handle, terms) = match subsets {
+        Some(subsets) => {
+            // Validate (and pin) the axis lists up front so a bad request
+            // is a structured wire error, not a handler panic.
+            let subs = subsets.materialize(d, seed)?;
+            let terms = subs.len();
+            let mut spec = state
+                .core
+                .additive(&pts)
+                .kernel(family)
+                .leaf_capacity(leaf)
+                .precision(precision)
+                .subsets(Subsets::Explicit(subs));
+            match tol {
+                Some(eps) => spec = spec.tolerance(eps),
+                None => {
+                    let cfg = crate::fkt::FktConfig {
+                        p: get_usize(request, "p", 4),
+                        theta: get_f64(request, "theta", 0.5),
+                        leaf_capacity: leaf,
+                        ..Default::default()
+                    };
+                    spec = spec.config(cfg);
+                }
+            }
+            (spec.build(), terms)
         }
-    }
-    let handle = spec.build();
+        None => {
+            let mut spec = state
+                .core
+                .operator(&pts)
+                .kernel(family)
+                .leaf_capacity(leaf)
+                .precision(precision);
+            match tol {
+                Some(eps) => spec = spec.tolerance(eps),
+                None => {
+                    spec = spec
+                        .order(get_usize(request, "p", 4))
+                        .theta(get_f64(request, "theta", 0.5));
+                }
+            }
+            (spec.build(), 0)
+        }
+    };
     let entry = register_op(state, handle);
-    Ok(ok_response(vec![
+    let mut fields = vec![
         ("id", Json::Num(entry.id as f64)),
         ("n", Json::Num(entry.handle.num_sources() as f64)),
         ("d", Json::Num(d as f64)),
@@ -436,7 +481,11 @@ fn open_verb(state: &Arc<ServerState>, request: &Json) -> Result<Json, String> {
         ("p", Json::Num(entry.handle.order() as f64)),
         ("theta", Json::Num(entry.handle.theta())),
         ("precision", Json::str(entry.handle.precision().name())),
-    ]))
+    ];
+    if terms > 0 {
+        fields.push(("terms", Json::Num(terms as f64)));
+    }
+    Ok(ok_response(fields))
 }
 
 /// Dataset cache lookup/build. The map lock is held across generation,

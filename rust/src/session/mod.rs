@@ -50,8 +50,8 @@ pub use crate::linalg::simd::{backend as simd_backend, SimdBackend};
 pub use crate::linalg::Precision;
 pub use registry::RegistryStats;
 pub use tune::{
-    auto_precision, max_order, resolve as resolve_tolerance, Resolved, F32_AUTO_MIN_EPS,
-    THETA_CANDIDATES,
+    auto_precision, max_order, resolve as resolve_tolerance, split_tolerance, Resolved,
+    F32_AUTO_MIN_EPS, THETA_CANDIDATES,
 };
 
 use crate::baselines::DenseOperator;
@@ -62,9 +62,11 @@ use crate::linalg::{
     cholesky, cholesky_solve, preconditioned_cg_batch_budgeted, preconditioned_cg_budgeted,
     vecops, BatchCgResult, CgBudget, CgResult, Mat,
 };
+use crate::op::composite::{SharedTermOp, SumOp};
 use crate::op::KernelOp;
 use crate::points::Points;
-use registry::{fingerprint, OpKey, Registry};
+use crate::rng::Pcg32;
+use registry::{composite_fingerprint, fingerprint, projection_fingerprint, OpKey, Registry};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -264,6 +266,13 @@ impl Session {
         self.core.operator(sources)
     }
 
+    /// Begin an additive (ANOVA) composite-operator request over `sources`
+    /// (see [`AdditiveSpec`]): a weighted sum of registry-cached FKT terms,
+    /// each over a low-dimensional coordinate projection.
+    pub fn additive<'a>(&'a self, sources: &'a Points) -> AdditiveSpec<'a> {
+        self.core.additive(sources)
+    }
+
     /// Single-RHS product `z = K · w` through the configured backend.
     pub fn mvm(&self, op: &OpHandle, w: &[f64]) -> Vec<f64> {
         self.core.mvm(op, w)
@@ -349,6 +358,22 @@ impl SessionCore {
             precision: None,
             dense: false,
             transient: false,
+        }
+    }
+
+    /// [`Session::additive`] on the shared core (see [`AdditiveSpec`]).
+    pub fn additive<'a>(&'a self, sources: &'a Points) -> AdditiveSpec<'a> {
+        AdditiveSpec {
+            session: self,
+            sources,
+            targets: None,
+            kernel: Kernel::canonical(Family::Gaussian),
+            cfg: FktConfig::default(),
+            tolerance: None,
+            precision: None,
+            subsets: None,
+            weights: None,
+            seed: 0x5eed,
         }
     }
 
@@ -1062,9 +1087,383 @@ impl<'a> OpSpec<'a> {
             panel_budget: cfg.panel_budget_bytes,
             precision: cfg.precision,
             dense,
+            composite: false,
         };
         let op = session.registry.get_or_build(key, build_op);
         OpHandle { op, kernel, cfg, dense, square, resolved }
+    }
+}
+
+/// Feature-subset selection for an additive (ANOVA) operator request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Subsets {
+    /// `k` subsets of `arity` distinct axes each, sampled deterministically
+    /// from the spec's seed (duplicate subsets are rejected while
+    /// possible).
+    Random {
+        /// Number of subsets (terms).
+        k: usize,
+        /// Axes per subset.
+        arity: usize,
+    },
+    /// Explicit axis lists; each subset is canonicalized (sorted, deduped)
+    /// so `[2, 0]` and `[0, 2]` name the same term.
+    Explicit(Vec<Vec<usize>>),
+}
+
+impl Subsets {
+    /// Parse the CLI/serve spelling: `random:KxA` (e.g. `random:8x3`) or
+    /// explicit `;`-separated comma lists (e.g. `0,1,2;3,4,5`).
+    pub fn parse(text: &str) -> Result<Subsets, String> {
+        if let Some(spec) = text.strip_prefix("random:") {
+            let (k, arity) = spec
+                .split_once('x')
+                .ok_or_else(|| format!("expected random:KxA, got {text:?}"))?;
+            let k = k.trim().parse::<usize>().map_err(|e| format!("bad subset count: {e}"))?;
+            let arity =
+                arity.trim().parse::<usize>().map_err(|e| format!("bad subset arity: {e}"))?;
+            return Ok(Subsets::Random { k, arity });
+        }
+        let mut subsets = Vec::new();
+        for group in text.split(';') {
+            let group = group.trim();
+            if group.is_empty() {
+                continue;
+            }
+            let axes: Result<Vec<usize>, _> =
+                group.split(',').map(|a| a.trim().parse::<usize>()).collect();
+            subsets.push(axes.map_err(|e| format!("bad axis in {group:?}: {e}"))?);
+        }
+        if subsets.is_empty() {
+            return Err(format!("no subsets in {text:?}"));
+        }
+        Ok(Subsets::Explicit(subsets))
+    }
+
+    /// Resolve to concrete sorted axis lists for a `d`-dimensional dataset.
+    /// Deterministic in `(self, d, seed)`.
+    pub fn materialize(&self, d: usize, seed: u64) -> Result<Vec<Vec<usize>>, String> {
+        match self {
+            Subsets::Random { k, arity } => {
+                if *k == 0 {
+                    return Err("need at least one subset".into());
+                }
+                if *arity == 0 || *arity > d {
+                    return Err(format!("subset arity {arity} out of range for d={d}"));
+                }
+                let mut rng = Pcg32::seeded(seed);
+                let mut out: Vec<Vec<usize>> = Vec::with_capacity(*k);
+                let mut attempts = 0usize;
+                while out.len() < *k {
+                    // Sort-of Floyd sampling: draw without replacement by
+                    // rejection inside one subset (arity ≤ d keeps this
+                    // cheap), then canonicalize.
+                    let mut subset: Vec<usize> = Vec::with_capacity(*arity);
+                    while subset.len() < *arity {
+                        let a = rng.below(d);
+                        if !subset.contains(&a) {
+                            subset.push(a);
+                        }
+                    }
+                    subset.sort_unstable();
+                    attempts += 1;
+                    // Prefer distinct subsets; past the retry budget (tiny
+                    // axis spaces) duplicates are admitted — the algebra is
+                    // a multiset.
+                    if out.contains(&subset) && attempts < k * 20 {
+                        continue;
+                    }
+                    out.push(subset);
+                }
+                Ok(out)
+            }
+            Subsets::Explicit(subsets) => {
+                if subsets.is_empty() {
+                    return Err("need at least one subset".into());
+                }
+                let mut out = Vec::with_capacity(subsets.len());
+                for s in subsets {
+                    if s.is_empty() {
+                        return Err("empty subset".into());
+                    }
+                    let mut s = s.clone();
+                    s.sort_unstable();
+                    s.dedup();
+                    if let Some(&bad) = s.iter().find(|&&a| a >= d) {
+                        return Err(format!("axis {bad} out of range for d={d}"));
+                    }
+                    out.push(s);
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// One additive (ANOVA) composite-operator request, builder-style:
+/// `K = Σ_t w_t · K(x_{S_t}, y_{S_t})` over feature subsets `S_t`
+/// (Nestler–Stoll–Wagner, arXiv:2111.10140). Created by
+/// [`Session::additive`]; finished by [`AdditiveSpec::build`].
+///
+/// Every term is an ordinary registry-cached FKT operator over a
+/// coordinate projection, keyed by
+/// [`projection_fingerprint`](registry::projection_fingerprint) — so two
+/// composites sharing a subset share that term's Arc through the registry
+/// — and the composite itself is cached under the *multiset* of its
+/// weighted term keys
+/// ([`composite_fingerprint`](registry::composite_fingerprint)).
+///
+/// `.tolerance(ε)` splits uniformly across the `T` terms
+/// ([`split_tolerance`]): each term resolves its own `(p, θ)` against its
+/// *projected* dimension and diameter through the Lemma 4.1 resolver, so
+/// a d=20 request stays feasible as long as every subset is low-arity.
+pub struct AdditiveSpec<'a> {
+    session: &'a SessionCore,
+    sources: &'a Points,
+    targets: Option<&'a Points>,
+    kernel: Kernel,
+    cfg: FktConfig,
+    tolerance: Option<f64>,
+    precision: Option<Precision>,
+    subsets: Option<Subsets>,
+    weights: Option<Vec<f64>>,
+    seed: u64,
+}
+
+impl<'a> AdditiveSpec<'a> {
+    /// Rectangular composite `K(targets, sources)` (GP prediction shape);
+    /// without this the composite is square (targets = sources).
+    pub fn targets(mut self, targets: &'a Points) -> Self {
+        self.targets = Some(targets);
+        self
+    }
+
+    /// Canonical kernel of `family` (scale 1) for every term. Default:
+    /// Gaussian.
+    pub fn kernel(mut self, family: Family) -> Self {
+        self.kernel = Kernel::canonical(family);
+        self
+    }
+
+    /// Full kernel with an explicit coordinate scale / length-scale,
+    /// shared by every term.
+    pub fn scaled_kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Wholesale FKT configuration for the terms. Without `.tolerance()`,
+    /// every term is built at exactly this `(p, θ)` — the frozen-config
+    /// mode GP training uses.
+    pub fn config(mut self, cfg: FktConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Requested aggregate accuracy ε, split uniformly across terms (see
+    /// [`split_tolerance`]); each term resolves its own `(p, θ)` at ε/T
+    /// against its projected dimension. Panics at [`AdditiveSpec::build`]
+    /// when some term's share is unattainable within that dimension's
+    /// order cap.
+    pub fn tolerance(mut self, eps: f64) -> Self {
+        self.tolerance = Some(eps);
+        self
+    }
+
+    /// Storage-precision tier for every term (same `Auto` rule as
+    /// [`OpSpec::precision`]).
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = Some(precision);
+        self
+    }
+
+    /// Maximum points per leaf for every term.
+    pub fn leaf_capacity(mut self, leaf: usize) -> Self {
+        self.cfg.leaf_capacity = leaf;
+        self
+    }
+
+    /// Feature subsets — required.
+    pub fn subsets(mut self, subsets: Subsets) -> Self {
+        self.subsets = Some(subsets);
+        self
+    }
+
+    /// Per-term weights (default: all 1). Length must match the number of
+    /// materialized subsets.
+    pub fn weights(mut self, weights: Vec<f64>) -> Self {
+        self.weights = Some(weights);
+        self
+    }
+
+    /// Seed for `Subsets::Random` materialization (default `0x5eed`).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Materialize the subsets this spec would use without building
+    /// anything — the CLI and GP layers use this to report/persist the
+    /// actual axis lists behind a `Random` request.
+    pub fn materialized_subsets(&self) -> Vec<Vec<usize>> {
+        let subsets = self.subsets.as_ref().expect("additive request needs .subsets(..)");
+        subsets
+            .materialize(self.sources.d, self.seed)
+            .unwrap_or_else(|e| panic!("invalid subsets: {e}"))
+    }
+
+    /// Resolve per-term configurations, consult the registry (terms first,
+    /// then the composite under its multiset key), and return a handle to
+    /// the (possibly cached) composite. A cached composite skips the term
+    /// builds entirely; a cold composite still reuses any cached terms.
+    pub fn build(self) -> OpHandle {
+        let subs = self.materialized_subsets();
+        let AdditiveSpec {
+            session,
+            sources,
+            targets,
+            kernel,
+            mut cfg,
+            tolerance,
+            precision,
+            subsets: _,
+            weights,
+            seed: _,
+        } = self;
+        let nterms = subs.len();
+        let weights = weights.unwrap_or_else(|| vec![1.0; nterms]);
+        assert_eq!(weights.len(), nterms, "one weight per subset");
+        // Same precision rule as OpSpec: explicit call wins, then the
+        // config-carried tier, and Auto resolves against the *aggregate*
+        // tolerance (the f32 floor argument is about ε headroom, which the
+        // split only tightens per term, never loosens in aggregate).
+        let requested = precision.unwrap_or(cfg.precision);
+        cfg.precision = match requested {
+            Precision::Auto => tune::auto_precision(tolerance),
+            pinned => pinned,
+        };
+        // Projected diameters come from the parent bounding box — O(d),
+        // no projection materialized outside the build closures.
+        let bbox = if sources.is_empty() {
+            None
+        } else {
+            let (mut lo, mut hi) = sources.bounding_box();
+            if let Some(t) = targets {
+                if !t.is_empty() {
+                    let (tlo, thi) = t.bounding_box();
+                    for a in 0..sources.d.min(t.d) {
+                        lo[a] = lo[a].min(tlo[a]);
+                        hi[a] = hi[a].max(thi[a]);
+                    }
+                }
+            }
+            Some((lo, hi))
+        };
+        let src_fp = fingerprint(sources);
+        let tgt_fp = targets.map(fingerprint);
+        // Per-term (p, θ): ε/T through the Lemma 4.1 resolver at the
+        // term's own (low) dimension, or the frozen config as-is.
+        let mut term_keys: Vec<OpKey> = Vec::with_capacity(nterms);
+        let mut term_cfgs: Vec<FktConfig> = Vec::with_capacity(nterms);
+        for subset in &subs {
+            let mut tcfg = cfg;
+            if let Some(eps) = tolerance {
+                let eps_t = tune::split_tolerance(eps, nterms);
+                let r_max = match &bbox {
+                    Some((lo, hi)) => {
+                        let mut acc = 0.0;
+                        for &a in subset {
+                            let w = hi[a] - lo[a];
+                            acc += w * w;
+                        }
+                        acc.sqrt() * kernel.scale
+                    }
+                    None => 1.0,
+                };
+                let res = session
+                    .resolve_cached(&kernel, subset.len(), eps_t, r_max)
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "per-term tolerance {eps_t:.1e} (= {eps:.1e}/{nterms}) \
+                             unattainable for {:?} on subset {subset:?} (arity {}, scaled \
+                             diameter {r_max:.2}); use fewer/lower-arity subsets or a \
+                             frozen .config(..)",
+                            kernel.family,
+                            subset.len()
+                        )
+                    });
+                tcfg.p = res.p;
+                tcfg.theta = res.theta;
+            }
+            term_keys.push(OpKey {
+                src_fp: projection_fingerprint(src_fp, subset),
+                tgt_fp: tgt_fp.map(|fp| projection_fingerprint(fp, subset)),
+                family: kernel.family,
+                scale_bits: kernel.scale.to_bits(),
+                p: tcfg.p,
+                theta_bits: tcfg.theta.to_bits(),
+                leaf_capacity: tcfg.leaf_capacity,
+                center: tcfg.center,
+                compression: tcfg.compression,
+                panel_budget: tcfg.panel_budget_bytes,
+                precision: tcfg.precision,
+                dense: false,
+                composite: false,
+            });
+            term_cfgs.push(tcfg);
+        }
+        // The handle reports the conservative envelope of its terms, so a
+        // frozen rebuild from `handle.config()` (GP training) is at least
+        // as accurate as what the tolerance resolved.
+        cfg.p = term_cfgs.iter().map(|c| c.p).max().expect("at least one term");
+        cfg.theta = term_cfgs.iter().map(|c| c.theta).fold(f64::INFINITY, f64::min);
+        let weighted_keys: Vec<(f64, OpKey)> =
+            weights.iter().copied().zip(term_keys.iter().copied()).collect();
+        let composite_key = OpKey {
+            src_fp: composite_fingerprint(&weighted_keys),
+            tgt_fp: None,
+            family: kernel.family,
+            scale_bits: kernel.scale.to_bits(),
+            p: 0,
+            theta_bits: 0,
+            leaf_capacity: cfg.leaf_capacity,
+            center: cfg.center,
+            compression: cfg.compression,
+            panel_budget: cfg.panel_budget_bytes,
+            precision: cfg.precision,
+            dense: false,
+            composite: true,
+        };
+        // Terms build through nested registry lookups inside the composite
+        // build closure — safe because builds run with no shard lock held,
+        // and exactly what makes overlapping subsets across two composites
+        // share one term Arc. The composite holds its own term Arcs, so
+        // registry eviction of a sub-term never breaks a live composite.
+        let op = session.registry.get_or_build(composite_key, || {
+            let terms: Vec<(f64, SharedTermOp)> = subs
+                .iter()
+                .zip(&term_keys)
+                .zip(&term_cfgs)
+                .zip(&weights)
+                .map(|(((subset, key), tcfg), &w)| {
+                    let term = session.registry.get_or_build(*key, || {
+                        let proj_src = sources.project(subset);
+                        let proj_tgt = targets.map(|t| t.project(subset));
+                        Arc::new(FktOperator::new(&proj_src, proj_tgt.as_ref(), kernel, *tcfg))
+                    });
+                    (w, term)
+                })
+                .collect();
+            Arc::new(SumOp::new(terms))
+        });
+        OpHandle {
+            op,
+            kernel,
+            cfg,
+            dense: false,
+            square: targets.is_none(),
+            resolved: None,
+        }
     }
 }
 
@@ -1142,6 +1541,12 @@ impl OpHandle {
     /// diagnostics (tree/plan statistics) and the solve preconditioner.
     pub fn as_fkt(&self) -> Option<&FktOperator> {
         self.op.as_fkt()
+    }
+
+    /// Downcast to the additive composite (None for plain handles) —
+    /// term structure for diagnostics and tests.
+    pub fn as_composite(&self) -> Option<&SumOp> {
+        self.op.as_composite()
     }
 
     /// The shared operator itself.
@@ -2038,5 +2443,229 @@ mod tests {
         });
         let c = session.counters();
         assert_eq!(c.mvm, (THREADS * CALLS) as u64 + 1, "no lost counter updates");
+    }
+
+    #[test]
+    fn subsets_parse_and_materialize() {
+        assert_eq!(Subsets::parse("random:8x3"), Ok(Subsets::Random { k: 8, arity: 3 }));
+        assert_eq!(
+            Subsets::parse("0,2;1,3"),
+            Ok(Subsets::Explicit(vec![vec![0, 2], vec![1, 3]]))
+        );
+        assert!(Subsets::parse("random:8").is_err());
+        assert!(Subsets::parse("").is_err());
+        assert!(Subsets::parse("0,x").is_err());
+
+        let subs = Subsets::Random { k: 6, arity: 3 }.materialize(10, 42).unwrap();
+        assert_eq!(subs.len(), 6);
+        for s in &subs {
+            assert_eq!(s.len(), 3);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted distinct axes");
+            assert!(s.iter().all(|&a| a < 10));
+        }
+        // Deterministic in the seed; distinct subsets while possible.
+        assert_eq!(subs, Subsets::Random { k: 6, arity: 3 }.materialize(10, 42).unwrap());
+        assert!(subs.windows(2).all(|w| w[0] != w[1]));
+        // Explicit subsets canonicalize (sort + dedup) and validate.
+        assert_eq!(
+            Subsets::Explicit(vec![vec![2, 0, 2]]).materialize(3, 0).unwrap(),
+            vec![vec![0, 2]]
+        );
+        assert!(Subsets::Explicit(vec![vec![3]]).materialize(3, 0).is_err());
+        assert!(Subsets::Random { k: 2, arity: 4 }.materialize(3, 0).is_err());
+    }
+
+    /// The headline acceptance invariant: a composite additive operator
+    /// matches the dense additive baseline to the requested tolerance on
+    /// d = 10 and d = 20 synthetic data, for both ε = 1e-2 and 1e-4, and
+    /// its batched apply costs exactly one traversal per term.
+    #[test]
+    fn additive_composite_meets_tolerance_in_high_dimension() {
+        let session = Session::native(2);
+        for (d, n, seed) in [(10usize, 600usize, 771u64), (20, 600, 772)] {
+            let pts = uniform_points(n, d, seed);
+            let mut rng = Pcg32::seeded(seed + 1);
+            let w = rng.normal_vec(n);
+            for eps in [1e-2, 1e-4] {
+                let spec = session
+                    .additive(&pts)
+                    .kernel(Family::Gaussian)
+                    .tolerance(eps)
+                    .subsets(Subsets::Random { k: 8, arity: 3 })
+                    .seed(9 + d as u64);
+                let subs = spec.materialized_subsets();
+                let h = spec.build();
+                assert_eq!(h.as_composite().unwrap().num_terms(), 8);
+                let z = session.mvm(&h, &w);
+                let kern = Kernel::canonical(Family::Gaussian);
+                let exact =
+                    crate::baselines::dense_additive_mvm(&kern, &pts, None, &subs, &[1.0; 8], &w);
+                let err = rel_err(&z, &exact);
+                assert!(err <= eps, "d={d} eps={eps}: rel err {err:.3e}");
+            }
+        }
+    }
+
+    #[test]
+    fn additive_batch_is_one_traversal_per_term() {
+        let pts = uniform_points(500, 12, 773);
+        let mut rng = Pcg32::seeded(774);
+        let w = rng.normal_vec(500 * 4);
+        let session = Session::native(2);
+        let h = session
+            .additive(&pts)
+            .kernel(Family::Gaussian)
+            .tolerance(1e-3)
+            .subsets(Subsets::Random { k: 5, arity: 2 })
+            .build();
+        let _ = session.mvm_batch(&h, &w, 4);
+        let m = session.last_metrics();
+        assert_eq!(m.columns, 4);
+        // 5 terms × 1 fused traversal each — NOT 5 × 4 columns.
+        assert_eq!((m.moment_passes, m.far_passes, m.near_passes), (5, 5, 5));
+    }
+
+    #[test]
+    fn overlapping_subsets_share_term_arcs_across_composites() {
+        let pts = uniform_points(300, 8, 775);
+        let session = Session::native(1);
+        let shared = vec![1usize, 4];
+        let a = session
+            .additive(&pts)
+            .kernel(Family::Gaussian)
+            .tolerance(1e-3)
+            .subsets(Subsets::Explicit(vec![shared.clone(), vec![0, 2]]))
+            .build();
+        let b = session
+            .additive(&pts)
+            .kernel(Family::Gaussian)
+            .tolerance(1e-3)
+            .subsets(Subsets::Explicit(vec![shared.clone(), vec![3, 5]]))
+            .build();
+        assert!(!a.ptr_eq(&b), "different multisets are different composites");
+        // The overlapping subset's term is one Arc, shared through the
+        // registry across both composites.
+        let term_of = |h: &OpHandle, slot: usize| {
+            Arc::as_ptr(&h.as_composite().unwrap().terms()[slot].1) as *const ()
+        };
+        assert_eq!(term_of(&a, 0), term_of(&b, 0), "shared subset shares its operator");
+        assert_ne!(term_of(&a, 1), term_of(&b, 1));
+        // Same subsets in a different order: the multiset key makes it the
+        // SAME composite (pointer-equal), weights being uniform.
+        let c = session
+            .additive(&pts)
+            .kernel(Family::Gaussian)
+            .tolerance(1e-3)
+            .subsets(Subsets::Explicit(vec![vec![2, 0], shared.clone()]))
+            .build();
+        assert!(a.ptr_eq(&c), "multiset keying is order-independent");
+        // Different weights are a different composite.
+        let d = session
+            .additive(&pts)
+            .kernel(Family::Gaussian)
+            .tolerance(1e-3)
+            .subsets(Subsets::Explicit(vec![shared, vec![0, 2]]))
+            .weights(vec![2.0, 1.0])
+            .build();
+        assert!(!a.ptr_eq(&d));
+    }
+
+    #[test]
+    fn composite_survives_registry_eviction_and_clear() {
+        let session = Session::builder()
+            .threads(1)
+            .backend(Backend::Native)
+            .registry_capacity(2)
+            .build();
+        let pts = uniform_points(250, 6, 776);
+        let mut rng = Pcg32::seeded(777);
+        let w = rng.normal_vec(250);
+        let subs = vec![vec![0usize, 1], vec![2, 3], vec![4, 5]];
+        let h = session
+            .additive(&pts)
+            .kernel(Family::Gaussian)
+            .tolerance(1e-3)
+            .subsets(Subsets::Explicit(subs.clone()))
+            .build();
+        let before = session.mvm(&h, &w);
+        // Churn the tiny registry until every sub-term (and the composite
+        // entry itself) has been evicted, then drop the rest for good
+        // measure: the handle holds its own Arcs, so it must keep working.
+        for p in 2..8 {
+            let _ = session.operator(&pts).kernel(Family::Cauchy).order(p).theta(0.5).build();
+        }
+        session.clear_registry();
+        let after = session.mvm(&h, &w);
+        assert_eq!(before, after, "live composite must not notice eviction");
+        let kern = Kernel::canonical(Family::Gaussian);
+        let exact =
+            crate::baselines::dense_additive_mvm(&kern, &pts, None, &subs, &[1.0, 1.0, 1.0], &w);
+        assert!(rel_err(&after, &exact) <= 1e-3);
+    }
+
+    #[test]
+    fn concurrent_composite_builds_share_one_build() {
+        let pts = uniform_points(400, 10, 778);
+        let session = Session::native(2);
+        let build = |core: &Arc<SessionCore>| {
+            core.additive(&pts)
+                .kernel(Family::Gaussian)
+                .tolerance(1e-3)
+                .subsets(Subsets::Random { k: 4, arity: 3 })
+                .seed(11)
+                .build()
+        };
+        let (a, b) = std::thread::scope(|scope| {
+            let c1 = session.clone_core();
+            let c2 = session.clone_core();
+            let h1 = scope.spawn(move || build(&c1));
+            let h2 = scope.spawn(move || build(&c2));
+            (h1.join().unwrap(), h2.join().unwrap())
+        });
+        assert!(a.ptr_eq(&b), "racing tenants share one composite");
+        // Exactly one build per term plus one for the composite, however
+        // the race resolved (the loser hit or coalesced at some level).
+        assert_eq!(session.registry_stats().misses, 4 + 1);
+    }
+
+    #[test]
+    fn composite_solve_matches_dense_oracle() {
+        let n = 140;
+        let pts = uniform_points(n, 6, 779);
+        let mut rng = Pcg32::seeded(780);
+        let y = rng.normal_vec(n);
+        let subs = vec![vec![0usize, 1, 2], vec![3, 4], vec![1, 5]];
+        let session = Session::native(1);
+        let h = session
+            .additive(&pts)
+            .kernel(Family::Gaussian)
+            .tolerance(1e-5)
+            .precision(Precision::F64)
+            .subsets(Subsets::Explicit(subs.clone()))
+            .build();
+        assert!(h.is_square());
+        let noise = vec![0.1; n];
+        let opts = SolveOpts { noise: Some(&noise), tol: 1e-8, ..Default::default() };
+        let sol = session.solve(&h, &y, &opts);
+        assert!(sol.converged, "composite CG converged (rel {})", sol.rel_residual);
+        // Dense oracle: (Σ_t K_t + Σ + jitter·I) x = y by Cholesky.
+        let kern = Kernel::canonical(Family::Gaussian);
+        let mut kmat = Mat::zeros(n, n);
+        for s in &subs {
+            let proj = pts.project(s);
+            let term = dense_matrix(&kern, &proj, &proj);
+            for i in 0..n {
+                for j in 0..n {
+                    kmat[(i, j)] += term[(i, j)];
+                }
+            }
+        }
+        for i in 0..n {
+            kmat[(i, i)] += noise[i] + opts.jitter;
+        }
+        let l = cholesky(&kmat).expect("SPD");
+        let exact = cholesky_solve(&l, &y);
+        let err = rel_err(&sol.x, &exact);
+        assert!(err < 1e-4, "solve rel err {err:.3e}");
     }
 }

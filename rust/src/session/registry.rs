@@ -88,6 +88,42 @@ pub fn fingerprint(points: &Points) -> u128 {
     )
 }
 
+/// Fingerprint of a coordinate projection `parent[:, axes]`, derived from
+/// the parent fingerprint and the axis list alone — O(arity), never
+/// O(n·d). Two composites over the same dataset that pick the same subset
+/// therefore key their sub-operator identically and share one Arc, while
+/// any coordinate change in the parent flows through to every projection.
+/// The leading tag word domain-separates projections from whole datasets.
+pub fn projection_fingerprint(parent: u128, axes: &[usize]) -> u128 {
+    const TAG: u64 = 0x70726f_6a656374; // "project"
+    fingerprint_words(
+        [TAG, parent as u64, (parent >> 64) as u64, axes.len() as u64]
+            .into_iter()
+            .chain(axes.iter().map(|&a| a as u64)),
+    )
+}
+
+/// Fingerprint of a composite operator: the *multiset* of its weighted
+/// term keys. Each `(weight, term key)` pair hashes to one word; sorting
+/// the words before the final mix makes term order irrelevant, so two
+/// composites listing the same subsets in different orders share a cache
+/// entry. The tag word domain-separates composites from datasets and
+/// projections.
+pub fn composite_fingerprint(terms: &[(f64, OpKey)]) -> u128 {
+    const TAG: u64 = 0x636f6d_706f7369; // "composi"
+    let mut words: Vec<u64> = terms
+        .iter()
+        .map(|(w, k)| {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            w.to_bits().hash(&mut h);
+            k.hash(&mut h);
+            h.finish()
+        })
+        .collect();
+    words.sort_unstable();
+    fingerprint_words([TAG, terms.len() as u64].into_iter().chain(words))
+}
+
 /// Structural identity of one operator request. Configuration fields are
 /// exact (floating-point parameters are keyed by bit pattern, not by
 /// value); dataset identity is the 128-bit [`fingerprint`], so equal keys
@@ -124,6 +160,12 @@ pub struct OpKey {
     pub precision: Precision,
     /// Exact dense backend instead of the FKT.
     pub dense: bool,
+    /// Composite (additive) operator: `src_fp` is then the multiset
+    /// fingerprint of the term keys ([`composite_fingerprint`]) rather
+    /// than a dataset fingerprint, and `p`/`theta_bits` are zeroed (each
+    /// term resolves its own). The flag domain-separates the two keying
+    /// schemes inside one map.
+    pub composite: bool,
 }
 
 /// Registry counters — the observable behaviour of the cache. `hits` vs
@@ -429,6 +471,7 @@ mod tests {
             panel_budget: crate::fkt::DEFAULT_PANEL_BUDGET_BYTES,
             precision: Precision::F64,
             dense: false,
+            composite: false,
         }
     }
 
@@ -448,6 +491,35 @@ mod tests {
         // Dimension is part of the identity even with identical buffers.
         let c = Points::new(2, a.coords.clone());
         assert_ne!(fingerprint(&a), fingerprint(&c));
+    }
+
+    #[test]
+    fn projection_fingerprint_is_stable_and_axis_sensitive() {
+        let parent = fingerprint(&Points::new(3, vec![0.5; 9]));
+        let a = projection_fingerprint(parent, &[0, 2]);
+        assert_eq!(a, projection_fingerprint(parent, &[0, 2]), "deterministic");
+        assert_ne!(a, projection_fingerprint(parent, &[0, 1]), "axis-sensitive");
+        assert_ne!(a, projection_fingerprint(parent, &[2, 0]), "order-sensitive");
+        assert_ne!(a, projection_fingerprint(parent ^ 1, &[0, 2]), "parent-sensitive");
+        assert_ne!(a, parent, "domain-separated from dataset fingerprints");
+    }
+
+    #[test]
+    fn composite_fingerprint_is_a_multiset() {
+        let (ka, kb) = (key(1), key(2));
+        let ab = composite_fingerprint(&[(1.0, ka), (2.0, kb)]);
+        let ba = composite_fingerprint(&[(2.0, kb), (1.0, ka)]);
+        assert_eq!(ab, ba, "term order must not matter");
+        assert_ne!(
+            ab,
+            composite_fingerprint(&[(2.0, ka), (1.0, kb)]),
+            "weights bind to their terms"
+        );
+        assert_ne!(
+            ab,
+            composite_fingerprint(&[(1.0, ka), (2.0, kb), (1.0, ka)]),
+            "multiplicity matters"
+        );
     }
 
     #[test]

@@ -104,6 +104,19 @@ pub fn max_order(d: usize) -> usize {
     }
 }
 
+/// ε-splitting policy for additive (composite) operators: a composite of
+/// `terms` low-dimensional operators meets a requested aggregate tolerance
+/// ε when every term meets ε/terms — the triangle inequality over the sum,
+/// with each term's own [`SAFETY`] headroom then applied on top by
+/// [`resolve`]. Uniform splitting is deliberately simple: terms share one
+/// kernel family and similar projected diameters, so a weighted split
+/// would buy little against its added key-fragmentation cost (every
+/// distinct per-term ε is a distinct registry key).
+pub fn split_tolerance(eps: f64, terms: usize) -> f64 {
+    assert!(terms > 0, "tolerance split needs at least one term");
+    eps / terms as f64
+}
+
 /// One resolved configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct Resolved {
@@ -238,6 +251,12 @@ mod tests {
         assert_eq!(auto_precision(Some(1e-12)), Precision::F64);
         // No tolerance requested ⇒ no budget to spend ⇒ f64.
         assert_eq!(auto_precision(None), Precision::F64);
+    }
+
+    #[test]
+    fn split_tolerance_is_uniform() {
+        assert_eq!(split_tolerance(1e-2, 4), 2.5e-3);
+        assert_eq!(split_tolerance(1e-4, 1), 1e-4);
     }
 
     #[test]

@@ -10,7 +10,8 @@ use fkt::serve::{
     msg, soak, BatchConfig, BatchError, BreakerConfig, Client, FaultConfig, Faults, Json,
     MicroBatcher, MvmRequest, RetryPolicy, ServeConfig, Server, SoakConfig,
 };
-use fkt::session::{Backend, Session};
+use fkt::fkt::FktConfig;
+use fkt::session::{Backend, Session, Subsets};
 use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
@@ -258,6 +259,97 @@ fn concurrent_tcp_clients_share_one_batcher() {
         "one build serves every tenant"
     );
     probe.close();
+    server.shutdown().expect("clean shutdown");
+}
+
+/// Two tenants opening the SAME additive (ANOVA) spec over a d = 12
+/// dataset share one composite operator id — the Arc-pointer interning
+/// behind the op table works for composites exactly as for plain FKT
+/// handles, because the composite itself is one registry-cached Arc — and
+/// the served mvm matches a locally built composite bit-for-bit. Without
+/// `subsets`, d = 12 stays rejected.
+#[test]
+fn tenants_share_one_additive_composite() {
+    const N: usize = 600;
+    const D: usize = 12;
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 1,
+        registry_capacity: 8,
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(&cfg).expect("spawn server");
+
+    let open = msg(
+        "open",
+        &[
+            ("name", Json::str("uniform")),
+            ("n", Json::Num(N as f64)),
+            ("d", Json::Num(D as f64)),
+            ("seed", Json::Num(9.0)),
+            ("kernel", Json::str("matern32")),
+            ("p", Json::Num(4.0)),
+            ("theta", Json::Num(0.5)),
+            ("subsets", Json::str("0,1,2;3,4,5;6,7,8")),
+        ],
+    );
+    let mut a = Client::connect(server.addr()).expect("connect a");
+    let mut b = Client::connect(server.addr()).expect("connect b");
+    let ra = a.call_ok(&open).expect("open a");
+    let rb = b.call_ok(&open).expect("open b");
+    let id_a = ra.get("id").and_then(Json::as_usize).expect("id a") as u64;
+    let id_b = rb.get("id").and_then(Json::as_usize).expect("id b") as u64;
+    assert_eq!(id_a, id_b, "same additive spec must share one composite operator");
+    assert_eq!(ra.get("terms").and_then(Json::as_usize), Some(3));
+    assert_eq!(rb.get("terms").and_then(Json::as_usize), Some(3));
+
+    // The widened dimension cap is subsets-only: the same d without them
+    // is still a structured rejection.
+    let too_wide = msg(
+        "open",
+        &[
+            ("name", Json::str("uniform")),
+            ("n", Json::Num(N as f64)),
+            ("d", Json::Num(D as f64)),
+            ("seed", Json::Num(9.0)),
+        ],
+    );
+    let rejected = a.call(&too_wide).expect("frame");
+    assert_eq!(rejected.get("ok").and_then(Json::as_bool), Some(false));
+
+    // Local reference: the same dataset generation, the same composite.
+    let mut rng = Pcg32::seeded(9);
+    let pts = fkt::data::uniform_hypersphere(N, D, &mut rng);
+    let session = Session::builder().threads(1).backend(Backend::Auto).build();
+    let op = session
+        .additive(&pts)
+        .kernel(Family::Matern32)
+        .subsets(Subsets::Explicit(vec![vec![0, 1, 2], vec![3, 4, 5], vec![6, 7, 8]]))
+        .config(FktConfig { p: 4, theta: 0.5, leaf_capacity: 512, ..Default::default() })
+        .build();
+    let mut wrng = Pcg32::seeded(78);
+    let w = wrng.normal_vec(N);
+    let z_local = session.mvm(&op, &w);
+    let z_a = a.mvm(id_a, &w).expect("mvm a");
+    let z_b = b.mvm(id_b, &w).expect("mvm b");
+    for z in [&z_a, &z_b] {
+        let err = l2(z, &z_local) / norm(&z_local).max(1e-300);
+        assert!(err <= 1e-12, "served composite mvm must match local build (rel l2 {err:.3e})");
+    }
+
+    // One build serves both tenants: three term operators plus the
+    // composite itself, each constructed exactly once.
+    let stats = a.stats().expect("stats");
+    let registry = stats.get("registry").expect("registry");
+    assert_eq!(
+        registry.get("misses").and_then(Json::as_usize),
+        Some(4),
+        "three terms + one composite, built once across tenants"
+    );
+    let ops = stats.get("ops").and_then(Json::as_arr).expect("ops");
+    assert_eq!(ops.len(), 1, "two tenants, one served composite");
+    a.close();
+    b.close();
     server.shutdown().expect("clean shutdown");
 }
 
