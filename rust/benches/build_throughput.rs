@@ -1,0 +1,143 @@
+//! Construction throughput through the shared worker pool: what parallel
+//! tree/plan/geometry building is worth, and what the persistent pool does
+//! to small-problem apply latency (where the old spawn-per-apply scoped
+//! threads cost more than the work they carried).
+//!
+//! Measures, on a fig2-style workload (Gaussian kernel, uniform
+//! hypersphere, N = 30k, d = 3 by default):
+//! * `build_seq_seconds` — transient operator build on a 1-thread session
+//!   (tree + plan + expansion geometry, strictly sequential);
+//! * `build_par_seconds` — the same build on a pooled session at
+//!   `--threads` width (subtree forking, parallel geometry, concurrent
+//!   plan descent);
+//! * `build_parallel_speedup` — seq / par (the PR's ≥ 3× bar at 8
+//!   threads on a large enough N);
+//! * `small_mvm_latency_us` — p50 apply latency at N = `--small-n`
+//!   (default 2000) through the pooled session, panels warm — the
+//!   regime where per-apply thread spawns used to dominate;
+//! * `pool_steal_ratio` — fraction of pool tasks run by a worker other
+//!   than the submitter over the whole bench (work actually spread out).
+//!
+//! All keys merge into BENCH.json via `BenchJson::save_merged`.
+//!
+//! ```text
+//! cargo bench --bench build_throughput [-- --n 30000 --builds 3]
+//! ```
+
+use fkt::benchkit::{fmt_time, BenchJson, Table};
+use fkt::cli::Args;
+use fkt::kernels::Family;
+use fkt::rng::Pcg32;
+use fkt::session::Session;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n: usize = args.get("n", 30000);
+    let d: usize = args.get("d", 3);
+    let p: usize = args.get("p", 4);
+    let theta: f64 = args.get("theta", 0.5);
+    let leaf: usize = args.get("leaf", 256);
+    let builds: usize = args.get("builds", 3);
+    let small_n: usize = args.get("small-n", 2000);
+    let applies: usize = args.get("applies", 200);
+
+    let mut rng = Pcg32::seeded(91);
+    let pts = fkt::data::uniform_hypersphere(n, d, &mut rng);
+    let seq = Session::native(1);
+    let par = Session::native(args.threads());
+    let mut json = BenchJson::new();
+
+    println!(
+        "Build throughput: gaussian, N={n}, d={d}, p={p}, θ={theta}, leaf={leaf}, \
+         best of {builds} builds, {} worker thread(s)",
+        par.threads()
+    );
+
+    // Transient builds skip the registry, so every iteration pays the
+    // full tree + plan + geometry cost; best-of-k removes warmup noise.
+    let time_builds = |session: &Session| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..builds.max(1) {
+            let t = Instant::now();
+            let op = session
+                .operator(&pts)
+                .kernel(Family::Gaussian)
+                .order(p)
+                .theta(theta)
+                .leaf_capacity(leaf)
+                .transient()
+                .build();
+            best = best.min(t.elapsed().as_secs_f64());
+            std::hint::black_box(op.num_targets());
+        }
+        best
+    };
+    let seq_s = time_builds(&seq);
+    let par_s = time_builds(&par);
+    let speedup = seq_s / par_s;
+
+    // Small-problem apply latency: persistent pool vs the old
+    // spawn-per-apply world. Panels warm on the first apply; p50 over
+    // the rest is what an interactive consumer sees.
+    let small = fkt::data::uniform_hypersphere(small_n, d, &mut rng);
+    let w = rng.normal_vec(small_n);
+    let sop = par
+        .operator(&small)
+        .kernel(Family::Gaussian)
+        .order(p)
+        .theta(theta)
+        .leaf_capacity(leaf)
+        .build();
+    let z_warm = par.mvm(&sop, &w);
+    assert_eq!(z_warm.len(), small_n);
+    let mut lat_us: Vec<f64> = (0..applies.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            std::hint::black_box(par.mvm(&sop, &w));
+            t.elapsed().as_secs_f64() * 1e6
+        })
+        .collect();
+    lat_us.sort_by(f64::total_cmp);
+    let p50_us = lat_us[lat_us.len() / 2];
+    let ps = par.pool_stats();
+    assert_eq!(seq.pool_stats(), fkt::pool::PoolStats::default(), "1-thread session owns no pool");
+    if par.threads() > 1 {
+        assert!(ps.tasks > 0, "pooled session must run its work on the pool");
+    }
+
+    let mut table = Table::new(&["stage", "time", "speedup"]);
+    table.row(&["build, 1 thread".into(), fmt_time(seq_s), "1.00x".into()]);
+    table.row(&[
+        format!("build, {} threads", par.threads()),
+        fmt_time(par_s),
+        format!("{speedup:.2}x"),
+    ]);
+    table.row(&[
+        format!("small mvm p50 (N={small_n})"),
+        fmt_time(p50_us / 1e6),
+        "".into(),
+    ]);
+    table.print();
+    println!(
+        "pool: {} tasks, {} steals ({:.0}% stolen), {} batches, {} parks",
+        ps.tasks,
+        ps.steals,
+        100.0 * ps.steal_ratio(),
+        ps.batches,
+        ps.parks
+    );
+
+    json.record("build_seq_seconds", seq_s);
+    json.record("build_par_seconds", par_s);
+    json.record("build_parallel_speedup", speedup);
+    json.record("build_threads", par.threads() as f64);
+    json.record("small_mvm_latency_us", p50_us);
+    json.record("pool_steal_ratio", ps.steal_ratio());
+    json.record_str("simd_backend", fkt::linalg::simd::backend().name());
+    let path = BenchJson::default_path();
+    match json.save_merged(&path) {
+        Ok(()) => println!("\nBENCH json merged into {}", path.display()),
+        Err(e) => eprintln!("\nBENCH json write failed ({}): {e}", path.display()),
+    }
+}

@@ -13,10 +13,18 @@
 //! through the soak harness: the chaos numbers say what the reliability
 //! layer costs and whether every request still comes back framed.
 //!
+//! A fourth leg reruns the batched server at small N (`--small-n`,
+//! default 2000): the latency-bound regime where per-request overhead —
+//! and, before the shared worker pool, per-apply thread spawns — sets
+//! the floor. Its stats also verify the pool carried the applies
+//! (nonzero pool tasks, zero per-apply spawns).
+//!
 //! Records `serve_p50_ms`, `serve_p99_ms`, `serve_rps`,
 //! `batched_columns_per_apply`,
 //! `single_vs_batched_serve_throughput`, `chaos_error_rate`,
-//! `shed_rate`, and `p99_under_faults_ms` into BENCH.json (merged).
+//! `shed_rate`, `p99_under_faults_ms`, and the small-N leg's
+//! `serve_small_p50_ms` / `serve_small_p99_ms` / `serve_small_rps` into
+//! BENCH.json (merged).
 //!
 //! ```text
 //! cargo bench --bench serve_load [-- --n 20000 --clients 8 --requests 32]
@@ -33,13 +41,14 @@ use std::sync::Barrier;
 use std::time::{Duration, Instant};
 
 /// The open request every client (and both servers) uses — identical
-/// specs alias one cached operator and one micro-batcher.
-fn open_msg(args: &Args) -> Json {
+/// specs alias one cached operator and one micro-batcher. `n` is
+/// explicit so the small-N leg reuses everything else.
+fn open_msg(args: &Args, n: usize) -> Json {
     msg(
         "open",
         &[
             ("name", Json::str("uniform")),
-            ("n", Json::Num(args.get("n", 20000usize) as f64)),
+            ("n", Json::Num(n as f64)),
             ("d", Json::Num(args.get("d", 3usize) as f64)),
             ("seed", Json::Num(42.0)),
             ("kernel", Json::str(args.get_str("kernel", "matern32"))),
@@ -54,17 +63,22 @@ struct LoadResult {
     latencies_ms: Vec<f64>,
     wall_s: f64,
     columns_per_apply: f64,
+    /// Server-side pool task count after the load (0 ⇔ single-threaded
+    /// core; otherwise proof the applies ran on the shared pool instead
+    /// of spawning per-apply threads).
+    pool_tasks: f64,
+    /// The server core's effective worker-thread count.
+    server_threads: f64,
 }
 
 /// Drive `clients` concurrent connections, each issuing `requests`
 /// sequential MVMs after a barrier release. Returns per-request
 /// latencies, the load-phase wall time, and the server's batching
 /// amortization factor.
-fn run_load(addr: SocketAddr, args: &Args) -> LoadResult {
+fn run_load(addr: SocketAddr, args: &Args, n: usize) -> LoadResult {
     let clients: usize = args.get("clients", 8);
     let requests: usize = args.get("requests", 32);
-    let n: usize = args.get("n", 20000);
-    let open = open_msg(args);
+    let open = open_msg(args, n);
 
     // Warm-up connection pays the operator build once, outside timing.
     let mut warm = Client::connect(addr).expect("connect warm-up client");
@@ -121,8 +135,15 @@ fn run_load(addr: SocketAddr, args: &Args) -> LoadResult {
         .and_then(|o| o.get("columns_per_apply"))
         .and_then(Json::as_f64)
         .expect("per-op batching stats");
+    let pool_tasks = stats
+        .get("pool")
+        .and_then(|p| p.get("tasks"))
+        .and_then(Json::as_f64)
+        .expect("pool stats");
+    let server_threads =
+        stats.get("threads").and_then(Json::as_f64).expect("threads in stats");
     warm.close();
-    LoadResult { latencies_ms, wall_s, columns_per_apply }
+    LoadResult { latencies_ms, wall_s, columns_per_apply, pool_tasks, server_threads }
 }
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -160,8 +181,13 @@ fn main() {
         ..base.clone()
     };
     let server = Server::spawn(&batched_cfg).expect("spawn batched server");
-    let batched = run_load(server.addr(), &args);
+    let batched = run_load(server.addr(), &args, n);
     server.shutdown().expect("clean batched shutdown");
+    // PoolStats-verified: a multi-threaded serving core runs every apply
+    // on its shared pool — per-apply thread spawns are gone.
+    if batched.server_threads > 1.0 {
+        assert!(batched.pool_tasks > 0.0, "serve applies must run on the shared pool");
+    }
 
     // Same load with batching off: every request is one apply pass.
     let unbatched_cfg = ServeConfig {
@@ -173,8 +199,16 @@ fn main() {
         ..base.clone()
     };
     let server = Server::spawn(&unbatched_cfg).expect("spawn unbatched server");
-    let unbatched = run_load(server.addr(), &args);
+    let unbatched = run_load(server.addr(), &args, n);
     server.shutdown().expect("clean unbatched shutdown");
+
+    // Small-N leg: same batched server config at N = `--small-n` — the
+    // latency-bound regime where request overhead, not the traversal,
+    // sets the floor.
+    let small_n: usize = args.get("small-n", 2000);
+    let server = Server::spawn(&batched_cfg).expect("spawn small-N server");
+    let small = run_load(server.addr(), &args, small_n);
+    server.shutdown().expect("clean small-N shutdown");
 
     // Chaos leg: the batched server again, now with fault injection —
     // probabilistic apply panics plus injected latency — driven through
@@ -197,7 +231,7 @@ fn main() {
     let soak_cfg = soak::SoakConfig {
         clients,
         requests_per_client: requests,
-        open: open_msg(&args),
+        open: open_msg(&args, n),
         weight_len: n,
         deadline_ms: None,
         timeout: Duration::from_secs(60),
@@ -213,8 +247,11 @@ fn main() {
     lat_b.sort_by(|a, b| a.total_cmp(b));
     let mut lat_u = unbatched.latencies_ms.clone();
     lat_u.sort_by(|a, b| a.total_cmp(b));
+    let mut lat_s = small.latencies_ms.clone();
+    lat_s.sort_by(|a, b| a.total_cmp(b));
     let rps_b = total as f64 / batched.wall_s;
     let rps_u = total as f64 / unbatched.wall_s;
+    let rps_s = total as f64 / small.wall_s;
     let ratio = rps_b / rps_u;
 
     let mut table = Table::new(&["mode", "p50 ms", "p99 ms", "rps", "cols/apply"]);
@@ -231,6 +268,13 @@ fn main() {
         format!("{:.2}", percentile(&lat_u, 99.0)),
         format!("{rps_u:.1}"),
         format!("{:.2}", unbatched.columns_per_apply),
+    ]);
+    table.row(&[
+        format!("batched N={small_n}"),
+        format!("{:.2}", percentile(&lat_s, 50.0)),
+        format!("{:.2}", percentile(&lat_s, 99.0)),
+        format!("{rps_s:.1}"),
+        format!("{:.2}", small.columns_per_apply),
     ]);
     table.print();
     println!("single vs batched serve throughput: {ratio:.2}x at {clients} clients");
@@ -251,6 +295,10 @@ fn main() {
     json.record("batched_columns_per_apply", batched.columns_per_apply);
     json.record("single_vs_batched_serve_throughput", ratio);
     json.record("serve_clients", clients as f64);
+    json.record("serve_small_p50_ms", percentile(&lat_s, 50.0));
+    json.record("serve_small_p99_ms", percentile(&lat_s, 99.0));
+    json.record("serve_small_rps", rps_s);
+    json.record("serve_small_n", small_n as f64);
     json.record("chaos_error_rate", chaos.error_rate());
     json.record("shed_rate", chaos.shed_rate());
     json.record("p99_under_faults_ms", chaos.p99_ms());

@@ -8,21 +8,25 @@
 //!   the AOT PJRT artifacts (`Backend::Auto` probes the artifact dir);
 //! * tile batching — leaf near-blocks are split/padded into the fixed
 //!   (B,T) shape the compiled executable expects and scatter-added back;
-//! * threading — the native path fans phases out over a scoped pool;
+//! * threading — the native path runs on a coordinator-owned persistent
+//!   work-stealing pool (`None` at `threads == 1`, which stays strictly
+//!   sequential);
 //! * metrics — per-phase wall times and tile counts for EXPERIMENTS.md.
 
 use crate::fkt::FktOperator;
 use crate::linalg::{Precision, SimdBackend};
 use crate::op::KernelOp;
+use crate::pool::{Exec, PoolStats, WorkerPool};
 use crate::runtime::Runtime;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
 /// Recover a mutex guard even if a panicking thread poisoned it — the
-/// coordinator's locked state (runtime handle, last-metrics snapshot) is
-/// replaced wholesale at each write, so there is no torn state to fear,
-/// and a multi-tenant server must not let one panicked request poison
-/// metrics for everyone else.
+/// coordinator's locked state (the PJRT runtime handle) is replaced
+/// wholesale at each write, so there is no torn state to fear, and a
+/// multi-tenant server must not let one panicked request poison the
+/// runtime for everyone else.
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
 }
@@ -111,20 +115,184 @@ pub struct MvmMetrics {
     /// so perf reports are self-describing about the kernel tier they
     /// measured.
     pub simd_backend: SimdBackend,
+    /// Pool index-tasks the coordinator's shared [`WorkerPool`] executed
+    /// while this MVM ran (0 on the strictly-sequential `threads == 1`
+    /// path, which never touches the pool). Under concurrent serving the
+    /// delta can include tasks from overlapping requests — it is a pool
+    /// activity counter, not a per-request attribution.
+    pub pool_tasks: u64,
+    /// Of those tasks, how many ran on a worker other than the submitting
+    /// thread (the pool's "steals").
+    pub pool_steals: u64,
+}
+
+/// Number of `u64` cells an [`MvmMetrics`] snapshot packs into.
+const METRIC_WORDS: usize = 17;
+
+impl MvmMetrics {
+    /// Pack every field into fixed-width words (floats by bit pattern,
+    /// enums by code) for the seqlock cells.
+    fn encode(&self) -> [u64; METRIC_WORDS] {
+        let precision = match self.precision {
+            Precision::F64 => 0u64,
+            Precision::F32 => 1,
+            Precision::Auto => 2,
+        };
+        let simd = match self.simd_backend {
+            SimdBackend::Avx2Fma => 0u64,
+            SimdBackend::Scalar => 1,
+        };
+        [
+            self.far_seconds.to_bits(),
+            self.near_seconds.to_bits(),
+            self.pjrt_batches as u64,
+            self.tiles as u64,
+            self.used_pjrt as u64,
+            self.columns as u64,
+            self.moment_passes as u64,
+            self.far_passes as u64,
+            self.near_passes as u64,
+            self.panel_bytes as u64,
+            self.panels_cached as u64,
+            self.panels_streamed as u64,
+            self.panel_reuse as u64,
+            precision,
+            simd,
+            self.pool_tasks,
+            self.pool_steals,
+        ]
+    }
+
+    fn decode(w: &[u64; METRIC_WORDS]) -> MvmMetrics {
+        MvmMetrics {
+            far_seconds: f64::from_bits(w[0]),
+            near_seconds: f64::from_bits(w[1]),
+            pjrt_batches: w[2] as usize,
+            tiles: w[3] as usize,
+            used_pjrt: w[4] != 0,
+            columns: w[5] as usize,
+            moment_passes: w[6] as usize,
+            far_passes: w[7] as usize,
+            near_passes: w[8] as usize,
+            panel_bytes: w[9] as usize,
+            panels_cached: w[10] as usize,
+            panels_streamed: w[11] as usize,
+            panel_reuse: w[12] as usize,
+            precision: match w[13] {
+                1 => Precision::F32,
+                2 => Precision::Auto,
+                _ => Precision::F64,
+            },
+            simd_backend: match w[14] {
+                0 => SimdBackend::Avx2Fma,
+                _ => SimdBackend::Scalar,
+            },
+            pool_tasks: w[15],
+            pool_steals: w[16],
+        }
+    }
+}
+
+/// Lock-free "latest MVM metrics" slot: a seqlock over fixed-width
+/// atomic cells. Writers never block — a writer that loses the CAS race
+/// (or observes another writer mid-publish) simply drops its snapshot,
+/// which is the right semantics for a "whichever request finished last"
+/// observability surface. Readers retry until they see a torn-free even
+/// sequence. No mutex is ever held across an MVM, so a reader polling
+/// `last_metrics` can never stall an apply (and vice versa) — the
+/// publication is a handful of relaxed stores bracketed by the sequence
+/// word.
+struct MetricSlot {
+    seq: AtomicU64,
+    cells: [AtomicU64; METRIC_WORDS],
+}
+
+impl MetricSlot {
+    fn new() -> MetricSlot {
+        MetricSlot {
+            seq: AtomicU64::new(0),
+            cells: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Publish a snapshot; drops it if another writer is mid-flight.
+    fn publish(&self, m: &MvmMetrics) {
+        let s = self.seq.load(Ordering::Relaxed);
+        if s & 1 == 1 {
+            return;
+        }
+        if self
+            .seq
+            .compare_exchange(s, s + 1, Ordering::AcqRel, Ordering::Relaxed)
+            .is_err()
+        {
+            return;
+        }
+        for (cell, word) in self.cells.iter().zip(m.encode()) {
+            cell.store(word, Ordering::Relaxed);
+        }
+        self.seq.store(s + 2, Ordering::Release);
+    }
+
+    /// Read a consistent snapshot (retries across concurrent writers).
+    fn snapshot(&self) -> MvmMetrics {
+        loop {
+            let s0 = self.seq.load(Ordering::Acquire);
+            if s0 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let mut words = [0u64; METRIC_WORDS];
+            for (slot, cell) in words.iter_mut().zip(&self.cells) {
+                *slot = cell.load(Ordering::Relaxed);
+            }
+            std::sync::atomic::fence(Ordering::Acquire);
+            if self.seq.load(Ordering::Relaxed) == s0 {
+                return MvmMetrics::decode(&words);
+            }
+        }
+    }
 }
 
 /// The coordinator. All execution verbs take `&self`: the native phases
-/// thread through scoped pools internally, the PJRT runtime handle and
-/// the last-metrics snapshot live behind mutexes, so one coordinator can
-/// serve MVMs from any number of threads concurrently (the serving layer
-/// shares it inside an `Arc<SessionCore>`).
+/// run on the coordinator-owned persistent [`WorkerPool`], the PJRT
+/// runtime handle lives behind a mutex, and the last-metrics snapshot is
+/// a lock-free seqlock slot, so one coordinator can serve MVMs from any
+/// number of threads concurrently (the serving layer shares it inside an
+/// `Arc<SessionCore>`).
 pub struct Coordinator {
     cfg: CoordinatorConfig,
+    /// Resolved worker-thread count (the `cfg.threads == 0` "all cores"
+    /// and `FKT_THREADS` env cases folded in at construction).
+    threads: usize,
+    /// The persistent work-stealing pool every parallel surface of this
+    /// coordinator's operators runs on — tree/plan construction, the
+    /// interleaved apply phases, panel warm-up, composite fan-out. `None`
+    /// exactly when `threads == 1`: the sequential path must never
+    /// enqueue to a pool or take its locks.
+    pool: Option<WorkerPool>,
     /// PJRT runtime handle. The mutex serializes tile execution — the AOT
     /// executable is stateful — while native-path MVMs never touch it.
     runtime: Mutex<Option<Runtime>>,
     /// Metrics of the most recent MVM, read via [`Coordinator::last_metrics`].
-    last_metrics: Mutex<MvmMetrics>,
+    last_metrics: MetricSlot,
+}
+
+/// Resolve the effective thread count for a config: explicit `threads`
+/// wins; `0` consults the `FKT_THREADS` env var (the CI pin for the
+/// strictly-sequential test leg) before falling back to all cores.
+fn resolve_threads(cfg_threads: usize) -> usize {
+    if cfg_threads > 0 {
+        return cfg_threads;
+    }
+    if let Some(t) = std::env::var("FKT_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&t| t > 0)
+    {
+        return t;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 impl Coordinator {
@@ -135,37 +303,50 @@ impl Coordinator {
             Backend::Native => None,
             _ => Runtime::open_default(),
         };
+        let threads = resolve_threads(cfg.threads);
         Coordinator {
             cfg,
+            threads,
+            pool: (threads > 1).then(|| WorkerPool::new(threads)),
             runtime: Mutex::new(runtime),
-            last_metrics: Mutex::new(MvmMetrics::default()),
+            last_metrics: MetricSlot::new(),
         }
     }
 
     /// Native-only coordinator (no artifact probe).
     pub fn native(threads: usize) -> Coordinator {
-        Coordinator {
-            cfg: CoordinatorConfig { threads, backend: Backend::Native },
-            runtime: Mutex::new(None),
-            last_metrics: Mutex::new(MvmMetrics::default()),
-        }
+        Coordinator::new(CoordinatorConfig { threads, backend: Backend::Native })
     }
 
     /// Snapshot of the most recent MVM's metrics. Under concurrency this
     /// is "some recent MVM through this coordinator" — whichever request
     /// finished last — which is the right semantics for a shared serving
-    /// core's observability surface.
+    /// core's observability surface. Lock-free: readers never block
+    /// writers and vice versa.
     pub fn last_metrics(&self) -> MvmMetrics {
-        *lock(&self.last_metrics)
+        self.last_metrics.snapshot()
     }
 
     /// Effective thread count.
     pub fn threads(&self) -> usize {
-        if self.cfg.threads > 0 {
-            self.cfg.threads
-        } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        self.threads
+    }
+
+    /// Execution context every parallel surface routes through:
+    /// [`Exec::Seq`] when this coordinator is single-threaded (strictly
+    /// inline, zero pool interaction), otherwise the shared pool at the
+    /// coordinator's width.
+    pub fn exec(&self) -> Exec<'_> {
+        match &self.pool {
+            Some(pool) => Exec::Pool { pool, slots: self.threads },
+            None => Exec::Seq,
         }
+    }
+
+    /// Cumulative stats of the coordinator's pool (all zeros when
+    /// `threads == 1` and no pool exists).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.as_ref().map(|p| p.stats()).unwrap_or_default()
     }
 
     /// Whether the PJRT path will be used for this kernel family.
@@ -205,9 +386,24 @@ impl Coordinator {
     /// Fused backends perform one traversal for all m columns — the
     /// recorded `MvmMetrics` phase counters say how many it actually took.
     pub fn mvm_batch(&self, op: &dyn KernelOp, w: &[f64], m: usize) -> Vec<f64> {
+        self.mvm_batch_metered(op, w, m).0
+    }
+
+    /// [`Coordinator::mvm_batch`] that also hands back this apply's own
+    /// metrics snapshot. The shared `last_metrics` slot is still
+    /// published (last writer wins), but the returned value is *this*
+    /// request's — the serving layer uses it so concurrent requests never
+    /// read each other's numbers.
+    pub fn mvm_batch_metered(
+        &self,
+        op: &dyn KernelOp,
+        w: &[f64],
+        m: usize,
+    ) -> (Vec<f64>, MvmMetrics) {
         assert!(m > 0, "mvm_batch needs at least one column");
         assert_eq!(w.len(), op.num_sources() * m, "weight block shape mismatch");
         let before = op.phase_counts();
+        let pool_before = self.pool_stats();
         let use_pjrt = match op.as_fkt() {
             Some(f) => self.will_use_pjrt(&f.kernel.family.name(), f.tree().d),
             None => false,
@@ -232,10 +428,11 @@ impl Coordinator {
             out
         } else {
             let t0 = Instant::now();
+            let exec = self.exec();
             let z = if m == 1 {
-                op.apply_threaded(w, self.threads())
+                op.apply_exec(w, exec)
             } else {
-                op.apply_batch_threaded(w, m, self.threads())
+                op.apply_batch_exec(w, m, exec)
             };
             metrics.far_seconds = t0.elapsed().as_secs_f64();
             z
@@ -255,8 +452,11 @@ impl Coordinator {
             metrics.panel_reuse = ps.applies.saturating_sub(1);
         }
         metrics.precision = op.storage_precision();
-        *lock(&self.last_metrics) = metrics;
-        z
+        let pool_after = self.pool_stats();
+        metrics.pool_tasks = pool_after.tasks.saturating_sub(pool_before.tasks);
+        metrics.pool_steals = pool_after.steals.saturating_sub(pool_before.steals);
+        self.last_metrics.publish(&metrics);
+        (z, metrics)
     }
 
     /// PJRT near-field path: far field natively (the paper's contribution
@@ -518,6 +718,75 @@ mod tests {
         assert!(m.panels_cached > 0, "composite must not lose panel metrics");
         assert!(m.panel_bytes > 0);
         assert_eq!(m.precision, Precision::F64);
+    }
+
+    #[test]
+    fn single_threaded_coordinator_never_touches_pool() {
+        let pts = uniform_points(600, 2, 145);
+        let mut rng = Pcg32::seeded(146);
+        let w = rng.normal_vec(600);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let coord = Coordinator::native(1);
+        let z = coord.mvm(&op, &w);
+        assert_eq!(z.len(), 600);
+        // threads == 1 ⇒ no pool exists, no task was ever enqueued, and
+        // the published metrics say so.
+        assert_eq!(coord.pool_stats(), PoolStats::default());
+        let m = coord.last_metrics();
+        assert_eq!((m.pool_tasks, m.pool_steals), (0, 0));
+        // The sequential coordinator still agrees with the raw operator.
+        let direct = op.matvec(&w);
+        assert_eq!(z, direct);
+    }
+
+    #[test]
+    fn metered_mvm_returns_this_applys_snapshot_and_pool_activity() {
+        let pts = uniform_points(800, 2, 147);
+        let mut rng = Pcg32::seeded(148);
+        let w = rng.normal_vec(800 * 2);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let coord = Coordinator::native(4);
+        let (z, m) = coord.mvm_batch_metered(&op, &w, 2);
+        assert_eq!(z.len(), 800 * 2);
+        assert_eq!(m.columns, 2);
+        assert!(m.pool_tasks > 0, "pooled apply must run on the shared pool");
+        assert_eq!(m.precision, Precision::F64);
+        // The shared last-metrics slot saw the same publication.
+        let shared = coord.last_metrics();
+        assert_eq!(shared.columns, 2);
+        assert_eq!(shared.pool_tasks, m.pool_tasks);
+    }
+
+    #[test]
+    fn metrics_reads_are_consistent_under_concurrent_applies() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let pts = uniform_points(700, 2, 149);
+        let mut rng = Pcg32::seeded(150);
+        let w = rng.normal_vec(700 * 2);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 64, ..Default::default() };
+        let op = FktOperator::square(&pts, kern, cfg);
+        let coord = Coordinator::native(4);
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            // Reader hammers the seqlock while applies publish; every
+            // snapshot must decode to one of the published states, never
+            // a torn mix (columns is always 0 pre-publish or 2 after).
+            s.spawn(|| {
+                while !stop.load(Ordering::Relaxed) {
+                    let m = coord.last_metrics();
+                    assert!(m.columns == 0 || m.columns == 2, "torn read: {}", m.columns);
+                }
+            });
+            for _ in 0..5 {
+                let _ = coord.mvm_batch(&op, &w, 2);
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::kernels::Kernel;
 use crate::linalg::{vecops, Precision};
 use crate::op::KernelOp;
 use crate::points::Points;
+use crate::pool::Exec;
 use crate::tree::{FarFieldPlan, Tree};
 use panels::{PanelScratch, PanelSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -195,7 +196,23 @@ impl FktOperator {
         sources: &Points,
         targets: Option<&Points>,
         kernel: Kernel,
+        cfg: FktConfig,
+    ) -> FktOperator {
+        Self::new_exec(sources, targets, kernel, cfg, Exec::Seq)
+    }
+
+    /// [`FktOperator::new`] with construction parallelized on `exec`:
+    /// the tree build forks subtrees, the per-node expansion geometry
+    /// (centers + radii) is a parallel-for, and the far-field plan
+    /// descends independent subtrees concurrently. All three stages are
+    /// bit-identical to the sequential build (property-tested in `tree`),
+    /// so `new` is exactly `new_exec(..., Exec::Seq)`.
+    pub fn new_exec(
+        sources: &Points,
+        targets: Option<&Points>,
+        kernel: Kernel,
         mut cfg: FktConfig,
+        exec: Exec<'_>,
     ) -> FktOperator {
         assert!(cfg.p <= 30, "truncation order too large");
         // Normalize the storage tier to a concrete value: `Auto` is a
@@ -230,51 +247,47 @@ impl FktOperator {
             }
             None => scaled_src.clone(),
         };
-        let mut tree = Tree::build(&scaled_src, cfg.leaf_capacity);
-        // Expansion centers + radii per the configured convention.
-        let mut centers: Vec<Vec<f64>> = Vec::with_capacity(tree.nodes.len());
-        for id in 0..tree.nodes.len() {
-            let c = match cfg.center {
-                ExpansionCenter::BoxCenter => tree.nodes[id].center.clone(),
-                ExpansionCenter::Centroid => {
-                    let node = &tree.nodes[id];
-                    let mut c = vec![0.0; tree.d];
-                    for i in node.start..node.end {
-                        let pnt = tree.points.point(i);
-                        for a in 0..tree.d {
-                            c[a] += pnt[a];
+        let mut tree = Tree::build_exec(&scaled_src, cfg.leaf_capacity, exec);
+        // Expansion centers + radii per the configured convention: each
+        // node's geometry is independent, so this is a parallel-for with
+        // a sequential write-back (eq. 2's max over node points).
+        let geom: Vec<(Vec<f64>, f64)> = {
+            let tree = &tree;
+            exec.map(tree.nodes.len(), &|id| {
+                let node = &tree.nodes[id];
+                let c = match cfg.center {
+                    ExpansionCenter::BoxCenter => node.center.clone(),
+                    ExpansionCenter::Centroid => {
+                        let mut c = vec![0.0; tree.d];
+                        for i in node.start..node.end {
+                            let pnt = tree.points.point(i);
+                            for a in 0..tree.d {
+                                c[a] += pnt[a];
+                            }
                         }
+                        let inv = 1.0 / node.len().max(1) as f64;
+                        for v in &mut c {
+                            *v *= inv;
+                        }
+                        c
                     }
-                    let inv = 1.0 / node.len().max(1) as f64;
-                    for v in &mut c {
-                        *v *= inv;
-                    }
-                    c
+                };
+                let mut r2 = 0.0f64;
+                for i in node.start..node.end {
+                    r2 = r2.max(vecops::dist2(tree.points.point(i), &c));
                 }
-            };
-            // Radius w.r.t. the chosen center (eq. 2's max over node points).
-            let node = &tree.nodes[id];
-            let mut r2 = 0.0f64;
-            for i in node.start..node.end {
-                r2 = r2.max(vecops::dist2(tree.points.point(i), &c));
-            }
+                (c, r2.sqrt())
+            })
+        };
+        // Write the chosen centers/radii back so the plan uses them.
+        let mut centers: Vec<Vec<f64>> = Vec::with_capacity(tree.nodes.len());
+        for (id, (c, r)) in geom.into_iter().enumerate() {
+            let node = &mut tree.nodes[id];
+            node.center = c.clone();
+            node.radius = r;
             centers.push(c);
         }
-        // Write the chosen centers/radii back so the plan uses them.
-        for (id, c) in centers.iter().enumerate() {
-            let node = &mut tree.nodes[id];
-            let mut r2 = 0.0f64;
-            for i in node.start..node.end {
-                // recompute against stored points
-                r2 = r2.max(vecops::dist2(
-                    &tree.points.coords[i * tree.d..(i + 1) * tree.d],
-                    c,
-                ));
-            }
-            node.center = c.clone();
-            node.radius = r2.sqrt();
-        }
-        let plan = FarFieldPlan::build(&tree, &scaled_tgt, cfg.theta);
+        let plan = FarFieldPlan::build_exec(&tree, &scaled_tgt, cfg.theta, exec);
         let exp = Expansion::build(sources.d, cfg.p);
         let radial = if cfg.compression {
             match crate::compress::CompressedRadial::build(&kernel.family, &exp.table) {
@@ -662,59 +675,60 @@ impl FktOperator {
     }
 
     /// Interleaved-layout batched MVM core shared by every public entry
-    /// point (single- and multi-RHS, serial and threaded); bumps each
+    /// point (single- and multi-RHS, sequential and pooled); bumps each
     /// phase counter exactly once. `tier` is the contraction precision of
     /// this apply: normally the operator's storage tier, but the refined-
     /// solve residual path passes f64 to force full-precision streaming on
     /// an f32-tier operator (cached panels serve only their own tier).
-    fn matmat_interleaved(&self, w: &[f64], m: usize, threads: usize, tier: Precision) -> Vec<f64> {
+    ///
+    /// A sequential `exec` (or an effective width of one) runs every
+    /// phase inline on the caller with zero pool interaction. A pooled
+    /// `exec` submits one batch of claim-loop slots per phase group:
+    /// each slot repeatedly claims the next job from a shared cursor
+    /// over the size-sorted prebuilt job lists — `moment_jobs` for
+    /// phase 1, the merged far/near `apply_jobs` for phases 2–3 — with
+    /// per-slot z partials summed at the end (targets are shared across
+    /// jobs, so slots never write one z row concurrently).
+    fn matmat_interleaved(&self, w: &[f64], m: usize, exec: Exec<'_>, tier: Precision) -> Vec<f64> {
         let ntg = self.targets.len();
-        let threads = threads.max(1).min(self.tree.nodes.len().max(1));
+        let par = exec.parallelism().min(self.tree.nodes.len().max(1));
         // Full-precision applies on an f32-tier operator bypass every
         // cached panel — don't let them inflate the panel-reuse metric.
         if tier == self.cfg.precision {
             self.panels.note_apply();
         }
-        // Job lists are prebuilt at operator construction (they depend
-        // only on the immutable tree and plan): `moment_jobs` for phase 1,
-        // the merged far/near `apply_jobs` for phases 2–3, both
-        // size-sorted descending for the work-stealing scheduler.
         let mjobs = &self.moment_jobs;
         let jobs = &self.apply_jobs;
-        // Phase 1: moments. Workers claim nodes from the shared cursor and
+        // Phase 1: moments. Slots claim nodes from the shared cursor and
         // return (id, μ) pairs merged into the table afterwards.
         let mut moments: Vec<Vec<f64>> = vec![Vec::new(); self.tree.nodes.len()];
-        if threads == 1 {
+        if par == 1 {
             let mut s = PanelScratch::new(self, m, tier);
             for &id in mjobs {
                 moments[id as usize] = self.node_moments(id as usize, w, m, &mut s);
             }
         } else {
+            // First pooled touch materializes the budget-admitted panels
+            // as one parallel-for instead of on-demand inside the claim
+            // loops (see `panels`).
+            if tier == self.cfg.precision {
+                self.warm_panels(exec);
+            }
+            let slots = par.min(mjobs.len()).max(1);
             let cursor = AtomicUsize::new(0);
-            let mut produced: Vec<Vec<(usize, Vec<f64>)>> = Vec::with_capacity(threads);
-            crossbeam_utils::thread::scope(|scope| {
-                let mut handles = Vec::new();
-                for _ in 0..threads {
-                    let cursor = &cursor;
-                    handles.push(scope.spawn(move |_| {
-                        let mut s = PanelScratch::new(self, m, tier);
-                        let mut out: Vec<(usize, Vec<f64>)> = Vec::new();
-                        loop {
-                            let j = cursor.fetch_add(1, Ordering::Relaxed);
-                            if j >= mjobs.len() {
-                                break;
-                            }
-                            let id = mjobs[j] as usize;
-                            out.push((id, self.node_moments(id, w, m, &mut s)));
-                        }
-                        out
-                    }));
+            let produced: Vec<Vec<(usize, Vec<f64>)>> = exec.map(slots, &|_| {
+                let mut s = PanelScratch::new(self, m, tier);
+                let mut out: Vec<(usize, Vec<f64>)> = Vec::new();
+                loop {
+                    let j = cursor.fetch_add(1, Ordering::Relaxed);
+                    if j >= mjobs.len() {
+                        break;
+                    }
+                    let id = mjobs[j] as usize;
+                    out.push((id, self.node_moments(id, w, m, &mut s)));
                 }
-                for h in handles {
-                    produced.push(h.join().expect("moment worker"));
-                }
-            })
-            .expect("moment threads");
+                out
+            });
             for part in produced {
                 for (id, mu) in part {
                     moments[id] = mu;
@@ -722,41 +736,30 @@ impl FktOperator {
             }
         }
         self.counters.moments.fetch_add(1, Ordering::Relaxed);
-        // Phases 2 + 3: far panels + near leaves from one stolen job list,
-        // per-thread z buffers reduced at the end (targets are shared
-        // across jobs, so workers never write one z concurrently).
+        // Phases 2 + 3: far panels + near leaves from one claimed job
+        // list, per-slot z buffers reduced at the end.
         let mut z = vec![0.0; ntg * m];
-        if threads == 1 {
+        if par == 1 {
             let mut s = PanelScratch::new(self, m, tier);
             for &job in jobs {
                 self.run_apply_job(job, &moments, w, m, &mut z, &mut s);
             }
         } else {
+            let slots = par.min(jobs.len()).max(1);
             let cursor = AtomicUsize::new(0);
-            let mut partials: Vec<Vec<f64>> = Vec::with_capacity(threads);
-            crossbeam_utils::thread::scope(|scope| {
-                let moments = &moments;
-                let cursor = &cursor;
-                let mut handles = Vec::new();
-                for _ in 0..threads {
-                    handles.push(scope.spawn(move |_| {
-                        let mut s = PanelScratch::new(self, m, tier);
-                        let mut zt = vec![0.0; ntg * m];
-                        loop {
-                            let j = cursor.fetch_add(1, Ordering::Relaxed);
-                            if j >= jobs.len() {
-                                break;
-                            }
-                            self.run_apply_job(jobs[j], moments, w, m, &mut zt, &mut s);
-                        }
-                        zt
-                    }));
+            let moments = &moments;
+            let partials: Vec<Vec<f64>> = exec.map(slots, &|_| {
+                let mut s = PanelScratch::new(self, m, tier);
+                let mut zt = vec![0.0; ntg * m];
+                loop {
+                    let j = cursor.fetch_add(1, Ordering::Relaxed);
+                    if j >= jobs.len() {
+                        break;
+                    }
+                    self.run_apply_job(jobs[j], moments, w, m, &mut zt, &mut s);
                 }
-                for h in handles {
-                    partials.push(h.join().expect("apply worker"));
-                }
-            })
-            .expect("apply threads");
+                zt
+            });
             for part in &partials {
                 for (slot, &v) in z.iter_mut().zip(part) {
                     *slot += v;
@@ -775,20 +778,26 @@ impl FktOperator {
     /// near-field kernel values are computed once and contracted against
     /// all m columns. Column c equals `matvec` of column c to round-off.
     pub fn matmat(&self, w: &[f64], m: usize) -> Vec<f64> {
-        self.matmat_parallel(w, m, 1)
+        self.matmat_cm(w, m, Exec::Seq, self.cfg.precision)
     }
 
-    /// Multi-threaded batched MVM (see [`FktOperator::matmat`]): workers
-    /// steal size-sorted node/leaf jobs from a shared list, like
-    /// [`FktOperator::matvec_parallel`].
+    /// Multi-threaded batched MVM (see [`FktOperator::matmat`]) through
+    /// the process-global legacy pool bridge; session-owned callers pass
+    /// their own pool via [`FktOperator::matmat_exec`].
     pub fn matmat_parallel(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
-        self.matmat_cm(w, m, threads, self.cfg.precision)
+        self.matmat_cm(w, m, Exec::with_threads(threads.max(1)), self.cfg.precision)
+    }
+
+    /// Batched MVM on a caller-provided execution context (column-major
+    /// like [`FktOperator::matmat_parallel`]).
+    pub fn matmat_exec(&self, w: &[f64], m: usize, exec: Exec<'_>) -> Vec<f64> {
+        self.matmat_cm(w, m, exec, self.cfg.precision)
     }
 
     /// Column-major boundary shared by the tiered and full-precision
     /// batched entry points: transpose in, run the interleaved engine at
     /// `tier`, transpose out.
-    fn matmat_cm(&self, w: &[f64], m: usize, threads: usize, tier: Precision) -> Vec<f64> {
+    fn matmat_cm(&self, w: &[f64], m: usize, exec: Exec<'_>, tier: Precision) -> Vec<f64> {
         assert!(m > 0, "matmat needs at least one column");
         assert_eq!(w.len(), self.n_src * m, "weight block shape mismatch");
         let n = self.n_src;
@@ -801,7 +810,7 @@ impl FktOperator {
                 wi[i * m + c] = v;
             }
         }
-        let zi = self.matmat_interleaved(&wi, m, threads, tier);
+        let zi = self.matmat_interleaved(&wi, m, exec, tier);
         let mut out = vec![0.0; ntg * m];
         for t in 0..ntg {
             for c in 0..m {
@@ -816,7 +825,13 @@ impl FktOperator {
     /// their precomputed panels, the rest stream.
     pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
         assert_eq!(w.len(), self.n_src);
-        self.matmat_interleaved(w, 1, 1, self.cfg.precision)
+        self.matmat_interleaved(w, 1, Exec::Seq, self.cfg.precision)
+    }
+
+    /// MVM on a caller-provided execution context (the session pool).
+    pub fn matvec_exec(&self, w: &[f64], exec: Exec<'_>) -> Vec<f64> {
+        assert_eq!(w.len(), self.n_src);
+        self.matmat_interleaved(w, 1, exec, self.cfg.precision)
     }
 
     /// Full-precision single-RHS apply, regardless of the storage tier: on
@@ -827,14 +842,14 @@ impl FktOperator {
     /// (cached f64 panels already are full precision).
     pub fn matvec_full_precision(&self, w: &[f64], threads: usize) -> Vec<f64> {
         assert_eq!(w.len(), self.n_src);
-        self.matmat_interleaved(w, 1, threads, Precision::F64)
+        self.matmat_interleaved(w, 1, Exec::with_threads(threads.max(1)), Precision::F64)
     }
 
     /// Full-precision batched apply (see
     /// [`FktOperator::matvec_full_precision`]); column-major like
     /// [`FktOperator::matmat_parallel`].
     pub fn matmat_full_precision(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
-        self.matmat_cm(w, m, threads, Precision::F64)
+        self.matmat_cm(w, m, Exec::with_threads(threads.max(1)), Precision::F64)
     }
 
     /// MVM with per-phase wall times: (moments, far, near) seconds.
@@ -859,14 +874,16 @@ impl FktOperator {
         (z, t_mom, t_far, t_near)
     }
 
-    /// Multi-threaded MVM through the panelized engine: workers steal
-    /// size-sorted node/leaf jobs from a shared list, with per-thread
-    /// accumulation buffers (targets are shared across nodes, so threads
+    /// Multi-threaded MVM through the panelized engine: slots claim
+    /// size-sorted node/leaf jobs from a shared list, with per-slot
+    /// accumulation buffers (targets are shared across nodes, so slots
     /// never write the same z concurrently — each reduces its own buffer
-    /// which are summed at the end).
+    /// which are summed at the end). Routed through the process-global
+    /// legacy pool bridge; session-owned callers pass their own pool via
+    /// [`FktOperator::matvec_exec`].
     pub fn matvec_parallel(&self, w: &[f64], threads: usize) -> Vec<f64> {
         assert_eq!(w.len(), self.n_src);
-        self.matmat_interleaved(w, 1, threads, self.cfg.precision)
+        self.matmat_interleaved(w, 1, Exec::with_threads(threads.max(1)), self.cfg.precision)
     }
 
     /// MVM with the near field delegated to a caller-provided executor
@@ -923,6 +940,14 @@ impl KernelOp for FktOperator {
 
     fn apply_batch_threaded(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
         self.matmat_parallel(w, m, threads)
+    }
+
+    fn apply_exec(&self, w: &[f64], exec: Exec<'_>) -> Vec<f64> {
+        self.matvec_exec(w, exec)
+    }
+
+    fn apply_batch_exec(&self, w: &[f64], m: usize, exec: Exec<'_>) -> Vec<f64> {
+        self.matmat_exec(w, m, exec)
     }
 
     fn phase_counts(&self) -> Option<(usize, usize, usize)> {
@@ -1409,6 +1434,84 @@ mod tests {
         assert_eq!(op.traversal_counts(), (5, 5, 5));
         op.reset_traversal_counts();
         assert_eq!(op.traversal_counts(), (0, 0, 0));
+    }
+
+    #[test]
+    fn pooled_exec_matches_serial_and_width_one_touches_no_pool() {
+        use crate::pool::WorkerPool;
+        let pts = uniform_points(900, 2, 170);
+        let mut rng = Pcg32::seeded(171);
+        let w = rng.normal_vec(900);
+        let kern = Kernel::canonical(Family::Cauchy);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 40, ..Default::default() };
+        let pool = WorkerPool::new(7);
+        let op =
+            FktOperator::new_exec(&pts, None, kern, cfg, Exec::Pool { pool: &pool, slots: 7 });
+        let serial = op.matvec(&w);
+        for slots in [2usize, 7] {
+            let z = op.matvec_exec(&w, Exec::Pool { pool: &pool, slots });
+            for i in 0..900 {
+                assert!(
+                    (z[i] - serial[i]).abs() < 1e-10 * (1.0 + serial[i].abs()),
+                    "slots={slots} i={i}"
+                );
+            }
+        }
+        // The width-1 contract: a slots=1 exec takes the strictly
+        // sequential path — bit-identical result, zero pool interaction.
+        let before = pool.stats();
+        let z1 = op.matvec_exec(&w, Exec::Pool { pool: &pool, slots: 1 });
+        assert_eq!(z1, serial, "width-1 exec is the sequential path bit for bit");
+        assert_eq!(pool.stats(), before, "width-1 apply must not touch the pool");
+    }
+
+    #[test]
+    fn pooled_batched_matches_looped() {
+        use crate::pool::WorkerPool;
+        let pts = uniform_points(700, 3, 172);
+        let mut rng = Pcg32::seeded(173);
+        let w = rng.normal_vec(700 * 3);
+        let kern = Kernel::canonical(Family::Gaussian);
+        let cfg = FktConfig { p: 4, theta: 0.5, leaf_capacity: 40, ..Default::default() };
+        let pool = WorkerPool::new(7);
+        let op = FktOperator::square(&pts, kern, cfg);
+        for slots in [1usize, 2, 7] {
+            let exec = Exec::Pool { pool: &pool, slots };
+            let batched = op.matmat_exec(&w, 3, exec);
+            for c in 0..3 {
+                let single = op.matvec_exec(&w[c * 700..(c + 1) * 700], exec);
+                for t in 0..700 {
+                    let b = batched[c * 700 + t];
+                    let s = single[t];
+                    assert!(
+                        (b - s).abs() <= 1e-12 * (1.0 + s.abs()),
+                        "slots={slots} col={c} t={t}: {b} vs {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_construction_matches_sequential() {
+        use crate::pool::WorkerPool;
+        let pts = uniform_points(3000, 3, 174);
+        let mut rng = Pcg32::seeded(175);
+        let w = rng.normal_vec(3000);
+        let kern = Kernel::canonical(Family::Cauchy);
+        for center in [ExpansionCenter::BoxCenter, ExpansionCenter::Centroid] {
+            let cfg =
+                FktConfig { p: 3, theta: 0.5, leaf_capacity: 64, center, ..Default::default() };
+            let seq = FktOperator::square(&pts, kern, cfg);
+            let pool = WorkerPool::new(4);
+            let par =
+                FktOperator::new_exec(&pts, None, kern, cfg, Exec::Pool { pool: &pool, slots: 4 });
+            // Identical tree + geometry + plan ⇒ bit-identical sequential
+            // applies of the two operators.
+            assert_eq!(par.plan().far_pairs, seq.plan().far_pairs);
+            assert_eq!(par.plan().near_pairs, seq.plan().near_pairs);
+            assert_eq!(par.matvec(&w), seq.matvec(&w), "{center:?}");
+        }
     }
 
     #[test]

@@ -57,8 +57,9 @@
 use super::{FktOperator, RadialRep};
 use crate::expansion::HarmonicWorkspace;
 use crate::linalg::{gemm_accum_t, vecops, Precision};
+use crate::pool::Exec;
 use crate::tree::{FarFieldPlan, Tree};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 /// One materialized coefficient panel in the operator's storage tier.
@@ -117,6 +118,9 @@ pub struct PanelSet {
     resident: AtomicUsize,
     /// Applies served since build (each one past the first reuses panels).
     applies: AtomicUsize,
+    /// Set once a pooled apply has bulk-materialized the admitted panels
+    /// (see [`FktOperator::warm_panels`]).
+    warmed: AtomicBool,
 }
 
 /// Observable panel-cache state (surfaced through
@@ -184,6 +188,7 @@ impl PanelSet {
             streamed_panels: streamed,
             resident: AtomicUsize::new(0),
             applies: AtomicUsize::new(0),
+            warmed: AtomicBool::new(false),
         }
     }
 
@@ -263,6 +268,26 @@ impl FktOperator {
     /// Panel-cache counters (residency, cached vs streamed, reuse).
     pub fn panel_stats(&self) -> PanelStats {
         self.panels.stats()
+    }
+
+    /// Materialize every budget-admitted panel as one parallel-for over
+    /// the far-active nodes. Called by the first *pooled* apply (at the
+    /// operator's own tier) so panel construction load-balances across
+    /// the pool up front instead of riding inside the size-sorted claim
+    /// loops; sequential applies keep the pure per-node laziness. The
+    /// per-node [`OnceLock`]s make this idempotent and race-free against
+    /// concurrent applies; the `warmed` flag just skips re-walking the
+    /// node list on every subsequent apply.
+    pub(super) fn warm_panels(&self, exec: Exec<'_>) {
+        if self.panels.warmed.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        let ids: Vec<usize> = self.plan.nodes_with_far().collect();
+        exec.run(ids.len(), &|i| {
+            let id = ids[i];
+            let _ = self.src_panel(id);
+            let _ = self.tgt_panel(id);
+        });
     }
 
     /// Fill `scratch.row` with the m2t coefficient row of target `t`
@@ -749,6 +774,38 @@ mod tests {
         );
         assert!(tight32.panel_stats().panels_cached > tight64.panel_stats().panels_cached);
         assert_eq!(tight32.panel_stats().panels_streamed, 0, "f32 fits the halved budget");
+    }
+
+    /// Cached-vs-streamed agreement through the shared execution pool at
+    /// several widths (width 1 exercises the sequential-fallback path of
+    /// a pool-carrying exec).
+    #[test]
+    fn pooled_panel_matches_streamed() {
+        use crate::pool::{Exec, WorkerPool};
+        let pts = uniform_points(700, 3, 216);
+        let mut rng = Pcg32::seeded(217);
+        let w1 = rng.normal_vec(700);
+        let w2 = rng.normal_vec(700 * 2);
+        let kern = Kernel::canonical(Family::Matern32);
+        let base = FktConfig { p: 4, theta: 0.5, leaf_capacity: 40, ..Default::default() };
+        let cached = FktOperator::square(&pts, kern, base);
+        let streamed =
+            FktOperator::square(&pts, kern, FktConfig { panel_budget_bytes: 0, ..base });
+        let pool = WorkerPool::new(7);
+        for slots in [1usize, 2, 7] {
+            let exec = Exec::Pool { pool: &pool, slots };
+            assert_close(
+                &cached.matvec_exec(&w1, exec),
+                &streamed.matvec_exec(&w1, exec),
+                &format!("pooled matvec slots={slots}"),
+            );
+            assert_close(
+                &cached.matmat_exec(&w2, 2, exec),
+                &streamed.matmat_exec(&w2, 2, exec),
+                &format!("pooled matmat slots={slots}"),
+            );
+        }
+        assert!(cached.panel_stats().resident_bytes > 0, "pooled applies warm the panels");
     }
 
     #[test]

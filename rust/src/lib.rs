@@ -29,6 +29,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod op;
 pub mod points;
+pub mod pool;
 pub mod rng;
 pub mod runtime;
 pub mod serve;

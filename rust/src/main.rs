@@ -273,6 +273,17 @@ fn mvm(args: &Args) {
         den += dense[i] * dense[i];
     }
     println!("rel l2 error (subsample {m}): {:.3e}", (num / den).sqrt());
+    // Pool activity: zero everywhere on `--threads 1` (the strictly
+    // sequential path), task/steal counts otherwise.
+    let ps = session.pool_stats();
+    println!(
+        "pool: {} tasks, {} steals ({:.0}% stolen), {} batches over {} thread(s)",
+        ps.tasks,
+        ps.steals,
+        100.0 * ps.steal_ratio(),
+        ps.batches,
+        session.threads()
+    );
 }
 
 fn plan(args: &Args) {

@@ -29,7 +29,7 @@
 use super::KernelOp;
 use crate::fkt::PanelStats;
 use crate::linalg::Precision;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::pool::Exec;
 use std::sync::Arc;
 
 /// A shareable operator term — the same shape the session registry hands
@@ -114,46 +114,51 @@ impl KernelOp for SumOp {
         self.apply_batch_threaded(w, 1, threads)
     }
 
-    /// Splits the thread budget across terms: up to `min(terms, threads)`
-    /// workers pull term indices from a shared cursor, each running its
-    /// term's own threaded batch with the remaining budget and
-    /// accumulating into a worker-local buffer; the locals are summed at
-    /// the end. Still one traversal per term.
+    /// Legacy thread-count surface: bridges to the shared execution pool
+    /// (see [`SumOp::apply_batch_exec`][KernelOp::apply_batch_exec]) —
+    /// terms fan out as pool tasks and each term's own parallel phases
+    /// nest on the *same* pool instead of splitting the thread budget.
     fn apply_batch_threaded(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
+        self.apply_batch_exec(w, m, Exec::with_threads(threads.max(1)))
+    }
+
+    fn apply_exec(&self, w: &[f64], exec: Exec<'_>) -> Vec<f64> {
+        self.apply_batch_exec(w, 1, exec)
+    }
+
+    /// One fused batch per term, fanned out on the shared execution pool:
+    /// each term index is one pool task, and every term's own parallel
+    /// phases nest on the same pool (the claim-loop scheduler interleaves
+    /// them), so no thread budget is split or stranded. Per-term results
+    /// are weighted-summed sequentially on the submitter, keeping the
+    /// reduction order fixed (construction order) at every width. A
+    /// single-term composite forwards straight to the term — no
+    /// composite-level task is ever enqueued — and a sequential `exec`
+    /// runs the whole loop inline.
+    fn apply_batch_exec(&self, w: &[f64], m: usize, exec: Exec<'_>) -> Vec<f64> {
         assert_eq!(w.len(), self.n * m, "weight block shape mismatch");
-        let workers = self.terms.len().min(threads.max(1));
-        if workers <= 1 {
+        if self.terms.len() == 1 {
+            let (weight, term) = &self.terms[0];
+            let mut z = term.apply_batch_exec(w, m, exec);
+            if *weight != 1.0 {
+                for x in &mut z {
+                    *x *= *weight;
+                }
+            }
+            return z;
+        }
+        if exec.is_seq() {
             let mut out = vec![0.0; self.t * m];
             for (weight, term) in &self.terms {
-                Self::axpy(&mut out, *weight, &term.apply_batch_threaded(w, m, threads));
+                Self::axpy(&mut out, *weight, &term.apply_batch_exec(w, m, exec));
             }
             return out;
         }
-        let inner_threads = (threads / workers).max(1);
-        let cursor = AtomicUsize::new(0);
-        let locals: Vec<Vec<f64>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..workers)
-                .map(|_| {
-                    scope.spawn(|| {
-                        let mut local = vec![0.0; self.t * m];
-                        loop {
-                            let i = cursor.fetch_add(1, Ordering::Relaxed);
-                            let Some((weight, term)) = self.terms.get(i) else { break };
-                            Self::axpy(
-                                &mut local,
-                                *weight,
-                                &term.apply_batch_threaded(w, m, inner_threads),
-                            );
-                        }
-                        local
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("composite worker panicked")).collect()
-        });
+        let parts: Vec<Vec<f64>> =
+            exec.map(self.terms.len(), &|i| self.terms[i].1.apply_batch_exec(w, m, exec));
         let mut out = vec![0.0; self.t * m];
-        for local in &locals {
-            Self::axpy(&mut out, 1.0, local);
+        for ((weight, _), part) in self.terms.iter().zip(&parts) {
+            Self::axpy(&mut out, *weight, part);
         }
         out
     }
@@ -260,6 +265,22 @@ impl KernelOp for ScaledOp {
         z
     }
 
+    fn apply_exec(&self, w: &[f64], exec: Exec<'_>) -> Vec<f64> {
+        let mut z = self.inner.apply_exec(w, exec);
+        for x in &mut z {
+            *x *= self.scale;
+        }
+        z
+    }
+
+    fn apply_batch_exec(&self, w: &[f64], m: usize, exec: Exec<'_>) -> Vec<f64> {
+        let mut z = self.inner.apply_batch_exec(w, m, exec);
+        for x in &mut z {
+            *x *= self.scale;
+        }
+        z
+    }
+
     fn phase_counts(&self) -> Option<(usize, usize, usize)> {
         self.inner.phase_counts()
     }
@@ -325,6 +346,22 @@ impl KernelOp for DiagShiftOp {
 
     fn apply_batch_threaded(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
         let mut z = self.inner.apply_batch_threaded(w, m, threads);
+        for (o, x) in z.iter_mut().zip(w) {
+            *o += self.shift * x;
+        }
+        z
+    }
+
+    fn apply_exec(&self, w: &[f64], exec: Exec<'_>) -> Vec<f64> {
+        let mut z = self.inner.apply_exec(w, exec);
+        for (o, x) in z.iter_mut().zip(w) {
+            *o += self.shift * x;
+        }
+        z
+    }
+
+    fn apply_batch_exec(&self, w: &[f64], m: usize, exec: Exec<'_>) -> Vec<f64> {
+        let mut z = self.inner.apply_batch_exec(w, m, exec);
         for (o, x) in z.iter_mut().zip(w) {
             *o += self.shift * x;
         }
@@ -473,6 +510,55 @@ mod tests {
         let fused = shifted.apply_batch(&wb, 2);
         let reference = crate::op::apply_batch_looped(&shifted, &wb, 2);
         assert_close(&fused, &reference, 1e-14);
+    }
+
+    #[test]
+    fn pooled_sum_matches_serial() {
+        use crate::pool::{Exec, WorkerPool};
+        let pts = uniform_points(200, 2, 420);
+        let mut rng = Pcg32::seeded(421);
+        let wb = rng.normal_vec(200 * 2);
+        let terms: Vec<(f64, SharedTermOp)> = [Family::Gaussian, Family::Cauchy, Family::Matern32]
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| (0.5 + i as f64, dense_term(&pts, f)))
+            .collect();
+        let sum = SumOp::new(terms);
+        let serial = sum.apply_batch(&wb, 2);
+        let pool = WorkerPool::new(4);
+        for slots in [1usize, 2, 4] {
+            let exec = Exec::Pool { pool: &pool, slots };
+            assert_close(&sum.apply_batch_exec(&wb, 2, exec), &serial, 1e-13);
+            assert_close(&sum.apply_exec(&wb[..200], exec), &sum.apply(&wb[..200]), 1e-13);
+        }
+    }
+
+    /// Satellite contract: a single-term composite forwards straight to
+    /// its term — the composite layer itself never enqueues a pool task —
+    /// and a width-1 exec keeps even a multi-term sum off the pool.
+    #[test]
+    fn single_term_and_width_one_enqueue_nothing() {
+        use crate::pool::{Exec, WorkerPool};
+        let pts = uniform_points(150, 2, 422);
+        let mut rng = Pcg32::seeded(423);
+        let w = rng.normal_vec(150);
+        let pool = WorkerPool::new(4);
+        let exec = Exec::Pool { pool: &pool, slots: 4 };
+        let single = SumOp::new(vec![(2.5, dense_term(&pts, Family::Gaussian))]);
+        let before = pool.stats();
+        let z = single.apply_exec(&w, exec);
+        assert_eq!(pool.stats(), before, "single-term composite must not touch the pool");
+        let expect: Vec<f64> =
+            single.terms()[0].1.apply(&w).iter().map(|x| 2.5 * x).collect();
+        assert_close(&z, &expect, 1e-14);
+        let multi = SumOp::new(vec![
+            (1.0, dense_term(&pts, Family::Gaussian)),
+            (1.0, dense_term(&pts, Family::Cauchy)),
+        ]);
+        let narrow = Exec::Pool { pool: &pool, slots: 1 };
+        let zs = multi.apply_exec(&w, narrow);
+        assert_eq!(pool.stats(), before, "width-1 composite must not touch the pool");
+        assert_close(&zs, &multi.apply(&w), 1e-14);
     }
 
     #[test]

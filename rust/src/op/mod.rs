@@ -26,6 +26,8 @@
 
 pub mod composite;
 
+use crate::pool::Exec;
+
 /// A linear kernel-summation operator `z = K(targets, sources) · w`.
 ///
 /// Implementors: [`crate::fkt::FktOperator`] (fast transform, fused batch),
@@ -68,7 +70,7 @@ pub trait KernelOp {
     }
 
     /// Threaded single-RHS product. The default ignores `threads`; backends
-    /// with an internal pool (FKT's crossbeam node/leaf chunking) override.
+    /// with parallel phases (FKT's pooled node/leaf job lists) override.
     fn apply_threaded(&self, w: &[f64], threads: usize) -> Vec<f64> {
         let _ = threads;
         self.apply(w)
@@ -78,6 +80,28 @@ pub trait KernelOp {
     fn apply_batch_threaded(&self, w: &[f64], m: usize, threads: usize) -> Vec<f64> {
         let _ = threads;
         self.apply_batch(w, m)
+    }
+
+    /// Single-RHS product on an explicit execution context: strictly
+    /// sequential under [`Exec::Seq`], pooled otherwise. The default
+    /// bridges to the legacy `threads`-count surface; backends with real
+    /// parallel phases override so every task lands on the shared pool.
+    fn apply_exec(&self, w: &[f64], exec: Exec<'_>) -> Vec<f64> {
+        if exec.is_seq() {
+            self.apply(w)
+        } else {
+            self.apply_threaded(w, exec.parallelism())
+        }
+    }
+
+    /// Multi-RHS product on an explicit execution context (same
+    /// column-major layout as [`KernelOp::apply_batch`]).
+    fn apply_batch_exec(&self, w: &[f64], m: usize, exec: Exec<'_>) -> Vec<f64> {
+        if exec.is_seq() {
+            self.apply_batch(w, m)
+        } else {
+            self.apply_batch_threaded(w, m, exec.parallelism())
+        }
     }
 
     /// Cumulative (moments, far-field, near-field) full-phase pass counts,

@@ -1,0 +1,627 @@
+//! Persistent execution pool: one set of worker threads per session,
+//! shared by every parallel surface in the crate.
+//!
+//! Before this module existed, every parallel apply spawned and joined
+//! fresh OS threads (a `crossbeam` scope per phase) and construction ran
+//! on one core. For the small micro-batched MVMs the serving layer
+//! coalesces, spawn/join latency dominated the apply itself. The pool
+//! amortizes thread startup across requests: workers are spawned once
+//! (sized by the `--threads` dial), park on a condvar when idle, and
+//! wake to claim work from whatever parallel-for is active.
+//!
+//! # Scheduling scheme
+//!
+//! The unit of submission is a [`Batch`]: one borrowed closure plus a
+//! shared claim cursor over `0..n`. Submitting pushes the batch onto a
+//! small active list and wakes the workers; every participant — pool
+//! workers *and* the submitting thread, which always helps — repeatedly
+//! `fetch_add`s the cursor and runs the index it claimed. This is
+//! work stealing in its degenerate, optimal form for flat parallel
+//! loops: instead of per-worker deques and a thief protocol, all tasks
+//! live in one atomic counter and "stealing" is any claim made by a
+//! thread other than the submitter. The size-sorted job lists the apply
+//! engine feeds in give the same longest-first balancing a deque
+//! scheduler would, without the bookkeeping. [`PoolStats`] reports
+//! claims by non-submitters as `steals` so the balance is observable.
+//!
+//! # Borrowed data, scoped semantics
+//!
+//! [`WorkerPool::run`] accepts a *borrowed* `&dyn Fn(usize)` and does
+//! not return until every claimed index has finished executing (the
+//! batch keeps a `pending` count; the last decrement releases the
+//! caller). That blocking is what makes the lifetime erasure inside
+//! sound — exactly the contract of `std::thread::scope`, without the
+//! spawn. Panics in tasks are caught, the batch is drained, and the
+//! submitter re-panics.
+//!
+//! # Nesting and deadlock freedom
+//!
+//! Nested `run` calls (a composite term fanning out while each term's
+//! apply also parallelizes) share the same pool. The submitting thread
+//! always helps drain its own batch before waiting, so a nested batch
+//! makes progress even when every worker is busy above it; waits only
+//! ever happen after the waiter's own cursor is exhausted, so every
+//! outstanding index is held by a live, running thread. Waits nest by
+//! batch depth and never cycle.
+//!
+//! # Sequential fallback
+//!
+//! `threads == 1` must cost nothing: [`Exec::Seq`] (and any effective
+//! parallelism of 1) runs the loop inline on the caller — no batch is
+//! allocated, no lock or atomic of the pool is touched, and
+//! [`PoolStats`] stays at zero. The coordinator hands out `Exec::Seq`
+//! whenever its thread dial resolves to one.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+
+/// Poison-oblivious lock: a panicked pool task never invalidates the
+/// queue or latch state, so poisoning carries no information here.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Cumulative pool activity counters — the observability half of the
+/// pool contract. `tasks` counts every executed index; `steals` counts
+/// the subset executed by a pool worker rather than the thread that
+/// submitted the batch, so `steals / tasks` measures how much of the
+/// work actually migrated. `parks`/`unparks` count condvar sleep/wake
+/// transitions (a hot serve loop should show parks ≪ tasks).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Parallel-for batches submitted to the pool.
+    pub batches: u64,
+    /// Index-tasks executed (by anyone, including submitters).
+    pub tasks: u64,
+    /// Tasks executed by a pool worker other than the submitter.
+    pub steals: u64,
+    /// Times a worker went to sleep on the idle condvar.
+    pub parks: u64,
+    /// Times a sleeping worker was woken.
+    pub unparks: u64,
+}
+
+impl PoolStats {
+    /// `steals / tasks`, or 0 when nothing ran.
+    pub fn steal_ratio(&self) -> f64 {
+        if self.tasks == 0 {
+            0.0
+        } else {
+            self.steals as f64 / self.tasks as f64
+        }
+    }
+
+    /// Counter-wise difference vs an earlier snapshot (saturating, so a
+    /// stale baseline never underflows).
+    pub fn since(&self, earlier: &PoolStats) -> PoolStats {
+        PoolStats {
+            batches: self.batches.saturating_sub(earlier.batches),
+            tasks: self.tasks.saturating_sub(earlier.tasks),
+            steals: self.steals.saturating_sub(earlier.steals),
+            parks: self.parks.saturating_sub(earlier.parks),
+            unparks: self.unparks.saturating_sub(earlier.unparks),
+        }
+    }
+}
+
+#[derive(Default)]
+struct StatCells {
+    batches: AtomicU64,
+    tasks: AtomicU64,
+    steals: AtomicU64,
+    parks: AtomicU64,
+    unparks: AtomicU64,
+}
+
+impl StatCells {
+    fn snapshot(&self) -> PoolStats {
+        PoolStats {
+            batches: self.batches.load(Ordering::Relaxed),
+            tasks: self.tasks.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            parks: self.parks.load(Ordering::Relaxed),
+            unparks: self.unparks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One submitted parallel-for: a borrowed closure (lifetime erased —
+/// see the SAFETY argument in [`WorkerPool::run`]) plus the claim
+/// cursor and completion latch.
+struct Batch {
+    /// The erased task. The submitter blocks in `run` until `pending`
+    /// hits zero, so this borrow outlives every dereference.
+    task: TaskRef,
+    /// Total number of indices.
+    total: usize,
+    /// Next unclaimed index; claims are `fetch_add(1)` races.
+    cursor: AtomicUsize,
+    /// Indices not yet *finished* (claimed-and-running counts). The
+    /// last decrement flips the latch and releases the submitter.
+    pending: AtomicUsize,
+    /// Threads currently executing this batch (submitter included).
+    executors: AtomicUsize,
+    /// Executor cap — how `Exec` honors a thread dial smaller than the
+    /// pool: at most `limit` threads run this batch concurrently.
+    limit: usize,
+    /// Set when any task panicked; the submitter re-panics after the
+    /// batch drains.
+    panicked: AtomicBool,
+    /// Completion flag, guarded by `latch` purely for the condvar
+    /// handshake (the flag itself is atomic).
+    done: AtomicBool,
+    latch: Mutex<()>,
+    done_cv: Condvar,
+}
+
+/// `&'static` view of the submitted closure. The 'static is a lie the
+/// batch's blocking discipline makes safe; keeping it a reference (not
+/// a raw pointer) lets `Send`/`Sync` fall out of `dyn ... + Sync`.
+type TaskRef = &'static (dyn Fn(usize) + Sync);
+
+impl Batch {
+    fn exhausted(&self) -> bool {
+        self.cursor.load(Ordering::Relaxed) >= self.total
+    }
+
+    /// Try to become an executor; backs off if the cap is reached.
+    fn try_enter(&self) -> bool {
+        if self.executors.fetch_add(1, Ordering::Relaxed) < self.limit {
+            true
+        } else {
+            self.executors.fetch_sub(1, Ordering::Relaxed);
+            false
+        }
+    }
+
+    fn leave(&self) {
+        self.executors.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Claim-and-run until the cursor is exhausted. `stealing` marks
+    /// execution by a pool worker (vs the submitting thread).
+    fn run_claims(&self, stats: &StatCells, stealing: bool) {
+        let mut ran = 0u64;
+        loop {
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= self.total {
+                break;
+            }
+            // Panics must not leak past the claim loop: the submitter
+            // owns re-raising (once the batch has fully drained), and a
+            // worker that unwound here would abandon the pool.
+            if catch_unwind(AssertUnwindSafe(|| (self.task)(i))).is_err() {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
+            ran += 1;
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                // Last index done: flip the latch under its mutex so a
+                // submitter between its check and its wait cannot miss
+                // the notification.
+                let _g = lock(&self.latch);
+                self.done.store(true, Ordering::Release);
+                self.done_cv.notify_all();
+            }
+        }
+        if ran > 0 {
+            stats.tasks.fetch_add(ran, Ordering::Relaxed);
+            if stealing {
+                stats.steals.fetch_add(ran, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Block until every index has finished executing.
+    fn wait(&self) {
+        let mut g = lock(&self.latch);
+        while !self.done.load(Ordering::Acquire) {
+            g = self.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+struct PoolShared {
+    /// Batches with unclaimed indices. Kept tiny: submitters push, and
+    /// everyone prunes exhausted entries while holding the lock. This
+    /// lock is only ever held for list surgery — never across a task.
+    active: Mutex<Vec<Arc<Batch>>>,
+    work_cv: Condvar,
+    stats: StatCells,
+    shutdown: AtomicBool,
+}
+
+impl PoolShared {
+    /// Prune exhausted batches and pick one to execute (under the
+    /// active-list lock, which the caller holds).
+    fn pick(active: &mut Vec<Arc<Batch>>) -> Option<Arc<Batch>> {
+        active.retain(|b| !b.exhausted());
+        for b in active.iter() {
+            if b.try_enter() {
+                return Some(Arc::clone(b));
+            }
+        }
+        None
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let picked = {
+            let mut active = lock(&shared.active);
+            loop {
+                if let Some(b) = PoolShared::pick(&mut active) {
+                    break Some(b);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                shared.stats.parks.fetch_add(1, Ordering::Relaxed);
+                active = shared.work_cv.wait(active).unwrap_or_else(|e| e.into_inner());
+                shared.stats.unparks.fetch_add(1, Ordering::Relaxed);
+            }
+        };
+        match picked {
+            Some(batch) => {
+                batch.run_claims(&shared.stats, true);
+                batch.leave();
+            }
+            None => return,
+        }
+    }
+}
+
+/// The persistent pool: `threads - 1` parked worker threads plus the
+/// submitting thread itself, which always participates. Owned (via the
+/// coordinator) by `Arc<SessionCore>`; dropped when the session is.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` total execution slots (the calling
+    /// thread counts as one, so `threads - 1` OS threads are created;
+    /// `threads <= 1` spawns none and every `run` is inline).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            active: Mutex::new(Vec::new()),
+            work_cv: Condvar::new(),
+            stats: StatCells::default(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..threads.saturating_sub(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("fkt-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, workers, threads }
+    }
+
+    /// Total execution slots (workers + the submitting thread).
+    pub fn concurrency(&self) -> usize {
+        self.threads
+    }
+
+    /// Cumulative activity counters.
+    pub fn stats(&self) -> PoolStats {
+        self.shared.stats.snapshot()
+    }
+
+    /// Scoped parallel-for: run `f(0..n)` across at most `limit`
+    /// threads (submitter included) and return when every index has
+    /// finished. Safe for borrowed data — see the module docs. With an
+    /// effective width of one the loop runs inline, touching nothing.
+    pub fn run(&self, n: usize, limit: usize, f: &(dyn Fn(usize) + Sync)) {
+        let limit = limit.clamp(1, self.threads);
+        if n <= 1 || limit == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        // SAFETY: the batch's `pending` latch keeps this stack frame
+        // alive until the last claimed index has finished executing,
+        // so the erased borrow strictly outlives every dereference;
+        // claims only succeed while `cursor < total`, which implies
+        // the submitter is still blocked in `wait` below.
+        let task: TaskRef = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let batch = Arc::new(Batch {
+            task,
+            total: n,
+            cursor: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n),
+            executors: AtomicUsize::new(0),
+            limit,
+            panicked: AtomicBool::new(false),
+            done: AtomicBool::new(false),
+            latch: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        self.shared.stats.batches.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut active = lock(&self.shared.active);
+            active.push(Arc::clone(&batch));
+        }
+        self.shared.work_cv.notify_all();
+        // Help: drain our own batch before waiting. This is what makes
+        // nested submission deadlock-free — progress never depends on a
+        // free worker existing.
+        if batch.try_enter() {
+            batch.run_claims(&self.shared.stats, false);
+            batch.leave();
+        }
+        batch.wait();
+        if batch.panicked.load(Ordering::Relaxed) {
+            panic!("worker pool task panicked");
+        }
+    }
+
+    /// Parallel map: `f(i)` into a presized result vector, preserving
+    /// index order. Results land through per-slot mutexes (uncontended
+    /// by construction — each slot is written exactly once).
+    pub fn map<R: Send>(&self, n: usize, limit: usize, f: &(dyn Fn(usize) -> R + Sync)) -> Vec<R> {
+        let mut slots: Vec<Mutex<Option<R>>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            slots.push(Mutex::new(None));
+        }
+        self.run(n, limit, &|i| {
+            // Compute before taking the slot lock: a panicking task
+            // must not leave the lock poisoned mid-store.
+            let v = f(i);
+            *lock(&slots[i]) = Some(v);
+        });
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .expect("pool map: every slot is filled once run() returns")
+            })
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // Take-and-release the queue lock so no worker can be between
+        // its shutdown check and its wait when the notify fires.
+        drop(lock(&self.shared.active));
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// How a parallel region should execute: inline on the caller, or as a
+/// capped parallel-for on a shared [`WorkerPool`]. `Copy`, so it
+/// threads freely through call stacks and closures.
+///
+/// `Seq` is the contractual sequential fallback: it never allocates a
+/// batch, touches a pool lock, or bumps [`PoolStats`]. A `Pool` handle
+/// with `slots <= 1` degrades to the same inline loop.
+#[derive(Clone, Copy)]
+pub enum Exec<'a> {
+    /// Run loops inline on the calling thread.
+    Seq,
+    /// Run loops on `pool`, at most `slots` threads per loop.
+    Pool {
+        /// The shared pool to submit to.
+        pool: &'a WorkerPool,
+        /// Concurrency cap for each submitted loop (the `--threads`
+        /// dial; clamped to the pool's size).
+        slots: usize,
+    },
+}
+
+impl<'a> Exec<'a> {
+    /// Effective width: 1 for `Seq`, else the slot cap clamped to the
+    /// pool size (never zero).
+    pub fn parallelism(&self) -> usize {
+        match self {
+            Exec::Seq => 1,
+            Exec::Pool { pool, slots } => (*slots).clamp(1, pool.concurrency()),
+        }
+    }
+
+    /// True when loops run inline (no pool interaction at all).
+    pub fn is_seq(&self) -> bool {
+        self.parallelism() == 1
+    }
+
+    /// Parallel-for over `0..n` (inline when sequential).
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        match self {
+            Exec::Pool { pool, slots } if (*slots).min(pool.concurrency()) > 1 => {
+                pool.run(n, *slots, f)
+            }
+            _ => {
+                for i in 0..n {
+                    f(i);
+                }
+            }
+        }
+    }
+
+    /// Parallel map over `0..n`, index order preserved (inline when
+    /// sequential).
+    pub fn map<R: Send>(&self, n: usize, f: &(dyn Fn(usize) -> R + Sync)) -> Vec<R> {
+        match self {
+            Exec::Pool { pool, slots } if (*slots).min(pool.concurrency()) > 1 => {
+                pool.map(n, *slots, f)
+            }
+            _ => (0..n).map(f).collect(),
+        }
+    }
+
+    /// Legacy bridge for the `*_threaded(w, threads)` APIs: resolve a
+    /// raw thread count against a lazily-spawned process-global pool
+    /// (sized to the machine; `slots` enforces the requested width).
+    /// `threads == 0` means all cores; `<= 1` yields [`Exec::Seq`].
+    /// Session-owned coordinators have their own pool and never touch
+    /// this one.
+    pub fn with_threads(threads: usize) -> Exec<'static> {
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        let t = if threads == 0 { cores } else { threads };
+        if t <= 1 {
+            return Exec::Seq;
+        }
+        static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+        let pool = GLOBAL.get_or_init(|| WorkerPool::new(cores.max(2)));
+        Exec::Pool { pool, slots: t }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_executes_every_index_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.run(n, 4, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        let s = pool.stats();
+        assert_eq!(s.tasks, n as u64);
+        assert_eq!(s.batches, 1);
+    }
+
+    #[test]
+    fn map_preserves_index_order() {
+        let pool = WorkerPool::new(3);
+        let out = pool.map(257, 3, &|i| i * i);
+        assert_eq!(out, (0..257).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn borrowed_state_is_visible_and_mutated_safely() {
+        let pool = WorkerPool::new(4);
+        let data: Vec<AtomicU64> = (0..64).map(|i| AtomicU64::new(i)).collect();
+        pool.run(data.len(), 4, &|i| {
+            data[i].fetch_add(100, Ordering::Relaxed);
+        });
+        for (i, d) in data.iter().enumerate() {
+            assert_eq!(d.load(Ordering::Relaxed), 100 + i as u64);
+        }
+    }
+
+    #[test]
+    fn nested_runs_complete_without_deadlock() {
+        let pool = WorkerPool::new(4);
+        let total = AtomicU64::new(0);
+        pool.run(8, 4, &|_outer| {
+            pool.run(16, 4, &|_inner| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 16);
+    }
+
+    #[test]
+    fn executor_limit_caps_concurrency() {
+        let pool = WorkerPool::new(8);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        pool.run(64, 2, &|_| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "limit 2 exceeded: {:?}", peak);
+    }
+
+    #[test]
+    fn sequential_width_touches_no_pool_state() {
+        let pool = WorkerPool::new(4);
+        let before = pool.stats();
+        pool.run(100, 1, &|_| {});
+        let exec = Exec::Pool { pool: &pool, slots: 1 };
+        exec.run(100, &|_| {});
+        assert!(exec.is_seq());
+        assert_eq!(pool.stats(), before, "width-1 loops must not submit batches");
+    }
+
+    #[test]
+    fn seq_exec_runs_inline() {
+        let exec = Exec::Seq;
+        let sum = AtomicU64::new(0);
+        exec.run(10, &|i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+        assert_eq!(exec.parallelism(), 1);
+        let mapped = exec.map(4, &|i| i + 1);
+        assert_eq!(mapped, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_submitter_after_drain() {
+        let pool = WorkerPool::new(4);
+        let ran = Arc::new(AtomicU64::new(0));
+        let ran2 = Arc::clone(&ran);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(32, 4, &|i| {
+                ran2.fetch_add(1, Ordering::Relaxed);
+                if i == 7 {
+                    panic!("injected");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must reach the submitter");
+        assert_eq!(ran.load(Ordering::Relaxed), 32, "batch must drain before re-panicking");
+        // The pool survives and keeps executing.
+        let ok = AtomicU64::new(0);
+        pool.run(16, 4, &|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn steals_happen_when_submitter_is_slow() {
+        let pool = WorkerPool::new(4);
+        // Tasks long enough for parked workers to wake and join in.
+        pool.run(64, 4, &|_| {
+            std::thread::sleep(std::time::Duration::from_micros(300));
+        });
+        let s = pool.stats();
+        assert_eq!(s.tasks, 64);
+        assert!(s.steals > 0, "workers should claim some of a 64-task batch: {s:?}");
+        assert!(s.steal_ratio() > 0.0 && s.steal_ratio() <= 1.0);
+    }
+
+    #[test]
+    fn with_threads_bridges_to_seq_and_pool() {
+        assert!(Exec::with_threads(1).is_seq());
+        let exec = Exec::with_threads(3);
+        let sum = AtomicU64::new(0);
+        exec.run(100, &|i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(4);
+        pool.run(8, 4, &|_| {});
+        drop(pool); // must not hang
+    }
+}

@@ -738,12 +738,25 @@ fn stats_verb(state: &Arc<ServerState>) -> Json {
             Json::Num(state.breaker_cfg.cooldown.as_millis() as f64),
         ),
     ]);
+    // Shared worker-pool counters: all zeros on a single-threaded core
+    // (no pool exists), and `tasks > 0` after the first pooled apply is
+    // the load test's proof that serving never spawns per-apply threads.
+    let p = state.core.pool_stats();
+    let pool = Json::Obj(vec![
+        ("batches".to_string(), Json::Num(p.batches as f64)),
+        ("tasks".to_string(), Json::Num(p.tasks as f64)),
+        ("steals".to_string(), Json::Num(p.steals as f64)),
+        ("parks".to_string(), Json::Num(p.parks as f64)),
+        ("unparks".to_string(), Json::Num(p.unparks as f64)),
+        ("steal_ratio".to_string(), Json::Num(p.steal_ratio())),
+    ]);
     ok_response(vec![
         ("counters", counters),
         ("registry", registry),
         ("ops", Json::Arr(per_op)),
         ("faults", faults),
         ("config", config),
+        ("pool", pool),
         ("threads", Json::Num(state.core.threads() as f64)),
         ("simd_backend", Json::str(simd_backend().name())),
     ])

@@ -65,6 +65,7 @@ use crate::linalg::{
 use crate::op::composite::{SharedTermOp, SumOp};
 use crate::op::KernelOp;
 use crate::points::Points;
+use crate::pool::PoolStats;
 use crate::rng::Pcg32;
 use registry::{composite_fingerprint, fingerprint, projection_fingerprint, OpKey, Registry};
 use std::collections::HashMap;
@@ -315,6 +316,12 @@ impl Session {
     /// last internal MVM).
     pub fn last_metrics(&self) -> MvmMetrics {
         self.core.last_metrics()
+    }
+
+    /// Cumulative stats of the session's shared worker pool (all zeros on
+    /// a single-threaded session, which owns no pool).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.core.pool_stats()
     }
 
     /// Operator-registry counters (hits, misses, coalesced builds,
@@ -783,6 +790,21 @@ impl SessionCore {
         self.coord.last_metrics()
     }
 
+    /// Cumulative stats of the core's shared worker pool (all zeros when
+    /// `threads == 1`: the sequential path never creates a pool).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.coord.pool_stats()
+    }
+
+    /// Per-apply metrics variant of [`SessionCore::mvm_batch`]: returns
+    /// this request's own [`MvmMetrics`] snapshot alongside the result,
+    /// so concurrent callers never read each other's numbers out of the
+    /// shared last-metrics slot.
+    pub fn mvm_batch_metered(&self, op: &OpHandle, w: &[f64], m: usize) -> (Vec<f64>, MvmMetrics) {
+        self.counters.mvm_batch.fetch_add(1, Ordering::Relaxed);
+        self.coord.mvm_batch_metered(op.op.as_ref(), w, m)
+    }
+
     /// Operator-registry counters (hits, misses, coalesced builds,
     /// evictions, build time).
     pub fn registry_stats(&self) -> RegistryStats {
@@ -1067,7 +1089,7 @@ impl<'a> OpSpec<'a> {
             if dense {
                 Arc::new(DenseOperator::new(sources, targets, kernel))
             } else {
-                Arc::new(FktOperator::new(sources, targets, kernel, cfg))
+                Arc::new(FktOperator::new_exec(sources, targets, kernel, cfg, session.coord.exec()))
             }
         };
         let square = targets.is_none();
@@ -1449,7 +1471,13 @@ impl<'a> AdditiveSpec<'a> {
                     let term = session.registry.get_or_build(*key, || {
                         let proj_src = sources.project(subset);
                         let proj_tgt = targets.map(|t| t.project(subset));
-                        Arc::new(FktOperator::new(&proj_src, proj_tgt.as_ref(), kernel, *tcfg))
+                        Arc::new(FktOperator::new_exec(
+                            &proj_src,
+                            proj_tgt.as_ref(),
+                            kernel,
+                            *tcfg,
+                            session.coord.exec(),
+                        ))
                     });
                     (w, term)
                 })

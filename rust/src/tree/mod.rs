@@ -15,9 +15,11 @@ pub use knn::knn;
 pub use plan::{FarFieldPlan, NodeInteraction};
 
 use crate::points::Points;
+use crate::pool::Exec;
+use std::sync::Mutex;
 
 /// A node of the BSP tree.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Node {
     /// Hyperrectangle lower corner.
     pub lo: Vec<f64>,
@@ -80,7 +82,7 @@ impl Node {
 ///
 /// Points are permuted so every node's points are contiguous; `perm[i]`
 /// gives the original index of the point at tree position `i`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Tree {
     /// Ambient dimension.
     pub d: usize,
@@ -148,6 +150,62 @@ impl Tree {
         tree.perm = perm;
         tree.points = pts;
         tree
+    }
+
+    /// [`Tree::build`] with the top splits forked across an execution
+    /// pool: each split past the size cutoff recurses on its two halves
+    /// as concurrent subtree tasks, and the results are spliced back in
+    /// exactly the id order the sequential stack loop would have
+    /// allocated. The output is equal to `build`'s — same nodes, same
+    /// permutation, same leaves, bit-for-bit — because every geometric
+    /// step runs the same arithmetic on the same values in the same
+    /// order; only *which thread* runs a subtree changes. Sequential
+    /// contexts (or small inputs) fall through to `build` untouched.
+    pub fn build_exec(points: &Points, leaf_capacity: usize, exec: Exec<'_>) -> Tree {
+        assert!(leaf_capacity >= 1);
+        assert!(!points.is_empty(), "cannot build tree over empty set");
+        let n = points.len();
+        let cutoff = fork_cutoff(n, leaf_capacity, exec.parallelism());
+        if exec.is_seq() || n <= cutoff {
+            return Tree::build(points, leaf_capacity);
+        }
+        let d = points.d;
+        // Root seeding identical to `build`: bounding box inflated to a
+        // hypercube, center from the box, radius over all points.
+        let (mut lo, mut hi) = points.bounding_box();
+        let side = (0..d)
+            .map(|a| hi[a] - lo[a])
+            .fold(0.0f64, f64::max)
+            .max(1e-12);
+        for a in 0..d {
+            let mid = 0.5 * (lo[a] + hi[a]);
+            lo[a] = mid - 0.55 * side;
+            hi[a] = mid + 0.55 * side;
+        }
+        let center: Vec<f64> = (0..d).map(|a| 0.5 * (lo[a] + hi[a])).collect();
+        let mut radius2 = 0.0f64;
+        for i in 0..n {
+            let p = points.point(i);
+            let mut acc = 0.0;
+            for a in 0..d {
+                let t = p[a] - center[a];
+                acc += t * t;
+            }
+            radius2 = radius2.max(acc);
+        }
+        let seed = Node {
+            lo,
+            hi,
+            center,
+            radius: radius2.sqrt(),
+            start: 0,
+            end: n,
+            children: None,
+            parent: None,
+            depth: 0,
+        };
+        let task = SubtreeTask { seed, pts: points.clone(), perm: (0..n).collect() };
+        build_subtree(task, leaf_capacity, cutoff, exec)
     }
 
     fn push_node(
@@ -396,6 +454,188 @@ impl Tree {
     }
 }
 
+/// Subtree sizes at or below this run as one sequential task; larger
+/// ones split here and fork both halves. `n / (4·par)` keeps roughly
+/// `4·par` leaf tasks in flight for balance; the floors stop the
+/// recursion from forking work too small to pay for its range copy.
+fn fork_cutoff(n: usize, leaf_capacity: usize, parallelism: usize) -> usize {
+    (n / (4 * parallelism.max(1))).max(2 * leaf_capacity).max(512)
+}
+
+/// One forked build task: the seeded root geometry plus owned copies of
+/// the range's points and range-local permutation (`[0, len)`). Owning
+/// the range makes tasks freely `Send` without aliasing the parent's
+/// buffers.
+struct SubtreeTask {
+    seed: Node,
+    pts: Points,
+    perm: Vec<usize>,
+}
+
+/// Carve a child task out of an already-partitioned parent range:
+/// rebase the child node to `[0, len)` at depth 0 and copy its slice of
+/// points and permutation.
+fn make_subtask(
+    child: &Node,
+    pts: &Points,
+    perm: &[usize],
+    start: usize,
+    end: usize,
+) -> SubtreeTask {
+    let d = pts.d;
+    let seed = Node {
+        lo: child.lo.clone(),
+        hi: child.hi.clone(),
+        center: child.center.clone(),
+        radius: child.radius,
+        start: 0,
+        end: end - start,
+        children: None,
+        parent: None,
+        depth: 0,
+    };
+    let coords = pts.coords[start * d..end * d].to_vec();
+    SubtreeTask { seed, pts: Points::new(d, coords), perm: perm[start..end].to_vec() }
+}
+
+/// Build one task's subtree. Above the cutoff: split the seeded root
+/// sequentially (the split itself is inherently serial — it partitions
+/// the whole range) and recurse on both halves as pool tasks. At or
+/// below it: replay the exact stack loop of [`Tree::build`] over the
+/// owned range. Seeding the local root with the parent-made geometry —
+/// rather than a fresh hypercube — is what keeps the unsplittable edge
+/// cases (coincident points, degenerate ties) bit-identical to the
+/// sequential build, which leaves such nodes with their creation box.
+fn build_subtree(task: SubtreeTask, leaf_capacity: usize, cutoff: usize, exec: Exec<'_>) -> Tree {
+    let SubtreeTask { seed, mut pts, mut perm } = task;
+    let d = pts.d;
+    let len = seed.end;
+    if exec.is_seq() || len <= cutoff {
+        return build_range_sequential(seed, pts, perm, leaf_capacity);
+    }
+    let mut tree = Tree {
+        d,
+        nodes: vec![seed],
+        perm: Vec::new(),
+        points: Points::empty(d),
+        leaves: Vec::new(),
+        leaf_capacity,
+    };
+    if tree.split_node(0, &mut pts, &mut perm).is_none() {
+        // Unsplittable despite its size: a single (over-full) leaf,
+        // exactly as the sequential loop would record it.
+        tree.leaves.push(0);
+        tree.perm = perm;
+        tree.points = pts;
+        return tree;
+    }
+    let mid = tree.nodes[1].end;
+    let cells = [
+        Mutex::new(Some(make_subtask(&tree.nodes[1], &pts, &perm, 0, mid))),
+        Mutex::new(Some(make_subtask(&tree.nodes[2], &pts, &perm, mid, len))),
+    ];
+    let mut halves = exec.map(2, &|i| {
+        let sub = cells[i]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+            .expect("each subtree task is taken exactly once");
+        build_subtree(sub, leaf_capacity, cutoff, exec)
+    });
+    let right = halves.pop().expect("right half");
+    let left = halves.pop().expect("left half");
+    let mut root = tree.nodes.swap_remove(0);
+    root.children = Some((1, 2));
+    splice_halves(root, perm, left, right, leaf_capacity)
+}
+
+/// The sequential base case: the exact stack loop of [`Tree::build`],
+/// run over an owned range with a pre-seeded root node.
+fn build_range_sequential(
+    seed: Node,
+    mut pts: Points,
+    mut perm: Vec<usize>,
+    leaf_capacity: usize,
+) -> Tree {
+    let d = pts.d;
+    let mut tree = Tree {
+        d,
+        nodes: vec![seed],
+        perm: Vec::new(),
+        points: Points::empty(d),
+        leaves: Vec::new(),
+        leaf_capacity,
+    };
+    let mut stack = vec![0usize];
+    while let Some(id) = stack.pop() {
+        if tree.nodes[id].len() <= leaf_capacity {
+            tree.leaves.push(id);
+            continue;
+        }
+        match tree.split_node(id, &mut pts, &mut perm) {
+            Some((l, r)) => {
+                stack.push(r);
+                stack.push(l);
+            }
+            None => tree.leaves.push(id),
+        }
+    }
+    tree.perm = perm;
+    tree.points = pts;
+    tree
+}
+
+/// Merge two recursively built halves under their split root,
+/// renumbering into the sequential id layout. The stack discipline of
+/// [`Tree::build`] allocates ids as `[v, L, R, descendants of L...,
+/// descendants of R...]` for every split node `v` (children are
+/// allocated pairwise at split time, and the left subtree is fully
+/// processed before the right sibling is popped), and each half's arena
+/// is — by induction — already in that layout locally. So the final
+/// numbering is a pure index shift: left id `j` maps to `1` (root) or
+/// `j + 2`; right id `j` maps to `2` or `|L| + 1 + j`.
+fn splice_halves(
+    root: Node,
+    perm: Vec<usize>,
+    left: Tree,
+    right: Tree,
+    leaf_capacity: usize,
+) -> Tree {
+    let d = left.d;
+    let mid = left.perm.len();
+    let n = root.end;
+    let size_l = left.nodes.len();
+    let map_l = |j: usize| if j == 0 { 1 } else { j + 2 };
+    let map_r = |j: usize| if j == 0 { 2 } else { size_l + 1 + j };
+    let remap = |node: &Node, off: usize, map: &dyn Fn(usize) -> usize| -> Node {
+        let mut out = node.clone();
+        out.start += off;
+        out.end += off;
+        out.depth += 1;
+        out.parent = Some(node.parent.map_or(0, map));
+        out.children = node.children.map(|(a, b)| (map(a), map(b)));
+        out
+    };
+    let mut nodes: Vec<Node> = Vec::with_capacity(1 + size_l + right.nodes.len());
+    nodes.push(root);
+    nodes.push(remap(&left.nodes[0], 0, &map_l));
+    nodes.push(remap(&right.nodes[0], mid, &map_r));
+    for node in &left.nodes[1..] {
+        nodes.push(remap(node, 0, &map_l));
+    }
+    for node in &right.nodes[1..] {
+        nodes.push(remap(node, mid, &map_r));
+    }
+    let mut leaves: Vec<usize> = left.leaves.iter().map(|&j| map_l(j)).collect();
+    leaves.extend(right.leaves.iter().map(|&j| map_r(j)));
+    let mut out_perm: Vec<usize> = Vec::with_capacity(n);
+    out_perm.extend(left.perm.iter().map(|&j| perm[j]));
+    out_perm.extend(right.perm.iter().map(|&j| perm[mid + j]));
+    let mut coords = left.points.coords;
+    coords.extend_from_slice(&right.points.coords);
+    Tree { d, nodes, perm: out_perm, points: Points::new(d, coords), leaves, leaf_capacity }
+}
+
 /// Partition tree positions [start,end) so points with coord < plane come
 /// first; returns the split position. Keeps `pts` and `perm` in sync.
 fn partition_points(
@@ -555,6 +795,66 @@ mod tests {
         for &l in &tree.leaves {
             assert!(tree.nodes[l].len() <= 30);
         }
+    }
+
+    /// Field-wise tree comparison with readable failures (a whole-tree
+    /// `assert_eq!` would dump thousands of nodes).
+    fn assert_trees_equal(seq: &Tree, par: &Tree, label: &str) {
+        assert_eq!(seq.perm, par.perm, "{label}: permutation differs");
+        assert_eq!(seq.leaves, par.leaves, "{label}: leaf order differs");
+        assert_eq!(seq.points, par.points, "{label}: permuted coordinates differ");
+        assert_eq!(seq.nodes.len(), par.nodes.len(), "{label}: node count differs");
+        for (id, (a, b)) in seq.nodes.iter().zip(&par.nodes).enumerate() {
+            assert_eq!(a, b, "{label}: node {id} differs");
+        }
+    }
+
+    #[test]
+    fn parallel_build_equals_sequential_bitwise() {
+        let pool = crate::pool::WorkerPool::new(4);
+        for (n, d, leaf, seed) in
+            [(3000usize, 3usize, 32usize, 11u64), (5000, 2, 64, 12), (2000, 5, 16, 13)]
+        {
+            let pts = uniform_points(n, d, seed);
+            let seq = Tree::build(&pts, leaf);
+            for slots in [2usize, 4] {
+                let par = Tree::build_exec(&pts, leaf, Exec::Pool { pool: &pool, slots });
+                assert_trees_equal(&seq, &par, &format!("n={n} d={d} leaf={leaf} slots={slots}"));
+            }
+            // The sequential context must be the sequential build verbatim.
+            let via_seq = Tree::build_exec(&pts, leaf, Exec::Seq);
+            assert_trees_equal(&seq, &via_seq, "Exec::Seq");
+        }
+    }
+
+    #[test]
+    fn parallel_build_handles_coincident_and_clustered_ranges() {
+        let pool = crate::pool::WorkerPool::new(4);
+        // A coincident block big enough to be forked as its own subtree
+        // task, glued to a uniform cloud: exercises the unsplittable
+        // (None-returning) paths inside forked tasks.
+        let mut rng = Pcg32::seeded(21);
+        let mut coords = Vec::new();
+        for _ in 0..1500 {
+            coords.extend_from_slice(&[0.125, 0.875]);
+        }
+        coords.extend(rng.uniform_vec(1500 * 2, 10.0, 11.0));
+        let pts = Points::new(2, coords);
+        let seq = Tree::build(&pts, 20);
+        let par = Tree::build_exec(&pts, 20, Exec::Pool { pool: &pool, slots: 4 });
+        assert_trees_equal(&seq, &par, "coincident block");
+
+        // Two tight distant clusters (heavily clamped split planes).
+        let mut coords = Vec::new();
+        for i in 0..4000 {
+            let base = if i % 2 == 0 { 0.0 } else { 100.0 };
+            coords.push(base + rng.normal() * 0.01);
+            coords.push(base + rng.normal() * 0.01);
+        }
+        let pts = Points::new(2, coords);
+        let seq = Tree::build(&pts, 30);
+        let par = Tree::build_exec(&pts, 30, Exec::Pool { pool: &pool, slots: 3 });
+        assert_trees_equal(&seq, &par, "clustered");
     }
 
     #[test]

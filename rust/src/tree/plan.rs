@@ -9,9 +9,11 @@
 //! (approximate) evaluation of the full kernel sum, and it is property-
 //! tested in `rust/tests/`.
 
-use super::Tree;
+use super::{Node, Tree};
 use crate::linalg::vecops;
 use crate::points::Points;
+use crate::pool::Exec;
+use std::collections::VecDeque;
 use std::rc::Rc;
 
 /// Interaction lists for one node.
@@ -62,20 +64,7 @@ impl FarFieldPlan {
         let mut stack: Vec<(usize, Rc<Vec<u32>>)> = vec![(0, all)];
         while let Some((id, cand)) = stack.pop() {
             let node = &tree.nodes[id];
-            let mut far = Vec::new();
-            let mut rest = Vec::new();
-            // Tightened criterion: a node containing a single point has
-            // radius 0 and everything (except coincident points) is far.
-            let rad = node.radius;
-            for &t in cand.iter() {
-                let tp = targets.point(t as usize);
-                let dist = vecops::dist2(tp, &node.center).sqrt();
-                if dist > 0.0 && rad / dist < theta {
-                    far.push(t);
-                } else {
-                    rest.push(t);
-                }
-            }
+            let (far, rest) = partition_candidates(node, targets, &cand, theta);
             far_pairs += far.len();
             match node.children {
                 Some((l, r)) => {
@@ -89,6 +78,68 @@ impl FarFieldPlan {
                     interactions[id].far = far;
                     interactions[id].near = rest;
                 }
+            }
+        }
+        FarFieldPlan { interactions, theta, far_pairs, near_pairs }
+    }
+
+    /// [`FarFieldPlan::build`] with independent subtrees processed
+    /// concurrently on an execution pool. A node's interaction lists
+    /// depend only on the node and the candidate list it inherits —
+    /// both of which are identical to the sequential build's (candidate
+    /// order is preserved parent → child) — so the result is equal to
+    /// `build`'s bit for bit regardless of which thread descends which
+    /// subtree. Sequential contexts and small plans fall through to
+    /// `build` untouched.
+    pub fn build_exec(tree: &Tree, targets: &Points, theta: f64, exec: Exec<'_>) -> FarFieldPlan {
+        assert!(theta > 0.0 && theta < 1.0, "theta must be in (0,1)");
+        assert_eq!(targets.d, tree.d, "dimension mismatch");
+        let par = exec.parallelism();
+        if par <= 1 || tree.nodes.len() < 32 || targets.len() < 1024 {
+            return FarFieldPlan::build(tree, targets, theta);
+        }
+        let nnodes = tree.nodes.len();
+        let mut interactions: Vec<NodeInteraction> = vec![NodeInteraction::default(); nnodes];
+        let mut far_pairs = 0usize;
+        let mut near_pairs = 0usize;
+        // Phase 1: breadth-first expansion near the root (recording those
+        // nodes' lists as it goes) until enough independent subtree tasks
+        // exist to keep the pool busy. Candidates are owned per entry —
+        // the clones are confined to these first ~4·par shallow nodes.
+        let target_tasks = 4 * par;
+        let mut queue: VecDeque<(usize, Vec<u32>)> = VecDeque::new();
+        queue.push_back((0, (0..targets.len() as u32).collect()));
+        while queue.len() < target_tasks {
+            let Some((id, cand)) = queue.pop_front() else { break };
+            let node = &tree.nodes[id];
+            let (far, rest) = partition_candidates(node, targets, &cand, theta);
+            far_pairs += far.len();
+            match node.children {
+                Some((l, r)) => {
+                    interactions[id].far = far;
+                    queue.push_back((l, rest.clone()));
+                    queue.push_back((r, rest));
+                }
+                None => {
+                    near_pairs += rest.len();
+                    interactions[id].far = far;
+                    interactions[id].near = rest;
+                }
+            }
+        }
+        // Phase 2: one pool task per frontier subtree, each running the
+        // sequential depth-first descent locally.
+        let tasks: Vec<(usize, Vec<u32>)> = queue.into();
+        let results = exec.map(tasks.len(), &|i| {
+            let (root, cand) = &tasks[i];
+            descend_subtree(tree, targets, theta, *root, cand)
+        });
+        // Phase 3: merge — disjoint node sets, so plain overwrites.
+        for (list, fp, np) in results {
+            far_pairs += fp;
+            near_pairs += np;
+            for (id, it) in list {
+                interactions[id] = it;
             }
         }
         FarFieldPlan { interactions, theta, far_pairs, near_pairs }
@@ -125,6 +176,66 @@ impl FarFieldPlan {
             far_targets_max,
         }
     }
+}
+
+/// Split a candidate list into (far, rest) for one node by the eq. (2)
+/// criterion, preserving candidate order. A node containing a single
+/// point has radius 0 and everything (except coincident points) is far.
+fn partition_candidates(
+    node: &Node,
+    targets: &Points,
+    cand: &[u32],
+    theta: f64,
+) -> (Vec<u32>, Vec<u32>) {
+    let mut far = Vec::new();
+    let mut rest = Vec::new();
+    let rad = node.radius;
+    for &t in cand {
+        let tp = targets.point(t as usize);
+        let dist = vecops::dist2(tp, &node.center).sqrt();
+        if dist > 0.0 && rad / dist < theta {
+            far.push(t);
+        } else {
+            rest.push(t);
+        }
+    }
+    (far, rest)
+}
+
+/// Sequential depth-first descent of the subtree rooted at `root` with
+/// inherited candidate list `cand` — the body of [`FarFieldPlan::build`]
+/// replayed locally. Returns the visited nodes' interactions plus the
+/// subtree's pair counts. The `Rc` candidate sharing never leaves this
+/// function, so the routine is safe to run from any pool worker.
+fn descend_subtree(
+    tree: &Tree,
+    targets: &Points,
+    theta: f64,
+    root: usize,
+    cand: &[u32],
+) -> (Vec<(usize, NodeInteraction)>, usize, usize) {
+    let mut out: Vec<(usize, NodeInteraction)> = Vec::new();
+    let mut far_pairs = 0usize;
+    let mut near_pairs = 0usize;
+    let mut stack: Vec<(usize, Rc<Vec<u32>>)> = vec![(root, Rc::new(cand.to_vec()))];
+    while let Some((id, cand)) = stack.pop() {
+        let node = &tree.nodes[id];
+        let (far, rest) = partition_candidates(node, targets, &cand, theta);
+        far_pairs += far.len();
+        match node.children {
+            Some((l, r)) => {
+                out.push((id, NodeInteraction { far, near: Vec::new() }));
+                let rest = Rc::new(rest);
+                stack.push((r, Rc::clone(&rest)));
+                stack.push((l, rest));
+            }
+            None => {
+                near_pairs += rest.len();
+                out.push((id, NodeInteraction { far, near: rest }));
+            }
+        }
+    }
+    (out, far_pairs, near_pairs)
 }
 
 /// Summary statistics of a plan.
@@ -332,6 +443,32 @@ mod tests {
             for (id, (a, b)) in new.interactions.iter().zip(&old.interactions).enumerate() {
                 assert_eq!(a, b, "node {id} interaction lists differ");
             }
+        }
+    }
+
+    #[test]
+    fn parallel_plan_build_equals_sequential_bitwise() {
+        use crate::pool::WorkerPool;
+        let pool = WorkerPool::new(4);
+        for (n, d, theta, leaf, seed) in
+            [(3000, 3, 0.5, 32, 31), (2000, 2, 0.75, 16, 32), (1500, 4, 0.3, 24, 33)]
+        {
+            let pts = uniform_points(n, d, seed);
+            let tree = Tree::build(&pts, leaf);
+            let seq = FarFieldPlan::build(&tree, &pts, theta);
+            for slots in [2usize, 4] {
+                let exec = Exec::Pool { pool: &pool, slots };
+                let par = FarFieldPlan::build_exec(&tree, &pts, theta, exec);
+                assert_eq!(par.far_pairs, seq.far_pairs);
+                assert_eq!(par.near_pairs, seq.near_pairs);
+                for (id, (a, b)) in par.interactions.iter().zip(&seq.interactions).enumerate() {
+                    assert_eq!(a, b, "node {id} differs at slots={slots}");
+                }
+            }
+            // Sequential exec must fall through to the reference path.
+            let via_seq = FarFieldPlan::build_exec(&tree, &pts, theta, Exec::Seq);
+            assert_eq!(via_seq.far_pairs, seq.far_pairs);
+            assert_eq!(via_seq.interactions, seq.interactions);
         }
     }
 
